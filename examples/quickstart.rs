@@ -1,0 +1,83 @@
+//! Quickstart: one online session with compressed context memory.
+//!
+//! Loads the AOT artifacts (test config by default so it runs in
+//! seconds), feeds a short synthetic dialogue chunk-by-chunk through the
+//! compression engine, and contrasts the compressed-memory footprint
+//! with what raw context KV would have cost.
+//!
+//!   cargo run --release --example quickstart [-- --config main]
+
+use anyhow::Result;
+use ccm::compress::{target_avg_loglik, CompressItem, Engine, InferItem};
+use ccm::datagen::{by_name, Split};
+use ccm::eval::memacct;
+use ccm::memory::MemoryStore;
+use ccm::model::Checkpoint;
+use ccm::runtime::Runtime;
+use ccm::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let config = args.str("config", "test");
+    println!("== Compressed Context Memory quickstart (config {config}) ==");
+
+    let rt = Runtime::from_config(&config)?;
+    let m = &rt.manifest;
+    println!(
+        "model: d={} L={} V={}; scenario: T<={} chunks of <={} tokens",
+        m.model.d_model, m.model.n_layers, m.model.vocab, m.scenario.t_max, m.scenario.chunk_max
+    );
+
+    // A fresh (or trained, via --checkpoint) model.
+    let ckpt = args.str("checkpoint", "");
+    let ck = if ckpt.is_empty() {
+        Checkpoint::init(m, 7)
+    } else {
+        Checkpoint::load(std::path::Path::new(&ckpt), m)?
+    };
+
+    let comp_len = m.scenario.comp_len_max;
+    let engine = Engine::new(&rt, &ck, comp_len)?;
+    let mut mem =
+        MemoryStore::concat(m.model.n_layers, m.scenario.mem_slots, m.model.d_model, comp_len);
+
+    // An online conversation: chunks arrive one at a time.
+    let ds = by_name("dialog", 42, &m.scenario, m.model.vocab)?;
+    let t = m.scenario.t_max.min(4);
+    let sample = ds.sample(Split::Test, 0, t);
+
+    let mut pos = 0usize;
+    let mut raw_tokens = 0usize;
+    for (j, chunk) in sample.chunks.iter().enumerate() {
+        let item = CompressItem { mem: &mem, chunk, pos_start: pos };
+        let h = engine.compress(std::slice::from_ref(&item))?.remove(0);
+        mem.update(&h)?;
+        pos += chunk.len() + comp_len;
+        raw_tokens += chunk.len();
+        println!(
+            "t={}: compressed {}-token chunk -> Mem({}) holds {} KV slots ({:.1} KiB)",
+            j + 1,
+            chunk.len(),
+            j + 1,
+            mem.len(),
+            mem.kv_bytes() as f64 / 1024.0
+        );
+    }
+
+    // Answer the next query from memory only (Eq. 3).
+    let input = sample.input_with_target();
+    let item = InferItem { mem: &mem, tokens: &input, pos_start: pos };
+    let logits = &engine.infer(std::slice::from_ref(&item))?[0];
+    let ll = target_avg_loglik(logits, sample.input.len(), &sample.target);
+
+    let raw_bytes = memacct::kv_bytes(&m.model, raw_tokens);
+    println!("\nquery answered with avg target log-likelihood {ll:.3}");
+    println!(
+        "compressed memory: {:.1} KiB vs raw context KV {:.1} KiB  ({:.1}x smaller)",
+        mem.kv_bytes() as f64 / 1024.0,
+        raw_bytes as f64 / 1024.0,
+        raw_bytes as f64 / mem.kv_bytes().max(1) as f64
+    );
+    println!("(untrained weights unless --checkpoint is given — see train_e2e)");
+    Ok(())
+}

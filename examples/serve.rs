@@ -1,0 +1,101 @@
+//! Serving demo: start the coordinator server, drive it with concurrent
+//! clients, report latency/throughput (the deployment story of Table 1).
+//!
+//!   cargo run --release --example serve [-- --config test --clients 4]
+
+use std::sync::mpsc::channel;
+
+use anyhow::Result;
+use ccm::coordinator::session::SessionPolicy;
+use ccm::datagen::{by_name, Split};
+use ccm::model::Checkpoint;
+use ccm::runtime::Runtime;
+use ccm::server::{serve, Client, ServerConfig};
+use ccm::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let config = args.str("config", "test");
+    let n_clients = args.usize("clients", 4)?;
+    let rounds = args.usize("rounds", 3)?;
+
+    // Server thread owns the runtime (PJRT executables are not Sync).
+    let (ready_tx, ready_rx) = channel();
+    let cfg2 = config.clone();
+    let comp_len_flag = args.usize("comp-len", 0)?;
+    let server = std::thread::spawn(move || -> Result<()> {
+        let rt = Runtime::from_config(&cfg2)?;
+        let comp_len =
+            if comp_len_flag == 0 { rt.manifest.scenario.comp_len_max } else { comp_len_flag };
+        let ck = Checkpoint::init(&rt.manifest, 7);
+        rt.warmup(&[
+            "compress_chunk_b1",
+            "compress_chunk_b8",
+            "infer_with_mem_b1",
+            "infer_with_mem_b8",
+        ])
+        .ok();
+        serve(
+            &rt,
+            &ck,
+            ServerConfig {
+                addr: "127.0.0.1:0".into(),
+                policy: SessionPolicy::concat(comp_len),
+                max_batch: 8,
+                max_wait: std::time::Duration::from_millis(2),
+            },
+            Some(ready_tx),
+        )
+    });
+    let addr = ready_rx.recv()?;
+    println!("server up at {addr}; {n_clients} clients x {rounds} rounds");
+
+    // Concurrent clients, one session each, multiple interaction rounds.
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let addr = addr.clone();
+        let config = config.clone();
+        handles.push(std::thread::spawn(move || -> Result<(usize, f64)> {
+            let rt_manifest = ccm::model::Manifest::load(&ccm::model::artifact_dir(&config))?;
+            let ds = by_name("lamp", 11, &rt_manifest.scenario, rt_manifest.model.vocab)?;
+            let mut client = Client::connect(&addr)?;
+            let mut queries = 0usize;
+            let mut lat_ms = 0.0f64;
+            for round in 1..=rounds {
+                let s = ds.sample(Split::Test, c, round);
+                client.add_context(&format!("client{c}"), s.chunks.last().unwrap())?;
+                let tq = std::time::Instant::now();
+                let next = client.query(&format!("client{c}"), &s.input, 3)?;
+                lat_ms += tq.elapsed().as_secs_f64() * 1e3;
+                queries += 1;
+                assert_eq!(next.len(), 3);
+                assert!(next[0].1 <= 0.0, "logprob must be <= 0");
+            }
+            Ok((queries, lat_ms))
+        }));
+    }
+    let mut total_q = 0usize;
+    let mut total_lat = 0.0;
+    for h in handles {
+        let (q, l) = h.join().expect("client thread")?;
+        total_q += q;
+        total_lat += l;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "served {total_q} queries (+{} compressions) in {secs:.2}s: {:.1} q/s, mean latency {:.1} ms",
+        total_q,
+        total_q as f64 / secs,
+        total_lat / total_q as f64
+    );
+
+    // Stats + shutdown.
+    let mut admin = Client::connect(&addr)?;
+    let stats = admin.stats()?;
+    println!("server sessions: {}", stats.get("sessions")?.usize()?);
+    admin.shutdown()?;
+    server.join().expect("server thread")?;
+    println!("server shut down cleanly");
+    Ok(())
+}

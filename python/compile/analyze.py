@@ -1,0 +1,103 @@
+"""Performance analysis of the compile-path (L1/L2) — DESIGN.md §8.
+
+interpret=True Pallas gives CPU-numpy timings that are NOT a TPU proxy,
+so L1 is analysed structurally: VMEM footprint and MXU-utilisation
+estimates from the BlockSpecs. L2 is analysed with XLA's cost analysis on
+the compiled module (FLOPs, bytes accessed, output bytes) and fusion
+counts from the optimized HLO.
+
+Usage: python -m compile.analyze --config main
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from . import masks  # noqa: F401  (import keeps the package rooted)
+from .aot import artifact_defs
+from .config import get_config
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def l1_vmem_report(cfg, block_q=128, block_k=128):
+    """VMEM footprint + MXU-work fraction of the attention kernel tile.
+
+    Per grid step the kernel holds: Q tile (bq x dh), one K/V tile
+    (bk x dh each), the mask tile (bq x bk), softmax stats (2 x bq) and
+    the accumulator (bq x dh) — all f32.
+    """
+    m = cfg.model
+    sc = cfg.scenario
+    dh = m.d_head
+    c = sc.mem_slots + sc.seq_train
+    bq, bk = min(block_q, sc.seq_train), min(block_k, c)
+    tile_floats = bq * dh + 2 * bk * dh + bq * bk + bq * dh + 2 * bq
+    vmem_bytes = tile_floats * 4
+    # MXU vs VPU work per tile: two matmuls (q@kT: bq*bk*dh, p@v: bq*bk*dh
+    # MACs) vs elementwise mask/softmax (~5*bq*bk flops).
+    mxu_flops = 2 * (bq * bk * dh) * 2
+    vpu_flops = 5 * bq * bk + 4 * bq * dh
+    frac = mxu_flops / (mxu_flops + vpu_flops)
+    return {
+        "block_q": bq,
+        "block_k": bk,
+        "d_head": dh,
+        "kv_cols": c,
+        "vmem_per_step_bytes": vmem_bytes,
+        "vmem_budget_frac": vmem_bytes / (16 * 2**20),
+        "mxu_work_fraction": frac,
+        "grid_steps": -(-sc.seq_train // bq),
+        "kv_tiles_per_step": -(-c // bk),
+    }
+
+
+def l2_cost_report(cfg, names=("ccm_forward_b1", "train_ccm_step")):
+    """Compile selected artifacts and read XLA's cost analysis."""
+    defs = {n: (fn, args) for n, fn, args in artifact_defs(cfg)}
+    out = {}
+    for name in names:
+        fn, args = defs[name]
+        specs = [s for _, s in args]
+        compiled = jax.jit(fn).lower(*specs).compile()
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, list):
+                ca = ca[0]
+        except Exception:  # pragma: no cover - backend-dependent
+            ca = {}
+        hlo = compiled.as_text()
+        out[name] = {
+            "flops": ca.get("flops", float("nan")),
+            "bytes_accessed": ca.get("bytes accessed", float("nan")),
+            "fusions": hlo.count(" fusion("),
+            "convolutions_or_dots": hlo.count(" dot("),
+            "while_loops": hlo.count(" while("),
+            "hlo_lines": hlo.count("\n"),
+        }
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", default="main")
+    ap.add_argument("--block-q", type=int, default=128)
+    ap.add_argument("--block-k", type=int, default=128)
+    args = ap.parse_args()
+    cfg = get_config(args.config)
+
+    print(f"== L1 Pallas attention kernel — VMEM/MXU estimate ({args.config}) ==")
+    rep = l1_vmem_report(cfg, args.block_q, args.block_k)
+    for k, v in rep.items():
+        print(f"  {k:24} {v:.4f}" if isinstance(v, float) else f"  {k:24} {v}")
+
+    print(f"\n== L2 XLA cost analysis ({args.config}) ==")
+    for name, stats in l2_cost_report(cfg).items():
+        print(f"  {name}:")
+        for k, v in stats.items():
+            print(f"    {k:20} {v:,.0f}" if isinstance(v, float) else f"    {k:20} {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,292 @@
+"""AOT export: lower every L2 graph to HLO text + write manifest.json.
+
+Python runs exactly once (``make artifacts``); afterwards the Rust binary
+is self-contained. Interchange format is HLO **text**, not serialized
+HloModuleProto — jax >= 0.5 emits protos with 64-bit instruction ids that
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+The manifest is the single source of truth the Rust side reads: model +
+scenario config, flat parameter layouts, per-artifact I/O signatures, and
+golden mask/merge vectors used to cross-check the Rust mask builders
+against python/compile/masks.py.
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import masks as MK
+from . import model as M
+from . import params as P
+from .config import Config, get_config
+
+jax.config.update("jax_platform_name", "cpu")
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+# --------------------------------------------------------------------------
+# Artifact definitions
+# --------------------------------------------------------------------------
+
+def artifact_defs(cfg: Config):
+    """[(name, fn, [(arg_name, spec)])] for every artifact of one config."""
+    m, sc = cfg.model, cfg.scenario
+    B, S = sc.batch_train, sc.seq_train
+    Mm = sc.mem_slots
+    D, L, V = m.d_model, m.n_layers, m.vocab
+    nb, nl = P.base_size(cfg), P.lora_size(cfg)
+    Sc, cl, Si = sc.chunk_max, sc.comp_len_max, sc.input_max
+    Scc = Sc + cl                      # compress_chunk sequence length
+    R, nm = sc.rmt_unroll, sc.rmt_mem
+    Se = max(Scc + nm, nm + Si)        # RMT forward sequence length
+    Cc = sc.decode_cache
+
+    defs = []
+
+    defs.append((
+        "train_lm_step",
+        functools.partial(M.train_lm_step, cfg),
+        [("base", spec([nb])), ("mu", spec([nb])), ("nu", spec([nb])),
+         ("step", spec([], I32)), ("lr", spec([])),
+         ("tokens", spec([B, S], I32)), ("pos", spec([B, S], I32)),
+         ("loss_mask", spec([B, S]))],
+    ))
+
+    defs.append((
+        "train_ccm_step",
+        functools.partial(M.train_ccm_step, cfg),
+        [("base", spec([nb])), ("lora", spec([nl])),
+         ("mu", spec([nl])), ("nu", spec([nl])),
+         ("step", spec([], I32)), ("lr", spec([])),
+         ("tokens", spec([B, S], I32)), ("comp_slot", spec([B, S], I32)),
+         ("gate", spec([B, S])), ("pos", spec([B, S], I32)),
+         ("mask", spec([B, S, Mm + S])), ("merge_p", spec([B, Mm, S])),
+         ("loss_mask", spec([B, S]))],
+    ))
+
+    defs.append((
+        "train_rmt_step",
+        functools.partial(M.train_rmt_step, cfg),
+        [("base", spec([nb])), ("lora", spec([nl])),
+         ("mu", spec([nl])), ("nu", spec([nl])),
+         ("step", spec([], I32)), ("lr", spec([])),
+         ("chunks", spec([B, R, Sc], I32)), ("chunk_valid", spec([B, R, Sc])),
+         ("inputs", spec([B, Si], I32)), ("input_valid", spec([B, Si])),
+         ("loss_mask", spec([B, Si]))],
+    ))
+
+    def ccm_forward(use_pallas, base, lora, tokens, comp_slot, gate, pos,
+                    mask, merge_p):
+        return (M.forward_parallel(cfg, base, lora, tokens, comp_slot, gate,
+                                   pos, mask, merge_p, use_pallas=use_pallas),)
+
+    for b in sc.infer_batches:
+        defs.append((
+            f"ccm_forward_b{b}",
+            functools.partial(ccm_forward, False),
+            [("base", spec([nb])), ("lora", spec([nl])),
+             ("tokens", spec([b, S], I32)), ("comp_slot", spec([b, S], I32)),
+             ("gate", spec([b, S])), ("pos", spec([b, S], I32)),
+             ("mask", spec([b, S, Mm + S])), ("merge_p", spec([b, Mm, S]))],
+        ))
+    defs.append((
+        "ccm_forward_pallas_b1",
+        functools.partial(ccm_forward, True),
+        [("base", spec([nb])), ("lora", spec([nl])),
+         ("tokens", spec([1, S], I32)), ("comp_slot", spec([1, S], I32)),
+         ("gate", spec([1, S])), ("pos", spec([1, S], I32)),
+         ("mask", spec([1, S, Mm + S])), ("merge_p", spec([1, Mm, S]))],
+    ))
+
+    def compress_chunk(base, lora, mem_k, mem_v, mem_len, tokens, comp_slot,
+                       gate, pos):
+        _, kvs = M.forward_with_mem(cfg, base, lora, mem_k, mem_v, mem_len,
+                                    tokens, comp_slot, gate, pos,
+                                    collect_kv=True)
+        # h(t): KV at the <COMP> positions (statically the last cl slots).
+        hk = jnp.stack([k[:, Sc:Scc] for k, _ in kvs], axis=1)  # [B,L,cl,D]
+        hv = jnp.stack([v[:, Sc:Scc] for _, v in kvs], axis=1)
+        return hk, hv
+
+    def infer_with_mem(base, lora, mem_k, mem_v, mem_len, tokens, pos):
+        b, s = tokens.shape
+        zeros = jnp.zeros((b, s), dtype=I32)
+        gate = jnp.zeros((b, s), dtype=F32)
+        logits, _ = M.forward_with_mem(cfg, base, lora, mem_k, mem_v,
+                                       mem_len, tokens, zeros, gate, pos)
+        return (logits,)
+
+    for b in sc.infer_batches:
+        defs.append((
+            f"compress_chunk_b{b}",
+            compress_chunk,
+            [("base", spec([nb])), ("lora", spec([nl])),
+             ("mem_k", spec([b, L, Mm, D])), ("mem_v", spec([b, L, Mm, D])),
+             ("mem_len", spec([b], I32)),
+             ("tokens", spec([b, Scc], I32)),
+             ("comp_slot", spec([b, Scc], I32)),
+             ("gate", spec([b, Scc])), ("pos", spec([b, Scc], I32))],
+        ))
+        defs.append((
+            f"infer_with_mem_b{b}",
+            infer_with_mem,
+            [("base", spec([nb])), ("lora", spec([nl])),
+             ("mem_k", spec([b, L, Mm, D])), ("mem_v", spec([b, L, Mm, D])),
+             ("mem_len", spec([b], I32)),
+             ("tokens", spec([b, Si], I32)), ("pos", spec([b, Si], I32))],
+        ))
+
+    defs.append((
+        "decode_step",
+        functools.partial(M.decode_step, cfg),
+        [("base", spec([nb])), ("lora", spec([nl])),
+         ("mem_k", spec([1, L, Mm, D])), ("mem_v", spec([1, L, Mm, D])),
+         ("mem_len", spec([1], I32)),
+         ("cache_k", spec([1, L, Cc, D])), ("cache_v", spec([1, L, Cc, D])),
+         ("cache_len", spec([], I32)),
+         ("token", spec([1], I32)), ("pos", spec([1], I32))],
+    ))
+
+    def rmt_forward(base, lora, embeds, valid, pos):
+        logits, hidden = M.forward_embeds(cfg, base, lora, embeds, valid, pos)
+        return logits, hidden
+
+    for b in sc.infer_batches:
+        defs.append((
+            f"rmt_forward_b{b}",
+            rmt_forward,
+            [("base", spec([nb])), ("lora", spec([nl])),
+             ("embeds", spec([b, Se, D])), ("valid", spec([b, Se])),
+             ("pos", spec([b, Se], I32))],
+        ))
+
+    return defs
+
+
+# --------------------------------------------------------------------------
+# Golden vectors for the Rust mask builder
+# --------------------------------------------------------------------------
+
+def mask_goldens(cfg: Config):
+    """Small layouts x all methods, serialized compactly. Rust rebuilds the
+    same masks and must match bit-for-bit."""
+    sc = cfg.scenario
+    cases = []
+    scenarios = [
+        ([5, 4, 6], 2, 8, 48, 8),
+        ([3, 3], 1, 6, 24, 4),
+        ([7], 2, 10, 24, 4),
+    ]
+    for chunk_lens, comp_len, input_len, seq, mem in scenarios:
+        for method in MK.METHODS:
+            cl = 0 if method in ("full", "compressive") else comp_len
+            chunks = [] if method == "nocontext" else chunk_lens
+            lay = MK.build_layout(chunks, cl, input_len, seq)
+            for scheme in (["avg", "ema:0.5"] if method == "ccm-merge"
+                           else ["avg"]):
+                mask, p = MK.build_masks(method, lay, mem, scheme,
+                                         pool=comp_len)
+                cases.append({
+                    "method": method,
+                    "scheme": scheme,
+                    "chunk_lens": chunks,
+                    "comp_len": cl,
+                    "pool": comp_len,
+                    "input_len": input_len,
+                    "seq": seq,
+                    "mem_slots": mem,
+                    "kind": lay.kind.tolist(),
+                    "step": lay.step.tolist(),
+                    "comp_slot": lay.comp_slot.tolist(),
+                    "mask_rows": ["".join("1" if x > 0 else "0" for x in row)
+                                  for row in mask],
+                    "p_nonzero": [[int(r), int(c), float(p[r, c])]
+                                  for r, c in zip(*np.nonzero(p))],
+                })
+    return cases
+
+
+# --------------------------------------------------------------------------
+# Main
+# --------------------------------------------------------------------------
+
+def lower_all(cfg: Config, out_dir: str, only=None):
+    os.makedirs(out_dir, exist_ok=True)
+    arts = []
+    for name, fn, args in artifact_defs(cfg):
+        if only and name not in only:
+            continue
+        specs = [s for _, s in args]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_avals = lowered.out_info
+        outs = [{"dtype": str(o.dtype), "shape": list(o.shape)}
+                for o in jax.tree_util.tree_leaves(out_avals)]
+        arts.append({
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "inputs": [{"name": n, "dtype": str(s.dtype),
+                        "shape": list(s.shape)} for n, s in args],
+            "outputs": outs,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        })
+        print(f"  lowered {name}: {len(text)/1e6:.2f} MB")
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", default="main")
+    ap.add_argument("--out", default=None,
+                    help="output dir (default ../artifacts/<config>)")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset of artifact names")
+    args = ap.parse_args()
+
+    cfg = get_config(args.config)
+    cfg.scenario.validate()
+    out_dir = args.out or os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts", args.config)
+    out_dir = os.path.abspath(out_dir)
+    print(f"[aot] config={args.config} -> {out_dir}")
+
+    arts = lower_all(cfg, out_dir, only=args.only)
+    manifest = {
+        "config_name": args.config,
+        "config": cfg.to_dict(),
+        "params": P.layout_manifest(cfg),
+        "artifacts": arts,
+        "mask_goldens": mask_goldens(cfg),
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    print(f"[aot] wrote manifest with {len(arts)} artifacts, "
+          f"{len(manifest['mask_goldens'])} mask goldens")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Model + scenario configurations shared by the L1/L2 compile path.
+
+Every static shape the AOT artifacts bake in lives here, and the whole
+dict is exported into ``artifacts/<config>/manifest.json`` so the Rust
+coordinator (L3) reads the exact same numbers — there is no other channel
+between the compile path and the runtime.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer dimensions.
+
+    The backbone mirrors a (scaled-down) LLaMA: RMSNorm, GELU MLP,
+    learned absolute position embeddings (the paper's streaming mode
+    reassigns position ids, which absolute embeddings support directly).
+    """
+
+    name: str = "main"
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512
+    max_pos: int = 512
+    lora_rank: int = 8
+    lora_alpha: float = 16.0
+    # Reserved token ids (mirrored in rust/src/datagen/tokenizer.rs).
+    pad_id: int = 0
+    bos_id: int = 1
+    sep_id: int = 2
+    comp_id: int = 3
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+@dataclass(frozen=True)
+class ScenarioConfig:
+    """Static shapes of the online-inference scenario the artifacts bake in.
+
+    ``seq_train`` must hold T_max chunks + their <COMP> tokens + the input
+    segment: T_max * (chunk_max + comp_len_max) + input_max <= seq_train.
+
+    The paper runs T=16 (MetaICL/LaMP) and T=12 (DailyDialog) on A100s;
+    this CPU testbed scales the scenario to T=8 with proportionally
+    shorter chunks — the method comparisons keep their shape (DESIGN.md).
+    """
+
+    t_max: int = 8             # max online time steps (paper: 12-16)
+    chunk_max: int = 20        # max tokens per context chunk c(t)
+    comp_len_max: int = 4      # max <COMP> tokens per chunk
+    input_max: int = 32        # max tokens of I(t) (+ target O(t))
+    seq_train: int = 224       # padded training sequence length
+    mem_slots: int = 32        # merged-memory slots M (t_max * comp_len_max)
+    batch_train: int = 8
+    infer_batches: tuple = (1, 8)   # batch variants of serving artifacts
+    decode_cache: int = 96     # KV-cache length for decode_step
+    rmt_unroll: int = 4        # static unroll of the recurrent baseline
+    rmt_mem: int = 4           # RMT summary-embedding slots
+
+    def validate(self) -> None:
+        need = self.t_max * (self.chunk_max + self.comp_len_max) + self.input_max
+        assert need <= self.seq_train, (need, self.seq_train)
+        assert self.mem_slots >= self.t_max * self.comp_len_max
+
+
+@dataclass(frozen=True)
+class Config:
+    model: ModelConfig = field(default_factory=ModelConfig)
+    scenario: ScenarioConfig = field(default_factory=ScenarioConfig)
+
+    def to_dict(self) -> dict:
+        d = {"model": asdict(self.model), "scenario": asdict(self.scenario)}
+        d["model"]["d_head"] = self.model.d_head
+        return d
+
+
+def get_config(name: str) -> Config:
+    """Named configs. ``test`` is for unit tests / CI; ``main`` is the
+    headline config used by the end-to-end example and benches."""
+    if name == "test":
+        return Config(
+            model=ModelConfig(
+                name="test", vocab=256, d_model=64, n_layers=2, n_heads=2,
+                d_ff=128, max_pos=256, lora_rank=4,
+            ),
+            scenario=ScenarioConfig(
+                t_max=4, chunk_max=12, comp_len_max=2, input_max=16,
+                seq_train=96, mem_slots=8, batch_train=4, infer_batches=(1, 4),
+                decode_cache=48, rmt_unroll=2, rmt_mem=2,
+            ),
+        )
+    if name == "main":
+        return Config()
+    if name == "big":
+        # Scale ablation (Table 19 analogue): deeper + wider.
+        return Config(
+            model=ModelConfig(
+                name="big", vocab=512, d_model=192, n_layers=6, n_heads=6,
+                d_ff=768, max_pos=512, lora_rank=8,
+            ),
+            scenario=ScenarioConfig(),
+        )
+    if name == "wide":
+        # Architecture ablation (Table 20 analogue): few wide heads.
+        return Config(
+            model=ModelConfig(
+                name="wide", vocab=512, d_model=128, n_layers=4, n_heads=2,
+                d_ff=768, max_pos=512, lora_rank=8,
+            ),
+            scenario=ScenarioConfig(),
+        )
+    raise ValueError(f"unknown config {name!r}")

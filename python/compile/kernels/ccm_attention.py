@@ -1,0 +1,117 @@
+"""L1 Pallas kernel: tiled masked attention over extended KV columns.
+
+This is the compute hot-spot of the paper: every attention layer of the
+parallelized CCM forward attends over columns ``[M memory slots | S token
+positions]`` under the compression mask of Figure 3(b). The kernel is a
+FlashAttention-style streaming-softmax kernel re-thought for the TPU
+memory hierarchy (see DESIGN.md §3 Hardware adaptation):
+
+* the grid tiles queries into (block_q, d_head) VMEM blocks;
+* the KV stream is consumed in (block_k, d_head) tiles inside a
+  ``fori_loop`` — the HBM→VMEM schedule a CUDA implementation would
+  express with threadblocks is expressed here with BlockSpec + the loop;
+* both matmuls (q·kᵀ and p·v) are MXU-shaped; mask logic is VPU
+  elementwise within the tile;
+* the CCM mask is block-sparse (a chunk attends its own band plus a few
+  memory slots), so fully-masked KV tiles contribute exactly zero — the
+  structure a real-TPU build would exploit by skipping grid steps.
+
+MUST run with interpret=True on this testbed: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+
+Perf note (EXPERIMENTS.md §Perf): default tiles are 128x128 — the
+64x64 starting point used only 0.3% of a 16 MB VMEM budget; doubling
+both axes raises the MXU-work fraction 0.948 -> 0.973 and quarters the
+grid/loop step count, at 1.1% VMEM (double-buffering headroom intact).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e9
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, block_k, scale):
+    """One query tile: stream KV tiles with online softmax.
+
+    q_ref: [block_q, dh], k_ref/v_ref: [C, dh], mask_ref: [block_q, C],
+    o_ref: [block_q, dh].
+    """
+    block_q, dh = q_ref.shape
+    c = k_ref.shape[0]
+    q = q_ref[...].astype(jnp.float32) * scale
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        start = i * block_k
+        k_tile = jax.lax.dynamic_slice(
+            k_ref[...], (start, 0), (block_k, dh)).astype(jnp.float32)
+        v_tile = jax.lax.dynamic_slice(
+            v_ref[...], (start, 0), (block_k, dh)).astype(jnp.float32)
+        m_tile = jax.lax.dynamic_slice(
+            mask_ref[...], (0, start), (block_q, block_k))
+        s = q @ k_tile.T                              # MXU: [bq, bk]
+        s = jnp.where(m_tile > 0, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None]) * (m_tile > 0)  # VPU elementwise
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v_tile   # MXU: [bq, dh]
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, dh), dtype=jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, c // block_k, body, (m0, l0, acc0))
+    o_ref[...] = acc / jnp.maximum(l, 1e-30)[:, None]
+
+
+def ccm_attention(q, k, v, mask, *, block_q=128, block_k=128, interpret=True):
+    """Tiled masked attention for one head.
+
+    q: [S, dh], k/v: [C, dh] (C = mem_slots + S), mask: [S, C] in {0,1}.
+    Returns [S, dh] f32. Pads S and C up to block multiples internally;
+    padded columns are masked out, padded rows are sliced off.
+    """
+    s, dh = q.shape
+    c = k.shape[0]
+    block_q = min(block_q, max(8, s))
+    block_k = min(block_k, max(8, c))
+    s_pad = -s % block_q
+    c_pad = -c % block_k
+    if s_pad:
+        q = jnp.pad(q, ((0, s_pad), (0, 0)))
+        mask = jnp.pad(mask, ((0, s_pad), (0, 0)))
+    if c_pad:
+        k = jnp.pad(k, ((0, c_pad), (0, 0)))
+        v = jnp.pad(v, ((0, c_pad), (0, 0)))
+        mask = jnp.pad(mask, ((0, 0), (0, c_pad)))
+    sp, cp = s + s_pad, c + c_pad
+
+    kernel = functools.partial(
+        _attention_kernel, block_k=block_k, scale=1.0 / (dh ** 0.5))
+    out = pl.pallas_call(
+        kernel,
+        grid=(sp // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, dh), lambda i: (i, 0)),
+            pl.BlockSpec((cp, dh), lambda i: (0, 0)),
+            pl.BlockSpec((cp, dh), lambda i: (0, 0)),
+            pl.BlockSpec((block_q, cp), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, dh), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sp, dh), jnp.float32),
+        interpret=interpret,
+    )(q, k, v, mask)
+    return out[:s]
+
+
+def ccm_attention_batched(q, k, v, mask, **kw):
+    """vmap over (batch, head): q [B, H, S, dh], k/v [B, H, C, dh],
+    mask [B, S, C] (shared across heads)."""
+    f = functools.partial(ccm_attention, **kw)
+    per_head = jax.vmap(f, in_axes=(0, 0, 0, None))      # heads
+    return jax.vmap(per_head, in_axes=(0, 0, 0, 0))(q, k, v, mask)

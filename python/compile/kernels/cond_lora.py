@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: fused conditional-LoRA projection.
+
+Implements the paper's conditional adapter (Section 3.1, Figure 4):
+
+    y = x W + m · (x Aᵀ B) · (alpha / r)
+
+where ``m = 1(token is <COMP>)``. Fusing the gate into the projection
+avoids materialising the dense low-rank product for the ~95% of tokens
+whose gate is zero; on TPU both matmuls are MXU-shaped and the gate is a
+VPU broadcast within the tile. interpret=True on this testbed (see
+ccm_attention.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cond_lora_kernel(x_ref, w_ref, a_ref, b_ref, gate_ref, o_ref, *, scale):
+    """One row tile: x [bs, Di], w [Di, Do], a [r, Di], b [r, Do],
+    gate [bs, 1] -> o [bs, Do]."""
+    x = x_ref[...].astype(jnp.float32)
+    base = x @ w_ref[...].astype(jnp.float32)            # MXU [bs, Do]
+    low = (x @ a_ref[...].astype(jnp.float32).T)         # MXU [bs, r]
+    low = low @ b_ref[...].astype(jnp.float32)           # MXU [bs, Do]
+    o_ref[...] = base + gate_ref[...] * low * scale
+
+
+def cond_lora(x, w, a, b, gate, scale, *, block_s=64, interpret=True):
+    """x: [S, Di], w: [Di, Do], a: [r, Di], b: [r, Do], gate: [S] {0,1}.
+    Returns [S, Do] f32."""
+    s, di = x.shape
+    do = w.shape[1]
+    block_s = min(block_s, max(8, s))
+    s_pad = -s % block_s
+    if s_pad:
+        x = jnp.pad(x, ((0, s_pad), (0, 0)))
+        gate = jnp.pad(gate, (0, s_pad))
+    sp = s + s_pad
+    gate2 = gate.astype(jnp.float32)[:, None]
+
+    kernel = functools.partial(_cond_lora_kernel, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(sp // block_s,),
+        in_specs=[
+            pl.BlockSpec((block_s, di), lambda i: (i, 0)),
+            pl.BlockSpec((di, do), lambda i: (0, 0)),
+            pl.BlockSpec(a.shape, lambda i: (0, 0)),
+            pl.BlockSpec(b.shape, lambda i: (0, 0)),
+            pl.BlockSpec((block_s, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_s, do), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sp, do), jnp.float32),
+        interpret=interpret,
+    )(x, w, a, b, gate2)
+    return out[:s]

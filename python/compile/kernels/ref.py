@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: ``python/tests/test_kernels.py``
+sweeps shapes/dtypes with hypothesis and asserts the Pallas kernels
+(interpret=True) match these to tight tolerances. They are also the
+attention/projection path used inside differentiated (training) artifacts,
+where the Pallas forward has no VJP.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def ref_masked_attention(q, k, v, mask, scale=None):
+    """Masked multi-column attention.
+
+    q: [S, dh], k/v: [C, dh] (C = M + S extended columns),
+    mask: [S, C] in {0,1}. Returns [S, dh] f32.
+    """
+    dh = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(dh)
+    logits = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * scale
+    logits = jnp.where(mask > 0, logits, NEG_INF)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs * (mask > 0)
+    denom = probs.sum(axis=-1, keepdims=True)
+    out = (probs / jnp.maximum(denom, 1e-30)) @ v.astype(jnp.float32)
+    return out
+
+
+def ref_cond_lora(x, w, a, b, gate, scale):
+    """Conditional-LoRA projection: y = x W + gate * (x Aᵀ) B * scale.
+
+    x: [S, Di], w: [Di, Do], a: [r, Di], b: [r, Do], gate: [S] in {0,1}.
+    The gate implements m = 1(x = <COMP>) from Eq. (4) of the paper.
+    """
+    base = x @ w
+    low = (x @ a.T) @ b
+    return base + gate[:, None] * low * scale
+
+
+def ref_merge_memory(p, k):
+    """Merged-memory materialisation: slots = P @ K (per layer/head).
+
+    p: [M, S], k: [S, dh] -> [M, dh].
+    """
+    return p @ k

@@ -1,0 +1,249 @@
+"""Attention-mask + merge-matrix builders for the parallelized CCM forward.
+
+This module is the *reference semantics* of the paper's Figure 3: the
+recursive compression process
+
+    h(t)   = g_comp(Mem(t-1), c(t))
+    Mem(t) = g_update(Mem(t-1), h(t))
+
+is unrolled into one forward pass over the packed sequence
+
+    [ c(1), <COMP>*, c(2), <COMP>*, ..., c(T), <COMP>*, I(T) ]
+
+by (a) a boolean attention mask over extended columns
+``[M merged-memory slots | S token positions]`` and (b) a merge matrix
+``P[M, S]`` that materialises Mem(j) as linear combinations of the KV at
+<COMP> positions (CCM-merge) or raw chunk positions (Compressive
+Transformer). One artifact + different (mask, P) inputs = every method.
+
+Rust mirrors this file in ``rust/src/masks/``; ``aot.py`` exports golden
+vectors into the manifest so the two implementations are cross-checked.
+"""
+
+from dataclasses import dataclass
+
+import numpy as np
+
+# Segment kinds (mirrored in rust/src/masks/layout.rs).
+PAD, CHUNK, COMP, INPUT = 0, 1, 2, 3
+
+METHODS = (
+    "full",          # causal attention over the whole context (upper bound)
+    "nocontext",     # input-only (lower bound)
+    "ccm-concat",    # paper: scalable memory, Mem(t) = [h(1) ... h(t)]
+    "ccm-merge",     # paper: fixed memory, Mem(t) = sum_j w_j h(j)
+    "gist",          # Gisting-online baseline: per-chunk gist, no carryover
+    "compressive",   # Compressive-Transformer baseline: pooled raw KV
+)
+
+
+@dataclass
+class Layout:
+    """Token-position layout of one packed training/eval sample."""
+
+    kind: np.ndarray       # [S] int32, PAD/CHUNK/COMP/INPUT
+    step: np.ndarray       # [S] int32, 1-based time step (0 for pad/input)
+    comp_slot: np.ndarray  # [S] int32, 0 for non-comp, 1..comp_len for comp
+    seq: int               # S
+    t: int                 # number of chunks actually present
+    comp_len: int          # <COMP> tokens per chunk (0 for full/compressive)
+    chunk_lens: list       # actual chunk lengths
+    input_len: int
+
+    @property
+    def n_tokens(self) -> int:
+        return int(np.sum(self.kind != PAD))
+
+
+def build_layout(chunk_lens, comp_len, input_len, seq):
+    """Pack chunks (+ their <COMP> tokens) and the input segment into a
+    sequence of static length ``seq``. No inter-segment padding; all the
+    padding sits at the end, which keeps positions identical between the
+    parallel forward and the recurrent online path."""
+    kind = np.zeros(seq, dtype=np.int32)
+    step = np.zeros(seq, dtype=np.int32)
+    comp_slot = np.zeros(seq, dtype=np.int32)
+    pos = 0
+    for j, clen in enumerate(chunk_lens, start=1):
+        assert pos + clen + comp_len <= seq, "layout overflow"
+        kind[pos:pos + clen] = CHUNK
+        step[pos:pos + clen] = j
+        pos += clen
+        if comp_len:
+            kind[pos:pos + comp_len] = COMP
+            step[pos:pos + comp_len] = j
+            comp_slot[pos:pos + comp_len] = np.arange(1, comp_len + 1)
+            pos += comp_len
+    assert pos + input_len <= seq, "layout overflow (input)"
+    kind[pos:pos + input_len] = INPUT
+    pos += input_len
+    return Layout(kind, step, comp_slot, seq, len(chunk_lens), comp_len,
+                  list(chunk_lens), input_len)
+
+
+def merge_weights(t, scheme):
+    """Per-group merge coefficients w[g][j]: Mem(g) = sum_{j<=g} w[g][j] h(j).
+
+    ``avg``    : arithmetic average, a_t = 1/t  (paper's main choice)
+    ``ema:a``  : exponential moving average with constant a (a_1 = 1)
+    """
+    w = np.zeros((t + 1, t + 1), dtype=np.float64)
+    if scheme == "avg":
+        for g in range(1, t + 1):
+            w[g, 1:g + 1] = 1.0 / g
+    elif scheme.startswith("ema:"):
+        a = float(scheme.split(":", 1)[1])
+        assert 0.0 < a <= 1.0
+        for g in range(1, t + 1):
+            for j in range(1, g + 1):
+                aj = 1.0 if j == 1 else a
+                w[g, j] = aj * (1.0 - a) ** (g - j)
+    else:
+        raise ValueError(f"unknown merge scheme {scheme!r}")
+    return w
+
+
+def build_masks(method, lay: Layout, mem_slots, merge_scheme="avg", pool=None):
+    """Return (mask[S, M+S] f32 in {0,1}, P[M, S] f32).
+
+    Column order is [M memory-slot columns | S token columns]. The rules
+    implement Section 3.1 of the paper: during training, c(j) and its
+    <COMP> tokens may reference only Mem(j-1); I(t) references only Mem(t).
+
+    ``pool`` is the Compressive-Transformer slot width per chunk (defaults
+    to the layout's comp_len so all methods share one compression factor).
+    """
+    S, M, t, cl = lay.seq, mem_slots, lay.t, lay.comp_len
+    pool = pool if pool is not None else max(cl, 1)
+    mask = np.zeros((S, M + S), dtype=np.float32)
+    P = np.zeros((M, S), dtype=np.float32)
+    kind, step, slot = lay.kind, lay.step, lay.comp_slot
+    idx = np.arange(S)
+
+    def tok(col_pred):
+        """Token-column selector -> column indices offset by M."""
+        return M + idx[col_pred]
+
+    def self_causal(i):
+        """Same-segment causal columns for position i."""
+        same = (kind == kind[i]) & (step == step[i]) & (idx <= i)
+        return tok(same)
+
+    if method not in METHODS:
+        raise ValueError(f"unknown method {method!r}")
+
+    comp_cols_upto = {}   # j -> token columns of <COMP> tokens of chunks <= j
+    if cl:
+        for j in range(0, t + 1):
+            comp_cols_upto[j] = tok((kind == COMP) & (step >= 1) & (step <= j))
+
+    # --- merge matrix P ---------------------------------------------------
+    if method == "ccm-merge":
+        w = merge_weights(t, merge_scheme)
+        for g in range(1, t + 1):
+            for p in range(1, cl + 1):
+                row = (g - 1) * cl + (p - 1)
+                for j in range(1, g + 1):
+                    src = idx[(kind == COMP) & (step == j) & (slot == p)]
+                    assert len(src) == 1
+                    P[row, src[0]] = w[g, j]
+    elif method == "compressive":
+        # Slot group g = chunk g mean-pooled into up-to-`pool` windows.
+        assert t * pool <= M, (t, pool, M)
+        for g in range(1, t + 1):
+            src = idx[(kind == CHUNK) & (step == g)]
+            windows = np.array_split(src, min(pool, len(src)))
+            for p, wnd in enumerate(windows):
+                row = (g - 1) * pool + p
+                P[row, wnd] = 1.0 / len(wnd)
+
+    def group_cols(g, width):
+        return np.arange((g - 1) * width, g * width)
+
+    # --- attention mask ----------------------------------------------------
+    for i in range(S):
+        k = kind[i]
+        if k == PAD:
+            mask[i, M + i] = 1.0   # inert but keeps softmax finite
+            continue
+        j = int(step[i])
+        if method == "full":
+            mask[i, tok((kind != PAD) & (idx <= i))] = 1.0
+        elif method == "nocontext":
+            if k == INPUT:
+                mask[i, tok((kind == INPUT) & (idx <= i))] = 1.0
+            else:
+                mask[i, M + i] = 1.0
+        elif method == "ccm-concat":
+            mask[i, self_causal(i)] = 1.0
+            if k == COMP:
+                mask[i, tok((kind == CHUNK) & (step == j) & (idx <= i))] = 1.0
+                mask[i, comp_cols_upto[j - 1]] = 1.0
+            elif k == CHUNK:
+                mask[i, comp_cols_upto[j - 1]] = 1.0
+            else:  # INPUT attends Mem(T) = all <COMP> columns
+                mask[i, comp_cols_upto[t]] = 1.0
+        elif method == "ccm-merge":
+            mask[i, self_causal(i)] = 1.0
+            if k == COMP:
+                mask[i, tok((kind == CHUNK) & (step == j) & (idx <= i))] = 1.0
+                if j >= 2:
+                    mask[i, group_cols(j - 1, cl)] = 1.0
+            elif k == CHUNK:
+                if j >= 2:
+                    mask[i, group_cols(j - 1, cl)] = 1.0
+            else:  # INPUT attends Mem(T)
+                if t >= 1:
+                    mask[i, group_cols(t, cl)] = 1.0
+        elif method == "gist":
+            mask[i, self_causal(i)] = 1.0
+            if k == COMP:
+                mask[i, tok((kind == CHUNK) & (step == j) & (idx <= i))] = 1.0
+            elif k == INPUT:
+                mask[i, comp_cols_upto[t]] = 1.0
+        elif method == "compressive":
+            # Only slots actually written by P (short chunks can fill
+            # fewer than `pool` windows; zero-key slots must stay masked).
+            live = P.sum(axis=1) > 0
+            mask[i, self_causal(i)] = 1.0
+            if k == CHUNK and j >= 2:
+                for g in range(1, j):
+                    cols = group_cols(g, pool)
+                    mask[i, cols[live[cols]]] = 1.0
+            elif k == INPUT:
+                for g in range(1, t + 1):
+                    cols = group_cols(g, pool)
+                    mask[i, cols[live[cols]]] = 1.0
+    return mask, P
+
+
+def lora_gate(lay: Layout, conditional=True):
+    """m[S] in {0,1}: where the conditional LoRA branch fires. The paper's
+    conditional adapter gates on <COMP> tokens; the unconditional ablation
+    (Table 5) fires everywhere."""
+    if conditional:
+        return (lay.kind == COMP).astype(np.float32)
+    return (lay.kind != PAD).astype(np.float32)
+
+
+def comp_slot_input(lay: Layout):
+    """comp_slot[S] int32 fed to the model: 0 = normal token (use tok_emb),
+    k>=1 = <COMP> slot k (use trainable comp_emb[k-1])."""
+    return lay.comp_slot.astype(np.int32)
+
+
+def position_ids(lay: Layout):
+    """Absolute position ids: consecutive over the packed layout."""
+    return np.arange(lay.seq, dtype=np.int32)
+
+
+def loss_mask_for_target(lay: Layout, target_len):
+    """1.0 on the last ``target_len`` INPUT positions (the O(t) tokens).
+    The loss is next-token prediction, so the mask marks positions whose
+    *next* token is a target token; the model helper shifts internally."""
+    m = np.zeros(lay.seq, dtype=np.float32)
+    inp = np.nonzero(lay.kind == INPUT)[0]
+    assert target_len <= len(inp)
+    if target_len:
+        m[inp[-target_len:]] = 1.0
+    return m

@@ -1,0 +1,404 @@
+"""L2: the Transformer language model with Compressed Context Memory.
+
+Everything here is build-time JAX: ``aot.py`` lowers these functions to
+HLO text once, and the Rust coordinator executes the artifacts via PJRT.
+
+Three forward flavours:
+
+* ``forward_parallel``  — the paper's parallelized training/eval form
+  (Figure 3): one packed sequence, attention mask + merge matrix P as
+  runtime inputs, so a single artifact serves CCM-concat/-merge, Gisting,
+  Compressive Transformer, full-context and no-context.
+* ``forward_with_mem``  — the online serving form (Figure 5): attends to
+  an external compressed-memory KV buffer; used by ``compress_chunk`` /
+  ``infer_with_mem`` / ``decode_step``.
+* ``forward_embeds``    — soft-embedding inputs, used by the recurrent
+  (RMT/AutoCompressor-style) baseline.
+
+The attention hot-spot can run through the L1 Pallas kernel
+(``use_pallas=True``, inference artifacts) or the pure-jnp oracle
+(training artifacts, which need a VJP).
+"""
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import params as P
+from .config import Config
+from .kernels.ccm_attention import ccm_attention_batched
+from .kernels.ref import ref_masked_attention
+
+NEG_INF = -1e9
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps=1e-5):
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * scale
+
+
+def cond_lora_proj(x, w, a, b, gate, scale):
+    """Batched conditional-LoRA projection (jnp path; the Pallas kernel
+    computes the identical expression for the serving artifacts).
+
+    x: [B, S, D], gate: [B, S]."""
+    base = x @ w
+    low = (x @ a.T) @ b
+    return base + gate[..., None] * low * scale
+
+
+def split_heads(x, n_heads):
+    b, s, d = x.shape
+    return x.reshape(b, s, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def merge_heads(x):
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def ref_attention_batched(q, k, v, mask):
+    """vmapped oracle attention: q [B,H,S,dh], k/v [B,H,C,dh], mask [B,S,C]."""
+    f = jax.vmap(ref_masked_attention, in_axes=(0, 0, 0, None))   # heads
+    return jax.vmap(f, in_axes=(0, 0, 0, 0))(q, k, v, mask)
+
+
+def embed(mp, lp, tokens, comp_slot, pos):
+    """Token embedding with trainable <COMP> overrides.
+
+    comp_slot == 0 -> frozen tok_emb[token]; slot k >= 1 -> comp_emb[k-1]
+    (the jointly-optimised <COMP> embedding, shared across time steps).
+    """
+    tok = mp["tok_emb"][tokens]
+    comp = lp["comp_emb"][jnp.maximum(comp_slot - 1, 0)]
+    is_comp = (comp_slot > 0)[..., None]
+    x = jnp.where(is_comp, comp, tok)
+    return x + mp["pos_emb"][pos]
+
+
+class LayerParams(NamedTuple):
+    ln1: jax.Array
+    wq: jax.Array
+    wk: jax.Array
+    wv: jax.Array
+    wo: jax.Array
+    ln2: jax.Array
+    w1: jax.Array
+    w2: jax.Array
+
+
+def layer_params(mp, i):
+    p = f"layer{i}."
+    return LayerParams(*(mp[p + k] for k in
+                         ("ln1", "wq", "wk", "wv", "wo", "ln2", "w1", "w2")))
+
+
+def lora_params(lp, i, proj):
+    p = f"layer{i}."
+    return lp[p + f"lora_{proj}_a"], lp[p + f"lora_{proj}_b"]
+
+
+# --------------------------------------------------------------------------
+# Parallel (training / eval) forward — Figure 3
+# --------------------------------------------------------------------------
+
+def forward_parallel(cfg: Config, base_vec, lora_vec, tokens, comp_slot,
+                     gate, pos, mask, merge_p, use_pallas=False):
+    """Packed-sequence forward with memory slots.
+
+    tokens/comp_slot/gate/pos: [B, S]; mask: [B, S, M+S]; merge_p: [B, M, S].
+    Returns logits [B, S, V] (f32).
+    """
+    m = cfg.model
+    mp = P.unpack(base_vec, P.base_param_specs(m))
+    lp = P.unpack(lora_vec, P.lora_param_specs(m, cfg.scenario.comp_len_max))
+    scale = m.lora_alpha / m.lora_rank
+    attn_fn = ccm_attention_batched if use_pallas else ref_attention_batched
+
+    x = embed(mp, lp, tokens, comp_slot, pos)
+    for i in range(m.n_layers):
+        l = layer_params(mp, i)
+        h = rmsnorm(x, l.ln1)
+        q = cond_lora_proj(h, l.wq, *lora_params(lp, i, "q"), gate, scale)
+        k = cond_lora_proj(h, l.wk, *lora_params(lp, i, "k"), gate, scale)
+        v = cond_lora_proj(h, l.wv, *lora_params(lp, i, "v"), gate, scale)
+        # Memory slots: Mem(j) materialised as linear combinations of this
+        # layer's KV at <COMP> (or pooled chunk) positions — Eq. (2).
+        mem_k = merge_p @ k                                   # [B, M, D]
+        mem_v = merge_p @ v
+        qh = split_heads(q, m.n_heads)
+        kh = split_heads(jnp.concatenate([mem_k, k], axis=1), m.n_heads)
+        vh = split_heads(jnp.concatenate([mem_v, v], axis=1), m.n_heads)
+        o = attn_fn(qh, kh, vh, mask)
+        o = cond_lora_proj(merge_heads(o), l.wo,
+                           *lora_params(lp, i, "o"), gate, scale)
+        x = x + o
+        h2 = rmsnorm(x, l.ln2)
+        x = x + jax.nn.gelu(h2 @ l.w1) @ l.w2
+    x = rmsnorm(x, mp["final_norm"])
+    return x @ mp["lm_head"]
+
+
+# --------------------------------------------------------------------------
+# Online serving forward — Figure 5 (external compressed memory)
+# --------------------------------------------------------------------------
+
+def forward_with_mem(cfg: Config, base_vec, lora_vec, mem_k, mem_v, mem_len,
+                     tokens, comp_slot, gate, pos, use_pallas=False,
+                     collect_kv=False):
+    """Short-sequence forward attending to compressed memory.
+
+    mem_k/mem_v: [B, L, M_max, D] per-layer, per-sample memory KV with
+    valid prefix mem_len[B]. tokens: [B, S].
+    Returns (logits, per-layer (k, v) of the sequence) — callers slice the
+    <COMP> positions out of the KV to produce h(t).
+    """
+    m = cfg.model
+    mp = P.unpack(base_vec, P.base_param_specs(m))
+    lp = P.unpack(lora_vec, P.lora_param_specs(m, cfg.scenario.comp_len_max))
+    scale = m.lora_alpha / m.lora_rank
+    attn_fn = ccm_attention_batched if use_pallas else ref_attention_batched
+
+    b, s = tokens.shape
+    m_max = mem_k.shape[2]
+    # Column validity: memory prefix + non-pad tokens; rows causal.
+    col_mem = (jnp.arange(m_max)[None, :] < mem_len[:, None])      # [B, M]
+    tok_valid = tokens != m.pad_id                                 # [B, S]
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    mask_tok = causal[None] & tok_valid[:, None, :]
+    mask = jnp.concatenate(
+        [jnp.broadcast_to(col_mem[:, None, :], (b, s, m_max)), mask_tok],
+        axis=2).astype(jnp.float32)
+    # Guarantee self-attention so padded rows stay finite.
+    eye = jnp.eye(s, dtype=jnp.float32)
+    mask = mask.at[:, :, m_max:].set(jnp.maximum(mask[:, :, m_max:], eye))
+
+    x = embed(mp, lp, tokens, comp_slot, pos)
+    kvs = []
+    for i in range(m.n_layers):
+        l = layer_params(mp, i)
+        h = rmsnorm(x, l.ln1)
+        q = cond_lora_proj(h, l.wq, *lora_params(lp, i, "q"), gate, scale)
+        k = cond_lora_proj(h, l.wk, *lora_params(lp, i, "k"), gate, scale)
+        v = cond_lora_proj(h, l.wv, *lora_params(lp, i, "v"), gate, scale)
+        if collect_kv:
+            kvs.append((k, v))
+        qh = split_heads(q, m.n_heads)
+        kh = split_heads(jnp.concatenate([mem_k[:, i], k], axis=1), m.n_heads)
+        vh = split_heads(jnp.concatenate([mem_v[:, i], v], axis=1), m.n_heads)
+        o = attn_fn(qh, kh, vh, mask)
+        o = cond_lora_proj(merge_heads(o), l.wo,
+                           *lora_params(lp, i, "o"), gate, scale)
+        x = x + o
+        h2 = rmsnorm(x, l.ln2)
+        x = x + jax.nn.gelu(h2 @ l.w1) @ l.w2
+    x = rmsnorm(x, mp["final_norm"])
+    return x @ mp["lm_head"], kvs
+
+
+# --------------------------------------------------------------------------
+# Soft-embedding forward — recurrent (RMT-style) baseline
+# --------------------------------------------------------------------------
+
+def forward_embeds(cfg: Config, base_vec, lora_vec, embeds, valid, pos,
+                   gate=None):
+    """Causal forward over soft embeddings (unconditional LoRA active).
+
+    embeds: [B, S, D] already includes any summary-slot embeddings;
+    valid: [B, S] float 0/1. Returns (logits, final hidden states).
+    """
+    m = cfg.model
+    mp = P.unpack(base_vec, P.base_param_specs(m))
+    lp = P.unpack(lora_vec, P.lora_param_specs(m, cfg.scenario.comp_len_max))
+    scale = m.lora_alpha / m.lora_rank
+    b, s, _ = embeds.shape
+    if gate is None:
+        gate = valid  # unconditional: adapter fires on every real token
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    mask = (causal[None] & (valid[:, None, :] > 0)).astype(jnp.float32)
+    eye = jnp.eye(s, dtype=jnp.float32)
+    mask = jnp.maximum(mask, eye[None])
+
+    x = embeds + mp["pos_emb"][pos]
+    for i in range(m.n_layers):
+        l = layer_params(mp, i)
+        h = rmsnorm(x, l.ln1)
+        q = cond_lora_proj(h, l.wq, *lora_params(lp, i, "q"), gate, scale)
+        k = cond_lora_proj(h, l.wk, *lora_params(lp, i, "k"), gate, scale)
+        v = cond_lora_proj(h, l.wv, *lora_params(lp, i, "v"), gate, scale)
+        qh, kh, vh = (split_heads(t, m.n_heads) for t in (q, k, v))
+        o = ref_attention_batched(qh, kh, vh, mask)
+        o = cond_lora_proj(merge_heads(o), l.wo,
+                           *lora_params(lp, i, "o"), gate, scale)
+        x = x + o
+        h2 = rmsnorm(x, l.ln2)
+        x = x + jax.nn.gelu(h2 @ l.w1) @ l.w2
+    hidden = x
+    x = rmsnorm(x, mp["final_norm"])
+    return x @ mp["lm_head"], hidden
+
+
+# --------------------------------------------------------------------------
+# Single-token decode with KV cache (autoregressive generation)
+# --------------------------------------------------------------------------
+
+def decode_step(cfg: Config, base_vec, lora_vec, mem_k, mem_v, mem_len,
+                cache_k, cache_v, cache_len, token, pos):
+    """One decode step: attends compressed memory + KV cache, appends the
+    new token's KV at ``cache_len``. token/pos: [B]; cache_k/v:
+    [B, L, Cc, D]; mem_k/v: [B, L, Mm, D]; cache_len scalar i32.
+    Returns (logits [B, V], cache_k', cache_v')."""
+    m = cfg.model
+    mp = P.unpack(base_vec, P.base_param_specs(m))
+    lp = P.unpack(lora_vec, P.lora_param_specs(m, cfg.scenario.comp_len_max))
+    scale = m.lora_alpha / m.lora_rank
+    b = token.shape[0]
+    m_max, cc = mem_k.shape[2], cache_k.shape[2]
+    x = mp["tok_emb"][token][:, None] + mp["pos_emb"][pos][:, None]
+    gate = jnp.zeros((b, 1), dtype=jnp.float32)
+    col_mem = jnp.arange(m_max)[None, :] < mem_len[:, None]
+    col_cache = jnp.broadcast_to(
+        (jnp.arange(cc)[None, :] <= cache_len), (b, cc))
+    mask = jnp.concatenate([col_mem, col_cache], axis=1) \
+        .astype(jnp.float32)[:, None, :]                  # [B, 1, Mm+Cc]
+    new_ck, new_cv = [], []
+    for i in range(m.n_layers):
+        l = layer_params(mp, i)
+        h = rmsnorm(x, l.ln1)
+        q = cond_lora_proj(h, l.wq, *lora_params(lp, i, "q"), gate, scale)
+        k = cond_lora_proj(h, l.wk, *lora_params(lp, i, "k"), gate, scale)
+        v = cond_lora_proj(h, l.wv, *lora_params(lp, i, "v"), gate, scale)
+        ck = jax.lax.dynamic_update_slice(cache_k[:, i], k, (0, cache_len, 0))
+        cv = jax.lax.dynamic_update_slice(cache_v[:, i], v, (0, cache_len, 0))
+        new_ck.append(ck)
+        new_cv.append(cv)
+        qh = split_heads(q, m.n_heads)
+        kh = split_heads(jnp.concatenate([mem_k[:, i], ck], axis=1), m.n_heads)
+        vh = split_heads(jnp.concatenate([mem_v[:, i], cv], axis=1), m.n_heads)
+        o = ref_attention_batched(qh, kh, vh, mask)
+        o = cond_lora_proj(merge_heads(o), l.wo,
+                           *lora_params(lp, i, "o"), gate, scale)
+        x = x + o
+        h2 = rmsnorm(x, l.ln2)
+        x = x + jax.nn.gelu(h2 @ l.w1) @ l.w2
+    x = rmsnorm(x, mp["final_norm"])
+    logits = (x @ mp["lm_head"])[:, 0]
+    return logits, jnp.stack(new_ck, axis=1), jnp.stack(new_cv, axis=1)
+
+
+# --------------------------------------------------------------------------
+# Losses + optimiser (Adam carried through the artifact)
+# --------------------------------------------------------------------------
+
+def next_token_loss(logits, tokens, loss_mask):
+    """Mean CE over positions i with loss_mask[i]=1, predicting token i+1."""
+    logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    w = loss_mask[:, :-1]
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def adam_update(grad, param, mu, nu, step, lr,
+                b1=0.9, b2=0.999, eps=1e-8, clip=1.0):
+    """Single flat-vector Adam step with global-norm clipping."""
+    gnorm = jnp.sqrt(jnp.sum(jnp.square(grad)) + 1e-12)
+    grad = grad * jnp.minimum(1.0, clip / gnorm)
+    mu = b1 * mu + (1 - b1) * grad
+    nu = b2 * nu + (1 - b2) * jnp.square(grad)
+    t = step.astype(jnp.float32) + 1.0
+    mhat = mu / (1 - b1 ** t)
+    nhat = nu / (1 - b2 ** t)
+    param = param - lr * mhat / (jnp.sqrt(nhat) + eps)
+    return param, mu, nu
+
+
+def train_lm_step(cfg: Config, base_vec, mu, nu, step, lr, tokens, pos,
+                  loss_mask):
+    """Full-weight LM pretraining step (causal attention, no compression)."""
+    b, s = tokens.shape
+    m_slots = 1  # dummy memory column, masked off
+
+    def loss_fn(bv):
+        zeros = jnp.zeros((b, s), dtype=jnp.int32)
+        gate = jnp.zeros((b, s), dtype=jnp.float32)
+        causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+        valid = tokens != cfg.model.pad_id
+        mask_tok = (causal[None] & valid[:, None, :]).astype(jnp.float32)
+        eye = jnp.eye(s, dtype=jnp.float32)[None]
+        mask_tok = jnp.maximum(mask_tok, eye)
+        mask = jnp.concatenate(
+            [jnp.zeros((b, s, m_slots), jnp.float32), mask_tok], axis=2)
+        merge_p = jnp.zeros((b, m_slots, s), dtype=jnp.float32)
+        lora_dummy = jnp.zeros((P.lora_size(cfg),), dtype=jnp.float32)
+        logits = forward_parallel(cfg, bv, lora_dummy, tokens, zeros, gate,
+                                  pos, mask, merge_p)
+        return next_token_loss(logits, tokens, loss_mask)
+
+    loss, grad = jax.value_and_grad(loss_fn)(base_vec)
+    base_vec, mu, nu = adam_update(grad, base_vec, mu, nu, step, lr)
+    return base_vec, mu, nu, loss
+
+
+def train_ccm_step(cfg: Config, base_vec, lora_vec, mu, nu, step, lr,
+                   tokens, comp_slot, gate, pos, mask, merge_p, loss_mask):
+    """Compression-training step: Eq. (4) — only the conditional-LoRA +
+    <COMP>-embedding vector is trainable; the base model is frozen."""
+
+    def loss_fn(lv):
+        logits = forward_parallel(cfg, base_vec, lv, tokens, comp_slot,
+                                  gate, pos, mask, merge_p)
+        return next_token_loss(logits, tokens, loss_mask)
+
+    loss, grad = jax.value_and_grad(loss_fn)(lora_vec)
+    lora_vec, mu, nu = adam_update(grad, lora_vec, mu, nu, step, lr)
+    return lora_vec, mu, nu, loss
+
+
+def train_rmt_step(cfg: Config, base_vec, lora_vec, mu, nu, step, lr,
+                   chunks, chunk_valid, inputs, input_valid, loss_mask):
+    """Recurrent-compression (RMT/AutoCompressor-style) training step.
+
+    The recursion over time steps is *sequential* — this is exactly the
+    training-cost structure Table 8 measures against CCM's single parallel
+    forward. chunks: [B, R, Sc] tokens; inputs: [B, Si].
+    """
+    m, sc = cfg.model, cfg.scenario
+    b, r, s_c = chunks.shape
+    n_mem = sc.rmt_mem
+
+    def loss_fn(lv):
+        lp = P.unpack(lv, P.lora_param_specs(m, sc.comp_len_max))
+        mem = jnp.broadcast_to(lp["comp_emb"][:n_mem][None],
+                               (b, n_mem, m.d_model))
+        mp = P.unpack(base_vec, P.base_param_specs(m))
+        for j in range(r):
+            toks = chunks[:, j]
+            emb = mp["tok_emb"][toks]
+            x = jnp.concatenate([emb, mem], axis=1)    # summary slots last
+            valid = jnp.concatenate(
+                [chunk_valid[:, j], jnp.ones((b, n_mem))], axis=1)
+            pos = jnp.broadcast_to(
+                jnp.arange(s_c + n_mem, dtype=jnp.int32)[None],
+                (b, s_c + n_mem))
+            _, hidden = forward_embeds(cfg, base_vec, lv, x, valid, pos)
+            mem = hidden[:, -n_mem:]                   # h(t) -> Mem(t)
+        emb_in = mp["tok_emb"][inputs]
+        x = jnp.concatenate([mem, emb_in], axis=1)
+        valid = jnp.concatenate([jnp.ones((b, n_mem)), input_valid], axis=1)
+        si = inputs.shape[1]
+        pos = jnp.broadcast_to(
+            jnp.arange(n_mem + si, dtype=jnp.int32)[None], (b, n_mem + si))
+        logits, _ = forward_embeds(cfg, base_vec, lv, x, valid, pos)
+        logits = logits[:, n_mem:]
+        return next_token_loss(logits, inputs, loss_mask)
+
+    loss, grad = jax.value_and_grad(loss_fn)(lora_vec)
+    lora_vec, mu, nu = adam_update(grad, lora_vec, mu, nu, step, lr)
+    return lora_vec, mu, nu, loss

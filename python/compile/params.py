@@ -1,0 +1,97 @@
+"""Parameter layout: flat f32 vectors <-> named tensors.
+
+Both the frozen base parameters and the trainable compression parameters
+(conditional LoRA + <COMP> embeddings) travel between Rust and the XLA
+artifacts as single 1-D f32 buffers. This module defines the canonical
+layout; the offsets are exported to ``manifest.json`` and mirrored by
+``rust/src/model/layout.rs``. All slicing below is static, so XLA folds
+the unpacking away.
+"""
+
+import math
+
+import jax.numpy as jnp
+
+from .config import Config, ModelConfig
+
+
+def base_param_specs(m: ModelConfig):
+    """Ordered (name, shape) list for the base model parameter vector."""
+    specs = [
+        ("tok_emb", (m.vocab, m.d_model)),
+        ("pos_emb", (m.max_pos, m.d_model)),
+        ("final_norm", (m.d_model,)),
+        ("lm_head", (m.d_model, m.vocab)),
+    ]
+    for i in range(m.n_layers):
+        p = f"layer{i}."
+        specs += [
+            (p + "ln1", (m.d_model,)),
+            (p + "wq", (m.d_model, m.d_model)),
+            (p + "wk", (m.d_model, m.d_model)),
+            (p + "wv", (m.d_model, m.d_model)),
+            (p + "wo", (m.d_model, m.d_model)),
+            (p + "ln2", (m.d_model,)),
+            (p + "w1", (m.d_model, m.d_ff)),
+            (p + "w2", (m.d_ff, m.d_model)),
+        ]
+    return specs
+
+
+def lora_param_specs(m: ModelConfig, comp_len_max: int):
+    """Ordered (name, shape) list for the trainable compression vector:
+    conditional-LoRA A/B for q,k,v,o of every layer + <COMP> embeddings."""
+    specs = [("comp_emb", (comp_len_max, m.d_model))]
+    for i in range(m.n_layers):
+        p = f"layer{i}."
+        for proj in ("q", "k", "v", "o"):
+            specs += [
+                (p + f"lora_{proj}_a", (m.lora_rank, m.d_model)),
+                (p + f"lora_{proj}_b", (m.lora_rank, m.d_model)),
+            ]
+    return specs
+
+
+def layout(specs):
+    """(name, shape) list -> [(name, offset, size, shape)], total."""
+    out, off = [], 0
+    for name, shape in specs:
+        size = math.prod(shape)
+        out.append((name, off, size, shape))
+        off += size
+    return out, off
+
+
+def unpack(vec, specs):
+    """Flat vector -> {name: tensor} via static slices."""
+    lay, total = layout(specs)
+    assert vec.shape[-1] == total, (vec.shape, total)
+    return {
+        name: jnp.reshape(vec[off:off + size], shape)
+        for name, off, size, shape in lay
+    }
+
+
+def base_size(cfg: Config) -> int:
+    return layout(base_param_specs(cfg.model))[1]
+
+
+def lora_size(cfg: Config) -> int:
+    return layout(lora_param_specs(cfg.model, cfg.scenario.comp_len_max))[1]
+
+
+def layout_manifest(cfg: Config) -> dict:
+    """Layout description exported to manifest.json for the Rust side."""
+    def describe(specs):
+        lay, total = layout(specs)
+        return {
+            "total": total,
+            "entries": [
+                {"name": n, "offset": o, "size": s, "shape": list(sh)}
+                for n, o, s, sh in lay
+            ],
+        }
+    return {
+        "base": describe(base_param_specs(cfg.model)),
+        "lora": describe(lora_param_specs(cfg.model, cfg.scenario.comp_len_max)),
+    }

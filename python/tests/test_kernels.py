@@ -1,0 +1,149 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp oracle.
+
+Hypothesis sweeps shapes, block sizes and mask patterns; every property
+asserts allclose against ref.py. This is the core correctness signal for
+the kernels that end up inside every AOT artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ccm_attention import ccm_attention, ccm_attention_batched
+from compile.kernels.cond_lora import cond_lora
+from compile.kernels.ref import (
+    ref_cond_lora,
+    ref_masked_attention,
+    ref_merge_memory,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_mask(rng, s, c, density):
+    """Random mask with at least one allowed column per row (the model
+    guarantees self-attention, so all-masked rows never occur)."""
+    m = (rng.random((s, c)) < density).astype(np.float32)
+    for i in range(s):
+        if m[i].sum() == 0:
+            m[i, rng.integers(0, c)] = 1.0
+    return m
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    s=st.integers(1, 40),
+    extra=st.integers(0, 24),
+    dh=st.sampled_from([4, 8, 16, 32]),
+    density=st.floats(0.05, 1.0),
+    block_q=st.sampled_from([8, 16, 64]),
+    block_k=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(s, extra, dh, density, block_q, block_k, seed):
+    rng = np.random.default_rng(seed)
+    c = s + extra
+    q = rng.standard_normal((s, dh), dtype=np.float32)
+    k = rng.standard_normal((c, dh), dtype=np.float32)
+    v = rng.standard_normal((c, dh), dtype=np.float32)
+    mask = rand_mask(rng, s, c, density)
+    got = ccm_attention(q, k, v, mask, block_q=block_q, block_k=block_k)
+    want = ref_masked_attention(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_attention_fully_masked_row_is_finite():
+    # Defensive: even a pathological all-masked row must not emit NaN.
+    s, c, dh = 4, 8, 8
+    q = np.ones((s, dh), dtype=np.float32)
+    k = np.ones((c, dh), dtype=np.float32)
+    v = np.ones((c, dh), dtype=np.float32)
+    mask = np.zeros((s, c), dtype=np.float32)
+    out = np.asarray(ccm_attention(q, k, v, mask))
+    assert np.isfinite(out).all()
+    np.testing.assert_allclose(out, 0.0)
+
+
+def test_attention_masked_columns_have_no_influence():
+    rng = np.random.default_rng(0)
+    s, c, dh = 12, 20, 8
+    q = rng.standard_normal((s, dh), dtype=np.float32)
+    k = rng.standard_normal((c, dh), dtype=np.float32)
+    v = rng.standard_normal((c, dh), dtype=np.float32)
+    mask = rand_mask(rng, s, c, 0.4)
+    out1 = np.asarray(ccm_attention(q, k, v, mask))
+    # Scrambling masked K/V entries must not change the output.
+    k2, v2 = k.copy(), v.copy()
+    for col in range(c):
+        if mask[:, col].sum() == 0:
+            k2[col] = 1e3
+            v2[col] = -1e3
+    out2 = np.asarray(ccm_attention(q, k2, v2, mask))
+    np.testing.assert_allclose(out1, out2, rtol=1e-6, atol=1e-6)
+
+
+def test_attention_batched_matches_per_head_loop():
+    rng = np.random.default_rng(1)
+    b, h, s, c, dh = 2, 3, 10, 16, 8
+    q = rng.standard_normal((b, h, s, dh), dtype=np.float32)
+    k = rng.standard_normal((b, h, c, dh), dtype=np.float32)
+    v = rng.standard_normal((b, h, c, dh), dtype=np.float32)
+    mask = np.stack([rand_mask(rng, s, c, 0.5) for _ in range(b)])
+    got = np.asarray(ccm_attention_batched(q, k, v, mask))
+    for bi in range(b):
+        for hi in range(h):
+            want = ref_masked_attention(q[bi, hi], k[bi, hi], v[bi, hi],
+                                        mask[bi])
+            np.testing.assert_allclose(got[bi, hi], np.asarray(want),
+                                       rtol=2e-5, atol=2e-5)
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    s=st.integers(1, 48),
+    di=st.sampled_from([8, 16, 32]),
+    do=st.sampled_from([8, 16, 32]),
+    r=st.sampled_from([2, 4, 8]),
+    block_s=st.sampled_from([8, 32, 64]),
+    cond=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cond_lora_matches_ref(s, di, do, r, block_s, cond, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((s, di), dtype=np.float32)
+    w = rng.standard_normal((di, do), dtype=np.float32)
+    a = rng.standard_normal((r, di), dtype=np.float32)
+    b = rng.standard_normal((r, do), dtype=np.float32)
+    gate = (rng.random(s) < 0.3).astype(np.float32) if cond \
+        else np.ones(s, dtype=np.float32)
+    scale = 16.0 / r
+    got = cond_lora(x, w, a, b, gate, scale, block_s=block_s)
+    want = ref_cond_lora(x, w, a, b, gate, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_cond_lora_zero_gate_is_pure_base():
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((10, 16), dtype=np.float32)
+    w = rng.standard_normal((16, 16), dtype=np.float32)
+    a = rng.standard_normal((4, 16), dtype=np.float32)
+    b = rng.standard_normal((4, 16), dtype=np.float32)
+    gate = np.zeros(10, dtype=np.float32)
+    got = np.asarray(cond_lora(x, w, a, b, gate, 4.0))
+    np.testing.assert_allclose(got, x @ w, rtol=1e-5, atol=1e-5)
+
+
+def test_merge_memory_ref_is_linear():
+    rng = np.random.default_rng(3)
+    p = rng.standard_normal((6, 20)).astype(np.float32)
+    k = rng.standard_normal((20, 8)).astype(np.float32)
+    out = np.asarray(ref_merge_memory(jnp.asarray(p), jnp.asarray(k)))
+    np.testing.assert_allclose(out, p @ k, rtol=1e-5, atol=1e-5)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,185 @@
+"""Semantics of the parallelized-training masks (paper Figure 3).
+
+These properties pin down the information-flow rules of Section 3.1:
+c(j) and its <COMP> tokens may reference only Mem(j-1); I(t) references
+only Mem(t); merge weights realise the g_update recurrences.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import masks as MK
+
+
+def rand_scenario(rng, max_chunks=5):
+    t = int(rng.integers(1, max_chunks + 1))
+    chunk_lens = [int(rng.integers(2, 9)) for _ in range(t)]
+    comp_len = int(rng.integers(1, 4))
+    input_len = int(rng.integers(2, 10))
+    seq = sum(chunk_lens) + t * comp_len + input_len + int(rng.integers(0, 6))
+    mem = t * comp_len
+    return chunk_lens, comp_len, input_len, seq, mem
+
+
+@settings(deadline=None, max_examples=40)
+@given(seed=st.integers(0, 2**31 - 1),
+       method=st.sampled_from(["ccm-concat", "ccm-merge", "gist"]))
+def test_information_flow_rules(seed, method):
+    rng = np.random.default_rng(seed)
+    chunk_lens, cl, il, seq, mem = rand_scenario(rng)
+    lay = MK.build_layout(chunk_lens, cl, il, seq)
+    mask, p = MK.build_masks(method, lay, mem)
+    M = mem
+    kind, step, idx = lay.kind, lay.step, np.arange(seq)
+    t = lay.t
+
+    for i in range(seq):
+        row = mask[i]
+        allowed_tok = np.nonzero(row[M:])[0]
+        allowed_mem = np.nonzero(row[:M])[0]
+        if kind[i] == MK.PAD:
+            assert list(allowed_tok) == [i] and len(allowed_mem) == 0
+            continue
+        # Never attend the future or pad columns.
+        assert all(kind[c] != MK.PAD or c == i for c in allowed_tok)
+        assert all(c <= i for c in allowed_tok)
+        j = step[i]
+        if kind[i] == MK.CHUNK:
+            # Raw tokens of OTHER chunks are never visible (the whole point
+            # of compression: previous context only through Mem(j-1)).
+            assert all(not (kind[c] == MK.CHUNK and step[c] != j)
+                       for c in allowed_tok)
+            if method == "ccm-concat":
+                comp_prev = set(idx[(kind == MK.COMP) & (step < j)])
+                assert set(allowed_tok) - set(idx[(kind == MK.CHUNK)
+                                                  & (step == j)]) == comp_prev
+                assert len(allowed_mem) == 0
+            elif method == "ccm-merge":
+                want = set(range((j - 2) * cl, (j - 1) * cl)) if j >= 2 else set()
+                assert set(allowed_mem) == want
+            elif method == "gist":
+                assert len(allowed_mem) == 0
+                assert all(step[c] == j for c in allowed_tok)
+        elif kind[i] == MK.COMP:
+            # <COMP> sees its chunk + Mem(j-1) (gist: chunk only).
+            assert all(step[c] == j or kind[c] == MK.COMP
+                       for c in allowed_tok)
+            if method == "gist":
+                assert all(step[c] == j for c in allowed_tok)
+        elif kind[i] == MK.INPUT:
+            # I(t) accesses context ONLY through Mem(t) (Eq. 3).
+            assert all(kind[c] == MK.INPUT or kind[c] == MK.COMP
+                       for c in allowed_tok)
+            if method in ("ccm-concat", "gist"):
+                comp_all = set(idx[kind == MK.COMP])
+                assert comp_all <= set(allowed_tok)
+                assert len(allowed_mem) == 0
+            elif method == "ccm-merge":
+                assert set(allowed_mem) == set(range((t - 1) * cl, t * cl))
+                assert all(kind[c] == MK.INPUT for c in allowed_tok)
+
+
+@settings(deadline=None, max_examples=30)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_full_is_causal_and_nocontext_is_input_only(seed):
+    rng = np.random.default_rng(seed)
+    chunk_lens, _, il, seq, mem = rand_scenario(rng)
+    lay = MK.build_layout(chunk_lens, 0, il, seq)
+    mask, _ = MK.build_masks("full", lay, mem)
+    kind, idx = lay.kind, np.arange(seq)
+    for i in range(seq):
+        if kind[i] == MK.PAD:
+            continue
+        want = set(idx[(kind != MK.PAD) & (idx <= i)])
+        assert set(np.nonzero(mask[i][mem:])[0]) == want
+        assert mask[i][:mem].sum() == 0
+
+    lay2 = MK.build_layout([], 0, il, seq)
+    mask2, _ = MK.build_masks("nocontext", lay2, mem)
+    for i in range(seq):
+        if lay2.kind[i] != MK.INPUT:
+            continue
+        cols = set(np.nonzero(mask2[i][mem:])[0])
+        assert cols == set(idx[(lay2.kind == MK.INPUT) & (idx <= i)])
+
+
+@settings(deadline=None, max_examples=30)
+@given(t=st.integers(1, 10), seed=st.integers(0, 1000))
+def test_merge_weights_avg_recurrence(t, seed):
+    """Arithmetic average == the recurrence Mem(t)=(1-1/t)Mem(t-1)+h(t)/t."""
+    w = MK.merge_weights(t, "avg")
+    rng = np.random.default_rng(seed)
+    h = rng.standard_normal((t + 1, 7))
+    mem = np.zeros(7)
+    for g in range(1, t + 1):
+        a = 1.0 / g
+        mem = (1 - a) * mem + a * h[g]
+        closed = sum(w[g, j] * h[j] for j in range(1, g + 1))
+        np.testing.assert_allclose(mem, closed, rtol=1e-10, atol=1e-12)
+        np.testing.assert_allclose(w[g, 1:g + 1].sum(), 1.0, rtol=1e-12)
+
+
+@settings(deadline=None, max_examples=30)
+@given(t=st.integers(1, 10), a=st.floats(0.05, 1.0), seed=st.integers(0, 1000))
+def test_merge_weights_ema_recurrence(t, a, seed):
+    w = MK.merge_weights(t, f"ema:{a}")
+    rng = np.random.default_rng(seed)
+    h = rng.standard_normal((t + 1, 5))
+    mem = np.zeros(5)
+    for g in range(1, t + 1):
+        ag = 1.0 if g == 1 else a
+        mem = (1 - ag) * mem + ag * h[g]
+        closed = sum(w[g, j] * h[j] for j in range(1, g + 1))
+        np.testing.assert_allclose(mem, closed, rtol=1e-9, atol=1e-12)
+
+
+def test_merge_p_materialises_weights():
+    lay = MK.build_layout([4, 3, 5], 2, 6, 40)
+    _, p = MK.build_masks("ccm-merge", lay, 8)
+    w = MK.merge_weights(3, "avg")
+    comp_pos = {(j, s): int(np.nonzero((lay.kind == MK.COMP)
+                                       & (lay.step == j)
+                                       & (lay.comp_slot == s))[0][0])
+                for j in (1, 2, 3) for s in (1, 2)}
+    for g in (1, 2, 3):
+        for s in (1, 2):
+            row = p[(g - 1) * 2 + (s - 1)]
+            for j in (1, 2, 3):
+                want = w[g, j] if j <= g else 0.0
+                np.testing.assert_allclose(row[comp_pos[(j, s)]], want,
+                                           rtol=1e-6)
+
+
+def test_compressive_pooling_sums_to_one():
+    lay = MK.build_layout([6, 5], 0, 6, 32)
+    mask, p = MK.build_masks("compressive", lay, 8, pool=2)
+    live = p.sum(axis=1) > 0
+    np.testing.assert_allclose(p[live].sum(axis=1), 1.0, rtol=1e-6)
+    # Input attends exactly the live slots.
+    inp = np.nonzero(lay.kind == MK.INPUT)[0][0]
+    assert set(np.nonzero(mask[inp][:8])[0]) == set(np.nonzero(live)[0])
+    # Chunk 2 attends only chunk-1 slots.
+    c2 = np.nonzero((lay.kind == MK.CHUNK) & (lay.step == 2))[0][0]
+    assert set(np.nonzero(mask[c2][:8])[0]) <= set(range(2))
+
+
+def test_layout_packing_and_helpers():
+    lay = MK.build_layout([3, 4], 2, 5, 24)
+    assert lay.n_tokens == 3 + 2 + 4 + 2 + 5
+    np.testing.assert_array_equal(
+        lay.kind[:16],
+        [MK.CHUNK] * 3 + [MK.COMP] * 2 + [MK.CHUNK] * 4 + [MK.COMP] * 2
+        + [MK.INPUT] * 5)
+    gate = MK.lora_gate(lay)
+    assert gate.sum() == 4 and (gate[lay.kind == MK.COMP] == 1).all()
+    gate_u = MK.lora_gate(lay, conditional=False)
+    assert gate_u.sum() == lay.n_tokens
+    lm = MK.loss_mask_for_target(lay, 3)
+    assert lm.sum() == 3 and (np.nonzero(lm)[0] == [13, 14, 15]).all()
+    with pytest.raises(AssertionError):
+        MK.build_layout([20], 2, 10, 24)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,256 @@
+"""L2 model correctness.
+
+The centrepiece is the parallel<->recurrent equivalence test: the paper's
+parallelized training forward (Figure 3) must produce exactly the logits
+of the online recursion (Figures 2/5) — compress chunk-by-chunk, update
+Mem(t) by concat or merge, then infer with the memory. This is the claim
+that makes single-forward training of a recursive system sound.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import masks as MK
+from compile import model as M
+from compile import params as P
+from compile.config import get_config
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = get_config("test")
+
+
+def rand_params(seed=0):
+    rng = np.random.default_rng(seed)
+    base = (rng.standard_normal(P.base_size(CFG)) * 0.05).astype(np.float32)
+    lora = (rng.standard_normal(P.lora_size(CFG)) * 0.05).astype(np.float32)
+    return jnp.asarray(base), jnp.asarray(lora)
+
+
+def rand_tokens(rng, n):
+    return rng.integers(4, CFG.model.vocab, size=n, dtype=np.int32)
+
+
+def build_sample(rng, t=3, comp_len=2, input_len=8, seq=None):
+    seq = seq or CFG.scenario.seq_train
+    chunk_lens = [int(rng.integers(4, CFG.scenario.chunk_max - 2))
+                  for _ in range(t)]
+    lay = MK.build_layout(chunk_lens, comp_len, input_len, seq)
+    tokens = np.zeros(seq, dtype=np.int32)
+    pos = 0
+    for clen in chunk_lens:
+        tokens[pos:pos + clen] = rand_tokens(rng, clen)
+        pos += clen
+        tokens[pos:pos + comp_len] = CFG.model.comp_id
+        pos += comp_len
+    tokens[pos:pos + input_len] = rand_tokens(rng, input_len)
+    return lay, tokens
+
+
+def parallel_logits(method, lay, tokens, base, lora, scheme="avg"):
+    sc = CFG.scenario
+    mask, p = MK.build_masks(method, lay, sc.mem_slots, scheme)
+    logits = M.forward_parallel(
+        CFG, base, lora,
+        jnp.asarray(tokens)[None],
+        jnp.asarray(MK.comp_slot_input(lay))[None],
+        jnp.asarray(MK.lora_gate(lay))[None],
+        jnp.asarray(MK.position_ids(lay))[None],
+        jnp.asarray(mask)[None],
+        jnp.asarray(p)[None])
+    return np.asarray(logits[0])
+
+
+def recurrent_logits(method, lay, tokens, base, lora, ema=None):
+    """Simulate the online path: compress each chunk with forward_with_mem,
+    update memory (concat or merge), infer the input with the memory."""
+    m, sc = CFG.model, CFG.scenario
+    L, D, Mm = m.n_layers, m.d_model, sc.mem_slots
+    cl = lay.comp_len
+    mem_k = np.zeros((1, L, Mm, D), dtype=np.float32)
+    mem_v = np.zeros((1, L, Mm, D), dtype=np.float32)
+    mem_len = 0
+    start = 0
+    for j, clen in enumerate(lay.chunk_lens, start=1):
+        buf = sc.chunk_max + sc.comp_len_max
+        toks = np.zeros(buf, dtype=np.int32)
+        slots = np.zeros(buf, dtype=np.int32)
+        gate = np.zeros(buf, dtype=np.float32)
+        posv = np.zeros(buf, dtype=np.int32)
+        toks[:clen] = tokens[start:start + clen]
+        posv[:clen] = np.arange(start, start + clen)
+        cstart = sc.chunk_max
+        toks[cstart:cstart + cl] = m.comp_id
+        slots[cstart:cstart + cl] = np.arange(1, cl + 1)
+        gate[cstart:cstart + cl] = 1.0
+        posv[cstart:cstart + cl] = np.arange(start + clen, start + clen + cl)
+        _, kvs = M.forward_with_mem(
+            CFG, base, lora, jnp.asarray(mem_k), jnp.asarray(mem_v),
+            jnp.asarray([mem_len], dtype=jnp.int32),
+            jnp.asarray(toks)[None], jnp.asarray(slots)[None],
+            jnp.asarray(gate)[None], jnp.asarray(posv)[None],
+            collect_kv=True)
+        hk = np.stack([np.asarray(k[0, cstart:cstart + cl]) for k, _ in kvs])
+        hv = np.stack([np.asarray(v[0, cstart:cstart + cl]) for _, v in kvs])
+        if method == "ccm-concat":
+            mem_k[0, :, mem_len:mem_len + cl] = hk
+            mem_v[0, :, mem_len:mem_len + cl] = hv
+            mem_len += cl
+        else:  # ccm-merge
+            a = (1.0 if j == 1 else ema) if ema is not None else 1.0 / j
+            mem_k[0, :, :cl] = (1 - a) * mem_k[0, :, :cl] + a * hk
+            mem_v[0, :, :cl] = (1 - a) * mem_v[0, :, :cl] + a * hv
+            mem_len = cl
+        start += clen + cl
+
+    il = lay.input_len
+    toks = np.zeros(CFG.scenario.input_max, dtype=np.int32)
+    toks[:il] = tokens[start:start + il]
+    posv = np.zeros(CFG.scenario.input_max, dtype=np.int32)
+    posv[:il] = np.arange(start, start + il)
+    zeros = np.zeros(CFG.scenario.input_max, dtype=np.int32)
+    gate = np.zeros(CFG.scenario.input_max, dtype=np.float32)
+    logits, _ = M.forward_with_mem(
+        CFG, base, lora, jnp.asarray(mem_k), jnp.asarray(mem_v),
+        jnp.asarray([mem_len], dtype=jnp.int32),
+        jnp.asarray(toks)[None], jnp.asarray(zeros)[None],
+        jnp.asarray(gate)[None], jnp.asarray(posv)[None])
+    return np.asarray(logits[0, :il]), start
+
+
+@pytest.mark.parametrize("method", ["ccm-concat", "ccm-merge"])
+def test_parallel_equals_recurrent(method):
+    rng = np.random.default_rng(7)
+    base, lora = rand_params(1)
+    lay, tokens = build_sample(rng, t=3, comp_len=2, input_len=8)
+    par = parallel_logits(method, lay, tokens, base, lora)
+    rec, start = recurrent_logits(method, lay, tokens, base, lora)
+    inp = np.nonzero(lay.kind == MK.INPUT)[0]
+    np.testing.assert_allclose(par[inp], rec, rtol=5e-4, atol=5e-4)
+
+
+def test_parallel_equals_recurrent_ema():
+    rng = np.random.default_rng(8)
+    base, lora = rand_params(2)
+    lay, tokens = build_sample(rng, t=4, comp_len=2, input_len=6)
+    par = parallel_logits("ccm-merge", lay, tokens, base, lora,
+                          scheme="ema:0.5")
+    rec, _ = recurrent_logits("ccm-merge", lay, tokens, base, lora, ema=0.5)
+    inp = np.nonzero(lay.kind == MK.INPUT)[0]
+    np.testing.assert_allclose(par[inp], rec, rtol=5e-4, atol=5e-4)
+
+
+def test_conditional_gate_isolates_lora():
+    """With the conditional gate all-zero, the LoRA vector must not change
+    the logits at all — the paper's guarantee that compression parameters
+    leave the base model intact on normal tokens."""
+    rng = np.random.default_rng(9)
+    base, lora = rand_params(3)
+    lay, tokens = build_sample(rng, t=0, comp_len=0, input_len=10)
+    mask, p = MK.build_masks("nocontext", lay, CFG.scenario.mem_slots)
+    zeros_slot = jnp.zeros((1, lay.seq), dtype=jnp.int32)
+    gate0 = jnp.zeros((1, lay.seq), dtype=jnp.float32)
+    args = (jnp.asarray(tokens)[None], zeros_slot, gate0,
+            jnp.asarray(MK.position_ids(lay))[None],
+            jnp.asarray(mask)[None], jnp.asarray(p)[None])
+    l1 = M.forward_parallel(CFG, base, lora, *args)
+    l2 = M.forward_parallel(CFG, base, jnp.zeros_like(lora), *args)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_pallas_forward_matches_ref_forward():
+    rng = np.random.default_rng(10)
+    base, lora = rand_params(4)
+    lay, tokens = build_sample(rng, t=2, comp_len=2, input_len=8)
+    ref = parallel_logits("ccm-concat", lay, tokens, base, lora)
+    sc = CFG.scenario
+    mask, p = MK.build_masks("ccm-concat", lay, sc.mem_slots)
+    pal = M.forward_parallel(
+        CFG, base, lora, jnp.asarray(tokens)[None],
+        jnp.asarray(MK.comp_slot_input(lay))[None],
+        jnp.asarray(MK.lora_gate(lay))[None],
+        jnp.asarray(MK.position_ids(lay))[None],
+        jnp.asarray(mask)[None], jnp.asarray(p)[None], use_pallas=True)
+    np.testing.assert_allclose(np.asarray(pal[0]), ref, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_step_matches_infer_with_mem():
+    rng = np.random.default_rng(11)
+    base, lora = rand_params(5)
+    m, sc = CFG.model, CFG.scenario
+    L, D, Mm, Cc = m.n_layers, m.d_model, sc.mem_slots, sc.decode_cache
+    mem_k = jnp.asarray(rng.standard_normal((1, L, Mm, D)) * 0.1,
+                        dtype=jnp.float32)
+    mem_v = jnp.asarray(rng.standard_normal((1, L, Mm, D)) * 0.1,
+                        dtype=jnp.float32)
+    mem_len = jnp.asarray([3], dtype=jnp.int32)
+    n = 9
+    toks = rand_tokens(rng, n)
+
+    # Reference: batch scoring with infer_with_mem.
+    buf = np.zeros(sc.input_max, dtype=np.int32)
+    buf[:n] = toks
+    posv = np.zeros(sc.input_max, dtype=np.int32)
+    posv[:n] = np.arange(n)
+    zeros = np.zeros(sc.input_max, dtype=np.int32)
+    gate = np.zeros(sc.input_max, dtype=np.float32)
+    ref_logits, _ = M.forward_with_mem(
+        CFG, base, lora, mem_k, mem_v, mem_len,
+        jnp.asarray(buf)[None], jnp.asarray(zeros)[None],
+        jnp.asarray(gate)[None], jnp.asarray(posv)[None])
+    ref_logits = np.asarray(ref_logits[0, :n])
+
+    # Decode token-by-token.
+    cache_k = jnp.zeros((1, L, Cc, D), dtype=jnp.float32)
+    cache_v = jnp.zeros((1, L, Cc, D), dtype=jnp.float32)
+    got = []
+    for i, tk in enumerate(toks):
+        logits, cache_k, cache_v = M.decode_step(
+            CFG, base, lora, mem_k, mem_v, mem_len, cache_k, cache_v,
+            jnp.asarray(i, dtype=jnp.int32),
+            jnp.asarray([tk], dtype=jnp.int32),
+            jnp.asarray([i], dtype=jnp.int32))
+        got.append(np.asarray(logits[0]))
+    np.testing.assert_allclose(np.stack(got), ref_logits,
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_train_steps_decrease_loss():
+    rng = np.random.default_rng(12)
+    base, lora = rand_params(6)
+    sc = CFG.scenario
+    B, S = sc.batch_train, sc.seq_train
+    toks = np.zeros((B, S), dtype=np.int32)
+    slot = np.zeros((B, S), dtype=np.int32)
+    gate = np.zeros((B, S), dtype=np.float32)
+    posv = np.zeros((B, S), dtype=np.int32)
+    maskb = np.zeros((B, S, sc.mem_slots + S), dtype=np.float32)
+    pb = np.zeros((B, sc.mem_slots, S), dtype=np.float32)
+    lossb = np.zeros((B, S), dtype=np.float32)
+    for b in range(B):
+        lay, tk = build_sample(rng, t=2, comp_len=2, input_len=8)
+        mask, p = MK.build_masks("ccm-concat", lay, sc.mem_slots)
+        toks[b], maskb[b], pb[b] = tk, mask, p
+        slot[b] = MK.comp_slot_input(lay)
+        gate[b] = MK.lora_gate(lay)
+        posv[b] = MK.position_ids(lay)
+        lossb[b] = MK.loss_mask_for_target(lay, 4)
+    mu = jnp.zeros_like(lora)
+    nu = jnp.zeros_like(lora)
+    args = tuple(jnp.asarray(x) for x in (toks, slot, gate, posv, maskb, pb,
+                                          lossb))
+    step_fn = jax.jit(lambda lv, mu, nu, s: M.train_ccm_step(
+        CFG, base, lv, mu, nu, s, jnp.float32(1e-2), *args))
+    losses = []
+    lv = lora
+    for s in range(8):
+        lv, mu, nu, loss = step_fn(lv, mu, nu, jnp.asarray(s, jnp.int32))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

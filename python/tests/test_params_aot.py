@@ -1,0 +1,119 @@
+"""Parameter layout + AOT export invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import params as P
+from compile.config import get_config
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_layout_is_dense_and_ordered():
+    cfg = get_config("test")
+    for specs in (P.base_param_specs(cfg.model),
+                  P.lora_param_specs(cfg.model, cfg.scenario.comp_len_max)):
+        lay, total = P.layout(specs)
+        off = 0
+        for name, offset, size, shape in lay:
+            assert offset == off, name
+            assert size == int(np.prod(shape))
+            off += size
+        assert off == total
+
+
+def test_unpack_roundtrip():
+    cfg = get_config("test")
+    specs = P.base_param_specs(cfg.model)
+    _, total = P.layout(specs)
+    vec = jnp.arange(total, dtype=jnp.float32)
+    d = P.unpack(vec, specs)
+    # Every element lands exactly once.
+    flat = jnp.concatenate([d[n].reshape(-1) for n, _ in specs])
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(vec))
+    # Shapes match the spec.
+    for name, shape in specs:
+        assert d[name].shape == shape
+
+
+def test_lora_layout_has_all_projections():
+    cfg = get_config("test")
+    names = [n for n, _ in P.lora_param_specs(cfg.model, 2)]
+    assert names[0] == "comp_emb"
+    for i in range(cfg.model.n_layers):
+        for proj in ("q", "k", "v", "o"):
+            assert f"layer{i}.lora_{proj}_a" in names
+            assert f"layer{i}.lora_{proj}_b" in names
+
+
+def test_artifact_defs_cover_contract():
+    """The Rust runtime expects these artifacts with these arities."""
+    cfg = get_config("test")
+    defs = {name: args for name, _, args in aot.artifact_defs(cfg)}
+    expect = {
+        "train_lm_step": 8,
+        "train_ccm_step": 13,
+        "train_rmt_step": 11,
+        "ccm_forward_b1": 8,
+        "ccm_forward_pallas_b1": 8,
+        "compress_chunk_b1": 9,
+        "infer_with_mem_b1": 7,
+        "decode_step": 10,
+        "rmt_forward_b1": 5,
+    }
+    for name, arity in expect.items():
+        assert name in defs, name
+        assert len(defs[name]) == arity, name
+    # Batch variants exist for every serving artifact.
+    for b in cfg.scenario.infer_batches:
+        for base in ("ccm_forward", "compress_chunk", "infer_with_mem", "rmt_forward"):
+            assert f"{base}_b{b}" in defs
+
+
+def test_mask_goldens_are_self_consistent():
+    cfg = get_config("test")
+    goldens = aot.mask_goldens(cfg)
+    methods = {g["method"] for g in goldens}
+    assert methods == {"full", "nocontext", "ccm-concat", "ccm-merge",
+                       "gist", "compressive"}
+    for g in goldens:
+        assert len(g["mask_rows"]) == g["seq"]
+        for row in g["mask_rows"]:
+            assert len(row) == g["mem_slots"] + g["seq"]
+            assert set(row) <= {"0", "1"}
+        for r, c, v in g["p_nonzero"]:
+            assert 0 <= r < g["mem_slots"]
+            assert 0 <= c < g["seq"]
+            assert 0 < v <= 1.0 + 1e-6
+        # EMA goldens only for merge.
+        if g["scheme"].startswith("ema"):
+            assert g["method"] == "ccm-merge"
+
+
+def test_hlo_text_lowering_smoke():
+    """The HLO-text interchange path works for a minimal function."""
+    def fn(x):
+        return (x @ x.T + 1.0,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((4, 4), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[4,4]" in text
+
+
+def test_scenario_validation_catches_overflow():
+    cfg = get_config("test")
+    cfg.scenario.validate()  # fine
+    from compile.config import Config, ModelConfig, ScenarioConfig
+    bad = Config(model=ModelConfig(), scenario=ScenarioConfig(
+        t_max=100, chunk_max=24, comp_len_max=4, input_max=32,
+        seq_train=64, mem_slots=400))
+    with pytest.raises(AssertionError):
+        bad.scenario.validate()
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

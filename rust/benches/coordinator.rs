@@ -1,0 +1,125 @@
+//! Coordinator-overhead micro-benchmarks (host-side only, no XLA).
+//!
+//! The L3 perf target (DESIGN.md §8): coordinator bookkeeping must be
+//! negligible next to artifact execution. These benches quantify mask
+//! building, batch packing, memory updates and batcher scheduling.
+
+use std::time::Duration;
+
+use ccm::coordinator::batcher::{Batcher, WorkKind};
+use ccm::datagen::{by_name, Split};
+use ccm::masks::{build_layout, build_masks, MergeScheme, Method};
+use ccm::memory::{CompressedChunk, MemoryStore};
+use ccm::model::manifest::ScenarioConfig;
+use ccm::training::pack::{pack_batch, PackPolicy};
+use ccm::util::bench::{bench, print_table};
+
+fn scenario() -> ScenarioConfig {
+    ScenarioConfig {
+        t_max: 8,
+        chunk_max: 20,
+        comp_len_max: 4,
+        input_max: 32,
+        seq_train: 224,
+        mem_slots: 32,
+        batch_train: 8,
+        infer_batches: vec![1, 8],
+        decode_cache: 96,
+        rmt_unroll: 4,
+        rmt_mem: 4,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let budget = Duration::from_millis(500);
+    let sc = scenario();
+    let mut rows = Vec::new();
+
+    // Mask building (per packed row) for each method.
+    let chunk_lens = vec![18usize; 8];
+    for method in [Method::Full, Method::CcmConcat, Method::CcmMerge, Method::Compressive] {
+        let cl = if method.uses_comp_tokens() { 2 } else { 0 };
+        let lay = build_layout(&chunk_lens, cl, 24, sc.seq_train)?;
+        let s = bench(&format!("mask/{}", method.name()), budget, 10_000, || {
+            build_masks(method, &lay, sc.mem_slots, MergeScheme::Avg, 2).unwrap();
+        });
+        rows.push(vec![s.name.clone(), format!("{:.3}", s.mean_ms()), String::new()]);
+    }
+
+    // Full batch packing (8 samples) — what the trainer/evaluator stages.
+    {
+        let manifest = fake_manifest(sc.clone());
+        let ds = by_name("metaicl", 7, &sc, 512)?;
+        let samples: Vec<_> = (0..8).map(|i| ds.sample(Split::Train, i, 8)).collect();
+        let refs: Vec<_> = samples.iter().map(|s| (s, None)).collect();
+        let policy = PackPolicy::new(Method::CcmConcat, 2);
+        let s = bench("pack_batch/b8", budget, 5_000, || {
+            pack_batch(&policy, &manifest, &refs, 8).unwrap();
+        });
+        rows.push(vec![s.name.clone(), format!("{:.3}", s.mean_ms()), "8 rows".into()]);
+    }
+
+    // Memory update throughput (concat + merge).
+    {
+        let h = CompressedChunk { k: vec![0.5; 4 * 2 * 128], v: vec![0.5; 4 * 2 * 128], comp_len: 2 };
+        let s = bench("mem/concat-update", budget, 100_000, || {
+            let mut m = MemoryStore::concat(4, 32, 128, 2);
+            for _ in 0..8 {
+                m.update(&h).unwrap();
+            }
+        });
+        rows.push(vec![s.name.clone(), format!("{:.4}", s.mean_ms()), "8 updates".into()]);
+        let s = bench("mem/merge-update", budget, 100_000, || {
+            let mut m = MemoryStore::merge(4, 32, 128, 2, MergeScheme::Avg);
+            for _ in 0..8 {
+                m.update(&h).unwrap();
+            }
+        });
+        rows.push(vec![s.name.clone(), format!("{:.4}", s.mean_ms()), "8 updates".into()]);
+    }
+
+    // Batcher scheduling under load.
+    {
+        let s = bench("batcher/1k-items", budget, 2_000, || {
+            let mut b = Batcher::new(8, Duration::ZERO);
+            for i in 0..1000 {
+                let kind = if i % 3 == 0 { WorkKind::Infer } else { WorkKind::Compress };
+                b.push(&format!("s{}", i % 32), kind, vec![1, 2, 3]);
+            }
+            while b.next_batch(std::time::Instant::now(), true).is_some() {}
+        });
+        rows.push(vec![s.name.clone(), format!("{:.3}", s.mean_ms()), "1000 items".into()]);
+    }
+
+    print_table("coordinator overhead (host-side)", &["op", "mean ms", "note"], &rows);
+    Ok(())
+}
+
+fn fake_manifest(sc: ScenarioConfig) -> ccm::model::Manifest {
+    use ccm::model::manifest::*;
+    Manifest {
+        config_name: "bench".into(),
+        dir: std::path::PathBuf::from("."),
+        model: ModelConfig {
+            name: "bench".into(),
+            vocab: 512,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 512,
+            max_pos: 512,
+            lora_rank: 8,
+            lora_alpha: 16.0,
+            pad_id: 0,
+            bos_id: 1,
+            sep_id: 2,
+            comp_id: 3,
+            d_head: 32,
+        },
+        scenario: sc,
+        base_layout: ParamLayout { total: 1, entries: vec![] },
+        lora_layout: ParamLayout { total: 1, entries: vec![] },
+        artifacts: vec![],
+        mask_goldens: vec![],
+    }
+}

@@ -1,0 +1,107 @@
+//! End-to-end artifact latency/throughput bench (backs Table 1).
+//!
+//! Measures the serving hot path per artifact batch variant: compression
+//! step, memory inference, full-context parallel forward, and decode.
+//! Run with `cargo bench --bench throughput` (uses the test config; pass
+//! CCM_BENCH_CONFIG=main for the headline config).
+
+use std::time::Duration;
+
+use ccm::compress::{CompressItem, Engine, InferItem};
+use ccm::datagen::{by_name, Split};
+use ccm::masks::Method;
+use ccm::memory::MemoryStore;
+use ccm::model::Checkpoint;
+use ccm::runtime::{Runtime, Value};
+use ccm::training::pack::{pack_batch, PackPolicy};
+use ccm::util::bench::{bench, print_table};
+
+fn main() -> anyhow::Result<()> {
+    let config = std::env::var("CCM_BENCH_CONFIG").unwrap_or_else(|_| "test".into());
+    let rt = Runtime::from_config(&config)?;
+    let m = rt.manifest.model.clone();
+    let sc = rt.manifest.scenario.clone();
+    let ck = Checkpoint::init(&rt.manifest, 7);
+    let comp_len = sc.comp_len_max;
+    let engine = Engine::new(&rt, &ck, comp_len)?;
+    let budget = Duration::from_millis(800);
+    let ds = by_name("metaicl", 7, &sc, m.vocab)?;
+    let t = sc.t_max.min(4);
+    let samples: Vec<_> = (0..8).map(|i| ds.sample(Split::Test, i % 8, t)).collect();
+    let mem = MemoryStore::concat(m.n_layers, sc.mem_slots, m.d_model, comp_len);
+
+    let mut rows = Vec::new();
+
+    // Compression step at batch 1 and 8.
+    for b in [1usize, 8] {
+        let items: Vec<CompressItem> = samples
+            .iter()
+            .take(b)
+            .map(|s| CompressItem { mem: &mem, chunk: &s.chunks[0], pos_start: 0 })
+            .collect();
+        let s = bench(&format!("compress_b{b}"), budget, 200, || {
+            engine.compress(&items).unwrap();
+        });
+        rows.push(vec![
+            s.name.clone(),
+            format!("{:.2}", s.mean_ms()),
+            format!("{:.1}", s.throughput(b as f64)),
+        ]);
+    }
+
+    // Memory inference at batch 1 and 8.
+    for b in [1usize, 8] {
+        let inputs: Vec<Vec<i32>> = samples.iter().take(b).map(|s| s.input_with_target()).collect();
+        let items: Vec<InferItem> = inputs
+            .iter()
+            .map(|tk| InferItem { mem: &mem, tokens: tk, pos_start: 0 })
+            .collect();
+        let s = bench(&format!("infer_with_mem_b{b}"), budget, 200, || {
+            engine.infer(&items).unwrap();
+        });
+        rows.push(vec![
+            s.name.clone(),
+            format!("{:.2}", s.mean_ms()),
+            format!("{:.1}", s.throughput(b as f64)),
+        ]);
+    }
+
+    // Full-context parallel forward (what "no compression" costs).
+    let nb = rt.manifest.base_layout.total;
+    let nl = rt.manifest.lora_layout.total;
+    for b in sc.infer_batches.clone() {
+        let policy = PackPolicy::new(Method::Full, comp_len);
+        let refs: Vec<_> = samples.iter().take(b).map(|s| (s, None)).collect();
+        let batch = pack_batch(&policy, &rt.manifest, &refs, b)?;
+        let inputs = vec![
+            Value::vec_f32(&[nb], ck.base.data.clone())?,
+            Value::vec_f32(&[nl], ck.lora.data.clone())?,
+            Value::I32(batch.tokens.clone()),
+            Value::I32(batch.comp_slot.clone()),
+            Value::F32(batch.gate.clone()),
+            Value::I32(batch.pos.clone()),
+            Value::F32(batch.mask.clone()),
+            Value::F32(batch.merge_p.clone()),
+        ];
+        let name = format!("ccm_forward_b{b}");
+        rt.executable(&name)?;
+        let s = bench(&format!("full_forward_b{b}"), budget, 100, || {
+            rt.execute_f32(&name, &inputs).unwrap();
+        });
+        rows.push(vec![
+            s.name.clone(),
+            format!("{:.2}", s.mean_ms()),
+            format!("{:.1}", s.throughput(b as f64)),
+        ]);
+    }
+
+    print_table(
+        &format!("serving hot-path latency (config {config})"),
+        &["op", "mean ms", "items/s"],
+        &rows,
+    );
+
+    // The Table-1 shape check: memory inference beats full-context
+    // scoring per sample once contexts are long.
+    Ok(())
+}

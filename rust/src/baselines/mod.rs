@@ -1,0 +1,11 @@
+//! Baselines that are not expressible as a (mask, P) policy:
+//!
+//! * `rmt`        — the recurrent token-embedding compressor
+//!   (RMT / AutoCompressor shape, Tables 8 & 22): sequential model calls
+//!   per chunk, summary embeddings carried between calls.
+//! * `summarize`  — the MemoryBank-style text-summarization baseline
+//!   (Table 9): an extractive summarizer standing in for the paper's
+//!   ChatGPT summarizer (see DESIGN.md §2 substitutions).
+
+pub mod rmt;
+pub mod summarize;

@@ -1,0 +1,150 @@
+//! Recurrent-compression baseline (RMT / AutoCompressor shape).
+//!
+//! Context chunks are compressed into `rmt_mem` *token embeddings* by
+//! sequential forward passes: chunk j is embedded, the previous summary
+//! embeddings are appended, and the final-layer hidden states at the
+//! summary positions become the next summary. Inference prepends the
+//! summary embeddings to the input. Each step is a separate model call —
+//! the sequential structure whose training/inference cost Table 8
+//! contrasts with CCM's single parallel forward.
+
+use anyhow::{ensure, Result};
+
+use crate::datagen::OnlineSample;
+use crate::model::store::gather_embeddings;
+use crate::model::Checkpoint;
+use crate::runtime::{Runtime, Value};
+use crate::tensor::{IntTensor, Tensor};
+
+pub struct RmtEngine<'rt> {
+    pub rt: &'rt Runtime,
+    pub ck: &'rt Checkpoint,
+}
+
+impl<'rt> RmtEngine<'rt> {
+    pub fn new(rt: &'rt Runtime, ck: &'rt Checkpoint) -> RmtEngine<'rt> {
+        RmtEngine { rt, ck }
+    }
+
+    fn seq_len(&self) -> usize {
+        // Must match aot.py's Se for rmt_forward.
+        let sc = &self.rt.manifest.scenario;
+        (sc.chunk_max + sc.comp_len_max + sc.rmt_mem).max(sc.rmt_mem + sc.input_max)
+    }
+
+    /// Initial summary embeddings (the trainable comp_emb rows).
+    pub fn init_memory(&self) -> Result<Vec<f32>> {
+        let m = &self.rt.manifest;
+        let n_mem = m.scenario.rmt_mem;
+        let emb = m.lora_layout.slice(&self.ck.lora.data, "comp_emb")?;
+        Ok(emb[..n_mem * m.model.d_model].to_vec())
+    }
+
+    /// One forward over `[tokens-as-embeddings | extra embeddings]`.
+    /// Returns (logits [Se, V], hidden [Se, D]).
+    fn forward(
+        &self,
+        tokens_prefix: &[i32],
+        emb_prefix_first: bool,
+        mem: &[f32],
+    ) -> Result<(Tensor, Tensor)> {
+        let m = &self.rt.manifest;
+        let (d, se) = (m.model.d_model, self.seq_len());
+        let n_mem = mem.len() / d;
+        let tok_emb = gather_embeddings(&self.ck.base.data, &m.base_layout, tokens_prefix, d)?;
+        let mut embeds = Tensor::zeros(&[1, se, d]);
+        let mut valid = Tensor::zeros(&[1, se]);
+        let total = tokens_prefix.len() + n_mem;
+        ensure!(total <= se, "rmt sequence {total} > {se}");
+        let (first, second): (&[f32], &[f32]) =
+            if emb_prefix_first { (mem, &tok_emb) } else { (&tok_emb, mem) };
+        embeds.data[..first.len()].copy_from_slice(first);
+        embeds.data[first.len()..first.len() + second.len()].copy_from_slice(second);
+        for i in 0..total {
+            valid.data[i] = 1.0;
+        }
+        let mut pos = IntTensor::zeros(&[1, se]);
+        for i in 0..se {
+            pos.data[i] = i as i32;
+        }
+        let nb = m.base_layout.total;
+        let nl = m.lora_layout.total;
+        let outs = self.rt.execute_f32(
+            "rmt_forward_b1",
+            &[
+                Value::vec_f32(&[nb], self.ck.base.data.clone())?,
+                Value::vec_f32(&[nl], self.ck.lora.data.clone())?,
+                Value::F32(embeds),
+                Value::F32(valid),
+                Value::I32(pos),
+            ],
+        )?;
+        Ok((outs[0].clone(), outs[1].clone()))
+    }
+
+    /// Compress one chunk: summary' = hidden at the summary positions of
+    /// `[emb(chunk) | summary]`.
+    pub fn compress_chunk(&self, mem: &[f32], chunk: &[i32]) -> Result<Vec<f32>> {
+        let d = self.rt.manifest.model.d_model;
+        let n_mem = mem.len() / d;
+        let (_, hidden) = self.forward(chunk, false, mem)?;
+        let start = chunk.len();
+        let mut out = Vec::with_capacity(n_mem * d);
+        for i in 0..n_mem {
+            out.extend_from_slice(hidden.row(&[start + i]));
+        }
+        Ok(out)
+    }
+
+    /// Score input+target with the summary prefix; returns the average
+    /// target log-likelihood (targets start at `input_len` within
+    /// `tokens`).
+    pub fn score(&self, mem: &[f32], tokens: &[i32], input_len: usize) -> Result<f64> {
+        let d = self.rt.manifest.model.d_model;
+        let n_mem = mem.len() / d;
+        let (logits, _) = self.forward(tokens, true, mem)?;
+        let mut total = 0.0f64;
+        let n_tgt = tokens.len() - input_len;
+        for i in 0..n_tgt {
+            // Token index within the packed sequence: n_mem + input_len + i;
+            // its predictor row is one before.
+            let row = logits.row(&[n_mem + input_len + i - 1]);
+            let tgt = tokens[input_len + i] as usize;
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let lse: f32 = row.iter().map(|&x| (x - mx).exp()).sum::<f32>().ln() + mx;
+            total += (row[tgt] - lse) as f64;
+        }
+        Ok(total / n_tgt as f64)
+    }
+
+    /// Full online evaluation of one sample: sequential compression of
+    /// every chunk, then multi-choice scoring. Returns (chosen index,
+    /// model calls made) — the call count is the inefficiency Table 8
+    /// quantifies.
+    pub fn choose(&self, sample: &OnlineSample) -> Result<(usize, usize)> {
+        let mut mem = self.init_memory()?;
+        let mut calls = 0usize;
+        for c in &sample.chunks {
+            mem = self.compress_chunk(&mem, c)?;
+            calls += 1;
+        }
+        let mut best = (f64::NEG_INFINITY, 0usize);
+        for (ci, choice) in sample.choices.iter().enumerate() {
+            let mut toks = sample.input.clone();
+            toks.extend_from_slice(choice);
+            let ll = self.score(&mem, &toks, sample.input.len())?;
+            calls += 1;
+            if ll > best.0 {
+                best = (ll, ci);
+            }
+        }
+        Ok((best.1, calls))
+    }
+
+    /// KV footprint of the summary memory (token-embedding slots act as
+    /// n_mem KV entries once processed).
+    pub fn mem_kv_bytes(&self) -> usize {
+        let m = &self.rt.manifest;
+        2 * m.model.n_layers * m.scenario.rmt_mem * m.model.d_model * 4
+    }
+}

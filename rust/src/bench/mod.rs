@@ -1,0 +1,259 @@
+//! Experiment drivers: one entry per paper table/figure (DESIGN.md §6).
+//!
+//! `ccm reproduce --exp <id>` regenerates the table/figure on the
+//! synthetic suites. Checkpoints are trained on demand and cached under
+//! `runs/<config>/`, so drivers compose: fig6 reuses fig7's adapters etc.
+//! Every driver prints the table and appends it to `results/<exp>.md`.
+
+pub mod experiments;
+
+/// All experiments share one base LM pretrained on the full mixture —
+/// the paper's Table-4/15 observation that adapter *training data* (not
+/// the base) is what varies across settings.
+pub const UNIFIED: &str = "metaicl+lamp+dialog";
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::datagen::corpus::Mixture;
+use crate::masks::{MergeScheme, Method};
+use crate::model::{Checkpoint, Manifest};
+use crate::runtime::Runtime;
+use crate::training::pack::PackPolicy;
+use crate::training::Trainer;
+use crate::util::cli::Args;
+
+/// Tunables every driver respects (scaled for the CPU testbed; raise for
+/// closer-to-paper fidelity).
+#[derive(Debug, Clone)]
+pub struct Budget {
+    pub steps_lm: usize,
+    pub steps_adapter: usize,
+    pub steps_rmt: usize,
+    pub eval_n: usize,
+    pub t_values: Vec<usize>,
+    pub seed: u64,
+}
+
+impl Budget {
+    pub fn from_args(args: &Args) -> Result<Budget> {
+        Ok(Budget {
+            steps_lm: args.usize("steps-lm", 400)?,
+            steps_adapter: args.usize("steps", 60)?,
+            steps_rmt: args.usize("steps-rmt", 12)?,
+            eval_n: args.usize("eval-n", 48)?,
+            t_values: args
+                .list("t", &["1", "2", "4", "8"])
+                .iter()
+                .map(|s| s.parse().map_err(|_| anyhow::anyhow!("bad --t value {s}")))
+                .collect::<Result<_>>()?,
+            seed: args.u64("seed", 7)?,
+        })
+    }
+}
+
+/// Shared context: runtime + checkpoint cache.
+pub struct ExpContext {
+    pub rt: Runtime,
+    pub budget: Budget,
+    pub runs_dir: PathBuf,
+    cache: HashMap<String, Checkpoint>,
+}
+
+/// Adapter descriptor — the cache key components.
+#[derive(Debug, Clone)]
+pub struct AdapterSpec {
+    pub method: Method,
+    pub scheme: MergeScheme,
+    pub comp_len: usize,
+    pub conditional: bool,
+    pub mixture: String,
+}
+
+impl AdapterSpec {
+    pub fn new(method: Method, comp_len: usize, mixture: &str) -> AdapterSpec {
+        AdapterSpec {
+            method,
+            scheme: MergeScheme::Avg,
+            comp_len,
+            conditional: true,
+            mixture: mixture.to_string(),
+        }
+    }
+
+    pub fn policy(&self) -> PackPolicy {
+        PackPolicy {
+            method: self.method,
+            scheme: self.scheme,
+            comp_len: self.comp_len,
+            conditional: self.conditional,
+        }
+    }
+
+    fn key(&self, steps: usize) -> String {
+        let scheme = match self.scheme {
+            MergeScheme::Avg => "avg".to_string(),
+            MergeScheme::Ema(a) => format!("ema{a}"),
+        };
+        format!(
+            "adapter-{}-{}-cl{}-{}-{}-s{}",
+            self.method.name(),
+            scheme,
+            self.comp_len,
+            if self.conditional { "cond" } else { "uncond" },
+            self.mixture.replace('+', "_"),
+            steps
+        )
+    }
+}
+
+impl ExpContext {
+    pub fn new(config: &str, budget: Budget) -> Result<ExpContext> {
+        let rt = Runtime::from_config(config)?;
+        let runs_dir = crate::model::artifact_dir(config)
+            .parent()
+            .map(|p| p.parent().unwrap_or(p).join("runs").join(config))
+            .unwrap_or_else(|| PathBuf::from("runs").join(config));
+        std::fs::create_dir_all(&runs_dir)?;
+        Ok(ExpContext { rt, budget, runs_dir, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.rt.manifest
+    }
+
+    /// Base LM checkpoint for a training mixture (train-if-missing).
+    pub fn base(&mut self, mixture: &str) -> Result<Checkpoint> {
+        let key = format!("base-{}-s{}", mixture.replace('+', "_"), self.budget.steps_lm);
+        if let Some(ck) = self.cache.get(&key) {
+            return Ok(ck.clone());
+        }
+        let path = self.runs_dir.join(format!("{key}.bin"));
+        let ck = if path.exists() {
+            Checkpoint::load(&path, &self.rt.manifest)?
+        } else {
+            crate::info!("training base LM [{key}] ({} steps)...", self.budget.steps_lm);
+            let mut ck = Checkpoint::init(&self.rt.manifest, self.budget.seed);
+            let trainer = Trainer::new(&self.rt);
+            let rep = trainer.pretrain_lm(
+                &mut ck,
+                &Mixture::parse(mixture),
+                self.budget.steps_lm,
+                3e-3,
+                self.budget.seed,
+            )?;
+            crate::info!("base LM [{key}]: final loss {:.4}", rep.final_loss());
+            ck.save(&path)?;
+            ck
+        };
+        self.cache.insert(key, ck.clone());
+        Ok(ck)
+    }
+
+    /// Compression adapter on top of `base(mixture)` (train-if-missing).
+    pub fn adapter(&mut self, spec: &AdapterSpec) -> Result<Checkpoint> {
+        let steps = self.budget.steps_adapter;
+        let key = spec.key(steps);
+        if let Some(ck) = self.cache.get(&key) {
+            return Ok(ck.clone());
+        }
+        let path = self.runs_dir.join(format!("{key}.bin"));
+        let ck = if path.exists() {
+            Checkpoint::load(&path, &self.rt.manifest)?
+        } else {
+            let mut ck = self.base(UNIFIED)?;
+            crate::info!("training adapter [{key}] ({steps} steps)...");
+            let trainer = Trainer::new(&self.rt);
+            let rep = trainer.train_ccm(
+                &mut ck,
+                &spec.policy(),
+                &Mixture::parse(&spec.mixture),
+                steps,
+                1e-2,
+                self.budget.seed ^ 0xADA,
+            )?;
+            crate::info!("adapter [{key}]: final loss {:.4}", rep.final_loss());
+            ck.save(&path)?;
+            ck
+        };
+        self.cache.insert(key, ck.clone());
+        Ok(ck)
+    }
+
+    /// RMT baseline checkpoint (train-if-missing; sequential = slow).
+    pub fn rmt(&mut self, mixture: &str) -> Result<(Checkpoint, f64)> {
+        let steps = self.budget.steps_rmt;
+        let key = format!("rmt-{}-s{steps}", mixture.replace('+', "_"));
+        let path = self.runs_dir.join(format!("{key}.bin"));
+        let ms_path = self.runs_dir.join(format!("{key}.ms"));
+        if path.exists() && ms_path.exists() {
+            let ck = Checkpoint::load(&path, &self.rt.manifest)?;
+            let ms: f64 = std::fs::read_to_string(&ms_path)?.trim().parse().unwrap_or(0.0);
+            return Ok((ck, ms));
+        }
+        let mut ck = self.base(UNIFIED)?;
+        crate::info!("training RMT baseline [{key}] ({steps} steps, sequential)...");
+        let trainer = Trainer::new(&self.rt);
+        let rep =
+            trainer.train_rmt(&mut ck, &Mixture::parse(mixture), steps, 3e-3, self.budget.seed)?;
+        ck.save(&path)?;
+        std::fs::write(&ms_path, format!("{}", rep.ms_per_sample))?;
+        Ok((ck, rep.ms_per_sample))
+    }
+
+    /// Write a result table to results/<exp>.md and stdout.
+    pub fn emit(&self, exp: &str, title: &str, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+        crate::util::bench::print_table(title, header, rows);
+        let dir = self.runs_dir.parent().map(|p| p.parent().unwrap_or(p)).unwrap_or(&self.runs_dir);
+        let results = dir.join("results");
+        std::fs::create_dir_all(&results)?;
+        let mut md = format!("## {title}\n\n|{}|\n|{}|\n", header.join("|"),
+            header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for row in rows {
+            md.push_str(&format!("|{}|\n", row.join("|")));
+        }
+        md.push('\n');
+        std::fs::write(results.join(format!("{exp}.md")), md)?;
+        Ok(())
+    }
+}
+
+/// Dispatch `reproduce --exp <id>`.
+pub fn run(exp: &str, args: &Args) -> Result<()> {
+    let config = args.str("config", "main");
+    let budget = Budget::from_args(args)?;
+    let mut ctx = ExpContext::new(&config, budget)?;
+    match exp {
+        "fig6" => experiments::fig6_memory_perf(&mut ctx, args),
+        "fig7" | "tables23-25" | "table23" | "table24" | "table25" => {
+            experiments::fig7_methods(&mut ctx, args)
+        }
+        "fig8" | "fig9" => experiments::fig8_streaming(&mut ctx, args),
+        "fig10" => experiments::fig10_all_datasets(&mut ctx, args),
+        "table1" => experiments::table1_throughput(&mut ctx, args),
+        "table3" | "table17" => experiments::table3_complexity(&mut ctx, args),
+        "table4" => experiments::table4_datasources(&mut ctx, args),
+        "table5" | "table21" => experiments::table5_cond_lora(&mut ctx, args),
+        "table6" => experiments::table6_fixed_context(&mut ctx, args),
+        "table7" => experiments::table7_rougel(&mut ctx, args),
+        "table8" | "table22" => experiments::table8_recurrent(&mut ctx, args),
+        "table9" => experiments::table9_summarization(&mut ctx, args),
+        "table15" => experiments::table15_unified(&mut ctx, args),
+        "table16" => experiments::table16_ema(&mut ctx, args),
+        "table18" => experiments::table18_comp_len(&mut ctx, args),
+        "table19" | "table20" => experiments::table19_scale(&mut ctx, args),
+        "all" => {
+            for e in [
+                "table3", "fig7", "fig6", "fig10", "table5", "table6", "table7", "table9",
+                "table15", "table16", "table18", "table4", "table8", "table1", "fig8",
+            ] {
+                crate::info!("=== reproduce {e} ===");
+                run(e, args)?;
+            }
+            Ok(())
+        }
+        _ => bail!("unknown experiment {exp:?} (see DESIGN.md §6)"),
+    }
+}

@@ -1,0 +1,251 @@
+//! Compression engine: the serving-side bridge between the coordinator
+//! and the AOT artifacts.
+//!
+//! Implements the online operations of Figure 5:
+//!   h(t)  = g_comp(Mem(t-1), c(t))   -> `compress_*` (compress_chunk)
+//!   Ô(t) ~ f(· | Mem(t), I(t))        -> `infer_*`   (infer_with_mem)
+//! with batched variants that pack several sessions into one artifact
+//! call (the dynamic batcher feeds these).
+
+use anyhow::{bail, Result};
+
+use crate::memory::{CompressedChunk, MemoryStore};
+use crate::model::Checkpoint;
+use crate::runtime::{Runtime, Value};
+use crate::tensor::{IntTensor, Tensor};
+
+/// One compression work item: a session's memory + the new chunk.
+pub struct CompressItem<'a> {
+    pub mem: &'a MemoryStore,
+    pub chunk: &'a [i32],
+    /// Absolute position of the chunk's first token.
+    pub pos_start: usize,
+}
+
+/// One inference work item: a session's memory + the input tokens.
+pub struct InferItem<'a> {
+    pub mem: &'a MemoryStore,
+    pub tokens: &'a [i32],
+    pub pos_start: usize,
+}
+
+/// Max variant when saturated; otherwise smallest variant >= n.
+pub fn pick_batch(variants: &[usize], n: usize) -> usize {
+    let max = *variants.iter().max().expect("no batch variants");
+    if n >= max {
+        return max;
+    }
+    variants.iter().copied().filter(|&b| b >= n).min().unwrap_or(max)
+}
+
+pub struct Engine<'rt> {
+    pub rt: &'rt Runtime,
+    pub ck: &'rt Checkpoint,
+    /// Active <COMP> length (<= comp_len_max baked into the artifacts).
+    pub comp_len: usize,
+}
+
+impl<'rt> Engine<'rt> {
+    pub fn new(rt: &'rt Runtime, ck: &'rt Checkpoint, comp_len: usize) -> Result<Engine<'rt>> {
+        let max = rt.manifest.scenario.comp_len_max;
+        if comp_len == 0 || comp_len > max {
+            bail!("comp_len {comp_len} outside 1..={max}");
+        }
+        Ok(Engine { rt, ck, comp_len })
+    }
+
+    /// Pick the artifact batch variant for `n` pending items: the max
+    /// variant when saturated, else the smallest variant that fits all
+    /// of them (padding beats multiple small calls — §Perf L3).
+    fn batch_variant(&self, n: usize) -> usize {
+        pick_batch(&self.rt.manifest.scenario.infer_batches, n)
+    }
+
+    fn params(&self) -> Result<[Value; 2]> {
+        let nb = self.rt.manifest.base_layout.total;
+        let nl = self.rt.manifest.lora_layout.total;
+        Ok([
+            Value::vec_f32(&[nb], self.ck.base.data.clone())?,
+            Value::vec_f32(&[nl], self.ck.lora.data.clone())?,
+        ])
+    }
+
+    /// Compress a batch of chunks; returns h(t) per item (in order).
+    pub fn compress(&self, items: &[CompressItem]) -> Result<Vec<CompressedChunk>> {
+        let m = &self.rt.manifest.model;
+        let sc = &self.rt.manifest.scenario;
+        let (l, d, mm) = (m.n_layers, m.d_model, sc.mem_slots);
+        let (sc_max, cl_max) = (sc.chunk_max, sc.comp_len_max);
+        let scc = sc_max + cl_max;
+        let mut out = Vec::with_capacity(items.len());
+        let mut i = 0;
+        while i < items.len() {
+            let b = self.batch_variant(items.len() - i);
+            let group = &items[i..(i + b).min(items.len())];
+            i += group.len();
+
+            let mut mem_k = Tensor::zeros(&[b, l, mm, d]);
+            let mut mem_v = Tensor::zeros(&[b, l, mm, d]);
+            let mut mem_len = IntTensor::zeros(&[b]);
+            let mut tokens = IntTensor::zeros(&[b, scc]);
+            let mut comp_slot = IntTensor::zeros(&[b, scc]);
+            let mut gate = Tensor::zeros(&[b, scc]);
+            let mut pos = IntTensor::zeros(&[b, scc]);
+            for (bi, item) in group.iter().enumerate() {
+                if item.chunk.len() > sc_max {
+                    bail!("chunk len {} > chunk_max {}", item.chunk.len(), sc_max);
+                }
+                let bufs = &item.mem.buffers;
+                let n = l * mm * d;
+                mem_k.data[bi * n..(bi + 1) * n].copy_from_slice(&bufs.k);
+                mem_v.data[bi * n..(bi + 1) * n].copy_from_slice(&bufs.v);
+                mem_len.data[bi] = bufs.len as i32;
+                let trow = tokens.row_mut(&[bi]);
+                trow[..item.chunk.len()].copy_from_slice(item.chunk);
+                for s in 0..self.comp_len {
+                    trow[sc_max + s] = m.comp_id;
+                }
+                let srow = comp_slot.row_mut(&[bi]);
+                let grow = gate.row_mut(&[bi]);
+                for s in 0..self.comp_len {
+                    srow[sc_max + s] = s as i32 + 1;
+                    grow[sc_max + s] = 1.0;
+                }
+                let prow = pos.row_mut(&[bi]);
+                for (j, p) in prow[..item.chunk.len()].iter_mut().enumerate() {
+                    *p = (item.pos_start + j) as i32;
+                }
+                for s in 0..cl_max {
+                    prow[sc_max + s] =
+                        (item.pos_start + item.chunk.len() + s).min(m.max_pos - 1) as i32;
+                }
+            }
+            let [base, lora] = self.params()?;
+            let outs = self.rt.execute_f32(
+                &format!("compress_chunk_b{b}"),
+                &[
+                    base,
+                    lora,
+                    Value::F32(mem_k),
+                    Value::F32(mem_v),
+                    Value::I32(mem_len),
+                    Value::I32(tokens),
+                    Value::I32(comp_slot),
+                    Value::F32(gate),
+                    Value::I32(pos),
+                ],
+            )?;
+            // Outputs: hk, hv of shape [b, L, cl_max, D]; slice comp_len.
+            let (hk, hv) = (&outs[0], &outs[1]);
+            for (bi, _) in group.iter().enumerate() {
+                let mut k = Vec::with_capacity(l * self.comp_len * d);
+                let mut v = Vec::with_capacity(l * self.comp_len * d);
+                for li in 0..l {
+                    for s in 0..self.comp_len {
+                        k.extend_from_slice(hk.row(&[bi, li, s]));
+                        v.extend_from_slice(hv.row(&[bi, li, s]));
+                    }
+                }
+                out.push(CompressedChunk { k, v, comp_len: self.comp_len });
+            }
+        }
+        Ok(out)
+    }
+
+    /// Score a batch of inputs against their sessions' memories.
+    /// Returns logits rows `[Si, V]` per item.
+    pub fn infer(&self, items: &[InferItem]) -> Result<Vec<Tensor>> {
+        let m = &self.rt.manifest.model;
+        let sc = &self.rt.manifest.scenario;
+        let (l, d, mm, si) = (m.n_layers, m.d_model, sc.mem_slots, sc.input_max);
+        let mut out = Vec::with_capacity(items.len());
+        let mut i = 0;
+        while i < items.len() {
+            let b = self.batch_variant(items.len() - i);
+            let group = &items[i..(i + b).min(items.len())];
+            i += group.len();
+
+            let mut mem_k = Tensor::zeros(&[b, l, mm, d]);
+            let mut mem_v = Tensor::zeros(&[b, l, mm, d]);
+            let mut mem_len = IntTensor::zeros(&[b]);
+            let mut tokens = IntTensor::zeros(&[b, si]);
+            let mut pos = IntTensor::zeros(&[b, si]);
+            for (bi, item) in group.iter().enumerate() {
+                if item.tokens.len() > si {
+                    bail!("input len {} > input_max {}", item.tokens.len(), si);
+                }
+                let bufs = &item.mem.buffers;
+                let n = l * mm * d;
+                mem_k.data[bi * n..(bi + 1) * n].copy_from_slice(&bufs.k);
+                mem_v.data[bi * n..(bi + 1) * n].copy_from_slice(&bufs.v);
+                mem_len.data[bi] = bufs.len as i32;
+                tokens.row_mut(&[bi])[..item.tokens.len()].copy_from_slice(item.tokens);
+                let prow = pos.row_mut(&[bi]);
+                for (j, p) in prow[..item.tokens.len()].iter_mut().enumerate() {
+                    *p = ((item.pos_start + j).min(m.max_pos - 1)) as i32;
+                }
+            }
+            let [base, lora] = self.params()?;
+            let outs = self.rt.execute_f32(
+                &format!("infer_with_mem_b{b}"),
+                &[
+                    base,
+                    lora,
+                    Value::F32(mem_k),
+                    Value::F32(mem_v),
+                    Value::I32(mem_len),
+                    Value::I32(tokens),
+                    Value::I32(pos),
+                ],
+            )?;
+            let logits = &outs[0]; // [b, Si, V]
+            for bi in 0..group.len() {
+                let mut rows = Tensor::zeros(&[si, m.vocab]);
+                for s in 0..si {
+                    rows.row_mut(&[s]).copy_from_slice(logits.row(&[bi, s]));
+                }
+                out.push(rows);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Next-token average log-likelihood of `target` given logits over the
+/// packed `[input ++ target]` rows (targets start at `input_len`).
+pub fn target_avg_loglik(logits: &Tensor, input_len: usize, target: &[i32]) -> f64 {
+    let v = logits.shape[1];
+    let mut total = 0.0f64;
+    for (i, &tgt) in target.iter().enumerate() {
+        // logits row predicting this target is the *previous* position.
+        let row = logits.row(&[input_len + i - 1]);
+        debug_assert_eq!(row.len(), v);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse: f32 = row.iter().map(|&x| (x - mx).exp()).sum::<f32>().ln() + mx;
+        total += (row[tgt as usize] - lse) as f64;
+    }
+    total / target.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn avg_loglik_of_uniform_logits() {
+        let v = 8;
+        let logits = Tensor::zeros(&[4, v]);
+        let ll = target_avg_loglik(&logits, 2, &[3, 5]);
+        assert!((ll - (1.0 / v as f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn avg_loglik_prefers_peaked_logits() {
+        let mut logits = Tensor::zeros(&[3, 4]);
+        logits.set(&[1, 2], 10.0); // position 1 predicts target[0]
+        let peaked = target_avg_loglik(&logits, 2, &[2]);
+        let other = target_avg_loglik(&logits, 2, &[1]);
+        assert!(peaked > other);
+        assert!(peaked > -0.01);
+    }
+}

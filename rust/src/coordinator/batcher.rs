@@ -1,0 +1,201 @@
+//! Dynamic batcher: groups pending compression / inference work into
+//! artifact-sized batches while preserving per-session ordering.
+//!
+//! Ordering invariant: work items of one session execute in submission
+//! order (an inference that depends on a pending compression never jumps
+//! the queue). Batches are homogeneous in kind because the two artifacts
+//! differ. Flush policy: size-triggered or age-triggered (max_wait).
+
+use std::collections::{HashSet, VecDeque};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WorkKind {
+    Compress,
+    Infer,
+}
+
+#[derive(Debug, Clone)]
+pub struct WorkItem {
+    pub seq: u64,
+    pub session: String,
+    pub kind: WorkKind,
+    pub tokens: Vec<i32>,
+    pub submitted: Instant,
+}
+
+#[derive(Debug)]
+pub struct Batcher {
+    queue: VecDeque<WorkItem>,
+    next_seq: u64,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Batcher {
+        assert!(max_batch >= 1);
+        Batcher { queue: VecDeque::new(), next_seq: 0, max_batch, max_wait }
+    }
+
+    /// Enqueue; returns the work-item sequence id.
+    pub fn push(&mut self, session: &str, kind: WorkKind, tokens: Vec<i32>) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.queue.push_back(WorkItem {
+            seq,
+            session: session.to_string(),
+            kind,
+            tokens,
+            submitted: Instant::now(),
+        });
+        seq
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Would a batch be emitted right now?
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.max_batch {
+            return true;
+        }
+        self.queue
+            .front()
+            .map(|w| now.duration_since(w.submitted) >= self.max_wait)
+            .unwrap_or(false)
+    }
+
+    /// Pop the next homogeneous batch (up to max_batch items of the
+    /// front item's kind), skipping items whose session has an earlier
+    /// still-queued item of another kind — those stay queued, and the
+    /// session is "blocked" for the rest of this scan.
+    pub fn next_batch(&mut self, now: Instant, force: bool) -> Option<Vec<WorkItem>> {
+        if self.queue.is_empty() || (!force && !self.ready(now)) {
+            return None;
+        }
+        let kind = self.queue.front().unwrap().kind;
+        let mut blocked: HashSet<String> = HashSet::new();
+        let mut taken_idx = Vec::new();
+        for (i, w) in self.queue.iter().enumerate() {
+            if taken_idx.len() == self.max_batch {
+                break;
+            }
+            if blocked.contains(&w.session) {
+                continue;
+            }
+            if w.kind == kind {
+                taken_idx.push(i);
+            } else {
+                // This session has an unexecuted earlier item of the other
+                // kind — later items of this session must wait.
+                blocked.insert(w.session.clone());
+            }
+        }
+        let mut batch = Vec::with_capacity(taken_idx.len());
+        // Remove back-to-front so indices stay valid.
+        for &i in taken_idx.iter().rev() {
+            batch.push(self.queue.remove(i).unwrap());
+        }
+        batch.reverse();
+        debug_assert!(!batch.is_empty());
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item_kinds(b: &[WorkItem]) -> Vec<WorkKind> {
+        b.iter().map(|w| w.kind).collect()
+    }
+
+    #[test]
+    fn batches_are_homogeneous_and_fifo() {
+        let mut b = Batcher::new(4, Duration::ZERO);
+        b.push("a", WorkKind::Compress, vec![1]);
+        b.push("b", WorkKind::Compress, vec![2]);
+        b.push("c", WorkKind::Infer, vec![3]);
+        let batch = b.next_batch(Instant::now(), true).unwrap();
+        assert_eq!(item_kinds(&batch), vec![WorkKind::Compress; 2]);
+        let batch = b.next_batch(Instant::now(), true).unwrap();
+        assert_eq!(item_kinds(&batch), vec![WorkKind::Infer]);
+        assert!(b.next_batch(Instant::now(), true).is_none());
+    }
+
+    #[test]
+    fn session_order_is_preserved() {
+        let mut b = Batcher::new(8, Duration::ZERO);
+        b.push("s", WorkKind::Compress, vec![1]);
+        b.push("s", WorkKind::Infer, vec![2]); // depends on the compress
+        b.push("t", WorkKind::Compress, vec![3]);
+        b.push("s", WorkKind::Compress, vec![4]); // after s's infer!
+        let batch = b.next_batch(Instant::now(), true).unwrap();
+        // s's later compress must NOT ride along: s is blocked by its infer.
+        let sessions: Vec<&str> = batch.iter().map(|w| w.session.as_str()).collect();
+        assert_eq!(sessions, vec!["s", "t"]);
+        let batch = b.next_batch(Instant::now(), true).unwrap();
+        assert_eq!(item_kinds(&batch), vec![WorkKind::Infer]);
+        let batch = b.next_batch(Instant::now(), true).unwrap();
+        assert_eq!(batch[0].tokens, vec![4]);
+    }
+
+    #[test]
+    fn size_and_age_triggers() {
+        let mut b = Batcher::new(2, Duration::from_millis(50));
+        b.push("a", WorkKind::Infer, vec![]);
+        let now = Instant::now();
+        assert!(!b.ready(now));
+        assert!(b.next_batch(now, false).is_none());
+        b.push("b", WorkKind::Infer, vec![]);
+        assert!(b.ready(now)); // size trigger
+        assert_eq!(b.next_batch(now, false).unwrap().len(), 2);
+        b.push("c", WorkKind::Infer, vec![]);
+        let later = now + Duration::from_millis(100);
+        assert!(b.ready(later)); // age trigger
+    }
+
+    #[test]
+    fn property_every_item_emitted_once_in_session_order() {
+        crate::util::proptest::check("batcher-order", 60, |rng| {
+            let max_batch = rng.range(1, 6);
+            let mut b = Batcher::new(max_batch, Duration::ZERO);
+            let sessions = ["s0", "s1", "s2"];
+            let n = rng.range(1, 40);
+            let mut submitted: Vec<(u64, String)> = Vec::new();
+            for _ in 0..n {
+                let s = sessions[rng.range(0, 3)];
+                let kind = if rng.bool(0.5) { WorkKind::Compress } else { WorkKind::Infer };
+                let seq = b.push(s, kind, vec![]);
+                submitted.push((seq, s.to_string()));
+            }
+            let mut emitted: Vec<WorkItem> = Vec::new();
+            let mut guard = 0;
+            while b.pending() > 0 {
+                guard += 1;
+                crate::prop_assert!(guard < 1000, "batcher stuck");
+                let batch = b.next_batch(Instant::now(), true).unwrap();
+                crate::prop_assert!(batch.len() <= max_batch, "batch too big");
+                let k = batch[0].kind;
+                crate::prop_assert!(
+                    batch.iter().all(|w| w.kind == k),
+                    "mixed-kind batch"
+                );
+                emitted.extend(batch);
+            }
+            crate::prop_assert!(emitted.len() == n, "lost items: {} != {n}", emitted.len());
+            // Per-session sequence ids must be strictly increasing.
+            for s in sessions {
+                let seqs: Vec<u64> =
+                    emitted.iter().filter(|w| w.session == s).map(|w| w.seq).collect();
+                crate::prop_assert!(
+                    seqs.windows(2).all(|w| w[0] < w[1]),
+                    "session {s} out of order: {seqs:?}"
+                );
+            }
+            Ok(())
+        });
+    }
+}

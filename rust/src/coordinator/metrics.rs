@@ -1,0 +1,122 @@
+//! Serving metrics: request counters, latency accumulators, batch-size
+//! histogram, and KV-memory gauges. Printed by `ccm serve` on shutdown
+//! and sampled by the throughput benches.
+
+use std::time::Duration;
+
+#[derive(Debug, Default, Clone)]
+pub struct LatencyAcc {
+    samples_ms: Vec<f64>,
+}
+
+impl LatencyAcc {
+    pub fn record(&mut self, d: Duration) {
+        self.samples_ms.push(d.as_secs_f64() * 1e3);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_ms.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples_ms.is_empty() {
+            return f64::NAN;
+        }
+        self.samples_ms.iter().sum::<f64>() / self.samples_ms.len() as f64
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples_ms.is_empty() {
+            return f64::NAN;
+        }
+        let mut v = self.samples_ms.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((v.len() as f64 - 1.0) * p / 100.0).round() as usize;
+        v[idx]
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    pub requests: u64,
+    pub compressions: u64,
+    pub inferences: u64,
+    pub batches: u64,
+    pub batch_sizes: Vec<usize>,
+    pub compress_latency: LatencyAcc,
+    pub infer_latency: LatencyAcc,
+    pub queue_latency: LatencyAcc,
+    pub peak_kv_bytes: usize,
+    pub tokens_compressed: u64,
+}
+
+impl Metrics {
+    pub fn record_batch(&mut self, size: usize) {
+        self.batches += 1;
+        self.batch_sizes.push(size);
+    }
+
+    pub fn note_kv_bytes(&mut self, bytes: usize) {
+        self.peak_kv_bytes = self.peak_kv_bytes.max(bytes);
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            return f64::NAN;
+        }
+        self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} compress={} infer={} batches={} mean_batch={:.1}\n\
+             compress: mean {:.2} ms, p95 {:.2} ms ({} calls)\n\
+             infer:    mean {:.2} ms, p95 {:.2} ms ({} calls)\n\
+             queue:    mean {:.2} ms, p95 {:.2} ms\n\
+             peak compressed-KV: {:.2} MB, tokens compressed: {}",
+            self.requests,
+            self.compressions,
+            self.inferences,
+            self.batches,
+            self.mean_batch_size(),
+            self.compress_latency.mean(),
+            self.compress_latency.percentile(95.0),
+            self.compress_latency.count(),
+            self.infer_latency.mean(),
+            self.infer_latency.percentile(95.0),
+            self.infer_latency.count(),
+            self.queue_latency.mean(),
+            self.queue_latency.percentile(95.0),
+            self.peak_kv_bytes as f64 / 1e6,
+            self.tokens_compressed,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_percentiles() {
+        let mut l = LatencyAcc::default();
+        for i in 1..=100 {
+            l.record(Duration::from_millis(i));
+        }
+        assert!((l.mean() - 50.5).abs() < 0.5);
+        assert!((l.percentile(95.0) - 95.0).abs() <= 1.0);
+        assert_eq!(l.count(), 100);
+    }
+
+    #[test]
+    fn batch_and_kv_tracking() {
+        let mut m = Metrics::default();
+        m.record_batch(4);
+        m.record_batch(8);
+        assert_eq!(m.mean_batch_size(), 6.0);
+        m.note_kv_bytes(100);
+        m.note_kv_bytes(50);
+        assert_eq!(m.peak_kv_bytes, 100);
+        assert!(m.report().contains("mean_batch=6.0"));
+    }
+}

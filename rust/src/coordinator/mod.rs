@@ -1,0 +1,153 @@
+//! The online-inference coordinator — the paper's system contribution at
+//! serving time (vLLM-router-shaped).
+//!
+//! Flow per request: the router assigns work to the session, the dynamic
+//! batcher groups compressions/inferences across sessions (preserving
+//! per-session order), and the executor stages each batch into the AOT
+//! artifacts via the compression engine. Memory per session is a compact
+//! Mem(t) instead of raw context KV — the whole point of the paper.
+
+pub mod batcher;
+pub mod metrics;
+pub mod session;
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::compress::{CompressItem, Engine, InferItem};
+use crate::coordinator::batcher::{Batcher, WorkItem, WorkKind};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::session::{SessionManager, SessionPolicy};
+use crate::model::Checkpoint;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+pub struct Coordinator<'rt> {
+    pub engine: Engine<'rt>,
+    pub sessions: SessionManager,
+    pub batcher: Batcher,
+    pub metrics: Metrics,
+    results: HashMap<u64, Tensor>,
+}
+
+impl<'rt> Coordinator<'rt> {
+    pub fn new(
+        rt: &'rt Runtime,
+        ck: &'rt Checkpoint,
+        policy: SessionPolicy,
+        max_batch: usize,
+        max_wait: std::time::Duration,
+    ) -> Result<Coordinator<'rt>> {
+        let engine = Engine::new(rt, ck, policy.comp_len)?;
+        let sessions = SessionManager::with_policy(&rt.manifest, policy);
+        Ok(Coordinator {
+            engine,
+            sessions,
+            batcher: Batcher::new(max_batch, max_wait),
+            metrics: Metrics::default(),
+            results: HashMap::new(),
+        })
+    }
+
+    /// Enqueue a new context chunk c(t) for a session (compression).
+    pub fn add_context(&mut self, session: &str, chunk: Vec<i32>) -> u64 {
+        self.metrics.requests += 1;
+        self.sessions.get_or_create(session);
+        self.batcher.push(session, WorkKind::Compress, chunk)
+    }
+
+    /// Enqueue a query I(t); the result (logits rows) is retrievable via
+    /// `take_result` after the batcher has flushed.
+    pub fn query(&mut self, session: &str, input: Vec<i32>) -> u64 {
+        self.metrics.requests += 1;
+        self.sessions.get_or_create(session);
+        self.batcher.push(session, WorkKind::Infer, input)
+    }
+
+    /// Process at most one batch. Returns items processed (0 = idle).
+    pub fn pump(&mut self, force: bool) -> Result<usize> {
+        let now = Instant::now();
+        let Some(batch) = self.batcher.next_batch(now, force) else {
+            return Ok(0);
+        };
+        for w in &batch {
+            self.metrics.queue_latency.record(now.duration_since(w.submitted));
+        }
+        self.metrics.record_batch(batch.len());
+        let kind = batch[0].kind;
+        let t = Instant::now();
+        match kind {
+            WorkKind::Compress => self.run_compress(&batch)?,
+            WorkKind::Infer => self.run_infer(&batch)?,
+        }
+        let el = t.elapsed();
+        match kind {
+            WorkKind::Compress => {
+                self.metrics.compressions += batch.len() as u64;
+                self.metrics.compress_latency.record(el);
+            }
+            WorkKind::Infer => {
+                self.metrics.inferences += batch.len() as u64;
+                self.metrics.infer_latency.record(el);
+            }
+        }
+        self.metrics.note_kv_bytes(self.sessions.total_kv_bytes());
+        Ok(batch.len())
+    }
+
+    /// Drain the queue completely.
+    pub fn run_until_idle(&mut self) -> Result<()> {
+        while self.pump(true)? > 0 {}
+        Ok(())
+    }
+
+    pub fn take_result(&mut self, seq: u64) -> Option<Tensor> {
+        self.results.remove(&seq)
+    }
+
+    fn run_compress(&mut self, batch: &[WorkItem]) -> Result<()> {
+        let comp_len = self.engine.comp_len;
+        // Graceful concat overflow: evict oldest compressed chunks first
+        // (the streaming policy of Figure 9 applied to serving).
+        for w in batch {
+            let s = self.sessions.get_mut(&w.session)?;
+            if s.mem.free_slots() != usize::MAX && s.mem.free_slots() < comp_len {
+                s.mem.evict_chunks(1);
+            }
+        }
+        let items: Vec<CompressItem> = batch
+            .iter()
+            .map(|w| {
+                let s = self.sessions.get(&w.session).unwrap();
+                CompressItem { mem: &s.mem, chunk: &w.tokens, pos_start: s.pos_cursor }
+            })
+            .collect();
+        let compressed = self.engine.compress(&items)?;
+        for (w, h) in batch.iter().zip(compressed) {
+            let s = self.sessions.get_mut(&w.session)?;
+            s.mem.update(&h)?;
+            s.pos_cursor += w.tokens.len() + comp_len;
+            s.t += 1;
+            s.raw_context_tokens += w.tokens.len();
+            self.metrics.tokens_compressed += w.tokens.len() as u64;
+        }
+        Ok(())
+    }
+
+    fn run_infer(&mut self, batch: &[WorkItem]) -> Result<()> {
+        let items: Vec<InferItem> = batch
+            .iter()
+            .map(|w| {
+                let s = self.sessions.get(&w.session).unwrap();
+                InferItem { mem: &s.mem, tokens: &w.tokens, pos_start: s.pos_cursor }
+            })
+            .collect();
+        let logits = self.engine.infer(&items)?;
+        for (w, l) in batch.iter().zip(logits) {
+            self.results.insert(w.seq, l);
+        }
+        Ok(())
+    }
+}

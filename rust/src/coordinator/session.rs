@@ -1,0 +1,254 @@
+//! Session management: one session per interacting identity (user /
+//! task / dialogue), holding its compressed context memory Mem(t) and
+//! position cursor. The vLLM-router analogue of per-sequence state.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::masks::{MergeScheme, Method};
+use crate::memory::MemoryStore;
+use crate::model::manifest::Manifest;
+
+/// Compression policy a session is created with.
+#[derive(Debug, Clone)]
+pub struct SessionPolicy {
+    pub method: Method,
+    pub scheme: MergeScheme,
+    pub comp_len: usize,
+}
+
+impl SessionPolicy {
+    pub fn concat(comp_len: usize) -> SessionPolicy {
+        SessionPolicy { method: Method::CcmConcat, scheme: MergeScheme::Avg, comp_len }
+    }
+
+    pub fn merge(comp_len: usize) -> SessionPolicy {
+        SessionPolicy { method: Method::CcmMerge, scheme: MergeScheme::Avg, comp_len }
+    }
+}
+
+#[derive(Debug)]
+pub struct Session {
+    pub id: String,
+    pub mem: MemoryStore,
+    /// Next absolute position id (grows chunk by chunk).
+    pub pos_cursor: usize,
+    /// Online time step t (chunks absorbed).
+    pub t: usize,
+    pub created: u64,
+    /// Raw context tokens absorbed (for KV accounting comparisons).
+    pub raw_context_tokens: usize,
+}
+
+pub struct SessionManager {
+    sessions: HashMap<String, Session>,
+    policy: SessionPolicy,
+    layers: usize,
+    d_model: usize,
+    mem_slots: usize,
+    counter: u64,
+}
+
+impl SessionManager {
+    pub fn new(manifest: &Manifest) -> SessionManager {
+        Self::with_policy(manifest, SessionPolicy::concat(manifest.scenario.comp_len_max))
+    }
+
+    pub fn with_policy(manifest: &Manifest, policy: SessionPolicy) -> SessionManager {
+        SessionManager {
+            sessions: HashMap::new(),
+            layers: manifest.model.n_layers,
+            d_model: manifest.model.d_model,
+            mem_slots: manifest.scenario.mem_slots,
+            policy,
+            counter: 0,
+        }
+    }
+
+    pub fn policy(&self) -> &SessionPolicy {
+        &self.policy
+    }
+
+    pub fn get_or_create(&mut self, id: &str) -> &mut Session {
+        if !self.sessions.contains_key(id) {
+            let mem = match self.policy.method {
+                Method::CcmMerge => crate::memory::MemoryStore::merge(
+                    self.layers,
+                    self.mem_slots,
+                    self.d_model,
+                    self.policy.comp_len,
+                    self.policy.scheme,
+                ),
+                _ => crate::memory::MemoryStore::concat(
+                    self.layers,
+                    self.mem_slots,
+                    self.d_model,
+                    self.policy.comp_len,
+                ),
+            };
+            self.counter += 1;
+            self.sessions.insert(
+                id.to_string(),
+                Session {
+                    id: id.to_string(),
+                    mem,
+                    pos_cursor: 0,
+                    t: 0,
+                    created: self.counter,
+                    raw_context_tokens: 0,
+                },
+            );
+        }
+        self.sessions.get_mut(id).unwrap()
+    }
+
+    pub fn get(&self, id: &str) -> Result<&Session> {
+        match self.sessions.get(id) {
+            Some(s) => Ok(s),
+            None => bail!("unknown session {id:?}"),
+        }
+    }
+
+    pub fn get_mut(&mut self, id: &str) -> Result<&mut Session> {
+        match self.sessions.get_mut(id) {
+            Some(s) => Ok(s),
+            None => bail!("unknown session {id:?}"),
+        }
+    }
+
+    pub fn remove(&mut self, id: &str) -> bool {
+        self.sessions.remove(id).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    /// Total live compressed-KV bytes across sessions (capacity planning —
+    /// the quantity Table 1's max-batch column is about).
+    pub fn total_kv_bytes(&self) -> usize {
+        self.sessions.values().map(|s| s.mem.kv_bytes()).sum()
+    }
+
+    /// Evict the least-recently-created sessions until at most `max_bytes`
+    /// of compressed KV remain. Returns evicted session ids.
+    pub fn evict_to_budget(&mut self, max_bytes: usize) -> Vec<String> {
+        let mut evicted = Vec::new();
+        while self.total_kv_bytes() > max_bytes && !self.sessions.is_empty() {
+            let oldest = self
+                .sessions
+                .values()
+                .min_by_key(|s| s.created)
+                .map(|s| s.id.clone())
+                .unwrap();
+            self.sessions.remove(&oldest);
+            evicted.push(oldest);
+        }
+        evicted
+    }
+
+    pub fn ids(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.sessions.keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::*;
+
+    fn manifest() -> Manifest {
+        Manifest {
+            config_name: "toy".into(),
+            dir: std::path::PathBuf::from("."),
+            model: ModelConfig {
+                name: "toy".into(),
+                vocab: 256,
+                d_model: 8,
+                n_layers: 2,
+                n_heads: 2,
+                d_ff: 16,
+                max_pos: 128,
+                lora_rank: 2,
+                lora_alpha: 4.0,
+                pad_id: 0,
+                bos_id: 1,
+                sep_id: 2,
+                comp_id: 3,
+                d_head: 4,
+            },
+            scenario: ScenarioConfig {
+                t_max: 4,
+                chunk_max: 8,
+                comp_len_max: 2,
+                input_max: 8,
+                seq_train: 64,
+                mem_slots: 8,
+                batch_train: 2,
+                infer_batches: vec![1, 4],
+                decode_cache: 16,
+                rmt_unroll: 2,
+                rmt_mem: 2,
+            },
+            base_layout: ParamLayout { total: 4, entries: vec![] },
+            lora_layout: ParamLayout { total: 4, entries: vec![] },
+            artifacts: vec![],
+            mask_goldens: vec![],
+        }
+    }
+
+    fn fake_chunk(layers: usize, cl: usize, d: usize) -> crate::memory::CompressedChunk {
+        crate::memory::CompressedChunk {
+            k: vec![1.0; layers * cl * d],
+            v: vec![1.0; layers * cl * d],
+            comp_len: cl,
+        }
+    }
+
+    #[test]
+    fn creates_and_reuses_sessions() {
+        let m = manifest();
+        let mut sm = SessionManager::with_policy(&m, SessionPolicy::concat(2));
+        sm.get_or_create("alice").t = 3;
+        assert_eq!(sm.get_or_create("alice").t, 3);
+        assert_eq!(sm.len(), 1);
+        assert!(sm.get("bob").is_err());
+        sm.get_or_create("bob");
+        assert_eq!(sm.ids(), vec!["alice", "bob"]);
+        assert!(sm.remove("bob"));
+        assert!(!sm.remove("bob"));
+    }
+
+    #[test]
+    fn merge_policy_creates_fixed_memory() {
+        let m = manifest();
+        let mut sm = SessionManager::with_policy(&m, SessionPolicy::merge(2));
+        let s = sm.get_or_create("u");
+        for _ in 0..10 {
+            s.mem.update(&fake_chunk(2, 2, 8)).unwrap(); // never overflows
+        }
+        assert_eq!(s.mem.len(), 2);
+    }
+
+    #[test]
+    fn kv_budget_eviction_is_oldest_first() {
+        let m = manifest();
+        let mut sm = SessionManager::with_policy(&m, SessionPolicy::concat(2));
+        for id in ["a", "b", "c"] {
+            let s = sm.get_or_create(id);
+            s.mem.update(&fake_chunk(2, 2, 8)).unwrap();
+        }
+        let per = 2 * 2 * 2 * 8 * 4;
+        assert_eq!(sm.total_kv_bytes(), 3 * per);
+        let evicted = sm.evict_to_budget(per);
+        assert_eq!(evicted, vec!["a", "b"]);
+        assert_eq!(sm.len(), 1);
+    }
+}

@@ -1,0 +1,206 @@
+//! Synthetic LaMP: personalized categorization.
+//!
+//! Each identity is a *user* with an idiosyncratic tagging rule: the same
+//! item features map to different category labels for different users.
+//! A context chunk is one profile entry `[marker, item tokens..., SEP,
+//! category]`; the input is a new item to categorize *for this user*.
+//! Profiles of one user share information (the user's rule), mirroring
+//! the complementary-context structure the paper observes on LaMP.
+
+use super::{identity_rng, mixture_tokens, vocab, OnlineDataset, OnlineSample, Split};
+use crate::model::manifest::ScenarioConfig;
+use crate::util::rng::Rng;
+
+const DS_ID: u64 = 2;
+
+pub struct Lamp {
+    seed: u64,
+    vocab_size: usize,
+    pub n_train: usize,
+    pub n_test: usize,
+    t_max: usize,
+    chunk_max: usize,
+    input_max: usize,
+    n_categories: usize,
+    n_aspects: usize,
+    p_signature: f32,
+}
+
+struct User {
+    /// Aspect -> signature tokens (aspects are global feature groups).
+    aspect_tokens: Vec<Vec<i32>>,
+    /// The user's personal aspect -> category assignment.
+    category_of_aspect: Vec<usize>,
+    /// Category labels (shared token region, same for all users).
+    labels: Vec<i32>,
+}
+
+impl Lamp {
+    pub fn new(seed: u64, sc: &ScenarioConfig, vocab_size: usize) -> Lamp {
+        Lamp {
+            seed,
+            vocab_size,
+            n_train: 100,
+            n_test: 64,
+            t_max: sc.t_max,
+            chunk_max: sc.chunk_max,
+            input_max: sc.input_max,
+            n_categories: 4,
+            n_aspects: 6,
+            p_signature: 0.9,
+        }
+    }
+
+    fn user(&self, split: Split, identity: usize) -> User {
+        // Aspects (feature vocabularies) are GLOBAL — shared across users —
+        // so the only thing a profile can teach is the user's assignment.
+        let mut grng = Rng::with_stream(self.seed ^ 0x61a5, DS_ID);
+        let word_lo = vocab::WORD_START as usize;
+        let word_hi = vocab::word_end(self.vocab_size) as usize;
+        let per = 5usize;
+        let all = grng.sample_indices(word_hi - word_lo, self.n_aspects * per);
+        let aspect_tokens: Vec<Vec<i32>> = (0..self.n_aspects)
+            .map(|a| all[a * per..(a + 1) * per].iter().map(|&i| (word_lo + i) as i32).collect())
+            .collect();
+        let labels: Vec<i32> = (0..self.n_categories)
+            .map(|c| vocab::LABEL_START + c as i32)
+            .collect();
+        // The personal rule.
+        let mut rng = identity_rng(self.seed, DS_ID, split, identity);
+        let category_of_aspect =
+            (0..self.n_aspects).map(|_| rng.range(0, self.n_categories)).collect();
+        User { aspect_tokens, category_of_aspect, labels }
+    }
+
+    fn item(&self, user: &User, rng: &mut Rng, max_len: usize) -> (Vec<i32>, usize) {
+        let aspect = rng.range(0, user.aspect_tokens.len());
+        let body_len = rng.range(4, max_len);
+        let toks = mixture_tokens(
+            rng,
+            &user.aspect_tokens[aspect],
+            vocab::WORD_START,
+            vocab::WORD_START + 64,
+            self.p_signature,
+            body_len,
+        );
+        (toks, user.category_of_aspect[aspect])
+    }
+}
+
+impl OnlineDataset for Lamp {
+    fn name(&self) -> &'static str {
+        "lamp"
+    }
+
+    fn n_identities(&self, split: Split) -> usize {
+        match split {
+            Split::Train => self.n_train,
+            Split::Test => self.n_test,
+        }
+    }
+
+    fn t_max(&self) -> usize {
+        self.t_max
+    }
+
+    fn is_multi_choice(&self) -> bool {
+        true
+    }
+
+    fn sample(&self, split: Split, identity: usize, t: usize) -> OnlineSample {
+        assert!(t >= 1 && t <= self.t_max);
+        let user = self.user(split, identity);
+        let mut rng = identity_rng(self.seed ^ 0xB0B, DS_ID, split, identity);
+        let chunks: Vec<Vec<i32>> = (0..t)
+            .map(|_| {
+                let (toks, cat) = self.item(&user, &mut rng, self.chunk_max - 3);
+                let mut c = vec![vocab::MARKER_START + 2]; // "profile:" marker
+                c.extend(toks);
+                c.push(vocab::SEP);
+                c.push(user.labels[cat]);
+                c
+            })
+            .collect();
+        // Query fixed per identity: the test set is identical across t.
+        let mut qrng = identity_rng(self.seed ^ 0x9E52, DS_ID, split, identity);
+        let (toks, cat) = self.item(&user, &mut qrng, self.input_max - 4);
+        let mut input = vec![vocab::MARKER_START + 3]; // "query:" marker
+        input.extend(toks);
+        input.push(vocab::SEP);
+        OnlineSample {
+            chunks,
+            input,
+            target: vec![user.labels[cat]],
+            choices: user.labels.iter().map(|&l| vec![l]).collect(),
+            correct: cat,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sc() -> ScenarioConfig {
+        ScenarioConfig {
+            t_max: 8,
+            chunk_max: 24,
+            comp_len_max: 4,
+            input_max: 32,
+            seq_train: 384,
+            mem_slots: 48,
+            batch_train: 16,
+            infer_batches: vec![1, 8],
+            decode_cache: 96,
+            rmt_unroll: 4,
+            rmt_mem: 4,
+        }
+    }
+
+    #[test]
+    fn users_share_aspects_but_not_rules() {
+        let ds = Lamp::new(3, &sc(), 512);
+        let u1 = ds.user(Split::Train, 0);
+        let u2 = ds.user(Split::Train, 1);
+        assert_eq!(u1.aspect_tokens, u2.aspect_tokens);
+        // With 4^6 possible rules, two users almost surely differ.
+        assert_ne!(u1.category_of_aspect, u2.category_of_aspect);
+    }
+
+    #[test]
+    fn personalization_is_required() {
+        // The same item tokens can get different labels for different
+        // users — so no-context accuracy is capped near chance.
+        let ds = Lamp::new(3, &sc(), 512);
+        let mut differs = false;
+        for id in 0..10 {
+            let ua = ds.user(Split::Train, id);
+            let ub = ds.user(Split::Train, id + 1);
+            if ua.category_of_aspect[0] != ub.category_of_aspect[0] {
+                differs = true;
+            }
+        }
+        assert!(differs);
+    }
+
+    #[test]
+    fn sample_shapes() {
+        let ds = Lamp::new(3, &sc(), 512);
+        for t in [1, 5, 8] {
+            let s = ds.sample(Split::Test, 2, t);
+            assert_eq!(s.chunks.len(), t);
+            for c in &s.chunks {
+                assert!(c.len() <= 24);
+            }
+            assert!(s.input.len() + 1 <= 32);
+            assert_eq!(s.choices.len(), 4);
+            assert_eq!(s.choices[s.correct], s.target);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let ds = Lamp::new(3, &sc(), 512);
+        assert_eq!(ds.sample(Split::Test, 1, 4).chunks, ds.sample(Split::Test, 1, 4).chunks);
+    }
+}

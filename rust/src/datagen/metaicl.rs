@@ -1,0 +1,241 @@
+//! Synthetic MetaICL: multi-task in-context classification.
+//!
+//! Each identity is a *task*: a hidden mapping from class-signature token
+//! sets to label tokens. A context chunk c(t) is one demonstration
+//! `[marker, item tokens..., SEP, label]`; the input I(t) is a fresh
+//! problem and the target its label. Demonstrations of one task are
+//! mutually complementary (they reveal the same mapping) — the property
+//! that makes CCM-merge ≈ CCM-concat on this suite (paper §4.1).
+//!
+//! Train and test identities use disjoint signature draws, so evaluation
+//! measures compression of *unseen tasks*, as in the paper's
+//! high-to-low-resources split.
+
+use super::{identity_rng, mixture_tokens, vocab, OnlineDataset, OnlineSample, Split};
+use crate::model::manifest::ScenarioConfig;
+use crate::util::rng::Rng;
+
+const DS_ID: u64 = 1;
+
+pub struct MetaIcl {
+    seed: u64,
+    vocab_size: usize,
+    pub n_train: usize,
+    pub n_test: usize,
+    t_max: usize,
+    chunk_max: usize,
+    input_max: usize,
+    /// Probability an item token comes from the class signature.
+    p_signature: f32,
+    n_classes_lo: usize,
+    n_classes_hi: usize,
+    sig_size: usize,
+}
+
+struct Task {
+    /// Per-class signature token sets.
+    signatures: Vec<Vec<i32>>,
+    /// Per-class label token.
+    labels: Vec<i32>,
+}
+
+impl MetaIcl {
+    pub fn new(seed: u64, sc: &ScenarioConfig, vocab_size: usize) -> MetaIcl {
+        MetaIcl {
+            seed,
+            vocab_size,
+            n_train: 61, // paper: 61 train tasks
+            n_test: 64,  // paper: 26 unseen tasks; more here to cut eval noise
+            t_max: sc.t_max,
+            chunk_max: sc.chunk_max,
+            input_max: sc.input_max,
+            p_signature: 0.9,
+            n_classes_lo: 2,
+            n_classes_hi: 5,
+            sig_size: 4,
+        }
+    }
+
+    fn task(&self, split: Split, identity: usize) -> Task {
+        let mut rng = identity_rng(self.seed, DS_ID, split, identity);
+        let n_classes = rng.range(self.n_classes_lo, self.n_classes_hi);
+        // Distinct label tokens for this task.
+        let label_span = (vocab::LABEL_END - vocab::LABEL_START) as usize;
+        let labels: Vec<i32> = rng
+            .sample_indices(label_span, n_classes)
+            .into_iter()
+            .map(|i| vocab::LABEL_START + i as i32)
+            .collect();
+        // Distinct signature words per class, drawn from a SHARED pool
+        // (ids WORD_START+64..): every signature token is seen during
+        // pretraining across tasks; unseen test tasks are new
+        // *combinations* — as in real MetaICL, where words are known but
+        // tasks are not.
+        let word_lo = vocab::WORD_START as usize + 64;
+        let word_hi = vocab::word_end(self.vocab_size) as usize;
+        let all = rng.sample_indices(word_hi - word_lo, n_classes * self.sig_size);
+        let signatures = (0..n_classes)
+            .map(|c| {
+                all[c * self.sig_size..(c + 1) * self.sig_size]
+                    .iter()
+                    .map(|&i| (word_lo + i) as i32)
+                    .collect()
+            })
+            .collect();
+        Task { signatures, labels }
+    }
+
+    fn demonstration(&self, task: &Task, rng: &mut Rng) -> Vec<i32> {
+        let class = rng.range(0, task.labels.len());
+        let body_len = rng.range(4, self.chunk_max - 3);
+        let mut out = vec![vocab::MARKER_START]; // "example:" marker
+        // Narrow noise pool: fewer embeddings to learn -> the
+        // signature->label mapping emerges within a short pretrain.
+        out.extend(mixture_tokens(
+            rng,
+            &task.signatures[class],
+            vocab::WORD_START,
+            vocab::WORD_START + 64,
+            self.p_signature,
+            body_len,
+        ));
+        out.push(vocab::SEP);
+        out.push(task.labels[class]);
+        out
+    }
+}
+
+impl OnlineDataset for MetaIcl {
+    fn name(&self) -> &'static str {
+        "metaicl"
+    }
+
+    fn n_identities(&self, split: Split) -> usize {
+        match split {
+            Split::Train => self.n_train,
+            Split::Test => self.n_test,
+        }
+    }
+
+    fn t_max(&self) -> usize {
+        self.t_max
+    }
+
+    fn is_multi_choice(&self) -> bool {
+        true
+    }
+
+    fn sample(&self, split: Split, identity: usize, t: usize) -> OnlineSample {
+        assert!(t >= 1 && t <= self.t_max);
+        let task = self.task(split, identity);
+        let mut rng = identity_rng(self.seed ^ 0xA11CE, DS_ID, split, identity);
+        // Chunks are a prefix-stable sequence: c(1..t) at step t equals the
+        // first t chunks at any later step (online accumulation).
+        let chunks: Vec<Vec<i32>> =
+            (0..t).map(|_| self.demonstration(&task, &mut rng)).collect();
+        // The query is a function of the identity ONLY: the test set is
+        // identical across time steps (paper protocol) — more context,
+        // same questions.
+        let mut qrng = identity_rng(self.seed ^ 0x9E51, DS_ID, split, identity);
+        let class = qrng.range(0, task.labels.len());
+        let body_len = qrng.range(4, self.input_max.min(self.chunk_max) - 4);
+        let mut input = vec![vocab::MARKER_START + 1]; // "problem:" marker
+        input.extend(mixture_tokens(
+            &mut qrng,
+            &task.signatures[class],
+            vocab::WORD_START,
+            vocab::WORD_START + 64,
+            self.p_signature,
+            body_len,
+        ));
+        input.push(vocab::SEP);
+        OnlineSample {
+            chunks,
+            input,
+            target: vec![task.labels[class]],
+            choices: task.labels.iter().map(|&l| vec![l]).collect(),
+            correct: class,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sc() -> ScenarioConfig {
+        ScenarioConfig {
+            t_max: 8,
+            chunk_max: 24,
+            comp_len_max: 4,
+            input_max: 32,
+            seq_train: 384,
+            mem_slots: 48,
+            batch_train: 16,
+            infer_batches: vec![1, 8],
+            decode_cache: 96,
+            rmt_unroll: 4,
+            rmt_mem: 4,
+        }
+    }
+
+    #[test]
+    fn deterministic_and_prefix_stable() {
+        let ds = MetaIcl::new(7, &sc(), 512);
+        let a = ds.sample(Split::Test, 3, 5);
+        let b = ds.sample(Split::Test, 3, 5);
+        assert_eq!(a.chunks, b.chunks);
+        assert_eq!(a.input, b.input);
+        // Online accumulation: step-5 chunks extend step-3 chunks.
+        let c = ds.sample(Split::Test, 3, 3);
+        assert_eq!(&a.chunks[..3], c.chunks.as_slice());
+    }
+
+    #[test]
+    fn shapes_and_reserved_tokens() {
+        let ds = MetaIcl::new(7, &sc(), 512);
+        for t in [1, 4, 8] {
+            let s = ds.sample(Split::Train, 0, t);
+            assert_eq!(s.chunks.len(), t);
+            for c in &s.chunks {
+                assert!(c.len() <= 24, "{}", c.len());
+                assert!(!c.contains(&vocab::PAD));
+                assert!(!c.contains(&vocab::COMP));
+                assert_eq!(c[c.len() - 2], vocab::SEP);
+            }
+            assert!(s.input.len() + s.target.len() <= 32);
+            assert_eq!(s.target.len(), 1);
+            assert!(s.choices.len() >= 2);
+            assert_eq!(s.choices[s.correct], s.target);
+        }
+    }
+
+    #[test]
+    fn demonstrations_reveal_the_mapping() {
+        // Signature tokens of the demo's class should dominate its body —
+        // otherwise in-context learning is impossible by construction.
+        let ds = MetaIcl::new(1, &sc(), 512);
+        let task = ds.task(Split::Train, 5);
+        let s = ds.sample(Split::Train, 5, 8);
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for c in &s.chunks {
+            let label = *c.last().unwrap();
+            let class = task.labels.iter().position(|&l| l == label).unwrap();
+            for &tok in &c[1..c.len() - 2] {
+                total += 1;
+                hits += usize::from(task.signatures[class].contains(&tok));
+            }
+        }
+        let frac = hits as f32 / total as f32;
+        assert!(frac > 0.55, "signature fraction {frac}");
+    }
+
+    #[test]
+    fn train_test_tasks_differ() {
+        let ds = MetaIcl::new(7, &sc(), 512);
+        let tr = ds.task(Split::Train, 0);
+        let te = ds.task(Split::Test, 0);
+        assert_ne!(tr.signatures, te.signatures);
+    }
+}

@@ -1,0 +1,172 @@
+//! Synthetic online-interaction datasets.
+//!
+//! The paper evaluates on MetaICL (multi-task ICL), LaMP (personalization),
+//! DailyDialog (conversation) and PG19 (streaming). Those corpora are not
+//! available here, so each generator synthesises a workload that preserves
+//! the *structural property* the paper's analysis hinges on (DESIGN.md §2):
+//!
+//! * `metaicl` — demonstrations of one task are mutually complementary
+//!   (shared signature→label mapping) ⇒ merge ≈ concat;
+//! * `lamp`    — user profiles share per-user information;
+//! * `dialog`  — each turn carries *distinct* information (topic drift +
+//!   callbacks) ⇒ concat > merge as t grows;
+//! * `stream`  — long-range topic persistence ⇒ compressed history beats a
+//!   recency-only window.
+//!
+//! All generators are deterministic functions of (dataset seed, identity,
+//! time step) and split identities into train/test sets.
+
+pub mod corpus;
+pub mod dialog;
+pub mod lamp;
+pub mod metaicl;
+pub mod stream;
+
+use crate::util::rng::Rng;
+
+/// Reserved token-id regions of the 512-token synthetic vocabulary
+/// (mirrored by `ModelConfig` ids 0..4 in python/compile/config.py).
+pub mod vocab {
+    pub const PAD: i32 = 0;
+    pub const BOS: i32 = 1;
+    pub const SEP: i32 = 2;
+    pub const COMP: i32 = 3;
+    /// Speaker / structural markers.
+    pub const MARKER_START: i32 = 4;
+    pub const MARKER_END: i32 = 8;
+    /// Answer/label tokens (multi-choice targets live here).
+    pub const LABEL_START: i32 = 8;
+    pub const LABEL_END: i32 = 24;
+    /// Content words.
+    pub const WORD_START: i32 = 24;
+
+    pub fn word_end(vocab_size: usize) -> i32 {
+        vocab_size as i32
+    }
+}
+
+/// One online-inference example at time step t: the accumulated context is
+/// `chunks[0..t]`, the query is `input`, the answer is `target`.
+#[derive(Debug, Clone)]
+pub struct OnlineSample {
+    /// c(1), ..., c(t): context chunks in arrival order.
+    pub chunks: Vec<Vec<i32>>,
+    /// I(t): the query (ends with SEP; the target follows it).
+    pub input: Vec<i32>,
+    /// O(t): target tokens (appended to `input` for scoring/training).
+    pub target: Vec<i32>,
+    /// Multi-choice candidates (accuracy datasets); `correct` indexes them.
+    pub choices: Vec<Vec<i32>>,
+    pub correct: usize,
+}
+
+impl OnlineSample {
+    /// input ++ target (the packed input segment fed to the model).
+    pub fn input_with_target(&self) -> Vec<i32> {
+        let mut v = self.input.clone();
+        v.extend_from_slice(&self.target);
+        v
+    }
+}
+
+/// Identity split: which identities (tasks/users/dialogues) are train vs
+/// held-out test — the paper's I_train / I_test.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Test,
+}
+
+/// An online-interaction dataset: deterministic sampler over identities
+/// and time steps.
+pub trait OnlineDataset {
+    fn name(&self) -> &'static str;
+
+    /// Number of identities in the split.
+    fn n_identities(&self, split: Split) -> usize;
+
+    /// Max time step for evaluation (paper: 16 / 16 / 12).
+    fn t_max(&self) -> usize;
+
+    /// Sample the interaction for `identity` at time step `t` (1-based):
+    /// returns chunks c(1..t), input I(t), target O(t).
+    fn sample(&self, split: Split, identity: usize, t: usize) -> OnlineSample;
+
+    /// Whether accuracy (multi-choice) or perplexity is the metric.
+    fn is_multi_choice(&self) -> bool;
+}
+
+/// Deterministic per-(dataset, split, identity) generator.
+pub(crate) fn identity_rng(seed: u64, ds: u64, split: Split, identity: usize) -> Rng {
+    let s = match split {
+        Split::Train => 0x7121u64,
+        Split::Test => 0x7e57u64,
+    };
+    Rng::with_stream(
+        seed ^ ds.wrapping_mul(0x9e37_79b9_7f4a_7c15),
+        (s.wrapping_mul(31) ^ identity as u64).wrapping_mul(2) | 1,
+    )
+}
+
+/// Draw `n` tokens from a weighted mixture of a signature set and a noise
+/// pool — the shared building block of metaicl/lamp items.
+pub(crate) fn mixture_tokens(
+    rng: &mut Rng,
+    signature: &[i32],
+    noise_lo: i32,
+    noise_hi: i32,
+    p_signature: f32,
+    n: usize,
+) -> Vec<i32> {
+    (0..n)
+        .map(|_| {
+            if rng.bool(p_signature) {
+                *rng.choice(signature)
+            } else {
+                rng.range(noise_lo as usize, noise_hi as usize) as i32
+            }
+        })
+        .collect()
+}
+
+/// Resolve a dataset by name at the scenario sizes from the manifest.
+pub fn by_name(
+    name: &str,
+    seed: u64,
+    sc: &crate::model::manifest::ScenarioConfig,
+    vocab_size: usize,
+) -> anyhow::Result<Box<dyn OnlineDataset>> {
+    Ok(match name {
+        "metaicl" => Box::new(metaicl::MetaIcl::new(seed, sc, vocab_size)),
+        "lamp" => Box::new(lamp::Lamp::new(seed, sc, vocab_size)),
+        "dialog" => Box::new(dialog::Dialog::new(seed, sc, vocab_size)),
+        _ => anyhow::bail!("unknown dataset {name:?} (metaicl|lamp|dialog)"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_rng_is_deterministic_and_split() {
+        let mut a = identity_rng(1, 2, Split::Train, 3);
+        let mut b = identity_rng(1, 2, Split::Train, 3);
+        assert_eq!(a.next_u64(), b.next_u64());
+        let mut c = identity_rng(1, 2, Split::Test, 3);
+        let mut d = identity_rng(1, 2, Split::Train, 4);
+        let x = identity_rng(1, 2, Split::Train, 3).next_u64();
+        assert_ne!(x, c.next_u64());
+        assert_ne!(x, d.next_u64());
+    }
+
+    #[test]
+    fn mixture_respects_probability() {
+        let mut rng = Rng::new(9);
+        let sig = vec![100, 101, 102];
+        let toks = mixture_tokens(&mut rng, &sig, 200, 400, 0.8, 2000);
+        let in_sig = toks.iter().filter(|t| sig.contains(t)).count();
+        assert!(in_sig > 1400 && in_sig < 1900, "{in_sig}");
+        assert!(toks.iter().all(|&t| sig.contains(&t) || (200..400).contains(&t)));
+    }
+}

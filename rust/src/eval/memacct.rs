@@ -1,0 +1,174 @@
+//! Attention-KV memory + FLOPs accounting (Table 3, Figure 5/6, Table 17).
+//!
+//! The paper's efficiency claims are about *lengths of attention KV*
+//! during the compression and inference passes of each method. This
+//! module computes those lengths exactly from the actual chunk lengths,
+//! then converts to bytes (2·L·D·4 per KV entry, f32) and attention MACs.
+
+use crate::masks::Method;
+use crate::model::manifest::ModelConfig;
+
+/// Peak KV entries during (compression pass, inference pass) at step t.
+/// `lc`: chunk token lengths 1..=t, `li`: input length, `cl`: <COMP> len.
+pub fn peak_kv_entries(
+    method: Method,
+    lc: &[usize],
+    li: usize,
+    cl: usize,
+) -> (usize, usize) {
+    let t = lc.len();
+    let total_c: usize = lc.iter().sum();
+    let last = lc.last().copied().unwrap_or(0);
+    match method {
+        // No compression pass; inference attends the raw context.
+        Method::Full => (0, total_c + li),
+        Method::NoContext => (0, li),
+        // Fixed-context compression (Gisting): recompress ALL of C(t).
+        Method::Gist => (total_c + cl * t, cl * t + li),
+        // CCM-concat: compress c(t) against Mem(t-1); infer on Mem(t).
+        Method::CcmConcat => ((t - 1) * cl + last + cl, t * cl + li),
+        // CCM-merge: fixed memory.
+        Method::CcmMerge => (cl + last + cl, cl + li),
+        // Online Compressive Transformer: pooled slots accumulate like
+        // concat, but pooling reads the raw chunk (no comp tokens).
+        Method::Compressive => ((t - 1) * cl + last, t * cl + li),
+    }
+}
+
+/// Bytes for `entries` KV entries (keys + values, f32).
+pub fn kv_bytes(m: &ModelConfig, entries: usize) -> usize {
+    2 * m.n_layers * entries * m.d_model * 4
+}
+
+/// Peak KV bytes across both passes (the Figure 6 x-axis).
+pub fn peak_kv_bytes(m: &ModelConfig, method: Method, lc: &[usize], li: usize, cl: usize) -> usize {
+    let (c, i) = peak_kv_entries(method, lc, li, cl);
+    kv_bytes(m, c.max(i))
+}
+
+/// Attention MACs for a pass: every query attends `kv` entries.
+/// 2 matmuls (q·kᵀ, p·v) of q·kv·d per head group = 2·q·kv·D per layer.
+pub fn attn_macs(m: &ModelConfig, q: usize, kv: usize) -> u64 {
+    2 * (m.n_layers as u64) * (q as u64) * (kv as u64) * (m.d_model as u64)
+}
+
+/// Attention MACs of the compression + inference passes at step t.
+pub fn step_attn_macs(
+    m: &ModelConfig,
+    method: Method,
+    lc: &[usize],
+    li: usize,
+    cl: usize,
+) -> (u64, u64) {
+    let t = lc.len();
+    let total_c: usize = lc.iter().sum();
+    let last = lc.last().copied().unwrap_or(0);
+    match method {
+        Method::Full => (0, attn_macs(m, total_c + li, total_c + li)),
+        Method::NoContext => (0, attn_macs(m, li, li)),
+        Method::Gist => (
+            attn_macs(m, total_c + cl * t, total_c + cl * t),
+            attn_macs(m, li, cl * t + li),
+        ),
+        Method::CcmConcat => (
+            attn_macs(m, last + cl, (t - 1) * cl + last + cl),
+            attn_macs(m, li, t * cl + li),
+        ),
+        Method::CcmMerge => {
+            (attn_macs(m, last + cl, cl + last + cl), attn_macs(m, li, cl + li))
+        }
+        Method::Compressive => {
+            (attn_macs(m, last, (t - 1) * cl + last), attn_macs(m, li, t * cl + li))
+        }
+    }
+}
+
+/// Table 17: compression overhead vs attention-FLOPs savings. Returns the
+/// minimum inference token length where CCM's saving outweighs the
+/// <COMP> forward overhead. Model-forward MACs per token ~ 2·P where P =
+/// non-embedding params; savings per inference token ~ attention over
+/// (full_kv - compressed_kv).
+pub fn breakeven_inference_tokens(m: &ModelConfig, lc: usize, cl: usize, t: usize) -> usize {
+    // Overhead: forwarding cl extra tokens per chunk, t chunks.
+    let params_per_layer = 4 * m.d_model * m.d_model + 2 * m.d_model * m.d_ff;
+    let fwd_macs_per_tok = (m.n_layers * params_per_layer) as u64;
+    let overhead = (t * cl) as u64 * fwd_macs_per_tok;
+    // Savings per inference token: attention over full context vs memory.
+    let full_kv = t * lc;
+    let mem_kv = t * cl;
+    let save_per_tok = attn_macs(m, 1, full_kv) - attn_macs(m, 1, mem_kv);
+    if save_per_tok == 0 {
+        return usize::MAX;
+    }
+    overhead.div_ceil(save_per_tok) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab: 512,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 512,
+            max_pos: 512,
+            lora_rank: 8,
+            lora_alpha: 16.0,
+            pad_id: 0,
+            bos_id: 1,
+            sep_id: 2,
+            comp_id: 3,
+            d_head: 32,
+        }
+    }
+
+    #[test]
+    fn orderings_match_the_paper() {
+        let m = model();
+        let lc = vec![20usize; 8];
+        let (li, cl) = (16, 2);
+        let peak = |meth| peak_kv_bytes(&m, meth, &lc, li, cl);
+        // merge < concat < gist(fixed) <= full — Figure 6 / Table 6 shape.
+        assert!(peak(Method::CcmMerge) < peak(Method::CcmConcat));
+        assert!(peak(Method::CcmConcat) < peak(Method::Gist));
+        assert!(peak(Method::Gist) <= peak(Method::Full) + kv_bytes(&m, cl * 8));
+        assert!(peak(Method::NoContext) < peak(Method::CcmMerge));
+    }
+
+    #[test]
+    fn merge_peak_is_constant_in_t() {
+        let m = model();
+        let p1 = peak_kv_bytes(&m, Method::CcmMerge, &vec![20; 2], 16, 2);
+        let p2 = peak_kv_bytes(&m, Method::CcmMerge, &vec![20; 16], 16, 2);
+        assert_eq!(p1, p2);
+        // While concat grows linearly.
+        let c1 = peak_kv_bytes(&m, Method::CcmConcat, &vec![20; 2], 16, 2);
+        let c2 = peak_kv_bytes(&m, Method::CcmConcat, &vec![20; 16], 16, 2);
+        assert!(c2 > c1);
+    }
+
+    #[test]
+    fn flops_complexities() {
+        let m = model();
+        let (comp_c, inf_c) = step_attn_macs(&m, Method::CcmConcat, &vec![50; 16], 16, 1);
+        let (comp_g, inf_g) = step_attn_macs(&m, Method::Gist, &vec![50; 16], 16, 1);
+        // Fixed-context compression reprocesses everything: much larger.
+        assert!(comp_g > 10 * comp_c, "{comp_g} vs {comp_c}");
+        assert!(inf_g <= inf_c); // gist inference attends only gists
+        let (_, inf_full) = step_attn_macs(&m, Method::Full, &vec![50; 16], 16, 1);
+        assert!(inf_full > inf_c);
+    }
+
+    #[test]
+    fn breakeven_grows_with_comp_len() {
+        let m = model();
+        let th1 = breakeven_inference_tokens(&m, 50, 1, 16);
+        let th2 = breakeven_inference_tokens(&m, 50, 2, 16);
+        let th4 = breakeven_inference_tokens(&m, 50, 4, 16);
+        assert!(th1 < th2 && th2 < th4, "{th1} {th2} {th4}");
+    }
+}

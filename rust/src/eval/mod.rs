@@ -1,0 +1,274 @@
+//! Evaluation harness: accuracy (multi-choice log-likelihood scoring, the
+//! MetaICL protocol), perplexity, RougeL generation, and the per-method
+//! KV-memory accounting — everything Figures 6/7/10 and Tables 5-9/15-25
+//! are built from.
+
+pub mod memacct;
+pub mod rouge;
+pub mod streaming;
+
+use anyhow::Result;
+
+use crate::datagen::{OnlineDataset, OnlineSample, Split};
+use crate::masks::Method;
+use crate::model::Checkpoint;
+use crate::runtime::{Runtime, Value};
+use crate::tensor::Tensor;
+use crate::training::pack::{pack_batch, PackPolicy};
+
+#[derive(Debug, Clone)]
+pub struct EvalReport {
+    pub method: Method,
+    pub t: usize,
+    pub n: usize,
+    /// Accuracy in [0,1] (multi-choice datasets) or NaN.
+    pub accuracy: f64,
+    /// Perplexity (language datasets) or NaN.
+    pub perplexity: f64,
+    /// Peak attention-KV bytes across compression+inference (Figure 6).
+    pub peak_kv_bytes: usize,
+}
+
+pub struct Evaluator<'rt> {
+    pub rt: &'rt Runtime,
+    pub ck: &'rt Checkpoint,
+    /// Use the Pallas-kernel forward artifact (b=1) instead of the fused
+    /// jnp forward — same math, exercises the L1 kernel end-to-end.
+    pub use_pallas: bool,
+}
+
+impl<'rt> Evaluator<'rt> {
+    pub fn new(rt: &'rt Runtime, ck: &'rt Checkpoint) -> Evaluator<'rt> {
+        Evaluator { rt, ck, use_pallas: false }
+    }
+
+    fn forward_name(&self, b: usize) -> String {
+        if self.use_pallas && b == 1 {
+            "ccm_forward_pallas_b1".into()
+        } else {
+            format!("ccm_forward_b{b}")
+        }
+    }
+
+    fn eval_batch(&self, n: usize) -> usize {
+        crate::compress::pick_batch(&self.rt.manifest.scenario.infer_batches, n.max(1))
+    }
+
+    /// Run the parallel forward over packed rows; returns logits [B,S,V].
+    pub fn forward(
+        &self,
+        policy: &PackPolicy,
+        samples: &[(&OnlineSample, Option<&[i32]>)],
+    ) -> Result<Vec<Tensor>> {
+        let manifest = &self.rt.manifest;
+        let mut out = Vec::with_capacity(samples.len());
+        let mut i = 0;
+        while i < samples.len() {
+            let b = self.eval_batch(samples.len() - i);
+            let group = &samples[i..(i + b).min(samples.len())];
+            i += group.len();
+            let batch = pack_batch(policy, manifest, group, b)?;
+            let nb = manifest.base_layout.total;
+            let nl = manifest.lora_layout.total;
+            let outs = self.rt.execute_f32(
+                &self.forward_name(b),
+                &[
+                    Value::vec_f32(&[nb], self.ck.base.data.clone())?,
+                    Value::vec_f32(&[nl], self.ck.lora.data.clone())?,
+                    Value::I32(batch.tokens),
+                    Value::I32(batch.comp_slot),
+                    Value::F32(batch.gate),
+                    Value::I32(batch.pos),
+                    Value::F32(batch.mask),
+                    Value::F32(batch.merge_p),
+                ],
+            )?;
+            let logits = &outs[0]; // [b, S, V]
+            let (s, v) = (logits.shape[1], logits.shape[2]);
+            for bi in 0..group.len() {
+                let mut t = Tensor::zeros(&[s, v]);
+                let n = s * v;
+                t.data.copy_from_slice(&logits.data[bi * n..(bi + 1) * n]);
+                out.push(t);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Average log-likelihood of `len` target tokens starting at
+    /// `target_start` in the packed row.
+    pub fn row_avg_loglik(logits: &Tensor, tokens: &[i32], target_start: usize, len: usize) -> f64 {
+        let mut total = 0.0f64;
+        for i in 0..len {
+            let row = logits.row(&[target_start + i - 1]);
+            let tgt = tokens[target_start + i] as usize;
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let lse: f32 = row.iter().map(|&x| (x - mx).exp()).sum::<f32>().ln() + mx;
+            total += (row[tgt] - lse) as f64;
+        }
+        total / len as f64
+    }
+
+    /// Multi-choice accuracy at time step t over `n` test identities
+    /// (the MetaICL protocol: argmax over per-choice average LL).
+    pub fn accuracy(
+        &self,
+        policy: &PackPolicy,
+        ds: &dyn OnlineDataset,
+        t: usize,
+        n: usize,
+    ) -> Result<EvalReport> {
+        let n = n.min(ds.n_identities(Split::Test));
+        let mut correct = 0usize;
+        let mut peak = 0usize;
+        let mut ids = Vec::with_capacity(n);
+        for id in 0..n {
+            ids.push(ds.sample(Split::Test, id, t));
+        }
+        // Flatten every (sample, choice) into one item stream so the
+        // forward saturates the largest batch variant (§Perf L3).
+        let items: Vec<(&OnlineSample, Option<&[i32]>)> = ids
+            .iter()
+            .flat_map(|s| s.choices.iter().map(move |c| (s, Some(c.as_slice()))))
+            .collect();
+        let logits = self.forward(policy, &items)?;
+        let mut li = 0usize;
+        for sample in &ids {
+            let mut best = (f64::NEG_INFINITY, 0usize);
+            for (ci, choice) in sample.choices.iter().enumerate() {
+                let row = crate::training::pack::pack_row(
+                    policy,
+                    &self.rt.manifest.scenario,
+                    sample,
+                    Some(choice),
+                )?;
+                let ll = Self::row_avg_loglik(
+                    &logits[li],
+                    &row.tokens,
+                    row.target_start,
+                    row.target_len,
+                );
+                li += 1;
+                if ll > best.0 {
+                    best = (ll, ci);
+                }
+            }
+            correct += usize::from(best.1 == sample.correct);
+            let lc: Vec<usize> = sample.chunks.iter().map(|c| c.len()).collect();
+            peak = peak.max(memacct::peak_kv_bytes(
+                &self.rt.manifest.model,
+                policy.method,
+                &lc,
+                sample.input.len() + 1,
+                policy.comp_len,
+            ));
+        }
+        Ok(EvalReport {
+            method: policy.method,
+            t,
+            n,
+            accuracy: correct as f64 / n as f64,
+            perplexity: f64::NAN,
+            peak_kv_bytes: peak,
+        })
+    }
+
+    /// Perplexity on the next turn at time step t (DailyDialog protocol).
+    pub fn perplexity(
+        &self,
+        policy: &PackPolicy,
+        ds: &dyn OnlineDataset,
+        t: usize,
+        n: usize,
+    ) -> Result<EvalReport> {
+        let n = n.min(ds.n_identities(Split::Test));
+        let mut total_nll = 0.0f64;
+        let mut total_toks = 0usize;
+        let mut peak = 0usize;
+        let samples: Vec<OnlineSample> =
+            (0..n).map(|id| ds.sample(Split::Test, id, t)).collect();
+        let items: Vec<(&OnlineSample, Option<&[i32]>)> =
+            samples.iter().map(|s| (s, None)).collect();
+        let logits = self.forward(policy, &items)?;
+        for (sample, lg) in samples.iter().zip(&logits) {
+            let row = crate::training::pack::pack_row(
+                policy,
+                &self.rt.manifest.scenario,
+                sample,
+                None,
+            )?;
+            let ll = Self::row_avg_loglik(lg, &row.tokens, row.target_start, row.target_len);
+            total_nll += -ll * row.target_len as f64;
+            total_toks += row.target_len;
+            let lc: Vec<usize> = sample.chunks.iter().map(|c| c.len()).collect();
+            peak = peak.max(memacct::peak_kv_bytes(
+                &self.rt.manifest.model,
+                policy.method,
+                &lc,
+                sample.input.len() + sample.target.len(),
+                policy.comp_len,
+            ));
+        }
+        Ok(EvalReport {
+            method: policy.method,
+            t,
+            n,
+            accuracy: f64::NAN,
+            perplexity: (total_nll / total_toks as f64).exp(),
+            peak_kv_bytes: peak,
+        })
+    }
+
+    /// Greedy generation via the parallel forward (uniform across
+    /// methods), for the RougeL comparison (Table 7).
+    pub fn generate(
+        &self,
+        policy: &PackPolicy,
+        sample: &OnlineSample,
+        max_new: usize,
+    ) -> Result<Vec<i32>> {
+        let mut gen: Vec<i32> = Vec::new();
+        for _ in 0..max_new {
+            let items = [(sample, Some(gen.as_slice()))];
+            let logits = &self.forward(policy, &items)?[0];
+            let row = crate::training::pack::pack_row(
+                policy,
+                &self.rt.manifest.scenario,
+                sample,
+                Some(&gen),
+            )?;
+            // Next-token logits at the last real token position.
+            let last = row.target_start + gen.len() - 1;
+            let lrow = logits.row(&[last]);
+            let mut best = (f32::NEG_INFINITY, 0usize);
+            for (i, &x) in lrow.iter().enumerate() {
+                if x > best.0 {
+                    best = (x, i);
+                }
+            }
+            if best.1 as i32 == self.rt.manifest.model.pad_id {
+                break;
+            }
+            gen.push(best.1 as i32);
+        }
+        Ok(gen)
+    }
+
+    /// Mean RougeL of greedy generations vs targets over n identities.
+    pub fn rouge_l(
+        &self,
+        policy: &PackPolicy,
+        ds: &dyn OnlineDataset,
+        t: usize,
+        n: usize,
+    ) -> Result<f64> {
+        let n = n.min(ds.n_identities(Split::Test));
+        let mut total = 0.0f64;
+        for id in 0..n {
+            let sample = ds.sample(Split::Test, id, t);
+            let gen = self.generate(&policy.clone(), &sample, sample.target.len() + 1)?;
+            total += rouge::rouge_l(&gen, &sample.target);
+        }
+        Ok(total / n as f64)
+    }
+}

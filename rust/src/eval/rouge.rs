@@ -1,0 +1,70 @@
+//! RougeL over token sequences (Table 7's generation metric).
+//!
+//! Standard LCS-based precision/recall/F1. Operates on token ids — the
+//! synthetic vocabulary has no casing/synonym structure, so token-level
+//! LCS is the faithful analogue.
+
+/// Longest common subsequence length.
+pub fn lcs_len(a: &[i32], b: &[i32]) -> usize {
+    if a.is_empty() || b.is_empty() {
+        return 0;
+    }
+    let mut prev = vec![0usize; b.len() + 1];
+    let mut cur = vec![0usize; b.len() + 1];
+    for &x in a {
+        for (j, &y) in b.iter().enumerate() {
+            cur[j + 1] = if x == y { prev[j] + 1 } else { cur[j].max(prev[j + 1]) };
+        }
+        std::mem::swap(&mut prev, &mut cur);
+        cur.iter_mut().for_each(|v| *v = 0);
+    }
+    prev[b.len()]
+}
+
+/// RougeL F1 (beta = 1).
+pub fn rouge_l(candidate: &[i32], reference: &[i32]) -> f64 {
+    let l = lcs_len(candidate, reference) as f64;
+    if l == 0.0 {
+        return 0.0;
+    }
+    let p = l / candidate.len() as f64;
+    let r = l / reference.len() as f64;
+    2.0 * p * r / (p + r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lcs_matches_bruteforce_on_small_inputs() {
+        fn brute(a: &[i32], b: &[i32]) -> usize {
+            if a.is_empty() || b.is_empty() {
+                0
+            } else if a[0] == b[0] {
+                1 + brute(&a[1..], &b[1..])
+            } else {
+                brute(&a[1..], b).max(brute(a, &b[1..]))
+            }
+        }
+        crate::util::proptest::check("lcs-brute", 40, |rng| {
+            let n = rng.range(0, 8);
+            let m = rng.range(0, 8);
+            let a: Vec<i32> = (0..n).map(|_| rng.range(0, 4) as i32).collect();
+            let b: Vec<i32> = (0..m).map(|_| rng.range(0, 4) as i32).collect();
+            crate::prop_assert!(
+                lcs_len(&a, &b) == brute(&a, &b),
+                "lcs mismatch on {a:?} vs {b:?}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rouge_extremes() {
+        assert_eq!(rouge_l(&[1, 2, 3], &[1, 2, 3]), 1.0);
+        assert_eq!(rouge_l(&[4, 5], &[1, 2, 3]), 0.0);
+        let r = rouge_l(&[1, 9, 2, 9], &[1, 2]);
+        assert!(r > 0.5 && r < 1.0);
+    }
+}

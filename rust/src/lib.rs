@@ -1,0 +1,160 @@
+//! # ccm — Compressed Context Memory for Online Language Model Interaction
+//!
+//! Production-shaped reproduction of Kim et al., ICLR 2024
+//! (<https://arxiv.org/abs/2312.03414>), built as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`) — Pallas kernels for the masked
+//!   attention-with-memory-slots hot spot and the fused conditional-LoRA
+//!   projection.
+//! * **L2** (`python/compile/model.py`) — the Transformer LM with the
+//!   parallelized CCM forward, lowered once to HLO text artifacts.
+//! * **L3** (this crate) — the online-inference coordinator: sessions
+//!   holding per-identity compressed memory, a dynamic batcher, the
+//!   compression scheduler, streaming mode, the training driver that
+//!   executes the AOT train-step artifacts, and the evaluation +
+//!   benchmark harnesses that regenerate every table/figure of the paper.
+//!
+//! Python never runs on the request path: after `make artifacts`, the
+//! Rust binary is self-contained.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use ccm::runtime::Runtime;
+//!
+//! let rt = Runtime::from_config("main").unwrap();
+//! // feed context chunks, compress, infer — see examples/quickstart.rs
+//! ```
+
+pub mod baselines;
+pub mod bench;
+pub mod compress;
+pub mod coordinator;
+pub mod datagen;
+pub mod eval;
+pub mod masks;
+pub mod memory;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod training;
+pub mod util;
+
+use anyhow::{bail, Result};
+use util::cli::Args;
+
+/// `ccm train --phase lm|ccm|rmt` — run a training phase and save the
+/// checkpoint under runs/<config>/.
+pub fn cli_train(args: &Args) -> Result<()> {
+    let config = args.str("config", "main");
+    let budget = bench::Budget::from_args(args)?;
+    let mut ctx = bench::ExpContext::new(&config, budget)?;
+    let phase = args.str("phase", "lm");
+    let mixture = args.str("mixture", "metaicl+dialog");
+    match phase.as_str() {
+        "lm" => {
+            ctx.base(&mixture)?;
+        }
+        "ccm" => {
+            let method = masks::Method::parse(&args.str("method", "ccm-concat"))?;
+            let comp_len = args.usize("comp-len", 2)?;
+            let mut spec = bench::AdapterSpec::new(method, comp_len, &mixture);
+            spec.scheme = masks::MergeScheme::parse(&args.str("scheme", "avg"))?;
+            spec.conditional = !args.bool("unconditional");
+            ctx.adapter(&spec)?;
+        }
+        "rmt" => {
+            let (_, ms) = ctx.rmt(&mixture)?;
+            crate::info!("rmt trained: {ms:.0} ms/sample");
+        }
+        other => bail!("unknown phase {other:?} (lm|ccm|rmt)"),
+    }
+    Ok(())
+}
+
+/// `ccm eval --dataset metaicl --method ccm-concat --t 8`
+pub fn cli_eval(args: &Args) -> Result<()> {
+    let config = args.str("config", "main");
+    let budget = bench::Budget::from_args(args)?;
+    let mut ctx = bench::ExpContext::new(&config, budget)?;
+    let dataset = args.str("dataset", "metaicl");
+    let comp_len = args.usize("comp-len", 2)?;
+    let methods = args.list("method", &["nocontext", "full", "ccm-concat", "ccm-merge"]);
+    let ts = ctx.budget.t_values.clone();
+    for method_name in methods {
+        let method = masks::Method::parse(&method_name)?;
+        for &t in &ts {
+            let ck = match method {
+                masks::Method::Full | masks::Method::NoContext => ctx.base(bench::UNIFIED)?,
+                _ => ctx.adapter(&bench::AdapterSpec::new(method, comp_len, &dataset))?,
+            };
+            let ds = datagen::by_name(
+                &dataset,
+                ctx.budget.seed,
+                &ctx.rt.manifest.scenario,
+                ctx.rt.manifest.model.vocab,
+            )?;
+            let ev = eval::Evaluator::new(&ctx.rt, &ck);
+            let p = training::pack::PackPolicy::new(method, comp_len);
+            let r = if ds.is_multi_choice() {
+                ev.accuracy(&p, ds.as_ref(), t, ctx.budget.eval_n)?
+            } else {
+                ev.perplexity(&p, ds.as_ref(), t, ctx.budget.eval_n)?
+            };
+            println!(
+                "{dataset} {method_name} t={t}: acc {:.3} ppl {:.3} peakKV {:.1} KiB",
+                r.accuracy,
+                r.perplexity,
+                r.peak_kv_bytes as f64 / 1024.0
+            );
+        }
+    }
+    Ok(())
+}
+
+/// `ccm serve --port 7878 --method ccm-concat`
+pub fn cli_serve(args: &Args) -> Result<()> {
+    let config = args.str("config", "main");
+    let rt = runtime::Runtime::from_config(&config)?;
+    let ckpt_path = args.str("checkpoint", "");
+    let ck = if ckpt_path.is_empty() {
+        model::Checkpoint::init(&rt.manifest, args.u64("seed", 7)?)
+    } else {
+        model::Checkpoint::load(std::path::Path::new(&ckpt_path), &rt.manifest)?
+    };
+    let comp_len = args.usize("comp-len", rt.manifest.scenario.comp_len_max)?;
+    let method = masks::Method::parse(&args.str("method", "ccm-concat"))?;
+    let policy = match method {
+        masks::Method::CcmMerge => coordinator::session::SessionPolicy::merge(comp_len),
+        _ => coordinator::session::SessionPolicy::concat(comp_len),
+    };
+    let port = args.usize("port", 7878)?;
+    rt.warmup(&["compress_chunk_b1", "compress_chunk_b8", "infer_with_mem_b1", "infer_with_mem_b8"])?;
+    server::serve(
+        &rt,
+        &ck,
+        server::ServerConfig {
+            addr: format!("127.0.0.1:{port}"),
+            policy,
+            max_batch: args.usize("max-batch", 8)?,
+            max_wait: std::time::Duration::from_millis(args.u64("max-wait-ms", 2)?),
+        },
+        None,
+    )
+}
+
+/// `ccm stream --stream-tokens 2048`
+pub fn cli_stream(args: &Args) -> Result<()> {
+    let config = args.str("config", "main");
+    let budget = bench::Budget::from_args(args)?;
+    let mut ctx = bench::ExpContext::new(&config, budget)?;
+    bench::experiments::fig8_streaming(&mut ctx, args)
+}
+
+/// `ccm reproduce --exp fig7|table1|...|all`
+pub fn cli_reproduce(args: &Args) -> Result<()> {
+    let exp = args.str("exp", "fig7");
+    bench::run(&exp, args)
+}

@@ -1,0 +1,89 @@
+//! `ccm` CLI — leader entrypoint for the Compressed Context Memory system.
+//!
+//! Subcommands:
+//!   train      — pretrain the base LM and/or train compression adapters
+//!   eval       — evaluate methods on the synthetic online-inference suites
+//!   serve      — run the JSON-lines TCP serving coordinator
+//!   stream     — streaming-mode perplexity (PG19-style, Figure 8)
+//!   reproduce  — regenerate a paper table/figure (see DESIGN.md §6)
+//!   info       — print manifest/runtime information
+
+use anyhow::{bail, Result};
+use ccm::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => cmd_info(&args),
+        "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            // Subcommands that need the full system are wired in as the
+            // corresponding modules land; dispatch lives here so the CLI
+            // surface is stable.
+            match other {
+                "train" => ccm::cli_train(&args),
+                "eval" => ccm::cli_eval(&args),
+                "serve" => ccm::cli_serve(&args),
+                "stream" => ccm::cli_stream(&args),
+                "reproduce" => ccm::cli_reproduce(&args),
+                _ => {
+                    print_help();
+                    bail!("unknown command {other:?}")
+                }
+            }
+        }
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let config = args.str("config", "main");
+    let rt = ccm::runtime::Runtime::from_config(&config)?;
+    let m = &rt.manifest;
+    println!("config   : {}", m.config_name);
+    println!("platform : {}", rt.platform());
+    println!(
+        "model    : d={} L={} H={} V={} (base params {}, adapter params {})",
+        m.model.d_model,
+        m.model.n_layers,
+        m.model.n_heads,
+        m.model.vocab,
+        m.base_layout.total,
+        m.lora_layout.total
+    );
+    println!(
+        "scenario : T={} chunk<={} comp_len={} input<={} S={} M={}",
+        m.scenario.t_max,
+        m.scenario.chunk_max,
+        m.scenario.comp_len_max,
+        m.scenario.input_max,
+        m.scenario.seq_train,
+        m.scenario.mem_slots
+    );
+    println!("artifacts:");
+    for a in &m.artifacts {
+        println!("  {:24} {} inputs, {} outputs", a.name, a.inputs.len(), a.outputs.len());
+    }
+    let n = ccm::masks::verify_goldens(&m.mask_goldens)?;
+    println!("mask goldens: {n} cases verified against python/compile/masks.py");
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "ccm — Compressed Context Memory (ICLR 2024) coordinator\n\
+         \n\
+         USAGE: ccm <command> [--config main] [flags]\n\
+         \n\
+         COMMANDS:\n\
+           info                         manifest + runtime info, golden check\n\
+           train --phase lm|ccm|rmt     run a training phase (see --help-train)\n\
+           eval --dataset metaicl ...   evaluate methods over time steps\n\
+           serve --port 7878            start the serving coordinator\n\
+           stream --budget 160          streaming perplexity (Figure 8)\n\
+           reproduce --exp table1|fig7  regenerate a paper table/figure\n"
+    );
+}

@@ -1,0 +1,529 @@
+//! Attention-mask + merge-matrix builders — the Rust mirror of
+//! `python/compile/masks.py`.
+//!
+//! The AOT artifacts take the mask and merge matrix as *inputs*, so the
+//! coordinator builds them per batch at serve/train time. Semantics are
+//! pinned by the golden vectors in the manifest (`verify_goldens`), which
+//! the integration tests run for every artifact config.
+
+use anyhow::{bail, Result};
+
+use crate::model::manifest::MaskGolden;
+use crate::tensor::Tensor;
+
+/// Segment kinds (mirror of masks.py constants).
+pub const PAD: i32 = 0;
+pub const CHUNK: i32 = 1;
+pub const COMP: i32 = 2;
+pub const INPUT: i32 = 3;
+
+/// Compression method selector (mirror of masks.METHODS).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    Full,
+    NoContext,
+    CcmConcat,
+    CcmMerge,
+    Gist,
+    Compressive,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "full" => Method::Full,
+            "nocontext" => Method::NoContext,
+            "ccm-concat" => Method::CcmConcat,
+            "ccm-merge" => Method::CcmMerge,
+            "gist" => Method::Gist,
+            "compressive" => Method::Compressive,
+            _ => bail!("unknown method {s:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Full => "full",
+            Method::NoContext => "nocontext",
+            Method::CcmConcat => "ccm-concat",
+            Method::CcmMerge => "ccm-merge",
+            Method::Gist => "gist",
+            Method::Compressive => "compressive",
+        }
+    }
+
+    /// Does this method insert <COMP> tokens into the sequence?
+    pub fn uses_comp_tokens(&self) -> bool {
+        matches!(self, Method::CcmConcat | Method::CcmMerge | Method::Gist)
+    }
+
+    pub const ALL: [Method; 6] = [
+        Method::Full,
+        Method::NoContext,
+        Method::CcmConcat,
+        Method::CcmMerge,
+        Method::Gist,
+        Method::Compressive,
+    ];
+}
+
+/// Merge-update scheme (paper Section 3.1 + Table 16).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MergeScheme {
+    /// Arithmetic average: a_t = 1/t (the paper's main choice).
+    Avg,
+    /// Exponential moving average with constant a (a_1 = 1).
+    Ema(f32),
+}
+
+impl MergeScheme {
+    pub fn parse(s: &str) -> Result<MergeScheme> {
+        if s == "avg" {
+            return Ok(MergeScheme::Avg);
+        }
+        if let Some(a) = s.strip_prefix("ema:") {
+            return Ok(MergeScheme::Ema(a.parse()?));
+        }
+        bail!("unknown merge scheme {s:?}")
+    }
+
+    /// Update coefficient a_t at time step t (1-based).
+    pub fn coeff(&self, t: usize) -> f32 {
+        match self {
+            MergeScheme::Avg => 1.0 / t as f32,
+            MergeScheme::Ema(a) => {
+                if t == 1 {
+                    1.0
+                } else {
+                    *a
+                }
+            }
+        }
+    }
+}
+
+/// Token-position layout of one packed sample (mirror of masks.Layout).
+#[derive(Debug, Clone)]
+pub struct Layout {
+    pub kind: Vec<i32>,
+    pub step: Vec<i32>,
+    pub comp_slot: Vec<i32>,
+    pub seq: usize,
+    pub t: usize,
+    pub comp_len: usize,
+    pub chunk_lens: Vec<usize>,
+    pub input_len: usize,
+}
+
+impl Layout {
+    pub fn n_tokens(&self) -> usize {
+        self.kind.iter().filter(|&&k| k != PAD).count()
+    }
+
+    /// First position of the input segment.
+    pub fn input_start(&self) -> usize {
+        self.kind.iter().position(|&k| k == INPUT).unwrap_or(self.seq)
+    }
+}
+
+/// Pack chunks (+ <COMP> tokens) and the input into `seq` positions.
+pub fn build_layout(
+    chunk_lens: &[usize],
+    comp_len: usize,
+    input_len: usize,
+    seq: usize,
+) -> Result<Layout> {
+    let mut kind = vec![PAD; seq];
+    let mut step = vec![0i32; seq];
+    let mut comp_slot = vec![0i32; seq];
+    let mut pos = 0usize;
+    for (j, &clen) in chunk_lens.iter().enumerate() {
+        let j = j as i32 + 1;
+        if pos + clen + comp_len > seq {
+            bail!("layout overflow: chunks need {} > seq {}", pos + clen + comp_len, seq);
+        }
+        for _ in 0..clen {
+            kind[pos] = CHUNK;
+            step[pos] = j;
+            pos += 1;
+        }
+        for s in 0..comp_len {
+            kind[pos] = COMP;
+            step[pos] = j;
+            comp_slot[pos] = s as i32 + 1;
+            pos += 1;
+        }
+    }
+    if pos + input_len > seq {
+        bail!("layout overflow: input needs {} > seq {}", pos + input_len, seq);
+    }
+    for _ in 0..input_len {
+        kind[pos] = INPUT;
+        pos += 1;
+    }
+    Ok(Layout {
+        kind,
+        step,
+        comp_slot,
+        seq,
+        t: chunk_lens.len(),
+        comp_len,
+        chunk_lens: chunk_lens.to_vec(),
+        input_len,
+    })
+}
+
+/// Closed-form merge weights w[g][j]: Mem(g) = Σ_{j<=g} w[g][j] h(j).
+pub fn merge_weights(t: usize, scheme: MergeScheme) -> Vec<Vec<f32>> {
+    let mut w = vec![vec![0.0f32; t + 1]; t + 1];
+    for g in 1..=t {
+        match scheme {
+            MergeScheme::Avg => {
+                for j in 1..=g {
+                    w[g][j] = 1.0 / g as f32;
+                }
+            }
+            MergeScheme::Ema(a) => {
+                for j in 1..=g {
+                    let aj = if j == 1 { 1.0 } else { a };
+                    w[g][j] = aj * (1.0 - a).powi((g - j) as i32);
+                }
+            }
+        }
+    }
+    w
+}
+
+/// Build (mask [S, M+S], P [M, S]) for one sample. Mirror of
+/// masks.build_masks — see that file for the semantics derivation.
+pub fn build_masks(
+    method: Method,
+    lay: &Layout,
+    mem_slots: usize,
+    scheme: MergeScheme,
+    pool: usize,
+) -> Result<(Tensor, Tensor)> {
+    let (s, m, t, cl) = (lay.seq, mem_slots, lay.t, lay.comp_len);
+    let pool = if pool == 0 { cl.max(1) } else { pool };
+    let mut mask = Tensor::zeros(&[s, m + s]);
+    let mut p = Tensor::zeros(&[m, s]);
+    let (kind, step, slot) = (&lay.kind, &lay.step, &lay.comp_slot);
+
+    // --- merge matrix -----------------------------------------------------
+    match method {
+        Method::CcmMerge => {
+            if t * cl > m {
+                bail!("merge needs {} slots > {}", t * cl, m);
+            }
+            let w = merge_weights(t, scheme);
+            for g in 1..=t {
+                for sp in 1..=cl {
+                    let row = (g - 1) * cl + (sp - 1);
+                    for j in 1..=g {
+                        let src = (0..s)
+                            .find(|&i| {
+                                kind[i] == COMP && step[i] == j as i32 && slot[i] == sp as i32
+                            })
+                            .ok_or_else(|| anyhow::anyhow!("missing comp ({j},{sp})"))?;
+                        p.set(&[row, src], w[g][j]);
+                    }
+                }
+            }
+        }
+        Method::Compressive => {
+            if t * pool > m {
+                bail!("compressive needs {} slots > {}", t * pool, m);
+            }
+            for g in 1..=t {
+                let src: Vec<usize> =
+                    (0..s).filter(|&i| kind[i] == CHUNK && step[i] == g as i32).collect();
+                let windows = split_windows(&src, pool.min(src.len()));
+                for (wi, wnd) in windows.iter().enumerate() {
+                    let row = (g - 1) * pool + wi;
+                    for &c in wnd {
+                        p.set(&[row, c], 1.0 / wnd.len() as f32);
+                    }
+                }
+            }
+        }
+        _ => {}
+    }
+
+    // Live compressive slots (short chunks fill fewer than `pool`).
+    let live: Vec<bool> = (0..m).map(|r| p.row(&[r]).iter().any(|&x| x != 0.0)).collect();
+
+    // --- attention mask ----------------------------------------------------
+    for i in 0..s {
+        let k = kind[i];
+        if k == PAD {
+            mask.set(&[i, m + i], 1.0); // inert but keeps softmax finite
+            continue;
+        }
+        let j = step[i] as usize;
+        let allow_tok = |mask: &mut Tensor, pred: &dyn Fn(usize) -> bool| {
+            for c in 0..s {
+                if pred(c) {
+                    mask.set(&[i, m + c], 1.0);
+                }
+            }
+        };
+        let self_causal = |c: usize| kind[c] == k && step[c] == step[i] && c <= i;
+        match method {
+            Method::Full => {
+                allow_tok(&mut mask, &|c| kind[c] != PAD && c <= i);
+            }
+            Method::NoContext => {
+                if k == INPUT {
+                    allow_tok(&mut mask, &|c| kind[c] == INPUT && c <= i);
+                } else {
+                    mask.set(&[i, m + i], 1.0);
+                }
+            }
+            Method::CcmConcat => {
+                allow_tok(&mut mask, &self_causal);
+                if k == COMP {
+                    allow_tok(&mut mask, &|c| kind[c] == CHUNK && step[c] == j as i32 && c <= i);
+                    allow_tok(&mut mask, &|c| kind[c] == COMP && (step[c] as usize) < j);
+                } else if k == CHUNK {
+                    allow_tok(&mut mask, &|c| kind[c] == COMP && (step[c] as usize) < j);
+                } else {
+                    allow_tok(&mut mask, &|c| kind[c] == COMP && (step[c] as usize) <= t);
+                }
+            }
+            Method::CcmMerge => {
+                allow_tok(&mut mask, &self_causal);
+                let group = |mask: &mut Tensor, g: usize| {
+                    for c in (g - 1) * cl..g * cl {
+                        mask.set(&[i, c], 1.0);
+                    }
+                };
+                if k == COMP {
+                    allow_tok(&mut mask, &|c| kind[c] == CHUNK && step[c] == j as i32 && c <= i);
+                    if j >= 2 {
+                        group(&mut mask, j - 1);
+                    }
+                } else if k == CHUNK {
+                    if j >= 2 {
+                        group(&mut mask, j - 1);
+                    }
+                } else if t >= 1 {
+                    group(&mut mask, t);
+                }
+            }
+            Method::Gist => {
+                allow_tok(&mut mask, &self_causal);
+                if k == COMP {
+                    allow_tok(&mut mask, &|c| kind[c] == CHUNK && step[c] == j as i32 && c <= i);
+                } else if k == INPUT {
+                    allow_tok(&mut mask, &|c| kind[c] == COMP && (step[c] as usize) <= t);
+                }
+            }
+            Method::Compressive => {
+                allow_tok(&mut mask, &self_causal);
+                let groups = |mask: &mut Tensor, upto: usize| {
+                    for g in 1..=upto {
+                        for c in (g - 1) * pool..g * pool {
+                            if live[c] {
+                                mask.set(&[i, c], 1.0);
+                            }
+                        }
+                    }
+                };
+                if k == CHUNK && j >= 2 {
+                    groups(&mut mask, j - 1);
+                } else if k == INPUT {
+                    groups(&mut mask, t);
+                }
+            }
+        }
+    }
+    Ok((mask, p))
+}
+
+fn split_windows(src: &[usize], n: usize) -> Vec<Vec<usize>> {
+    // Mirror of numpy.array_split: first (len % n) windows get one extra.
+    if n == 0 || src.is_empty() {
+        return vec![];
+    }
+    let base = src.len() / n;
+    let extra = src.len() % n;
+    let mut out = Vec::with_capacity(n);
+    let mut i = 0;
+    for w in 0..n {
+        let len = base + usize::from(w < extra);
+        out.push(src[i..i + len].to_vec());
+        i += len;
+    }
+    out
+}
+
+/// LoRA gate vector (1.0 where the conditional adapter fires).
+pub fn lora_gate(lay: &Layout, conditional: bool) -> Vec<f32> {
+    lay.kind
+        .iter()
+        .map(|&k| {
+            if conditional {
+                f32::from(k == COMP)
+            } else {
+                f32::from(k != PAD)
+            }
+        })
+        .collect()
+}
+
+/// comp_slot input vector (0 = normal token, k>=1 = <COMP> slot k).
+pub fn comp_slot_input(lay: &Layout) -> Vec<i32> {
+    lay.comp_slot.clone()
+}
+
+/// Absolute position ids over the packed layout.
+pub fn position_ids(lay: &Layout) -> Vec<i32> {
+    (0..lay.seq as i32).collect()
+}
+
+/// Loss mask marking the last `target_len` input positions.
+pub fn loss_mask_for_target(lay: &Layout, target_len: usize) -> Result<Vec<f32>> {
+    let inputs: Vec<usize> =
+        (0..lay.seq).filter(|&i| lay.kind[i] == INPUT).collect();
+    if target_len > inputs.len() {
+        bail!("target {} longer than input segment {}", target_len, inputs.len());
+    }
+    let mut m = vec![0.0f32; lay.seq];
+    for &i in &inputs[inputs.len() - target_len..] {
+        m[i] = 1.0;
+    }
+    Ok(m)
+}
+
+/// Verify the Rust builders against every golden case from the manifest.
+/// Returns the number of cases checked.
+pub fn verify_goldens(goldens: &[MaskGolden]) -> Result<usize> {
+    for g in goldens {
+        let method = Method::parse(&g.method)?;
+        let scheme = MergeScheme::parse(&g.scheme)?;
+        let lay = build_layout(&g.chunk_lens, g.comp_len, g.input_len, g.seq)?;
+        if lay.kind != g.kind || lay.step != g.step || lay.comp_slot != g.comp_slot {
+            bail!("layout mismatch for golden {}/{}", g.method, g.scheme);
+        }
+        let (mask, p) = build_masks(method, &lay, g.mem_slots, scheme, g.pool)?;
+        for (r, row) in g.mask_rows.iter().enumerate() {
+            for (c, ch) in row.bytes().enumerate() {
+                let want = f32::from(ch == b'1');
+                let got = mask.get(&[r, c]);
+                if got != want {
+                    bail!(
+                        "mask mismatch {}/{} at ({r},{c}): got {got}, want {want}",
+                        g.method,
+                        g.scheme
+                    );
+                }
+            }
+        }
+        let mut want_p = Tensor::zeros(&[g.mem_slots, g.seq]);
+        for &(r, c, v) in &g.p_nonzero {
+            want_p.set(&[r, c], v);
+        }
+        for r in 0..g.mem_slots {
+            for c in 0..g.seq {
+                let (a, b) = (p.get(&[r, c]), want_p.get(&[r, c]));
+                if (a - b).abs() > 1e-6 {
+                    bail!(
+                        "P mismatch {}/{} at ({r},{c}): got {a}, want {b}",
+                        g.method,
+                        g.scheme
+                    );
+                }
+            }
+        }
+    }
+    Ok(goldens.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_packs_consecutively() {
+        let lay = build_layout(&[3, 4], 2, 5, 24).unwrap();
+        assert_eq!(lay.n_tokens(), 3 + 2 + 4 + 2 + 5);
+        assert_eq!(&lay.kind[..5], &[CHUNK, CHUNK, CHUNK, COMP, COMP]);
+        assert_eq!(lay.input_start(), 11);
+        assert!(build_layout(&[30], 2, 5, 24).is_err());
+    }
+
+    #[test]
+    fn concat_input_sees_only_comp() {
+        let lay = build_layout(&[4, 4], 1, 4, 20).unwrap();
+        let (mask, _) = build_masks(Method::CcmConcat, &lay, 4, MergeScheme::Avg, 1).unwrap();
+        let i0 = lay.input_start();
+        for c in 0..lay.seq {
+            let allowed = mask.get(&[i0, 4 + c]) > 0.0;
+            let is_comp = lay.kind[c] == COMP;
+            let is_self = c == i0;
+            assert_eq!(allowed, is_comp || is_self, "col {c}");
+        }
+    }
+
+    #[test]
+    fn merge_group_weights_sum_to_one() {
+        let w = merge_weights(5, MergeScheme::Avg);
+        for g in 1..=5 {
+            let sum: f32 = w[g].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+        }
+        let w = merge_weights(5, MergeScheme::Ema(0.3));
+        for g in 1..=5 {
+            let sum: f32 = w[g].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "g={g} sum={sum}");
+        }
+    }
+
+    #[test]
+    fn merge_scheme_coeffs() {
+        assert_eq!(MergeScheme::Avg.coeff(1), 1.0);
+        assert_eq!(MergeScheme::Avg.coeff(4), 0.25);
+        assert_eq!(MergeScheme::Ema(0.3).coeff(1), 1.0);
+        assert_eq!(MergeScheme::Ema(0.3).coeff(9), 0.3);
+    }
+
+    #[test]
+    fn chunks_never_see_other_chunks_raw() {
+        for method in [Method::CcmConcat, Method::CcmMerge, Method::Gist, Method::Compressive] {
+            let cl = usize::from(method.uses_comp_tokens());
+            let lay = build_layout(&[4, 4, 4], cl, 4, 32).unwrap();
+            let (mask, _) = build_masks(method, &lay, 8, MergeScheme::Avg, 2).unwrap();
+            for i in 0..lay.seq {
+                if lay.kind[i] != CHUNK {
+                    continue;
+                }
+                for c in 0..lay.seq {
+                    if lay.kind[c] == CHUNK && lay.step[c] != lay.step[i] {
+                        assert_eq!(
+                            mask.get(&[i, 8 + c]),
+                            0.0,
+                            "{method:?}: chunk pos {i} sees raw chunk pos {c}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn loss_mask_counts() {
+        let lay = build_layout(&[3], 1, 6, 16).unwrap();
+        let m = loss_mask_for_target(&lay, 2).unwrap();
+        assert_eq!(m.iter().filter(|&&x| x > 0.0).count(), 2);
+        assert!(loss_mask_for_target(&lay, 7).is_err());
+    }
+
+    #[test]
+    fn gate_vectors() {
+        let lay = build_layout(&[3, 3], 2, 4, 20).unwrap();
+        let g = lora_gate(&lay, true);
+        assert_eq!(g.iter().filter(|&&x| x > 0.0).count(), 4);
+        let gu = lora_gate(&lay, false);
+        assert_eq!(gu.iter().filter(|&&x| x > 0.0).count(), lay.n_tokens());
+    }
+}

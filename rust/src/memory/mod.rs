@@ -1,0 +1,279 @@
+//! Compressed context memory stores — the runtime realisation of
+//! Mem(t) = g_update(Mem(t-1), h(t)) (paper Eq. 2).
+//!
+//! * `ConcatStore` — scalable memory: Mem(t) = [h(1); ...; h(t)]
+//!   (CCM-concat). Supports FIFO eviction for the streaming mode.
+//! * `MergeStore`  — fixed-size memory: Mem(t) = (1-a_t)Mem(t-1)+a_t h(t)
+//!   (CCM-merge, arithmetic or EMA coefficients).
+//!
+//! Buffers are laid out `[L, M, D]` exactly as the serving artifacts
+//! expect, so staging a batch is a contiguous copy per session.
+
+pub mod window;
+
+use anyhow::{bail, Result};
+
+use crate::masks::MergeScheme;
+
+/// Per-layer compressed KV h(t) returned by `compress_chunk`:
+/// `k`/`v` are `[L, comp_len, D]` row-major.
+#[derive(Debug, Clone)]
+pub struct CompressedChunk {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub comp_len: usize,
+}
+
+/// A `[L, M, D]` KV buffer pair with a valid prefix.
+#[derive(Debug, Clone)]
+pub struct MemBuffers {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub len: usize,
+    pub layers: usize,
+    pub slots: usize,
+    pub d_model: usize,
+}
+
+impl MemBuffers {
+    pub fn new(layers: usize, slots: usize, d_model: usize) -> MemBuffers {
+        MemBuffers {
+            k: vec![0.0; layers * slots * d_model],
+            v: vec![0.0; layers * slots * d_model],
+            len: 0,
+            layers,
+            slots,
+            d_model,
+        }
+    }
+
+    /// Bytes of live attention KV (the paper's context-memory metric).
+    pub fn kv_bytes(&self) -> usize {
+        2 * self.layers * self.len * self.d_model * 4
+    }
+
+    /// Copy `h` (`[L, cl, D]`) into slots `[dst, dst+cl)` of every layer.
+    fn write(&mut self, dst: usize, h_k: &[f32], h_v: &[f32], cl: usize) {
+        let (m, d) = (self.slots, self.d_model);
+        debug_assert_eq!(h_k.len(), self.layers * cl * d);
+        for l in 0..self.layers {
+            let src = l * cl * d;
+            let off = (l * m + dst) * d;
+            self.k[off..off + cl * d].copy_from_slice(&h_k[src..src + cl * d]);
+            self.v[off..off + cl * d].copy_from_slice(&h_v[src..src + cl * d]);
+        }
+    }
+
+    /// Blend `h` into slots `[0, cl)`: mem = (1-a)*mem + a*h.
+    fn blend(&mut self, h_k: &[f32], h_v: &[f32], cl: usize, a: f32) {
+        let (m, d) = (self.slots, self.d_model);
+        for l in 0..self.layers {
+            let src = l * cl * d;
+            let off = l * m * d;
+            for i in 0..cl * d {
+                self.k[off + i] = (1.0 - a) * self.k[off + i] + a * h_k[src + i];
+                self.v[off + i] = (1.0 - a) * self.v[off + i] + a * h_v[src + i];
+            }
+        }
+    }
+
+    /// Drop the oldest `n` slots (shift left) — streaming eviction.
+    fn evict_oldest(&mut self, n: usize) {
+        let n = n.min(self.len);
+        let (m, d) = (self.slots, self.d_model);
+        for l in 0..self.layers {
+            let off = l * m * d;
+            self.k.copy_within(off + n * d..off + self.len * d, off);
+            self.v.copy_within(off + n * d..off + self.len * d, off);
+        }
+        self.len -= n;
+    }
+}
+
+/// The g_update policy.
+#[derive(Debug, Clone)]
+pub enum UpdateKind {
+    Concat,
+    Merge(MergeScheme),
+}
+
+/// A session's compressed context memory.
+#[derive(Debug, Clone)]
+pub struct MemoryStore {
+    pub buffers: MemBuffers,
+    pub kind: UpdateKind,
+    /// Number of updates applied (the t in a_t).
+    pub t: usize,
+    pub comp_len: usize,
+}
+
+impl MemoryStore {
+    pub fn concat(layers: usize, slots: usize, d_model: usize, comp_len: usize) -> MemoryStore {
+        MemoryStore {
+            buffers: MemBuffers::new(layers, slots, d_model),
+            kind: UpdateKind::Concat,
+            t: 0,
+            comp_len,
+        }
+    }
+
+    pub fn merge(
+        layers: usize,
+        slots: usize,
+        d_model: usize,
+        comp_len: usize,
+        scheme: MergeScheme,
+    ) -> MemoryStore {
+        assert!(slots >= comp_len);
+        MemoryStore {
+            buffers: MemBuffers::new(layers, slots, d_model),
+            kind: UpdateKind::Merge(scheme),
+            t: 0,
+            comp_len,
+        }
+    }
+
+    /// Apply Mem(t) = g_update(Mem(t-1), h(t)).
+    pub fn update(&mut self, h: &CompressedChunk) -> Result<()> {
+        if h.comp_len != self.comp_len {
+            bail!("comp_len mismatch: {} != {}", h.comp_len, self.comp_len);
+        }
+        self.t += 1;
+        match self.kind {
+            UpdateKind::Concat => {
+                if self.buffers.len + h.comp_len > self.buffers.slots {
+                    bail!(
+                        "concat memory overflow: {} + {} > {} (evict first)",
+                        self.buffers.len,
+                        h.comp_len,
+                        self.buffers.slots
+                    );
+                }
+                let dst = self.buffers.len;
+                self.buffers.write(dst, &h.k, &h.v, h.comp_len);
+                self.buffers.len += h.comp_len;
+            }
+            UpdateKind::Merge(scheme) => {
+                let a = scheme.coeff(self.t);
+                self.buffers.blend(&h.k, &h.v, h.comp_len, a);
+                self.buffers.len = h.comp_len;
+            }
+        }
+        Ok(())
+    }
+
+    /// Free slots available before overflow (concat) — merge never grows.
+    pub fn free_slots(&self) -> usize {
+        match self.kind {
+            UpdateKind::Concat => self.buffers.slots - self.buffers.len,
+            UpdateKind::Merge(_) => usize::MAX,
+        }
+    }
+
+    /// Evict the oldest `n_chunks` compressed chunks (concat only).
+    pub fn evict_chunks(&mut self, n_chunks: usize) {
+        if matches!(self.kind, UpdateKind::Concat) {
+            self.buffers.evict_oldest(n_chunks * self.comp_len);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buffers.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buffers.len == 0
+    }
+
+    pub fn kv_bytes(&self) -> usize {
+        self.buffers.kv_bytes()
+    }
+
+    pub fn reset(&mut self) {
+        self.buffers.k.iter_mut().for_each(|x| *x = 0.0);
+        self.buffers.v.iter_mut().for_each(|x| *x = 0.0);
+        self.buffers.len = 0;
+        self.t = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chunk(layers: usize, cl: usize, d: usize, fill: f32) -> CompressedChunk {
+        CompressedChunk {
+            k: vec![fill; layers * cl * d],
+            v: vec![fill * 2.0; layers * cl * d],
+            comp_len: cl,
+        }
+    }
+
+    #[test]
+    fn concat_appends_in_order() {
+        let mut m = MemoryStore::concat(2, 6, 3, 2);
+        m.update(&chunk(2, 2, 3, 1.0)).unwrap();
+        m.update(&chunk(2, 2, 3, 2.0)).unwrap();
+        assert_eq!(m.len(), 4);
+        // Layer 0 slots: [1,1,  2,2, 0] x d
+        assert_eq!(m.buffers.k[0], 1.0);
+        assert_eq!(m.buffers.k[2 * 3], 2.0);
+        // Layer 1 offset: slot stride is 6*3.
+        assert_eq!(m.buffers.k[6 * 3], 1.0);
+        m.update(&chunk(2, 2, 3, 3.0)).unwrap();
+        assert!(m.update(&chunk(2, 2, 3, 4.0)).is_err(), "overflow detected");
+    }
+
+    #[test]
+    fn merge_is_cumulative_average() {
+        let mut m = MemoryStore::merge(1, 2, 1, 2, MergeScheme::Avg);
+        for (t, x) in [10.0f32, 20.0, 30.0].iter().enumerate() {
+            m.update(&chunk(1, 2, 1, *x)).unwrap();
+            assert_eq!(m.t, t + 1);
+        }
+        assert!((m.buffers.k[0] - 20.0).abs() < 1e-5); // mean(10,20,30)
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.kv_bytes(), 2 * 1 * 2 * 1 * 4);
+    }
+
+    #[test]
+    fn merge_ema_recurrence() {
+        let mut m = MemoryStore::merge(1, 1, 1, 1, MergeScheme::Ema(0.5));
+        m.update(&chunk(1, 1, 1, 8.0)).unwrap(); // a_1 = 1 -> 8
+        m.update(&chunk(1, 1, 1, 0.0)).unwrap(); // 0.5*8 = 4
+        m.update(&chunk(1, 1, 1, 2.0)).unwrap(); // 0.5*4+0.5*2 = 3
+        assert!((m.buffers.k[0] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn eviction_shifts_left() {
+        let mut m = MemoryStore::concat(2, 6, 2, 2);
+        m.update(&chunk(2, 2, 2, 1.0)).unwrap();
+        m.update(&chunk(2, 2, 2, 2.0)).unwrap();
+        m.update(&chunk(2, 2, 2, 3.0)).unwrap();
+        m.evict_chunks(1);
+        assert_eq!(m.len(), 4);
+        assert_eq!(m.buffers.k[0], 2.0);
+        assert_eq!(m.buffers.k[2 * 2], 3.0);
+        // Layer 1 shifted too.
+        assert_eq!(m.buffers.k[6 * 2], 2.0);
+    }
+
+    #[test]
+    fn kv_bytes_tracks_len() {
+        let mut m = MemoryStore::concat(4, 48, 128, 4);
+        assert_eq!(m.kv_bytes(), 0);
+        m.update(&chunk(4, 4, 128, 0.5)).unwrap();
+        assert_eq!(m.kv_bytes(), 2 * 4 * 4 * 128 * 4);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut m = MemoryStore::merge(1, 2, 2, 2, MergeScheme::Avg);
+        m.update(&chunk(1, 2, 2, 5.0)).unwrap();
+        m.reset();
+        assert_eq!(m.len(), 0);
+        assert_eq!(m.t, 0);
+        assert!(m.buffers.k.iter().all(|&x| x == 0.0));
+    }
+}

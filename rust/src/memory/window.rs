@@ -1,0 +1,236 @@
+//! Streaming KV-budget bookkeeping: sliding window with attention sink +
+//! compressed context memory (paper Figure 9).
+//!
+//! Tokens stream in one at a time under a hard KV budget. The layout is
+//! `[sink tokens | compressed memory slots | recent window]`. When the
+//! budget is hit, the oldest `compress_block` window tokens are handed to
+//! the compressor (CCM) or simply dropped (StreamingLLM baseline). For
+//! CCM-concat the memory itself is bounded: oldest compressed pairs are
+//! emitted FIFO.
+
+/// What the policy wants done with overflowing tokens.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Overflow {
+    /// Nothing to do yet.
+    None,
+    /// Compress these (oldest) window token blocks into memory, in order.
+    /// Enough blocks are emitted to restore the budget even after the
+    /// memory grows by `slots_per_compress` per block (cap-aware).
+    Compress(Vec<Vec<i32>>),
+    /// Drop them without compression (StreamingLLM).
+    Drop(usize),
+}
+
+/// Streaming window policy + state.
+#[derive(Debug, Clone)]
+pub struct StreamWindow {
+    /// First tokens of the stream, pinned (attention sink).
+    pub sink: Vec<i32>,
+    /// Recent raw tokens.
+    pub window: Vec<i32>,
+    /// Hard cap on sink + mem_slots + window length (the KV budget).
+    pub max_kv: usize,
+    /// Slots currently held by compressed memory (updated by the caller
+    /// after each compression, since CCM-concat grows then saturates).
+    pub mem_slots_used: usize,
+    /// Cap on compressed-memory slots (CCM size).
+    pub mem_slots_max: usize,
+    /// How many oldest tokens are compressed per compression step.
+    pub compress_block: usize,
+    /// Memory slots one compression adds (the <COMP> length).
+    pub slots_per_compress: usize,
+    pub n_sink: usize,
+    /// Total tokens ever seen (diagnostics).
+    pub seen: u64,
+    compress: bool,
+}
+
+impl StreamWindow {
+    /// CCM streaming window (compresses overflow).
+    pub fn ccm(
+        max_kv: usize,
+        mem_slots_max: usize,
+        compress_block: usize,
+        slots_per_compress: usize,
+        n_sink: usize,
+    ) -> Self {
+        assert!(
+            max_kv > n_sink + mem_slots_max,
+            "budget {max_kv} cannot hold sink {n_sink} + memory {mem_slots_max}"
+        );
+        StreamWindow {
+            sink: Vec::new(),
+            window: Vec::new(),
+            max_kv,
+            mem_slots_used: 0,
+            mem_slots_max,
+            compress_block,
+            slots_per_compress,
+            n_sink,
+            seen: 0,
+            compress: true,
+        }
+    }
+
+    /// StreamingLLM baseline (drops overflow). To keep the comparison
+    /// budget-fair, the baseline gets the memory slots back as window.
+    pub fn streaming_llm(max_kv: usize, n_sink: usize) -> Self {
+        StreamWindow {
+            sink: Vec::new(),
+            window: Vec::new(),
+            max_kv,
+            mem_slots_used: 0,
+            mem_slots_max: 0,
+            compress_block: 0,
+            slots_per_compress: 0,
+            n_sink,
+            seen: 0,
+            compress: false,
+        }
+    }
+
+    /// Current KV size in token-equivalents (sink + memory + window).
+    pub fn kv_size(&self) -> usize {
+        self.sink.len() + self.mem_slots_used + self.window.len()
+    }
+
+    /// Push one token; returns what to do about overflow (at most one
+    /// action per push — callers loop if they push many tokens).
+    pub fn push(&mut self, tok: i32) -> Overflow {
+        self.seen += 1;
+        if self.sink.len() < self.n_sink {
+            self.sink.push(tok);
+            return Overflow::None;
+        }
+        self.window.push(tok);
+        if self.kv_size() <= self.max_kv {
+            return Overflow::None;
+        }
+        if self.compress {
+            // Emit enough blocks to restore the budget even after the
+            // memory grows (capped at mem_slots_max) per block.
+            let mut blocks = Vec::new();
+            let mut mem_sim = self.mem_slots_used;
+            while self.sink.len() + mem_sim + self.window.len() > self.max_kv
+                && !self.window.is_empty()
+            {
+                let n = self.compress_block.min(self.window.len());
+                blocks.push(self.window.drain(..n).collect());
+                mem_sim = (mem_sim + self.slots_per_compress).min(self.mem_slots_max);
+            }
+            Overflow::Compress(blocks)
+        } else {
+            let n = (self.kv_size() - self.max_kv).min(self.window.len());
+            self.window.drain(..n);
+            Overflow::Drop(n)
+        }
+    }
+
+    /// Record a memory update after a compression step; returns how many
+    /// oldest memory *slots* must be evicted to stay within mem_slots_max
+    /// (CCM-concat emits oldest compressed pairs, Figure 9).
+    pub fn note_compressed(&mut self, new_slots: usize) -> usize {
+        self.mem_slots_used += new_slots;
+        if self.mem_slots_used > self.mem_slots_max {
+            let evict = self.mem_slots_used - self.mem_slots_max;
+            self.mem_slots_used = self.mem_slots_max;
+            evict
+        } else {
+            0
+        }
+    }
+
+    /// Budget-fair window cap for the baseline comparison: StreamingLLM
+    /// may hold this many raw tokens when CCM holds `ccm_mem` slots.
+    pub fn equal_budget_window(max_kv: usize, n_sink: usize) -> usize {
+        max_kv - n_sink
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sink_fills_first() {
+        let mut w = StreamWindow::ccm(16, 4, 4, 1, 2);
+        assert_eq!(w.push(10), Overflow::None);
+        assert_eq!(w.push(11), Overflow::None);
+        assert_eq!(w.sink, vec![10, 11]);
+        assert!(w.window.is_empty());
+    }
+
+    #[test]
+    fn ccm_compresses_oldest_blocks() {
+        let mut w = StreamWindow::ccm(9, 2, 3, 1, 1);
+        let mut saw_compress = false;
+        for t in 0..30 {
+            match w.push(t) {
+                Overflow::Compress(blocks) => {
+                    saw_compress = true;
+                    for b in blocks {
+                        assert!(!b.is_empty() && b.len() <= 3);
+                        w.note_compressed(1);
+                        assert!(w.mem_slots_used <= w.mem_slots_max);
+                    }
+                    assert!(w.kv_size() <= w.max_kv, "kv {} > {}", w.kv_size(), w.max_kv);
+                }
+                Overflow::None => {}
+                Overflow::Drop(_) => panic!("ccm never drops"),
+            }
+        }
+        assert!(saw_compress && w.mem_slots_used > 0);
+    }
+
+    #[test]
+    fn concat_memory_saturates_and_evicts() {
+        let mut w = StreamWindow::ccm(64, 4, 8, 2, 0);
+        assert_eq!(w.note_compressed(2), 0);
+        assert_eq!(w.note_compressed(2), 0);
+        assert_eq!(w.note_compressed(2), 2); // over 4-slot cap -> evict 2
+        assert_eq!(w.mem_slots_used, 4);
+    }
+
+    #[test]
+    fn streaming_llm_drops_to_budget() {
+        let mut w = StreamWindow::streaming_llm(6, 2);
+        for t in 0..30 {
+            match w.push(t) {
+                Overflow::Drop(n) => assert!(n >= 1),
+                Overflow::None => {}
+                Overflow::Compress(_) => panic!("baseline never compresses"),
+            }
+            assert!(w.kv_size() <= 6);
+        }
+        assert_eq!(w.sink, vec![0, 1]); // sink pinned forever
+        assert_eq!(w.window.len(), 4);
+        assert_eq!(*w.window.last().unwrap(), 29);
+    }
+
+    #[test]
+    fn kv_budget_invariant_under_random_ops() {
+        crate::util::proptest::check("stream-budget", 50, |rng| {
+            let cap = rng.range(1, 8);
+            let sink = rng.range(0, 4);
+            let max_kv = sink + cap + rng.range(4, 48);
+            let block = rng.range(1, 6);
+            let spc = rng.range(1, cap + 1);
+            let mut w = StreamWindow::ccm(max_kv, cap, block, spc, sink);
+            for t in 0..rng.range(50, 300) {
+                if let Overflow::Compress(blocks) = w.push(t as i32) {
+                    crate::prop_assert!(!blocks.is_empty(), "empty compress action");
+                    for b in blocks {
+                        crate::prop_assert!(!b.is_empty(), "empty block");
+                        w.note_compressed(spc);
+                    }
+                }
+                crate::prop_assert!(
+                    w.kv_size() <= max_kv,
+                    "budget violated: {} > {max_kv}",
+                    w.kv_size()
+                );
+            }
+            Ok(())
+        });
+    }
+}

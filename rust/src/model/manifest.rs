@@ -1,0 +1,270 @@
+//! Manifest: the single source of truth emitted by `python/compile/aot.py`.
+//!
+//! Carries the model + scenario configuration, the flat parameter
+//! layouts, per-artifact I/O signatures, and golden mask vectors used to
+//! cross-check `rust/src/masks` against `python/compile/masks.py`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_pos: usize,
+    pub lora_rank: usize,
+    pub lora_alpha: f32,
+    pub pad_id: i32,
+    pub bos_id: i32,
+    pub sep_id: i32,
+    pub comp_id: i32,
+    pub d_head: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ScenarioConfig {
+    pub t_max: usize,
+    pub chunk_max: usize,
+    pub comp_len_max: usize,
+    pub input_max: usize,
+    pub seq_train: usize,
+    pub mem_slots: usize,
+    pub batch_train: usize,
+    pub infer_batches: Vec<usize>,
+    pub decode_cache: usize,
+    pub rmt_unroll: usize,
+    pub rmt_mem: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct LayoutEntry {
+    pub name: String,
+    pub offset: usize,
+    pub size: usize,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamLayout {
+    pub total: usize,
+    pub entries: Vec<LayoutEntry>,
+}
+
+impl ParamLayout {
+    pub fn entry(&self, name: &str) -> Result<&LayoutEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .with_context(|| format!("no param entry {name:?}"))
+    }
+
+    /// Slice a named parameter out of a flat vector.
+    pub fn slice<'a>(&self, vec: &'a [f32], name: &str) -> Result<&'a [f32]> {
+        let e = self.entry(name)?;
+        Ok(&vec[e.offset..e.offset + e.size])
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSig {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSig {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// One golden mask case from python/compile/masks.py.
+#[derive(Debug, Clone)]
+pub struct MaskGolden {
+    pub method: String,
+    pub scheme: String,
+    pub chunk_lens: Vec<usize>,
+    pub comp_len: usize,
+    pub pool: usize,
+    pub input_len: usize,
+    pub seq: usize,
+    pub mem_slots: usize,
+    pub kind: Vec<i32>,
+    pub step: Vec<i32>,
+    pub comp_slot: Vec<i32>,
+    pub mask_rows: Vec<String>,
+    /// (row, col, weight) nonzeros of the merge matrix P.
+    pub p_nonzero: Vec<(usize, usize, f32)>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config_name: String,
+    pub dir: PathBuf,
+    pub model: ModelConfig,
+    pub scenario: ScenarioConfig,
+    pub base_layout: ParamLayout,
+    pub lora_layout: ParamLayout,
+    pub artifacts: Vec<ArtifactSig>,
+    pub mask_goldens: Vec<MaskGolden>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
+        let j = Json::parse(&src).with_context(|| format!("parsing {path:?}"))?;
+        Self::from_json(&j, dir)
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSig> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))
+    }
+
+    fn from_json(j: &Json, dir: &Path) -> Result<Manifest> {
+        let cfg = j.get("config")?;
+        let m = cfg.get("model")?;
+        let model = ModelConfig {
+            name: m.get("name")?.str()?.to_string(),
+            vocab: m.get("vocab")?.usize()?,
+            d_model: m.get("d_model")?.usize()?,
+            n_layers: m.get("n_layers")?.usize()?,
+            n_heads: m.get("n_heads")?.usize()?,
+            d_ff: m.get("d_ff")?.usize()?,
+            max_pos: m.get("max_pos")?.usize()?,
+            lora_rank: m.get("lora_rank")?.usize()?,
+            lora_alpha: m.get("lora_alpha")?.f64()? as f32,
+            pad_id: m.get("pad_id")?.i64()? as i32,
+            bos_id: m.get("bos_id")?.i64()? as i32,
+            sep_id: m.get("sep_id")?.i64()? as i32,
+            comp_id: m.get("comp_id")?.i64()? as i32,
+            d_head: m.get("d_head")?.usize()?,
+        };
+        let s = cfg.get("scenario")?;
+        let scenario = ScenarioConfig {
+            t_max: s.get("t_max")?.usize()?,
+            chunk_max: s.get("chunk_max")?.usize()?,
+            comp_len_max: s.get("comp_len_max")?.usize()?,
+            input_max: s.get("input_max")?.usize()?,
+            seq_train: s.get("seq_train")?.usize()?,
+            mem_slots: s.get("mem_slots")?.usize()?,
+            batch_train: s.get("batch_train")?.usize()?,
+            infer_batches: s.get("infer_batches")?.usize_vec()?,
+            decode_cache: s.get("decode_cache")?.usize()?,
+            rmt_unroll: s.get("rmt_unroll")?.usize()?,
+            rmt_mem: s.get("rmt_mem")?.usize()?,
+        };
+
+        let parse_layout = |v: &Json| -> Result<ParamLayout> {
+            let mut entries = Vec::new();
+            for e in v.get("entries")?.arr()? {
+                entries.push(LayoutEntry {
+                    name: e.get("name")?.str()?.to_string(),
+                    offset: e.get("offset")?.usize()?,
+                    size: e.get("size")?.usize()?,
+                    shape: e.get("shape")?.usize_vec()?,
+                });
+            }
+            Ok(ParamLayout { total: v.get("total")?.usize()?, entries })
+        };
+        let params = j.get("params")?;
+        let base_layout = parse_layout(params.get("base")?)?;
+        let lora_layout = parse_layout(params.get("lora")?)?;
+
+        let parse_sig = |v: &Json| -> Result<TensorSig> {
+            Ok(TensorSig {
+                name: v.opt("name").map(|n| n.str().unwrap_or("").to_string()).unwrap_or_default(),
+                dtype: v.get("dtype")?.str()?.to_string(),
+                shape: v.get("shape")?.usize_vec()?,
+            })
+        };
+        let mut artifacts = Vec::new();
+        for a in j.get("artifacts")?.arr()? {
+            artifacts.push(ArtifactSig {
+                name: a.get("name")?.str()?.to_string(),
+                file: a.get("file")?.str()?.to_string(),
+                inputs: a.get("inputs")?.arr()?.iter().map(&parse_sig).collect::<Result<_>>()?,
+                outputs: a.get("outputs")?.arr()?.iter().map(&parse_sig).collect::<Result<_>>()?,
+            });
+        }
+
+        let mut mask_goldens = Vec::new();
+        for g in j.get("mask_goldens")?.arr()? {
+            let ivec = |key: &str| -> Result<Vec<i32>> {
+                g.get(key)?.arr()?.iter().map(|v| Ok(v.i64()? as i32)).collect()
+            };
+            let mut p_nonzero = Vec::new();
+            for triple in g.get("p_nonzero")?.arr()? {
+                let t = triple.arr()?;
+                if t.len() != 3 {
+                    bail!("bad p_nonzero triple");
+                }
+                p_nonzero.push((t[0].usize()?, t[1].usize()?, t[2].f64()? as f32));
+            }
+            mask_goldens.push(MaskGolden {
+                method: g.get("method")?.str()?.to_string(),
+                scheme: g.get("scheme")?.str()?.to_string(),
+                chunk_lens: g.get("chunk_lens")?.usize_vec()?,
+                comp_len: g.get("comp_len")?.usize()?,
+                pool: g.get("pool")?.usize()?,
+                input_len: g.get("input_len")?.usize()?,
+                seq: g.get("seq")?.usize()?,
+                mem_slots: g.get("mem_slots")?.usize()?,
+                kind: ivec("kind")?,
+                step: ivec("step")?,
+                comp_slot: ivec("comp_slot")?,
+                mask_rows: g
+                    .get("mask_rows")?
+                    .arr()?
+                    .iter()
+                    .map(|r| Ok(r.str()?.to_string()))
+                    .collect::<Result<_>>()?,
+                p_nonzero,
+            });
+        }
+
+        Ok(Manifest {
+            config_name: j.get("config_name")?.str()?.to_string(),
+            dir: dir.to_path_buf(),
+            model,
+            scenario,
+            base_layout,
+            lora_layout,
+            artifacts,
+            mask_goldens,
+        })
+    }
+}
+
+/// Default artifact directory for a named config.
+pub fn artifact_dir(config: &str) -> PathBuf {
+    if let Ok(root) = std::env::var("CCM_ARTIFACTS") {
+        return PathBuf::from(root).join(config);
+    }
+    // Walk up from CWD looking for artifacts/<config>/manifest.json so the
+    // binary works from the repo root, rust/, or target dirs.
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    for _ in 0..5 {
+        let cand = dir.join("artifacts").join(config);
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            break;
+        }
+    }
+    PathBuf::from("artifacts").join(config)
+}

@@ -1,0 +1,53 @@
+//! Model-side substrate: the manifest emitted by the compile path, flat
+//! parameter storage + checkpoints, and Adam optimizer state buffers.
+
+pub mod manifest;
+pub mod store;
+
+pub use manifest::{artifact_dir, Manifest};
+pub use store::{Checkpoint, ParamVec};
+
+/// Adam moment buffers threaded through the train-step artifacts.
+#[derive(Debug, Clone)]
+pub struct AdamState {
+    pub mu: Vec<f32>,
+    pub nu: Vec<f32>,
+    pub step: i32,
+}
+
+impl AdamState {
+    pub fn new(n: usize) -> AdamState {
+        AdamState { mu: vec![0.0; n], nu: vec![0.0; n], step: 0 }
+    }
+}
+
+/// Cosine learning-rate schedule with linear warmup (paper recipe:
+/// cosine decay; warmup stabilises the tiny-model runs).
+pub fn cosine_lr(step: usize, total: usize, base: f32, warmup: usize) -> f32 {
+    if total == 0 {
+        return base;
+    }
+    if step < warmup {
+        return base * (step as f32 + 1.0) / warmup as f32;
+    }
+    let t = (step - warmup) as f32 / (total.saturating_sub(warmup)).max(1) as f32;
+    0.5 * base * (1.0 + (std::f32::consts::PI * t.min(1.0)).cos())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_schedule_shape() {
+        let base = 3e-4;
+        assert!(cosine_lr(0, 100, base, 10) < base * 0.2);
+        let mid = cosine_lr(55, 100, base, 10);
+        assert!(mid < base && mid > 0.0);
+        assert!(cosine_lr(99, 100, base, 10) < base * 0.1);
+        // Monotone decay after warmup.
+        let a = cosine_lr(20, 100, base, 10);
+        let b = cosine_lr(60, 100, base, 10);
+        assert!(a > b);
+    }
+}

@@ -1,0 +1,254 @@
+//! Parameter store: flat f32 vectors + checkpoint I/O.
+//!
+//! The base model and the compression adapter (conditional LoRA +
+//! <COMP> embeddings) each live in one flat buffer whose layout comes
+//! from the manifest. Checkpoints are a simple versioned binary format
+//! (magic, name, layout checksum, f32 LE payload) — no external deps.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{Manifest, ParamLayout};
+use crate::util::rng::Rng;
+
+const MAGIC: &[u8; 8] = b"CCMCKPT1";
+
+/// A flat parameter vector tied to a layout.
+#[derive(Debug, Clone)]
+pub struct ParamVec {
+    pub data: Vec<f32>,
+}
+
+impl ParamVec {
+    pub fn zeros(layout: &ParamLayout) -> ParamVec {
+        ParamVec { data: vec![0.0; layout.total] }
+    }
+
+    /// Paper-style init: normal(0, 0.02) for matrices/embeddings, ones for
+    /// norm scales, zeros for LoRA B (so the adapter starts as identity).
+    pub fn init(layout: &ParamLayout, rng: &mut Rng, scale: f32) -> ParamVec {
+        let mut v = vec![0.0f32; layout.total];
+        for e in &layout.entries {
+            let dst = &mut v[e.offset..e.offset + e.size];
+            if e.name.contains("ln") || e.name.contains("norm") {
+                dst.iter_mut().for_each(|x| *x = 1.0);
+            } else if e.name.contains("lora_") && e.name.ends_with("_b") {
+                // B starts at zero: LoRA contributes nothing until trained.
+            } else {
+                dst.iter_mut().for_each(|x| *x = rng.normal() * scale);
+            }
+        }
+        ParamVec { data: v }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+/// Everything a trained system needs at serve time.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub base: ParamVec,
+    pub lora: ParamVec,
+}
+
+impl Checkpoint {
+    pub fn init(manifest: &Manifest, seed: u64) -> Checkpoint {
+        let mut rng = Rng::new(seed);
+        Checkpoint {
+            base: ParamVec::init(&manifest.base_layout, &mut rng, 0.02),
+            lora: ParamVec::init(&manifest.lora_layout, &mut rng, 0.02),
+        }
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+        f.write_all(MAGIC)?;
+        write_vec(&mut f, &self.base.data)?;
+        write_vec(&mut f, &self.lora.data)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path, manifest: &Manifest) -> Result<Checkpoint> {
+        let mut f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?}: not a CCM checkpoint");
+        }
+        let base = read_vec(&mut f)?;
+        let lora = read_vec(&mut f)?;
+        if base.len() != manifest.base_layout.total {
+            bail!(
+                "{path:?}: base params {} != manifest layout {} (stale checkpoint?)",
+                base.len(),
+                manifest.base_layout.total
+            );
+        }
+        if lora.len() != manifest.lora_layout.total {
+            bail!("{path:?}: lora params {} != layout {}", lora.len(), manifest.lora_layout.total);
+        }
+        Ok(Checkpoint { base: ParamVec { data: base }, lora: ParamVec { data: lora } })
+    }
+}
+
+fn write_vec(f: &mut impl Write, v: &[f32]) -> Result<()> {
+    f.write_all(&(v.len() as u64).to_le_bytes())?;
+    // Bulk byte-cast (f32 LE on all supported platforms).
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) };
+    f.write_all(bytes)?;
+    Ok(())
+}
+
+fn read_vec(f: &mut impl Read) -> Result<Vec<f32>> {
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8)?;
+    let n = u64::from_le_bytes(len8) as usize;
+    if n > (1 << 31) {
+        bail!("checkpoint vector too large: {n}");
+    }
+    let mut bytes = vec![0u8; n * 4];
+    f.read_exact(&mut bytes)?;
+    let mut out = vec![0f32; n];
+    for (i, c) in bytes.chunks_exact(4).enumerate() {
+        out[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+    }
+    Ok(out)
+}
+
+/// Gather embedding rows from the flat base vector (used by the RMT
+/// baseline, which feeds soft embeddings into `rmt_forward`).
+pub fn gather_embeddings(
+    base: &[f32],
+    layout: &ParamLayout,
+    tokens: &[i32],
+    d_model: usize,
+) -> Result<Vec<f32>> {
+    let emb = layout.slice(base, "tok_emb")?;
+    let vocab = layout.entry("tok_emb")?.shape[0];
+    let mut out = vec![0f32; tokens.len() * d_model];
+    for (i, &t) in tokens.iter().enumerate() {
+        let t = t as usize;
+        if t >= vocab {
+            bail!("token id {t} out of vocab {vocab}");
+        }
+        out[i * d_model..(i + 1) * d_model].copy_from_slice(&emb[t * d_model..(t + 1) * d_model]);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::{LayoutEntry, ParamLayout};
+
+    fn toy_layout() -> ParamLayout {
+        ParamLayout {
+            total: 10,
+            entries: vec![
+                LayoutEntry { name: "tok_emb".into(), offset: 0, size: 6, shape: vec![3, 2] },
+                LayoutEntry { name: "ln1".into(), offset: 6, size: 2, shape: vec![2] },
+                LayoutEntry {
+                    name: "lora_q_b".into(),
+                    offset: 8,
+                    size: 2,
+                    shape: vec![1, 2],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn init_respects_kinds() {
+        let lay = toy_layout();
+        let v = ParamVec::init(&lay, &mut Rng::new(1), 0.02);
+        assert!(v.data[..6].iter().any(|&x| x != 0.0));
+        assert_eq!(&v.data[6..8], &[1.0, 1.0]);
+        assert_eq!(&v.data[8..10], &[0.0, 0.0]); // lora B zero-init
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("ccm-test-{}", std::process::id()));
+        let path = dir.join("ck.bin");
+        let lay = toy_layout();
+        let ck = Checkpoint {
+            base: ParamVec::init(&lay, &mut Rng::new(2), 0.02),
+            lora: ParamVec { data: vec![1.5; 4] },
+        };
+        ck.save(&path).unwrap();
+        // Fake manifest just for size checks.
+        let mut mani_lay = lay.clone();
+        mani_lay.total = 10;
+        let manifest = fake_manifest(mani_lay.clone(), ParamLayout { total: 4, entries: vec![] });
+        let back = Checkpoint::load(&path, &manifest).unwrap();
+        assert_eq!(back.base.data, ck.base.data);
+        assert_eq!(back.lora.data, ck.lora.data);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gather_embeddings_rows() {
+        let lay = toy_layout();
+        let base: Vec<f32> = (0..10).map(|x| x as f32).collect();
+        let out = gather_embeddings(&base, &lay, &[2, 0], 2).unwrap();
+        assert_eq!(out, vec![4.0, 5.0, 0.0, 1.0]);
+        assert!(gather_embeddings(&base, &lay, &[9], 2).is_err());
+    }
+
+    fn fake_manifest(base: ParamLayout, lora: ParamLayout) -> crate::model::manifest::Manifest {
+        use crate::model::manifest::*;
+        Manifest {
+            config_name: "toy".into(),
+            dir: std::path::PathBuf::from("."),
+            model: ModelConfig {
+                name: "toy".into(),
+                vocab: 3,
+                d_model: 2,
+                n_layers: 1,
+                n_heads: 1,
+                d_ff: 2,
+                max_pos: 8,
+                lora_rank: 1,
+                lora_alpha: 2.0,
+                pad_id: 0,
+                bos_id: 1,
+                sep_id: 2,
+                comp_id: 3,
+                d_head: 2,
+            },
+            scenario: ScenarioConfig {
+                t_max: 2,
+                chunk_max: 4,
+                comp_len_max: 1,
+                input_max: 4,
+                seq_train: 16,
+                mem_slots: 2,
+                batch_train: 1,
+                infer_batches: vec![1],
+                decode_cache: 8,
+                rmt_unroll: 1,
+                rmt_mem: 1,
+            },
+            base_layout: base,
+            lora_layout: lora,
+            artifacts: vec![],
+            mask_goldens: vec![],
+        }
+    }
+}

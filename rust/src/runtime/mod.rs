@@ -1,0 +1,228 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the serving/training hot paths.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, CPU). Executables are
+//! compiled lazily on first use and cached for the process lifetime; the
+//! signature from the manifest is validated against every call in debug
+//! builds so shape bugs surface at the boundary, not inside XLA.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::model::manifest::{ArtifactSig, Manifest};
+use crate::tensor::{IntTensor, Tensor};
+
+/// Host value staged into an artifact call.
+#[derive(Debug, Clone)]
+pub enum Value {
+    F32(Tensor),
+    I32(IntTensor),
+}
+
+impl Value {
+    pub fn scalar_f32(v: f32) -> Value {
+        Value::F32(Tensor::scalar(v))
+    }
+
+    pub fn scalar_i32(v: i32) -> Value {
+        Value::I32(IntTensor::scalar(v))
+    }
+
+    pub fn vec_f32(shape: &[usize], data: Vec<f32>) -> Result<Value> {
+        Ok(Value::F32(Tensor::from_vec(shape, data)?))
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => &t.shape,
+            Value::I32(t) => &t.shape,
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Value::F32(_) => "float32",
+            Value::I32(_) => "int32",
+        }
+    }
+
+    fn to_literal(&self) -> Result<Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        Ok(match self {
+            Value::F32(t) => Literal::vec1(&t.data).reshape(&dims)?,
+            Value::I32(t) => Literal::vec1(&t.data).reshape(&dims)?,
+        })
+    }
+}
+
+/// Execution statistics (feeds the coordinator metrics + §Perf numbers).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub calls: HashMap<String, (u64, f64)>, // name -> (count, total_ms)
+    pub compile_ms: HashMap<String, f64>,
+}
+
+impl RuntimeStats {
+    pub fn record(&mut self, name: &str, ms: f64) {
+        let e = self.calls.entry(name.to_string()).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += ms;
+    }
+
+    pub fn report(&self) -> Vec<(String, u64, f64)> {
+        let mut rows: Vec<_> =
+            self.calls.iter().map(|(k, (n, ms))| (k.clone(), *n, ms / *n as f64)).collect();
+        rows.sort_by(|a, b| a.0.cmp(&b.0));
+        rows
+    }
+}
+
+/// The runtime: one PJRT CPU client + compiled-executable cache.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: PjRtClient,
+    executables: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    pub stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Load a runtime for one artifact config directory.
+    pub fn load(manifest: Manifest) -> Result<Runtime> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            manifest,
+            client,
+            executables: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn from_config(config: &str) -> Result<Runtime> {
+        let dir = crate::model::artifact_dir(config);
+        let manifest = Manifest::load(&dir)?;
+        Self::load(manifest)
+    }
+
+    /// Compile (or fetch cached) executable for a named artifact.
+    pub fn executable(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(e) = self.executables.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let sig = self.manifest.artifact(name)?;
+        let path = self.manifest.dir.join(&sig.file);
+        let t = Instant::now();
+        let proto = HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        let ms = t.elapsed().as_secs_f64() * 1e3;
+        crate::debug!("compiled {name} in {ms:.0} ms");
+        self.stats.borrow_mut().compile_ms.insert(name.to_string(), ms);
+        let rc = Rc::new(exe);
+        self.executables.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Pre-compile a set of artifacts (avoids first-request latency).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact; returns the decomposed output tuple.
+    pub fn execute(&self, name: &str, inputs: &[Value]) -> Result<Vec<Literal>> {
+        let sig = self.manifest.artifact(name)?;
+        validate_inputs(sig, inputs)?;
+        let exe = self.executable(name)?;
+        let literals: Vec<Literal> =
+            inputs.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
+        let t = Instant::now();
+        let result = exe.execute::<Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        self.stats.borrow_mut().record(name, t.elapsed().as_secs_f64() * 1e3);
+        let mut tuple = tuple;
+        Ok(tuple.decompose_tuple()?)
+    }
+
+    /// Execute and convert every output to host f32 tensors (casts i32
+    /// outputs — none of our artifacts emit integer outputs).
+    pub fn execute_f32(&self, name: &str, inputs: &[Value]) -> Result<Vec<Tensor>> {
+        let sig = self.manifest.artifact(name)?;
+        let shapes: Vec<Vec<usize>> = sig.outputs.iter().map(|o| o.shape.clone()).collect();
+        let outs = self.execute(name, inputs)?;
+        let mut tensors = Vec::with_capacity(outs.len());
+        for (lit, shape) in outs.iter().zip(shapes) {
+            let data = lit.to_vec::<f32>()?;
+            tensors.push(Tensor::from_vec(&shape, data)?);
+        }
+        Ok(tensors)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+fn validate_inputs(sig: &ArtifactSig, inputs: &[Value]) -> Result<()> {
+    if inputs.len() != sig.inputs.len() {
+        bail!("{}: {} inputs given, signature wants {}", sig.name, inputs.len(), sig.inputs.len());
+    }
+    for (i, (v, s)) in inputs.iter().zip(&sig.inputs).enumerate() {
+        if v.shape() != s.shape.as_slice() {
+            bail!(
+                "{} input #{i} ({}): shape {:?} != signature {:?}",
+                sig.name,
+                s.name,
+                v.shape(),
+                s.shape
+            );
+        }
+        if v.dtype() != s.dtype {
+            bail!("{} input #{i} ({}): dtype {} != {}", sig.name, s.name, v.dtype(), s.dtype);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_shapes_and_dtypes() {
+        let v = Value::scalar_f32(1.0);
+        assert_eq!(v.shape(), &[] as &[usize]);
+        assert_eq!(v.dtype(), "float32");
+        let v = Value::I32(IntTensor::zeros(&[2, 3]));
+        assert_eq!(v.shape(), &[2, 3]);
+        assert_eq!(v.dtype(), "int32");
+    }
+
+    #[test]
+    fn validate_catches_mismatches() {
+        let sig = ArtifactSig {
+            name: "t".into(),
+            file: "t.hlo.txt".into(),
+            inputs: vec![crate::model::manifest::TensorSig {
+                name: "x".into(),
+                dtype: "float32".into(),
+                shape: vec![2],
+            }],
+            outputs: vec![],
+        };
+        assert!(validate_inputs(&sig, &[]).is_err());
+        let bad_shape = Value::F32(Tensor::zeros(&[3]));
+        assert!(validate_inputs(&sig, &[bad_shape]).is_err());
+        let bad_dtype = Value::I32(IntTensor::zeros(&[2]));
+        assert!(validate_inputs(&sig, &[bad_dtype]).is_err());
+        let ok = Value::F32(Tensor::zeros(&[2]));
+        assert!(validate_inputs(&sig, &[ok]).is_ok());
+    }
+}

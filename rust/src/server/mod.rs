@@ -1,0 +1,331 @@
+//! JSON-lines TCP serving front-end.
+//!
+//! Connection threads parse newline-delimited JSON requests and forward
+//! them over a channel to the single executor thread that owns the PJRT
+//! runtime (XLA executables are not Sync; one executor per device is the
+//! standard topology). The executor batches across connections via the
+//! coordinator's dynamic batcher and replies through per-request channels.
+//!
+//! Protocol (one JSON object per line):
+//!   {"op":"context","session":"u1","tokens":[5,6,7]}
+//!   {"op":"query","session":"u1","tokens":[9,2],"topk":5}
+//!   {"op":"stats"}            {"op":"shutdown"}
+//! Responses:
+//!   {"ok":true,"kind":"context","t":3,"kv_bytes":12288}
+//!   {"ok":true,"kind":"query","next":[[tok,logprob],...]}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::session::SessionPolicy;
+use crate::coordinator::Coordinator;
+use crate::model::Checkpoint;
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+
+#[derive(Debug)]
+pub enum Request {
+    Context { session: String, tokens: Vec<i32> },
+    Query { session: String, tokens: Vec<i32>, topk: usize },
+    Stats,
+    Shutdown,
+}
+
+impl Request {
+    pub fn parse(line: &str) -> Result<Request> {
+        let j = Json::parse(line)?;
+        let op = j.get("op")?.str()?.to_string();
+        let tokens = || -> Result<Vec<i32>> {
+            j.get("tokens")?.arr()?.iter().map(|t| Ok(t.i64()? as i32)).collect()
+        };
+        let session = || -> Result<String> { Ok(j.get("session")?.str()?.to_string()) };
+        Ok(match op.as_str() {
+            "context" => Request::Context { session: session()?, tokens: tokens()? },
+            "query" => Request::Query {
+                session: session()?,
+                tokens: tokens()?,
+                topk: j.opt("topk").and_then(|v| v.usize().ok()).unwrap_or(5),
+            },
+            "stats" => Request::Stats,
+            "shutdown" => Request::Shutdown,
+            _ => bail!("unknown op {op:?}"),
+        })
+    }
+}
+
+/// Executor-side handling of one request batch window.
+pub struct ServerConfig {
+    pub addr: String,
+    pub policy: SessionPolicy,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+type Reply = Sender<String>;
+
+/// Run the server until a shutdown request arrives. `ready` receives the
+/// bound local address (tests bind port 0).
+pub fn serve(
+    rt: &Runtime,
+    ck: &Checkpoint,
+    cfg: ServerConfig,
+    ready: Option<Sender<String>>,
+) -> Result<()> {
+    let listener = TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
+    let local = listener.local_addr()?.to_string();
+    crate::info!("serving on {local}");
+    if let Some(tx) = ready {
+        let _ = tx.send(local.clone());
+    }
+
+    let (req_tx, req_rx) = channel::<(Request, Reply)>();
+
+    // Acceptor thread: one reader thread per connection.
+    let acceptor = std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { continue };
+            let tx = req_tx.clone();
+            std::thread::spawn(move || {
+                let _ = handle_connection(stream, tx);
+            });
+        }
+    });
+
+    let result = executor_loop(rt, ck, &cfg, req_rx);
+    drop(acceptor); // acceptor exits when the process does
+    result
+}
+
+fn handle_connection(stream: TcpStream, tx: Sender<(Request, Reply)>) -> Result<()> {
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+    crate::debug!("connection from {peer}");
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (resp_tx, resp_rx) = channel::<String>();
+        match Request::parse(&line) {
+            Ok(req) => {
+                let shutdown = matches!(req, Request::Shutdown);
+                if tx.send((req, resp_tx)).is_err() {
+                    break; // executor gone
+                }
+                match resp_rx.recv_timeout(Duration::from_secs(60)) {
+                    Ok(resp) => {
+                        writer.write_all(resp.as_bytes())?;
+                        writer.write_all(b"\n")?;
+                    }
+                    Err(_) => break,
+                }
+                if shutdown {
+                    break;
+                }
+            }
+            Err(e) => {
+                let msg = format!("{{\"ok\":false,\"error\":{:?}}}\n", e.to_string());
+                writer.write_all(msg.as_bytes())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn executor_loop(
+    rt: &Runtime,
+    ck: &Checkpoint,
+    cfg: &ServerConfig,
+    rx: Receiver<(Request, Reply)>,
+) -> Result<()> {
+    let mut coord = Coordinator::new(rt, ck, cfg.policy.clone(), cfg.max_batch, cfg.max_wait)?;
+    // seq -> (reply channel, input_len, topk) for queries in flight.
+    let mut waiting: Vec<(u64, Reply, usize, usize)> = Vec::new();
+    loop {
+        // Collect a batching window of requests.
+        let first = rx.recv_timeout(cfg.max_wait);
+        let mut incoming = Vec::new();
+        if let Ok(r) = first {
+            incoming.push(r);
+            while let Ok(r) = rx.try_recv() {
+                incoming.push(r);
+                if incoming.len() >= cfg.max_batch * 2 {
+                    break;
+                }
+            }
+        }
+        let mut shutdown = false;
+        for (req, reply) in incoming {
+            match req {
+                Request::Context { session, tokens } => {
+                    coord.add_context(&session, tokens);
+                    // Context ingestion acks after the batch executes; we
+                    // ack immediately with the queued time step.
+                    let s = coord.sessions.get_or_create(&session);
+                    let msg = format!(
+                        "{{\"ok\":true,\"kind\":\"context\",\"t\":{},\"kv_bytes\":{}}}",
+                        s.t + 1,
+                        s.mem.kv_bytes()
+                    );
+                    let _ = reply.send(msg);
+                }
+                Request::Query { session, tokens, topk } => {
+                    let n = tokens.len();
+                    let seq = coord.query(&session, tokens);
+                    waiting.push((seq, reply, n, topk));
+                }
+                Request::Stats => {
+                    let msg = format!(
+                        "{{\"ok\":true,\"kind\":\"stats\",\"sessions\":{},\"kv_bytes\":{},\"report\":{:?}}}",
+                        coord.sessions.len(),
+                        coord.sessions.total_kv_bytes(),
+                        coord.metrics.report()
+                    );
+                    let _ = reply.send(msg);
+                }
+                Request::Shutdown => {
+                    let _ = reply.send("{\"ok\":true,\"kind\":\"shutdown\"}".into());
+                    shutdown = true;
+                }
+            }
+        }
+        coord.run_until_idle()?;
+        // Deliver finished queries.
+        waiting.retain(|(seq, reply, input_len, topk)| {
+            if let Some(logits) = coord.take_result(*seq) {
+                let msg = format_query_response(&logits, *input_len, *topk);
+                let _ = reply.send(msg);
+                false
+            } else {
+                true
+            }
+        });
+        if shutdown {
+            crate::info!("shutdown: {}", coord.metrics.report());
+            return Ok(());
+        }
+    }
+}
+
+/// Top-k next-token distribution at the last real input position.
+fn format_query_response(logits: &crate::tensor::Tensor, input_len: usize, topk: usize) -> String {
+    let row = logits.row(&[input_len.saturating_sub(1)]);
+    let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse: f32 = row.iter().map(|&x| (x - mx).exp()).sum::<f32>().ln() + mx;
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+    let pairs: Vec<String> = idx
+        .iter()
+        .take(topk)
+        .map(|&i| format!("[{},{:.4}]", i, row[i] - lse))
+        .collect();
+    format!("{{\"ok\":true,\"kind\":\"query\",\"next\":[{}]}}", pairs.join(","))
+}
+
+/// Minimal blocking client for examples and tests.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    pub fn call(&mut self, request: &str) -> Result<Json> {
+        self.writer.write_all(request.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        if line.is_empty() {
+            bail!("server closed connection");
+        }
+        Json::parse(line.trim())
+    }
+
+    pub fn add_context(&mut self, session: &str, tokens: &[i32]) -> Result<Json> {
+        self.call(&format!(
+            "{{\"op\":\"context\",\"session\":{session:?},\"tokens\":{}}}",
+            fmt_tokens(tokens)
+        ))
+    }
+
+    pub fn query(&mut self, session: &str, tokens: &[i32], topk: usize) -> Result<Vec<(i32, f32)>> {
+        let resp = self.call(&format!(
+            "{{\"op\":\"query\",\"session\":{session:?},\"tokens\":{},\"topk\":{topk}}}",
+            fmt_tokens(tokens)
+        ))?;
+        let next = resp.get("next")?.arr()?;
+        next.iter()
+            .map(|p| {
+                let pair = p.arr()?;
+                Ok((pair[0].i64()? as i32, pair[1].f64()? as f32))
+            })
+            .collect()
+    }
+
+    pub fn stats(&mut self) -> Result<Json> {
+        self.call("{\"op\":\"stats\"}")
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.call("{\"op\":\"shutdown\"}")
+            .map(|_| ())
+            .or_else(|e| if e.to_string().contains("closed") { Ok(()) } else { Err(e) })
+    }
+}
+
+fn fmt_tokens(tokens: &[i32]) -> String {
+    let inner: Vec<String> = tokens.iter().map(|t| t.to_string()).collect();
+    format!("[{}]", inner.join(","))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_requests() {
+        let r = Request::parse(r#"{"op":"context","session":"u1","tokens":[1,2,3]}"#).unwrap();
+        match r {
+            Request::Context { session, tokens } => {
+                assert_eq!(session, "u1");
+                assert_eq!(tokens, vec![1, 2, 3]);
+            }
+            _ => panic!("wrong kind"),
+        }
+        let r = Request::parse(r#"{"op":"query","session":"u","tokens":[9],"topk":2}"#).unwrap();
+        matches!(r, Request::Query { topk: 2, .. }).then_some(()).unwrap();
+        assert!(Request::parse(r#"{"op":"nope"}"#).is_err());
+        assert!(Request::parse("garbage").is_err());
+    }
+
+    #[test]
+    fn formats_query_response_as_valid_json() {
+        let mut logits = crate::tensor::Tensor::zeros(&[4, 6]);
+        logits.set(&[1, 3], 5.0);
+        let s = format_query_response(&logits, 2, 3);
+        let j = Json::parse(&s).unwrap();
+        let next = j.get("next").unwrap().arr().unwrap();
+        assert_eq!(next.len(), 3);
+        assert_eq!(next[0].arr().unwrap()[0].i64().unwrap(), 3);
+        // log-probs <= 0
+        assert!(next[0].arr().unwrap()[1].f64().unwrap() <= 0.0);
+    }
+
+    #[test]
+    fn fmt_tokens_roundtrip() {
+        let j = Json::parse(&fmt_tokens(&[1, -2, 30])).unwrap();
+        assert_eq!(
+            j.arr().unwrap().iter().map(|v| v.i64().unwrap()).collect::<Vec<_>>(),
+            vec![1, -2, 30]
+        );
+    }
+}

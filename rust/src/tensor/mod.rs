@@ -1,0 +1,165 @@
+//! Host-side tensors used by the coordinator (masks, KV buffers, token
+//! batches). Deliberately minimal: row-major `f32`/`i32` arrays with
+//! shape checking. Device math lives in the XLA artifacts; these types
+//! only stage inputs and unpack outputs.
+
+use anyhow::{bail, Result};
+
+/// Row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// Row-major i32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; numel(shape)] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        if data.len() != numel(shape) {
+            bail!("shape {:?} wants {} elements, got {}", shape, numel(shape), data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Flat offset of a multi-index.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (i, (&x, &d)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(x < d, "index {idx:?} out of shape {:?} at dim {i}", self.shape);
+            off = off * d + x;
+        }
+        off
+    }
+
+    pub fn get(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let o = self.offset(idx);
+        self.data[o] = v;
+    }
+
+    /// Mutable row `[..., :]` of the last dimension at a leading index.
+    pub fn row_mut(&mut self, lead: &[usize]) -> &mut [f32] {
+        let last = *self.shape.last().expect("rank >= 1");
+        let mut off = 0;
+        for (&x, &d) in lead.iter().zip(&self.shape) {
+            off = off * d + x;
+        }
+        off *= last;
+        &mut self.data[off..off + last]
+    }
+
+    pub fn row(&self, lead: &[usize]) -> &[f32] {
+        let last = *self.shape.last().expect("rank >= 1");
+        let mut off = 0;
+        for (&x, &d) in lead.iter().zip(&self.shape) {
+            off = off * d + x;
+        }
+        off *= last;
+        &self.data[off..off + last]
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.iter_mut().for_each(|x| *x = v);
+    }
+
+    /// Elementwise a*(1-t) + b*t — used by merge-memory updates.
+    pub fn lerp_from(&mut self, other: &Tensor, t: f32) {
+        debug_assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a = *a * (1.0 - t) + b * t;
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+impl IntTensor {
+    pub fn zeros(shape: &[usize]) -> IntTensor {
+        IntTensor { shape: shape.to_vec(), data: vec![0; numel(shape)] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> Result<IntTensor> {
+        if data.len() != numel(shape) {
+            bail!("shape {:?} wants {} elements, got {}", shape, numel(shape), data.len());
+        }
+        Ok(IntTensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn scalar(v: i32) -> IntTensor {
+        IntTensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn row_mut(&mut self, lead: &[usize]) -> &mut [i32] {
+        let last = *self.shape.last().expect("rank >= 1");
+        let mut off = 0;
+        for (&x, &d) in lead.iter().zip(&self.shape) {
+            off = off * d + x;
+        }
+        off *= last;
+        &mut self.data[off..off + last]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_is_row_major() {
+        let mut t = Tensor::zeros(&[2, 3, 4]);
+        t.set(&[1, 2, 3], 7.0);
+        assert_eq!(t.data[1 * 12 + 2 * 4 + 3], 7.0);
+        assert_eq!(t.get(&[1, 2, 3]), 7.0);
+        assert_eq!(t.offset(&[0, 0, 0]), 0);
+    }
+
+    #[test]
+    fn rows() {
+        let mut t = Tensor::from_vec(&[2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        assert_eq!(t.row(&[1]), &[3.0, 4.0, 5.0]);
+        t.row_mut(&[0])[2] = 9.0;
+        assert_eq!(t.get(&[0, 2]), 9.0);
+    }
+
+    #[test]
+    fn lerp() {
+        let mut a = Tensor::from_vec(&[2], vec![0.0, 10.0]).unwrap();
+        let b = Tensor::from_vec(&[2], vec![10.0, 0.0]).unwrap();
+        a.lerp_from(&b, 0.25);
+        assert_eq!(a.data, vec![2.5, 7.5]);
+    }
+
+    #[test]
+    fn shape_mismatch_errors() {
+        assert!(Tensor::from_vec(&[2, 2], vec![1.0]).is_err());
+        assert!(IntTensor::from_vec(&[3], vec![1, 2, 3, 4]).is_err());
+    }
+}

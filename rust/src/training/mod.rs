@@ -1,0 +1,252 @@
+//! Training driver: executes the AOT train-step artifacts in a loop.
+//!
+//! Three phases, matching the paper's recipe (Appendix B):
+//!  1. `pretrain_lm`   — full-weight causal-LM training of the base model
+//!     on the synthetic corpus (the paper's dataset fine-tune).
+//!  2. `train_ccm`     — compression training of the conditional-LoRA +
+//!     <COMP> embeddings with the parallelized forward (Algorithm 1).
+//!     The mask/P inputs select the method, so the same loop trains
+//!     CCM-concat/-merge, Gisting and Compressive Transformer.
+//!  3. `train_rmt`     — the recurrent baseline (unrolled in-graph),
+//!     whose per-sample cost is what Table 8 compares.
+//!
+//! Adam moments live host-side and round-trip through the artifacts.
+
+pub mod pack;
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::datagen::corpus::{Corpus, Mixture};
+use crate::datagen::{by_name, Split};
+use crate::model::{cosine_lr, AdamState, Checkpoint};
+use crate::runtime::{Runtime, Value};
+use crate::tensor::{IntTensor, Tensor};
+use crate::training::pack::{pack_batch, PackPolicy};
+use crate::util::rng::Rng;
+
+/// Per-run training report (recorded into EXPERIMENTS.md by callers).
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub losses: Vec<f32>,
+    pub steps: usize,
+    pub ms_per_step: f64,
+    pub ms_per_sample: f64,
+}
+
+impl TrainReport {
+    pub fn final_loss(&self) -> f32 {
+        let k = self.losses.len().min(10);
+        self.losses[self.losses.len() - k..].iter().sum::<f32>() / k as f32
+    }
+}
+
+pub struct Trainer<'rt> {
+    pub rt: &'rt Runtime,
+    pub log_every: usize,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime) -> Trainer<'rt> {
+        Trainer { rt, log_every: 25 }
+    }
+
+    /// Phase 1: full-weight LM pretraining on a dataset mixture.
+    pub fn pretrain_lm(
+        &self,
+        ck: &mut Checkpoint,
+        mixture: &Mixture,
+        steps: usize,
+        base_lr: f32,
+        seed: u64,
+    ) -> Result<TrainReport> {
+        let m = &self.rt.manifest;
+        let (b, s) = (m.scenario.batch_train, m.scenario.seq_train);
+        let mut corpus = Corpus::new(mixture, seed, &m.scenario, m.model.vocab, m.model.bos_id)?;
+        let mut adam = AdamState::new(ck.base.data.len());
+        let mut losses = Vec::with_capacity(steps);
+        let pos_row: Vec<i32> = (0..s as i32).collect();
+        let mut pos = IntTensor::zeros(&[b, s]);
+        for bi in 0..b {
+            pos.row_mut(&[bi]).copy_from_slice(&pos_row);
+        }
+        let t0 = Instant::now();
+        for step in 0..steps {
+            let (tokens, loss_mask) = corpus.batch(b, s);
+            let lr = cosine_lr(step, steps, base_lr, steps / 20 + 1);
+            let outs = self.rt.execute_f32(
+                "train_lm_step",
+                &[
+                    Value::vec_f32(&[ck.base.data.len()], std::mem::take(&mut ck.base.data))?,
+                    Value::vec_f32(&[adam.mu.len()], std::mem::take(&mut adam.mu))?,
+                    Value::vec_f32(&[adam.nu.len()], std::mem::take(&mut adam.nu))?,
+                    Value::scalar_i32(adam.step),
+                    Value::scalar_f32(lr),
+                    Value::I32(IntTensor::from_vec(&[b, s], tokens)?),
+                    Value::I32(pos.clone()),
+                    Value::F32(Tensor::from_vec(&[b, s], loss_mask)?),
+                ],
+            )?;
+            ck.base.data = outs[0].data.clone();
+            adam.mu = outs[1].data.clone();
+            adam.nu = outs[2].data.clone();
+            adam.step += 1;
+            let loss = outs[3].data[0];
+            losses.push(loss);
+            if step % self.log_every == 0 {
+                crate::info!("lm step {step}/{steps} loss {loss:.4} lr {lr:.2e}");
+            }
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / steps.max(1) as f64;
+        Ok(TrainReport { losses, steps, ms_per_step: ms, ms_per_sample: ms / b as f64 })
+    }
+
+    /// Phase 2: compression training (Algorithm 1). `mixture` follows the
+    /// paper's per-application or unified training-data settings.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_ccm(
+        &self,
+        ck: &mut Checkpoint,
+        policy: &PackPolicy,
+        mixture: &Mixture,
+        steps: usize,
+        base_lr: f32,
+        seed: u64,
+    ) -> Result<TrainReport> {
+        let m = &self.rt.manifest;
+        let b = m.scenario.batch_train;
+        let mut datasets = Vec::new();
+        for name in mixture.sources() {
+            datasets.push(by_name(&name, seed, &m.scenario, m.model.vocab)?);
+        }
+        let mut rng = Rng::new(seed ^ 0xCC);
+        let mut adam = AdamState::new(ck.lora.data.len());
+        let mut losses = Vec::with_capacity(steps);
+        let t0 = Instant::now();
+        for step in 0..steps {
+            // Sample a batch of (identity, t) pairs across the mixture.
+            let mut samples = Vec::with_capacity(b);
+            for _ in 0..b {
+                let ds = &datasets[rng.range(0, datasets.len())];
+                let id = rng.range(0, ds.n_identities(Split::Train));
+                let t = rng.range(1, ds.t_max() + 1);
+                samples.push(ds.sample(Split::Train, id, t));
+            }
+            let refs: Vec<(&crate::datagen::OnlineSample, Option<&[i32]>)> =
+                samples.iter().map(|s| (s, None)).collect();
+            let batch = pack_batch(policy, m, &refs, b)?;
+            let lr = cosine_lr(step, steps, base_lr, steps / 20 + 1);
+            let outs = self.rt.execute_f32(
+                "train_ccm_step",
+                &[
+                    Value::vec_f32(&[ck.base.data.len()], ck.base.data.clone())?,
+                    Value::vec_f32(&[ck.lora.data.len()], std::mem::take(&mut ck.lora.data))?,
+                    Value::vec_f32(&[adam.mu.len()], std::mem::take(&mut adam.mu))?,
+                    Value::vec_f32(&[adam.nu.len()], std::mem::take(&mut adam.nu))?,
+                    Value::scalar_i32(adam.step),
+                    Value::scalar_f32(lr),
+                    Value::I32(batch.tokens),
+                    Value::I32(batch.comp_slot),
+                    Value::F32(batch.gate),
+                    Value::I32(batch.pos),
+                    Value::F32(batch.mask),
+                    Value::F32(batch.merge_p),
+                    Value::F32(batch.loss_mask),
+                ],
+            )?;
+            ck.lora.data = outs[0].data.clone();
+            adam.mu = outs[1].data.clone();
+            adam.nu = outs[2].data.clone();
+            adam.step += 1;
+            let loss = outs[3].data[0];
+            losses.push(loss);
+            if step % self.log_every == 0 {
+                crate::info!(
+                    "ccm[{}] step {step}/{steps} loss {loss:.4}",
+                    policy.method.name()
+                );
+            }
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / steps.max(1) as f64;
+        Ok(TrainReport { losses, steps, ms_per_step: ms, ms_per_sample: ms / b as f64 })
+    }
+
+    /// Phase 3: the recurrent-compression baseline (RMT/AutoCompressor
+    /// shape). Sequential in-graph recursion — slow per sample by design.
+    pub fn train_rmt(
+        &self,
+        ck: &mut Checkpoint,
+        mixture: &Mixture,
+        steps: usize,
+        base_lr: f32,
+        seed: u64,
+    ) -> Result<TrainReport> {
+        let m = &self.rt.manifest;
+        let sc = &m.scenario;
+        let (b, r, s_c, si) = (sc.batch_train, sc.rmt_unroll, sc.chunk_max, sc.input_max);
+        let mut datasets = Vec::new();
+        for name in mixture.sources() {
+            datasets.push(by_name(&name, seed, sc, m.model.vocab)?);
+        }
+        let mut rng = Rng::new(seed ^ 0x12A7);
+        let mut adam = AdamState::new(ck.lora.data.len());
+        let mut losses = Vec::with_capacity(steps);
+        let t0 = Instant::now();
+        for step in 0..steps {
+            let mut chunks = IntTensor::zeros(&[b, r, s_c]);
+            let mut chunk_valid = Tensor::zeros(&[b, r, s_c]);
+            let mut inputs = IntTensor::zeros(&[b, si]);
+            let mut input_valid = Tensor::zeros(&[b, si]);
+            let mut loss_mask = Tensor::zeros(&[b, si]);
+            for bi in 0..b {
+                let ds = &datasets[rng.range(0, datasets.len())];
+                let id = rng.range(0, ds.n_identities(Split::Train));
+                let t = rng.range(1, (ds.t_max().min(r)) + 1);
+                let s = ds.sample(Split::Train, id, t);
+                for (j, c) in s.chunks.iter().take(r).enumerate() {
+                    chunks.row_mut(&[bi, j])[..c.len()].copy_from_slice(c);
+                    for x in &mut chunk_valid.row_mut(&[bi, j])[..c.len()] {
+                        *x = 1.0;
+                    }
+                }
+                let it = s.input_with_target();
+                inputs.row_mut(&[bi])[..it.len()].copy_from_slice(&it);
+                for x in &mut input_valid.row_mut(&[bi])[..it.len()] {
+                    *x = 1.0;
+                }
+                let tgt_start = s.input.len();
+                for i in 0..s.target.len() {
+                    loss_mask.row_mut(&[bi])[tgt_start + i - 1] = 1.0;
+                }
+            }
+            let lr = cosine_lr(step, steps, base_lr, steps / 20 + 1);
+            let outs = self.rt.execute_f32(
+                "train_rmt_step",
+                &[
+                    Value::vec_f32(&[ck.base.data.len()], ck.base.data.clone())?,
+                    Value::vec_f32(&[ck.lora.data.len()], std::mem::take(&mut ck.lora.data))?,
+                    Value::vec_f32(&[adam.mu.len()], std::mem::take(&mut adam.mu))?,
+                    Value::vec_f32(&[adam.nu.len()], std::mem::take(&mut adam.nu))?,
+                    Value::scalar_i32(adam.step),
+                    Value::scalar_f32(lr),
+                    Value::I32(chunks),
+                    Value::F32(chunk_valid),
+                    Value::I32(inputs),
+                    Value::F32(input_valid),
+                    Value::F32(loss_mask),
+                ],
+            )?;
+            ck.lora.data = outs[0].data.clone();
+            adam.mu = outs[1].data.clone();
+            adam.nu = outs[2].data.clone();
+            adam.step += 1;
+            losses.push(outs[3].data[0]);
+            if step % self.log_every == 0 {
+                crate::info!("rmt step {step}/{steps} loss {:.4}", outs[3].data[0]);
+            }
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / steps.max(1) as f64;
+        Ok(TrainReport { losses, steps, ms_per_step: ms, ms_per_sample: ms / b as f64 })
+    }
+}

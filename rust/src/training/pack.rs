@@ -1,0 +1,278 @@
+//! Packing online samples into the parallel-forward tensors.
+//!
+//! One packed row = the Figure-3 sequence
+//! `[c(1), <COMP>*, ..., c(t), <COMP>*, I(t), O(t)]` plus its attention
+//! mask, merge matrix, LoRA gate and loss mask. Shared by the trainer
+//! (train_ccm_step) and the evaluation harness (ccm_forward).
+
+use anyhow::{bail, Result};
+
+use crate::datagen::OnlineSample;
+use crate::masks::{self, Layout, MergeScheme, Method};
+use crate::model::manifest::{Manifest, ScenarioConfig};
+use crate::tensor::{IntTensor, Tensor};
+
+/// Packing policy: which method's mask/P to build.
+#[derive(Debug, Clone)]
+pub struct PackPolicy {
+    pub method: Method,
+    pub scheme: MergeScheme,
+    /// <COMP> tokens appended per chunk (and Compressive pool width).
+    pub comp_len: usize,
+    /// Conditional (paper) vs unconditional (Table 5 ablation) LoRA gate.
+    pub conditional: bool,
+}
+
+impl PackPolicy {
+    pub fn new(method: Method, comp_len: usize) -> PackPolicy {
+        PackPolicy { method, scheme: MergeScheme::Avg, comp_len, conditional: true }
+    }
+}
+
+/// One packed sample row (host-side, f32/i32 flat vectors).
+pub struct PackedRow {
+    pub layout: Layout,
+    pub tokens: Vec<i32>,
+    pub comp_slot: Vec<i32>,
+    pub gate: Vec<f32>,
+    pub pos: Vec<i32>,
+    pub mask: Tensor,
+    pub merge_p: Tensor,
+    pub loss_mask: Vec<f32>,
+    /// Position of the first target token within the sequence.
+    pub target_start: usize,
+    pub target_len: usize,
+}
+
+/// Pack one sample at sequence length `seq` with `mem_slots` columns.
+pub fn pack_row(
+    policy: &PackPolicy,
+    sc: &ScenarioConfig,
+    sample: &OnlineSample,
+    override_input: Option<&[i32]>,
+) -> Result<PackedRow> {
+    let seq = sc.seq_train;
+    let comp_len = if policy.method.uses_comp_tokens() { policy.comp_len } else { 0 };
+    let chunk_lens: Vec<usize> = match policy.method {
+        Method::NoContext => vec![],
+        _ => sample.chunks.iter().map(|c| c.len()).collect(),
+    };
+    // The input segment is input ++ target (teacher forcing / scoring).
+    let target = &sample.target;
+    let base_input = &sample.input;
+    let (inp, tgt): (&[i32], &[i32]) = match override_input {
+        Some(choice) => (base_input, choice),
+        None => (base_input, target),
+    };
+    let input_len = inp.len() + tgt.len();
+    if input_len > sc.input_max {
+        bail!("input+target {} > input_max {}", input_len, sc.input_max);
+    }
+    let lay = masks::build_layout(&chunk_lens, comp_len, input_len, seq)?;
+    let (mask, merge_p) =
+        masks::build_masks(policy.method, &lay, sc.mem_slots, policy.scheme, policy.comp_len)?;
+
+    let mut tokens = vec![0i32; seq];
+    let mut pos = 0usize;
+    if !matches!(policy.method, Method::NoContext) {
+        for c in &sample.chunks {
+            tokens[pos..pos + c.len()].copy_from_slice(c);
+            pos += c.len();
+            for _ in 0..comp_len {
+                tokens[pos] = 3; // <COMP>
+                pos += 1;
+            }
+        }
+    }
+    let target_start = pos + inp.len();
+    tokens[pos..pos + inp.len()].copy_from_slice(inp);
+    tokens[target_start..target_start + tgt.len()].copy_from_slice(tgt);
+
+    // Loss on positions predicting the target: [target_start-1, ...).
+    let mut loss_mask = vec![0.0f32; seq];
+    for i in 0..tgt.len() {
+        loss_mask[target_start + i - 1] = 1.0;
+    }
+
+    Ok(PackedRow {
+        tokens,
+        comp_slot: masks::comp_slot_input(&lay),
+        gate: masks::lora_gate(&lay, policy.conditional),
+        pos: masks::position_ids(&lay),
+        mask,
+        merge_p,
+        loss_mask,
+        target_start,
+        target_len: tgt.len(),
+        layout: lay,
+    })
+}
+
+/// A [B, ...] batch of packed rows, staged for train_ccm_step/ccm_forward.
+pub struct PackedBatch {
+    pub b: usize,
+    pub tokens: IntTensor,
+    pub comp_slot: IntTensor,
+    pub gate: Tensor,
+    pub pos: IntTensor,
+    pub mask: Tensor,
+    pub merge_p: Tensor,
+    pub loss_mask: Tensor,
+    pub rows: Vec<(usize, usize)>, // (target_start, target_len) per row
+}
+
+pub fn pack_batch(
+    policy: &PackPolicy,
+    manifest: &Manifest,
+    samples: &[(&OnlineSample, Option<&[i32]>)],
+    b: usize,
+) -> Result<PackedBatch> {
+    let sc = &manifest.scenario;
+    let (s, m) = (sc.seq_train, sc.mem_slots);
+    if samples.len() > b {
+        bail!("{} samples > batch {b}", samples.len());
+    }
+    let mut out = PackedBatch {
+        b,
+        tokens: IntTensor::zeros(&[b, s]),
+        comp_slot: IntTensor::zeros(&[b, s]),
+        gate: Tensor::zeros(&[b, s]),
+        pos: IntTensor::zeros(&[b, s]),
+        mask: Tensor::zeros(&[b, s, m + s]),
+        merge_p: Tensor::zeros(&[b, m, s]),
+        loss_mask: Tensor::zeros(&[b, s]),
+        rows: Vec::with_capacity(samples.len()),
+    };
+    for (bi, (sample, choice)) in samples.iter().enumerate() {
+        let row = pack_row(policy, sc, sample, *choice)?;
+        out.tokens.row_mut(&[bi]).copy_from_slice(&row.tokens);
+        out.comp_slot.row_mut(&[bi]).copy_from_slice(&row.comp_slot);
+        out.gate.row_mut(&[bi]).copy_from_slice(&row.gate);
+        out.pos.row_mut(&[bi]).copy_from_slice(&row.pos);
+        out.loss_mask.row_mut(&[bi]).copy_from_slice(&row.loss_mask);
+        let n = s * (m + s);
+        out.mask.data[bi * n..(bi + 1) * n].copy_from_slice(&row.mask.data);
+        let np = m * s;
+        out.merge_p.data[bi * np..(bi + 1) * np].copy_from_slice(&row.merge_p.data);
+        out.rows.push((row.target_start, row.target_len));
+    }
+    // Padding rows (samples.len()..b) keep all-zero tokens; the layout
+    // builder gives pad rows self-attention so softmax stays finite, but
+    // zero masks here are also safe because loss_mask is zero.
+    for bi in samples.len()..b {
+        for i in 0..s {
+            out.mask.set(&[bi, i, m + i], 1.0);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::OnlineSample;
+
+    fn sc() -> ScenarioConfig {
+        ScenarioConfig {
+            t_max: 4,
+            chunk_max: 12,
+            comp_len_max: 2,
+            input_max: 16,
+            seq_train: 96,
+            mem_slots: 8,
+            batch_train: 4,
+            infer_batches: vec![1, 4],
+            decode_cache: 48,
+            rmt_unroll: 2,
+            rmt_mem: 2,
+        }
+    }
+
+    fn sample() -> OnlineSample {
+        OnlineSample {
+            chunks: vec![vec![10, 11, 12], vec![20, 21, 22, 23]],
+            input: vec![30, 31, 2],
+            target: vec![9],
+            choices: vec![vec![8], vec![9]],
+            correct: 1,
+        }
+    }
+
+    #[test]
+    fn packs_tokens_in_layout_order() {
+        let p = PackPolicy::new(Method::CcmConcat, 2);
+        let row = pack_row(&p, &sc(), &sample(), None).unwrap();
+        assert_eq!(&row.tokens[..5], &[10, 11, 12, 3, 3]);
+        assert_eq!(&row.tokens[5..11], &[20, 21, 22, 23, 3, 3]);
+        assert_eq!(&row.tokens[11..15], &[30, 31, 2, 9]);
+        assert_eq!(row.target_start, 14);
+        assert_eq!(row.loss_mask[13], 1.0); // position 13 predicts token 14
+        assert_eq!(row.loss_mask.iter().filter(|&&x| x > 0.0).count(), 1);
+        assert_eq!(row.gate.iter().filter(|&&x| x > 0.0).count(), 4);
+    }
+
+    #[test]
+    fn choice_override_swaps_target() {
+        let p = PackPolicy::new(Method::CcmConcat, 2);
+        let choice = [8];
+        let row = pack_row(&p, &sc(), &sample(), Some(&choice)).unwrap();
+        assert_eq!(row.tokens[row.target_start], 8);
+    }
+
+    #[test]
+    fn full_and_nocontext_have_no_comp_tokens() {
+        for method in [Method::Full, Method::NoContext] {
+            let p = PackPolicy::new(method, 2);
+            let row = pack_row(&p, &sc(), &sample(), None).unwrap();
+            assert!(row.tokens.iter().all(|&t| t != 3), "{method:?}");
+            assert_eq!(row.gate.iter().sum::<f32>(), 0.0);
+        }
+        // NoContext drops the chunks entirely.
+        let p = PackPolicy::new(Method::NoContext, 2);
+        let row = pack_row(&p, &sc(), &sample(), None).unwrap();
+        assert_eq!(row.tokens[0], 30);
+    }
+
+    #[test]
+    fn batch_stages_all_rows_and_pads() {
+        let p = PackPolicy::new(Method::CcmMerge, 2);
+        let s1 = sample();
+        let manifest = toy_manifest();
+        let batch =
+            pack_batch(&p, &manifest, &[(&s1, None), (&s1, Some(&[8]))], 4).unwrap();
+        assert_eq!(batch.rows.len(), 2);
+        assert_eq!(batch.tokens.shape, vec![4, 96]);
+        // Pad rows have inert self-attention.
+        assert_eq!(batch.mask.get(&[3, 0, 8 + 0]), 1.0);
+        assert!(batch.loss_mask.row(&[3]).iter().all(|&x| x == 0.0));
+    }
+
+    fn toy_manifest() -> Manifest {
+        use crate::model::manifest::*;
+        Manifest {
+            config_name: "toy".into(),
+            dir: std::path::PathBuf::from("."),
+            model: ModelConfig {
+                name: "toy".into(),
+                vocab: 256,
+                d_model: 8,
+                n_layers: 1,
+                n_heads: 1,
+                d_ff: 8,
+                max_pos: 128,
+                lora_rank: 2,
+                lora_alpha: 4.0,
+                pad_id: 0,
+                bos_id: 1,
+                sep_id: 2,
+                comp_id: 3,
+                d_head: 8,
+            },
+            scenario: sc(),
+            base_layout: ParamLayout { total: 1, entries: vec![] },
+            lora_layout: ParamLayout { total: 1, entries: vec![] },
+            artifacts: vec![],
+            mask_goldens: vec![],
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! Hand-rolled micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive this directly.
+//! Reports mean/median/p95 with simple outlier-robust statistics and a
+//! fixed wall-clock budget per case.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement series.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Stats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    /// Items/sec for a per-iteration item count.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly: a few warmup iterations, then measure until the
+/// budget elapses (min 5, max `max_iters` samples).
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, max_iters: usize, mut f: F) -> Stats {
+    for _ in 0..2 {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while (samples.len() < 5 || start.elapsed() < budget) && samples.len() < max_iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    Stats {
+        name: name.to_string(),
+        iters: n,
+        mean_ns: mean,
+        median_ns: samples[n / 2],
+        p95_ns: samples[((n as f64 * 0.95) as usize).min(n - 1)],
+        min_ns: samples[0],
+    }
+}
+
+/// Pretty table printer used by the bench binaries.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: &[String]| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<w$}  ", c, w = widths.get(i).copied().unwrap_or(8)));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    line(&widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>());
+    for row in rows {
+        line(row);
+    }
+}

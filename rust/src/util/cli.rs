@@ -1,0 +1,133 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments. Subcommand dispatch lives in `main.rs`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse a raw argv slice (without the program name).
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.flags
+            .get(key)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("missing required flag --{key}"))
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f32(&self, key: &str, default: f32) -> Result<f32> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects a float, got {v:?}")),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list flag.
+    pub fn list(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.flags.get(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
+        }
+    }
+
+    /// Error out on unknown flags (catches typos in experiment scripts).
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = Args::parse(&argv(&["train", "--steps", "100", "--fast", "--lr=0.01"])).unwrap();
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.usize("steps", 0).unwrap(), 100);
+        assert!(a.bool("fast"));
+        assert_eq!(a.f32("lr", 0.0).unwrap(), 0.01);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = Args::parse(&argv(&["--x", "abc"])).unwrap();
+        assert_eq!(a.usize("missing", 7).unwrap(), 7);
+        assert!(a.usize("x", 0).is_err());
+        assert!(a.require("nope").is_err());
+    }
+
+    #[test]
+    fn lists_and_known() {
+        let a = Args::parse(&argv(&["--methods", "ccm-concat, ccm-merge"])).unwrap();
+        assert_eq!(a.list("methods", &[]), vec!["ccm-concat", "ccm-merge"]);
+        assert_eq!(a.list("other", &["x"]), vec!["x"]);
+        assert!(a.check_known(&["methods"]).is_ok());
+        assert!(a.check_known(&["nope"]).is_err());
+    }
+}

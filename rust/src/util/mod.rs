@@ -1,0 +1,80 @@
+//! Substrate utilities: JSON, RNG, CLI, bench + property-test harnesses,
+//! and small logging/timing helpers. Everything here is dependency-free
+//! (the offline build has only `xla` and `anyhow`).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+
+use std::time::Instant;
+
+/// Scoped wall-clock timer: `let _t = Timer::new("phase");` logs on drop.
+pub struct Timer {
+    label: String,
+    start: Instant,
+    quiet: bool,
+}
+
+impl Timer {
+    pub fn new(label: &str) -> Self {
+        Timer { label: label.to_string(), start: Instant::now(), quiet: false }
+    }
+
+    pub fn quiet(label: &str) -> Self {
+        Timer { label: label.to_string(), start: Instant::now(), quiet: true }
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+impl Drop for Timer {
+    fn drop(&mut self) {
+        if !self.quiet {
+            eprintln!("[time] {}: {:.1} ms", self.label, self.elapsed_ms());
+        }
+    }
+}
+
+/// Simple leveled logging controlled by `CCM_LOG` (error|info|debug).
+pub fn log_level() -> u8 {
+    match std::env::var("CCM_LOG").as_deref() {
+        Ok("debug") => 2,
+        Ok("error") => 0,
+        _ => 1,
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($fmt:tt)*) => {
+        if $crate::util::log_level() >= 1 { eprintln!("[ccm] {}", format!($($fmt)*)); }
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($fmt:tt)*) => {
+        if $crate::util::log_level() >= 2 { eprintln!("[ccm:debug] {}", format!($($fmt)*)); }
+    };
+}
+
+/// Mean of a slice (bench/eval helper).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn mean_works() {
+        assert_eq!(super::mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!(super::mean(&[]).is_nan());
+    }
+}

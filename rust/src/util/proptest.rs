@@ -1,0 +1,74 @@
+//! Minimal property-testing harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, |rng| ...)` runs the property over `cases` seeded
+//! generators; on failure it reports the failing seed so the case can be
+//! replayed exactly with `replay(seed, f)`. Used by the coordinator and
+//! memory invariant tests.
+
+use super::rng::Rng;
+
+/// Outcome of one property case.
+pub type PropResult = Result<(), String>;
+
+/// Run a property across `cases` deterministic seeds. Panics (test
+/// failure) with the seed and message of the first failing case.
+pub fn check<F: FnMut(&mut Rng) -> PropResult>(name: &str, cases: u64, mut f: F) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0x5eed_0000 + seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property {name} failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Replay a single failing seed (for debugging).
+pub fn replay<F: FnMut(&mut Rng) -> PropResult>(seed: u64, mut f: F) -> PropResult {
+    let mut rng = Rng::new(0x5eed_0000 + seed);
+    f(&mut rng)
+}
+
+/// Assert helper producing `PropResult`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("range-bounds", 50, |rng| {
+            let x = rng.range(0, 10);
+            prop_assert!(x < 10, "x = {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at seed")]
+    fn reports_failing_seed() {
+        check("always-fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn replay_reproduces() {
+        let mut first = None;
+        check("record", 1, |rng| {
+            first = Some(rng.next_u64());
+            Ok(())
+        });
+        let mut second = None;
+        replay(0, |rng| {
+            second = Some(rng.next_u64());
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(first, second);
+    }
+}
