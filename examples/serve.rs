@@ -35,17 +35,11 @@ fn main() -> Result<()> {
             "infer_with_mem_b8",
         ])
         .ok();
-        serve(
-            &rt,
-            &ck,
-            ServerConfig {
-                addr: "127.0.0.1:0".into(),
-                policy: SessionPolicy::concat(comp_len),
-                max_batch: 8,
-                max_wait: std::time::Duration::from_millis(2),
-            },
-            Some(ready_tx),
-        )
+        let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(comp_len));
+        cfg.max_batch = 8;
+        cfg.max_wait = std::time::Duration::from_millis(2);
+        cfg.max_pending = 512;
+        serve(&rt, &ck, cfg, Some(ready_tx))
     });
     let addr = ready_rx.recv()?;
     println!("server up at {addr}; {n_clients} clients x {rounds} rounds");
@@ -84,7 +78,8 @@ fn main() -> Result<()> {
     }
     let secs = t0.elapsed().as_secs_f64();
     println!(
-        "served {total_q} queries (+{} compressions) in {secs:.2}s: {:.1} q/s, mean latency {:.1} ms",
+        "served {total_q} queries (+{} compressions) in {secs:.2}s: \
+         {:.1} q/s, mean latency {:.1} ms",
         total_q,
         total_q as f64 / secs,
         total_lat / total_q as f64
@@ -93,7 +88,14 @@ fn main() -> Result<()> {
     // Stats + shutdown.
     let mut admin = Client::connect(&addr)?;
     let stats = admin.stats()?;
-    println!("server sessions: {}", stats.get("sessions")?.usize()?);
+    println!(
+        "server sessions: {} (kv {} B, pending {}, overload rejections {}, evicted {})",
+        stats.get("sessions")?.usize()?,
+        stats.get("kv_bytes")?.usize()?,
+        stats.get("pending")?.usize()?,
+        stats.get("rejected_overload")?.usize()?,
+        stats.get("sessions_evicted")?.usize()?
+    );
     admin.shutdown()?;
     server.join().expect("server thread")?;
     println!("server shut down cleanly");

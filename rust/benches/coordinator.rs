@@ -61,7 +61,11 @@ fn main() -> anyhow::Result<()> {
 
     // Memory update throughput (concat + merge).
     {
-        let h = CompressedChunk { k: vec![0.5; 4 * 2 * 128], v: vec![0.5; 4 * 2 * 128], comp_len: 2 };
+        let h = CompressedChunk {
+            k: vec![0.5; 4 * 2 * 128],
+            v: vec![0.5; 4 * 2 * 128],
+            comp_len: 2,
+        };
         let s = bench("mem/concat-update", budget, 100_000, || {
             let mut m = MemoryStore::concat(4, 32, 128, 2);
             for _ in 0..8 {
@@ -78,10 +82,13 @@ fn main() -> anyhow::Result<()> {
         rows.push(vec![s.name.clone(), format!("{:.4}", s.mean_ms()), "8 updates".into()]);
     }
 
-    // Batcher scheduling under load.
-    {
-        let s = bench("batcher/1k-items", budget, 2_000, || {
+    // Batcher scheduling under load (both policies).
+    for infer_priority in [false, true] {
+        let name =
+            if infer_priority { "batcher/1k-items-prio" } else { "batcher/1k-items" };
+        let s = bench(name, budget, 2_000, || {
             let mut b = Batcher::new(8, Duration::ZERO);
+            b.infer_priority = infer_priority;
             for i in 0..1000 {
                 let kind = if i % 3 == 0 { WorkKind::Infer } else { WorkKind::Compress };
                 b.push(&format!("s{}", i % 32), kind, vec![1, 2, 3]);
@@ -89,6 +96,63 @@ fn main() -> anyhow::Result<()> {
             while b.next_batch(std::time::Instant::now(), true).is_some() {}
         });
         rows.push(vec![s.name.clone(), format!("{:.3}", s.mean_ms()), "1000 items".into()]);
+    }
+
+    // Multi-session serve throughput over the full TCP path: acceptor,
+    // connection threads, admission control, pipelined executor, KV
+    // governance. SimCompute backend with sub-ms artificial latency —
+    // this measures the serving engine, not the model.
+    {
+        use ccm::compress::SimCompute;
+        use ccm::coordinator::session::SessionPolicy;
+        use ccm::server::{serve_with_backend, Client, ServerConfig};
+        use std::sync::mpsc::channel;
+
+        let manifest = fake_manifest(sc.clone());
+        let mut sim = SimCompute::from_manifest(&manifest);
+        sim.compress_delay = Duration::from_micros(200);
+        sim.infer_delay = Duration::from_micros(200);
+        let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(sc.comp_len_max));
+        cfg.max_batch = 8;
+        cfg.max_wait = Duration::from_millis(1);
+        cfg.max_pending = 4096;
+        cfg.kv_budget_bytes = Some(64 << 20);
+        let (ready_tx, ready_rx) = channel();
+        let server = std::thread::spawn(move || {
+            serve_with_backend(&manifest, Box::new(sim), cfg, Some(ready_tx))
+        });
+        let addr = ready_rx.recv()?;
+        let n_clients = 8usize;
+        let rounds = 50usize;
+        let t0 = std::time::Instant::now();
+        let mut handles = Vec::new();
+        for c in 0..n_clients {
+            let addr = addr.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).unwrap();
+                let session = format!("bench{c}");
+                for r in 0..rounds {
+                    client.add_context(&session, &[1, 2, 3, 4]).unwrap();
+                    let next = client.query(&session, &[(r % 30 + 1) as i32], 3).unwrap();
+                    assert_eq!(next.len(), 3);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("bench client");
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let total = (n_clients * rounds) as f64;
+        let mut admin = Client::connect(&addr)?;
+        let stats = admin.stats()?;
+        let sessions = stats.get("sessions")?.usize()?;
+        admin.shutdown()?;
+        server.join().expect("server thread")?;
+        rows.push(vec![
+            "serve/tcp-ctx+query".into(),
+            format!("{:.3}", secs * 1e3 / total),
+            format!("{:.0} rounds/s across {sessions} sessions", total / secs),
+        ]);
     }
 
     print_table("coordinator overhead (host-side)", &["op", "mean ms", "note"], &rows);

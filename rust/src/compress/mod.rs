@@ -211,6 +211,129 @@ impl<'rt> Engine<'rt> {
     }
 }
 
+/// Backend abstraction over the two serving ops. [`Engine`] is the XLA
+/// implementation; [`SimCompute`] is a deterministic host-side
+/// implementation used by protocol-level server tests and host-only
+/// benches, where AOT artifacts are unavailable or irrelevant.
+pub trait Compute {
+    /// Active `<COMP>` length per compressed chunk.
+    fn comp_len(&self) -> usize;
+    /// h(t) = g_comp(Mem(t-1), c(t)) for a batch of items.
+    fn compress(&self, items: &[CompressItem]) -> Result<Vec<CompressedChunk>>;
+    /// Logits rows `[Si, V]` for a batch of memory-conditioned inputs.
+    fn infer(&self, items: &[InferItem]) -> Result<Vec<Tensor>>;
+}
+
+impl<'rt> Compute for Engine<'rt> {
+    fn comp_len(&self) -> usize {
+        self.comp_len
+    }
+
+    fn compress(&self, items: &[CompressItem]) -> Result<Vec<CompressedChunk>> {
+        Engine::compress(self, items)
+    }
+
+    fn infer(&self, items: &[InferItem]) -> Result<Vec<Tensor>> {
+        Engine::infer(self, items)
+    }
+}
+
+/// Deterministic host-side backend: no XLA, no artifacts.
+///
+/// Compression summarises a chunk into slots filled with the chunk's
+/// scaled token mean; inference echoes each input token as the top-1
+/// next-token (logit 8.0 at `token % vocab`) plus a small
+/// memory-occupancy signal at slot `mem.len() % vocab`. This makes
+/// per-session ordering, memory growth, and eviction all observable
+/// through the serving protocol, which is what the server integration
+/// tests and the serve-throughput bench need. Optional per-batch delays
+/// model artifact execution time so scheduling behavior (batching,
+/// pipelining, head-of-line effects) can be exercised realistically.
+#[derive(Debug, Clone)]
+pub struct SimCompute {
+    pub layers: usize,
+    pub d_model: usize,
+    pub vocab: usize,
+    pub input_max: usize,
+    pub comp_len: usize,
+    /// Simulated wall-clock cost per compress batch.
+    pub compress_delay: std::time::Duration,
+    /// Simulated wall-clock cost per infer batch.
+    pub infer_delay: std::time::Duration,
+}
+
+impl SimCompute {
+    pub fn new(
+        layers: usize,
+        d_model: usize,
+        vocab: usize,
+        input_max: usize,
+        comp_len: usize,
+    ) -> SimCompute {
+        SimCompute {
+            layers,
+            d_model,
+            vocab,
+            input_max,
+            comp_len,
+            compress_delay: std::time::Duration::ZERO,
+            infer_delay: std::time::Duration::ZERO,
+        }
+    }
+
+    pub fn from_manifest(m: &crate::model::Manifest) -> SimCompute {
+        SimCompute::new(
+            m.model.n_layers,
+            m.model.d_model,
+            m.model.vocab,
+            m.scenario.input_max,
+            m.scenario.comp_len_max,
+        )
+    }
+}
+
+impl Compute for SimCompute {
+    fn comp_len(&self) -> usize {
+        self.comp_len
+    }
+
+    fn compress(&self, items: &[CompressItem]) -> Result<Vec<CompressedChunk>> {
+        if !self.compress_delay.is_zero() {
+            std::thread::sleep(self.compress_delay);
+        }
+        items
+            .iter()
+            .map(|item| {
+                let sum: f32 = item.chunk.iter().map(|&t| t as f32).sum();
+                let fill = sum / item.chunk.len().max(1) as f32 / 1e3;
+                let n = self.layers * self.comp_len * self.d_model;
+                Ok(CompressedChunk { k: vec![fill; n], v: vec![fill; n], comp_len: self.comp_len })
+            })
+            .collect()
+    }
+
+    fn infer(&self, items: &[InferItem]) -> Result<Vec<Tensor>> {
+        if !self.infer_delay.is_zero() {
+            std::thread::sleep(self.infer_delay);
+        }
+        items
+            .iter()
+            .map(|item| {
+                if item.tokens.len() > self.input_max {
+                    bail!("input len {} > input_max {}", item.tokens.len(), self.input_max);
+                }
+                let mut rows = Tensor::zeros(&[self.input_max, self.vocab]);
+                for (i, &tok) in item.tokens.iter().enumerate() {
+                    let row = rows.row_mut(&[i]);
+                    row[tok.unsigned_abs() as usize % self.vocab] = 8.0;
+                    row[item.mem.len() % self.vocab] += 0.5;
+                }
+                Ok(rows)
+            })
+            .collect()
+    }
+}
+
 /// Next-token average log-likelihood of `target` given logits over the
 /// packed `[input ++ target]` rows (targets start at `input_len`).
 pub fn target_avg_loglik(logits: &Tensor, input_len: usize, target: &[i32]) -> f64 {
@@ -237,6 +360,25 @@ mod tests {
         let logits = Tensor::zeros(&[4, v]);
         let ll = target_avg_loglik(&logits, 2, &[3, 5]);
         assert!((ll - (1.0 / v as f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sim_compute_echoes_tokens_and_sees_memory() {
+        let sim = SimCompute::new(2, 4, 16, 8, 2);
+        let mut mem = MemoryStore::concat(2, 8, 4, 2);
+        let items = [CompressItem { mem: &mem, chunk: &[4, 6], pos_start: 0 }];
+        let h = sim.compress(&items).unwrap();
+        assert_eq!(h[0].k.len(), 2 * 2 * 4);
+        mem.update(&h[0]).unwrap();
+        assert_eq!(mem.len(), 2);
+        let items = [InferItem { mem: &mem, tokens: &[5, 9], pos_start: 0 }];
+        let rows = sim.infer(&items).unwrap();
+        // Top-1 at the last input position is the echoed token.
+        let row = rows[0].row(&[1]);
+        let top = row.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
+        assert_eq!(top, 9);
+        // Memory-occupancy signal sits at mem.len() % vocab.
+        assert!(row[2] > 0.0);
     }
 
     #[test]

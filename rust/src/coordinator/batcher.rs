@@ -3,8 +3,22 @@
 //!
 //! Ordering invariant: work items of one session execute in submission
 //! order (an inference that depends on a pending compression never jumps
-//! the queue). Batches are homogeneous in kind because the two artifacts
-//! differ. Flush policy: size-triggered or age-triggered (max_wait).
+//! the queue), and a batch holds AT MOST ONE item per session — batch
+//! staging snapshots session state (Mem(t-1), pos_cursor) before
+//! execution, so a second same-session item in one batch would read
+//! stale memory and clash on positions. Batches are homogeneous in kind
+//! because the two artifacts differ. Flush policy: size-triggered or
+//! age-triggered (max_wait).
+//!
+//! Scheduling policy: plain FIFO by default. With `infer_priority` set
+//! (the serving engine turns it on), ready inference batches are emitted
+//! ahead of unrelated sessions' compression backlog — queries are
+//! latency-sensitive, compressions are throughput work — while the
+//! per-session ordering invariant still holds (an infer never overtakes
+//! its own session's queued compress). A consecutive-override cap
+//! bounds compress starvation under sustained query load: after
+//! `PRIORITY_OVERRIDE_LIMIT` infer batches jump the front, one front
+//! batch is forced through, guaranteeing the backlog a fixed share.
 
 use std::collections::{HashSet, VecDeque};
 use std::time::{Duration, Instant};
@@ -24,18 +38,33 @@ pub struct WorkItem {
     pub submitted: Instant,
 }
 
+/// Max consecutive batches that may jump ahead of the front item's
+/// kind before fairness forces the front through (bounds starvation).
+const PRIORITY_OVERRIDE_LIMIT: u32 = 4;
+
 #[derive(Debug)]
 pub struct Batcher {
     queue: VecDeque<WorkItem>,
     next_seq: u64,
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Emit ready infer batches ahead of unrelated compress backlog.
+    pub infer_priority: bool,
+    /// Consecutive emissions that overrode the front item's kind.
+    overrides: u32,
 }
 
 impl Batcher {
     pub fn new(max_batch: usize, max_wait: Duration) -> Batcher {
         assert!(max_batch >= 1);
-        Batcher { queue: VecDeque::new(), next_seq: 0, max_batch, max_wait }
+        Batcher {
+            queue: VecDeque::new(),
+            next_seq: 0,
+            max_batch,
+            max_wait,
+            infer_priority: false,
+            overrides: 0,
+        }
     }
 
     /// Enqueue; returns the work-item sequence id.
@@ -56,6 +85,19 @@ impl Batcher {
         self.queue.len()
     }
 
+    /// Queued (unexecuted) items of `kind` for one session. The serving
+    /// front-end uses this to ack context chunks with the time step they
+    /// will actually land on (t+1, t+2, ... for chunks queued together).
+    pub fn queued_for(&self, session: &str, kind: WorkKind) -> usize {
+        self.queue.iter().filter(|w| w.kind == kind && w.session == session).count()
+    }
+
+    /// Sessions with any queued work (memory governance must not evict
+    /// these: their queued items reference session state).
+    pub fn pending_sessions(&self) -> HashSet<String> {
+        self.queue.iter().map(|w| w.session.clone()).collect()
+    }
+
     /// Would a batch be emitted right now?
     pub fn ready(&self, now: Instant) -> bool {
         if self.queue.len() >= self.max_batch {
@@ -67,16 +109,50 @@ impl Batcher {
             .unwrap_or(false)
     }
 
+    /// Batch kind for the next emission. FIFO: the front item's kind.
+    /// With `infer_priority`: Infer, if some queued infer is executable
+    /// (no earlier same-session compress) — unless the last
+    /// `PRIORITY_OVERRIDE_LIMIT` emissions already jumped the front, in
+    /// which case fairness forces the front through.
+    fn pick_kind(&self) -> WorkKind {
+        let front = self.queue.front().unwrap();
+        if !self.infer_priority || front.kind == WorkKind::Infer {
+            return front.kind;
+        }
+        if self.overrides >= PRIORITY_OVERRIDE_LIMIT {
+            return front.kind; // anti-starvation: the backlog gets a turn
+        }
+        let mut blocked: HashSet<&str> = HashSet::new();
+        for w in &self.queue {
+            match w.kind {
+                WorkKind::Infer if !blocked.contains(w.session.as_str()) => {
+                    return WorkKind::Infer;
+                }
+                WorkKind::Infer => {}
+                WorkKind::Compress => {
+                    blocked.insert(w.session.as_str());
+                }
+            }
+        }
+        front.kind
+    }
+
     /// Pop the next homogeneous batch (up to max_batch items of the
-    /// front item's kind), skipping items whose session has an earlier
+    /// picked kind), skipping items whose session has an earlier
     /// still-queued item of another kind — those stay queued, and the
     /// session is "blocked" for the rest of this scan.
     pub fn next_batch(&mut self, now: Instant, force: bool) -> Option<Vec<WorkItem>> {
         if self.queue.is_empty() || (!force && !self.ready(now)) {
             return None;
         }
-        let kind = self.queue.front().unwrap().kind;
+        let kind = self.pick_kind();
+        if kind == self.queue.front().unwrap().kind {
+            self.overrides = 0;
+        } else {
+            self.overrides += 1;
+        }
         let mut blocked: HashSet<String> = HashSet::new();
+        let mut taken: HashSet<String> = HashSet::new();
         let mut taken_idx = Vec::new();
         for (i, w) in self.queue.iter().enumerate() {
             if taken_idx.len() == self.max_batch {
@@ -85,11 +161,14 @@ impl Batcher {
             if blocked.contains(&w.session) {
                 continue;
             }
-            if w.kind == kind {
+            if w.kind == kind && !taken.contains(&w.session) {
+                taken.insert(w.session.clone());
                 taken_idx.push(i);
             } else {
-                // This session has an unexecuted earlier item of the other
-                // kind — later items of this session must wait.
+                // Either this session already has an item in the batch
+                // (staging snapshots state, so a second item must wait
+                // for the next batch) or it has an unexecuted earlier
+                // item of the other kind — later items must wait.
                 blocked.insert(w.session.clone());
             }
         }
@@ -158,10 +237,99 @@ mod tests {
     }
 
     #[test]
+    fn one_item_per_session_per_batch() {
+        // Batch staging snapshots Mem(t-1)/pos_cursor per session, so
+        // two chunks of one session must land in successive batches.
+        let mut b = Batcher::new(8, Duration::ZERO);
+        b.push("s", WorkKind::Compress, vec![1]);
+        b.push("s", WorkKind::Compress, vec![2]);
+        b.push("t", WorkKind::Compress, vec![3]);
+        let batch = b.next_batch(Instant::now(), true).unwrap();
+        let sessions: Vec<&str> = batch.iter().map(|w| w.session.as_str()).collect();
+        assert_eq!(sessions, vec!["s", "t"]);
+        assert_eq!(batch[0].tokens, vec![1]);
+        let batch = b.next_batch(Instant::now(), true).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].tokens, vec![2]);
+    }
+
+    #[test]
+    fn infer_priority_jumps_unrelated_compress_backlog() {
+        let mut b = Batcher::new(4, Duration::ZERO);
+        b.infer_priority = true;
+        for i in 0..6 {
+            b.push("bulk", WorkKind::Compress, vec![i]);
+        }
+        b.push("fast", WorkKind::Infer, vec![99]);
+        // The query batch is emitted first even though 6 compressions
+        // are ahead of it in arrival order.
+        let batch = b.next_batch(Instant::now(), true).unwrap();
+        assert_eq!(item_kinds(&batch), vec![WorkKind::Infer]);
+        assert_eq!(batch[0].session, "fast");
+        // Then the compress backlog drains in order.
+        let batch = b.next_batch(Instant::now(), true).unwrap();
+        assert_eq!(item_kinds(&batch), vec![WorkKind::Compress; 4]);
+    }
+
+    #[test]
+    fn infer_priority_never_overtakes_own_sessions_compress() {
+        let mut b = Batcher::new(4, Duration::ZERO);
+        b.infer_priority = true;
+        b.push("s", WorkKind::Compress, vec![1]);
+        b.push("s", WorkKind::Infer, vec![2]); // depends on the compress
+        // No executable infer exists: the compress batch goes first.
+        let batch = b.next_batch(Instant::now(), true).unwrap();
+        assert_eq!(item_kinds(&batch), vec![WorkKind::Compress]);
+        let batch = b.next_batch(Instant::now(), true).unwrap();
+        assert_eq!(item_kinds(&batch), vec![WorkKind::Infer]);
+    }
+
+    #[test]
+    fn infer_priority_override_cap_prevents_compress_starvation() {
+        // One compress at the front, then a steady stream of queries
+        // from distinct sessions: at most PRIORITY_OVERRIDE_LIMIT infer
+        // batches may jump before the compress is forced through.
+        let mut b = Batcher::new(1, Duration::ZERO);
+        b.infer_priority = true;
+        b.push("bulk", WorkKind::Compress, vec![1]);
+        for i in 0..8 {
+            b.push(&format!("f{i}"), WorkKind::Infer, vec![2]);
+        }
+        let mut kinds = Vec::new();
+        while b.pending() > 0 {
+            let batch = b.next_batch(Instant::now(), true).unwrap();
+            kinds.push(batch[0].kind);
+        }
+        let compress_at = kinds.iter().position(|k| *k == WorkKind::Compress).unwrap();
+        assert_eq!(
+            compress_at as u32,
+            super::PRIORITY_OVERRIDE_LIMIT,
+            "compress must run after exactly the override cap: {kinds:?}"
+        );
+        assert_eq!(kinds.len(), 9);
+    }
+
+    #[test]
+    fn queued_for_and_pending_sessions() {
+        let mut b = Batcher::new(4, Duration::ZERO);
+        b.push("u", WorkKind::Compress, vec![1]);
+        b.push("u", WorkKind::Compress, vec![2]);
+        b.push("u", WorkKind::Infer, vec![3]);
+        b.push("v", WorkKind::Infer, vec![4]);
+        assert_eq!(b.queued_for("u", WorkKind::Compress), 2);
+        assert_eq!(b.queued_for("u", WorkKind::Infer), 1);
+        assert_eq!(b.queued_for("w", WorkKind::Compress), 0);
+        let sessions = b.pending_sessions();
+        assert!(sessions.contains("u") && sessions.contains("v"));
+        assert_eq!(sessions.len(), 2);
+    }
+
+    #[test]
     fn property_every_item_emitted_once_in_session_order() {
         crate::util::proptest::check("batcher-order", 60, |rng| {
             let max_batch = rng.range(1, 6);
             let mut b = Batcher::new(max_batch, Duration::ZERO);
+            b.infer_priority = rng.bool(0.5);
             let sessions = ["s0", "s1", "s2"];
             let n = rng.range(1, 40);
             let mut submitted: Vec<(u64, String)> = Vec::new();

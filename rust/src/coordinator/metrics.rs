@@ -48,6 +48,12 @@ pub struct Metrics {
     pub queue_latency: LatencyAcc,
     pub peak_kv_bytes: usize,
     pub tokens_compressed: u64,
+    /// Requests refused by admission control (bounded pending queue).
+    pub rejected_overload: u64,
+    /// Sessions evicted by the global KV-byte budget.
+    pub sessions_evicted: u64,
+    /// Sessions reaped by the idle TTL.
+    pub sessions_reaped: u64,
 }
 
 impl Metrics {
@@ -73,6 +79,7 @@ impl Metrics {
              compress: mean {:.2} ms, p95 {:.2} ms ({} calls)\n\
              infer:    mean {:.2} ms, p95 {:.2} ms ({} calls)\n\
              queue:    mean {:.2} ms, p95 {:.2} ms\n\
+             overload rejections: {}, sessions evicted: {} (budget) + {} (idle ttl)\n\
              peak compressed-KV: {:.2} MB, tokens compressed: {}",
             self.requests,
             self.compressions,
@@ -87,6 +94,9 @@ impl Metrics {
             self.infer_latency.count(),
             self.queue_latency.mean(),
             self.queue_latency.percentile(95.0),
+            self.rejected_overload,
+            self.sessions_evicted,
+            self.sessions_reaped,
             self.peak_kv_bytes as f64 / 1e6,
             self.tokens_compressed,
         )

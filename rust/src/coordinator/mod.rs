@@ -6,30 +6,38 @@
 //! per-session order), and the executor stages each batch into the AOT
 //! artifacts via the compression engine. Memory per session is a compact
 //! Mem(t) instead of raw context KV — the whole point of the paper.
+//!
+//! The execution backend is pluggable ([`Compute`]): the XLA engine in
+//! production, a deterministic host-side simulator in protocol tests and
+//! host-only benches. Memory governance (global KV budget, idle-session
+//! reaping) lives here so the serving front-end stays a thin pump loop.
 
 pub mod batcher;
 pub mod metrics;
 pub mod session;
 
 use std::collections::HashMap;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::compress::{CompressItem, Engine, InferItem};
+use crate::compress::{CompressItem, Compute, Engine, InferItem};
 use crate::coordinator::batcher::{Batcher, WorkItem, WorkKind};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::session::{SessionManager, SessionPolicy};
+use crate::model::manifest::Manifest;
 use crate::model::Checkpoint;
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 
 pub struct Coordinator<'rt> {
-    pub engine: Engine<'rt>,
+    backend: Box<dyn Compute + 'rt>,
     pub sessions: SessionManager,
     pub batcher: Batcher,
     pub metrics: Metrics,
     results: HashMap<u64, Tensor>,
+    /// Seqs of infer items whose batch failed (consumed via `take_failed`).
+    failed: Vec<u64>,
 }
 
 impl<'rt> Coordinator<'rt> {
@@ -41,14 +49,27 @@ impl<'rt> Coordinator<'rt> {
         max_wait: std::time::Duration,
     ) -> Result<Coordinator<'rt>> {
         let engine = Engine::new(rt, ck, policy.comp_len)?;
-        let sessions = SessionManager::with_policy(&rt.manifest, policy);
-        Ok(Coordinator {
-            engine,
+        Ok(Self::with_backend(&rt.manifest, Box::new(engine), policy, max_batch, max_wait))
+    }
+
+    /// Build a coordinator over any [`Compute`] backend (the server's
+    /// test path and host-only benches inject [`crate::compress::SimCompute`]).
+    pub fn with_backend(
+        manifest: &Manifest,
+        backend: Box<dyn Compute + 'rt>,
+        policy: SessionPolicy,
+        max_batch: usize,
+        max_wait: std::time::Duration,
+    ) -> Coordinator<'rt> {
+        let sessions = SessionManager::with_policy(manifest, policy);
+        Coordinator {
+            backend,
             sessions,
             batcher: Batcher::new(max_batch, max_wait),
             metrics: Metrics::default(),
             results: HashMap::new(),
-        })
+            failed: Vec::new(),
+        }
     }
 
     /// Enqueue a new context chunk c(t) for a session (compression).
@@ -66,6 +87,11 @@ impl<'rt> Coordinator<'rt> {
         self.batcher.push(session, WorkKind::Infer, input)
     }
 
+    /// Queued-but-unexecuted work items (admission control reads this).
+    pub fn pending(&self) -> usize {
+        self.batcher.pending()
+    }
+
     /// Process at most one batch. Returns items processed (0 = idle).
     pub fn pump(&mut self, force: bool) -> Result<usize> {
         let now = Instant::now();
@@ -78,9 +104,17 @@ impl<'rt> Coordinator<'rt> {
         self.metrics.record_batch(batch.len());
         let kind = batch[0].kind;
         let t = Instant::now();
-        match kind {
-            WorkKind::Compress => self.run_compress(&batch)?,
-            WorkKind::Infer => self.run_infer(&batch)?,
+        let ran = match kind {
+            WorkKind::Compress => self.run_compress(&batch),
+            WorkKind::Infer => self.run_infer(&batch),
+        };
+        if let Err(e) = ran {
+            // Record exactly which queries died with this batch so the
+            // caller can fail those — and only those — requesters.
+            if kind == WorkKind::Infer {
+                self.failed.extend(batch.iter().map(|w| w.seq));
+            }
+            return Err(e);
         }
         let el = t.elapsed();
         match kind {
@@ -107,12 +141,49 @@ impl<'rt> Coordinator<'rt> {
         self.results.remove(&seq)
     }
 
+    /// Drop all undelivered results (the server calls this when nobody
+    /// is waiting, so orphaned logits do not accumulate).
+    pub fn clear_results(&mut self) {
+        self.results.clear();
+    }
+
+    /// Seqs of queries whose batch failed since the last call.
+    pub fn take_failed(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.failed)
+    }
+
+    /// Enforce a global compressed-KV budget: evict oldest-created idle
+    /// sessions until under `max_bytes`. Sessions with queued work are
+    /// never evicted (their batch staging holds memory references).
+    /// Returns the evicted session ids; counts land in `metrics`.
+    pub fn enforce_kv_budget(&mut self, max_bytes: usize) -> Vec<String> {
+        if self.sessions.total_kv_bytes() <= max_bytes {
+            return Vec::new(); // common case: no protected-set allocation
+        }
+        let protected = self.batcher.pending_sessions();
+        let evicted = self.sessions.evict_to_budget_protected(max_bytes, &protected);
+        self.metrics.sessions_evicted += evicted.len() as u64;
+        evicted
+    }
+
+    /// Reap sessions idle for at least `ttl` (no queued work). Returns
+    /// the reaped ids; counts land in `metrics`.
+    pub fn reap_idle(&mut self, ttl: Duration, now: Instant) -> Vec<String> {
+        let protected = self.batcher.pending_sessions();
+        let reaped = self.sessions.reap_idle(ttl, now, &protected);
+        self.metrics.sessions_reaped += reaped.len() as u64;
+        reaped
+    }
+
     fn run_compress(&mut self, batch: &[WorkItem]) -> Result<()> {
-        let comp_len = self.engine.comp_len;
+        let comp_len = self.backend.comp_len();
         // Graceful concat overflow: evict oldest compressed chunks first
-        // (the streaming policy of Figure 9 applied to serving).
+        // (the streaming policy of Figure 9 applied to serving). Sessions
+        // are re-created if governance evicted them while work was queued
+        // (defensive: governance skips pending sessions, but a removed
+        // session must degrade to empty memory, not a panic).
         for w in batch {
-            let s = self.sessions.get_mut(&w.session)?;
+            let s = self.sessions.get_or_create(&w.session);
             if s.mem.free_slots() != usize::MAX && s.mem.free_slots() < comp_len {
                 s.mem.evict_chunks(1);
             }
@@ -124,7 +195,7 @@ impl<'rt> Coordinator<'rt> {
                 CompressItem { mem: &s.mem, chunk: &w.tokens, pos_start: s.pos_cursor }
             })
             .collect();
-        let compressed = self.engine.compress(&items)?;
+        let compressed = self.backend.compress(&items)?;
         for (w, h) in batch.iter().zip(compressed) {
             let s = self.sessions.get_mut(&w.session)?;
             s.mem.update(&h)?;
@@ -137,6 +208,9 @@ impl<'rt> Coordinator<'rt> {
     }
 
     fn run_infer(&mut self, batch: &[WorkItem]) -> Result<()> {
+        for w in batch {
+            self.sessions.get_or_create(&w.session);
+        }
         let items: Vec<InferItem> = batch
             .iter()
             .map(|w| {
@@ -144,10 +218,93 @@ impl<'rt> Coordinator<'rt> {
                 InferItem { mem: &s.mem, tokens: &w.tokens, pos_start: s.pos_cursor }
             })
             .collect();
-        let logits = self.engine.infer(&items)?;
+        let logits = self.backend.infer(&items)?;
         for (w, l) in batch.iter().zip(logits) {
             self.results.insert(w.seq, l);
         }
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::SimCompute;
+
+    fn sim_coordinator(max_batch: usize) -> Coordinator<'static> {
+        let m = Manifest::toy();
+        let sim = SimCompute::from_manifest(&m);
+        Coordinator::with_backend(
+            &m,
+            Box::new(sim),
+            SessionPolicy::concat(m.scenario.comp_len_max),
+            max_batch,
+            Duration::ZERO,
+        )
+    }
+
+    #[test]
+    fn sim_backend_end_to_end() {
+        let mut coord = sim_coordinator(4);
+        coord.add_context("u1", vec![4, 5, 6]);
+        coord.add_context("u1", vec![7, 8]);
+        let seq = coord.query("u1", vec![9]);
+        coord.run_until_idle().unwrap();
+        let logits = coord.take_result(seq).expect("result");
+        let row = logits.row(&[0]);
+        let top = row.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
+        assert_eq!(top, 9);
+        assert_eq!(coord.sessions.get("u1").unwrap().t, 2);
+        assert_eq!(coord.metrics.compressions, 2);
+        assert_eq!(coord.metrics.inferences, 1);
+        assert!(coord.sessions.total_kv_bytes() > 0);
+    }
+
+    #[test]
+    fn kv_budget_enforcement_skips_pending_sessions() {
+        let mut coord = sim_coordinator(8);
+        for id in 0..4 {
+            coord.add_context(&format!("s{id}"), vec![id, id + 1]);
+        }
+        coord.run_until_idle().unwrap();
+        let per = coord.sessions.get("s0").unwrap().mem.kv_bytes();
+        assert!(per > 0);
+        // s3 gets new queued work: protected from eviction.
+        coord.add_context("s3", vec![1, 2]);
+        let evicted = coord.enforce_kv_budget(per);
+        assert_eq!(evicted, vec!["s0", "s1", "s2"]);
+        assert_eq!(coord.metrics.sessions_evicted, 3);
+        assert!(coord.sessions.get("s3").is_ok());
+        assert!(coord.sessions.total_kv_bytes() <= per);
+        coord.run_until_idle().unwrap();
+    }
+
+    #[test]
+    fn idle_reaping_respects_ttl_and_pending() {
+        let mut coord = sim_coordinator(8);
+        coord.add_context("old", vec![1]);
+        coord.run_until_idle().unwrap();
+        coord.add_context("busy", vec![2]); // stays queued
+        let later = Instant::now() + Duration::from_secs(60);
+        let reaped = coord.reap_idle(Duration::from_secs(30), later);
+        assert_eq!(reaped, vec!["old"]);
+        assert_eq!(coord.metrics.sessions_reaped, 1);
+        assert!(coord.sessions.get("busy").is_ok());
+        coord.run_until_idle().unwrap();
+    }
+
+    #[test]
+    fn query_after_eviction_degrades_to_empty_memory() {
+        let mut coord = sim_coordinator(4);
+        coord.add_context("u", vec![5, 6]);
+        coord.run_until_idle().unwrap();
+        assert!(coord.sessions.get("u").unwrap().mem.len() > 0);
+        let evicted = coord.enforce_kv_budget(0);
+        assert_eq!(evicted, vec!["u"]);
+        let seq = coord.query("u", vec![7]);
+        coord.run_until_idle().unwrap();
+        let logits = coord.take_result(seq).expect("answered from fresh session");
+        assert!(logits.row(&[0]).iter().all(|x| x.is_finite()));
+        assert_eq!(coord.sessions.get("u").unwrap().mem.len(), 0);
     }
 }

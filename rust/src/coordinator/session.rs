@@ -2,7 +2,8 @@
 //! task / dialogue), holding its compressed context memory Mem(t) and
 //! position cursor. The vLLM-router analogue of per-sequence state.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
@@ -39,6 +40,8 @@ pub struct Session {
     pub created: u64,
     /// Raw context tokens absorbed (for KV accounting comparisons).
     pub raw_context_tokens: usize,
+    /// Last touch (create or new work) — drives idle-session reaping.
+    pub last_used: Instant,
 }
 
 pub struct SessionManager {
@@ -97,10 +100,13 @@ impl SessionManager {
                     t: 0,
                     created: self.counter,
                     raw_context_tokens: 0,
+                    last_used: Instant::now(),
                 },
             );
         }
-        self.sessions.get_mut(id).unwrap()
+        let s = self.sessions.get_mut(id).unwrap();
+        s.last_used = Instant::now();
+        s
     }
 
     pub fn get(&self, id: &str) -> Result<&Session> {
@@ -138,18 +144,62 @@ impl SessionManager {
     /// Evict the least-recently-created sessions until at most `max_bytes`
     /// of compressed KV remain. Returns evicted session ids.
     pub fn evict_to_budget(&mut self, max_bytes: usize) -> Vec<String> {
+        self.evict_to_budget_protected(max_bytes, &HashSet::new())
+    }
+
+    /// Budget eviction skipping `protected` ids (sessions with queued
+    /// work). One total-bytes pass + one sort by creation order — O(n
+    /// log n) for any number of evictions, instead of rescanning the
+    /// whole map per evicted session.
+    pub fn evict_to_budget_protected(
+        &mut self,
+        max_bytes: usize,
+        protected: &HashSet<String>,
+    ) -> Vec<String> {
+        let mut total = self.total_kv_bytes();
+        if total <= max_bytes {
+            return Vec::new();
+        }
+        let mut candidates: Vec<(u64, String, usize)> = self
+            .sessions
+            .values()
+            .filter(|s| !protected.contains(&s.id))
+            .map(|s| (s.created, s.id.clone(), s.mem.kv_bytes()))
+            .collect();
+        candidates.sort_unstable_by_key(|(created, _, _)| *created);
         let mut evicted = Vec::new();
-        while self.total_kv_bytes() > max_bytes && !self.sessions.is_empty() {
-            let oldest = self
-                .sessions
-                .values()
-                .min_by_key(|s| s.created)
-                .map(|s| s.id.clone())
-                .unwrap();
-            self.sessions.remove(&oldest);
-            evicted.push(oldest);
+        for (_, id, bytes) in candidates {
+            if total <= max_bytes {
+                break;
+            }
+            self.sessions.remove(&id);
+            total -= bytes;
+            evicted.push(id);
         }
         evicted
+    }
+
+    /// Remove sessions idle for at least `ttl` (skipping `protected`).
+    /// Returns the reaped ids in creation order.
+    pub fn reap_idle(
+        &mut self,
+        ttl: Duration,
+        now: Instant,
+        protected: &HashSet<String>,
+    ) -> Vec<String> {
+        let mut idle: Vec<(u64, String)> = self
+            .sessions
+            .values()
+            .filter(|s| !protected.contains(&s.id))
+            .filter(|s| now.saturating_duration_since(s.last_used) >= ttl)
+            .map(|s| (s.created, s.id.clone()))
+            .collect();
+        idle.sort_unstable_by_key(|(created, _)| *created);
+        let ids: Vec<String> = idle.into_iter().map(|(_, id)| id).collect();
+        for id in &ids {
+            self.sessions.remove(id);
+        }
+        ids
     }
 
     pub fn ids(&self) -> Vec<String> {
@@ -250,5 +300,59 @@ mod tests {
         let evicted = sm.evict_to_budget(per);
         assert_eq!(evicted, vec!["a", "b"]);
         assert_eq!(sm.len(), 1);
+    }
+
+    #[test]
+    fn many_session_eviction_is_creation_ordered_and_exact() {
+        let m = manifest();
+        let mut sm = SessionManager::with_policy(&m, SessionPolicy::concat(2));
+        let n = 200usize;
+        for i in 0..n {
+            let s = sm.get_or_create(&format!("s{i:03}"));
+            s.mem.update(&fake_chunk(2, 2, 8)).unwrap();
+        }
+        let per = 2 * 2 * 2 * 8 * 4;
+        assert_eq!(sm.total_kv_bytes(), n * per);
+        // Keep room for 50 sessions: the oldest 150 must go, in order.
+        let evicted = sm.evict_to_budget(50 * per);
+        assert_eq!(evicted.len(), 150);
+        for (i, id) in evicted.iter().enumerate() {
+            assert_eq!(id, &format!("s{i:03}"));
+        }
+        assert_eq!(sm.len(), 50);
+        assert!(sm.total_kv_bytes() <= 50 * per);
+        assert!(sm.get("s150").is_ok() && sm.get("s149").is_err());
+    }
+
+    #[test]
+    fn protected_sessions_survive_budget_eviction() {
+        let m = manifest();
+        let mut sm = SessionManager::with_policy(&m, SessionPolicy::concat(2));
+        for id in ["a", "b", "c"] {
+            sm.get_or_create(id).mem.update(&fake_chunk(2, 2, 8)).unwrap();
+        }
+        let protected: std::collections::HashSet<String> = ["a".to_string()].into_iter().collect();
+        let evicted = sm.evict_to_budget_protected(0, &protected);
+        assert_eq!(evicted, vec!["b", "c"]);
+        assert!(sm.get("a").is_ok());
+    }
+
+    #[test]
+    fn reap_idle_uses_last_used_and_protection() {
+        let m = manifest();
+        let mut sm = SessionManager::with_policy(&m, SessionPolicy::concat(2));
+        sm.get_or_create("stale");
+        sm.get_or_create("fresh");
+        sm.get_or_create("pinned");
+        // Evaluate "now" in the future instead of backdating last_used
+        // (Instant cannot always represent times before process start).
+        let eval_at = Instant::now() + Duration::from_secs(120);
+        sm.get_or_create("fresh").last_used = eval_at;
+        let protected: std::collections::HashSet<String> =
+            ["pinned".to_string()].into_iter().collect();
+        let reaped = sm.reap_idle(Duration::from_secs(60), eval_at, &protected);
+        assert_eq!(reaped, vec!["stale"]);
+        assert!(sm.get("fresh").is_ok() && sm.get("pinned").is_ok());
+        assert!(sm.get("stale").is_err());
     }
 }

@@ -114,7 +114,8 @@ pub fn cli_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `ccm serve --port 7878 --method ccm-concat`
+/// `ccm serve --port 7878 --method ccm-concat [--max-pending 256]
+/// [--kv-budget-mb 512] [--session-ttl-secs 600]`
 pub fn cli_serve(args: &Args) -> Result<()> {
     let config = args.str("config", "main");
     let rt = runtime::Runtime::from_config(&config)?;
@@ -131,18 +132,25 @@ pub fn cli_serve(args: &Args) -> Result<()> {
         _ => coordinator::session::SessionPolicy::concat(comp_len),
     };
     let port = args.usize("port", 7878)?;
-    rt.warmup(&["compress_chunk_b1", "compress_chunk_b8", "infer_with_mem_b1", "infer_with_mem_b8"])?;
-    server::serve(
-        &rt,
-        &ck,
-        server::ServerConfig {
-            addr: format!("127.0.0.1:{port}"),
-            policy,
-            max_batch: args.usize("max-batch", 8)?,
-            max_wait: std::time::Duration::from_millis(args.u64("max-wait-ms", 2)?),
-        },
-        None,
-    )
+    rt.warmup(&[
+        "compress_chunk_b1",
+        "compress_chunk_b8",
+        "infer_with_mem_b1",
+        "infer_with_mem_b8",
+    ])?;
+    let mut cfg = server::ServerConfig::new(format!("127.0.0.1:{port}"), policy);
+    cfg.max_batch = args.usize("max-batch", 8)?;
+    cfg.max_wait = std::time::Duration::from_millis(args.u64("max-wait-ms", 2)?);
+    cfg.max_pending = args.usize("max-pending", 256)?;
+    let kv_budget_mb = args.usize("kv-budget-mb", 0)?;
+    if kv_budget_mb > 0 {
+        cfg.kv_budget_bytes = Some(kv_budget_mb * (1 << 20));
+    }
+    let ttl_secs = args.u64("session-ttl-secs", 0)?;
+    if ttl_secs > 0 {
+        cfg.session_ttl = Some(std::time::Duration::from_secs(ttl_secs));
+    }
+    server::serve(&rt, &ck, cfg, None)
 }
 
 /// `ccm stream --stream-tokens 2048`

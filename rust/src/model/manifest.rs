@@ -119,6 +119,52 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// Tiny fixed-shape manifest for tests and host-side benches that
+    /// exercise coordinator/server paths without AOT artifacts (the
+    /// single source of truth for toy dimensions — unit tests, the
+    /// server integration tests, and benches all share it).
+    pub fn toy() -> Manifest {
+        Manifest {
+            config_name: "toy".into(),
+            dir: PathBuf::from("."),
+            model: ModelConfig {
+                name: "toy".into(),
+                vocab: 32,
+                d_model: 4,
+                n_layers: 2,
+                n_heads: 2,
+                d_ff: 8,
+                max_pos: 4096,
+                lora_rank: 2,
+                lora_alpha: 4.0,
+                pad_id: 0,
+                bos_id: 1,
+                sep_id: 2,
+                comp_id: 3,
+                d_head: 2,
+            },
+            scenario: ScenarioConfig {
+                t_max: 8,
+                chunk_max: 8,
+                comp_len_max: 2,
+                input_max: 8,
+                seq_train: 64,
+                mem_slots: 8,
+                batch_train: 2,
+                infer_batches: vec![1, 4],
+                decode_cache: 16,
+                rmt_unroll: 2,
+                rmt_mem: 2,
+            },
+            base_layout: ParamLayout { total: 4, entries: vec![] },
+            lora_layout: ParamLayout { total: 4, entries: vec![] },
+            artifacts: vec![],
+            mask_goldens: vec![],
+        }
+    }
+}
+
+impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let src = std::fs::read_to_string(&path)

@@ -3,29 +3,78 @@
 //! Connection threads parse newline-delimited JSON requests and forward
 //! them over a channel to the single executor thread that owns the PJRT
 //! runtime (XLA executables are not Sync; one executor per device is the
-//! standard topology). The executor batches across connections via the
-//! coordinator's dynamic batcher and replies through per-request channels.
+//! standard topology). The executor is a continuously-pumped pipeline:
+//! each turn it (1) drains whatever requests are queued, (2) executes at
+//! most one batch through the coordinator, and (3) delivers any finished
+//! query results — so a fast query is never stuck behind another
+//! session's full queue drain (no head-of-line blocking), and intake
+//! keeps flowing while batches execute.
 //!
-//! Protocol (one JSON object per line):
+//! ## Protocol (one JSON object per line)
+//!
+//! Requests:
 //!   {"op":"context","session":"u1","tokens":[5,6,7]}
 //!   {"op":"query","session":"u1","tokens":[9,2],"topk":5}
 //!   {"op":"stats"}            {"op":"shutdown"}
+//!
 //! Responses:
 //!   {"ok":true,"kind":"context","t":3,"kv_bytes":12288}
+//!       `t` is the time step the chunk will land on: two chunks queued
+//!       back-to-back for one session ack t+1 and t+2. `kv_bytes` is the
+//!       session's compressed-KV size at ack time (pre-compression).
 //!   {"ok":true,"kind":"query","next":[[tok,logprob],...]}
+//!   {"ok":true,"kind":"stats",...}
+//!       Numeric fields: sessions, kv_bytes, kv_budget_bytes (or null),
+//!       pending (queued work items), waiting (queries in flight),
+//!       requests, compressions, inferences, batches, rejected_overload,
+//!       sessions_evicted, sessions_reaped, peak_kv_bytes; plus `report`
+//!       (the human-readable metrics block, JSON-escaped).
+//!   {"ok":true,"kind":"shutdown"}
+//!       Sent after in-flight work has drained; the listener is closed
+//!       and the acceptor thread joined before `serve` returns.
+//!
+//! Error responses (admission control and lifecycle):
+//!   {"ok":false,"error":"overloaded","pending":N}
+//!       The bounded pending queue (`max_pending`) is full. Back off and
+//!       retry; the connection stays open.
+//!   {"ok":false,"error":"shutting_down","pending":N}
+//!       A shutdown is draining; no new work is admitted.
+//!   {"ok":false,"error":"too_long","what":"chunk"|"input","got":N,"limit":N}
+//!       Token list exceeds the artifact shape (chunk_max / input_max);
+//!       validated at admission so it never fails a batch.
+//!   {"ok":false,"error":"timeout"}
+//!       The executor did not answer within the per-request deadline.
+//!   {"ok":false,"error":"..."} for malformed requests.
+//!
+//! ## Memory governance
+//!
+//! With `kv_budget_bytes` set, the executor enforces a global
+//! compressed-KV budget after every executed batch: oldest-created idle
+//! sessions are evicted (their memory is dropped) until under budget.
+//! Sessions with queued work are never evicted. With `session_ttl` set,
+//! sessions idle longer than the TTL are reaped periodically. Both are
+//! counted in `stats` (`sessions_evicted`, `sessions_reaped`). A later
+//! request for an evicted session transparently starts a fresh session
+//! (its compressed memory is gone — that is the cost of the budget).
 
+use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::compress::{Compute, Engine};
+use crate::coordinator::batcher::WorkKind;
 use crate::coordinator::session::SessionPolicy;
 use crate::coordinator::Coordinator;
+use crate::model::manifest::Manifest;
 use crate::model::Checkpoint;
 use crate::runtime::Runtime;
-use crate::util::json::Json;
+use crate::util::json::{escape, Json};
 
 #[derive(Debug)]
 pub enum Request {
@@ -57,25 +106,67 @@ impl Request {
     }
 }
 
-/// Executor-side handling of one request batch window.
+/// Serving configuration. `new` fills production-shaped defaults; set
+/// the public fields to tune.
 pub struct ServerConfig {
     pub addr: String,
     pub policy: SessionPolicy,
+    /// Artifact batch width the coordinator packs towards.
     pub max_batch: usize,
+    /// Dynamic-batching age trigger (how long a lone item waits).
     pub max_wait: Duration,
+    /// Admission control: queued work items beyond this are refused
+    /// with an `overloaded` reply instead of buffered without bound.
+    pub max_pending: usize,
+    /// Global compressed-KV budget across all sessions (bytes).
+    pub kv_budget_bytes: Option<usize>,
+    /// Idle-session TTL; idle sessions beyond it are reaped.
+    pub session_ttl: Option<Duration>,
+}
+
+impl ServerConfig {
+    pub fn new(addr: impl Into<String>, policy: SessionPolicy) -> ServerConfig {
+        ServerConfig {
+            addr: addr.into(),
+            policy,
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            max_pending: 256,
+            kv_budget_bytes: None,
+            session_ttl: None,
+        }
+    }
 }
 
 type Reply = Sender<String>;
 
-/// Run the server until a shutdown request arrives. `ready` receives the
-/// bound local address (tests bind port 0).
+/// Run the server until a shutdown request arrives, over the XLA engine.
+/// `ready` receives the bound local address (tests bind port 0).
 pub fn serve(
     rt: &Runtime,
     ck: &Checkpoint,
     cfg: ServerConfig,
     ready: Option<Sender<String>>,
 ) -> Result<()> {
+    let engine = Engine::new(rt, ck, cfg.policy.comp_len)?;
+    serve_with_backend(&rt.manifest, Box::new(engine), cfg, ready)
+}
+
+/// Run the server over any [`Compute`] backend (protocol tests and
+/// host-only benches inject [`crate::compress::SimCompute`]).
+pub fn serve_with_backend<'a>(
+    manifest: &Manifest,
+    backend: Box<dyn Compute + 'a>,
+    cfg: ServerConfig,
+    ready: Option<Sender<String>>,
+) -> Result<()> {
+    let policy = cfg.policy.clone();
+    let mut coord =
+        Coordinator::with_backend(manifest, backend, policy, cfg.max_batch, cfg.max_wait);
+    coord.batcher.infer_priority = true; // queries are latency-sensitive
+
     let listener = TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
+    listener.set_nonblocking(true).context("listener nonblocking")?;
     let local = listener.local_addr()?.to_string();
     crate::info!("serving on {local}");
     if let Some(tx) = ready {
@@ -83,21 +174,48 @@ pub fn serve(
     }
 
     let (req_tx, req_rx) = channel::<(Request, Reply)>();
+    let stop = Arc::new(AtomicBool::new(false));
 
-    // Acceptor thread: one reader thread per connection.
-    let acceptor = std::thread::spawn(move || {
-        for stream in listener.incoming() {
-            let Ok(stream) = stream else { continue };
-            let tx = req_tx.clone();
-            std::thread::spawn(move || {
-                let _ = handle_connection(stream, tx);
-            });
-        }
-    });
+    // Acceptor thread: polls the nonblocking listener so it can observe
+    // the stop flag; one reader thread per connection. The listener is
+    // dropped when this thread exits, releasing the port.
+    let acceptor = {
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let _ = stream.set_nonblocking(false);
+                        let tx = req_tx.clone();
+                        std::thread::spawn(move || {
+                            let _ = handle_connection(stream, tx);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(e) => {
+                        crate::debug!("accept error: {e}");
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                }
+            }
+        })
+    };
 
-    let result = executor_loop(rt, ck, &cfg, req_rx);
-    drop(acceptor); // acceptor exits when the process does
-    result
+    let limits = (manifest.scenario.chunk_max, manifest.scenario.input_max);
+    let result = executor_loop(coord, &cfg, limits, req_rx);
+    // Signal the acceptor and join it so the port is actually released
+    // before `serve` returns (the seed leaked both thread and port).
+    stop.store(true, Ordering::SeqCst);
+    let _ = acceptor.join();
+    // Only now — listener dropped, port free — ack the shutdown
+    // requesters: the ack's documented meaning is "port released".
+    let shutdown_replies = result?;
+    for reply in shutdown_replies {
+        let _ = reply.send("{\"ok\":true,\"kind\":\"shutdown\"}".into());
+    }
+    Ok(())
 }
 
 fn handle_connection(stream: TcpStream, tx: Sender<(Request, Reply)>) -> Result<()> {
@@ -122,14 +240,18 @@ fn handle_connection(stream: TcpStream, tx: Sender<(Request, Reply)>) -> Result<
                         writer.write_all(resp.as_bytes())?;
                         writer.write_all(b"\n")?;
                     }
-                    Err(_) => break,
+                    Err(RecvTimeoutError::Timeout) => {
+                        // Answer instead of silently dropping the client.
+                        writer.write_all(b"{\"ok\":false,\"error\":\"timeout\"}\n")?;
+                    }
+                    Err(RecvTimeoutError::Disconnected) => break,
                 }
                 if shutdown {
                     break;
                 }
             }
             Err(e) => {
-                let msg = format!("{{\"ok\":false,\"error\":{:?}}}\n", e.to_string());
+                let msg = format!("{{\"ok\":false,\"error\":{}}}\n", escape(&e.to_string()));
                 writer.write_all(msg.as_bytes())?;
             }
         }
@@ -137,92 +259,284 @@ fn handle_connection(stream: TcpStream, tx: Sender<(Request, Reply)>) -> Result<
     Ok(())
 }
 
+/// A query whose batch has not executed yet.
+struct WaitingQuery {
+    seq: u64,
+    reply: Reply,
+    input_len: usize,
+    topk: usize,
+}
+
+/// Executor state threaded through request admission.
+struct ExecState {
+    waiting: VecDeque<WaitingQuery>,
+    draining: bool,
+    /// Everyone who asked for shutdown; all are acked once drained.
+    shutdown_replies: Vec<Reply>,
+    /// Artifact shape limits (validated at admission so an oversized
+    /// request is a per-request error, not a batch-execution failure).
+    chunk_max: usize,
+    input_max: usize,
+}
+
+/// Runs until shutdown; returns the repliers to ack once the caller
+/// has released the listener.
 fn executor_loop(
-    rt: &Runtime,
-    ck: &Checkpoint,
+    mut coord: Coordinator,
     cfg: &ServerConfig,
+    (chunk_max, input_max): (usize, usize),
     rx: Receiver<(Request, Reply)>,
-) -> Result<()> {
-    let mut coord = Coordinator::new(rt, ck, cfg.policy.clone(), cfg.max_batch, cfg.max_wait)?;
-    // seq -> (reply channel, input_len, topk) for queries in flight.
-    let mut waiting: Vec<(u64, Reply, usize, usize)> = Vec::new();
+) -> Result<Vec<Reply>> {
+    let idle_wait = cfg.max_wait.max(Duration::from_millis(1));
+    let intake_cap = (cfg.max_batch * 4).max(32);
+    let mut st = ExecState {
+        waiting: VecDeque::new(),
+        draining: false,
+        shutdown_replies: Vec::new(),
+        chunk_max,
+        input_max,
+    };
+    let mut disconnected = false;
+    let mut last_reap = Instant::now();
     loop {
-        // Collect a batching window of requests.
-        let first = rx.recv_timeout(cfg.max_wait);
-        let mut incoming = Vec::new();
-        if let Ok(r) = first {
-            incoming.push(r);
-            while let Ok(r) = rx.try_recv() {
-                incoming.push(r);
-                if incoming.len() >= cfg.max_batch * 2 {
+        // 1. Intake: drain queued requests without stalling the pump.
+        let mut got = 0usize;
+        while got < intake_cap {
+            match rx.try_recv() {
+                Ok((req, reply)) => {
+                    admit(&mut coord, cfg, &mut st, req, reply);
+                    got += 1;
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    disconnected = true;
                     break;
                 }
             }
         }
-        let mut shutdown = false;
-        for (req, reply) in incoming {
-            match req {
-                Request::Context { session, tokens } => {
-                    coord.add_context(&session, tokens);
-                    // Context ingestion acks after the batch executes; we
-                    // ack immediately with the queued time step.
-                    let s = coord.sessions.get_or_create(&session);
-                    let msg = format!(
-                        "{{\"ok\":true,\"kind\":\"context\",\"t\":{},\"kv_bytes\":{}}}",
-                        s.t + 1,
-                        s.mem.kv_bytes()
-                    );
-                    let _ = reply.send(msg);
-                }
-                Request::Query { session, tokens, topk } => {
-                    let n = tokens.len();
-                    let seq = coord.query(&session, tokens);
-                    waiting.push((seq, reply, n, topk));
-                }
-                Request::Stats => {
-                    let msg = format!(
-                        "{{\"ok\":true,\"kind\":\"stats\",\"sessions\":{},\"kv_bytes\":{},\"report\":{:?}}}",
-                        coord.sessions.len(),
-                        coord.sessions.total_kv_bytes(),
-                        coord.metrics.report()
-                    );
-                    let _ = reply.send(msg);
-                }
-                Request::Shutdown => {
-                    let _ = reply.send("{\"ok\":true,\"kind\":\"shutdown\"}".into());
-                    shutdown = true;
+
+        // 2. Execute at most one batch (force while draining so the tail
+        //    flushes without waiting for age triggers), then immediately
+        //    deliver whatever finished — queries never wait for an
+        //    unrelated session's backlog to drain.
+        // A batch-execution failure must not kill the server (it owns
+        // every session's memory): fail exactly the queries whose batch
+        // died, leave unrelated queued work alone, and keep serving.
+        let n = match coord.pump(st.draining || disconnected) {
+            Ok(n) => n,
+            Err(e) => {
+                crate::info!("batch execution failed: {e:#}");
+                let msg = format!(
+                    "{{\"ok\":false,\"error\":{}}}",
+                    escape(&format!("execution failed: {e:#}"))
+                );
+                let failed = coord.take_failed();
+                st.waiting.retain(|w| {
+                    if failed.contains(&w.seq) {
+                        let _ = w.reply.send(msg.clone());
+                        false
+                    } else {
+                        true
+                    }
+                });
+                0
+            }
+        };
+        deliver_finished(&mut coord, &mut st.waiting);
+        if st.waiting.is_empty() {
+            // Any result with no waiting consumer is orphaned (its
+            // query was failed on a batch error): free it.
+            coord.clear_results();
+        }
+        if n > 0 {
+            // KV only grows inside pump, so enforcing right after keeps
+            // the server under budget at every observable point.
+            if let Some(budget) = cfg.kv_budget_bytes {
+                let evicted = coord.enforce_kv_budget(budget);
+                if !evicted.is_empty() {
+                    crate::debug!("kv budget {budget}: evicted {} sessions", evicted.len());
                 }
             }
         }
-        coord.run_until_idle()?;
-        // Deliver finished queries.
-        waiting.retain(|(seq, reply, input_len, topk)| {
-            if let Some(logits) = coord.take_result(*seq) {
-                let msg = format_query_response(&logits, *input_len, *topk);
-                let _ = reply.send(msg);
-                false
-            } else {
-                true
+
+        // 3. Idle-session reaping on a coarse timer.
+        if let Some(ttl) = cfg.session_ttl {
+            if last_reap.elapsed() >= Duration::from_millis(100) {
+                last_reap = Instant::now();
+                coord.reap_idle(ttl, Instant::now());
             }
-        });
-        if shutdown {
+        }
+
+        // 4. Graceful shutdown once in-flight work is drained.
+        if (st.draining || disconnected) && coord.pending() == 0 && st.waiting.is_empty() {
             crate::info!("shutdown: {}", coord.metrics.report());
-            return Ok(());
+            return Ok(std::mem::take(&mut st.shutdown_replies));
+        }
+
+        // 5. Nothing executed and nothing arrived: block for the next
+        //    request. With queued-but-unripe work, wake within max_wait
+        //    so the age trigger fires; fully idle, park long (a reap
+        //    tick if a TTL is set, else effectively until woken) rather
+        //    than spinning at millisecond cadence.
+        if n == 0 && got == 0 && !disconnected {
+            let fully_idle = coord.pending() == 0 && st.waiting.is_empty() && !st.draining;
+            let wait = if !fully_idle {
+                idle_wait
+            } else if cfg.session_ttl.is_some() {
+                Duration::from_millis(100)
+            } else {
+                Duration::from_secs(3600)
+            };
+            match rx.recv_timeout(wait) {
+                Ok((req, reply)) => admit(&mut coord, cfg, &mut st, req, reply),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => disconnected = true,
+            }
         }
     }
 }
 
+fn admit(
+    coord: &mut Coordinator,
+    cfg: &ServerConfig,
+    st: &mut ExecState,
+    req: Request,
+    reply: Reply,
+) {
+    match req {
+        Request::Context { session, tokens } => {
+            if let Some(refusal) = refuse(coord, cfg, st) {
+                let _ = reply.send(refusal);
+                return;
+            }
+            if tokens.len() > st.chunk_max {
+                let _ = reply.send(too_long("chunk", tokens.len(), st.chunk_max));
+                return;
+            }
+            coord.add_context(&session, tokens);
+            // Ack with the step the chunk will actually land on: t
+            // advances once per queued chunk, so two chunks queued in
+            // one window ack t+1 and t+2 (the seed acked t+1 twice).
+            let queued = coord.batcher.queued_for(&session, WorkKind::Compress);
+            let s = coord.sessions.get_or_create(&session);
+            let msg = format!(
+                "{{\"ok\":true,\"kind\":\"context\",\"t\":{},\"kv_bytes\":{}}}",
+                s.t + queued,
+                s.mem.kv_bytes()
+            );
+            let _ = reply.send(msg);
+        }
+        Request::Query { session, tokens, topk } => {
+            if let Some(refusal) = refuse(coord, cfg, st) {
+                let _ = reply.send(refusal);
+                return;
+            }
+            if tokens.len() > st.input_max {
+                let _ = reply.send(too_long("input", tokens.len(), st.input_max));
+                return;
+            }
+            let input_len = tokens.len();
+            let seq = coord.query(&session, tokens);
+            st.waiting.push_back(WaitingQuery { seq, reply, input_len, topk });
+        }
+        Request::Stats => {
+            let _ = reply.send(stats_json(coord, cfg, st.waiting.len()));
+        }
+        Request::Shutdown => {
+            // Every shutdown requester is acked only once the drain
+            // completes — the ack means "listener closed, port free".
+            st.draining = true;
+            st.shutdown_replies.push(reply);
+        }
+    }
+}
+
+/// `{"ok":false,"error":"too_long",...}` for oversized token lists.
+fn too_long(what: &str, got: usize, limit: usize) -> String {
+    format!(
+        "{{\"ok\":false,\"error\":\"too_long\",\"what\":\"{what}\",\"got\":{got},\"limit\":{limit}}}"
+    )
+}
+
+/// Admission control: refuse new work while draining or over the
+/// pending bound. Returns the refusal response, if any.
+fn refuse(coord: &mut Coordinator, cfg: &ServerConfig, st: &ExecState) -> Option<String> {
+    if st.draining {
+        return Some(format!(
+            "{{\"ok\":false,\"error\":\"shutting_down\",\"pending\":{}}}",
+            coord.pending()
+        ));
+    }
+    if coord.pending() >= cfg.max_pending {
+        coord.metrics.rejected_overload += 1;
+        return Some(format!(
+            "{{\"ok\":false,\"error\":\"overloaded\",\"pending\":{}}}",
+            coord.pending()
+        ));
+    }
+    None
+}
+
+fn deliver_finished(coord: &mut Coordinator, waiting: &mut VecDeque<WaitingQuery>) {
+    waiting.retain(|w| {
+        if let Some(logits) = coord.take_result(w.seq) {
+            let msg = format_query_response(&logits, w.input_len, w.topk);
+            let _ = w.reply.send(msg);
+            false
+        } else {
+            true
+        }
+    });
+}
+
+fn stats_json(coord: &Coordinator, cfg: &ServerConfig, waiting: usize) -> String {
+    let m = &coord.metrics;
+    format!(
+        "{{\"ok\":true,\"kind\":\"stats\",\"sessions\":{},\"kv_bytes\":{},\"kv_budget_bytes\":{},\
+         \"pending\":{},\"waiting\":{},\"requests\":{},\"compressions\":{},\"inferences\":{},\
+         \"batches\":{},\"rejected_overload\":{},\"sessions_evicted\":{},\"sessions_reaped\":{},\
+         \"peak_kv_bytes\":{},\"report\":{}}}",
+        coord.sessions.len(),
+        coord.sessions.total_kv_bytes(),
+        cfg.kv_budget_bytes.map_or_else(|| "null".to_string(), |b| b.to_string()),
+        coord.pending(),
+        waiting,
+        m.requests,
+        m.compressions,
+        m.inferences,
+        m.batches,
+        m.rejected_overload,
+        m.sessions_evicted,
+        m.sessions_reaped,
+        m.peak_kv_bytes,
+        escape(&m.report()),
+    )
+}
+
 /// Top-k next-token distribution at the last real input position.
+/// Total order via `f32::total_cmp`: a NaN logit (a backend bug) must
+/// degrade to a bad ranking, not a panicking comparator in the server.
 fn format_query_response(logits: &crate::tensor::Tensor, input_len: usize, topk: usize) -> String {
     let row = logits.row(&[input_len.saturating_sub(1)]);
-    let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let lse: f32 = row.iter().map(|&x| (x - mx).exp()).sum::<f32>().ln() + mx;
+    // Normalize over the finite logits only: one NaN must not poison
+    // the log-sum-exp (and thereby every logprob in the response).
+    let finite = || row.iter().copied().filter(|x| x.is_finite());
+    let mx = finite().fold(f32::NEG_INFINITY, f32::max);
+    let lse: f32 = finite().map(|x| (x - mx).exp()).sum::<f32>().ln() + mx;
     let mut idx: Vec<usize> = (0..row.len()).collect();
-    idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+    idx.sort_by(|&a, &b| row[b].total_cmp(&row[a]));
     let pairs: Vec<String> = idx
         .iter()
         .take(topk)
-        .map(|&i| format!("[{},{:.4}]", i, row[i] - lse))
+        .map(|&i| {
+            let lp = row[i] - lse;
+            // JSON has no NaN/Infinity literal; degrade to null.
+            if lp.is_finite() {
+                format!("[{},{:.4}]", i, lp)
+            } else {
+                format!("[{},null]", i)
+            }
+        })
         .collect();
     format!("{{\"ok\":true,\"kind\":\"query\",\"next\":[{}]}}", pairs.join(","))
 }
@@ -252,21 +566,28 @@ impl Client {
 
     pub fn add_context(&mut self, session: &str, tokens: &[i32]) -> Result<Json> {
         self.call(&format!(
-            "{{\"op\":\"context\",\"session\":{session:?},\"tokens\":{}}}",
+            "{{\"op\":\"context\",\"session\":{},\"tokens\":{}}}",
+            escape(session),
             fmt_tokens(tokens)
         ))
     }
 
     pub fn query(&mut self, session: &str, tokens: &[i32], topk: usize) -> Result<Vec<(i32, f32)>> {
         let resp = self.call(&format!(
-            "{{\"op\":\"query\",\"session\":{session:?},\"tokens\":{},\"topk\":{topk}}}",
+            "{{\"op\":\"query\",\"session\":{},\"tokens\":{},\"topk\":{topk}}}",
+            escape(session),
             fmt_tokens(tokens)
         ))?;
         let next = resp.get("next")?.arr()?;
         next.iter()
             .map(|p| {
                 let pair = p.arr()?;
-                Ok((pair[0].i64()? as i32, pair[1].f64()? as f32))
+                // A null logprob means the logit was non-finite.
+                let lp = match &pair[1] {
+                    Json::Null => f32::NEG_INFINITY,
+                    v => v.f64()? as f32,
+                };
+                Ok((pair[0].i64()? as i32, lp))
             })
             .collect()
     }
@@ -276,9 +597,19 @@ impl Client {
     }
 
     pub fn shutdown(&mut self) -> Result<()> {
-        self.call("{\"op\":\"shutdown\"}")
-            .map(|_| ())
-            .or_else(|e| if e.to_string().contains("closed") { Ok(()) } else { Err(e) })
+        match self.call("{\"op\":\"shutdown\"}") {
+            // The ack means "drained, listener closed"; an ok:false
+            // reply (e.g. a connection-level timeout) is not success.
+            Ok(resp) => {
+                if resp.get("ok")? == &Json::Bool(true) {
+                    Ok(())
+                } else {
+                    bail!("shutdown not confirmed: {resp}")
+                }
+            }
+            Err(e) if e.to_string().contains("closed") => Ok(()),
+            Err(e) => Err(e),
+        }
     }
 }
 
@@ -290,6 +621,126 @@ fn fmt_tokens(tokens: &[i32]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::SimCompute;
+
+    fn toy_coordinator(max_batch: usize) -> Coordinator<'static> {
+        let m = Manifest::toy();
+        let sim = SimCompute::from_manifest(&m);
+        Coordinator::with_backend(
+            &m,
+            Box::new(sim),
+            SessionPolicy::concat(2),
+            max_batch,
+            Duration::ZERO,
+        )
+    }
+
+    fn recv_json(rx: &std::sync::mpsc::Receiver<String>) -> Json {
+        Json::parse(&rx.recv().expect("reply")).expect("valid JSON reply")
+    }
+
+    fn exec_state() -> ExecState {
+        ExecState {
+            waiting: VecDeque::new(),
+            draining: false,
+            shutdown_replies: Vec::new(),
+            chunk_max: 8,
+            input_max: 8,
+        }
+    }
+
+    #[test]
+    fn admission_acks_queued_steps_and_refuses_over_bound() {
+        let mut coord = toy_coordinator(4);
+        let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(2));
+        cfg.max_pending = 2;
+        let mut st = exec_state();
+
+        // Two chunks queued in one window ack t=1 and t=2 (seed bug:
+        // both acked t=1).
+        let (tx, rx) = channel();
+        let ctx = |toks: Vec<i32>| Request::Context { session: "u".into(), tokens: toks };
+        admit(&mut coord, &cfg, &mut st, ctx(vec![4, 5]), tx.clone());
+        assert_eq!(recv_json(&rx).get("t").unwrap().i64().unwrap(), 1);
+        admit(&mut coord, &cfg, &mut st, ctx(vec![6, 7]), tx.clone());
+        assert_eq!(recv_json(&rx).get("t").unwrap().i64().unwrap(), 2);
+
+        // The pending bound is hit: the third chunk is refused.
+        admit(&mut coord, &cfg, &mut st, ctx(vec![8]), tx.clone());
+        let refusal = recv_json(&rx);
+        assert_eq!(refusal.get("ok").unwrap(), &Json::Bool(false));
+        assert_eq!(refusal.get("error").unwrap().str().unwrap(), "overloaded");
+        assert_eq!(refusal.get("pending").unwrap().usize().unwrap(), 2);
+        assert_eq!(coord.metrics.rejected_overload, 1);
+
+        // After executing, acks continue from the session's real step.
+        coord.run_until_idle().unwrap();
+        admit(&mut coord, &cfg, &mut st, ctx(vec![9]), tx.clone());
+        assert_eq!(recv_json(&rx).get("t").unwrap().i64().unwrap(), 3);
+
+        // Oversized requests are refused at admission, not detonated
+        // inside a batch (which would take the whole server down).
+        admit(&mut coord, &cfg, &mut st, ctx(vec![0; 9]), tx.clone());
+        let refusal = recv_json(&rx);
+        assert_eq!(refusal.get("error").unwrap().str().unwrap(), "too_long");
+        assert_eq!(refusal.get("limit").unwrap().usize().unwrap(), 8);
+        let query = Request::Query { session: "u".into(), tokens: vec![0; 9], topk: 1 };
+        admit(&mut coord, &cfg, &mut st, query, tx.clone());
+        assert_eq!(recv_json(&rx).get("error").unwrap().str().unwrap(), "too_long");
+        assert!(st.waiting.is_empty(), "refused query must not wait for results");
+        coord.run_until_idle().expect("no oversized item reached the backend");
+    }
+
+    #[test]
+    fn admission_refuses_new_work_while_draining() {
+        let mut coord = toy_coordinator(4);
+        let cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(2));
+        let mut st = exec_state();
+        let (tx, rx) = channel();
+        admit(&mut coord, &cfg, &mut st, Request::Shutdown, tx.clone());
+        assert!(st.draining && st.shutdown_replies.len() == 1);
+        admit(
+            &mut coord,
+            &cfg,
+            &mut st,
+            Request::Query { session: "q".into(), tokens: vec![1], topk: 1 },
+            tx.clone(),
+        );
+        let refusal = recv_json(&rx);
+        assert_eq!(refusal.get("error").unwrap().str().unwrap(), "shutting_down");
+        assert_eq!(coord.pending(), 0, "refused work must not be queued");
+        // Stats are still served during the drain.
+        admit(&mut coord, &cfg, &mut st, Request::Stats, tx.clone());
+        let stats = recv_json(&rx);
+        assert_eq!(stats.get("kind").unwrap().str().unwrap(), "stats");
+        // A second shutdown during the drain is deferred too: the ack
+        // contract is "drained, listener closed", so nobody is acked
+        // until then.
+        admit(&mut coord, &cfg, &mut st, Request::Shutdown, tx.clone());
+        assert_eq!(st.shutdown_replies.len(), 2);
+        assert!(
+            rx.try_recv().is_err(),
+            "no shutdown ack may be sent before the drain completes"
+        );
+    }
+
+    #[test]
+    fn stats_json_is_valid_and_structured() {
+        let mut coord = toy_coordinator(4);
+        let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(2));
+        cfg.kv_budget_bytes = Some(1 << 20);
+        coord.add_context("a", vec![1, 2]);
+        coord.run_until_idle().unwrap();
+        let s = stats_json(&coord, &cfg, 3);
+        let j = Json::parse(&s).expect("stats must be valid JSON");
+        assert_eq!(j.get("sessions").unwrap().usize().unwrap(), 1);
+        assert_eq!(j.get("waiting").unwrap().usize().unwrap(), 3);
+        assert_eq!(j.get("kv_budget_bytes").unwrap().usize().unwrap(), 1 << 20);
+        assert!(j.get("kv_bytes").unwrap().usize().unwrap() > 0);
+        // The multi-line report embeds as a proper JSON string (the
+        // seed used {:?}, which can emit non-JSON escapes).
+        assert!(j.get("report").unwrap().str().unwrap().contains("requests="));
+    }
 
     #[test]
     fn parses_requests() {
@@ -318,6 +769,33 @@ mod tests {
         assert_eq!(next[0].arr().unwrap()[0].i64().unwrap(), 3);
         // log-probs <= 0
         assert!(next[0].arr().unwrap()[1].f64().unwrap() <= 0.0);
+    }
+
+    #[test]
+    fn query_response_survives_nan_logits() {
+        // Regression: the seed used partial_cmp().unwrap(), which
+        // panicked the executor on any NaN logit.
+        let mut logits = crate::tensor::Tensor::zeros(&[2, 5]);
+        logits.set(&[1, 2], f32::NAN);
+        logits.set(&[1, 4], 3.0);
+        let s = format_query_response(&logits, 2, 2);
+        let j = Json::parse(&s).expect("still valid JSON");
+        let next = j.get("next").unwrap().arr().unwrap();
+        assert_eq!(next.len(), 2);
+        // total_cmp ranks NaN above every real number (descending sort),
+        // but the finite top token must still be present.
+        let toks: Vec<i64> =
+            next.iter().map(|p| p.arr().unwrap()[0].i64().unwrap()).collect();
+        assert!(toks.contains(&4), "finite max must rank in top-2: {toks:?}");
+        // The NaN entry degrades to null; finite entries keep real
+        // logprobs (lse is computed over finite logits only).
+        for p in next {
+            let pair = p.arr().unwrap();
+            match pair[0].i64().unwrap() {
+                2 => assert_eq!(pair[1], Json::Null),
+                _ => assert!(pair[1].f64().unwrap() <= 0.0),
+            }
+        }
     }
 
     #[test]

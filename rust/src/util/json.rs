@@ -97,7 +97,7 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(n) => write!(f, "{n}"),
-            Json::Str(s) => write!(f, "{:?}", s),
+            Json::Str(s) => write!(f, "{}", escape(s)),
             Json::Arr(v) => {
                 write!(f, "[")?;
                 for (i, x) in v.iter().enumerate() {
@@ -114,12 +114,35 @@ impl fmt::Display for Json {
                     if i > 0 {
                         write!(f, ",")?;
                     }
-                    write!(f, "{:?}:{v}", k)?;
+                    write!(f, "{}:{v}", escape(k))?;
                 }
                 write!(f, "}}")
             }
         }
     }
+}
+
+/// Escape `s` as a JSON string literal, quotes included. Debug-format
+/// (`{:?}`) is NOT a JSON escape (it emits `\u{7f}`-style escapes that
+/// JSON parsers reject); server responses must use this instead.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
 }
 
 struct Parser<'a> {
@@ -318,6 +341,31 @@ mod tests {
         assert_eq!(v, Json::Str("A\t\"q\"".into()));
         let v = Json::parse("\"héllo\"").unwrap();
         assert_eq!(v, Json::Str("héllo".into()));
+    }
+
+    #[test]
+    fn display_roundtrips_control_characters() {
+        // Display must emit valid JSON (it uses escape(), not Debug,
+        // which would produce \u{1}-style escapes the parser rejects).
+        let v = Json::Arr(vec![
+            Json::Str("a\u{1}b\n".into()),
+            Json::Obj([("k\"ey".to_string(), Json::Num(1.0))].into_iter().collect()),
+        ]);
+        let s = v.to_string();
+        assert_eq!(Json::parse(&s).unwrap(), v);
+    }
+
+    #[test]
+    fn escape_roundtrips_through_parser() {
+        for s in ["plain", "line\nbreak", "q\"uote\\slash", "tab\there", "\u{1}ctl", "héllo"] {
+            let lit = escape(s);
+            assert_eq!(Json::parse(&lit).unwrap(), Json::Str(s.to_string()), "{lit}");
+        }
+        // Multi-line metrics reports (the stats payload) stay valid JSON.
+        let report = "a=1 b=2\nlatency: 0.5 ms\n\"quoted\"";
+        let wrapped = format!("{{\"report\":{}}}", escape(report));
+        let parsed = Json::parse(&wrapped).unwrap();
+        assert_eq!(parsed.get("report").unwrap().str().unwrap(), report);
     }
 
     #[test]
