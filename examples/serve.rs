@@ -1,16 +1,18 @@
-//! Serving demo: start the coordinator server, drive it with concurrent
-//! clients, report latency/throughput (the deployment story of Table 1).
+//! Serving demo: start the coordinator server (optionally sharded into
+//! N executors with `--shards`), drive it with concurrent clients,
+//! report latency/throughput (the deployment story of Table 1).
 //!
-//!   cargo run --release --example serve [-- --config test --clients 4]
+//!   cargo run --release --example serve \
+//!     [-- --config test --clients 4 --shards 2 --eviction lru]
 
 use std::sync::mpsc::channel;
 
 use anyhow::Result;
-use ccm::coordinator::session::SessionPolicy;
+use ccm::coordinator::session::{EvictionKind, SessionPolicy};
 use ccm::datagen::{by_name, Split};
 use ccm::model::Checkpoint;
 use ccm::runtime::Runtime;
-use ccm::server::{serve, Client, ServerConfig};
+use ccm::server::{serve, serve_sharded, Client, ServerConfig};
 use ccm::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -18,31 +20,40 @@ fn main() -> Result<()> {
     let config = args.str("config", "test");
     let n_clients = args.usize("clients", 4)?;
     let rounds = args.usize("rounds", 3)?;
+    let shards = args.usize("shards", 1)?.max(1);
+    let eviction = EvictionKind::parse(&args.str("eviction", "oldest"))?;
 
-    // Server thread owns the runtime (PJRT executables are not Sync).
+    // Server thread owns the runtime(s); with --shards N each executor
+    // thread builds its own (PJRT executables are not Sync, so a
+    // runtime never crosses threads).
     let (ready_tx, ready_rx) = channel();
     let cfg2 = config.clone();
     let comp_len_flag = args.usize("comp-len", 0)?;
     let server = std::thread::spawn(move || -> Result<()> {
-        let rt = Runtime::from_config(&cfg2)?;
+        let manifest = ccm::model::Manifest::load(&ccm::model::artifact_dir(&cfg2))?;
         let comp_len =
-            if comp_len_flag == 0 { rt.manifest.scenario.comp_len_max } else { comp_len_flag };
-        let ck = Checkpoint::init(&rt.manifest, 7);
-        rt.warmup(&[
-            "compress_chunk_b1",
-            "compress_chunk_b8",
-            "infer_with_mem_b1",
-            "infer_with_mem_b8",
-        ])
-        .ok();
+            if comp_len_flag == 0 { manifest.scenario.comp_len_max } else { comp_len_flag };
         let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(comp_len));
         cfg.max_batch = 8;
         cfg.max_wait = std::time::Duration::from_millis(2);
         cfg.max_pending = 512;
-        serve(&rt, &ck, cfg, Some(ready_tx))
+        cfg.shards = shards;
+        cfg.eviction = eviction;
+        if shards == 1 {
+            let rt = Runtime::load(manifest)?;
+            let ck = Checkpoint::init(&rt.manifest, 7);
+            rt.warmup(&ccm::SERVE_WARMUP).ok();
+            return serve(&rt, &ck, cfg, Some(ready_tx));
+        }
+        // Same per-shard runtime/engine wiring as `ccm serve --shards N`.
+        let factories = ccm::serve_backend_factories(&cfg2, "", 7, comp_len, shards);
+        serve_sharded(&manifest, factories, cfg, Some(ready_tx))
     });
     let addr = ready_rx.recv()?;
-    println!("server up at {addr}; {n_clients} clients x {rounds} rounds");
+    println!(
+        "server up at {addr} ({shards} shard(s), eviction {}); {n_clients} clients x {rounds}",
+        eviction.name()
+    );
 
     // Concurrent clients, one session each, multiple interaction rounds.
     let t0 = std::time::Instant::now();

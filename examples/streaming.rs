@@ -42,6 +42,8 @@ fn main() -> Result<()> {
     for ((tok, a), (_, b)) in ccm_rep.curve.iter().zip(base_rep.curve.iter()) {
         println!("  {tok:>6}: {a:.3} / {b:.3}");
     }
-    println!("(with a trained checkpoint CCM's long-range memory wins; see `ccm reproduce --exp fig8`)");
+    println!(
+        "(with a trained checkpoint CCM's long-range memory wins; see `ccm reproduce --exp fig8`)"
+    );
     Ok(())
 }

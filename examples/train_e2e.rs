@@ -50,10 +50,14 @@ fn main() -> Result<()> {
     println!("[phase 2] compression adapters ready ({:.0}s)", t1.elapsed().as_secs_f64());
 
     // Phase 3: online evaluation over time steps.
-    let ds = by_name(&dataset, ctx.budget.seed, &ctx.manifest().scenario, ctx.manifest().model.vocab)?;
+    let ds =
+        by_name(&dataset, ctx.budget.seed, &ctx.manifest().scenario, ctx.manifest().model.vocab)?;
     let ts = ctx.budget.t_values.clone();
     println!("\n[phase 3] {dataset} accuracy over online time steps (n={}):", ctx.budget.eval_n);
-    println!("{:>4} {:>12} {:>12} {:>12} {:>12}", "t", "nocontext", "full", "ccm-concat", "ccm-merge");
+    println!(
+        "{:>4} {:>12} {:>12} {:>12} {:>12}",
+        "t", "nocontext", "full", "ccm-concat", "ccm-merge"
+    );
     let base_ck = ctx.base(&mixture)?;
     for &t in &ts {
         let mut cells = Vec::new();

@@ -155,6 +155,75 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
 
+    // The same protocol load over a 4-shard server: one executor
+    // (SimCompute backend) per shard, sessions hash-routed. Quantifies
+    // what executor replication buys when the backend is the bottleneck.
+    {
+        use ccm::compress::{Compute, SimCompute};
+        use ccm::coordinator::session::SessionPolicy;
+        use ccm::server::{serve_sharded, BackendFactory, Client, ServerConfig};
+        use std::sync::mpsc::channel;
+
+        let manifest = fake_manifest(sc.clone());
+        let shards = 4usize;
+        let sims: Vec<SimCompute> = (0..shards)
+            .map(|_| {
+                let mut sim = SimCompute::from_manifest(&manifest);
+                sim.compress_delay = Duration::from_micros(200);
+                sim.infer_delay = Duration::from_micros(200);
+                sim
+            })
+            .collect();
+        let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(sc.comp_len_max));
+        cfg.max_batch = 8;
+        cfg.max_wait = Duration::from_millis(1);
+        cfg.max_pending = 4096;
+        cfg.kv_budget_bytes = Some(64 << 20);
+        let (ready_tx, ready_rx) = channel();
+        let server = std::thread::spawn(move || {
+            let factories: Vec<BackendFactory<'static>> = sims
+                .into_iter()
+                .map(|sim| {
+                    Box::new(move || Ok(Box::new(sim) as Box<dyn Compute>))
+                        as BackendFactory<'static>
+                })
+                .collect();
+            serve_sharded(&manifest, factories, cfg, Some(ready_tx))
+        });
+        let addr = ready_rx.recv()?;
+        let n_clients = 8usize;
+        let rounds = 50usize;
+        let t0 = std::time::Instant::now();
+        let mut handles = Vec::new();
+        for c in 0..n_clients {
+            let addr = addr.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).unwrap();
+                let session = format!("bench{c}");
+                for r in 0..rounds {
+                    client.add_context(&session, &[1, 2, 3, 4]).unwrap();
+                    let next = client.query(&session, &[(r % 30 + 1) as i32], 3).unwrap();
+                    assert_eq!(next.len(), 3);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("bench client");
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let total = (n_clients * rounds) as f64;
+        let mut admin = Client::connect(&addr)?;
+        let stats = admin.stats()?;
+        let sessions = stats.get("sessions")?.usize()?;
+        admin.shutdown()?;
+        server.join().expect("server thread")?;
+        rows.push(vec![
+            format!("serve/tcp-{shards}shard"),
+            format!("{:.3}", secs * 1e3 / total),
+            format!("{:.0} rounds/s across {sessions} sessions", total / secs),
+        ]);
+    }
+
     print_table("coordinator overhead (host-side)", &["op", "mean ms", "note"], &rows);
     Ok(())
 }

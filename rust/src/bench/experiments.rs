@@ -52,7 +52,8 @@ fn eval_method(
         Method::Full | Method::NoContext => ctx.base(super::UNIFIED)?,
         _ => ctx.adapter(&AdapterSpec::new(method, comp_len, mixture))?,
     };
-    let ds = by_name(dataset, ctx.budget.seed, &ctx.manifest().scenario, ctx.manifest().model.vocab)?;
+    let ds =
+        by_name(dataset, ctx.budget.seed, &ctx.manifest().scenario, ctx.manifest().model.vocab)?;
     let policy = PackPolicy::new(method, comp_len);
     let ev = Evaluator::new(&ctx.rt, &ck);
     let n = ctx.budget.eval_n;
@@ -155,8 +156,9 @@ pub fn table1_throughput(ctx: &mut ExpContext, args: &Args) -> Result<()> {
     let m = ctx.manifest().model.clone();
     let sc = ctx.manifest().scenario.clone();
     let ds = by_name(&dataset, ctx.budget.seed, &sc, m.vocab)?;
-    let samples: Vec<OnlineSample> =
-        (0..n_sessions).map(|i| ds.sample(Split::Test, i % ds.n_identities(Split::Test), t)).collect();
+    let samples: Vec<OnlineSample> = (0..n_sessions)
+        .map(|i| ds.sample(Split::Test, i % ds.n_identities(Split::Test), t))
+        .collect();
 
     let mut rows = Vec::new();
     for method in [Method::Full, Method::CcmConcat, Method::CcmMerge] {
@@ -321,7 +323,9 @@ pub fn table4_datasources(ctx: &mut ExpContext, args: &Args) -> Result<()> {
     }
     ctx.emit(
         "table4",
-        &format!("Table 4 analogue — compression gap vs full context at t={t} by training mixture"),
+        &format!(
+            "Table 4 analogue — compression gap vs full context at t={t} by training mixture"
+        ),
         &["training mixture", "metaicl", "lamp", "dialog"],
         &rows,
     )?;
@@ -619,7 +623,7 @@ pub fn table16_ema(ctx: &mut ExpContext, args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Table 18: <COMP> token length sweep.
+/// Table 18: `<COMP>` token length sweep.
 pub fn table18_comp_len(ctx: &mut ExpContext, args: &Args) -> Result<()> {
     let dataset = args.str("dataset", "metaicl");
     let t = *ctx.budget.t_values.last().unwrap();

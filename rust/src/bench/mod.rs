@@ -199,14 +199,21 @@ impl ExpContext {
         let rep =
             trainer.train_rmt(&mut ck, &Mixture::parse(mixture), steps, 3e-3, self.budget.seed)?;
         ck.save(&path)?;
-        std::fs::write(&ms_path, format!("{}", rep.ms_per_sample))?;
+        std::fs::write(&ms_path, rep.ms_per_sample.to_string())?;
         Ok((ck, rep.ms_per_sample))
     }
 
-    /// Write a result table to results/<exp>.md and stdout.
-    pub fn emit(&self, exp: &str, title: &str, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    /// Write a result table to `results/<exp>.md` and stdout.
+    pub fn emit(
+        &self,
+        exp: &str,
+        title: &str,
+        header: &[&str],
+        rows: &[Vec<String>],
+    ) -> Result<()> {
         crate::util::bench::print_table(title, header, rows);
-        let dir = self.runs_dir.parent().map(|p| p.parent().unwrap_or(p)).unwrap_or(&self.runs_dir);
+        let dir =
+            self.runs_dir.parent().map(|p| p.parent().unwrap_or(p)).unwrap_or(&self.runs_dir);
         let results = dir.join("results");
         std::fs::create_dir_all(&results)?;
         let mut md = format!("## {title}\n\n|{}|\n|{}|\n", header.join("|"),

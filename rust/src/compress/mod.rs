@@ -41,7 +41,7 @@ pub fn pick_batch(variants: &[usize], n: usize) -> usize {
 pub struct Engine<'rt> {
     pub rt: &'rt Runtime,
     pub ck: &'rt Checkpoint,
-    /// Active <COMP> length (<= comp_len_max baked into the artifacts).
+    /// Active `<COMP>` length (<= comp_len_max baked into the artifacts).
     pub comp_len: usize,
 }
 
@@ -224,7 +224,7 @@ pub trait Compute {
     fn infer(&self, items: &[InferItem]) -> Result<Vec<Tensor>>;
 }
 
-impl<'rt> Compute for Engine<'rt> {
+impl Compute for Engine<'_> {
     fn comp_len(&self) -> usize {
         self.comp_len
     }
@@ -235,6 +235,45 @@ impl<'rt> Compute for Engine<'rt> {
 
     fn infer(&self, items: &[InferItem]) -> Result<Vec<Tensor>> {
         Engine::infer(self, items)
+    }
+}
+
+/// An [`Engine`] that owns its [`Runtime`] and [`Checkpoint`]: the
+/// per-shard backend of multi-executor serving. Each shard's executor
+/// thread builds one of these inside a
+/// [`crate::server::BackendFactory`] — PJRT runtimes are thread-bound,
+/// so the runtime must be created on, and never leave, the thread that
+/// drives it.
+pub struct OwnedEngine {
+    rt: Runtime,
+    ck: Checkpoint,
+    comp_len: usize,
+}
+
+impl OwnedEngine {
+    pub fn new(rt: Runtime, ck: Checkpoint, comp_len: usize) -> Result<OwnedEngine> {
+        Engine::new(&rt, &ck, comp_len)?; // validate comp_len bounds
+        Ok(OwnedEngine { rt, ck, comp_len })
+    }
+
+    /// The borrowed view this call delegates through (construction is
+    /// two references and a usize — free).
+    fn engine(&self) -> Engine<'_> {
+        Engine { rt: &self.rt, ck: &self.ck, comp_len: self.comp_len }
+    }
+}
+
+impl Compute for OwnedEngine {
+    fn comp_len(&self) -> usize {
+        self.comp_len
+    }
+
+    fn compress(&self, items: &[CompressItem]) -> Result<Vec<CompressedChunk>> {
+        self.engine().compress(items)
+    }
+
+    fn infer(&self, items: &[InferItem]) -> Result<Vec<Tensor>> {
+        self.engine().infer(items)
     }
 }
 

@@ -52,6 +52,8 @@ pub struct Batcher {
     pub infer_priority: bool,
     /// Consecutive emissions that overrode the front item's kind.
     overrides: u32,
+    /// Lifetime count of priority overrides (surfaced in serve stats).
+    overrides_total: u64,
 }
 
 impl Batcher {
@@ -64,7 +66,14 @@ impl Batcher {
             max_wait,
             infer_priority: false,
             overrides: 0,
+            overrides_total: 0,
         }
+    }
+
+    /// Total priority overrides emitted over this batcher's lifetime
+    /// (how often a ready infer batch jumped the compress backlog).
+    pub fn total_overrides(&self) -> u64 {
+        self.overrides_total
     }
 
     /// Enqueue; returns the work-item sequence id.
@@ -150,6 +159,7 @@ impl Batcher {
             self.overrides = 0;
         } else {
             self.overrides += 1;
+            self.overrides_total += 1;
         }
         let mut blocked: HashSet<String> = HashSet::new();
         let mut taken: HashSet<String> = HashSet::new();
@@ -307,6 +317,47 @@ mod tests {
             "compress must run after exactly the override cap: {kinds:?}"
         );
         assert_eq!(kinds.len(), 9);
+    }
+
+    #[test]
+    fn adversarial_query_flood_cannot_starve_compress_beyond_cap() {
+        // Regression (ROADMAP fairness item): ONE adversarial session
+        // flooding queries must not push another session's compress
+        // work back by more than PRIORITY_OVERRIDE_LIMIT consecutive
+        // overrides. The flood is same-session, so each infer batch
+        // carries exactly one item — the worst case for the backlog.
+        let mut b = Batcher::new(4, Duration::ZERO);
+        b.infer_priority = true;
+        b.push("victim", WorkKind::Compress, vec![1]);
+        for _ in 0..32 {
+            b.push("attacker", WorkKind::Infer, vec![9]);
+        }
+        b.push("victim2", WorkKind::Compress, vec![2]);
+        let mut kinds = Vec::new();
+        let mut compress_sessions = Vec::new();
+        let mut emitted = 0usize;
+        while b.pending() > 0 {
+            let batch = b.next_batch(Instant::now(), true).unwrap();
+            emitted += batch.len();
+            if batch[0].kind == WorkKind::Compress {
+                compress_sessions.extend(batch.iter().map(|w| w.session.clone()));
+            }
+            kinds.push(batch[0].kind);
+        }
+        // The front compress is delayed by exactly the override cap,
+        // never more — and the forced compress turn flushes the WHOLE
+        // compress backlog in one batch (both victims, distinct
+        // sessions, coalesce), so nothing waits for a second turn.
+        let first_compress = kinds.iter().position(|k| *k == WorkKind::Compress).unwrap();
+        assert_eq!(
+            first_compress as u32,
+            super::PRIORITY_OVERRIDE_LIMIT,
+            "flood must be capped at the override limit: {kinds:?}"
+        );
+        assert_eq!(kinds.iter().filter(|k| **k == WorkKind::Compress).count(), 1);
+        assert_eq!(compress_sessions, vec!["victim", "victim2"]);
+        assert_eq!(emitted, 34, "every queued item must be emitted exactly once");
+        assert_eq!(b.total_overrides(), u64::from(super::PRIORITY_OVERRIDE_LIMIT));
     }
 
     #[test]

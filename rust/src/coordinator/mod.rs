@@ -152,10 +152,13 @@ impl<'rt> Coordinator<'rt> {
         std::mem::take(&mut self.failed)
     }
 
-    /// Enforce a global compressed-KV budget: evict oldest-created idle
-    /// sessions until under `max_bytes`. Sessions with queued work are
+    /// Enforce a compressed-KV budget: evict idle sessions in the
+    /// session manager's [`EvictionPolicy`] order (oldest-created by
+    /// default) until under `max_bytes`. Sessions with queued work are
     /// never evicted (their batch staging holds memory references).
     /// Returns the evicted session ids; counts land in `metrics`.
+    ///
+    /// [`EvictionPolicy`]: crate::coordinator::session::EvictionPolicy
     pub fn enforce_kv_budget(&mut self, max_bytes: usize) -> Vec<String> {
         if self.sessions.total_kv_bytes() <= max_bytes {
             return Vec::new(); // common case: no protected-set allocation
@@ -298,7 +301,7 @@ mod tests {
         let mut coord = sim_coordinator(4);
         coord.add_context("u", vec![5, 6]);
         coord.run_until_idle().unwrap();
-        assert!(coord.sessions.get("u").unwrap().mem.len() > 0);
+        assert!(!coord.sessions.get("u").unwrap().mem.is_empty());
         let evicted = coord.enforce_kv_budget(0);
         assert_eq!(evicted, vec!["u"]);
         let seq = coord.query("u", vec![7]);

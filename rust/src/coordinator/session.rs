@@ -1,7 +1,13 @@
 //! Session management: one session per interacting identity (user /
 //! task / dialogue), holding its compressed context memory Mem(t) and
 //! position cursor. The vLLM-router analogue of per-sequence state.
+//!
+//! Budget eviction order is pluggable ([`EvictionPolicy`]): oldest
+//! created first (the PR 1 behavior and default), least recently used,
+//! or cost-aware largest-bytes-first. `ccm serve --eviction <policy>`
+//! selects one per serving shard via [`EvictionKind`].
 
+use std::cmp::Ordering;
 use std::collections::{HashMap, HashSet};
 use std::time::{Duration, Instant};
 
@@ -29,6 +35,91 @@ impl SessionPolicy {
     }
 }
 
+/// Eviction-candidate ordering under KV-budget pressure. `Less` means
+/// `a` is evicted before `b`; implementations must define a total order
+/// so the victim sequence is deterministic.
+pub trait EvictionPolicy: Send {
+    fn name(&self) -> &'static str;
+    fn victim_cmp(&self, a: &Session, b: &Session) -> Ordering;
+}
+
+/// Evict least-recently-created sessions first (the default).
+pub struct OldestCreated;
+
+impl EvictionPolicy for OldestCreated {
+    fn name(&self) -> &'static str {
+        "oldest"
+    }
+
+    fn victim_cmp(&self, a: &Session, b: &Session) -> Ordering {
+        a.created.cmp(&b.created)
+    }
+}
+
+/// Evict least-recently-used sessions first (`last_used` is touched on
+/// every create or new work item). Ties break by creation order.
+pub struct Lru;
+
+impl EvictionPolicy for Lru {
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+
+    fn victim_cmp(&self, a: &Session, b: &Session) -> Ordering {
+        a.last_used.cmp(&b.last_used).then(a.created.cmp(&b.created))
+    }
+}
+
+/// Cost-aware: evict the largest compressed memories first, freeing the
+/// budget with the fewest victims. Ties break by creation order.
+pub struct LargestBytes;
+
+impl EvictionPolicy for LargestBytes {
+    fn name(&self) -> &'static str {
+        "largest-bytes"
+    }
+
+    fn victim_cmp(&self, a: &Session, b: &Session) -> Ordering {
+        b.mem.kv_bytes().cmp(&a.mem.kv_bytes()).then(a.created.cmp(&b.created))
+    }
+}
+
+/// Config-surface selector for the built-in eviction policies (the
+/// `--eviction` CLI flag). Custom policies can still be injected with
+/// [`SessionManager::set_eviction`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EvictionKind {
+    #[default]
+    OldestCreated,
+    Lru,
+    LargestBytes,
+}
+
+impl EvictionKind {
+    pub fn parse(name: &str) -> Result<EvictionKind> {
+        Ok(match name {
+            "oldest" | "oldest-created" => EvictionKind::OldestCreated,
+            "lru" => EvictionKind::Lru,
+            "largest-bytes" | "largest" => EvictionKind::LargestBytes,
+            other => bail!("unknown eviction policy {other:?} (oldest|lru|largest-bytes)"),
+        })
+    }
+
+    pub fn build(self) -> Box<dyn EvictionPolicy> {
+        match self {
+            EvictionKind::OldestCreated => Box::new(OldestCreated),
+            EvictionKind::Lru => Box::new(Lru),
+            EvictionKind::LargestBytes => Box::new(LargestBytes),
+        }
+    }
+
+    /// Delegates to the policy's own name so the merged stats view and
+    /// each shard's stats can never disagree on the label.
+    pub fn name(self) -> &'static str {
+        self.build().name()
+    }
+}
+
 #[derive(Debug)]
 pub struct Session {
     pub id: String,
@@ -47,6 +138,7 @@ pub struct Session {
 pub struct SessionManager {
     sessions: HashMap<String, Session>,
     policy: SessionPolicy,
+    eviction: Box<dyn EvictionPolicy>,
     layers: usize,
     d_model: usize,
     mem_slots: usize,
@@ -65,12 +157,22 @@ impl SessionManager {
             d_model: manifest.model.d_model,
             mem_slots: manifest.scenario.mem_slots,
             policy,
+            eviction: Box::new(OldestCreated),
             counter: 0,
         }
     }
 
     pub fn policy(&self) -> &SessionPolicy {
         &self.policy
+    }
+
+    /// Swap the budget-eviction policy (default: [`OldestCreated`]).
+    pub fn set_eviction(&mut self, eviction: Box<dyn EvictionPolicy>) {
+        self.eviction = eviction;
+    }
+
+    pub fn eviction_name(&self) -> &'static str {
+        self.eviction.name()
     }
 
     pub fn get_or_create(&mut self, id: &str) -> &mut Session {
@@ -141,16 +243,16 @@ impl SessionManager {
         self.sessions.values().map(|s| s.mem.kv_bytes()).sum()
     }
 
-    /// Evict the least-recently-created sessions until at most `max_bytes`
-    /// of compressed KV remain. Returns evicted session ids.
+    /// Evict sessions in policy order until at most `max_bytes` of
+    /// compressed KV remain. Returns evicted session ids.
     pub fn evict_to_budget(&mut self, max_bytes: usize) -> Vec<String> {
         self.evict_to_budget_protected(max_bytes, &HashSet::new())
     }
 
     /// Budget eviction skipping `protected` ids (sessions with queued
-    /// work). One total-bytes pass + one sort by creation order — O(n
-    /// log n) for any number of evictions, instead of rescanning the
-    /// whole map per evicted session.
+    /// work). One total-bytes pass + one sort in [`EvictionPolicy`]
+    /// victim order — O(n log n) for any number of evictions, instead
+    /// of rescanning the whole map per evicted session.
     pub fn evict_to_budget_protected(
         &mut self,
         max_bytes: usize,
@@ -160,15 +262,13 @@ impl SessionManager {
         if total <= max_bytes {
             return Vec::new();
         }
-        let mut candidates: Vec<(u64, String, usize)> = self
-            .sessions
-            .values()
-            .filter(|s| !protected.contains(&s.id))
-            .map(|s| (s.created, s.id.clone(), s.mem.kv_bytes()))
-            .collect();
-        candidates.sort_unstable_by_key(|(created, _, _)| *created);
+        let mut candidates: Vec<&Session> =
+            self.sessions.values().filter(|s| !protected.contains(&s.id)).collect();
+        candidates.sort_unstable_by(|a, b| self.eviction.victim_cmp(a, b));
+        let victims: Vec<(String, usize)> =
+            candidates.iter().map(|s| (s.id.clone(), s.mem.kv_bytes())).collect();
         let mut evicted = Vec::new();
-        for (_, id, bytes) in candidates {
+        for (id, bytes) in victims {
             if total <= max_bytes {
                 break;
             }
@@ -335,6 +435,63 @@ mod tests {
         let evicted = sm.evict_to_budget_protected(0, &protected);
         assert_eq!(evicted, vec!["b", "c"]);
         assert!(sm.get("a").is_ok());
+    }
+
+    #[test]
+    fn lru_eviction_spares_recently_used_sessions() {
+        let m = manifest();
+        let mut sm = SessionManager::with_policy(&m, SessionPolicy::concat(2));
+        sm.set_eviction(EvictionKind::Lru.build());
+        assert_eq!(sm.eviction_name(), "lru");
+        for id in ["a", "b", "c"] {
+            sm.get_or_create(id).mem.update(&fake_chunk(2, 2, 8)).unwrap();
+        }
+        // Touch "a" (oldest-created) well after the others: under LRU it
+        // must survive while "b" and "c" go; under oldest-created it
+        // would be the first victim. Set last_used explicitly so the
+        // test does not depend on clock resolution.
+        sm.get_mut("a").unwrap().last_used = Instant::now() + Duration::from_secs(60);
+        let per = 2 * 2 * 2 * 8 * 4;
+        let evicted = sm.evict_to_budget(per);
+        assert_eq!(evicted, vec!["b", "c"]);
+        assert!(sm.get("a").is_ok());
+    }
+
+    #[test]
+    fn largest_bytes_eviction_frees_budget_with_fewest_victims() {
+        let m = manifest();
+        let mut sm = SessionManager::with_policy(&m, SessionPolicy::concat(2));
+        sm.set_eviction(EvictionKind::LargestBytes.build());
+        // "small" holds one chunk, "big" three, "mid" two: the policy
+        // must take "big" first even though "small" is oldest.
+        for (id, chunks) in [("small", 1), ("big", 3), ("mid", 2)] {
+            let s = sm.get_or_create(id);
+            for _ in 0..chunks {
+                s.mem.update(&fake_chunk(2, 2, 8)).unwrap();
+            }
+        }
+        let per = 2 * 2 * 2 * 8 * 4;
+        assert_eq!(sm.total_kv_bytes(), 6 * per);
+        let evicted = sm.evict_to_budget(3 * per);
+        assert_eq!(evicted, vec!["big"]);
+        assert!(sm.get("small").is_ok() && sm.get("mid").is_ok());
+    }
+
+    #[test]
+    fn eviction_kind_parses_and_names() {
+        for (s, k) in [
+            ("oldest", EvictionKind::OldestCreated),
+            ("oldest-created", EvictionKind::OldestCreated),
+            ("lru", EvictionKind::Lru),
+            ("largest-bytes", EvictionKind::LargestBytes),
+            ("largest", EvictionKind::LargestBytes),
+        ] {
+            assert_eq!(EvictionKind::parse(s).unwrap(), k);
+        }
+        assert!(EvictionKind::parse("random").is_err());
+        assert_eq!(EvictionKind::default(), EvictionKind::OldestCreated);
+        assert_eq!(EvictionKind::Lru.name(), "lru");
+        assert_eq!(EvictionKind::Lru.build().name(), "lru");
     }
 
     #[test]

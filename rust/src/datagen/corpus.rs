@@ -4,7 +4,7 @@
 //! compression adapter is trained on top).
 //!
 //! A document is a full packed sequence `[BOS, chunks..., input, target]`
-//! with plain causal structure — no <COMP> tokens; this teaches the base
+//! with plain causal structure — no `<COMP>` tokens; this teaches the base
 //! LM the synthetic language itself.
 
 use super::{by_name, OnlineDataset, Split};

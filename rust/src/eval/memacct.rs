@@ -85,7 +85,7 @@ pub fn step_attn_macs(
 
 /// Table 17: compression overhead vs attention-FLOPs savings. Returns the
 /// minimum inference token length where CCM's saving outweighs the
-/// <COMP> forward overhead. Model-forward MACs per token ~ 2·P where P =
+/// `<COMP>` forward overhead. Model-forward MACs per token ~ 2·P where P =
 /// non-embedding params; savings per inference token ~ attention over
 /// (full_kv - compressed_kv).
 pub fn breakeven_inference_tokens(m: &ModelConfig, lc: usize, cl: usize, t: usize) -> usize {

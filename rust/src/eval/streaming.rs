@@ -26,7 +26,7 @@ pub struct StreamEvalConfig {
     pub mem_slots: usize,
     /// Oldest tokens compressed per compression step.
     pub compress_block: usize,
-    /// <COMP> slots produced per compression.
+    /// `<COMP>` slots produced per compression.
     pub comp_len: usize,
     pub n_sink: usize,
     /// Tokens scored per step (streamed in blocks for throughput).

@@ -46,7 +46,7 @@ use anyhow::{bail, Result};
 use util::cli::Args;
 
 /// `ccm train --phase lm|ccm|rmt` — run a training phase and save the
-/// checkpoint under runs/<config>/.
+/// checkpoint under `runs/<config>/`.
 pub fn cli_train(args: &Args) -> Result<()> {
     let config = args.str("config", "main");
     let budget = bench::Budget::from_args(args)?;
@@ -114,31 +114,69 @@ pub fn cli_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `ccm serve --port 7878 --method ccm-concat [--max-pending 256]
+/// Artifacts the serving path pre-compiles at startup. With one shard
+/// this happens before the port is bound; with `--shards N` each shard
+/// warms up concurrently inside its executor thread after the port is
+/// bound (see [`serve_backend_factories`]), so early requests queue on
+/// their shard until its warmup completes instead of seeing
+/// connection-refused.
+pub const SERVE_WARMUP: [&str; 4] =
+    ["compress_chunk_b1", "compress_chunk_b8", "infer_with_mem_b1", "infer_with_mem_b8"];
+
+/// Build `shards` backend factories for [`server::serve_sharded`]:
+/// each factory runs inside its shard's executor thread and creates a
+/// full runtime from `config`, loads (or seeds) the checkpoint,
+/// pre-compiles the serving artifacts, and returns an owned engine —
+/// one runtime per shard, since PJRT runtimes are thread-bound.
+/// Shards are deterministic replicas (same checkpoint path / init
+/// seed). `ccm serve --shards N` and `examples/serve.rs` share this.
+pub fn serve_backend_factories(
+    config: &str,
+    ckpt_path: &str,
+    seed: u64,
+    comp_len: usize,
+    shards: usize,
+) -> Vec<server::BackendFactory<'static>> {
+    (0..shards)
+        .map(|_| {
+            let config = config.to_string();
+            let ckpt_path = ckpt_path.to_string();
+            let factory = move || -> Result<Box<dyn compress::Compute>> {
+                let rt = runtime::Runtime::from_config(&config)?;
+                let ck = load_or_init_checkpoint(&rt.manifest, &ckpt_path, seed)?;
+                rt.warmup(&SERVE_WARMUP)?;
+                let engine = compress::OwnedEngine::new(rt, ck, comp_len)?;
+                Ok(Box::new(engine) as Box<dyn compress::Compute>)
+            };
+            Box::new(factory) as server::BackendFactory<'static>
+        })
+        .collect()
+}
+
+/// `ccm serve --port 7878 --method ccm-concat [--shards 4]
+/// [--eviction oldest|lru|largest-bytes] [--max-pending 256]
 /// [--kv-budget-mb 512] [--session-ttl-secs 600]`
+///
+/// With `--shards N > 1`, each shard's executor thread owns a full
+/// runtime + engine (PJRT runtimes are thread-bound); sessions route
+/// to shards by a stable hash of the session id, and the KV budget is
+/// partitioned across shards.
 pub fn cli_serve(args: &Args) -> Result<()> {
     let config = args.str("config", "main");
-    let rt = runtime::Runtime::from_config(&config)?;
+    let manifest = model::Manifest::load(&model::artifact_dir(&config))?;
     let ckpt_path = args.str("checkpoint", "");
-    let ck = if ckpt_path.is_empty() {
-        model::Checkpoint::init(&rt.manifest, args.u64("seed", 7)?)
-    } else {
-        model::Checkpoint::load(std::path::Path::new(&ckpt_path), &rt.manifest)?
-    };
-    let comp_len = args.usize("comp-len", rt.manifest.scenario.comp_len_max)?;
+    let seed = args.u64("seed", 7)?;
+    let comp_len = args.usize("comp-len", manifest.scenario.comp_len_max)?;
     let method = masks::Method::parse(&args.str("method", "ccm-concat"))?;
     let policy = match method {
         masks::Method::CcmMerge => coordinator::session::SessionPolicy::merge(comp_len),
         _ => coordinator::session::SessionPolicy::concat(comp_len),
     };
     let port = args.usize("port", 7878)?;
-    rt.warmup(&[
-        "compress_chunk_b1",
-        "compress_chunk_b8",
-        "infer_with_mem_b1",
-        "infer_with_mem_b8",
-    ])?;
+    let shards = args.usize("shards", 1)?.max(1);
     let mut cfg = server::ServerConfig::new(format!("127.0.0.1:{port}"), policy);
+    cfg.shards = shards;
+    cfg.eviction = coordinator::session::EvictionKind::parse(&args.str("eviction", "oldest"))?;
     cfg.max_batch = args.usize("max-batch", 8)?;
     cfg.max_wait = std::time::Duration::from_millis(args.u64("max-wait-ms", 2)?);
     cfg.max_pending = args.usize("max-pending", 256)?;
@@ -150,7 +188,26 @@ pub fn cli_serve(args: &Args) -> Result<()> {
     if ttl_secs > 0 {
         cfg.session_ttl = Some(std::time::Duration::from_secs(ttl_secs));
     }
-    server::serve(&rt, &ck, cfg, None)
+    if shards == 1 {
+        let rt = runtime::Runtime::load(manifest)?;
+        let ck = load_or_init_checkpoint(&rt.manifest, &ckpt_path, seed)?;
+        rt.warmup(&SERVE_WARMUP)?;
+        return server::serve(&rt, &ck, cfg, None);
+    }
+    let factories = serve_backend_factories(&config, &ckpt_path, seed, comp_len, shards);
+    server::serve_sharded(&manifest, factories, cfg, None)
+}
+
+fn load_or_init_checkpoint(
+    manifest: &model::Manifest,
+    ckpt_path: &str,
+    seed: u64,
+) -> Result<model::Checkpoint> {
+    if ckpt_path.is_empty() {
+        Ok(model::Checkpoint::init(manifest, seed))
+    } else {
+        model::Checkpoint::load(std::path::Path::new(ckpt_path), manifest)
+    }
 }
 
 /// `ccm stream --stream-tokens 2048`

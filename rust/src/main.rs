@@ -83,6 +83,8 @@ fn print_help() {
            train --phase lm|ccm|rmt     run a training phase (see --help-train)\n\
            eval --dataset metaicl ...   evaluate methods over time steps\n\
            serve --port 7878            start the serving coordinator\n\
+                 [--shards N]           executor shards (stable session routing)\n\
+                 [--eviction POLICY]    oldest | lru | largest-bytes\n\
            stream --budget 160          streaming perplexity (Figure 8)\n\
            reproduce --exp table1|fig7  regenerate a paper table/figure\n"
     );

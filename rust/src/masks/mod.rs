@@ -52,7 +52,7 @@ impl Method {
         }
     }
 
-    /// Does this method insert <COMP> tokens into the sequence?
+    /// Does this method insert `<COMP>` tokens into the sequence?
     pub fn uses_comp_tokens(&self) -> bool {
         matches!(self, Method::CcmConcat | Method::CcmMerge | Method::Gist)
     }
@@ -371,7 +371,7 @@ pub fn lora_gate(lay: &Layout, conditional: bool) -> Vec<f32> {
         .collect()
 }
 
-/// comp_slot input vector (0 = normal token, k>=1 = <COMP> slot k).
+/// comp_slot input vector (0 = normal token, k>=1 = `<COMP>` slot k).
 pub fn comp_slot_input(lay: &Layout) -> Vec<i32> {
     lay.comp_slot.clone()
 }

@@ -37,7 +37,7 @@ pub struct StreamWindow {
     pub mem_slots_max: usize,
     /// How many oldest tokens are compressed per compression step.
     pub compress_block: usize,
-    /// Memory slots one compression adds (the <COMP> length).
+    /// Memory slots one compression adds (the `<COMP>` length).
     pub slots_per_compress: usize,
     pub n_sink: usize,
     /// Total tokens ever seen (diagnostics).

@@ -1,7 +1,7 @@
 //! Parameter store: flat f32 vectors + checkpoint I/O.
 //!
 //! The base model and the compression adapter (conditional LoRA +
-//! <COMP> embeddings) each live in one flat buffer whose layout comes
+//! `<COMP>` embeddings) each live in one flat buffer whose layout comes
 //! from the manifest. Checkpoints are a simple versioned binary format
 //! (magic, name, layout checksum, f32 LE payload) — no external deps.
 

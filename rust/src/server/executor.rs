@@ -1,0 +1,526 @@
+//! Per-shard executor: one continuously-pumped intake → pump → deliver
+//! loop owning its own [`Compute`] backend, dynamic batcher, and
+//! session manager. PR 1's single global executor, turned into the
+//! replicated unit of multi-executor serving: each shard enforces its
+//! own slice of the global KV budget, reaps its own idle sessions, and
+//! keeps its own [`crate::coordinator::metrics::Metrics`]; the router
+//! merges the per-shard stats into the global view.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::compress::Compute;
+use crate::coordinator::batcher::WorkKind;
+use crate::coordinator::Coordinator;
+use crate::model::manifest::Manifest;
+use crate::server::router::partition_budget;
+use crate::server::{Reply, Request, ServerConfig};
+use crate::util::json::escape;
+
+/// A query whose batch has not executed yet.
+struct WaitingQuery {
+    seq: u64,
+    reply: Reply,
+    input_len: usize,
+    topk: usize,
+}
+
+/// One serving shard: the intake/pump/deliver loop plus the request
+/// admission state. Constructed per shard (its KV budget is the
+/// shard's slice of the global budget) and consumed by [`Executor::run`]
+/// on the shard's executor thread.
+pub(crate) struct Executor<'a> {
+    coord: Coordinator<'a>,
+    shard: usize,
+    max_wait: Duration,
+    /// Admission control: queued work items beyond this are refused.
+    max_pending: usize,
+    /// This shard's slice of the global compressed-KV budget.
+    kv_budget: Option<usize>,
+    session_ttl: Option<Duration>,
+    /// Artifact shape limits (validated at admission so an oversized
+    /// request is a per-request error, not a batch-execution failure).
+    chunk_max: usize,
+    input_max: usize,
+    waiting: VecDeque<WaitingQuery>,
+    draining: bool,
+    /// Everyone who asked for shutdown; all are acked once drained.
+    shutdown_replies: Vec<Reply>,
+}
+
+impl<'a> Executor<'a> {
+    pub(crate) fn new(
+        manifest: &Manifest,
+        backend: Box<dyn Compute + 'a>,
+        cfg: &ServerConfig,
+        shard: usize,
+    ) -> Executor<'a> {
+        let mut coord = Coordinator::with_backend(
+            manifest,
+            backend,
+            cfg.policy.clone(),
+            cfg.max_batch,
+            cfg.max_wait,
+        );
+        coord.batcher.infer_priority = true; // queries are latency-sensitive
+        coord.sessions.set_eviction(cfg.eviction.build());
+        let shards = cfg.shards.max(1);
+        Executor {
+            coord,
+            shard,
+            max_wait: cfg.max_wait,
+            max_pending: cfg.max_pending,
+            kv_budget: cfg.kv_budget_bytes.map(|b| partition_budget(b, shard, shards)),
+            session_ttl: cfg.session_ttl,
+            chunk_max: manifest.scenario.chunk_max,
+            input_max: manifest.scenario.input_max,
+            waiting: VecDeque::new(),
+            draining: false,
+            shutdown_replies: Vec::new(),
+        }
+    }
+
+    /// Run until shutdown; returns the repliers to ack once the caller
+    /// has released the listener.
+    pub(crate) fn run(mut self, rx: Receiver<(Request, Reply)>) -> Result<Vec<Reply>> {
+        let idle_wait = self.max_wait.max(Duration::from_millis(1));
+        let intake_cap = (self.coord.batcher.max_batch * 4).max(32);
+        let mut disconnected = false;
+        let mut last_reap = Instant::now();
+        loop {
+            // 1. Intake: drain queued requests without stalling the pump.
+            let mut got = 0usize;
+            while got < intake_cap {
+                match rx.try_recv() {
+                    Ok((req, reply)) => {
+                        self.admit(req, reply);
+                        got += 1;
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        disconnected = true;
+                        break;
+                    }
+                }
+            }
+
+            // 2. Execute at most one batch (force while draining so the
+            //    tail flushes without waiting for age triggers), then
+            //    immediately deliver whatever finished — queries never
+            //    wait for an unrelated session's backlog to drain.
+            // A batch-execution failure must not kill the shard (it owns
+            // every resident session's memory): fail exactly the queries
+            // whose batch died, leave unrelated queued work alone, and
+            // keep serving.
+            let n = match self.coord.pump(self.draining || disconnected) {
+                Ok(n) => n,
+                Err(e) => {
+                    crate::info!("shard {}: batch execution failed: {e:#}", self.shard);
+                    let msg = format!(
+                        "{{\"ok\":false,\"error\":{}}}",
+                        escape(&format!("execution failed: {e:#}"))
+                    );
+                    let failed = self.coord.take_failed();
+                    self.waiting.retain(|w| {
+                        if failed.contains(&w.seq) {
+                            let _ = w.reply.send(msg.clone());
+                            false
+                        } else {
+                            true
+                        }
+                    });
+                    0
+                }
+            };
+            self.deliver_finished();
+            if self.waiting.is_empty() {
+                // Any result with no waiting consumer is orphaned (its
+                // query was failed on a batch error): free it.
+                self.coord.clear_results();
+            }
+            if n > 0 {
+                // KV only grows inside pump, so enforcing right after
+                // keeps the shard under its budget slice at every
+                // observable point.
+                if let Some(budget) = self.kv_budget {
+                    let evicted = self.coord.enforce_kv_budget(budget);
+                    if !evicted.is_empty() {
+                        crate::debug!(
+                            "shard {}: kv budget {budget}: evicted {} sessions",
+                            self.shard,
+                            evicted.len()
+                        );
+                    }
+                }
+            }
+
+            // 3. Idle-session reaping on a coarse timer.
+            if let Some(ttl) = self.session_ttl {
+                if last_reap.elapsed() >= Duration::from_millis(100) {
+                    last_reap = Instant::now();
+                    self.coord.reap_idle(ttl, Instant::now());
+                }
+            }
+
+            // 4. Graceful shutdown once in-flight work is drained.
+            if (self.draining || disconnected)
+                && self.coord.pending() == 0
+                && self.waiting.is_empty()
+            {
+                crate::info!("shard {} shutdown: {}", self.shard, self.coord.metrics.report());
+                return Ok(std::mem::take(&mut self.shutdown_replies));
+            }
+
+            // 5. Nothing executed and nothing arrived: block for the
+            //    next request. With queued-but-unripe work, wake within
+            //    max_wait so the age trigger fires; fully idle, park
+            //    long (a reap tick if a TTL is set, else effectively
+            //    until woken) rather than spinning at millisecond
+            //    cadence.
+            if n == 0 && got == 0 && !disconnected {
+                let fully_idle =
+                    self.coord.pending() == 0 && self.waiting.is_empty() && !self.draining;
+                let wait = if !fully_idle {
+                    idle_wait
+                } else if self.session_ttl.is_some() {
+                    Duration::from_millis(100)
+                } else {
+                    Duration::from_secs(3600)
+                };
+                match rx.recv_timeout(wait) {
+                    Ok((req, reply)) => self.admit(req, reply),
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => disconnected = true,
+                }
+            }
+        }
+    }
+
+    fn admit(&mut self, req: Request, reply: Reply) {
+        match req {
+            Request::Context { session, tokens } => {
+                if let Some(refusal) = self.refuse() {
+                    let _ = reply.send(refusal);
+                    return;
+                }
+                if tokens.len() > self.chunk_max {
+                    let _ = reply.send(too_long("chunk", tokens.len(), self.chunk_max));
+                    return;
+                }
+                self.coord.add_context(&session, tokens);
+                // Ack with the step the chunk will actually land on: t
+                // advances once per queued chunk, so two chunks queued
+                // in one window ack t+1 and t+2.
+                let queued = self.coord.batcher.queued_for(&session, WorkKind::Compress);
+                let s = self.coord.sessions.get_or_create(&session);
+                let msg = format!(
+                    "{{\"ok\":true,\"kind\":\"context\",\"t\":{},\"kv_bytes\":{}}}",
+                    s.t + queued,
+                    s.mem.kv_bytes()
+                );
+                let _ = reply.send(msg);
+            }
+            Request::Query { session, tokens, topk } => {
+                if let Some(refusal) = self.refuse() {
+                    let _ = reply.send(refusal);
+                    return;
+                }
+                if tokens.len() > self.input_max {
+                    let _ = reply.send(too_long("input", tokens.len(), self.input_max));
+                    return;
+                }
+                let input_len = tokens.len();
+                let seq = self.coord.query(&session, tokens);
+                self.waiting.push_back(WaitingQuery { seq, reply, input_len, topk });
+            }
+            Request::Stats => {
+                let _ = reply.send(self.stats_json());
+            }
+            Request::Shutdown => {
+                // Every shutdown requester is acked only once the drain
+                // completes — the ack means "listener closed, port free".
+                self.draining = true;
+                self.shutdown_replies.push(reply);
+            }
+        }
+    }
+
+    /// Admission control: refuse new work while draining or over the
+    /// pending bound. Returns the refusal response, if any.
+    fn refuse(&mut self) -> Option<String> {
+        if self.draining {
+            return Some(format!(
+                "{{\"ok\":false,\"error\":\"shutting_down\",\"pending\":{}}}",
+                self.coord.pending()
+            ));
+        }
+        if self.coord.pending() >= self.max_pending {
+            self.coord.metrics.rejected_overload += 1;
+            return Some(format!(
+                "{{\"ok\":false,\"error\":\"overloaded\",\"pending\":{}}}",
+                self.coord.pending()
+            ));
+        }
+        None
+    }
+
+    fn deliver_finished(&mut self) {
+        let coord = &mut self.coord;
+        self.waiting.retain(|w| {
+            if let Some(logits) = coord.take_result(w.seq) {
+                let msg = format_query_response(&logits, w.input_len, w.topk);
+                let _ = w.reply.send(msg);
+                false
+            } else {
+                true
+            }
+        });
+    }
+
+    /// This shard's stats object. Alongside live usage it reports the
+    /// configured limits (KV budget slice, idle TTL, pending bound,
+    /// eviction policy) so operators can compute headroom without
+    /// reading CLI flags.
+    fn stats_json(&self) -> String {
+        let m = &self.coord.metrics;
+        format!(
+            "{{\"ok\":true,\"kind\":\"stats\",\"shard\":{},\"eviction\":{},\"sessions\":{},\
+             \"kv_bytes\":{},\"kv_budget_bytes\":{},\"session_ttl_secs\":{},\"max_pending\":{},\
+             \"pending\":{},\"waiting\":{},\"requests\":{},\"compressions\":{},\"inferences\":{},\
+             \"batches\":{},\"rejected_overload\":{},\"sessions_evicted\":{},\
+             \"sessions_reaped\":{},\"priority_overrides\":{},\"peak_kv_bytes\":{},\"report\":{}}}",
+            self.shard,
+            escape(self.coord.sessions.eviction_name()),
+            self.coord.sessions.len(),
+            self.coord.sessions.total_kv_bytes(),
+            self.kv_budget.map_or_else(|| "null".to_string(), |b| b.to_string()),
+            self.session_ttl.map_or_else(|| "null".to_string(), |t| t.as_secs().to_string()),
+            self.max_pending,
+            self.coord.pending(),
+            self.waiting.len(),
+            m.requests,
+            m.compressions,
+            m.inferences,
+            m.batches,
+            m.rejected_overload,
+            m.sessions_evicted,
+            m.sessions_reaped,
+            self.coord.batcher.total_overrides(),
+            m.peak_kv_bytes,
+            escape(&m.report()),
+        )
+    }
+}
+
+/// `{"ok":false,"error":"too_long",...}` for oversized token lists.
+fn too_long(what: &str, got: usize, limit: usize) -> String {
+    format!(
+        "{{\"ok\":false,\"error\":\"too_long\",\"what\":\"{what}\",\"got\":{got},\"limit\":{limit}}}"
+    )
+}
+
+/// Top-k next-token distribution at the last real input position.
+/// Total order via `f32::total_cmp`: a NaN logit (a backend bug) must
+/// degrade to a bad ranking, not a panicking comparator in the server.
+fn format_query_response(logits: &crate::tensor::Tensor, input_len: usize, topk: usize) -> String {
+    let row = logits.row(&[input_len.saturating_sub(1)]);
+    // Normalize over the finite logits only: one NaN must not poison
+    // the log-sum-exp (and thereby every logprob in the response).
+    let finite = || row.iter().copied().filter(|x| x.is_finite());
+    let mx = finite().fold(f32::NEG_INFINITY, f32::max);
+    let lse: f32 = finite().map(|x| (x - mx).exp()).sum::<f32>().ln() + mx;
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    idx.sort_by(|&a, &b| row[b].total_cmp(&row[a]));
+    let pairs: Vec<String> = idx
+        .iter()
+        .take(topk)
+        .map(|&i| {
+            let lp = row[i] - lse;
+            // JSON has no NaN/Infinity literal; degrade to null.
+            if lp.is_finite() {
+                format!("[{},{:.4}]", i, lp)
+            } else {
+                format!("[{},null]", i)
+            }
+        })
+        .collect();
+    format!("{{\"ok\":true,\"kind\":\"query\",\"next\":[{}]}}", pairs.join(","))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::SimCompute;
+    use crate::coordinator::session::{EvictionKind, SessionPolicy};
+    use crate::util::json::Json;
+    use std::sync::mpsc::channel;
+
+    fn toy_executor(tune: impl FnOnce(&mut ServerConfig)) -> Executor<'static> {
+        let m = Manifest::toy();
+        let sim = SimCompute::from_manifest(&m);
+        let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(2));
+        cfg.max_batch = 4;
+        cfg.max_wait = Duration::ZERO;
+        tune(&mut cfg);
+        Executor::new(&m, Box::new(sim), &cfg, 0)
+    }
+
+    fn recv_json(rx: &std::sync::mpsc::Receiver<String>) -> Json {
+        Json::parse(&rx.recv().expect("reply")).expect("valid JSON reply")
+    }
+
+    #[test]
+    fn admission_acks_queued_steps_and_refuses_over_bound() {
+        let mut ex = toy_executor(|cfg| cfg.max_pending = 2);
+
+        // Two chunks queued in one window ack t=1 and t=2 (seed bug:
+        // both acked t=1).
+        let (tx, rx) = channel();
+        let ctx = |toks: Vec<i32>| Request::Context { session: "u".into(), tokens: toks };
+        ex.admit(ctx(vec![4, 5]), tx.clone());
+        assert_eq!(recv_json(&rx).get("t").unwrap().i64().unwrap(), 1);
+        ex.admit(ctx(vec![6, 7]), tx.clone());
+        assert_eq!(recv_json(&rx).get("t").unwrap().i64().unwrap(), 2);
+
+        // The pending bound is hit: the third chunk is refused.
+        ex.admit(ctx(vec![8]), tx.clone());
+        let refusal = recv_json(&rx);
+        assert_eq!(refusal.get("ok").unwrap(), &Json::Bool(false));
+        assert_eq!(refusal.get("error").unwrap().str().unwrap(), "overloaded");
+        assert_eq!(refusal.get("pending").unwrap().usize().unwrap(), 2);
+        assert_eq!(ex.coord.metrics.rejected_overload, 1);
+
+        // After executing, acks continue from the session's real step.
+        ex.coord.run_until_idle().unwrap();
+        ex.admit(ctx(vec![9]), tx.clone());
+        assert_eq!(recv_json(&rx).get("t").unwrap().i64().unwrap(), 3);
+
+        // Oversized requests are refused at admission, not detonated
+        // inside a batch (which would take the whole shard down).
+        ex.admit(ctx(vec![0; 9]), tx.clone());
+        let refusal = recv_json(&rx);
+        assert_eq!(refusal.get("error").unwrap().str().unwrap(), "too_long");
+        assert_eq!(refusal.get("limit").unwrap().usize().unwrap(), 8);
+        let query = Request::Query { session: "u".into(), tokens: vec![0; 9], topk: 1 };
+        ex.admit(query, tx.clone());
+        assert_eq!(recv_json(&rx).get("error").unwrap().str().unwrap(), "too_long");
+        assert!(ex.waiting.is_empty(), "refused query must not wait for results");
+        ex.coord.run_until_idle().expect("no oversized item reached the backend");
+    }
+
+    #[test]
+    fn admission_refuses_new_work_while_draining() {
+        let mut ex = toy_executor(|_| {});
+        let (tx, rx) = channel();
+        ex.admit(Request::Shutdown, tx.clone());
+        assert!(ex.draining && ex.shutdown_replies.len() == 1);
+        ex.admit(Request::Query { session: "q".into(), tokens: vec![1], topk: 1 }, tx.clone());
+        let refusal = recv_json(&rx);
+        assert_eq!(refusal.get("error").unwrap().str().unwrap(), "shutting_down");
+        assert_eq!(ex.coord.pending(), 0, "refused work must not be queued");
+        // Stats are still served during the drain.
+        ex.admit(Request::Stats, tx.clone());
+        let stats = recv_json(&rx);
+        assert_eq!(stats.get("kind").unwrap().str().unwrap(), "stats");
+        // A second shutdown during the drain is deferred too: the ack
+        // contract is "drained, listener closed", so nobody is acked
+        // until then.
+        ex.admit(Request::Shutdown, tx.clone());
+        assert_eq!(ex.shutdown_replies.len(), 2);
+        assert!(rx.try_recv().is_err(), "no shutdown ack may be sent before the drain completes");
+    }
+
+    #[test]
+    fn stats_json_reports_configured_limits_alongside_live_usage() {
+        // Operators must be able to compute headroom (budget - usage,
+        // TTL, pending bound, policy) from the stats response alone,
+        // without reading back the CLI flags the server started with.
+        let mut ex = toy_executor(|cfg| {
+            cfg.kv_budget_bytes = Some(1 << 20);
+            cfg.session_ttl = Some(Duration::from_secs(600));
+            cfg.max_pending = 64;
+            cfg.eviction = EvictionKind::Lru;
+        });
+        ex.coord.add_context("a", vec![1, 2]);
+        ex.coord.run_until_idle().unwrap();
+        let s = ex.stats_json();
+        let j = Json::parse(&s).expect("stats must be valid JSON");
+        assert_eq!(j.get("shard").unwrap().usize().unwrap(), 0);
+        assert_eq!(j.get("sessions").unwrap().usize().unwrap(), 1);
+        assert_eq!(j.get("kv_budget_bytes").unwrap().usize().unwrap(), 1 << 20);
+        assert_eq!(j.get("session_ttl_secs").unwrap().usize().unwrap(), 600);
+        assert_eq!(j.get("max_pending").unwrap().usize().unwrap(), 64);
+        assert_eq!(j.get("eviction").unwrap().str().unwrap(), "lru");
+        assert!(j.get("kv_bytes").unwrap().usize().unwrap() > 0);
+        // The multi-line report embeds as a proper JSON string (the
+        // seed used {:?}, which can emit non-JSON escapes).
+        assert!(j.get("report").unwrap().str().unwrap().contains("requests="));
+    }
+
+    #[test]
+    fn stats_json_reports_null_limits_when_unconfigured() {
+        let ex = toy_executor(|_| {});
+        let j = Json::parse(&ex.stats_json()).unwrap();
+        assert_eq!(j.get("kv_budget_bytes").unwrap(), &Json::Null);
+        assert_eq!(j.get("session_ttl_secs").unwrap(), &Json::Null);
+        assert_eq!(j.get("eviction").unwrap().str().unwrap(), "oldest");
+    }
+
+    #[test]
+    fn shard_budget_is_a_partition_of_the_global_budget() {
+        let m = Manifest::toy();
+        let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(2));
+        cfg.shards = 4;
+        cfg.kv_budget_bytes = Some(1001);
+        let budgets: Vec<usize> = (0..4)
+            .map(|i| {
+                let sim = SimCompute::from_manifest(&m);
+                Executor::new(&m, Box::new(sim), &cfg, i).kv_budget.unwrap()
+            })
+            .collect();
+        assert_eq!(budgets.iter().sum::<usize>(), 1001);
+        assert!(budgets.iter().all(|b| *b == 250 || *b == 251), "{budgets:?}");
+    }
+
+    #[test]
+    fn formats_query_response_as_valid_json() {
+        let mut logits = crate::tensor::Tensor::zeros(&[4, 6]);
+        logits.set(&[1, 3], 5.0);
+        let s = format_query_response(&logits, 2, 3);
+        let j = Json::parse(&s).unwrap();
+        let next = j.get("next").unwrap().arr().unwrap();
+        assert_eq!(next.len(), 3);
+        assert_eq!(next[0].arr().unwrap()[0].i64().unwrap(), 3);
+        // log-probs <= 0
+        assert!(next[0].arr().unwrap()[1].f64().unwrap() <= 0.0);
+    }
+
+    #[test]
+    fn query_response_survives_nan_logits() {
+        // Regression: the seed used partial_cmp().unwrap(), which
+        // panicked the executor on any NaN logit.
+        let mut logits = crate::tensor::Tensor::zeros(&[2, 5]);
+        logits.set(&[1, 2], f32::NAN);
+        logits.set(&[1, 4], 3.0);
+        let s = format_query_response(&logits, 2, 2);
+        let j = Json::parse(&s).expect("still valid JSON");
+        let next = j.get("next").unwrap().arr().unwrap();
+        assert_eq!(next.len(), 2);
+        // total_cmp ranks NaN above every real number (descending sort),
+        // but the finite top token must still be present.
+        let toks: Vec<i64> = next.iter().map(|p| p.arr().unwrap()[0].i64().unwrap()).collect();
+        assert!(toks.contains(&4), "finite max must rank in top-2: {toks:?}");
+        // The NaN entry degrades to null; finite entries keep real
+        // logprobs (lse is computed over finite logits only).
+        for p in next {
+            let pair = p.arr().unwrap();
+            match pair[0].i64().unwrap() {
+                2 => assert_eq!(pair[1], Json::Null),
+                _ => assert!(pair[1].f64().unwrap() <= 0.0),
+            }
+        }
+    }
+}

@@ -1,14 +1,29 @@
 //! JSON-lines TCP serving front-end.
 //!
-//! Connection threads parse newline-delimited JSON requests and forward
-//! them over a channel to the single executor thread that owns the PJRT
-//! runtime (XLA executables are not Sync; one executor per device is the
-//! standard topology). The executor is a continuously-pumped pipeline:
-//! each turn it (1) drains whatever requests are queued, (2) executes at
-//! most one batch through the coordinator, and (3) delivers any finished
-//! query results — so a fast query is never stuck behind another
-//! session's full queue drain (no head-of-line blocking), and intake
-//! keeps flowing while batches execute.
+//! Connection threads parse newline-delimited JSON requests and hand
+//! them to the router (see [`router`]), which fans them out to N shard
+//! executors. Each shard (see `executor.rs`) owns its own [`Compute`]
+//! backend, dynamic batcher, and session manager — the standard
+//! one-executor-per-device topology (XLA executables are not Sync) —
+//! and runs the continuously-pumped pipeline from PR 1: each turn it
+//! (1) drains whatever requests are queued, (2) executes at most one
+//! batch through its coordinator, and (3) delivers any finished query
+//! results — so a fast query is never stuck behind another session's
+//! full queue drain, and intake keeps flowing while batches execute.
+//!
+//! ## Sharding (`--shards N`)
+//!
+//! Sessions are routed with a stable hash of the session id
+//! ([`shard_for`]): one session id ALWAYS maps to the same shard, so a
+//! session's compressed memory Mem(t) never migrates and per-session
+//! ordering is preserved across any number of connections. Per-shard
+//! KV budgets partition the global `--kv-budget-mb` (slices sum
+//! exactly to the global budget), admission control (`--max-pending`)
+//! bounds each shard's queue independently — one flooded shard refuses
+//! work while the others keep serving — and each shard evicts by the
+//! selected `--eviction` policy (`oldest` | `lru` | `largest-bytes`).
+//! With `--shards 1` (the default) the engine behaves exactly like the
+//! PR 1 single-executor pipeline.
 //!
 //! ## Protocol (one JSON object per line)
 //!
@@ -24,19 +39,26 @@
 //!       session's compressed-KV size at ack time (pre-compression).
 //!   {"ok":true,"kind":"query","next":[[tok,logprob],...]}
 //!   {"ok":true,"kind":"stats",...}
-//!       Numeric fields: sessions, kv_bytes, kv_budget_bytes (or null),
-//!       pending (queued work items), waiting (queries in flight),
-//!       requests, compressions, inferences, batches, rejected_overload,
-//!       sessions_evicted, sessions_reaped, peak_kv_bytes; plus `report`
-//!       (the human-readable metrics block, JSON-escaped).
+//!       Live usage (sessions, kv_bytes, pending queued work, waiting
+//!       queries in flight, requests/compressions/inferences/batches,
+//!       rejected_overload, sessions_evicted, sessions_reaped,
+//!       priority_overrides, peak_kv_bytes) PLUS the configured limits
+//!       (kv_budget_bytes, session_ttl_secs, max_pending, eviction) so
+//!       operators can compute headroom from the response alone. With
+//!       one shard the object carries its `shard` id and the
+//!       human-readable `report`; with N shards the response is the
+//!       merged global view (counters summed, `shards`:N) and
+//!       `per_shard` embeds each shard's own stats object.
 //!   {"ok":true,"kind":"shutdown"}
-//!       Sent after in-flight work has drained; the listener is closed
-//!       and the acceptor thread joined before `serve` returns.
+//!       Sent after in-flight work has drained on EVERY shard; the
+//!       listener is closed and the acceptor thread joined before
+//!       `serve` returns.
 //!
 //! Error responses (admission control and lifecycle):
 //!   {"ok":false,"error":"overloaded","pending":N}
-//!       The bounded pending queue (`max_pending`) is full. Back off and
-//!       retry; the connection stays open.
+//!       The target shard's bounded pending queue (`max_pending`) is
+//!       full. Back off and retry; the connection stays open. Other
+//!       shards are unaffected.
 //!   {"ok":false,"error":"shutting_down","pending":N}
 //!       A shutdown is draining; no new work is admitted.
 //!   {"ok":false,"error":"too_long","what":"chunk"|"input","got":N,"limit":N}
@@ -44,37 +66,53 @@
 //!       validated at admission so it never fails a batch.
 //!   {"ok":false,"error":"timeout"}
 //!       The executor did not answer within the per-request deadline.
+//!   {"ok":false,"error":"stats_unavailable"}
+//!       A shard could not answer a fanned-out stats request (e.g. it
+//!       is mid-shutdown); merged stats fail closed over partial data.
+//!   {"ok":false,"error":"shard_unavailable"}
+//!       The session's shard executor is gone for good in this process
+//!       (it drained during a shutdown, or its backend failed to
+//!       initialize). Not retryable here; the connection stays open
+//!       for sessions on other shards.
 //!   {"ok":false,"error":"..."} for malformed requests.
 //!
 //! ## Memory governance
 //!
-//! With `kv_budget_bytes` set, the executor enforces a global
-//! compressed-KV budget after every executed batch: oldest-created idle
-//! sessions are evicted (their memory is dropped) until under budget.
-//! Sessions with queued work are never evicted. With `session_ttl` set,
-//! sessions idle longer than the TTL are reaped periodically. Both are
-//! counted in `stats` (`sessions_evicted`, `sessions_reaped`). A later
-//! request for an evicted session transparently starts a fresh session
-//! (its compressed memory is gone — that is the cost of the budget).
+//! With `kv_budget_bytes` set, each shard enforces its slice of the
+//! global compressed-KV budget after every executed batch: idle
+//! sessions are evicted in [`EvictionPolicy`] order until under
+//! budget. Sessions with queued work are never evicted. With
+//! `session_ttl` set, sessions idle longer than the TTL are reaped
+//! periodically. Both are counted in `stats` (`sessions_evicted`,
+//! `sessions_reaped`). A later request for an evicted session
+//! transparently starts a fresh session (its compressed memory is
+//! gone — that is the cost of the budget).
+//!
+//! [`EvictionPolicy`]: crate::coordinator::session::EvictionPolicy
 
-use std::collections::VecDeque;
+mod executor;
+pub mod router;
+
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
 use crate::compress::{Compute, Engine};
-use crate::coordinator::batcher::WorkKind;
-use crate::coordinator::session::SessionPolicy;
-use crate::coordinator::Coordinator;
+use crate::coordinator::session::{EvictionKind, SessionPolicy};
 use crate::model::manifest::Manifest;
 use crate::model::Checkpoint;
 use crate::runtime::Runtime;
 use crate::util::json::{escape, Json};
+
+use executor::Executor;
+use router::Router;
+
+pub use router::shard_for;
 
 #[derive(Debug)]
 pub enum Request {
@@ -104,6 +142,15 @@ impl Request {
             _ => bail!("unknown op {op:?}"),
         })
     }
+
+    /// Session id for session-routed ops (the routing key of
+    /// [`shard_for`]); `None` for fan-out ops (stats, shutdown).
+    pub fn session(&self) -> Option<&str> {
+        match self {
+            Request::Context { session, .. } | Request::Query { session, .. } => Some(session),
+            Request::Stats | Request::Shutdown => None,
+        }
+    }
 }
 
 /// Serving configuration. `new` fills production-shaped defaults; set
@@ -111,17 +158,25 @@ impl Request {
 pub struct ServerConfig {
     pub addr: String,
     pub policy: SessionPolicy,
-    /// Artifact batch width the coordinator packs towards.
+    /// Artifact batch width each shard's coordinator packs towards.
     pub max_batch: usize,
     /// Dynamic-batching age trigger (how long a lone item waits).
     pub max_wait: Duration,
-    /// Admission control: queued work items beyond this are refused
-    /// with an `overloaded` reply instead of buffered without bound.
+    /// Admission control, per shard: queued work items beyond this are
+    /// refused with an `overloaded` reply instead of buffered without
+    /// bound.
     pub max_pending: usize,
-    /// Global compressed-KV budget across all sessions (bytes).
+    /// Global compressed-KV budget across all sessions (bytes);
+    /// partitioned into per-shard slices that sum exactly to it.
     pub kv_budget_bytes: Option<usize>,
     /// Idle-session TTL; idle sessions beyond it are reaped.
     pub session_ttl: Option<Duration>,
+    /// Executor shard count. Informational for [`serve_with_backend`]
+    /// (which drives exactly one executor); [`serve_sharded`] overrides
+    /// it with the number of backends supplied.
+    pub shards: usize,
+    /// Session-eviction policy under KV-budget pressure.
+    pub eviction: EvictionKind,
 }
 
 impl ServerConfig {
@@ -134,13 +189,24 @@ impl ServerConfig {
             max_pending: 256,
             kv_budget_bytes: None,
             session_ttl: None,
+            shards: 1,
+            eviction: EvictionKind::OldestCreated,
         }
     }
 }
 
-type Reply = Sender<String>;
+pub(crate) type Reply = Sender<String>;
 
-/// Run the server until a shutdown request arrives, over the XLA engine.
+/// Builds one shard's [`Compute`] backend INSIDE that shard's executor
+/// thread, so a backend may own thread-bound state (e.g. a PJRT
+/// runtime, which must never cross threads).
+pub type BackendFactory<'a> = Box<dyn FnOnce() -> Result<Box<dyn Compute + 'a>> + Send + 'a>;
+
+/// Run the server until a shutdown request arrives, over the XLA engine
+/// borrowed from `rt`. Single-executor only: a PJRT runtime is
+/// thread-bound, so multi-shard serving needs one owned runtime per
+/// shard — build [`crate::compress::OwnedEngine`] factories and call
+/// [`serve_sharded`] instead (see `cli_serve` for the wiring).
 /// `ready` receives the bound local address (tests bind port 0).
 pub fn serve(
     rt: &Runtime,
@@ -148,32 +214,123 @@ pub fn serve(
     cfg: ServerConfig,
     ready: Option<Sender<String>>,
 ) -> Result<()> {
+    if cfg.shards > 1 {
+        bail!(
+            "serve() drives one borrowed runtime; for --shards {} use serve_sharded \
+             with one OwnedEngine per shard",
+            cfg.shards
+        );
+    }
     let engine = Engine::new(rt, ck, cfg.policy.comp_len)?;
     serve_with_backend(&rt.manifest, Box::new(engine), cfg, ready)
 }
 
-/// Run the server over any [`Compute`] backend (protocol tests and
-/// host-only benches inject [`crate::compress::SimCompute`]).
+/// Run a single-executor server over any [`Compute`] backend (protocol
+/// tests and host-only benches inject [`crate::compress::SimCompute`]).
+/// The executor runs on the calling thread, so the backend need not be
+/// `Send`. For multi-shard serving use [`serve_sharded`].
 pub fn serve_with_backend<'a>(
     manifest: &Manifest,
     backend: Box<dyn Compute + 'a>,
     cfg: ServerConfig,
     ready: Option<Sender<String>>,
 ) -> Result<()> {
-    let policy = cfg.policy.clone();
-    let mut coord =
-        Coordinator::with_backend(manifest, backend, policy, cfg.max_batch, cfg.max_wait);
-    coord.batcher.infer_priority = true; // queries are latency-sensitive
+    if cfg.shards > 1 {
+        bail!(
+            "serve_with_backend drives one executor; use serve_sharded with {} backends",
+            cfg.shards
+        );
+    }
+    let (req_tx, req_rx) = channel::<(Request, Reply)>();
+    let router = Router::new(vec![req_tx], &cfg);
+    let cfg = &cfg;
+    run_server(cfg, router, ready, move || {
+        match Executor::new(manifest, backend, cfg, 0).run(req_rx) {
+            Ok(replies) => (replies, Ok(())),
+            Err(e) => (Vec::new(), Err(e)),
+        }
+    })
+}
 
+/// Run an N-shard server: one executor thread per backend factory,
+/// each owning the backend its factory builds. `cfg.shards` is set to
+/// the factory count. The listener binds (and `ready` fires) before
+/// the factories run, so shard backends build/warm up concurrently
+/// while the port is already open: requests arriving early queue on
+/// their shard until it is ready (they are answered, not refused —
+/// but a warmup longer than the connection's 60 s reply deadline
+/// surfaces as per-request timeouts, unlike the single-shard path
+/// which binds only after warmup). Sessions route by [`shard_for`]; the
+/// global KV budget is partitioned across shards. If a factory fails,
+/// its shard is dead (requests routed there get `shard_unavailable`)
+/// but the other shards keep serving until shutdown, when the error is
+/// returned (after acking the healthy shards' shutdown requesters).
+pub fn serve_sharded<'a>(
+    manifest: &Manifest,
+    factories: Vec<BackendFactory<'a>>,
+    mut cfg: ServerConfig,
+    ready: Option<Sender<String>>,
+) -> Result<()> {
+    if factories.is_empty() {
+        bail!("serve_sharded needs at least one backend factory");
+    }
+    cfg.shards = factories.len();
+    let mut senders = Vec::with_capacity(cfg.shards);
+    let mut work = Vec::with_capacity(cfg.shards);
+    for (shard, factory) in factories.into_iter().enumerate() {
+        let (tx, rx) = channel::<(Request, Reply)>();
+        senders.push(tx);
+        work.push((shard, factory, rx));
+    }
+    let router = Router::new(senders, &cfg);
+    let cfg = &cfg;
+    run_server(cfg, router, ready, move || {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = work
+                .into_iter()
+                .map(|(shard, factory, rx)| {
+                    s.spawn(move || -> Result<Vec<Reply>> {
+                        let backend = factory()?;
+                        Executor::new(manifest, backend, cfg, shard).run(rx)
+                    })
+                })
+                .collect();
+            let mut replies = Vec::new();
+            let mut first_err = None;
+            for h in handles {
+                match h.join().expect("executor thread") {
+                    Ok(mut r) => replies.append(&mut r),
+                    Err(e) => first_err = first_err.or(Some(e)),
+                }
+            }
+            // Replies from healthy shards are returned even when a
+            // shard errored: their requesters still get the shutdown
+            // ack once the port is released.
+            (replies, first_err.map_or(Ok(()), Err))
+        })
+    })
+}
+
+/// Shared serving shell: bind the listener, run the acceptor thread
+/// (connection threads dispatch through `router`), drive the executors
+/// via `run_executors` (which blocks until every shard has drained and
+/// returns the drained shards' shutdown repliers alongside the first
+/// shard error, if any), then release the port, ack the shutdown
+/// requesters — even on a partial failure — and propagate the error.
+fn run_server(
+    cfg: &ServerConfig,
+    router: Router,
+    ready: Option<Sender<String>>,
+    run_executors: impl FnOnce() -> (Vec<Reply>, Result<()>),
+) -> Result<()> {
     let listener = TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
     listener.set_nonblocking(true).context("listener nonblocking")?;
     let local = listener.local_addr()?.to_string();
-    crate::info!("serving on {local}");
+    crate::info!("serving on {local} ({} shard(s), eviction {})", cfg.shards, cfg.eviction.name());
     if let Some(tx) = ready {
         let _ = tx.send(local.clone());
     }
 
-    let (req_tx, req_rx) = channel::<(Request, Reply)>();
     let stop = Arc::new(AtomicBool::new(false));
 
     // Acceptor thread: polls the nonblocking listener so it can observe
@@ -186,9 +343,9 @@ pub fn serve_with_backend<'a>(
                 match listener.accept() {
                     Ok((stream, _)) => {
                         let _ = stream.set_nonblocking(false);
-                        let tx = req_tx.clone();
+                        let router = router.clone();
                         std::thread::spawn(move || {
-                            let _ = handle_connection(stream, tx);
+                            let _ = handle_connection(stream, router);
                         });
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -203,22 +360,20 @@ pub fn serve_with_backend<'a>(
         })
     };
 
-    let limits = (manifest.scenario.chunk_max, manifest.scenario.input_max);
-    let result = executor_loop(coord, &cfg, limits, req_rx);
+    let (shutdown_replies, result) = run_executors();
     // Signal the acceptor and join it so the port is actually released
     // before `serve` returns (the seed leaked both thread and port).
     stop.store(true, Ordering::SeqCst);
     let _ = acceptor.join();
     // Only now — listener dropped, port free — ack the shutdown
     // requesters: the ack's documented meaning is "port released".
-    let shutdown_replies = result?;
     for reply in shutdown_replies {
         let _ = reply.send("{\"ok\":true,\"kind\":\"shutdown\"}".into());
     }
-    Ok(())
+    result
 }
 
-fn handle_connection(stream: TcpStream, tx: Sender<(Request, Reply)>) -> Result<()> {
+fn handle_connection(stream: TcpStream, router: Router) -> Result<()> {
     let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
     crate::debug!("connection from {peer}");
     let reader = BufReader::new(stream.try_clone()?);
@@ -232,7 +387,7 @@ fn handle_connection(stream: TcpStream, tx: Sender<(Request, Reply)>) -> Result<
         match Request::parse(&line) {
             Ok(req) => {
                 let shutdown = matches!(req, Request::Shutdown);
-                if tx.send((req, resp_tx)).is_err() {
+                if !router.dispatch(req, resp_tx) {
                     break; // executor gone
                 }
                 match resp_rx.recv_timeout(Duration::from_secs(60)) {
@@ -257,288 +412,6 @@ fn handle_connection(stream: TcpStream, tx: Sender<(Request, Reply)>) -> Result<
         }
     }
     Ok(())
-}
-
-/// A query whose batch has not executed yet.
-struct WaitingQuery {
-    seq: u64,
-    reply: Reply,
-    input_len: usize,
-    topk: usize,
-}
-
-/// Executor state threaded through request admission.
-struct ExecState {
-    waiting: VecDeque<WaitingQuery>,
-    draining: bool,
-    /// Everyone who asked for shutdown; all are acked once drained.
-    shutdown_replies: Vec<Reply>,
-    /// Artifact shape limits (validated at admission so an oversized
-    /// request is a per-request error, not a batch-execution failure).
-    chunk_max: usize,
-    input_max: usize,
-}
-
-/// Runs until shutdown; returns the repliers to ack once the caller
-/// has released the listener.
-fn executor_loop(
-    mut coord: Coordinator,
-    cfg: &ServerConfig,
-    (chunk_max, input_max): (usize, usize),
-    rx: Receiver<(Request, Reply)>,
-) -> Result<Vec<Reply>> {
-    let idle_wait = cfg.max_wait.max(Duration::from_millis(1));
-    let intake_cap = (cfg.max_batch * 4).max(32);
-    let mut st = ExecState {
-        waiting: VecDeque::new(),
-        draining: false,
-        shutdown_replies: Vec::new(),
-        chunk_max,
-        input_max,
-    };
-    let mut disconnected = false;
-    let mut last_reap = Instant::now();
-    loop {
-        // 1. Intake: drain queued requests without stalling the pump.
-        let mut got = 0usize;
-        while got < intake_cap {
-            match rx.try_recv() {
-                Ok((req, reply)) => {
-                    admit(&mut coord, cfg, &mut st, req, reply);
-                    got += 1;
-                }
-                Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => {
-                    disconnected = true;
-                    break;
-                }
-            }
-        }
-
-        // 2. Execute at most one batch (force while draining so the tail
-        //    flushes without waiting for age triggers), then immediately
-        //    deliver whatever finished — queries never wait for an
-        //    unrelated session's backlog to drain.
-        // A batch-execution failure must not kill the server (it owns
-        // every session's memory): fail exactly the queries whose batch
-        // died, leave unrelated queued work alone, and keep serving.
-        let n = match coord.pump(st.draining || disconnected) {
-            Ok(n) => n,
-            Err(e) => {
-                crate::info!("batch execution failed: {e:#}");
-                let msg = format!(
-                    "{{\"ok\":false,\"error\":{}}}",
-                    escape(&format!("execution failed: {e:#}"))
-                );
-                let failed = coord.take_failed();
-                st.waiting.retain(|w| {
-                    if failed.contains(&w.seq) {
-                        let _ = w.reply.send(msg.clone());
-                        false
-                    } else {
-                        true
-                    }
-                });
-                0
-            }
-        };
-        deliver_finished(&mut coord, &mut st.waiting);
-        if st.waiting.is_empty() {
-            // Any result with no waiting consumer is orphaned (its
-            // query was failed on a batch error): free it.
-            coord.clear_results();
-        }
-        if n > 0 {
-            // KV only grows inside pump, so enforcing right after keeps
-            // the server under budget at every observable point.
-            if let Some(budget) = cfg.kv_budget_bytes {
-                let evicted = coord.enforce_kv_budget(budget);
-                if !evicted.is_empty() {
-                    crate::debug!("kv budget {budget}: evicted {} sessions", evicted.len());
-                }
-            }
-        }
-
-        // 3. Idle-session reaping on a coarse timer.
-        if let Some(ttl) = cfg.session_ttl {
-            if last_reap.elapsed() >= Duration::from_millis(100) {
-                last_reap = Instant::now();
-                coord.reap_idle(ttl, Instant::now());
-            }
-        }
-
-        // 4. Graceful shutdown once in-flight work is drained.
-        if (st.draining || disconnected) && coord.pending() == 0 && st.waiting.is_empty() {
-            crate::info!("shutdown: {}", coord.metrics.report());
-            return Ok(std::mem::take(&mut st.shutdown_replies));
-        }
-
-        // 5. Nothing executed and nothing arrived: block for the next
-        //    request. With queued-but-unripe work, wake within max_wait
-        //    so the age trigger fires; fully idle, park long (a reap
-        //    tick if a TTL is set, else effectively until woken) rather
-        //    than spinning at millisecond cadence.
-        if n == 0 && got == 0 && !disconnected {
-            let fully_idle = coord.pending() == 0 && st.waiting.is_empty() && !st.draining;
-            let wait = if !fully_idle {
-                idle_wait
-            } else if cfg.session_ttl.is_some() {
-                Duration::from_millis(100)
-            } else {
-                Duration::from_secs(3600)
-            };
-            match rx.recv_timeout(wait) {
-                Ok((req, reply)) => admit(&mut coord, cfg, &mut st, req, reply),
-                Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => disconnected = true,
-            }
-        }
-    }
-}
-
-fn admit(
-    coord: &mut Coordinator,
-    cfg: &ServerConfig,
-    st: &mut ExecState,
-    req: Request,
-    reply: Reply,
-) {
-    match req {
-        Request::Context { session, tokens } => {
-            if let Some(refusal) = refuse(coord, cfg, st) {
-                let _ = reply.send(refusal);
-                return;
-            }
-            if tokens.len() > st.chunk_max {
-                let _ = reply.send(too_long("chunk", tokens.len(), st.chunk_max));
-                return;
-            }
-            coord.add_context(&session, tokens);
-            // Ack with the step the chunk will actually land on: t
-            // advances once per queued chunk, so two chunks queued in
-            // one window ack t+1 and t+2 (the seed acked t+1 twice).
-            let queued = coord.batcher.queued_for(&session, WorkKind::Compress);
-            let s = coord.sessions.get_or_create(&session);
-            let msg = format!(
-                "{{\"ok\":true,\"kind\":\"context\",\"t\":{},\"kv_bytes\":{}}}",
-                s.t + queued,
-                s.mem.kv_bytes()
-            );
-            let _ = reply.send(msg);
-        }
-        Request::Query { session, tokens, topk } => {
-            if let Some(refusal) = refuse(coord, cfg, st) {
-                let _ = reply.send(refusal);
-                return;
-            }
-            if tokens.len() > st.input_max {
-                let _ = reply.send(too_long("input", tokens.len(), st.input_max));
-                return;
-            }
-            let input_len = tokens.len();
-            let seq = coord.query(&session, tokens);
-            st.waiting.push_back(WaitingQuery { seq, reply, input_len, topk });
-        }
-        Request::Stats => {
-            let _ = reply.send(stats_json(coord, cfg, st.waiting.len()));
-        }
-        Request::Shutdown => {
-            // Every shutdown requester is acked only once the drain
-            // completes — the ack means "listener closed, port free".
-            st.draining = true;
-            st.shutdown_replies.push(reply);
-        }
-    }
-}
-
-/// `{"ok":false,"error":"too_long",...}` for oversized token lists.
-fn too_long(what: &str, got: usize, limit: usize) -> String {
-    format!(
-        "{{\"ok\":false,\"error\":\"too_long\",\"what\":\"{what}\",\"got\":{got},\"limit\":{limit}}}"
-    )
-}
-
-/// Admission control: refuse new work while draining or over the
-/// pending bound. Returns the refusal response, if any.
-fn refuse(coord: &mut Coordinator, cfg: &ServerConfig, st: &ExecState) -> Option<String> {
-    if st.draining {
-        return Some(format!(
-            "{{\"ok\":false,\"error\":\"shutting_down\",\"pending\":{}}}",
-            coord.pending()
-        ));
-    }
-    if coord.pending() >= cfg.max_pending {
-        coord.metrics.rejected_overload += 1;
-        return Some(format!(
-            "{{\"ok\":false,\"error\":\"overloaded\",\"pending\":{}}}",
-            coord.pending()
-        ));
-    }
-    None
-}
-
-fn deliver_finished(coord: &mut Coordinator, waiting: &mut VecDeque<WaitingQuery>) {
-    waiting.retain(|w| {
-        if let Some(logits) = coord.take_result(w.seq) {
-            let msg = format_query_response(&logits, w.input_len, w.topk);
-            let _ = w.reply.send(msg);
-            false
-        } else {
-            true
-        }
-    });
-}
-
-fn stats_json(coord: &Coordinator, cfg: &ServerConfig, waiting: usize) -> String {
-    let m = &coord.metrics;
-    format!(
-        "{{\"ok\":true,\"kind\":\"stats\",\"sessions\":{},\"kv_bytes\":{},\"kv_budget_bytes\":{},\
-         \"pending\":{},\"waiting\":{},\"requests\":{},\"compressions\":{},\"inferences\":{},\
-         \"batches\":{},\"rejected_overload\":{},\"sessions_evicted\":{},\"sessions_reaped\":{},\
-         \"peak_kv_bytes\":{},\"report\":{}}}",
-        coord.sessions.len(),
-        coord.sessions.total_kv_bytes(),
-        cfg.kv_budget_bytes.map_or_else(|| "null".to_string(), |b| b.to_string()),
-        coord.pending(),
-        waiting,
-        m.requests,
-        m.compressions,
-        m.inferences,
-        m.batches,
-        m.rejected_overload,
-        m.sessions_evicted,
-        m.sessions_reaped,
-        m.peak_kv_bytes,
-        escape(&m.report()),
-    )
-}
-
-/// Top-k next-token distribution at the last real input position.
-/// Total order via `f32::total_cmp`: a NaN logit (a backend bug) must
-/// degrade to a bad ranking, not a panicking comparator in the server.
-fn format_query_response(logits: &crate::tensor::Tensor, input_len: usize, topk: usize) -> String {
-    let row = logits.row(&[input_len.saturating_sub(1)]);
-    // Normalize over the finite logits only: one NaN must not poison
-    // the log-sum-exp (and thereby every logprob in the response).
-    let finite = || row.iter().copied().filter(|x| x.is_finite());
-    let mx = finite().fold(f32::NEG_INFINITY, f32::max);
-    let lse: f32 = finite().map(|x| (x - mx).exp()).sum::<f32>().ln() + mx;
-    let mut idx: Vec<usize> = (0..row.len()).collect();
-    idx.sort_by(|&a, &b| row[b].total_cmp(&row[a]));
-    let pairs: Vec<String> = idx
-        .iter()
-        .take(topk)
-        .map(|&i| {
-            let lp = row[i] - lse;
-            // JSON has no NaN/Infinity literal; degrade to null.
-            if lp.is_finite() {
-                format!("[{},{:.4}]", i, lp)
-            } else {
-                format!("[{},null]", i)
-            }
-        })
-        .collect();
-    format!("{{\"ok\":true,\"kind\":\"query\",\"next\":[{}]}}", pairs.join(","))
 }
 
 /// Minimal blocking client for examples and tests.
@@ -621,126 +494,6 @@ fn fmt_tokens(tokens: &[i32]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compress::SimCompute;
-
-    fn toy_coordinator(max_batch: usize) -> Coordinator<'static> {
-        let m = Manifest::toy();
-        let sim = SimCompute::from_manifest(&m);
-        Coordinator::with_backend(
-            &m,
-            Box::new(sim),
-            SessionPolicy::concat(2),
-            max_batch,
-            Duration::ZERO,
-        )
-    }
-
-    fn recv_json(rx: &std::sync::mpsc::Receiver<String>) -> Json {
-        Json::parse(&rx.recv().expect("reply")).expect("valid JSON reply")
-    }
-
-    fn exec_state() -> ExecState {
-        ExecState {
-            waiting: VecDeque::new(),
-            draining: false,
-            shutdown_replies: Vec::new(),
-            chunk_max: 8,
-            input_max: 8,
-        }
-    }
-
-    #[test]
-    fn admission_acks_queued_steps_and_refuses_over_bound() {
-        let mut coord = toy_coordinator(4);
-        let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(2));
-        cfg.max_pending = 2;
-        let mut st = exec_state();
-
-        // Two chunks queued in one window ack t=1 and t=2 (seed bug:
-        // both acked t=1).
-        let (tx, rx) = channel();
-        let ctx = |toks: Vec<i32>| Request::Context { session: "u".into(), tokens: toks };
-        admit(&mut coord, &cfg, &mut st, ctx(vec![4, 5]), tx.clone());
-        assert_eq!(recv_json(&rx).get("t").unwrap().i64().unwrap(), 1);
-        admit(&mut coord, &cfg, &mut st, ctx(vec![6, 7]), tx.clone());
-        assert_eq!(recv_json(&rx).get("t").unwrap().i64().unwrap(), 2);
-
-        // The pending bound is hit: the third chunk is refused.
-        admit(&mut coord, &cfg, &mut st, ctx(vec![8]), tx.clone());
-        let refusal = recv_json(&rx);
-        assert_eq!(refusal.get("ok").unwrap(), &Json::Bool(false));
-        assert_eq!(refusal.get("error").unwrap().str().unwrap(), "overloaded");
-        assert_eq!(refusal.get("pending").unwrap().usize().unwrap(), 2);
-        assert_eq!(coord.metrics.rejected_overload, 1);
-
-        // After executing, acks continue from the session's real step.
-        coord.run_until_idle().unwrap();
-        admit(&mut coord, &cfg, &mut st, ctx(vec![9]), tx.clone());
-        assert_eq!(recv_json(&rx).get("t").unwrap().i64().unwrap(), 3);
-
-        // Oversized requests are refused at admission, not detonated
-        // inside a batch (which would take the whole server down).
-        admit(&mut coord, &cfg, &mut st, ctx(vec![0; 9]), tx.clone());
-        let refusal = recv_json(&rx);
-        assert_eq!(refusal.get("error").unwrap().str().unwrap(), "too_long");
-        assert_eq!(refusal.get("limit").unwrap().usize().unwrap(), 8);
-        let query = Request::Query { session: "u".into(), tokens: vec![0; 9], topk: 1 };
-        admit(&mut coord, &cfg, &mut st, query, tx.clone());
-        assert_eq!(recv_json(&rx).get("error").unwrap().str().unwrap(), "too_long");
-        assert!(st.waiting.is_empty(), "refused query must not wait for results");
-        coord.run_until_idle().expect("no oversized item reached the backend");
-    }
-
-    #[test]
-    fn admission_refuses_new_work_while_draining() {
-        let mut coord = toy_coordinator(4);
-        let cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(2));
-        let mut st = exec_state();
-        let (tx, rx) = channel();
-        admit(&mut coord, &cfg, &mut st, Request::Shutdown, tx.clone());
-        assert!(st.draining && st.shutdown_replies.len() == 1);
-        admit(
-            &mut coord,
-            &cfg,
-            &mut st,
-            Request::Query { session: "q".into(), tokens: vec![1], topk: 1 },
-            tx.clone(),
-        );
-        let refusal = recv_json(&rx);
-        assert_eq!(refusal.get("error").unwrap().str().unwrap(), "shutting_down");
-        assert_eq!(coord.pending(), 0, "refused work must not be queued");
-        // Stats are still served during the drain.
-        admit(&mut coord, &cfg, &mut st, Request::Stats, tx.clone());
-        let stats = recv_json(&rx);
-        assert_eq!(stats.get("kind").unwrap().str().unwrap(), "stats");
-        // A second shutdown during the drain is deferred too: the ack
-        // contract is "drained, listener closed", so nobody is acked
-        // until then.
-        admit(&mut coord, &cfg, &mut st, Request::Shutdown, tx.clone());
-        assert_eq!(st.shutdown_replies.len(), 2);
-        assert!(
-            rx.try_recv().is_err(),
-            "no shutdown ack may be sent before the drain completes"
-        );
-    }
-
-    #[test]
-    fn stats_json_is_valid_and_structured() {
-        let mut coord = toy_coordinator(4);
-        let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(2));
-        cfg.kv_budget_bytes = Some(1 << 20);
-        coord.add_context("a", vec![1, 2]);
-        coord.run_until_idle().unwrap();
-        let s = stats_json(&coord, &cfg, 3);
-        let j = Json::parse(&s).expect("stats must be valid JSON");
-        assert_eq!(j.get("sessions").unwrap().usize().unwrap(), 1);
-        assert_eq!(j.get("waiting").unwrap().usize().unwrap(), 3);
-        assert_eq!(j.get("kv_budget_bytes").unwrap().usize().unwrap(), 1 << 20);
-        assert!(j.get("kv_bytes").unwrap().usize().unwrap() > 0);
-        // The multi-line report embeds as a proper JSON string (the
-        // seed used {:?}, which can emit non-JSON escapes).
-        assert!(j.get("report").unwrap().str().unwrap().contains("requests="));
-    }
 
     #[test]
     fn parses_requests() {
@@ -759,43 +512,13 @@ mod tests {
     }
 
     #[test]
-    fn formats_query_response_as_valid_json() {
-        let mut logits = crate::tensor::Tensor::zeros(&[4, 6]);
-        logits.set(&[1, 3], 5.0);
-        let s = format_query_response(&logits, 2, 3);
-        let j = Json::parse(&s).unwrap();
-        let next = j.get("next").unwrap().arr().unwrap();
-        assert_eq!(next.len(), 3);
-        assert_eq!(next[0].arr().unwrap()[0].i64().unwrap(), 3);
-        // log-probs <= 0
-        assert!(next[0].arr().unwrap()[1].f64().unwrap() <= 0.0);
-    }
-
-    #[test]
-    fn query_response_survives_nan_logits() {
-        // Regression: the seed used partial_cmp().unwrap(), which
-        // panicked the executor on any NaN logit.
-        let mut logits = crate::tensor::Tensor::zeros(&[2, 5]);
-        logits.set(&[1, 2], f32::NAN);
-        logits.set(&[1, 4], 3.0);
-        let s = format_query_response(&logits, 2, 2);
-        let j = Json::parse(&s).expect("still valid JSON");
-        let next = j.get("next").unwrap().arr().unwrap();
-        assert_eq!(next.len(), 2);
-        // total_cmp ranks NaN above every real number (descending sort),
-        // but the finite top token must still be present.
-        let toks: Vec<i64> =
-            next.iter().map(|p| p.arr().unwrap()[0].i64().unwrap()).collect();
-        assert!(toks.contains(&4), "finite max must rank in top-2: {toks:?}");
-        // The NaN entry degrades to null; finite entries keep real
-        // logprobs (lse is computed over finite logits only).
-        for p in next {
-            let pair = p.arr().unwrap();
-            match pair[0].i64().unwrap() {
-                2 => assert_eq!(pair[1], Json::Null),
-                _ => assert!(pair[1].f64().unwrap() <= 0.0),
-            }
-        }
+    fn request_session_is_the_routing_key() {
+        let ctx = Request::Context { session: "u1".into(), tokens: vec![1] };
+        let q = Request::Query { session: "u2".into(), tokens: vec![2], topk: 1 };
+        assert_eq!(ctx.session(), Some("u1"));
+        assert_eq!(q.session(), Some("u2"));
+        assert_eq!(Request::Stats.session(), None);
+        assert_eq!(Request::Shutdown.session(), None);
     }
 
     #[test]

@@ -1,0 +1,305 @@
+//! Session→shard routing and the merged global stats view.
+//!
+//! The router fans connection requests out to the per-shard executors.
+//! Routing invariant: a session id ALWAYS maps to the same shard (a
+//! stable FNV-1a hash of the id, mod the shard count), so a session's
+//! compressed memory Mem(t) never migrates between executors and
+//! per-session ordering reduces to per-shard ordering. Stats requests
+//! fan out to every shard and come back as one merged object; shutdown
+//! fans out so every executor drains.
+
+use std::sync::mpsc::{channel, SendError, Sender};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::session::EvictionKind;
+use crate::server::{Reply, Request, ServerConfig};
+use crate::util::json::{escape, Json};
+
+/// Stable shard for a session id: FNV-1a (64-bit) of the id bytes, mod
+/// the shard count. Deterministic across processes, platforms, and
+/// restarts — the routing invariant external load balancers can rely
+/// on. With one shard everything maps to shard 0.
+pub fn shard_for(session: &str, shards: usize) -> usize {
+    debug_assert!(shards > 0);
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in session.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    (h % shards as u64) as usize
+}
+
+/// Shard `shard`'s slice of a global byte budget: `total / shards`,
+/// with the remainder spread one byte each over the first shards so
+/// the slices sum exactly to `total` (never over).
+pub(crate) fn partition_budget(total: usize, shard: usize, shards: usize) -> usize {
+    total / shards + usize::from(shard < total % shards)
+}
+
+const STATS_UNAVAILABLE: &str = "{\"ok\":false,\"error\":\"stats_unavailable\"}";
+/// Reply for a request routed to a shard whose executor is gone (its
+/// channel is closed) — either it already drained during a shutdown,
+/// or its backend factory failed at startup. Distinct from the
+/// retryable `shutting_down` refusal a live, draining shard sends:
+/// this shard will not come back in this process. The client keeps
+/// its connection (other shards may still serve it), not an EOF.
+const SHARD_UNAVAILABLE: &str = "{\"ok\":false,\"error\":\"shard_unavailable\"}";
+
+/// Fans requests from connection threads to the per-shard executors
+/// and merges fan-out responses. Cheap to clone (one `Sender` per
+/// shard); every connection thread holds a clone.
+#[derive(Clone)]
+pub(crate) struct Router {
+    shards: Vec<Sender<(Request, Reply)>>,
+    /// Global config echoed into the merged stats view.
+    kv_budget_bytes: Option<usize>,
+    session_ttl: Option<Duration>,
+    max_pending: usize,
+    eviction: EvictionKind,
+}
+
+impl Router {
+    pub(crate) fn new(shards: Vec<Sender<(Request, Reply)>>, cfg: &ServerConfig) -> Router {
+        assert!(!shards.is_empty());
+        Router {
+            shards,
+            kv_budget_bytes: cfg.kv_budget_bytes,
+            session_ttl: cfg.session_ttl,
+            max_pending: cfg.max_pending,
+            eviction: cfg.eviction,
+        }
+    }
+
+    /// Route one request; the executor (or the router itself, for
+    /// merged stats) answers on `reply`. Returns false when the target
+    /// executor is gone and the connection should close.
+    pub(crate) fn dispatch(&self, req: Request, reply: Reply) -> bool {
+        let n = self.shards.len();
+        if let Some(session) = req.session() {
+            let target = shard_for(session, n);
+            // A closed shard channel means that executor is gone for
+            // good: answer with the documented non-retryable refusal
+            // instead of silently dropping the connection.
+            return match self.shards[target].send((req, reply)) {
+                Ok(()) => true,
+                Err(SendError((_, reply))) => reply.send(SHARD_UNAVAILABLE.into()).is_ok(),
+            };
+        }
+        match req {
+            Request::Stats if n == 1 => match self.shards[0].send((Request::Stats, reply)) {
+                Ok(()) => true,
+                Err(SendError((_, reply))) => reply.send(STATS_UNAVAILABLE.into()).is_ok(),
+            },
+            Request::Stats => self.merged_stats(reply),
+            Request::Shutdown => {
+                // Every executor must drain; the serve loop acks each
+                // requester once ALL shards have drained and the
+                // listener is closed, so extra clones of `reply` held
+                // by other shards are simply never read.
+                let mut any = false;
+                for tx in &self.shards {
+                    any |= tx.send((Request::Shutdown, reply.clone())).is_ok();
+                }
+                any
+            }
+            Request::Context { .. } | Request::Query { .. } => unreachable!("routed above"),
+        }
+    }
+
+    /// Fan a stats request to every shard and reply with the merged
+    /// view. Fails closed: a missing or unparsable shard yields
+    /// `stats_unavailable` rather than a silently partial answer.
+    fn merged_stats(&self, reply: Reply) -> bool {
+        // Fan out to every shard BEFORE collecting, under one shared
+        // deadline: total latency is the slowest shard (bounded at
+        // 30 s, inside the connection's 60 s reply timeout), not the
+        // sum of per-shard waits.
+        let mut pending = Vec::with_capacity(self.shards.len());
+        for tx in &self.shards {
+            let (part_tx, part_rx) = channel();
+            if tx.send((Request::Stats, part_tx)).is_err() {
+                return reply.send(STATS_UNAVAILABLE.into()).is_ok();
+            }
+            pending.push(part_rx);
+        }
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let mut parts = Vec::with_capacity(pending.len());
+        for part_rx in pending {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match part_rx.recv_timeout(left) {
+                Ok(part) => parts.push(part),
+                Err(_) => return reply.send(STATS_UNAVAILABLE.into()).is_ok(),
+            }
+        }
+        let merged = match self.merge_stats(&parts) {
+            Ok(m) => m,
+            Err(_) => STATS_UNAVAILABLE.into(),
+        };
+        reply.send(merged).is_ok()
+    }
+
+    /// Sum per-shard counters into the global stats object; `per_shard`
+    /// embeds each shard's own stats verbatim so operators get both
+    /// views from one request. `peak_kv_bytes` sums per-shard peaks (an
+    /// upper bound on the true global peak, since shards peak at
+    /// different times).
+    fn merge_stats(&self, parts: &[String]) -> Result<String> {
+        let parsed: Vec<Json> = parts.iter().map(|p| Json::parse(p)).collect::<Result<_>>()?;
+        let sum = |key: &str| -> Result<usize> {
+            let mut total = 0usize;
+            for p in &parsed {
+                total += p.get(key)?.usize()?;
+            }
+            Ok(total)
+        };
+        Ok(format!(
+            "{{\"ok\":true,\"kind\":\"stats\",\"shards\":{},\"eviction\":{},\"sessions\":{},\
+             \"kv_bytes\":{},\"kv_budget_bytes\":{},\"session_ttl_secs\":{},\"max_pending\":{},\
+             \"pending\":{},\"waiting\":{},\"requests\":{},\"compressions\":{},\"inferences\":{},\
+             \"batches\":{},\"rejected_overload\":{},\"sessions_evicted\":{},\
+             \"sessions_reaped\":{},\"priority_overrides\":{},\"peak_kv_bytes\":{},\
+             \"per_shard\":[{}]}}",
+            self.shards.len(),
+            escape(self.eviction.name()),
+            sum("sessions")?,
+            sum("kv_bytes")?,
+            self.kv_budget_bytes.map_or_else(|| "null".to_string(), |b| b.to_string()),
+            self.session_ttl.map_or_else(|| "null".to_string(), |t| t.as_secs().to_string()),
+            self.max_pending,
+            sum("pending")?,
+            sum("waiting")?,
+            sum("requests")?,
+            sum("compressions")?,
+            sum("inferences")?,
+            sum("batches")?,
+            sum("rejected_overload")?,
+            sum("sessions_evicted")?,
+            sum("sessions_reaped")?,
+            sum("priority_overrides")?,
+            sum("peak_kv_bytes")?,
+            parts.join(","),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_routing_is_stable_and_total() {
+        // Same id, same shard — every time, for any shard count.
+        for shards in [1usize, 2, 4, 7] {
+            for i in 0..64 {
+                let id = format!("session-{i}");
+                let a = shard_for(&id, shards);
+                assert_eq!(a, shard_for(&id, shards), "routing must be deterministic");
+                assert!(a < shards);
+            }
+        }
+        assert_eq!(shard_for("anything", 1), 0);
+        // A reasonable id population reaches every shard (the hash is
+        // not degenerate).
+        let shards = 4;
+        let mut hit = vec![false; shards];
+        for i in 0..64 {
+            hit[shard_for(&format!("user{i}"), shards)] = true;
+        }
+        assert!(hit.iter().all(|h| *h), "64 ids must cover all {shards} shards: {hit:?}");
+    }
+
+    #[test]
+    fn budget_partition_sums_exactly_and_never_overshoots() {
+        for (total, shards) in [(1usize << 20, 4usize), (7, 3), (5, 8), (0, 2), (100, 1)] {
+            let slices: Vec<usize> =
+                (0..shards).map(|i| partition_budget(total, i, shards)).collect();
+            let sum: usize = slices.iter().sum();
+            assert_eq!(sum, total, "slices {slices:?} must sum to {total}");
+            let (min, max) = (slices.iter().min().unwrap(), slices.iter().max().unwrap());
+            assert!(max - min <= 1, "slices must be near-even: {slices:?}");
+        }
+    }
+
+    #[test]
+    fn routing_to_a_dead_shard_replies_shard_unavailable() {
+        // A shard whose executor is gone (drained mid-shutdown, or its
+        // factory failed at startup) must yield the documented
+        // non-retryable refusal — the connection stays open — not a
+        // silent drop.
+        use crate::coordinator::session::SessionPolicy;
+        let cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(2));
+        let (tx0, rx0) = channel();
+        let (tx1, _rx1) = channel();
+        let router = Router::new(vec![tx0, tx1], &cfg);
+        drop(rx0); // shard 0's executor exited
+        let mut id = 0usize;
+        let dead = loop {
+            let candidate = format!("s{id}");
+            if shard_for(&candidate, 2) == 0 {
+                break candidate;
+            }
+            id += 1;
+        };
+        let (reply_tx, reply_rx) = channel();
+        let req = Request::Context { session: dead, tokens: vec![1] };
+        assert!(router.dispatch(req, reply_tx), "connection must stay open");
+        let resp = Json::parse(&reply_rx.recv().unwrap()).unwrap();
+        assert_eq!(resp.get("error").unwrap().str().unwrap(), "shard_unavailable");
+        // A live shard still routes normally.
+        let alive = {
+            let mut i = 0usize;
+            loop {
+                let candidate = format!("s{i}");
+                if shard_for(&candidate, 2) == 1 {
+                    break candidate;
+                }
+                i += 1;
+            }
+        };
+        let (reply_tx, _reply_rx) = channel();
+        let q = Request::Query { session: alive, tokens: vec![2], topk: 1 };
+        assert!(router.dispatch(q, reply_tx));
+    }
+
+    #[test]
+    fn merged_stats_sums_counters_and_embeds_shards() {
+        use crate::coordinator::session::SessionPolicy;
+        let cfg = {
+            let mut c = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(2));
+            c.kv_budget_bytes = Some(1 << 20);
+            c.session_ttl = Some(Duration::from_secs(600));
+            c.shards = 2;
+            c
+        };
+        let (tx0, _rx0) = channel();
+        let (tx1, _rx1) = channel();
+        let router = Router::new(vec![tx0, tx1], &cfg);
+        let shard = |i: usize, sessions: usize, kv: usize| {
+            format!(
+                "{{\"ok\":true,\"kind\":\"stats\",\"shard\":{i},\"sessions\":{sessions},\
+                 \"kv_bytes\":{kv},\"pending\":1,\"waiting\":0,\"requests\":10,\
+                 \"compressions\":4,\"inferences\":5,\"batches\":6,\"rejected_overload\":0,\
+                 \"sessions_evicted\":2,\"sessions_reaped\":0,\"priority_overrides\":3,\
+                 \"peak_kv_bytes\":{kv}}}"
+            )
+        };
+        let merged = router.merge_stats(&[shard(0, 3, 100), shard(1, 5, 200)]).unwrap();
+        let j = Json::parse(&merged).expect("merged stats must be valid JSON");
+        assert_eq!(j.get("shards").unwrap().usize().unwrap(), 2);
+        assert_eq!(j.get("sessions").unwrap().usize().unwrap(), 8);
+        assert_eq!(j.get("kv_bytes").unwrap().usize().unwrap(), 300);
+        assert_eq!(j.get("kv_budget_bytes").unwrap().usize().unwrap(), 1 << 20);
+        assert_eq!(j.get("session_ttl_secs").unwrap().usize().unwrap(), 600);
+        assert_eq!(j.get("sessions_evicted").unwrap().usize().unwrap(), 4);
+        assert_eq!(j.get("priority_overrides").unwrap().usize().unwrap(), 6);
+        assert_eq!(j.get("eviction").unwrap().str().unwrap(), "oldest");
+        let per = j.get("per_shard").unwrap().arr().unwrap();
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[1].get("shard").unwrap().usize().unwrap(), 1);
+        assert_eq!(per[1].get("sessions").unwrap().usize().unwrap(), 5);
+        // A malformed shard part fails closed instead of mis-summing.
+        assert!(router.merge_stats(&[shard(0, 1, 1), "garbage".into()]).is_err());
+    }
+}

@@ -4,7 +4,7 @@
 //!  1. `pretrain_lm`   — full-weight causal-LM training of the base model
 //!     on the synthetic corpus (the paper's dataset fine-tune).
 //!  2. `train_ccm`     — compression training of the conditional-LoRA +
-//!     <COMP> embeddings with the parallelized forward (Algorithm 1).
+//!     `<COMP>` embeddings with the parallelized forward (Algorithm 1).
 //!     The mask/P inputs select the method, so the same loop trains
 //!     CCM-concat/-merge, Gisting and Compressive Transformer.
 //!  3. `train_rmt`     — the recurrent baseline (unrolled in-graph),

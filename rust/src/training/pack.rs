@@ -17,7 +17,7 @@ use crate::tensor::{IntTensor, Tensor};
 pub struct PackPolicy {
     pub method: Method,
     pub scheme: MergeScheme,
-    /// <COMP> tokens appended per chunk (and Compressive pool width).
+    /// `<COMP>` tokens appended per chunk (and Compressive pool width).
     pub comp_len: usize,
     /// Conditional (paper) vs unconditional (Table 5 ablation) LoRA gate.
     pub conditional: bool,

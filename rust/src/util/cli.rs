@@ -82,7 +82,9 @@ impl Args {
     pub fn list(&self, key: &str, default: &[&str]) -> Vec<String> {
         match self.flags.get(key) {
             None => default.iter().map(|s| s.to_string()).collect(),
-            Some(v) => v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
+            Some(v) => {
+                v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
+            }
         }
     }
 

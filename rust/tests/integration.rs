@@ -21,12 +21,20 @@ use ccm::training::Trainer;
 /// (or with the offline xla stub) they skip instead of failing, so the
 /// tier-1 suite stays green on machines without the XLA runtime. Set
 /// CCM_REQUIRE_ARTIFACTS=1 (e.g. in a CI job that built artifacts) to
-/// turn a silent skip into a hard failure.
+/// turn a silent skip into a hard failure; `0`, `false`, or empty means
+/// "not required" (so CI can pass it explicitly to document intent).
+fn artifacts_required() -> bool {
+    match std::env::var("CCM_REQUIRE_ARTIFACTS") {
+        Ok(v) => !matches!(v.as_str(), "" | "0" | "false"),
+        Err(_) => false,
+    }
+}
+
 fn runtime() -> Option<Runtime> {
     match Runtime::from_config("test") {
         Ok(rt) => Some(rt),
         Err(e) => {
-            if std::env::var_os("CCM_REQUIRE_ARTIFACTS").is_some() {
+            if artifacts_required() {
                 panic!("CCM_REQUIRE_ARTIFACTS set but artifacts unavailable: {e:#}");
             }
             eprintln!("skipping artifact test: {e:#} (run `make artifacts` + real xla crate)");

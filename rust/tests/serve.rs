@@ -10,10 +10,12 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::channel;
 use std::time::{Duration, Instant};
 
-use ccm::compress::SimCompute;
-use ccm::coordinator::session::SessionPolicy;
+use ccm::compress::{Compute, SimCompute};
+use ccm::coordinator::session::{EvictionKind, SessionPolicy};
 use ccm::model::Manifest;
-use ccm::server::{serve_with_backend, Client, ServerConfig};
+use ccm::server::{
+    serve_sharded, serve_with_backend, shard_for, BackendFactory, Client, ServerConfig,
+};
 use ccm::util::json::Json;
 
 /// Compressed-KV bytes one absorbed chunk costs a session (derived
@@ -30,13 +32,11 @@ fn start_server(
     tune: impl FnOnce(&mut ServerConfig),
 ) -> (String, std::thread::JoinHandle<anyhow::Result<()>>) {
     let m = Manifest::toy();
-    let mut cfg =
-        ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(m.scenario.comp_len_max));
+    let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(m.scenario.comp_len_max));
     tune(&mut cfg);
     let (ready_tx, ready_rx) = channel();
-    let handle = std::thread::spawn(move || {
-        serve_with_backend(&m, Box::new(sim), cfg, Some(ready_tx))
-    });
+    let handle =
+        std::thread::spawn(move || serve_with_backend(&m, Box::new(sim), cfg, Some(ready_tx)));
     let addr = ready_rx.recv_timeout(Duration::from_secs(10)).expect("server ready");
     (addr, handle)
 }
@@ -300,3 +300,234 @@ fn graceful_shutdown_drains_work_and_releases_port() {
 // (Refusal of new work while a shutdown drains is deterministic at the
 // admission layer and is unit-tested in `ccm::server::tests` — driving
 // it through TCP would need fragile sleeps against the drain clock.)
+
+// ---------------------------------------------------------------------
+// Sharded serving: one executor (backend + batcher + session manager)
+// per shard, deterministic session→shard routing, per-shard budgets.
+
+/// Start an N-shard server, one SimCompute per shard (sims[i] becomes
+/// shard i's backend); returns (addr, join handle).
+fn start_sharded(
+    sims: Vec<SimCompute>,
+    tune: impl FnOnce(&mut ServerConfig),
+) -> (String, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let m = Manifest::toy();
+    let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(m.scenario.comp_len_max));
+    cfg.shards = sims.len();
+    tune(&mut cfg);
+    let (ready_tx, ready_rx) = channel();
+    let handle = std::thread::spawn(move || {
+        let factories: Vec<BackendFactory<'static>> = sims
+            .into_iter()
+            .map(|sim| {
+                Box::new(move || Ok(Box::new(sim) as Box<dyn Compute>))
+                    as BackendFactory<'static>
+            })
+            .collect();
+        serve_sharded(&m, factories, cfg, Some(ready_tx))
+    });
+    let addr = ready_rx.recv_timeout(Duration::from_secs(10)).expect("server ready");
+    (addr, handle)
+}
+
+/// The first `n` ids of the form `s<i>` that route to `shard`.
+fn ids_on_shard(shard: usize, shards: usize, n: usize) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while out.len() < n {
+        let id = format!("s{i}");
+        if shard_for(&id, shards) == shard {
+            out.push(id);
+        }
+        i += 1;
+    }
+    out
+}
+
+#[test]
+fn sharded_routing_is_stable_and_stats_merge() {
+    // Routing stability: a session's chunks land on one shard no matter
+    // which connection carries them, so its time step keeps advancing;
+    // and the merged stats' per-shard split matches the routing hash
+    // exactly.
+    let shards = 4;
+    let (addr, server) = start_sharded((0..shards).map(|_| sim()).collect(), |_| {});
+    let n_sessions = 16usize;
+    for round in 1..=2i64 {
+        // A fresh connection per round: routing must not depend on the
+        // connection, only on the session id.
+        let mut client = Client::connect(&addr).unwrap();
+        for s in 0..n_sessions {
+            let ack = client.add_context(&format!("user{s}"), &[1, 2]).unwrap();
+            assert_eq!(ack.get("t").unwrap().i64().unwrap(), round, "user{s}");
+        }
+    }
+    let mut admin = Client::connect(&addr).unwrap();
+    let stats = wait_drained(&mut admin, Duration::from_secs(5));
+    assert_eq!(stats.get("shards").unwrap().usize().unwrap(), shards);
+    assert_eq!(stats.get("sessions").unwrap().usize().unwrap(), n_sessions);
+    assert_eq!(stats.get("compressions").unwrap().usize().unwrap(), n_sessions * 2);
+    let per = stats.get("per_shard").unwrap().arr().unwrap();
+    assert_eq!(per.len(), shards);
+    for (i, p) in per.iter().enumerate() {
+        let expected = (0..n_sessions)
+            .filter(|s| shard_for(&format!("user{s}"), shards) == i)
+            .count();
+        assert_eq!(p.get("shard").unwrap().usize().unwrap(), i);
+        assert_eq!(p.get("sessions").unwrap().usize().unwrap(), expected, "shard {i}");
+    }
+    admin.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn cross_shard_ordering_is_preserved_per_session() {
+    // One connection interleaving two sessions pinned to different
+    // shards: each session's acks and query results must follow its own
+    // submission order, independent of the other shard's progress.
+    let shards = 2;
+    let (addr, server) = start_sharded((0..shards).map(|_| sim()).collect(), |_| {});
+    let a = ids_on_shard(0, shards, 1).pop().unwrap();
+    let b = ids_on_shard(1, shards, 1).pop().unwrap();
+    let mut client = Client::connect(&addr).unwrap();
+    for round in 1..=3i64 {
+        let ack = client.add_context(&a, &[1, 2]).unwrap();
+        assert_eq!(ack.get("t").unwrap().i64().unwrap(), round, "{a}");
+        let ack = client.add_context(&b, &[3, 4]).unwrap();
+        assert_eq!(ack.get("t").unwrap().i64().unwrap(), round, "{b}");
+        let next = client.query(&a, &[5], 1).unwrap();
+        assert_eq!(top1(&next), 5);
+        let next = client.query(&b, &[9], 1).unwrap();
+        assert_eq!(top1(&next), 9);
+    }
+    let mut admin = Client::connect(&addr).unwrap();
+    wait_drained(&mut admin, Duration::from_secs(5));
+    admin.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn overload_on_one_shard_does_not_refuse_the_other() {
+    // Shard 0 gets a slow backend and a burst that saturates its
+    // one-slot pending queue; shard 1 must keep admitting and answering
+    // immediately — per-shard admission control isolates the overload.
+    let shards = 2;
+    let mut sims: Vec<SimCompute> = (0..shards).map(|_| sim()).collect();
+    sims[0].compress_delay = Duration::from_millis(4000);
+    let (addr, server) = start_sharded(sims, |cfg| {
+        cfg.max_batch = 1;
+        cfg.max_pending = 1;
+    });
+    let flood_ids = ids_on_shard(0, shards, 8);
+    let barrier = std::sync::Arc::new(std::sync::Barrier::new(flood_ids.len()));
+    let mut handles = Vec::new();
+    for id in flood_ids {
+        let addr = addr.clone();
+        let barrier = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).unwrap();
+            barrier.wait();
+            let line = format!("{{\"op\":\"context\",\"session\":\"{id}\",\"tokens\":[1]}}");
+            let resp = client.call(&line).unwrap();
+            if resp.get("ok").unwrap() == &Json::Bool(true) {
+                Ok(())
+            } else {
+                assert_eq!(resp.get("error").unwrap().str().unwrap(), "overloaded");
+                Err(())
+            }
+        }));
+    }
+    let results: Vec<Result<(), ()>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let overloaded = results.iter().filter(|r| r.is_err()).count();
+    assert!(results.len() - overloaded >= 1, "at least one flood context must be admitted");
+    assert!(overloaded >= 1, "an 8-wide burst over a 1-slot queue must refuse some");
+    // Shard 0 is now busy for ~4 s per admitted batch; shard 1 must
+    // answer well inside that window: the 2 s bound leaves 2x margin
+    // against CI scheduling jitter, and queuing behind shard 0 would
+    // cost >= 4 s (2x the bound), so the two outcomes cannot blur.
+    let t0 = Instant::now();
+    let quiet = ids_on_shard(1, shards, 1).pop().unwrap();
+    let mut client = Client::connect(&addr).unwrap();
+    let ack = client.add_context(&quiet, &[3]).unwrap();
+    assert_eq!(ack.get("ok").unwrap(), &Json::Bool(true), "shard 1 must admit");
+    let next = client.query(&quiet, &[7], 1).unwrap();
+    assert_eq!(top1(&next), 7);
+    assert!(
+        t0.elapsed() < Duration::from_millis(2000),
+        "shard 1 work must not queue behind shard 0 ({:?})",
+        t0.elapsed()
+    );
+    let mut admin = Client::connect(&addr).unwrap();
+    let stats = wait_drained(&mut admin, Duration::from_secs(30));
+    assert!(stats.get("rejected_overload").unwrap().usize().unwrap() >= overloaded);
+    admin.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn kv_budget_partitions_across_shards() {
+    // The global budget splits into per-shard slices that sum exactly
+    // to it; each shard enforces its own slice independently.
+    let shards = 2;
+    let budget = 2 * 3 * kv_per_chunk(); // three one-chunk sessions per shard
+    let (addr, server) = start_sharded((0..shards).map(|_| sim()).collect(), move |cfg| {
+        cfg.kv_budget_bytes = Some(budget);
+    });
+    let mut client = Client::connect(&addr).unwrap();
+    for shard in 0..shards {
+        for id in ids_on_shard(shard, shards, 6) {
+            client.add_context(&id, &[4, 5]).unwrap();
+        }
+    }
+    let mut admin = Client::connect(&addr).unwrap();
+    let stats = wait_drained(&mut admin, Duration::from_secs(5));
+    assert_eq!(stats.get("kv_budget_bytes").unwrap().usize().unwrap(), budget);
+    assert!(stats.get("kv_bytes").unwrap().usize().unwrap() <= budget);
+    for p in stats.get("per_shard").unwrap().arr().unwrap() {
+        let slice = p.get("kv_budget_bytes").unwrap().usize().unwrap();
+        assert_eq!(slice, budget / 2, "even budget must split evenly");
+        let kv = p.get("kv_bytes").unwrap().usize().unwrap();
+        assert!(kv <= slice, "shard over its slice: {kv} > {slice}");
+        assert!(p.get("sessions").unwrap().usize().unwrap() <= 3);
+        assert!(p.get("sessions_evicted").unwrap().usize().unwrap() >= 3);
+    }
+    // Surviving and evicted sessions both still answer (evicted ones
+    // transparently restart with empty memory).
+    let next = client.query(&ids_on_shard(0, shards, 1)[0], &[9], 1).unwrap();
+    assert_eq!(top1(&next), 9);
+    admin.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn lru_eviction_policy_is_selectable_and_observable() {
+    // --eviction lru: a recently-used old session survives budget
+    // pressure; the least-recently-used one is evicted. Observable via
+    // the context ack's time step (a surviving session continues at
+    // t+1, an evicted one restarts at t=1).
+    let budget = 2 * kv_per_chunk();
+    let (addr, server) = start_server(sim(), move |cfg| {
+        cfg.kv_budget_bytes = Some(budget);
+        cfg.eviction = EvictionKind::Lru;
+    });
+    let mut client = Client::connect(&addr).unwrap();
+    client.add_context("a", &[1, 2]).unwrap();
+    client.add_context("b", &[3, 4]).unwrap();
+    let mut admin = Client::connect(&addr).unwrap();
+    wait_drained(&mut admin, Duration::from_secs(5));
+    // Touch "a": now "b" is the least recently used.
+    client.query("a", &[5], 1).unwrap();
+    // "c" overflows the two-session budget → exactly one eviction.
+    client.add_context("c", &[5, 6]).unwrap();
+    let stats = wait_drained(&mut admin, Duration::from_secs(5));
+    assert_eq!(stats.get("eviction").unwrap().str().unwrap(), "lru");
+    assert_eq!(stats.get("sessions").unwrap().usize().unwrap(), 2);
+    assert_eq!(stats.get("sessions_evicted").unwrap().usize().unwrap(), 1);
+    let ack = client.add_context("a", &[7]).unwrap();
+    assert_eq!(ack.get("t").unwrap().i64().unwrap(), 2, "recently-used session must survive");
+    let ack = client.add_context("b", &[8]).unwrap();
+    assert_eq!(ack.get("t").unwrap().i64().unwrap(), 1, "LRU session must have been evicted");
+    wait_drained(&mut admin, Duration::from_secs(5));
+    admin.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
