@@ -3,7 +3,8 @@
 //! report latency/throughput (the deployment story of Table 1).
 //!
 //!   cargo run --release --example serve \
-//!     [-- --config test --clients 4 --shards 2 --eviction lru]
+//!     [-- --config test --clients 4 --shards 2 --eviction lru \
+//!         --reactor epoll --max-conns 16384]
 
 use std::sync::mpsc::channel;
 
@@ -12,7 +13,7 @@ use ccm::coordinator::session::{EvictionKind, SessionPolicy};
 use ccm::datagen::{by_name, Split};
 use ccm::model::Checkpoint;
 use ccm::runtime::Runtime;
-use ccm::server::{serve, serve_sharded, Client, ServerConfig};
+use ccm::server::{serve, serve_sharded, Client, ReactorMode, ServerConfig};
 use ccm::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -22,6 +23,13 @@ fn main() -> Result<()> {
     let rounds = args.usize("rounds", 3)?;
     let shards = args.usize("shards", 1)?.max(1);
     let eviction = EvictionKind::parse(&args.str("eviction", "oldest"))?;
+    // --reactor beats CCM_SERVE_REACTOR beats the platform default.
+    let reactor_flag = args.str_env("reactor", "CCM_SERVE_REACTOR", "auto");
+    let reactor = match reactor_flag.as_str() {
+        "auto" => None,
+        other => Some(ReactorMode::parse(other)?),
+    };
+    let max_conns = args.usize("max-conns", 0)?;
 
     // Server thread owns the runtime(s); with --shards N each executor
     // thread builds its own (PJRT executables are not Sync, so a
@@ -39,6 +47,12 @@ fn main() -> Result<()> {
         cfg.max_pending = 512;
         cfg.shards = shards;
         cfg.eviction = eviction;
+        if let Some(mode) = reactor {
+            cfg.reactor = mode;
+        }
+        if max_conns > 0 {
+            cfg.max_conns = max_conns;
+        }
         if shards == 1 {
             let rt = Runtime::load(manifest)?;
             let ck = Checkpoint::init(&rt.manifest, 7);
@@ -51,8 +65,10 @@ fn main() -> Result<()> {
     });
     let addr = ready_rx.recv()?;
     println!(
-        "server up at {addr} ({shards} shard(s), eviction {}); {n_clients} clients x {rounds}",
-        eviction.name()
+        "server up at {addr} ({shards} shard(s), eviction {}, reactor {}); \
+         {n_clients} clients x {rounds}",
+        eviction.name(),
+        reactor.map_or("auto", ReactorMode::name)
     );
 
     // Concurrent clients, one session each, multiple interaction rounds.

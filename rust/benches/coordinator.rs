@@ -224,6 +224,84 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
 
+    // Many-connection fan-in over the polling reactor: 256 concurrent
+    // connections multiplexed on one reactor thread (the thread-per-
+    // connection scaling wall this front-end removes), 8 driver
+    // threads owning 32 sockets each. Quantifies per-connection
+    // reactor overhead, not backend speed.
+    {
+        use ccm::compress::{Compute, SimCompute};
+        use ccm::coordinator::session::SessionPolicy;
+        use ccm::server::{serve_sharded, BackendFactory, Client, ReactorMode, ServerConfig};
+        use std::sync::mpsc::channel;
+
+        let manifest = fake_manifest(sc.clone());
+        let shards = 2usize;
+        let sims: Vec<SimCompute> = (0..shards)
+            .map(|_| {
+                let mut sim = SimCompute::from_manifest(&manifest);
+                sim.compress_delay = Duration::from_micros(50);
+                sim.infer_delay = Duration::from_micros(50);
+                sim
+            })
+            .collect();
+        let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(sc.comp_len_max));
+        cfg.max_batch = 8;
+        cfg.max_wait = Duration::from_millis(1);
+        cfg.max_pending = 8192;
+        cfg.reactor = ReactorMode::Epoll;
+        cfg.max_conns = 2048;
+        let (ready_tx, ready_rx) = channel();
+        let server = std::thread::spawn(move || {
+            let factories: Vec<BackendFactory<'static>> = sims
+                .into_iter()
+                .map(|sim| {
+                    Box::new(move || Ok(Box::new(sim) as Box<dyn Compute>))
+                        as BackendFactory<'static>
+                })
+                .collect();
+            serve_sharded(&manifest, factories, cfg, Some(ready_tx))
+        });
+        let addr = ready_rx.recv()?;
+        let n_threads = 8usize;
+        let conns_per_thread = 32usize;
+        let rounds = 4usize;
+        let t0 = std::time::Instant::now();
+        let mut handles = Vec::new();
+        for t in 0..n_threads {
+            let addr = addr.clone();
+            handles.push(std::thread::spawn(move || {
+                // Open (and hold) this thread's slice of the 256 conns.
+                let mut clients: Vec<Client> =
+                    (0..conns_per_thread).map(|_| Client::connect(&addr).unwrap()).collect();
+                for r in 0..rounds {
+                    for (i, client) in clients.iter_mut().enumerate() {
+                        let session = format!("fan{t}-{i}");
+                        client.add_context(&session, &[1, 2, 3, 4]).unwrap();
+                        let next = client.query(&session, &[(r % 30 + 1) as i32], 3).unwrap();
+                        assert_eq!(next.len(), 3);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("fan-in client thread");
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let conns = n_threads * conns_per_thread;
+        let total = (conns * rounds) as f64;
+        let mut admin = Client::connect(&addr)?;
+        let stats = admin.stats()?;
+        let sessions = stats.get("sessions")?.usize()?;
+        admin.shutdown()?;
+        server.join().expect("server thread")?;
+        rows.push(vec![
+            format!("serve/tcp-{conns}conn-epoll"),
+            format!("{:.3}", secs * 1e3 / total),
+            format!("{:.0} rounds/s across {sessions} sessions", total / secs),
+        ]);
+    }
+
     print_table("coordinator overhead (host-side)", &["op", "mean ms", "note"], &rows);
     Ok(())
 }

@@ -129,10 +129,26 @@ pub struct Session {
     /// Online time step t (chunks absorbed).
     pub t: usize,
     pub created: u64,
+    /// Wall-clock creation time — drives the `age_ms` session stat.
+    pub created_at: Instant,
     /// Raw context tokens absorbed (for KV accounting comparisons).
     pub raw_context_tokens: usize,
     /// Last touch (create or new work) — drives idle-session reaping.
     pub last_used: Instant,
+}
+
+/// One session's accounting row for the `stats` detail view (the
+/// protocol surfaces it as `sessions_detail`).
+pub struct SessionStat {
+    pub id: String,
+    /// Online time step t (chunks absorbed so far).
+    pub t: usize,
+    /// Compressed-KV bytes this session currently holds.
+    pub kv_bytes: usize,
+    /// Time since the session was created.
+    pub age: Duration,
+    /// Time since the session was last touched.
+    pub idle: Duration,
 }
 
 pub struct SessionManager {
@@ -201,6 +217,7 @@ impl SessionManager {
                     pos_cursor: 0,
                     t: 0,
                     created: self.counter,
+                    created_at: Instant::now(),
                     raw_context_tokens: 0,
                     last_used: Instant::now(),
                 },
@@ -306,6 +323,26 @@ impl SessionManager {
         let mut v: Vec<String> = self.sessions.keys().cloned().collect();
         v.sort();
         v
+    }
+
+    /// Per-session accounting (age, kv_bytes, last-used idle time) at
+    /// `now`, sorted by id for a deterministic stats response.
+    /// Saturating arithmetic: a `now` taken before a concurrent touch
+    /// degrades to zero, never panics.
+    pub fn snapshot(&self, now: Instant) -> Vec<SessionStat> {
+        let mut stats: Vec<SessionStat> = self
+            .sessions
+            .values()
+            .map(|s| SessionStat {
+                id: s.id.clone(),
+                t: s.t,
+                kv_bytes: s.mem.kv_bytes(),
+                age: now.saturating_duration_since(s.created_at),
+                idle: now.saturating_duration_since(s.last_used),
+            })
+            .collect();
+        stats.sort_unstable_by(|a, b| a.id.cmp(&b.id));
+        stats
     }
 }
 
@@ -492,6 +529,32 @@ mod tests {
         assert_eq!(EvictionKind::default(), EvictionKind::OldestCreated);
         assert_eq!(EvictionKind::Lru.name(), "lru");
         assert_eq!(EvictionKind::Lru.build().name(), "lru");
+    }
+
+    #[test]
+    fn snapshot_reports_sorted_per_session_accounting() {
+        let m = manifest();
+        let mut sm = SessionManager::with_policy(&m, SessionPolicy::concat(2));
+        for (id, chunks) in [("zed", 1), ("ann", 2)] {
+            let s = sm.get_or_create(id);
+            for _ in 0..chunks {
+                s.mem.update(&fake_chunk(2, 2, 8)).unwrap();
+            }
+            s.t = chunks;
+        }
+        let now = Instant::now() + Duration::from_millis(50);
+        let stats = sm.snapshot(now);
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].id, "ann");
+        assert_eq!(stats[1].id, "zed");
+        assert_eq!(stats[0].t, 2);
+        let per = 2 * 2 * 2 * 8 * 4;
+        assert_eq!(stats[0].kv_bytes, 2 * per);
+        assert_eq!(stats[1].kv_bytes, per);
+        for s in &stats {
+            assert!(s.age >= Duration::from_millis(50), "age measured from creation");
+            assert!(s.idle <= s.age, "a session cannot be idle longer than it exists");
+        }
     }
 
     #[test]

@@ -155,12 +155,20 @@ pub fn serve_backend_factories(
 
 /// `ccm serve --port 7878 --method ccm-concat [--shards 4]
 /// [--eviction oldest|lru|largest-bytes] [--max-pending 256]
-/// [--kv-budget-mb 512] [--session-ttl-secs 600]`
+/// [--kv-budget-mb 512] [--session-ttl-secs 600]
+/// [--reactor auto|threads|epoll] [--max-conns 16384]`
 ///
 /// With `--shards N > 1`, each shard's executor thread owns a full
 /// runtime + engine (PJRT runtimes are thread-bound); sessions route
 /// to shards by a stable hash of the session id, and the KV budget is
 /// partitioned across shards.
+///
+/// `--reactor` picks the connection front-end: `epoll` multiplexes all
+/// connections on one polling reactor thread (the 10k-connection
+/// path), `threads` keeps one blocking reader thread per connection.
+/// `auto` (the default) resolves `CCM_SERVE_REACTOR`, then the
+/// platform default (epoll on Linux). `--max-conns` bounds accepted
+/// connections in either mode.
 pub fn cli_serve(args: &Args) -> Result<()> {
     let config = args.str("config", "main");
     let manifest = model::Manifest::load(&model::artifact_dir(&config))?;
@@ -180,6 +188,11 @@ pub fn cli_serve(args: &Args) -> Result<()> {
     cfg.max_batch = args.usize("max-batch", 8)?;
     cfg.max_wait = std::time::Duration::from_millis(args.u64("max-wait-ms", 2)?);
     cfg.max_pending = args.usize("max-pending", 256)?;
+    let reactor = args.str_env("reactor", "CCM_SERVE_REACTOR", "auto");
+    if reactor != "auto" {
+        cfg.reactor = server::ReactorMode::parse(&reactor)?;
+    }
+    cfg.max_conns = args.usize("max-conns", cfg.max_conns)?;
     let kv_budget_mb = args.usize("kv-budget-mb", 0)?;
     if kv_budget_mb > 0 {
         cfg.kv_budget_bytes = Some(kv_budget_mb * (1 << 20));

@@ -236,8 +236,8 @@ impl<'a> Executor<'a> {
                 let seq = self.coord.query(&session, tokens);
                 self.waiting.push_back(WaitingQuery { seq, reply, input_len, topk });
             }
-            Request::Stats => {
-                let _ = reply.send(self.stats_json());
+            Request::Stats { detail } => {
+                let _ = reply.send(self.stats_json(detail));
             }
             Request::Shutdown => {
                 // Every shutdown requester is acked only once the drain
@@ -283,15 +283,22 @@ impl<'a> Executor<'a> {
     /// This shard's stats object. Alongside live usage it reports the
     /// configured limits (KV budget slice, idle TTL, pending bound,
     /// eviction policy) so operators can compute headroom without
-    /// reading CLI flags.
-    fn stats_json(&self) -> String {
+    /// reading CLI flags. With `detail`, a `sessions_detail` array
+    /// carries per-session accounting (id, t, kv_bytes, age/idle).
+    fn stats_json(&self, detail: bool) -> String {
         let m = &self.coord.metrics;
+        let detail_field = if detail {
+            format!("\"sessions_detail\":{},", self.sessions_detail_json())
+        } else {
+            String::new()
+        };
         format!(
             "{{\"ok\":true,\"kind\":\"stats\",\"shard\":{},\"eviction\":{},\"sessions\":{},\
              \"kv_bytes\":{},\"kv_budget_bytes\":{},\"session_ttl_secs\":{},\"max_pending\":{},\
              \"pending\":{},\"waiting\":{},\"requests\":{},\"compressions\":{},\"inferences\":{},\
              \"batches\":{},\"rejected_overload\":{},\"sessions_evicted\":{},\
-             \"sessions_reaped\":{},\"priority_overrides\":{},\"peak_kv_bytes\":{},\"report\":{}}}",
+             \"sessions_reaped\":{},\"priority_overrides\":{},\"peak_kv_bytes\":{},{detail_field}\
+             \"report\":{}}}",
             self.shard,
             escape(self.coord.sessions.eviction_name()),
             self.coord.sessions.len(),
@@ -312,6 +319,31 @@ impl<'a> Executor<'a> {
             m.peak_kv_bytes,
             escape(&m.report()),
         )
+    }
+
+    /// Per-session accounting rows, sorted by session id: the ROADMAP
+    /// open item "surface per-session stats (age, kv_bytes, last_used)"
+    /// — ages as integer milliseconds so the stress gate can assert
+    /// session accounting after churn without float parsing.
+    fn sessions_detail_json(&self) -> String {
+        let now = Instant::now();
+        let rows: Vec<String> = self
+            .coord
+            .sessions
+            .snapshot(now)
+            .into_iter()
+            .map(|s| {
+                format!(
+                    "{{\"id\":{},\"t\":{},\"kv_bytes\":{},\"age_ms\":{},\"idle_ms\":{}}}",
+                    escape(&s.id),
+                    s.t,
+                    s.kv_bytes,
+                    s.age.as_millis(),
+                    s.idle.as_millis()
+                )
+            })
+            .collect();
+        format!("[{}]", rows.join(","))
     }
 }
 
@@ -372,6 +404,10 @@ mod tests {
         Json::parse(&rx.recv().expect("reply")).expect("valid JSON reply")
     }
 
+    fn reply_to(tx: &std::sync::mpsc::Sender<String>) -> Reply {
+        Reply::channel(tx.clone())
+    }
+
     #[test]
     fn admission_acks_queued_steps_and_refuses_over_bound() {
         let mut ex = toy_executor(|cfg| cfg.max_pending = 2);
@@ -380,13 +416,13 @@ mod tests {
         // both acked t=1).
         let (tx, rx) = channel();
         let ctx = |toks: Vec<i32>| Request::Context { session: "u".into(), tokens: toks };
-        ex.admit(ctx(vec![4, 5]), tx.clone());
+        ex.admit(ctx(vec![4, 5]), reply_to(&tx));
         assert_eq!(recv_json(&rx).get("t").unwrap().i64().unwrap(), 1);
-        ex.admit(ctx(vec![6, 7]), tx.clone());
+        ex.admit(ctx(vec![6, 7]), reply_to(&tx));
         assert_eq!(recv_json(&rx).get("t").unwrap().i64().unwrap(), 2);
 
         // The pending bound is hit: the third chunk is refused.
-        ex.admit(ctx(vec![8]), tx.clone());
+        ex.admit(ctx(vec![8]), reply_to(&tx));
         let refusal = recv_json(&rx);
         assert_eq!(refusal.get("ok").unwrap(), &Json::Bool(false));
         assert_eq!(refusal.get("error").unwrap().str().unwrap(), "overloaded");
@@ -395,17 +431,17 @@ mod tests {
 
         // After executing, acks continue from the session's real step.
         ex.coord.run_until_idle().unwrap();
-        ex.admit(ctx(vec![9]), tx.clone());
+        ex.admit(ctx(vec![9]), reply_to(&tx));
         assert_eq!(recv_json(&rx).get("t").unwrap().i64().unwrap(), 3);
 
         // Oversized requests are refused at admission, not detonated
         // inside a batch (which would take the whole shard down).
-        ex.admit(ctx(vec![0; 9]), tx.clone());
+        ex.admit(ctx(vec![0; 9]), reply_to(&tx));
         let refusal = recv_json(&rx);
         assert_eq!(refusal.get("error").unwrap().str().unwrap(), "too_long");
         assert_eq!(refusal.get("limit").unwrap().usize().unwrap(), 8);
         let query = Request::Query { session: "u".into(), tokens: vec![0; 9], topk: 1 };
-        ex.admit(query, tx.clone());
+        ex.admit(query, reply_to(&tx));
         assert_eq!(recv_json(&rx).get("error").unwrap().str().unwrap(), "too_long");
         assert!(ex.waiting.is_empty(), "refused query must not wait for results");
         ex.coord.run_until_idle().expect("no oversized item reached the backend");
@@ -415,20 +451,20 @@ mod tests {
     fn admission_refuses_new_work_while_draining() {
         let mut ex = toy_executor(|_| {});
         let (tx, rx) = channel();
-        ex.admit(Request::Shutdown, tx.clone());
+        ex.admit(Request::Shutdown, reply_to(&tx));
         assert!(ex.draining && ex.shutdown_replies.len() == 1);
-        ex.admit(Request::Query { session: "q".into(), tokens: vec![1], topk: 1 }, tx.clone());
+        ex.admit(Request::Query { session: "q".into(), tokens: vec![1], topk: 1 }, reply_to(&tx));
         let refusal = recv_json(&rx);
         assert_eq!(refusal.get("error").unwrap().str().unwrap(), "shutting_down");
         assert_eq!(ex.coord.pending(), 0, "refused work must not be queued");
         // Stats are still served during the drain.
-        ex.admit(Request::Stats, tx.clone());
+        ex.admit(Request::Stats { detail: false }, reply_to(&tx));
         let stats = recv_json(&rx);
         assert_eq!(stats.get("kind").unwrap().str().unwrap(), "stats");
         // A second shutdown during the drain is deferred too: the ack
         // contract is "drained, listener closed", so nobody is acked
         // until then.
-        ex.admit(Request::Shutdown, tx.clone());
+        ex.admit(Request::Shutdown, reply_to(&tx));
         assert_eq!(ex.shutdown_replies.len(), 2);
         assert!(rx.try_recv().is_err(), "no shutdown ack may be sent before the drain completes");
     }
@@ -446,7 +482,7 @@ mod tests {
         });
         ex.coord.add_context("a", vec![1, 2]);
         ex.coord.run_until_idle().unwrap();
-        let s = ex.stats_json();
+        let s = ex.stats_json(false);
         let j = Json::parse(&s).expect("stats must be valid JSON");
         assert_eq!(j.get("shard").unwrap().usize().unwrap(), 0);
         assert_eq!(j.get("sessions").unwrap().usize().unwrap(), 1);
@@ -463,10 +499,45 @@ mod tests {
     #[test]
     fn stats_json_reports_null_limits_when_unconfigured() {
         let ex = toy_executor(|_| {});
-        let j = Json::parse(&ex.stats_json()).unwrap();
+        let j = Json::parse(&ex.stats_json(false)).unwrap();
         assert_eq!(j.get("kv_budget_bytes").unwrap(), &Json::Null);
         assert_eq!(j.get("session_ttl_secs").unwrap(), &Json::Null);
         assert_eq!(j.get("eviction").unwrap().str().unwrap(), "oldest");
+    }
+
+    #[test]
+    fn stats_detail_lists_sessions_sorted_with_live_accounting() {
+        let mut ex = toy_executor(|_| {});
+        // "b" compresses twice, "a" once, "q" only queries (t stays 0).
+        ex.coord.add_context("b", vec![1, 2]);
+        ex.coord.add_context("b", vec![3, 4]);
+        ex.coord.add_context("a", vec![5, 6]);
+        ex.coord.query("q", vec![7]);
+        ex.coord.run_until_idle().unwrap();
+
+        // Without detail the array is absent (response stays small).
+        let plain = Json::parse(&ex.stats_json(false)).unwrap();
+        assert!(plain.opt("sessions_detail").is_none());
+
+        let j = Json::parse(&ex.stats_json(true)).expect("detail stats must be valid JSON");
+        let list = j.get("sessions_detail").unwrap().arr().unwrap();
+        assert_eq!(list.len(), 3);
+        let ids: Vec<&str> = list.iter().map(|s| s.get("id").unwrap().str().unwrap()).collect();
+        assert_eq!(ids, vec!["a", "b", "q"], "rows must sort by id");
+        assert_eq!(list[0].get("t").unwrap().usize().unwrap(), 1);
+        assert_eq!(list[1].get("t").unwrap().usize().unwrap(), 2);
+        assert_eq!(list[2].get("t").unwrap().usize().unwrap(), 0);
+        // Per-session kv sums to the aggregate the same response reports.
+        let kv_sum: usize =
+            list.iter().map(|s| s.get("kv_bytes").unwrap().usize().unwrap()).sum();
+        assert_eq!(kv_sum, j.get("kv_bytes").unwrap().usize().unwrap());
+        assert!(list[1].get("kv_bytes").unwrap().usize().unwrap() > 0);
+        for s in list {
+            // A session can never have been idle longer than it exists.
+            let age = s.get("age_ms").unwrap().usize().unwrap();
+            let idle = s.get("idle_ms").unwrap().usize().unwrap();
+            assert!(idle <= age, "idle {idle} > age {age}");
+        }
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! JSON-lines TCP serving front-end.
 //!
-//! Connection threads parse newline-delimited JSON requests and hand
-//! them to the router (see [`router`]), which fans them out to N shard
+//! Connections parse newline-delimited JSON requests and hand them to
+//! the router (see [`router`]), which fans them out to N shard
 //! executors. Each shard (see `executor.rs`) owns its own [`Compute`]
 //! backend, dynamic batcher, and session manager — the standard
 //! one-executor-per-device topology (XLA executables are not Sync) —
@@ -10,6 +10,38 @@
 //! batch through its coordinator, and (3) delivers any finished query
 //! results — so a fast query is never stuck behind another session's
 //! full queue drain, and intake keeps flowing while batches execute.
+//!
+//! ## I/O front-ends (`--reactor threads|epoll`)
+//!
+//! Two interchangeable transport front-ends feed the router; the wire
+//! protocol and reply semantics are identical under both
+//! (`CCM_SERVE_REACTOR=threads|epoll` selects one for the whole test
+//! suite; the default is `epoll` on Linux, `threads` elsewhere):
+//!
+//! * **`epoll` (default on Linux)** — one reactor thread owns the
+//!   listener and every accepted connection in non-blocking mode,
+//!   multiplexing readiness through a zero-dependency epoll wrapper
+//!   (`poll.rs`: raw `epoll_create1`/`epoll_ctl`/`epoll_wait` plus an
+//!   `eventfd` waker; a portable fallback scan loop keeps the mode
+//!   working off-Linux). Per connection the reactor keeps an explicit
+//!   state struct: a capped read buffer with incremental line framing,
+//!   a write buffer with partial-write continuation (reads pause while
+//!   a slow client's reply backlog exceeds 1 MiB — backpressure, not
+//!   unbounded growth), and a pending-reply queue that delivers
+//!   replies strictly in request order even when shards finish out of
+//!   order. Executor shards push replies into an eventfd-signalled
+//!   completion queue instead of blocking a per-connection thread.
+//!   Scales to 10k+ concurrent sessions (one `Conn` struct each, no
+//!   thread stacks) — stress-gated in CI at 1024 connections.
+//! * **`threads`** — one blocking reader thread per connection (the
+//!   PR 1/PR 2 front-end), kept as a fallback and as the portable
+//!   reference implementation.
+//!
+//! `--max-conns` bounds accepted connections in both modes (excess
+//! connections get a `too_many_connections` reply and are closed);
+//! oversized request lines are refused with `line_too_long` in both
+//! modes and the connection stays usable (framing resynchronises at
+//! the next newline), so a slow-loris peer cannot pin buffer memory.
 //!
 //! ## Sharding (`--shards N`)
 //!
@@ -30,7 +62,8 @@
 //! Requests:
 //!   {"op":"context","session":"u1","tokens":[5,6,7]}
 //!   {"op":"query","session":"u1","tokens":[9,2],"topk":5}
-//!   {"op":"stats"}            {"op":"shutdown"}
+//!   {"op":"stats"}            {"op":"stats","detail":true}
+//!   {"op":"shutdown"}
 //!
 //! Responses:
 //!   {"ok":true,"kind":"context","t":3,"kv_bytes":12288}
@@ -48,7 +81,12 @@
 //!       one shard the object carries its `shard` id and the
 //!       human-readable `report`; with N shards the response is the
 //!       merged global view (counters summed, `shards`:N) and
-//!       `per_shard` embeds each shard's own stats object.
+//!       `per_shard` embeds each shard's own stats object. With
+//!       `"detail":true` the response additionally carries a
+//!       `sessions_detail` array — one object per resident session
+//!       (`id`, `t`, `kv_bytes`, `age_ms`, `idle_ms`), sorted by id;
+//!       merged across shards in the sharded view — so operators and
+//!       the CI stress gate can audit per-session accounting.
 //!   {"ok":true,"kind":"shutdown"}
 //!       Sent after in-flight work has drained on EVERY shard; the
 //!       listener is closed and the acceptor thread joined before
@@ -66,6 +104,13 @@
 //!       validated at admission so it never fails a batch.
 //!   {"ok":false,"error":"timeout"}
 //!       The executor did not answer within the per-request deadline.
+//!   {"ok":false,"error":"line_too_long"}
+//!       The request line exceeded `max_line_bytes`. The buffered
+//!       bytes are dropped and framing resumes at the next newline —
+//!       the connection stays open (slow-loris hardening).
+//!   {"ok":false,"error":"too_many_connections"}
+//!       Sent once on accept when `--max-conns` is reached, then the
+//!       connection is closed.
 //!   {"ok":false,"error":"stats_unavailable"}
 //!       A shard could not answer a fanned-out stats request (e.g. it
 //!       is mid-shutdown); merged stats fail closed over partial data.
@@ -91,11 +136,13 @@
 //! [`EvictionPolicy`]: crate::coordinator::session::EvictionPolicy
 
 mod executor;
+mod poll;
+mod reactor;
 pub mod router;
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::Duration;
@@ -118,7 +165,7 @@ pub use router::shard_for;
 pub enum Request {
     Context { session: String, tokens: Vec<i32> },
     Query { session: String, tokens: Vec<i32>, topk: usize },
-    Stats,
+    Stats { detail: bool },
     Shutdown,
 }
 
@@ -137,7 +184,7 @@ impl Request {
                 tokens: tokens()?,
                 topk: j.opt("topk").and_then(|v| v.usize().ok()).unwrap_or(5),
             },
-            "stats" => Request::Stats,
+            "stats" => Request::Stats { detail: matches!(j.opt("detail"), Some(Json::Bool(true))) },
             "shutdown" => Request::Shutdown,
             _ => bail!("unknown op {op:?}"),
         })
@@ -148,7 +195,52 @@ impl Request {
     pub fn session(&self) -> Option<&str> {
         match self {
             Request::Context { session, .. } | Request::Query { session, .. } => Some(session),
-            Request::Stats | Request::Shutdown => None,
+            Request::Stats { .. } | Request::Shutdown => None,
+        }
+    }
+}
+
+/// Transport front-end for the serve loop: blocking reader threads
+/// (one per connection) or the event-driven polling reactor. See the
+/// module docs; the wire protocol is identical under both.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReactorMode {
+    /// One blocking reader thread per connection.
+    Threads,
+    /// Non-blocking readiness reactor (epoll on Linux; a portable
+    /// fallback scan loop elsewhere keeps the mode available).
+    Epoll,
+}
+
+impl ReactorMode {
+    pub fn parse(name: &str) -> Result<ReactorMode> {
+        Ok(match name {
+            "threads" => ReactorMode::Threads,
+            "epoll" => ReactorMode::Epoll,
+            other => bail!("unknown reactor mode {other:?} (threads|epoll)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ReactorMode::Threads => "threads",
+            ReactorMode::Epoll => "epoll",
+        }
+    }
+
+    /// `CCM_SERVE_REACTOR` if set to a valid mode (the CI matrix runs
+    /// the whole suite under each), else the platform default: epoll
+    /// on Linux, threads elsewhere.
+    pub fn from_env() -> ReactorMode {
+        match std::env::var("CCM_SERVE_REACTOR").ok().as_deref().map(ReactorMode::parse) {
+            Some(Ok(mode)) => mode,
+            _ => {
+                if cfg!(target_os = "linux") {
+                    ReactorMode::Epoll
+                } else {
+                    ReactorMode::Threads
+                }
+            }
         }
     }
 }
@@ -177,6 +269,17 @@ pub struct ServerConfig {
     pub shards: usize,
     /// Session-eviction policy under KV-budget pressure.
     pub eviction: EvictionKind,
+    /// Transport front-end (`--reactor threads|epoll`). Defaults to
+    /// [`ReactorMode::from_env`]: `CCM_SERVE_REACTOR` if valid, else
+    /// epoll on Linux / threads elsewhere.
+    pub reactor: ReactorMode,
+    /// Accepted-connection bound (both front-ends): connections beyond
+    /// it get one `too_many_connections` line and are closed.
+    pub max_conns: usize,
+    /// Per-connection request-line cap (both front-ends): longer lines
+    /// are refused with `line_too_long` and discarded through the next
+    /// newline, so a slow-loris peer cannot pin buffer memory.
+    pub max_line_bytes: usize,
 }
 
 impl ServerConfig {
@@ -191,11 +294,49 @@ impl ServerConfig {
             session_ttl: None,
             shards: 1,
             eviction: EvictionKind::OldestCreated,
+            reactor: ReactorMode::from_env(),
+            max_conns: 16_384,
+            max_line_bytes: 256 * 1024,
         }
     }
 }
 
-pub(crate) type Reply = Sender<String>;
+/// Per-request reply deadline (both front-ends answer `timeout` past
+/// it rather than silently dropping the client).
+pub(crate) const REPLY_TIMEOUT: Duration = Duration::from_secs(60);
+pub(crate) const TIMEOUT_REPLY: &str = "{\"ok\":false,\"error\":\"timeout\"}";
+pub(crate) const LINE_TOO_LONG_REPLY: &str = "{\"ok\":false,\"error\":\"line_too_long\"}";
+pub(crate) const TOO_MANY_CONNS_REPLY: &str = "{\"ok\":false,\"error\":\"too_many_connections\"}";
+const SHUTDOWN_ACK: &str = "{\"ok\":true,\"kind\":\"shutdown\"}";
+
+/// Where an executor's reply for one request goes: a blocking channel
+/// (threads mode: the connection thread waits on the receiver) or the
+/// reactor's completion queue (tagged with connection + request id so
+/// the reactor can restore per-connection request order).
+#[derive(Clone)]
+pub(crate) enum Reply {
+    Channel(Sender<String>),
+    Completion(reactor::CompletionHandle),
+}
+
+impl Reply {
+    pub(crate) fn channel(tx: Sender<String>) -> Reply {
+        Reply::Channel(tx)
+    }
+
+    /// Deliver a reply. `Err` means the requester is gone (its channel
+    /// hung up); completion-queue delivery cannot fail — the reactor
+    /// drops replies for connections that have since closed.
+    pub(crate) fn send(&self, msg: String) -> std::result::Result<(), ()> {
+        match self {
+            Reply::Channel(tx) => tx.send(msg).map_err(|_| ()),
+            Reply::Completion(handle) => {
+                handle.send(msg);
+                Ok(())
+            }
+        }
+    }
+}
 
 /// Builds one shard's [`Compute`] backend INSIDE that shard's executor
 /// thread, so a backend may own thread-bound state (e.g. a PJRT
@@ -311,12 +452,13 @@ pub fn serve_sharded<'a>(
     })
 }
 
-/// Shared serving shell: bind the listener, run the acceptor thread
-/// (connection threads dispatch through `router`), drive the executors
-/// via `run_executors` (which blocks until every shard has drained and
-/// returns the drained shards' shutdown repliers alongside the first
-/// shard error, if any), then release the port, ack the shutdown
-/// requesters — even on a partial failure — and propagate the error.
+/// Shared serving shell: bind the listener, start the selected
+/// transport front-end (blocking reader threads or the polling
+/// reactor), drive the executors via `run_executors` (which blocks
+/// until every shard has drained and returns the drained shards'
+/// shutdown repliers alongside the first shard error, if any), then
+/// release the port, ack the shutdown requesters — even on a partial
+/// failure — and propagate the error.
 fn run_server(
     cfg: &ServerConfig,
     router: Router,
@@ -326,26 +468,55 @@ fn run_server(
     let listener = TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
     listener.set_nonblocking(true).context("listener nonblocking")?;
     let local = listener.local_addr()?.to_string();
-    crate::info!("serving on {local} ({} shard(s), eviction {})", cfg.shards, cfg.eviction.name());
+    crate::info!(
+        "serving on {local} ({} shard(s), eviction {}, reactor {})",
+        cfg.shards,
+        cfg.eviction.name(),
+        cfg.reactor.name()
+    );
     if let Some(tx) = ready {
         let _ = tx.send(local.clone());
     }
+    match cfg.reactor {
+        ReactorMode::Threads => run_server_threads(cfg, listener, router, run_executors),
+        ReactorMode::Epoll => run_server_reactor(cfg, listener, router, run_executors),
+    }
+}
 
+/// Threads front-end: an acceptor thread polling the nonblocking
+/// listener (so it can observe the stop flag), one blocking reader
+/// thread per connection. The listener is dropped when the acceptor
+/// exits, releasing the port before the shutdown acks go out.
+fn run_server_threads(
+    cfg: &ServerConfig,
+    listener: TcpListener,
+    router: Router,
+    run_executors: impl FnOnce() -> (Vec<Reply>, Result<()>),
+) -> Result<()> {
     let stop = Arc::new(AtomicBool::new(false));
+    let max_conns = cfg.max_conns;
+    let max_line_bytes = cfg.max_line_bytes;
 
-    // Acceptor thread: polls the nonblocking listener so it can observe
-    // the stop flag; one reader thread per connection. The listener is
-    // dropped when this thread exits, releasing the port.
     let acceptor = {
         let stop = stop.clone();
+        let live = Arc::new(AtomicUsize::new(0));
         std::thread::spawn(move || {
             while !stop.load(Ordering::SeqCst) {
                 match listener.accept() {
                     Ok((stream, _)) => {
+                        if live.load(Ordering::SeqCst) >= max_conns {
+                            let mut stream = stream;
+                            let refusal = format!("{TOO_MANY_CONNS_REPLY}\n");
+                            let _ = stream.write_all(refusal.as_bytes());
+                            continue; // dropped => closed
+                        }
                         let _ = stream.set_nonblocking(false);
                         let router = router.clone();
+                        live.fetch_add(1, Ordering::SeqCst);
+                        let live = live.clone();
                         std::thread::spawn(move || {
-                            let _ = handle_connection(stream, router);
+                            let _ = handle_connection(stream, router, max_line_bytes);
+                            live.fetch_sub(1, Ordering::SeqCst);
                         });
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -368,36 +539,132 @@ fn run_server(
     // Only now — listener dropped, port free — ack the shutdown
     // requesters: the ack's documented meaning is "port released".
     for reply in shutdown_replies {
-        let _ = reply.send("{\"ok\":true,\"kind\":\"shutdown\"}".into());
+        let _ = reply.send(SHUTDOWN_ACK.into());
     }
     result
 }
 
-fn handle_connection(stream: TcpStream, router: Router) -> Result<()> {
+/// Reactor front-end: every connection lives on one reactor thread;
+/// executors deliver replies through the eventfd-signalled completion
+/// queue. Shutdown is a staged handshake so the ack keeps its
+/// documented meaning: close the listener first (port released), then
+/// push the acks, then flush-and-exit.
+fn run_server_reactor(
+    cfg: &ServerConfig,
+    listener: TcpListener,
+    router: Router,
+    run_executors: impl FnOnce() -> (Vec<Reply>, Result<()>),
+) -> Result<()> {
+    let poller = poll::Poller::new().context("reactor poller")?;
+    let waker = poller.waker();
+    let completions = Arc::new(reactor::CompletionQueue::new(poller.waker()));
+    let ctl = Arc::new(reactor::Ctl::default());
+    let r = reactor::Reactor::new(listener, router, cfg, poller, completions, ctl.clone())?;
+    let reactor_thread = std::thread::spawn(move || r.run());
+
+    let (shutdown_replies, result) = run_executors();
+    // Stage 1: the reactor drops the listener and confirms — the port
+    // must be free before any shutdown ack is written (a dead reactor
+    // times the wait out; the shell degrades instead of hanging).
+    ctl.advance(reactor::CTL_CLOSE_LISTENER);
+    waker.wake();
+    ctl.wait_at_least(reactor::CTL_LISTENER_CLOSED, Duration::from_secs(10));
+    // Stage 2: acks travel the normal completion path, in order, on
+    // their own connections.
+    for reply in shutdown_replies {
+        let _ = reply.send(SHUTDOWN_ACK.into());
+    }
+    // Stage 3: flush buffered replies and exit, closing every conn.
+    ctl.advance(reactor::CTL_FINISH);
+    waker.wake();
+    let _ = reactor_thread.join();
+    result
+}
+
+/// Outcome of reading one framed request line in threads mode.
+enum ReadLine {
+    Eof,
+    /// Line exceeded the cap; it was consumed through its newline (or
+    /// EOF) with memory bounded by the reader's internal buffer.
+    Overlong,
+    Line(String),
+}
+
+/// Read one newline-terminated line of at most `cap` bytes — the
+/// threads-mode slow-loris guard (`BufRead::read_line` would buffer an
+/// endless partial line without bound).
+fn read_line_capped(reader: &mut impl BufRead, cap: usize) -> std::io::Result<ReadLine> {
+    let mut buf = Vec::new();
+    let mut overlong = false;
+    loop {
+        let (consumed, terminated) = {
+            let chunk = reader.fill_buf()?;
+            if chunk.is_empty() {
+                // EOF; a partial trailing line cannot be answered.
+                return Ok(if overlong { ReadLine::Overlong } else { ReadLine::Eof });
+            }
+            match chunk.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    if !overlong {
+                        buf.extend_from_slice(&chunk[..pos]);
+                    }
+                    (pos + 1, true)
+                }
+                None => {
+                    if !overlong {
+                        buf.extend_from_slice(chunk);
+                    }
+                    (chunk.len(), false)
+                }
+            }
+        };
+        reader.consume(consumed);
+        if !overlong && buf.len() > cap {
+            overlong = true;
+            buf = Vec::new();
+        }
+        if terminated {
+            return Ok(if overlong {
+                ReadLine::Overlong
+            } else {
+                ReadLine::Line(String::from_utf8_lossy(&buf).into_owned())
+            });
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, router: Router, max_line_bytes: usize) -> Result<()> {
     let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
     crate::debug!("connection from {peer}");
-    let reader = BufReader::new(stream.try_clone()?);
+    let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
-    for line in reader.lines() {
-        let line = line?;
+    loop {
+        let line = match read_line_capped(&mut reader, max_line_bytes)? {
+            ReadLine::Eof => break,
+            ReadLine::Overlong => {
+                writer.write_all(format!("{LINE_TOO_LONG_REPLY}\n").as_bytes())?;
+                continue;
+            }
+            ReadLine::Line(line) => line,
+        };
         if line.trim().is_empty() {
             continue;
         }
         let (resp_tx, resp_rx) = channel::<String>();
-        match Request::parse(&line) {
+        match Request::parse(line.trim()) {
             Ok(req) => {
                 let shutdown = matches!(req, Request::Shutdown);
-                if !router.dispatch(req, resp_tx) {
+                if !router.dispatch(req, Reply::channel(resp_tx)) {
                     break; // executor gone
                 }
-                match resp_rx.recv_timeout(Duration::from_secs(60)) {
+                match resp_rx.recv_timeout(REPLY_TIMEOUT) {
                     Ok(resp) => {
                         writer.write_all(resp.as_bytes())?;
                         writer.write_all(b"\n")?;
                     }
                     Err(RecvTimeoutError::Timeout) => {
                         // Answer instead of silently dropping the client.
-                        writer.write_all(b"{\"ok\":false,\"error\":\"timeout\"}\n")?;
+                        writer.write_all(format!("{TIMEOUT_REPLY}\n").as_bytes())?;
                     }
                     Err(RecvTimeoutError::Disconnected) => break,
                 }
@@ -469,6 +736,12 @@ impl Client {
         self.call("{\"op\":\"stats\"}")
     }
 
+    /// Stats including the per-session `sessions_detail` array (id,
+    /// time step, kv_bytes, age/idle in ms; merged across shards).
+    pub fn stats_detailed(&mut self) -> Result<Json> {
+        self.call("{\"op\":\"stats\",\"detail\":true}")
+    }
+
     pub fn shutdown(&mut self) -> Result<()> {
         match self.call("{\"op\":\"shutdown\"}") {
             // The ack means "drained, listener closed"; an ok:false
@@ -507,6 +780,10 @@ mod tests {
         }
         let r = Request::parse(r#"{"op":"query","session":"u","tokens":[9],"topk":2}"#).unwrap();
         matches!(r, Request::Query { topk: 2, .. }).then_some(()).unwrap();
+        let r = Request::parse(r#"{"op":"stats"}"#).unwrap();
+        assert!(matches!(r, Request::Stats { detail: false }), "detail is opt-in");
+        let r = Request::parse(r#"{"op":"stats","detail":true}"#).unwrap();
+        assert!(matches!(r, Request::Stats { detail: true }));
         assert!(Request::parse(r#"{"op":"nope"}"#).is_err());
         assert!(Request::parse("garbage").is_err());
     }
@@ -517,8 +794,51 @@ mod tests {
         let q = Request::Query { session: "u2".into(), tokens: vec![2], topk: 1 };
         assert_eq!(ctx.session(), Some("u1"));
         assert_eq!(q.session(), Some("u2"));
-        assert_eq!(Request::Stats.session(), None);
+        assert_eq!(Request::Stats { detail: false }.session(), None);
         assert_eq!(Request::Shutdown.session(), None);
+    }
+
+    #[test]
+    fn reactor_mode_parses_and_names() {
+        assert_eq!(ReactorMode::parse("threads").unwrap(), ReactorMode::Threads);
+        assert_eq!(ReactorMode::parse("epoll").unwrap(), ReactorMode::Epoll);
+        assert!(ReactorMode::parse("auto").is_err(), "auto is resolved by the CLI, not here");
+        assert!(ReactorMode::parse("uring").is_err());
+        assert_eq!(ReactorMode::Threads.name(), "threads");
+        assert_eq!(ReactorMode::Epoll.name(), "epoll");
+    }
+
+    #[test]
+    fn read_line_capped_bounds_memory_and_resyncs() {
+        use std::io::Cursor;
+        let mut r = Cursor::new(b"short\nnext\n".to_vec());
+        assert!(matches!(read_line_capped(&mut r, 64).unwrap(), ReadLine::Line(l) if l == "short"));
+        assert!(matches!(read_line_capped(&mut r, 64).unwrap(), ReadLine::Line(l) if l == "next"));
+        assert!(matches!(read_line_capped(&mut r, 64).unwrap(), ReadLine::Eof));
+
+        // An overlong line is consumed through its newline and refused;
+        // the framing resynchronises on the next line.
+        let mut data = vec![b'y'; 5000];
+        data.push(b'\n');
+        data.extend_from_slice(b"ok\n");
+        let mut r = Cursor::new(data);
+        assert!(matches!(read_line_capped(&mut r, 1024).unwrap(), ReadLine::Overlong));
+        assert!(matches!(read_line_capped(&mut r, 1024).unwrap(), ReadLine::Line(l) if l == "ok"));
+
+        // Overlong with EOF instead of a newline still reports once.
+        let mut r = Cursor::new(vec![b'z'; 5000]);
+        assert!(matches!(read_line_capped(&mut r, 1024).unwrap(), ReadLine::Overlong));
+        assert!(matches!(read_line_capped(&mut r, 1024).unwrap(), ReadLine::Eof));
+
+        // A line of exactly the cap passes.
+        let mut exact = vec![b'a'; 1024];
+        exact.push(b'\n');
+        let mut r = Cursor::new(exact);
+        let line = match read_line_capped(&mut r, 1024).unwrap() {
+            ReadLine::Line(line) => line,
+            _ => panic!("exact-cap line must pass"),
+        };
+        assert_eq!(line.len(), 1024);
     }
 
     #[test]

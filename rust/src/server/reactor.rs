@@ -1,0 +1,826 @@
+//! Event-driven connection front-end (`--reactor epoll`).
+//!
+//! One reactor thread owns the listener and every accepted connection;
+//! readiness is multiplexed through [`poll::Poller`] (epoll on Linux, a
+//! portable scan loop elsewhere), so 10k+ concurrent sessions cost one
+//! thread and one `Conn` struct each instead of one OS thread stack.
+//!
+//! Per connection the reactor keeps an explicit [`Conn`]:
+//!
+//! * a read buffer with incremental newline framing (capped at
+//!   `max_line_bytes`: an overlong line gets a `line_too_long` reply
+//!   and the framing resynchronises at the next newline, so a
+//!   slow-loris peer cannot pin memory),
+//! * a write buffer with partial-write continuation (write interest is
+//!   registered only while bytes are buffered; reads pause while the
+//!   backlog exceeds [`WRITE_PAUSE_BYTES`] — backpressure instead of
+//!   unbounded growth when a client reads slowly),
+//! * a pending-reply queue preserving request order: requests are
+//!   dispatched to shard executors as soon as they are framed, replies
+//!   come back through the [`CompletionQueue`], and are written out
+//!   strictly in request order (late replies for timed-out requests
+//!   are dropped).
+//!
+//! Executor shards never touch sockets: [`super::Reply::Completion`]
+//! pushes the reply into the completion queue and rings the poller's
+//! eventfd waker, which pops the reactor out of `epoll_wait` to
+//! deliver. Shutdown is a staged handshake via [`Ctl`]: the serve
+//! shell asks the reactor to close the listener (releasing the port),
+//! waits for confirmation, sends the shutdown acks through the
+//! completion queue, then signals the final flush-and-exit.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::server::poll::{self, Poller};
+use crate::server::router::Router;
+use crate::server::{
+    LINE_TOO_LONG_REPLY, Reply, Request, REPLY_TIMEOUT, ServerConfig, TIMEOUT_REPLY,
+    TOO_MANY_CONNS_REPLY,
+};
+use crate::util::json::escape;
+
+const LISTENER_TOKEN: poll::Token = 0;
+/// Pause reading a connection while this many reply bytes are buffered.
+const WRITE_PAUSE_BYTES: usize = 1 << 20;
+/// Compact the write buffer once this many bytes have been written out.
+const WRITE_COMPACT_BYTES: usize = 64 * 1024;
+/// After a non-`WouldBlock` accept failure (EMFILE/ENFILE: the backlog
+/// entry stays pending, so a level-triggered listener would hot-spin
+/// the event loop), accepting pauses this long before re-arming.
+const ACCEPT_BACKOFF: Duration = Duration::from_millis(50);
+
+// ---------------------------------------------------------------------
+// Completion delivery (executor shard -> reactor).
+
+/// One reply produced by an executor for a reactor-owned connection.
+pub(crate) struct Completion {
+    conn: poll::Token,
+    req: u64,
+    msg: String,
+}
+
+/// Shared reply queue: executors push, the reactor drains. Every push
+/// rings the poller's waker so delivery latency is one epoll wakeup.
+pub(crate) struct CompletionQueue {
+    items: Mutex<Vec<Completion>>,
+    waker: poll::Waker,
+}
+
+impl CompletionQueue {
+    pub(crate) fn new(waker: poll::Waker) -> CompletionQueue {
+        CompletionQueue { items: Mutex::new(Vec::new()), waker }
+    }
+
+    fn push(&self, completion: Completion) {
+        self.items.lock().unwrap().push(completion);
+        self.waker.wake();
+    }
+
+    fn drain(&self) -> Vec<Completion> {
+        std::mem::take(&mut *self.items.lock().unwrap())
+    }
+}
+
+/// The reactor-mode [`Reply`]: identifies (connection, request) so the
+/// reactor can slot the reply into the per-conn pending queue.
+#[derive(Clone)]
+pub(crate) struct CompletionHandle {
+    queue: Arc<CompletionQueue>,
+    conn: poll::Token,
+    req: u64,
+}
+
+impl CompletionHandle {
+    pub(crate) fn send(&self, msg: String) {
+        self.queue.push(Completion { conn: self.conn, req: self.req, msg });
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shutdown handshake (serve shell -> reactor).
+
+pub(crate) const CTL_RUNNING: u8 = 0;
+/// Serve shell asks: close the listener (port must be released before
+/// shutdown acks are sent — the ack's documented meaning).
+pub(crate) const CTL_CLOSE_LISTENER: u8 = 1;
+/// Reactor confirms: listener dropped, port free.
+pub(crate) const CTL_LISTENER_CLOSED: u8 = 2;
+/// Serve shell asks: flush buffered replies (the shutdown acks) and
+/// exit, closing every connection.
+pub(crate) const CTL_FINISH: u8 = 3;
+
+/// Monotonic shutdown stage shared between the serve shell and the
+/// reactor thread. Stages only advance.
+#[derive(Default)]
+pub(crate) struct Ctl {
+    stage: Mutex<u8>,
+    cv: Condvar,
+}
+
+impl Ctl {
+    pub(crate) fn advance(&self, stage: u8) {
+        let mut s = self.stage.lock().unwrap();
+        if *s < stage {
+            *s = stage;
+        }
+        self.cv.notify_all();
+    }
+
+    pub(crate) fn stage(&self) -> u8 {
+        *self.stage.lock().unwrap()
+    }
+
+    /// Wait until the stage reaches `stage`; false on timeout (the
+    /// reactor died — callers degrade rather than hang).
+    pub(crate) fn wait_at_least(&self, stage: u8, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut s = self.stage.lock().unwrap();
+        while *s < stage {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return false;
+            }
+            let (guard, _) = self.cv.wait_timeout(s, left).unwrap();
+            s = guard;
+        }
+        true
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-connection state.
+
+enum PendingState {
+    /// Dispatched to an executor; the reply will arrive as a completion.
+    Waiting,
+    /// Reply ready (or synthesized locally: parse error, overlong line,
+    /// timeout); written out once every earlier request is done.
+    Done(String),
+}
+
+struct Pending {
+    req: u64,
+    deadline: Instant,
+    state: PendingState,
+}
+
+/// One accepted connection owned by the reactor.
+struct Conn {
+    stream: TcpStream,
+    token: poll::Token,
+    read_buf: Vec<u8>,
+    write_buf: Vec<u8>,
+    write_pos: usize,
+    /// Replies leave in request order, whatever order shards finish in.
+    pending: VecDeque<Pending>,
+    next_req: u64,
+    /// Overlong line seen: drop bytes until the next newline.
+    discarding: bool,
+    read_eof: bool,
+    /// No further requests are read (shutdown seen, or aborted).
+    stop_reading: bool,
+    /// Close once this request's reply has been queued for write.
+    close_after_req: Option<u64>,
+    /// Close once the write buffer drains.
+    close_when_flushed: bool,
+    /// Registered epoll interest (avoid redundant `epoll_ctl`).
+    reg_read: bool,
+    reg_write: bool,
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, token: poll::Token) -> Conn {
+        Conn {
+            stream,
+            token,
+            read_buf: Vec::new(),
+            write_buf: Vec::new(),
+            write_pos: 0,
+            pending: VecDeque::new(),
+            next_req: 0,
+            discarding: false,
+            read_eof: false,
+            stop_reading: false,
+            close_after_req: None,
+            close_when_flushed: false,
+            reg_read: true,
+            reg_write: false,
+            dead: false,
+        }
+    }
+
+    fn backlog(&self) -> usize {
+        self.write_buf.len() - self.write_pos
+    }
+
+    /// Non-blocking read until `WouldBlock`, EOF, or the buffer holds a
+    /// full overlong line for `process_lines` to refuse.
+    fn fill(&mut self, max_buffered: usize) {
+        let mut scratch = [0u8; 16 * 1024];
+        loop {
+            match self.stream.read(&mut scratch) {
+                Ok(0) => {
+                    self.read_eof = true;
+                    return;
+                }
+                Ok(n) => {
+                    self.read_buf.extend_from_slice(&scratch[..n]);
+                    if self.read_buf.len() > max_buffered {
+                        return; // cap enforcement runs before the next fill
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.dead = true;
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Non-blocking write of the buffered backlog; keeps `write_pos`
+    /// across partial writes and compacts once enough has shipped.
+    fn flush(&mut self) {
+        while self.write_pos < self.write_buf.len() {
+            match self.stream.write(&self.write_buf[self.write_pos..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    return;
+                }
+                Ok(n) => self.write_pos += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.dead = true;
+                    return;
+                }
+            }
+        }
+        if self.write_pos == self.write_buf.len() {
+            self.write_buf.clear();
+            self.write_pos = 0;
+        } else if self.write_pos > WRITE_COMPACT_BYTES {
+            self.write_buf.drain(..self.write_pos);
+            self.write_pos = 0;
+        }
+    }
+
+    /// Append a locally-synthesized reply at this conn's next slot in
+    /// the ordered pending queue.
+    fn enqueue_done(&mut self, msg: String) {
+        let req = self.next_req;
+        self.next_req += 1;
+        let deadline = Instant::now() + REPLY_TIMEOUT;
+        self.pending.push_back(Pending { req, deadline, state: PendingState::Done(msg) });
+    }
+
+    /// Move the done prefix of the pending queue into the write buffer
+    /// (strict request order). Returns the number of entries popped.
+    fn promote_done_replies(&mut self) -> usize {
+        let mut popped = 0;
+        while matches!(self.pending.front().map(|p| &p.state), Some(PendingState::Done(_))) {
+            let p = self.pending.pop_front().expect("checked front");
+            if let PendingState::Done(msg) = p.state {
+                self.write_buf.extend_from_slice(msg.as_bytes());
+                self.write_buf.push(b'\n');
+            }
+            if self.close_after_req == Some(p.req) {
+                self.close_when_flushed = true;
+            }
+            popped += 1;
+        }
+        popped
+    }
+}
+
+// ---------------------------------------------------------------------
+// The reactor proper.
+
+pub(crate) struct Reactor {
+    poller: Poller,
+    listener: Option<TcpListener>,
+    router: Router,
+    completions: Arc<CompletionQueue>,
+    ctl: Arc<Ctl>,
+    conns: HashMap<poll::Token, Conn>,
+    next_token: poll::Token,
+    /// Pending-reply entries across all conns (drives the poll timeout
+    /// and the deadline scan; symmetric with promote/removal pops).
+    outstanding: usize,
+    last_expiry_scan: Instant,
+    /// Accepting is paused (listener interest dropped) until this
+    /// deadline — the [`ACCEPT_BACKOFF`] after an accept failure.
+    accept_paused_until: Option<Instant>,
+    max_conns: usize,
+    max_line_bytes: usize,
+}
+
+impl Reactor {
+    pub(crate) fn new(
+        listener: TcpListener,
+        router: Router,
+        cfg: &ServerConfig,
+        mut poller: Poller,
+        completions: Arc<CompletionQueue>,
+        ctl: Arc<Ctl>,
+    ) -> Result<Reactor> {
+        poller.add(poll::source_fd(&listener), LISTENER_TOKEN, true, false)?;
+        Ok(Reactor {
+            poller,
+            listener: Some(listener),
+            router,
+            completions,
+            ctl,
+            conns: HashMap::new(),
+            next_token: 1,
+            outstanding: 0,
+            last_expiry_scan: Instant::now(),
+            accept_paused_until: None,
+            max_conns: cfg.max_conns,
+            max_line_bytes: cfg.max_line_bytes,
+        })
+    }
+
+    pub(crate) fn run(mut self) {
+        if let Err(e) = self.run_loop() {
+            crate::info!("reactor: fatal: {e:#}");
+        }
+        // Unblock a serve shell waiting on the handshake even after a
+        // fatal poller error (it degrades instead of hanging).
+        self.ctl.advance(CTL_LISTENER_CLOSED);
+    }
+
+    fn run_loop(&mut self) -> Result<()> {
+        let mut events: Vec<poll::Event> = Vec::new();
+        loop {
+            // With replies outstanding, wake at least every 500 ms so
+            // per-request deadlines fire; with accepting paused, wake
+            // when the backoff elapses; fully idle, park until the
+            // waker rings (a new completion or the ctl handshake).
+            let mut timeout =
+                if self.outstanding > 0 { Some(Duration::from_millis(500)) } else { None };
+            if let Some(at) = self.accept_paused_until {
+                let left = at.saturating_duration_since(Instant::now());
+                timeout = Some(timeout.map_or(left, |t| t.min(left)));
+            }
+            self.poller.wait(&mut events, timeout)?;
+            for ev in &events {
+                match ev.token {
+                    poll::WAKER_TOKEN => {}
+                    LISTENER_TOKEN => self.accept_ready(),
+                    token => self.conn_event(token, ev.readable, ev.writable),
+                }
+            }
+            self.drain_completions();
+            self.expire_deadlines();
+            self.resume_accept_if_due();
+            if self.handle_ctl() {
+                return Ok(());
+            }
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            let accepted = match &self.listener {
+                Some(listener) => listener.accept(),
+                None => return,
+            };
+            match accepted {
+                Ok((stream, _)) => self.register_conn(stream),
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) => {
+                    // EMFILE/ENFILE and friends: the backlog entry is
+                    // still pending, so the level-triggered listener
+                    // would report readable forever. Back off instead
+                    // of hot-spinning the whole event loop.
+                    crate::debug!("reactor: accept error (pausing accepts): {e}");
+                    self.pause_accept();
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Drop listener read interest for [`ACCEPT_BACKOFF`].
+    fn pause_accept(&mut self) {
+        if let Some(listener) = &self.listener {
+            let _ = self.poller.modify(poll::source_fd(listener), LISTENER_TOKEN, false, false);
+        }
+        self.accept_paused_until = Some(Instant::now() + ACCEPT_BACKOFF);
+    }
+
+    /// Re-arm the listener once the accept backoff has elapsed and try
+    /// the pending backlog again.
+    fn resume_accept_if_due(&mut self) {
+        let due = self.accept_paused_until.is_some_and(|at| Instant::now() >= at);
+        if !due {
+            return;
+        }
+        self.accept_paused_until = None;
+        if let Some(listener) = &self.listener {
+            let _ = self.poller.modify(poll::source_fd(listener), LISTENER_TOKEN, true, false);
+        }
+        self.accept_ready();
+    }
+
+    fn register_conn(&mut self, stream: TcpStream) {
+        if self.conns.len() >= self.max_conns {
+            // Best-effort refusal line, then drop (closes the socket).
+            let mut stream = stream;
+            let _ = stream.set_nonblocking(true);
+            let _ = stream.write_all(format!("{TOO_MANY_CONNS_REPLY}\n").as_bytes());
+            crate::debug!("reactor: refusing connection over max_conns={}", self.max_conns);
+            return;
+        }
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        let token = self.next_token;
+        self.next_token += 1;
+        if self.poller.add(poll::source_fd(&stream), token, true, false).is_err() {
+            return;
+        }
+        self.conns.insert(token, Conn::new(stream, token));
+    }
+
+    fn conn_event(&mut self, token: poll::Token, readable: bool, writable: bool) {
+        {
+            let Some(conn) = self.conns.get_mut(&token) else { return };
+            if writable {
+                conn.flush();
+            }
+            let paused = conn.backlog() >= WRITE_PAUSE_BYTES;
+            if readable && !conn.stop_reading && !conn.read_eof && !conn.dead && !paused {
+                conn.fill(self.max_line_bytes);
+            }
+        }
+        self.process_conn_lines(token);
+        self.service_conn(token);
+    }
+
+    fn process_conn_lines(&mut self, token: poll::Token) {
+        let Some(conn) = self.conns.get_mut(&token) else { return };
+        let pushed =
+            Self::process_lines(&self.router, &self.completions, conn, self.max_line_bytes);
+        self.outstanding += pushed;
+    }
+
+    /// Frame and dispatch every complete line buffered on `conn`.
+    /// Returns the number of pending-reply entries created. Framing
+    /// advances a cursor and compacts the consumed prefix once at the
+    /// end — a per-line front drain would memmove the whole remaining
+    /// buffer per request and make pipelined bursts quadratic.
+    fn process_lines(
+        router: &Router,
+        completions: &Arc<CompletionQueue>,
+        conn: &mut Conn,
+        max_line: usize,
+    ) -> usize {
+        let mut pushed = 0;
+        let mut cursor = 0usize;
+        loop {
+            if conn.stop_reading {
+                conn.read_buf.clear();
+                cursor = 0;
+                break;
+            }
+            if conn.discarding {
+                match find_newline(&conn.read_buf[cursor..]) {
+                    Some(rel) => {
+                        cursor += rel + 1;
+                        conn.discarding = false;
+                    }
+                    None => {
+                        conn.read_buf.clear();
+                        cursor = 0;
+                        break;
+                    }
+                }
+            }
+            let Some(rel) = find_newline(&conn.read_buf[cursor..]) else {
+                if conn.read_buf.len() - cursor > max_line {
+                    // Slow-loris guard: refuse the line, drop what is
+                    // buffered, resynchronise at the next newline.
+                    conn.enqueue_done(LINE_TOO_LONG_REPLY.to_string());
+                    pushed += 1;
+                    conn.read_buf.clear();
+                    cursor = 0;
+                    conn.discarding = true;
+                }
+                break;
+            };
+            let (start, len) = (cursor, rel);
+            cursor += rel + 1;
+            if len > max_line {
+                // Overlong but terminated (arrived in one burst).
+                conn.enqueue_done(LINE_TOO_LONG_REPLY.to_string());
+                pushed += 1;
+                continue;
+            }
+            let text_owned =
+                String::from_utf8_lossy(&conn.read_buf[start..start + len]).into_owned();
+            let text = text_owned.trim();
+            if text.is_empty() {
+                continue;
+            }
+            match Request::parse(text) {
+                Ok(req) => {
+                    let shutdown = matches!(req, Request::Shutdown);
+                    let req_id = conn.next_req;
+                    conn.next_req += 1;
+                    conn.pending.push_back(Pending {
+                        req: req_id,
+                        deadline: Instant::now() + REPLY_TIMEOUT,
+                        state: PendingState::Waiting,
+                    });
+                    pushed += 1;
+                    let reply = Reply::Completion(CompletionHandle {
+                        queue: completions.clone(),
+                        conn: conn.token,
+                        req: req_id,
+                    });
+                    if !router.dispatch(req, reply) {
+                        // No executor reachable and no reply delivered:
+                        // flush what is done and close, like the
+                        // threads mode dropping its connection.
+                        conn.stop_reading = true;
+                        conn.close_when_flushed = true;
+                        conn.read_buf.clear();
+                        cursor = 0;
+                        break;
+                    }
+                    if shutdown {
+                        // Mirror the threads mode: nothing after a
+                        // shutdown request is read; the conn closes
+                        // once its ack has been written out.
+                        conn.stop_reading = true;
+                        conn.close_after_req = Some(req_id);
+                        conn.read_buf.clear();
+                        cursor = 0;
+                        break;
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{{\"ok\":false,\"error\":{}}}", escape(&e.to_string()));
+                    conn.enqueue_done(msg);
+                    pushed += 1;
+                }
+            }
+        }
+        if cursor > 0 {
+            // One compaction for everything consumed this pass.
+            conn.read_buf.drain(..cursor);
+        }
+        pushed
+    }
+
+    /// Route drained completions into their conns' pending queues, then
+    /// flush every touched conn. Late replies (request already timed
+    /// out and popped) and replies for closed conns are dropped.
+    fn drain_completions(&mut self) {
+        let items = self.completions.drain();
+        if items.is_empty() {
+            return;
+        }
+        let mut touched: Vec<poll::Token> = Vec::with_capacity(items.len());
+        for completion in items {
+            let Some(conn) = self.conns.get_mut(&completion.conn) else { continue };
+            if let Some(p) = conn.pending.iter_mut().find(|p| p.req == completion.req) {
+                if matches!(p.state, PendingState::Waiting) {
+                    p.state = PendingState::Done(completion.msg);
+                    touched.push(completion.conn);
+                }
+            }
+        }
+        touched.sort_unstable();
+        touched.dedup();
+        for token in touched {
+            self.service_conn(token);
+        }
+    }
+
+    /// Answer requests that blew the per-request deadline (the reactor
+    /// equivalent of the threads mode's `recv_timeout` reply). Scans at
+    /// most every 500 ms and only while replies are outstanding.
+    fn expire_deadlines(&mut self) {
+        if self.outstanding == 0 || self.last_expiry_scan.elapsed() < Duration::from_millis(500) {
+            return;
+        }
+        self.last_expiry_scan = Instant::now();
+        let now = Instant::now();
+        let mut touched = Vec::new();
+        for (token, conn) in self.conns.iter_mut() {
+            let mut hit = false;
+            for p in conn.pending.iter_mut() {
+                if matches!(p.state, PendingState::Waiting) && p.deadline <= now {
+                    p.state = PendingState::Done(TIMEOUT_REPLY.to_string());
+                    hit = true;
+                }
+            }
+            if hit {
+                touched.push(*token);
+            }
+        }
+        for token in touched {
+            self.service_conn(token);
+        }
+    }
+
+    /// Promote ordered replies, flush, reconcile epoll interest
+    /// (pausing reads under write backpressure), and retire the conn
+    /// when it is finished.
+    fn service_conn(&mut self, token: poll::Token) {
+        let popped = match self.conns.get_mut(&token) {
+            Some(conn) => {
+                let popped = conn.promote_done_replies();
+                conn.flush();
+                let backlog = conn.backlog();
+                if !conn.dead {
+                    if conn.close_when_flushed && backlog == 0 {
+                        conn.dead = true;
+                    } else if conn.read_eof && conn.pending.is_empty() && backlog == 0 {
+                        conn.dead = true;
+                    }
+                }
+                if !conn.dead {
+                    let want_read =
+                        !conn.stop_reading && !conn.read_eof && backlog < WRITE_PAUSE_BYTES;
+                    let want_write = backlog > 0;
+                    if (want_read, want_write) != (conn.reg_read, conn.reg_write) {
+                        let fd = poll::source_fd(&conn.stream);
+                        match self.poller.modify(fd, token, want_read, want_write) {
+                            Ok(()) => {
+                                conn.reg_read = want_read;
+                                conn.reg_write = want_write;
+                            }
+                            Err(_) => conn.dead = true,
+                        }
+                    }
+                }
+                popped
+            }
+            None => 0,
+        };
+        self.outstanding = self.outstanding.saturating_sub(popped);
+        self.reap_if_dead(token);
+    }
+
+    fn reap_if_dead(&mut self, token: poll::Token) {
+        if self.conns.get(&token).is_some_and(|c| c.dead) {
+            if let Some(conn) = self.conns.remove(&token) {
+                let _ = self.poller.delete(poll::source_fd(&conn.stream));
+                self.outstanding = self.outstanding.saturating_sub(conn.pending.len());
+            }
+        }
+    }
+
+    /// React to the shutdown handshake. Returns true when the reactor
+    /// should exit.
+    fn handle_ctl(&mut self) -> bool {
+        match self.ctl.stage() {
+            CTL_CLOSE_LISTENER => {
+                if let Some(listener) = self.listener.take() {
+                    let _ = self.poller.delete(poll::source_fd(&listener));
+                }
+                self.ctl.advance(CTL_LISTENER_CLOSED);
+                false
+            }
+            CTL_FINISH => {
+                // Degraded path: if the shell skipped the close stage
+                // (handshake timeout), still release the port.
+                drop(self.listener.take());
+                // The shutdown acks were pushed before FINISH was
+                // advanced, but possibly after this iteration's drain
+                // already ran: drain once more so the final flush sees
+                // every completion instead of silently dropping acks.
+                self.drain_completions();
+                self.final_flush();
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Last chance for buffered replies (notably the shutdown acks):
+    /// switch each conn to blocking writes with a short deadline and
+    /// push the remainder out before everything closes.
+    fn final_flush(&mut self) {
+        for conn in self.conns.values_mut() {
+            conn.promote_done_replies();
+            if conn.backlog() > 0 && !conn.dead {
+                let _ = conn.stream.set_nonblocking(false);
+                let _ = conn.stream.set_write_timeout(Some(Duration::from_secs(2)));
+                let _ = conn.stream.write_all(&conn.write_buf[conn.write_pos..]);
+            }
+        }
+    }
+}
+
+fn find_newline(buf: &[u8]) -> Option<usize> {
+    buf.iter().position(|&b| b == b'\n')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctl_stages_are_monotonic_and_waitable() {
+        let ctl = Arc::new(Ctl::default());
+        assert_eq!(ctl.stage(), CTL_RUNNING);
+        ctl.advance(CTL_LISTENER_CLOSED);
+        // A stale lower stage never rolls the handshake back.
+        ctl.advance(CTL_CLOSE_LISTENER);
+        assert_eq!(ctl.stage(), CTL_LISTENER_CLOSED);
+        assert!(ctl.wait_at_least(CTL_LISTENER_CLOSED, Duration::from_millis(10)));
+        assert!(!ctl.wait_at_least(CTL_FINISH, Duration::from_millis(20)), "must time out");
+        let ctl2 = ctl.clone();
+        let waiter =
+            std::thread::spawn(move || ctl2.wait_at_least(CTL_FINISH, Duration::from_secs(10)));
+        ctl.advance(CTL_FINISH);
+        assert!(waiter.join().unwrap());
+    }
+
+    #[test]
+    fn completion_queue_drains_in_push_order_and_wakes() {
+        let mut poller = Poller::new().unwrap();
+        let queue = Arc::new(CompletionQueue::new(poller.waker()));
+        let handle_a = CompletionHandle { queue: queue.clone(), conn: 1, req: 0 };
+        let handle_b = CompletionHandle { queue: queue.clone(), conn: 1, req: 1 };
+        handle_b.send("second".into());
+        handle_a.send("first".into());
+        // The pushes rang the waker: a wait pops immediately.
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert!(events.iter().any(|e| e.token == poll::WAKER_TOKEN));
+        let drained = queue.drain();
+        assert_eq!(drained.len(), 2);
+        assert_eq!(drained[0].msg, "second");
+        assert_eq!(drained[1].req, 0);
+        assert!(queue.drain().is_empty());
+    }
+
+    #[test]
+    fn pending_queue_releases_replies_in_request_order() {
+        // Out-of-order completions (two shards finishing at different
+        // speeds) must still leave the socket in request order.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _client = TcpStream::connect(addr).unwrap();
+        let (stream, _) = listener.accept().unwrap();
+        stream.set_nonblocking(true).unwrap();
+        let mut conn = Conn::new(stream, 1);
+        for req in 0..3u64 {
+            conn.pending.push_back(Pending {
+                req,
+                deadline: Instant::now() + REPLY_TIMEOUT,
+                state: PendingState::Waiting,
+            });
+            conn.next_req += 1;
+        }
+        // Reply 2 lands first: nothing can be promoted yet.
+        conn.pending[2].state = PendingState::Done("r2".into());
+        assert_eq!(conn.promote_done_replies(), 0);
+        assert!(conn.write_buf.is_empty());
+        // Reply 0 lands: only the done prefix (r0) ships.
+        conn.pending[0].state = PendingState::Done("r0".into());
+        assert_eq!(conn.promote_done_replies(), 1);
+        assert_eq!(conn.write_buf, b"r0\n");
+        // Reply 1 completes the prefix: r1 then r2, in order.
+        conn.pending[0].state = PendingState::Done("r1".into());
+        assert_eq!(conn.promote_done_replies(), 2);
+        assert_eq!(conn.write_buf, b"r0\nr1\nr2\n");
+        assert!(conn.pending.is_empty());
+    }
+
+    #[test]
+    fn close_after_req_marks_conn_for_close_once_promoted() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _client = TcpStream::connect(addr).unwrap();
+        let (stream, _) = listener.accept().unwrap();
+        let mut conn = Conn::new(stream, 1);
+        conn.pending.push_back(Pending {
+            req: 0,
+            deadline: Instant::now() + REPLY_TIMEOUT,
+            state: PendingState::Waiting,
+        });
+        conn.next_req = 1;
+        conn.close_after_req = Some(0);
+        assert_eq!(conn.promote_done_replies(), 0);
+        assert!(!conn.close_when_flushed, "ack not yet delivered");
+        conn.pending[0].state = PendingState::Done("ack".into());
+        assert_eq!(conn.promote_done_replies(), 1);
+        assert!(conn.close_when_flushed, "conn closes once the ack is queued");
+    }
+}

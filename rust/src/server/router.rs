@@ -8,7 +8,9 @@
 //! fan out to every shard and come back as one merged object; shutdown
 //! fans out so every executor drains.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, SendError, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -39,6 +41,12 @@ pub(crate) fn partition_budget(total: usize, shard: usize, shards: usize) -> usi
 }
 
 const STATS_UNAVAILABLE: &str = "{\"ok\":false,\"error\":\"stats_unavailable\"}";
+/// Concurrent merged-stats collectors (each is one short-lived thread
+/// that may block up to 30 s on a slow shard). Requests over the cap
+/// fail closed with `stats_unavailable` instead of spawning without
+/// bound — stats bypass per-shard admission control, so this is the
+/// only thing stopping one pipelining client from exhausting threads.
+const STATS_FANOUT_LIMIT: usize = 32;
 /// Reply for a request routed to a shard whose executor is gone (its
 /// channel is closed) — either it already drained during a shutdown,
 /// or its backend factory failed at startup. Distinct from the
@@ -58,6 +66,9 @@ pub(crate) struct Router {
     session_ttl: Option<Duration>,
     max_pending: usize,
     eviction: EvictionKind,
+    /// Live merged-stats collector threads (shared across clones),
+    /// bounded by [`STATS_FANOUT_LIMIT`].
+    stats_inflight: Arc<AtomicUsize>,
 }
 
 impl Router {
@@ -69,12 +80,17 @@ impl Router {
             session_ttl: cfg.session_ttl,
             max_pending: cfg.max_pending,
             eviction: cfg.eviction,
+            stats_inflight: Arc::new(AtomicUsize::new(0)),
         }
     }
 
-    /// Route one request; the executor (or the router itself, for
-    /// merged stats) answers on `reply`. Returns false when the target
-    /// executor is gone and the connection should close.
+    /// Route one request; the executor (or the router, for merged
+    /// stats) answers on `reply`. Returns false when the target
+    /// executor is gone and the connection should close. Never blocks:
+    /// shard sends are unbounded channel pushes and the merged-stats
+    /// collection runs on its own short-lived thread, so the reactor's
+    /// event loop (which dispatches inline) is never stalled behind a
+    /// slow shard.
     pub(crate) fn dispatch(&self, req: Request, reply: Reply) -> bool {
         let n = self.shards.len();
         if let Some(session) = req.session() {
@@ -88,11 +104,27 @@ impl Router {
             };
         }
         match req {
-            Request::Stats if n == 1 => match self.shards[0].send((Request::Stats, reply)) {
-                Ok(()) => true,
-                Err(SendError((_, reply))) => reply.send(STATS_UNAVAILABLE.into()).is_ok(),
-            },
-            Request::Stats => self.merged_stats(reply),
+            Request::Stats { detail } => {
+                if n == 1 {
+                    let req = Request::Stats { detail };
+                    match self.shards[0].send((req, reply)) {
+                        Ok(()) => true,
+                        Err(SendError((_, reply))) => reply.send(STATS_UNAVAILABLE.into()).is_ok(),
+                    }
+                } else {
+                    if self.stats_inflight.fetch_add(1, Ordering::SeqCst) >= STATS_FANOUT_LIMIT {
+                        self.stats_inflight.fetch_sub(1, Ordering::SeqCst);
+                        return reply.send(STATS_UNAVAILABLE.into()).is_ok();
+                    }
+                    let router = self.clone();
+                    std::thread::spawn(move || {
+                        let ok = router.merged_stats(detail, reply);
+                        router.stats_inflight.fetch_sub(1, Ordering::SeqCst);
+                        ok
+                    });
+                    true
+                }
+            }
             Request::Shutdown => {
                 // Every executor must drain; the serve loop acks each
                 // requester once ALL shards have drained and the
@@ -111,7 +143,7 @@ impl Router {
     /// Fan a stats request to every shard and reply with the merged
     /// view. Fails closed: a missing or unparsable shard yields
     /// `stats_unavailable` rather than a silently partial answer.
-    fn merged_stats(&self, reply: Reply) -> bool {
+    fn merged_stats(&self, detail: bool, reply: Reply) -> bool {
         // Fan out to every shard BEFORE collecting, under one shared
         // deadline: total latency is the slowest shard (bounded at
         // 30 s, inside the connection's 60 s reply timeout), not the
@@ -119,7 +151,7 @@ impl Router {
         let mut pending = Vec::with_capacity(self.shards.len());
         for tx in &self.shards {
             let (part_tx, part_rx) = channel();
-            if tx.send((Request::Stats, part_tx)).is_err() {
+            if tx.send((Request::Stats { detail }, Reply::channel(part_tx))).is_err() {
                 return reply.send(STATS_UNAVAILABLE.into()).is_ok();
             }
             pending.push(part_rx);
@@ -133,7 +165,7 @@ impl Router {
                 Err(_) => return reply.send(STATS_UNAVAILABLE.into()).is_ok(),
             }
         }
-        let merged = match self.merge_stats(&parts) {
+        let merged = match self.merge_stats(&parts, detail) {
             Ok(m) => m,
             Err(_) => STATS_UNAVAILABLE.into(),
         };
@@ -144,8 +176,10 @@ impl Router {
     /// embeds each shard's own stats verbatim so operators get both
     /// views from one request. `peak_kv_bytes` sums per-shard peaks (an
     /// upper bound on the true global peak, since shards peak at
-    /// different times).
-    fn merge_stats(&self, parts: &[String]) -> Result<String> {
+    /// different times). With `detail`, the shards' `sessions_detail`
+    /// arrays are concatenated (routing keeps a session on one shard,
+    /// so the concatenation has no duplicates) and re-sorted by id.
+    fn merge_stats(&self, parts: &[String], detail: bool) -> Result<String> {
         let parsed: Vec<Json> = parts.iter().map(|p| Json::parse(p)).collect::<Result<_>>()?;
         let sum = |key: &str| -> Result<usize> {
             let mut total = 0usize;
@@ -154,12 +188,25 @@ impl Router {
             }
             Ok(total)
         };
+        let detail_field = if detail {
+            let mut rows: Vec<(String, String)> = Vec::new();
+            for p in &parsed {
+                for s in p.get("sessions_detail")?.arr()? {
+                    rows.push((s.get("id")?.str()?.to_string(), s.to_string()));
+                }
+            }
+            rows.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+            let joined: Vec<String> = rows.into_iter().map(|(_, row)| row).collect();
+            format!("\"sessions_detail\":[{}],", joined.join(","))
+        } else {
+            String::new()
+        };
         Ok(format!(
             "{{\"ok\":true,\"kind\":\"stats\",\"shards\":{},\"eviction\":{},\"sessions\":{},\
              \"kv_bytes\":{},\"kv_budget_bytes\":{},\"session_ttl_secs\":{},\"max_pending\":{},\
              \"pending\":{},\"waiting\":{},\"requests\":{},\"compressions\":{},\"inferences\":{},\
              \"batches\":{},\"rejected_overload\":{},\"sessions_evicted\":{},\
-             \"sessions_reaped\":{},\"priority_overrides\":{},\"peak_kv_bytes\":{},\
+             \"sessions_reaped\":{},\"priority_overrides\":{},\"peak_kv_bytes\":{},{detail_field}\
              \"per_shard\":[{}]}}",
             self.shards.len(),
             escape(self.eviction.name()),
@@ -244,7 +291,7 @@ mod tests {
         };
         let (reply_tx, reply_rx) = channel();
         let req = Request::Context { session: dead, tokens: vec![1] };
-        assert!(router.dispatch(req, reply_tx), "connection must stay open");
+        assert!(router.dispatch(req, Reply::channel(reply_tx)), "connection must stay open");
         let resp = Json::parse(&reply_rx.recv().unwrap()).unwrap();
         assert_eq!(resp.get("error").unwrap().str().unwrap(), "shard_unavailable");
         // A live shard still routes normally.
@@ -260,7 +307,7 @@ mod tests {
         };
         let (reply_tx, _reply_rx) = channel();
         let q = Request::Query { session: alive, tokens: vec![2], topk: 1 };
-        assert!(router.dispatch(q, reply_tx));
+        assert!(router.dispatch(q, Reply::channel(reply_tx)));
     }
 
     #[test]
@@ -285,7 +332,7 @@ mod tests {
                  \"peak_kv_bytes\":{kv}}}"
             )
         };
-        let merged = router.merge_stats(&[shard(0, 3, 100), shard(1, 5, 200)]).unwrap();
+        let merged = router.merge_stats(&[shard(0, 3, 100), shard(1, 5, 200)], false).unwrap();
         let j = Json::parse(&merged).expect("merged stats must be valid JSON");
         assert_eq!(j.get("shards").unwrap().usize().unwrap(), 2);
         assert_eq!(j.get("sessions").unwrap().usize().unwrap(), 8);
@@ -295,11 +342,72 @@ mod tests {
         assert_eq!(j.get("sessions_evicted").unwrap().usize().unwrap(), 4);
         assert_eq!(j.get("priority_overrides").unwrap().usize().unwrap(), 6);
         assert_eq!(j.get("eviction").unwrap().str().unwrap(), "oldest");
+        assert!(j.opt("sessions_detail").is_none(), "detail must be opt-in");
         let per = j.get("per_shard").unwrap().arr().unwrap();
         assert_eq!(per.len(), 2);
         assert_eq!(per[1].get("shard").unwrap().usize().unwrap(), 1);
         assert_eq!(per[1].get("sessions").unwrap().usize().unwrap(), 5);
         // A malformed shard part fails closed instead of mis-summing.
-        assert!(router.merge_stats(&[shard(0, 1, 1), "garbage".into()]).is_err());
+        assert!(router.merge_stats(&[shard(0, 1, 1), "garbage".into()], false).is_err());
+    }
+
+    #[test]
+    fn merged_stats_fanout_is_bounded() {
+        // One client pipelining stats must not spawn collector threads
+        // without bound: over the cap the router fails closed, and a
+        // refusal does not leak a slot.
+        use crate::coordinator::session::SessionPolicy;
+        let cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(2));
+        let (tx0, _rx0) = channel();
+        let (tx1, _rx1) = channel();
+        let router = Router::new(vec![tx0, tx1], &cfg);
+        router.stats_inflight.store(STATS_FANOUT_LIMIT, Ordering::SeqCst);
+        let (reply_tx, reply_rx) = channel();
+        assert!(router.dispatch(Request::Stats { detail: false }, Reply::channel(reply_tx)));
+        let resp = Json::parse(&reply_rx.recv().unwrap()).unwrap();
+        assert_eq!(resp.get("error").unwrap().str().unwrap(), "stats_unavailable");
+        assert_eq!(
+            router.stats_inflight.load(Ordering::SeqCst),
+            STATS_FANOUT_LIMIT,
+            "a refused request must not leak an in-flight slot"
+        );
+    }
+
+    #[test]
+    fn merged_stats_concatenates_and_sorts_session_detail() {
+        use crate::coordinator::session::SessionPolicy;
+        let cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(2));
+        let (tx0, _rx0) = channel();
+        let (tx1, _rx1) = channel();
+        let router = Router::new(vec![tx0, tx1], &cfg);
+        let shard = |i: usize, detail: &str| {
+            format!(
+                "{{\"ok\":true,\"kind\":\"stats\",\"shard\":{i},\"sessions\":1,\"kv_bytes\":8,\
+                 \"pending\":0,\"waiting\":0,\"requests\":1,\"compressions\":1,\"inferences\":0,\
+                 \"batches\":1,\"rejected_overload\":0,\"sessions_evicted\":0,\
+                 \"sessions_reaped\":0,\"priority_overrides\":0,\"peak_kv_bytes\":8,\
+                 \"sessions_detail\":[{detail}]}}"
+            )
+        };
+        let row = |id: &str, t: usize| {
+            format!("{{\"id\":\"{id}\",\"t\":{t},\"kv_bytes\":8,\"age_ms\":10,\"idle_ms\":5}}")
+        };
+        // Shard order does not determine output order: rows re-sort by id.
+        let shard1_detail = format!("{},{}", row("beta", 1), row("mu", 2));
+        let parts = [shard(0, &row("zeta", 3)), shard(1, &shard1_detail)];
+        let merged = router.merge_stats(&parts, true).unwrap();
+        let j = Json::parse(&merged).expect("valid JSON");
+        let list = j.get("sessions_detail").unwrap().arr().unwrap();
+        let ids: Vec<&str> = list.iter().map(|s| s.get("id").unwrap().str().unwrap()).collect();
+        assert_eq!(ids, vec!["beta", "mu", "zeta"]);
+        assert_eq!(list[0].get("t").unwrap().usize().unwrap(), 1);
+        assert_eq!(list[2].get("t").unwrap().usize().unwrap(), 3);
+        // Without the per-shard detail arrays, a detail merge fails
+        // closed (stats_unavailable upstream) instead of fabricating.
+        let bare = "{\"ok\":true,\"sessions\":1,\"kv_bytes\":8,\"pending\":0,\"waiting\":0,\
+                    \"requests\":1,\"compressions\":1,\"inferences\":0,\"batches\":1,\
+                    \"rejected_overload\":0,\"sessions_evicted\":0,\"sessions_reaped\":0,\
+                    \"priority_overrides\":0,\"peak_kv_bytes\":8}";
+        assert!(router.merge_stats(&[bare.to_string()], true).is_err());
     }
 }

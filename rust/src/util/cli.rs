@@ -46,6 +46,20 @@ impl Args {
         self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
     }
 
+    /// Flag value, falling back to an environment variable, then to a
+    /// default. Serving flags use this so one knob works both ways:
+    /// `--reactor` beats `CCM_SERVE_REACTOR` (the CI matrix variable),
+    /// which beats the built-in default.
+    pub fn str_env(&self, key: &str, env: &str, default: &str) -> String {
+        if let Some(v) = self.flags.get(key) {
+            return v.clone();
+        }
+        match std::env::var(env) {
+            Ok(v) if !v.is_empty() => v,
+            _ => default.to_string(),
+        }
+    }
+
     pub fn require(&self, key: &str) -> Result<&str> {
         self.flags
             .get(key)
@@ -122,6 +136,21 @@ mod tests {
         assert_eq!(a.usize("missing", 7).unwrap(), 7);
         assert!(a.usize("x", 0).is_err());
         assert!(a.require("nope").is_err());
+    }
+
+    #[test]
+    fn str_env_prefers_flag_then_default() {
+        // Deliberately no std::env::set_var here: unit tests run
+        // multi-threaded and other tests read the environment (e.g.
+        // ServerConfig::new reads CCM_SERVE_REACTOR), and concurrent
+        // setenv/getenv is undefined behavior in glibc. The env-beats-
+        // default branch is exercised for real by the CI host-suite
+        // matrix, which exports CCM_SERVE_REACTOR process-wide.
+        let env = "CCM_TEST_CLI_STR_ENV_UNSET";
+        let a = Args::parse(&argv(&["--reactor", "threads"])).unwrap();
+        assert_eq!(a.str_env("reactor", env, "auto"), "threads", "flag wins");
+        let b = Args::parse(&argv(&[])).unwrap();
+        assert_eq!(b.str_env("reactor", env, "auto"), "auto", "default when flag+env absent");
     }
 
     #[test]

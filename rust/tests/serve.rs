@@ -272,6 +272,214 @@ fn query_is_not_stuck_behind_unrelated_backlog() {
 }
 
 #[test]
+fn overlong_line_is_refused_and_connection_survives() {
+    // Slow-loris hardening: a peer drip-feeding a line that never ends
+    // must not pin buffer memory. Past the cap the server answers
+    // line_too_long, drops the buffered bytes, and resynchronises at
+    // the next newline — the connection stays usable.
+    let (addr, server) = start_server(sim(), |cfg| cfg.max_line_bytes = 1024);
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    // 8 KiB of garbage with no newline (8x the cap), then the newline.
+    writer.write_all(&vec![b'x'; 8 * 1024]).unwrap();
+    writer.flush().unwrap();
+    writer.write_all(b"\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    assert_eq!(j.get("ok").unwrap(), &Json::Bool(false));
+    assert_eq!(j.get("error").unwrap().str().unwrap(), "line_too_long");
+    // Framing recovered: a normal request on the same connection works.
+    writer.write_all(b"{\"op\":\"query\",\"session\":\"ok\",\"tokens\":[7],\"topk\":1}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    assert_eq!(j.get("ok").unwrap(), &Json::Bool(true), "{line}");
+    let next = j.get("next").unwrap().arr().unwrap();
+    assert_eq!(next[0].arr().unwrap()[0].i64().unwrap(), 7);
+    // A line at exactly the cap still parses (the cap is a bound, not
+    // an off-by-one): pad a valid request with leading spaces.
+    let body = "{\"op\":\"query\",\"session\":\"pad\",\"tokens\":[5],\"topk\":1}";
+    let padded = format!("{}{body}\n", " ".repeat(1024 - body.len()));
+    writer.write_all(padded.as_bytes()).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(Json::parse(line.trim()).unwrap().get("ok").unwrap(), &Json::Bool(true));
+    let mut admin = Client::connect(&addr).unwrap();
+    wait_drained(&mut admin, Duration::from_secs(5));
+    admin.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn max_conns_refuses_excess_connections_and_recovers() {
+    let (addr, server) = start_server(sim(), |cfg| cfg.max_conns = 2);
+    let mut c1 = Client::connect(&addr).unwrap();
+    let mut c2 = Client::connect(&addr).unwrap();
+    // A round-trip on both guarantees the server has registered them.
+    assert_eq!(top1(&c1.query("a", &[1], 1).unwrap()), 1);
+    assert_eq!(top1(&c2.query("b", &[2], 1).unwrap()), 2);
+    // Third connection: accepted at the TCP level, then refused with
+    // one proactive line and closed — no request needed.
+    {
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("error").unwrap().str().unwrap(), "too_many_connections");
+        let mut eof = String::new();
+        assert_eq!(reader.read_line(&mut eof).unwrap(), 0, "refused conn must be closed");
+    }
+    // Closing a connection frees its slot; the server notices the EOF
+    // asynchronously, so poll until a fresh connection is admitted.
+    drop(c1);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut admitted = loop {
+        let stream = TcpStream::connect(&addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_millis(300))).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        writer
+            .write_all(b"{\"op\":\"query\",\"session\":\"c\",\"tokens\":[3],\"topk\":1}\n")
+            .unwrap();
+        let mut line = String::new();
+        if let Ok(len) = reader.read_line(&mut line) {
+            if len > 0 {
+                let j = Json::parse(line.trim()).unwrap();
+                if j.get("ok").unwrap() == &Json::Bool(true) {
+                    break (reader, writer);
+                }
+                // Still too_many_connections: the slot is not free yet.
+            }
+        }
+        assert!(Instant::now() < deadline, "slot never freed after closing a connection");
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    // The admitted connection is a full citizen: shut the server down
+    // through it (the ack arrives after drain + port release).
+    admitted.1.write_all(b"{\"op\":\"shutdown\"}\n").unwrap();
+    admitted.0.get_ref().set_read_timeout(None).unwrap();
+    let mut ack = String::new();
+    admitted.0.read_line(&mut ack).unwrap();
+    assert_eq!(Json::parse(ack.trim()).unwrap().get("ok").unwrap(), &Json::Bool(true));
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn slow_reader_receives_every_reply_in_order() {
+    // Partial-write continuation: a client floods queries on one
+    // connection while reading slowly. Replies (~full-vocab topk, far
+    // more bytes than the socket buffers hold) pile into the server's
+    // per-connection write buffer; every reply must still arrive, in
+    // request order. A writer thread feeds the flood so the slow read
+    // loop and the request stream are concurrent, like a real client.
+    let (addr, server) = start_server(sim(), |cfg| {
+        cfg.max_pending = 20_000;
+    });
+    let vocab = Manifest::toy().model.vocab;
+    let n = 2000usize;
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let feeder = std::thread::spawn(move || {
+        for i in 0..n {
+            let tok = (i % (vocab - 1)) + 1; // 1..vocab: distinct from the mem-bump at 0
+            let line = format!(
+                "{{\"op\":\"query\",\"session\":\"bp\",\"tokens\":[{tok}],\"topk\":{vocab}}}\n"
+            );
+            writer.write_all(line.as_bytes()).unwrap();
+        }
+        writer.flush().unwrap();
+        writer
+    });
+    for i in 0..n {
+        if i % 50 == 0 {
+            // Slow consumer: let the server's write buffer back up.
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(!line.trim().is_empty(), "reply {i} missing");
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("ok").unwrap(), &Json::Bool(true), "reply {i}: {line}");
+        let next = j.get("next").unwrap().arr().unwrap();
+        assert_eq!(next.len(), vocab, "reply {i} carries the full distribution");
+        let top = next[0].arr().unwrap()[0].i64().unwrap();
+        assert_eq!(top, ((i % (vocab - 1)) + 1) as i64, "reply {i} out of order");
+    }
+    drop(feeder.join().expect("feeder thread"));
+    let mut admin = Client::connect(&addr).unwrap();
+    wait_drained(&mut admin, Duration::from_secs(10));
+    admin.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn stats_detail_reports_per_session_accounting() {
+    let (addr, server) = start_server(sim(), |_| {});
+    let mut client = Client::connect(&addr).unwrap();
+    client.add_context("alpha", &[1, 2]).unwrap();
+    client.add_context("alpha", &[3, 4]).unwrap();
+    client.add_context("beta", &[5, 6]).unwrap();
+    let mut admin = Client::connect(&addr).unwrap();
+    let stats = wait_drained(&mut admin, Duration::from_secs(5));
+    assert!(stats.opt("sessions_detail").is_none(), "detail must be opt-in");
+    let detailed = admin.stats_detailed().unwrap();
+    let list = detailed.get("sessions_detail").unwrap().arr().unwrap();
+    assert_eq!(list.len(), 2);
+    assert_eq!(list[0].get("id").unwrap().str().unwrap(), "alpha");
+    assert_eq!(list[0].get("t").unwrap().usize().unwrap(), 2);
+    assert_eq!(list[1].get("id").unwrap().str().unwrap(), "beta");
+    assert_eq!(list[1].get("t").unwrap().usize().unwrap(), 1);
+    // Per-session kv sums to the aggregate in the same response.
+    let kv_sum: usize = list.iter().map(|s| s.get("kv_bytes").unwrap().usize().unwrap()).sum();
+    assert_eq!(kv_sum, detailed.get("kv_bytes").unwrap().usize().unwrap());
+    for s in list {
+        let age = s.get("age_ms").unwrap().usize().unwrap();
+        let idle = s.get("idle_ms").unwrap().usize().unwrap();
+        assert!(idle <= age, "idle {idle} > age {age}");
+    }
+    admin.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn stats_detail_merges_sessions_across_shards() {
+    let shards = 2;
+    let (addr, server) = start_sharded((0..shards).map(|_| sim()).collect(), |_| {});
+    let mut client = Client::connect(&addr).unwrap();
+    let on0 = ids_on_shard(0, shards, 2);
+    let on1 = ids_on_shard(1, shards, 2);
+    for id in on0.iter().chain(on1.iter()) {
+        client.add_context(id, &[1, 2]).unwrap();
+    }
+    let mut admin = Client::connect(&addr).unwrap();
+    wait_drained(&mut admin, Duration::from_secs(5));
+    let detailed = admin.stats_detailed().unwrap();
+    let list = detailed.get("sessions_detail").unwrap().arr().unwrap();
+    assert_eq!(list.len(), 4, "merged view must span all shards");
+    let mut expected: Vec<String> = on0.iter().chain(on1.iter()).cloned().collect();
+    expected.sort();
+    let got: Vec<String> =
+        list.iter().map(|s| s.get("id").unwrap().str().unwrap().to_string()).collect();
+    assert_eq!(got, expected, "merged rows sort by id across shards");
+    // Each shard's own embedded stats carry only its residents.
+    for p in detailed.get("per_shard").unwrap().arr().unwrap() {
+        let shard = p.get("shard").unwrap().usize().unwrap();
+        let own = p.get("sessions_detail").unwrap().arr().unwrap();
+        assert_eq!(own.len(), 2, "shard {shard}");
+        for s in own {
+            let id = s.get("id").unwrap().str().unwrap();
+            assert_eq!(ccm::server::shard_for(id, shards), shard, "{id}");
+        }
+    }
+    admin.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
 fn graceful_shutdown_drains_work_and_releases_port() {
     let mut slow = sim();
     slow.compress_delay = Duration::from_millis(10);
