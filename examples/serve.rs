@@ -4,7 +4,7 @@
 //!
 //!   cargo run --release --example serve \
 //!     [-- --config test --clients 4 --shards 2 --eviction lru \
-//!         --reactor epoll --max-conns 16384]
+//!         --reactor epoll --reactors auto --max-conns 16384]
 
 use std::sync::mpsc::channel;
 
@@ -29,6 +29,10 @@ fn main() -> Result<()> {
         "auto" => None,
         other => Some(ReactorMode::parse(other)?),
     };
+    // Epoll-mode reactor threads (SO_REUSEPORT accept sharding).
+    let reactors = args
+        .usize_env_auto("reactors", "CCM_SERVE_REACTORS", ccm::server::auto_reactors(), "auto")?
+        .max(1);
     let max_conns = args.usize("max-conns", 0)?;
 
     // Server thread owns the runtime(s); with --shards N each executor
@@ -50,6 +54,7 @@ fn main() -> Result<()> {
         if let Some(mode) = reactor {
             cfg.reactor = mode;
         }
+        cfg.reactors = reactors;
         if max_conns > 0 {
             cfg.max_conns = max_conns;
         }
@@ -65,7 +70,7 @@ fn main() -> Result<()> {
     });
     let addr = ready_rx.recv()?;
     println!(
-        "server up at {addr} ({shards} shard(s), eviction {}, reactor {}); \
+        "server up at {addr} ({shards} shard(s), eviction {}, reactor {} x{reactors}); \
          {n_clients} clients x {rounds}",
         eviction.name(),
         reactor.map_or("auto", ReactorMode::name)

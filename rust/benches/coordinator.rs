@@ -250,6 +250,9 @@ fn main() -> anyhow::Result<()> {
         cfg.max_wait = Duration::from_millis(1);
         cfg.max_pending = 8192;
         cfg.reactor = ReactorMode::Epoll;
+        // Multi-reactor accept sharding (SO_REUSEPORT where available):
+        // the 256-connection fan-in spread over two event loops.
+        cfg.reactors = 2;
         cfg.max_conns = 2048;
         let (ready_tx, ready_rx) = channel();
         let server = std::thread::spawn(move || {

@@ -330,9 +330,27 @@ impl SessionManager {
     /// Saturating arithmetic: a `now` taken before a concurrent touch
     /// degrades to zero, never panics.
     pub fn snapshot(&self, now: Instant) -> Vec<SessionStat> {
+        self.snapshot_filtered(now, None, None)
+    }
+
+    /// [`snapshot`](Self::snapshot) restricted to ids starting with
+    /// `prefix` (when set) and truncated to the first `limit` rows by
+    /// id (when set) — the stats pagination knobs, so a fleet holding
+    /// 100k+ resident sessions per process can page through the detail
+    /// view instead of serializing all of it per request.
+    pub fn snapshot_filtered(
+        &self,
+        now: Instant,
+        prefix: Option<&str>,
+        limit: Option<usize>,
+    ) -> Vec<SessionStat> {
         let mut stats: Vec<SessionStat> = self
             .sessions
             .values()
+            .filter(|s| match prefix {
+                Some(p) => s.id.starts_with(p),
+                None => true,
+            })
             .map(|s| SessionStat {
                 id: s.id.clone(),
                 t: s.t,
@@ -342,6 +360,9 @@ impl SessionManager {
             })
             .collect();
         stats.sort_unstable_by(|a, b| a.id.cmp(&b.id));
+        if let Some(limit) = limit {
+            stats.truncate(limit);
+        }
         stats
     }
 }
@@ -555,6 +576,31 @@ mod tests {
             assert!(s.age >= Duration::from_millis(50), "age measured from creation");
             assert!(s.idle <= s.age, "a session cannot be idle longer than it exists");
         }
+    }
+
+    #[test]
+    fn snapshot_filtered_applies_prefix_then_limit_by_id() {
+        let m = manifest();
+        let mut sm = SessionManager::with_policy(&m, SessionPolicy::concat(2));
+        for id in ["user-3", "user-1", "admin-1", "user-2"] {
+            sm.get_or_create(id);
+        }
+        let now = Instant::now();
+        // Prefix restricts; rows stay id-sorted.
+        let stats = sm.snapshot_filtered(now, Some("user-"), None);
+        let ids: Vec<&str> = stats.iter().map(|s| s.id.as_str()).collect();
+        assert_eq!(ids, vec!["user-1", "user-2", "user-3"]);
+        // Limit truncates AFTER the sort: the first N by id, not an
+        // arbitrary hash-order subset.
+        let stats = sm.snapshot_filtered(now, Some("user-"), Some(2));
+        let ids: Vec<&str> = stats.iter().map(|s| s.id.as_str()).collect();
+        assert_eq!(ids, vec!["user-1", "user-2"]);
+        // No prefix match: empty, not an error.
+        assert!(sm.snapshot_filtered(now, Some("zzz"), None).is_empty());
+        // A zero limit is honored (count-only probes stay cheap).
+        assert!(sm.snapshot_filtered(now, None, Some(0)).is_empty());
+        // Unfiltered delegation matches snapshot().
+        assert_eq!(sm.snapshot(now).len(), 4);
     }
 
     #[test]

@@ -156,19 +156,24 @@ pub fn serve_backend_factories(
 /// `ccm serve --port 7878 --method ccm-concat [--shards 4]
 /// [--eviction oldest|lru|largest-bytes] [--max-pending 256]
 /// [--kv-budget-mb 512] [--session-ttl-secs 600]
-/// [--reactor auto|threads|epoll] [--max-conns 16384]`
+/// [--reactor auto|threads|epoll] [--reactors auto|N]
+/// [--max-conns 16384]`
 ///
 /// With `--shards N > 1`, each shard's executor thread owns a full
 /// runtime + engine (PJRT runtimes are thread-bound); sessions route
 /// to shards by a stable hash of the session id, and the KV budget is
 /// partitioned across shards.
 ///
-/// `--reactor` picks the connection front-end: `epoll` multiplexes all
-/// connections on one polling reactor thread (the 10k-connection
-/// path), `threads` keeps one blocking reader thread per connection.
-/// `auto` (the default) resolves `CCM_SERVE_REACTOR`, then the
-/// platform default (epoll on Linux). `--max-conns` bounds accepted
-/// connections in either mode.
+/// `--reactor` picks the connection front-end: `epoll` multiplexes
+/// connections on polling reactor threads (the 10k-connection path),
+/// `threads` keeps one blocking reader thread per connection. `auto`
+/// (the default) resolves `CCM_SERVE_REACTOR`, then the platform
+/// default (epoll on Linux). `--reactors` shards the epoll front-end
+/// into N reactor threads with SO_REUSEPORT accept sharding (falling
+/// back to single-listener round-robin handoff where unavailable);
+/// `auto` (the default, also via `CCM_SERVE_REACTORS`) resolves to
+/// min(4, cores). `--max-conns` bounds accepted connections globally
+/// in every mode.
 pub fn cli_serve(args: &Args) -> Result<()> {
     let config = args.str("config", "main");
     let manifest = model::Manifest::load(&model::artifact_dir(&config))?;
@@ -192,6 +197,9 @@ pub fn cli_serve(args: &Args) -> Result<()> {
     if reactor != "auto" {
         cfg.reactor = server::ReactorMode::parse(&reactor)?;
     }
+    cfg.reactors = args
+        .usize_env_auto("reactors", "CCM_SERVE_REACTORS", server::auto_reactors(), "auto")?
+        .max(1);
     cfg.max_conns = args.usize("max-conns", cfg.max_conns)?;
     let kv_budget_mb = args.usize("kv-budget-mb", 0)?;
     if kv_budget_mb > 0 {

@@ -17,7 +17,7 @@ use crate::coordinator::batcher::WorkKind;
 use crate::coordinator::Coordinator;
 use crate::model::manifest::Manifest;
 use crate::server::router::partition_budget;
-use crate::server::{Reply, Request, ServerConfig};
+use crate::server::{Reply, Request, ServerConfig, StatsQuery};
 use crate::util::json::escape;
 
 /// A query whose batch has not executed yet.
@@ -236,8 +236,8 @@ impl<'a> Executor<'a> {
                 let seq = self.coord.query(&session, tokens);
                 self.waiting.push_back(WaitingQuery { seq, reply, input_len, topk });
             }
-            Request::Stats { detail } => {
-                let _ = reply.send(self.stats_json(detail));
+            Request::Stats(q) => {
+                let _ = reply.send(self.stats_json(&q));
             }
             Request::Shutdown => {
                 // Every shutdown requester is acked only once the drain
@@ -284,21 +284,29 @@ impl<'a> Executor<'a> {
     /// configured limits (KV budget slice, idle TTL, pending bound,
     /// eviction policy) so operators can compute headroom without
     /// reading CLI flags. With `detail`, a `sessions_detail` array
-    /// carries per-session accounting (id, t, kv_bytes, age/idle).
-    fn stats_json(&self, detail: bool) -> String {
+    /// carries per-session accounting (id, t, kv_bytes, age/idle),
+    /// optionally bounded by the query's `prefix`/`limit`. When the
+    /// router injected `per_reactor` rows (single-shard epoll serving),
+    /// they are embedded verbatim — the executor itself never sees the
+    /// transport layer.
+    fn stats_json(&self, q: &StatsQuery) -> String {
         let m = &self.coord.metrics;
-        let detail_field = if detail {
-            format!("\"sessions_detail\":{},", self.sessions_detail_json())
+        let detail_field = if q.detail {
+            format!("\"sessions_detail\":{},", self.sessions_detail_json(q))
         } else {
             String::new()
+        };
+        let reactor_field = match &q.per_reactor {
+            Some(rows) => format!("\"per_reactor\":[{rows}],"),
+            None => String::new(),
         };
         format!(
             "{{\"ok\":true,\"kind\":\"stats\",\"shard\":{},\"eviction\":{},\"sessions\":{},\
              \"kv_bytes\":{},\"kv_budget_bytes\":{},\"session_ttl_secs\":{},\"max_pending\":{},\
              \"pending\":{},\"waiting\":{},\"requests\":{},\"compressions\":{},\"inferences\":{},\
              \"batches\":{},\"rejected_overload\":{},\"sessions_evicted\":{},\
-             \"sessions_reaped\":{},\"priority_overrides\":{},\"peak_kv_bytes\":{},{detail_field}\
-             \"report\":{}}}",
+             \"sessions_reaped\":{},\"priority_overrides\":{},\"peak_kv_bytes\":{},\
+             {reactor_field}{detail_field}\"report\":{}}}",
             self.shard,
             escape(self.coord.sessions.eviction_name()),
             self.coord.sessions.len(),
@@ -324,13 +332,14 @@ impl<'a> Executor<'a> {
     /// Per-session accounting rows, sorted by session id: the ROADMAP
     /// open item "surface per-session stats (age, kv_bytes, last_used)"
     /// — ages as integer milliseconds so the stress gate can assert
-    /// session accounting after churn without float parsing.
-    fn sessions_detail_json(&self) -> String {
+    /// session accounting after churn without float parsing. The
+    /// query's `prefix`/`limit` bound the view for large fleets.
+    fn sessions_detail_json(&self, q: &StatsQuery) -> String {
         let now = Instant::now();
         let rows: Vec<String> = self
             .coord
             .sessions
-            .snapshot(now)
+            .snapshot_filtered(now, q.prefix.as_deref(), q.limit)
             .into_iter()
             .map(|s| {
                 format!(
@@ -458,7 +467,7 @@ mod tests {
         assert_eq!(refusal.get("error").unwrap().str().unwrap(), "shutting_down");
         assert_eq!(ex.coord.pending(), 0, "refused work must not be queued");
         // Stats are still served during the drain.
-        ex.admit(Request::Stats { detail: false }, reply_to(&tx));
+        ex.admit(Request::Stats(StatsQuery::default()), reply_to(&tx));
         let stats = recv_json(&rx);
         assert_eq!(stats.get("kind").unwrap().str().unwrap(), "stats");
         // A second shutdown during the drain is deferred too: the ack
@@ -482,7 +491,7 @@ mod tests {
         });
         ex.coord.add_context("a", vec![1, 2]);
         ex.coord.run_until_idle().unwrap();
-        let s = ex.stats_json(false);
+        let s = ex.stats_json(&StatsQuery::default());
         let j = Json::parse(&s).expect("stats must be valid JSON");
         assert_eq!(j.get("shard").unwrap().usize().unwrap(), 0);
         assert_eq!(j.get("sessions").unwrap().usize().unwrap(), 1);
@@ -499,7 +508,7 @@ mod tests {
     #[test]
     fn stats_json_reports_null_limits_when_unconfigured() {
         let ex = toy_executor(|_| {});
-        let j = Json::parse(&ex.stats_json(false)).unwrap();
+        let j = Json::parse(&ex.stats_json(&StatsQuery::default())).unwrap();
         assert_eq!(j.get("kv_budget_bytes").unwrap(), &Json::Null);
         assert_eq!(j.get("session_ttl_secs").unwrap(), &Json::Null);
         assert_eq!(j.get("eviction").unwrap().str().unwrap(), "oldest");
@@ -516,10 +525,11 @@ mod tests {
         ex.coord.run_until_idle().unwrap();
 
         // Without detail the array is absent (response stays small).
-        let plain = Json::parse(&ex.stats_json(false)).unwrap();
+        let plain = Json::parse(&ex.stats_json(&StatsQuery::default())).unwrap();
         assert!(plain.opt("sessions_detail").is_none());
 
-        let j = Json::parse(&ex.stats_json(true)).expect("detail stats must be valid JSON");
+        let j = Json::parse(&ex.stats_json(&StatsQuery::detailed()))
+            .expect("detail stats must be valid JSON");
         let list = j.get("sessions_detail").unwrap().arr().unwrap();
         assert_eq!(list.len(), 3);
         let ids: Vec<&str> = list.iter().map(|s| s.get("id").unwrap().str().unwrap()).collect();
@@ -538,6 +548,47 @@ mod tests {
             let idle = s.get("idle_ms").unwrap().usize().unwrap();
             assert!(idle <= age, "idle {idle} > age {age}");
         }
+    }
+
+    #[test]
+    fn stats_detail_respects_prefix_limit_and_embeds_reactor_rows() {
+        let mut ex = toy_executor(|_| {});
+        for id in ["a1", "a2", "b1"] {
+            ex.coord.add_context(id, vec![1, 2]);
+        }
+        ex.coord.run_until_idle().unwrap();
+        // Prefix keeps only matching ids; counters still cover all.
+        let q = StatsQuery { detail: true, prefix: Some("a".into()), ..Default::default() };
+        let j = Json::parse(&ex.stats_json(&q)).unwrap();
+        let ids: Vec<&str> = j
+            .get("sessions_detail")
+            .unwrap()
+            .arr()
+            .unwrap()
+            .iter()
+            .map(|s| s.get("id").unwrap().str().unwrap())
+            .collect();
+        assert_eq!(ids, vec!["a1", "a2"]);
+        assert_eq!(j.get("sessions").unwrap().usize().unwrap(), 3, "counters stay global");
+        // Limit truncates to the first N rows by id.
+        let q = StatsQuery { detail: true, limit: Some(1), ..Default::default() };
+        let j = Json::parse(&ex.stats_json(&q)).unwrap();
+        let list = j.get("sessions_detail").unwrap().arr().unwrap();
+        assert_eq!(list.len(), 1);
+        assert_eq!(list[0].get("id").unwrap().str().unwrap(), "a1");
+        // Router-injected per_reactor rows are embedded verbatim.
+        let q = StatsQuery {
+            per_reactor: Some(
+                "{\"reactor\":0,\"conns\":1,\"accepted\":2,\"lines\":3,\"refusals\":0}".into(),
+            ),
+            ..Default::default()
+        };
+        let j = Json::parse(&ex.stats_json(&q)).unwrap();
+        let rows = j.get("per_reactor").unwrap().arr().unwrap();
+        assert_eq!(rows[0].get("accepted").unwrap().usize().unwrap(), 2);
+        // Without injection the field is absent.
+        let j = Json::parse(&ex.stats_json(&StatsQuery::default())).unwrap();
+        assert!(j.opt("per_reactor").is_none());
     }
 
     #[test]

@@ -18,21 +18,38 @@
 //! (`CCM_SERVE_REACTOR=threads|epoll` selects one for the whole test
 //! suite; the default is `epoll` on Linux, `threads` elsewhere):
 //!
-//! * **`epoll` (default on Linux)** — one reactor thread owns the
-//!   listener and every accepted connection in non-blocking mode,
+//! * **`epoll` (default on Linux)** — N reactor threads (`--reactors`,
+//!   default 1 for the library, `auto` = min(4, cores) for `ccm
+//!   serve`) own every accepted connection in non-blocking mode,
 //!   multiplexing readiness through a zero-dependency epoll wrapper
 //!   (`poll.rs`: raw `epoll_create1`/`epoll_ctl`/`epoll_wait` plus an
 //!   `eventfd` waker; a portable fallback scan loop keeps the mode
-//!   working off-Linux). Per connection the reactor keeps an explicit
-//!   state struct: a capped read buffer with incremental line framing,
-//!   a write buffer with partial-write continuation (reads pause while
-//!   a slow client's reply backlog exceeds 1 MiB — backpressure, not
-//!   unbounded growth), and a pending-reply queue that delivers
-//!   replies strictly in request order even when shards finish out of
-//!   order. Executor shards push replies into an eventfd-signalled
-//!   completion queue instead of blocking a per-connection thread.
+//!   working off-Linux, and `CCM_FORCE_FALLBACK_POLL=1` runs that scan
+//!   loop on Linux so CI exercises it). **Accept sharding:** with
+//!   `--reactors N > 1` each reactor binds its own `SO_REUSEPORT`
+//!   listener on the shared address and the kernel hash-balances
+//!   incoming connections across them; where the option is unavailable
+//!   (non-Linux, pre-3.9 kernels, or `CCM_FORCE_ACCEPT_HANDOFF=1`)
+//!   reactor 0 owns a single listener and hands accepted sockets
+//!   round-robin to its peers through waker-signalled inboxes. A
+//!   connection lives its whole life on one reactor. Per connection
+//!   the reactor keeps an explicit state struct: a capped read buffer
+//!   with incremental line framing, a write buffer with partial-write
+//!   continuation (reads pause while a slow client's reply backlog
+//!   exceeds 1 MiB — backpressure, not unbounded growth), and a
+//!   pending-reply queue that delivers replies strictly in request
+//!   order even when shards finish out of order. Executor shards push
+//!   replies into the owning reactor's eventfd-signalled completion
+//!   queue (the reply handle pins that reactor's queue, so delivery
+//!   needs no cross-reactor routing) instead of blocking a
+//!   per-connection thread. Per-request deadlines drive each reactor's
+//!   poll timeout, so `timeout` replies fire when due. Shutdown is a
+//!   staged per-reactor handshake fanned out by the serve shell: every
+//!   reactor closes its listener and confirms before ANY shutdown ack
+//!   is written — the multi-reactor form of "ack means port released".
 //!   Scales to 10k+ concurrent sessions (one `Conn` struct each, no
-//!   thread stacks) — stress-gated in CI at 1024 connections.
+//!   thread stacks) — stress-gated in CI at 1024 connections under
+//!   both `--reactors 1` and `--reactors 4`.
 //! * **`threads`** — one blocking reader thread per connection (the
 //!   PR 1/PR 2 front-end), kept as a fallback and as the portable
 //!   reference implementation.
@@ -63,6 +80,7 @@
 //!   {"op":"context","session":"u1","tokens":[5,6,7]}
 //!   {"op":"query","session":"u1","tokens":[9,2],"topk":5}
 //!   {"op":"stats"}            {"op":"stats","detail":true}
+//!   {"op":"stats","detail":true,"prefix":"user-","limit":100}
 //!   {"op":"shutdown"}
 //!
 //! Responses:
@@ -86,7 +104,15 @@
 //!       `sessions_detail` array — one object per resident session
 //!       (`id`, `t`, `kv_bytes`, `age_ms`, `idle_ms`), sorted by id;
 //!       merged across shards in the sharded view — so operators and
-//!       the CI stress gate can audit per-session accounting.
+//!       the CI stress gate can audit per-session accounting. For
+//!       fleets with large resident-session counts the detail view can
+//!       be bounded: `"prefix"` keeps only ids starting with it, and
+//!       `"limit"` truncates to the first N rows by id (applied after
+//!       the cross-shard merge, so it is a global bound). Under the
+//!       epoll front-end the response also carries `per_reactor` — one
+//!       object per reactor thread (`reactor`, `conns` currently open,
+//!       `accepted` total, `lines` framed, `refusals`) — so operators
+//!       can verify the accept sharding actually balances.
 //!   {"ok":true,"kind":"shutdown"}
 //!       Sent after in-flight work has drained on EVERY shard; the
 //!       listener is closed and the acceptor thread joined before
@@ -144,8 +170,8 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -161,11 +187,33 @@ use router::Router;
 
 pub use router::shard_for;
 
+/// A `stats` request's knobs. `detail` opts into `sessions_detail`;
+/// `prefix`/`limit` bound that view for fleets with large
+/// resident-session counts (prefix filter, then first-N-by-id).
+/// `per_reactor` is internal plumbing: the router fills it with the
+/// pre-rendered per-reactor transport rows before forwarding to a
+/// single shard (the merged multi-shard view renders its own), so the
+/// executor can embed transport stats it has no other way to see.
+#[derive(Debug, Clone, Default)]
+pub struct StatsQuery {
+    pub detail: bool,
+    pub prefix: Option<String>,
+    pub limit: Option<usize>,
+    pub per_reactor: Option<String>,
+}
+
+impl StatsQuery {
+    /// Shorthand for `{"op":"stats","detail":true}`.
+    pub fn detailed() -> StatsQuery {
+        StatsQuery { detail: true, ..Default::default() }
+    }
+}
+
 #[derive(Debug)]
 pub enum Request {
     Context { session: String, tokens: Vec<i32> },
     Query { session: String, tokens: Vec<i32>, topk: usize },
-    Stats { detail: bool },
+    Stats(StatsQuery),
     Shutdown,
 }
 
@@ -184,7 +232,12 @@ impl Request {
                 tokens: tokens()?,
                 topk: j.opt("topk").and_then(|v| v.usize().ok()).unwrap_or(5),
             },
-            "stats" => Request::Stats { detail: matches!(j.opt("detail"), Some(Json::Bool(true))) },
+            "stats" => Request::Stats(StatsQuery {
+                detail: matches!(j.opt("detail"), Some(Json::Bool(true))),
+                prefix: j.opt("prefix").and_then(|v| v.str().ok()).map(str::to_string),
+                limit: j.opt("limit").and_then(|v| v.usize().ok()),
+                per_reactor: None,
+            }),
             "shutdown" => Request::Shutdown,
             _ => bail!("unknown op {op:?}"),
         })
@@ -195,7 +248,7 @@ impl Request {
     pub fn session(&self) -> Option<&str> {
         match self {
             Request::Context { session, .. } | Request::Query { session, .. } => Some(session),
-            Request::Stats { .. } | Request::Shutdown => None,
+            Request::Stats(_) | Request::Shutdown => None,
         }
     }
 }
@@ -245,6 +298,37 @@ impl ReactorMode {
     }
 }
 
+/// `auto` reactor count for the epoll front-end: min(4, cores). Four
+/// event loops saturate a NIC long before four cores do; past that the
+/// bottleneck is the executors, not accept/readiness dispatch.
+pub fn auto_reactors() -> usize {
+    std::thread::available_parallelism().map_or(1, |n| n.get()).clamp(1, 4)
+}
+
+/// Reactor-thread count from `CCM_SERVE_REACTORS` (a positive integer,
+/// or `auto` = [`auto_reactors`]); 1 when unset — the library default
+/// stays the PR 3 single-reactor baseline, while `ccm serve` defaults
+/// its `--reactors` flag to `auto` (and rejects garbage outright via
+/// `Args::usize_env_auto`). An unparsable value here degrades to 1
+/// WITH a logged warning, never silently — the CI stress matrix
+/// drives this through 1 and 4 and must not quietly lose coverage.
+pub fn reactors_from_env() -> usize {
+    match std::env::var("CCM_SERVE_REACTORS").ok().as_deref() {
+        Some("auto") => auto_reactors(),
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) if n > 0 => n,
+            _ => {
+                crate::info!(
+                    "ignoring invalid CCM_SERVE_REACTORS={v:?} (want a positive integer or \
+                     `auto`); using 1 reactor"
+                );
+                1
+            }
+        },
+        None => 1,
+    }
+}
+
 /// Serving configuration. `new` fills production-shaped defaults; set
 /// the public fields to tune.
 pub struct ServerConfig {
@@ -273,6 +357,21 @@ pub struct ServerConfig {
     /// [`ReactorMode::from_env`]: `CCM_SERVE_REACTOR` if valid, else
     /// epoll on Linux / threads elsewhere.
     pub reactor: ReactorMode,
+    /// Reactor-thread count for the epoll front-end (`--reactors`):
+    /// each reactor owns its own poller, waker, connection table, and
+    /// completion queue, with `SO_REUSEPORT` accept sharding where
+    /// available. Defaults to [`reactors_from_env`] (1 unless
+    /// `CCM_SERVE_REACTORS` says otherwise). Ignored in threads mode.
+    pub reactors: usize,
+    /// Force the single-listener round-robin accept handoff even where
+    /// `SO_REUSEPORT` is available (test/CI escape hatch; also set by
+    /// `CCM_FORCE_ACCEPT_HANDOFF=1`).
+    pub force_accept_handoff: bool,
+    /// Per-request reply deadline: past it the front-end answers
+    /// `{"ok":false,"error":"timeout"}` instead of silently dropping
+    /// the client. The reactor wakes for the earliest pending deadline,
+    /// so expiry latency is one poll wakeup.
+    pub reply_timeout: Duration,
     /// Accepted-connection bound (both front-ends): connections beyond
     /// it get one `too_many_connections` line and are closed.
     pub max_conns: usize,
@@ -295,14 +394,19 @@ impl ServerConfig {
             shards: 1,
             eviction: EvictionKind::OldestCreated,
             reactor: ReactorMode::from_env(),
+            reactors: reactors_from_env(),
+            force_accept_handoff: std::env::var("CCM_FORCE_ACCEPT_HANDOFF").ok().as_deref()
+                == Some("1"),
+            reply_timeout: REPLY_TIMEOUT,
             max_conns: 16_384,
             max_line_bytes: 256 * 1024,
         }
     }
 }
 
-/// Per-request reply deadline (both front-ends answer `timeout` past
-/// it rather than silently dropping the client).
+/// Default per-request reply deadline ([`ServerConfig::reply_timeout`];
+/// both front-ends answer `timeout` past it rather than silently
+/// dropping the client).
 pub(crate) const REPLY_TIMEOUT: Duration = Duration::from_secs(60);
 pub(crate) const TIMEOUT_REPLY: &str = "{\"ok\":false,\"error\":\"timeout\"}";
 pub(crate) const LINE_TOO_LONG_REPLY: &str = "{\"ok\":false,\"error\":\"line_too_long\"}";
@@ -311,8 +415,10 @@ const SHUTDOWN_ACK: &str = "{\"ok\":true,\"kind\":\"shutdown\"}";
 
 /// Where an executor's reply for one request goes: a blocking channel
 /// (threads mode: the connection thread waits on the receiver) or the
-/// reactor's completion queue (tagged with connection + request id so
-/// the reactor can restore per-connection request order).
+/// owning reactor's completion queue (the handle pins that reactor's
+/// queue and tags connection + request id, so the reply lands on the
+/// right event loop in per-connection request order without any
+/// cross-reactor routing).
 #[derive(Clone)]
 pub(crate) enum Reply {
     Channel(Sender<String>),
@@ -465,22 +571,85 @@ fn run_server(
     ready: Option<Sender<String>>,
     run_executors: impl FnOnce() -> (Vec<Reply>, Result<()>),
 ) -> Result<()> {
-    let listener = TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
-    listener.set_nonblocking(true).context("listener nonblocking")?;
-    let local = listener.local_addr()?.to_string();
+    let (listeners, reactors) = bind_listeners(cfg)?;
+    let local = listeners[0].local_addr()?.to_string();
     crate::info!(
-        "serving on {local} ({} shard(s), eviction {}, reactor {})",
+        "serving on {local} ({} shard(s), eviction {}, reactor {}, {} reactor thread(s), {})",
         cfg.shards,
         cfg.eviction.name(),
-        cfg.reactor.name()
+        cfg.reactor.name(),
+        reactors,
+        if listeners.len() > 1 { "reuseport accept sharding" } else { "single listener" }
     );
     if let Some(tx) = ready {
         let _ = tx.send(local.clone());
     }
     match cfg.reactor {
-        ReactorMode::Threads => run_server_threads(cfg, listener, router, run_executors),
-        ReactorMode::Epoll => run_server_reactor(cfg, listener, router, run_executors),
+        ReactorMode::Threads => {
+            let listener = listeners.into_iter().next().expect("one listener");
+            run_server_threads(cfg, listener, router, run_executors)
+        }
+        ReactorMode::Epoll => run_server_reactor(cfg, listeners, reactors, router, run_executors),
     }
+}
+
+/// Bind the accept socket(s) for the selected front-end. Threads mode
+/// and a single-reactor epoll front-end get one ordinary listener.
+/// With `--reactors N > 1` each reactor gets its own `SO_REUSEPORT`
+/// listener on the same address (the kernel hash-balances accepts
+/// across them); where that fails — non-Linux, kernels without the
+/// option, a non-literal address, or `force_accept_handoff` — the
+/// shell degrades to ONE listener and reactor 0 hands accepted sockets
+/// round-robin to its peers. Returns the nonblocking listeners (1 or
+/// N) and the reactor count.
+fn bind_listeners(cfg: &ServerConfig) -> Result<(Vec<TcpListener>, usize)> {
+    let single = |why: Option<&str>| -> Result<Vec<TcpListener>> {
+        if let Some(why) = why {
+            crate::info!("serve: accept sharding disabled ({why}); single-listener handoff");
+        }
+        let l = TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
+        l.set_nonblocking(true).context("listener nonblocking")?;
+        Ok(vec![l])
+    };
+    let reactors = match cfg.reactor {
+        ReactorMode::Epoll => cfg.reactors.max(1),
+        ReactorMode::Threads => 1,
+    };
+    if reactors == 1 {
+        return Ok((single(None)?, reactors));
+    }
+    if cfg.force_accept_handoff {
+        return Ok((single(Some("accept handoff forced"))?, reactors));
+    }
+    let addr: std::net::SocketAddr = match cfg.addr.parse() {
+        Ok(a) => a,
+        Err(_) => return Ok((single(Some("address is not a literal socket address"))?, reactors)),
+    };
+    let first = match poll::bind_reuseport(addr) {
+        Ok(l) => l,
+        Err(e) => {
+            return Ok((single(Some(&format!("SO_REUSEPORT unavailable: {e:#}")))?, reactors));
+        }
+    };
+    // Re-bind the RESOLVED address so `:0` requests land every reactor
+    // on the same ephemeral port.
+    let bound = first.local_addr()?;
+    let mut listeners = vec![first];
+    for _ in 1..reactors {
+        match poll::bind_reuseport(bound) {
+            Ok(l) => listeners.push(l),
+            Err(e) => {
+                // Release the already-bound group before the plain
+                // re-bind (a fixed port would otherwise collide).
+                drop(listeners);
+                return Ok((single(Some(&format!("SO_REUSEPORT re-bind: {e:#}")))?, reactors));
+            }
+        }
+    }
+    for l in &listeners {
+        l.set_nonblocking(true).context("listener nonblocking")?;
+    }
+    Ok((listeners, reactors))
 }
 
 /// Threads front-end: an acceptor thread polling the nonblocking
@@ -496,6 +665,7 @@ fn run_server_threads(
     let stop = Arc::new(AtomicBool::new(false));
     let max_conns = cfg.max_conns;
     let max_line_bytes = cfg.max_line_bytes;
+    let reply_timeout = cfg.reply_timeout;
 
     let acceptor = {
         let stop = stop.clone();
@@ -515,7 +685,8 @@ fn run_server_threads(
                         live.fetch_add(1, Ordering::SeqCst);
                         let live = live.clone();
                         std::thread::spawn(move || {
-                            let _ = handle_connection(stream, router, max_line_bytes);
+                            let _ =
+                                handle_connection(stream, router, max_line_bytes, reply_timeout);
                             live.fetch_sub(1, Ordering::SeqCst);
                         });
                     }
@@ -544,40 +715,117 @@ fn run_server_threads(
     result
 }
 
-/// Reactor front-end: every connection lives on one reactor thread;
-/// executors deliver replies through the eventfd-signalled completion
-/// queue. Shutdown is a staged handshake so the ack keeps its
-/// documented meaning: close the listener first (port released), then
-/// push the acks, then flush-and-exit.
+/// Reactor front-end: every connection lives on exactly one of N
+/// reactor threads; executors deliver replies through the owning
+/// reactor's eventfd-signalled completion queue. With multiple
+/// listeners (SO_REUSEPORT) each reactor accepts for itself; with one
+/// listener reactor 0 hands accepted sockets round-robin to peer
+/// inboxes. Shutdown is a staged per-reactor handshake so the ack
+/// keeps its documented meaning across reactors: EVERY reactor closes
+/// its listener first (port fully released), then the acks are pushed,
+/// then all reactors flush-and-exit.
 fn run_server_reactor(
     cfg: &ServerConfig,
-    listener: TcpListener,
+    listeners: Vec<TcpListener>,
+    reactors: usize,
     router: Router,
     run_executors: impl FnOnce() -> (Vec<Reply>, Result<()>),
 ) -> Result<()> {
-    let poller = poll::Poller::new().context("reactor poller")?;
-    let waker = poller.waker();
-    let completions = Arc::new(reactor::CompletionQueue::new(poller.waker()));
-    let ctl = Arc::new(reactor::Ctl::default());
-    let r = reactor::Reactor::new(listener, router, cfg, poller, completions, ctl.clone())?;
-    let reactor_thread = std::thread::spawn(move || r.run());
+    let sharded_accept = listeners.len() > 1;
+    let stats = router.reactor_stats();
+    debug_assert_eq!(stats.len(), reactors, "router and shell must agree on reactor count");
+    let conn_count = Arc::new(AtomicUsize::new(0));
+    let mut pollers = Vec::with_capacity(reactors);
+    for _ in 0..reactors {
+        pollers.push(poll::Poller::new().context("reactor poller")?);
+    }
+    let wakers: Vec<poll::Waker> = pollers.iter().map(|p| p.waker()).collect();
+    let completions: Vec<Arc<reactor::CompletionQueue>> =
+        wakers.iter().map(|w| Arc::new(reactor::CompletionQueue::new(w.clone()))).collect();
+    let ctls: Vec<Arc<reactor::Ctl>> =
+        (0..reactors).map(|_| Arc::new(reactor::Ctl::default())).collect();
+    let inboxes: Vec<Arc<Mutex<Vec<TcpStream>>>> =
+        (0..reactors).map(|_| Arc::new(Mutex::new(Vec::new()))).collect();
+
+    let mut listener_iter = listeners.into_iter();
+    let mut threads = Vec::with_capacity(reactors);
+    for (id, poller) in pollers.into_iter().enumerate() {
+        let listener = if sharded_accept || id == 0 { listener_iter.next() } else { None };
+        // In handoff mode reactor 0 round-robins accepts over every
+        // reactor (itself included); peers are indexed by reactor id.
+        let peers = if !sharded_accept && id == 0 && reactors > 1 {
+            inboxes
+                .iter()
+                .zip(&wakers)
+                .map(|(inbox, waker)| reactor::HandoffPeer {
+                    inbox: inbox.clone(),
+                    waker: waker.clone(),
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let inbox =
+            if !sharded_accept && reactors > 1 { Some(inboxes[id].clone()) } else { None };
+        let setup = reactor::ReactorSetup {
+            id,
+            listener,
+            inbox,
+            peers,
+            poller,
+            completions: completions[id].clone(),
+            ctl: ctls[id].clone(),
+            conn_count: conn_count.clone(),
+            stats: stats.clone(),
+        };
+        match reactor::Reactor::new(setup, router.clone(), cfg) {
+            Ok(r) => threads.push(std::thread::spawn(move || r.run())),
+            Err(e) => {
+                // Tear down the reactors already spawned before
+                // propagating: left alone they would park in
+                // `poller.wait` forever, holding their listeners (and
+                // the port) after serve() has returned the error.
+                for (ctl, waker) in ctls.iter().zip(&wakers) {
+                    ctl.advance(reactor::CTL_FINISH);
+                    waker.wake();
+                }
+                for t in threads {
+                    let _ = t.join();
+                }
+                return Err(e);
+            }
+        }
+    }
 
     let (shutdown_replies, result) = run_executors();
-    // Stage 1: the reactor drops the listener and confirms — the port
-    // must be free before any shutdown ack is written (a dead reactor
-    // times the wait out; the shell degrades instead of hanging).
-    ctl.advance(reactor::CTL_CLOSE_LISTENER);
-    waker.wake();
-    ctl.wait_at_least(reactor::CTL_LISTENER_CLOSED, Duration::from_secs(10));
-    // Stage 2: acks travel the normal completion path, in order, on
-    // their own connections.
+    // Stage 1: every reactor drops its listener and confirms — ALL of
+    // the port's listeners must be closed before ANY shutdown ack is
+    // written, preserving the single-reactor ack contract (a dead
+    // reactor times its wait out; the shell degrades instead of
+    // hanging).
+    for (ctl, waker) in ctls.iter().zip(&wakers) {
+        ctl.advance(reactor::CTL_CLOSE_LISTENER);
+        waker.wake();
+    }
+    let deadline = Instant::now() + Duration::from_secs(10);
+    for ctl in &ctls {
+        let left = deadline.saturating_duration_since(Instant::now());
+        ctl.wait_at_least(reactor::CTL_LISTENER_CLOSED, left);
+    }
+    // Stage 2: acks travel the normal completion path — each handle
+    // pins the queue of the reactor owning its connection, so they
+    // land on the right event loop without any routing step.
     for reply in shutdown_replies {
         let _ = reply.send(SHUTDOWN_ACK.into());
     }
     // Stage 3: flush buffered replies and exit, closing every conn.
-    ctl.advance(reactor::CTL_FINISH);
-    waker.wake();
-    let _ = reactor_thread.join();
+    for (ctl, waker) in ctls.iter().zip(&wakers) {
+        ctl.advance(reactor::CTL_FINISH);
+        waker.wake();
+    }
+    for t in threads {
+        let _ = t.join();
+    }
     result
 }
 
@@ -633,7 +881,12 @@ fn read_line_capped(reader: &mut impl BufRead, cap: usize) -> std::io::Result<Re
     }
 }
 
-fn handle_connection(stream: TcpStream, router: Router, max_line_bytes: usize) -> Result<()> {
+fn handle_connection(
+    stream: TcpStream,
+    router: Router,
+    max_line_bytes: usize,
+    reply_timeout: Duration,
+) -> Result<()> {
     let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
     crate::debug!("connection from {peer}");
     let mut reader = BufReader::new(stream.try_clone()?);
@@ -657,7 +910,7 @@ fn handle_connection(stream: TcpStream, router: Router, max_line_bytes: usize) -
                 if !router.dispatch(req, Reply::channel(resp_tx)) {
                     break; // executor gone
                 }
-                match resp_rx.recv_timeout(REPLY_TIMEOUT) {
+                match resp_rx.recv_timeout(reply_timeout) {
                     Ok(resp) => {
                         writer.write_all(resp.as_bytes())?;
                         writer.write_all(b"\n")?;
@@ -742,6 +995,16 @@ impl Client {
         self.call("{\"op\":\"stats\",\"detail\":true}")
     }
 
+    /// Detailed stats with the `sessions_detail` view bounded to ids
+    /// starting with `prefix` and at most `limit` rows (by id, after
+    /// the cross-shard merge).
+    pub fn stats_page(&mut self, prefix: &str, limit: usize) -> Result<Json> {
+        self.call(&format!(
+            "{{\"op\":\"stats\",\"detail\":true,\"prefix\":{},\"limit\":{limit}}}",
+            escape(prefix)
+        ))
+    }
+
     pub fn shutdown(&mut self) -> Result<()> {
         match self.call("{\"op\":\"shutdown\"}") {
             // The ack means "drained, listener closed"; an ok:false
@@ -781,11 +1044,45 @@ mod tests {
         let r = Request::parse(r#"{"op":"query","session":"u","tokens":[9],"topk":2}"#).unwrap();
         matches!(r, Request::Query { topk: 2, .. }).then_some(()).unwrap();
         let r = Request::parse(r#"{"op":"stats"}"#).unwrap();
-        assert!(matches!(r, Request::Stats { detail: false }), "detail is opt-in");
+        assert!(
+            matches!(r, Request::Stats(StatsQuery { detail: false, .. })),
+            "detail is opt-in"
+        );
         let r = Request::parse(r#"{"op":"stats","detail":true}"#).unwrap();
-        assert!(matches!(r, Request::Stats { detail: true }));
+        assert!(matches!(r, Request::Stats(StatsQuery { detail: true, .. })));
         assert!(Request::parse(r#"{"op":"nope"}"#).is_err());
         assert!(Request::parse("garbage").is_err());
+    }
+
+    #[test]
+    fn stats_request_parses_prefix_and_limit() {
+        let r = Request::parse(r#"{"op":"stats","detail":true,"prefix":"u-","limit":10}"#).unwrap();
+        match r {
+            Request::Stats(q) => {
+                assert!(q.detail);
+                assert_eq!(q.prefix.as_deref(), Some("u-"));
+                assert_eq!(q.limit, Some(10));
+                assert!(q.per_reactor.is_none(), "per_reactor is router-internal");
+            }
+            _ => panic!("wrong kind"),
+        }
+        // Absent or malformed knobs degrade to unbounded, not an error.
+        let r = Request::parse(r#"{"op":"stats","limit":"many"}"#).unwrap();
+        match r {
+            Request::Stats(q) => {
+                assert!(!q.detail && q.prefix.is_none() && q.limit.is_none());
+            }
+            _ => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn reactor_count_resolution_is_bounded() {
+        let auto = auto_reactors();
+        assert!((1..=4).contains(&auto), "auto = min(4, cores), got {auto}");
+        // Env-driven default parses to >= 1 whatever the environment
+        // says (unset → 1; the CI matrix exports 1 or 4).
+        assert!(reactors_from_env() >= 1);
     }
 
     #[test]
@@ -794,7 +1091,8 @@ mod tests {
         let q = Request::Query { session: "u2".into(), tokens: vec![2], topk: 1 };
         assert_eq!(ctx.session(), Some("u1"));
         assert_eq!(q.session(), Some("u2"));
-        assert_eq!(Request::Stats { detail: false }.session(), None);
+        assert_eq!(Request::Stats(StatsQuery::default()).session(), None);
+        assert_eq!(Request::Stats(StatsQuery::detailed()).session(), None);
         assert_eq!(Request::Shutdown.session(), None);
     }
 

@@ -1,18 +1,32 @@
 //! Thin readiness-polling wrapper for the serving reactor.
 //!
-//! The vendored offline tree has no `mio`/`libc`, so on Linux this is a
-//! zero-dependency epoll wrapper: raw `extern "C"` declarations for
-//! `epoll_create1` / `epoll_ctl` / `epoll_wait` (the symbols live in
-//! the C library std already links) plus an `eventfd` used as a waker —
-//! executor shards signal completion delivery and the serve shell
-//! signals shutdown by writing to it, which pops the reactor out of
-//! `epoll_wait`. Readiness is level-triggered, matching the reactor's
-//! "read/write until `WouldBlock`" discipline.
+//! The vendored offline tree has no `mio`/`libc`, so on Linux the
+//! default backend is a zero-dependency epoll wrapper: raw `extern "C"`
+//! declarations for `epoll_create1` / `epoll_ctl` / `epoll_wait` (the
+//! symbols live in the C library std already links) plus an `eventfd`
+//! used as a waker — executor shards signal completion delivery and the
+//! serve shell signals shutdown by writing to it, which pops the
+//! reactor out of `epoll_wait`. Readiness is level-triggered, matching
+//! the reactor's "read/write until `WouldBlock`" discipline.
 //!
-//! On every other OS a portable fallback keeps the same API: a bounded
-//! scan loop that reports every registered source as maybe-ready each
-//! tick (the reactor treats spurious readiness as a no-op `WouldBlock`)
-//! and a condvar-backed waker. Slower, but dependency-free and correct.
+//! A portable fallback keeps the same API everywhere: a bounded scan
+//! loop that reports every registered source as maybe-ready each tick
+//! (the reactor treats spurious readiness as a no-op `WouldBlock`) and
+//! a condvar-backed waker. Slower, but dependency-free and correct. It
+//! is the only backend off-Linux, and `CCM_FORCE_FALLBACK_POLL=1`
+//! selects it on Linux too so CI can compile AND run the scan loop
+//! instead of shipping it untested to other platforms.
+//!
+//! This module also owns [`bind_reuseport`], the raw `SO_REUSEPORT`
+//! socket builder behind multi-reactor accept sharding: N listeners on
+//! one address, kernel-balanced. Off-Linux (or on kernels without the
+//! option) it fails cleanly and the serve shell falls back to a
+//! single-listener round-robin handoff.
+
+use std::net::{SocketAddr, TcpListener};
+use std::time::Duration;
+
+use anyhow::Result;
 
 /// Identifies a registered source in [`Event`]s (the reactor uses the
 /// connection id). [`WAKER_TOKEN`] is reserved for the built-in waker.
@@ -43,10 +57,180 @@ pub(crate) fn source_fd<T: std::os::windows::io::AsRawSocket>(s: &T) -> SysFd {
     s.as_raw_socket() as SysFd
 }
 
-pub(crate) use imp::{Poller, Waker};
+/// `CCM_FORCE_FALLBACK_POLL=1`: run the portable scan-loop backend on
+/// Linux (the CI escape hatch exercising the off-Linux code path).
+#[cfg(target_os = "linux")]
+fn force_fallback() -> bool {
+    std::env::var("CCM_FORCE_FALLBACK_POLL").ok().as_deref() == Some("1")
+}
+
+/// Readiness poller: epoll on Linux (unless forced into the fallback),
+/// the portable scan loop everywhere else. Both backends stay compiled
+/// on Linux so the fallback cannot rot unbuilt.
+pub(crate) enum Poller {
+    #[cfg(target_os = "linux")]
+    Epoll(epoll::Poller),
+    Fallback(fallback::Poller),
+}
+
+/// Wakes a [`Poller`] blocked in `wait` from any thread.
+#[derive(Clone)]
+pub(crate) enum Waker {
+    #[cfg(target_os = "linux")]
+    Epoll(epoll::Waker),
+    Fallback(fallback::Waker),
+}
+
+impl Waker {
+    pub(crate) fn wake(&self) {
+        match self {
+            #[cfg(target_os = "linux")]
+            Waker::Epoll(w) => w.wake(),
+            Waker::Fallback(w) => w.wake(),
+        }
+    }
+}
+
+impl Poller {
+    pub(crate) fn new() -> Result<Poller> {
+        #[cfg(target_os = "linux")]
+        if !force_fallback() {
+            return Ok(Poller::Epoll(epoll::Poller::new()?));
+        }
+        Ok(Poller::Fallback(fallback::Poller::new()?))
+    }
+
+    pub(crate) fn waker(&self) -> Waker {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => Waker::Epoll(p.waker()),
+            Poller::Fallback(p) => Waker::Fallback(p.waker()),
+        }
+    }
+
+    pub(crate) fn add(
+        &mut self,
+        fd: SysFd,
+        token: Token,
+        readable: bool,
+        writable: bool,
+    ) -> Result<()> {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.add(fd, token, readable, writable),
+            Poller::Fallback(p) => p.add(fd, token, readable, writable),
+        }
+    }
+
+    pub(crate) fn modify(
+        &mut self,
+        fd: SysFd,
+        token: Token,
+        readable: bool,
+        writable: bool,
+    ) -> Result<()> {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.modify(fd, token, readable, writable),
+            Poller::Fallback(p) => p.modify(fd, token, readable, writable),
+        }
+    }
+
+    pub(crate) fn delete(&mut self, fd: SysFd) -> Result<()> {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.delete(fd),
+            Poller::Fallback(p) => p.delete(fd),
+        }
+    }
+
+    /// Block until readiness, a wake, or `timeout`; fills `out`.
+    pub(crate) fn wait(&mut self, out: &mut Vec<Event>, timeout: Option<Duration>) -> Result<()> {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.wait(out, timeout),
+            Poller::Fallback(p) => p.wait(out, timeout),
+        }
+    }
+}
+
+/// Bind a listener with `SO_REUSEPORT` set before `bind`, so several
+/// listeners (one per reactor) can share one address and the kernel
+/// hash-balances incoming connections across them. Linux-only raw
+/// syscalls (no libc crate offline); every other platform — and any
+/// kernel that refuses the option — gets a clean error and the serve
+/// shell degrades to single-listener handoff.
+#[cfg(target_os = "linux")]
+pub(crate) fn bind_reuseport(addr: SocketAddr) -> Result<TcpListener> {
+    use anyhow::Context;
+    use std::os::unix::io::FromRawFd;
+
+    const AF_INET: i32 = 2;
+    const AF_INET6: i32 = 10;
+    const SOCK_STREAM: i32 = 1;
+    const SOCK_CLOEXEC: i32 = 0o200_0000;
+    const SOL_SOCKET: i32 = 1;
+    const SO_REUSEPORT: i32 = 15;
+
+    extern "C" {
+        fn socket(domain: i32, ty: i32, protocol: i32) -> i32;
+        fn setsockopt(fd: i32, level: i32, optname: i32, optval: *const u8, optlen: u32) -> i32;
+        fn bind(fd: i32, addr: *const u8, len: u32) -> i32;
+        fn listen(fd: i32, backlog: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    // sockaddr_in / sockaddr_in6 laid out by hand: family in native
+    // byte order, port and address in network byte order.
+    let (family, buf, len): (i32, [u8; 28], u32) = match addr {
+        SocketAddr::V4(a) => {
+            let mut b = [0u8; 28];
+            b[0..2].copy_from_slice(&(AF_INET as u16).to_ne_bytes());
+            b[2..4].copy_from_slice(&a.port().to_be_bytes());
+            b[4..8].copy_from_slice(&a.ip().octets());
+            (AF_INET, b, 16)
+        }
+        SocketAddr::V6(a) => {
+            let mut b = [0u8; 28];
+            b[0..2].copy_from_slice(&(AF_INET6 as u16).to_ne_bytes());
+            b[2..4].copy_from_slice(&a.port().to_be_bytes());
+            b[4..8].copy_from_slice(&a.flowinfo().to_be_bytes());
+            b[8..24].copy_from_slice(&a.ip().octets());
+            b[24..28].copy_from_slice(&a.scope_id().to_ne_bytes());
+            (AF_INET6, b, 28)
+        }
+    };
+    let fd = unsafe { socket(family, SOCK_STREAM | SOCK_CLOEXEC, 0) };
+    if fd < 0 {
+        return Err(std::io::Error::last_os_error()).context("socket");
+    }
+    let fail = |fd: i32, what: &'static str| -> anyhow::Error {
+        let e = std::io::Error::last_os_error();
+        unsafe { close(fd) };
+        anyhow::Error::from(e).context(what)
+    };
+    let one: i32 = 1;
+    if unsafe { setsockopt(fd, SOL_SOCKET, SO_REUSEPORT, &one as *const i32 as *const u8, 4) } < 0
+    {
+        return Err(fail(fd, "setsockopt(SO_REUSEPORT)"));
+    }
+    if unsafe { bind(fd, buf.as_ptr(), len) } < 0 {
+        return Err(fail(fd, "bind"));
+    }
+    if unsafe { listen(fd, 1024) } < 0 {
+        return Err(fail(fd, "listen"));
+    }
+    // From here the TcpListener owns the fd and closes it on drop.
+    Ok(unsafe { TcpListener::from_raw_fd(fd) })
+}
+
+#[cfg(not(target_os = "linux"))]
+pub(crate) fn bind_reuseport(_addr: SocketAddr) -> Result<TcpListener> {
+    anyhow::bail!("SO_REUSEPORT accept sharding is only wired up on Linux")
+}
 
 #[cfg(target_os = "linux")]
-mod imp {
+mod epoll {
     use super::{Event, SysFd, Token, WAKER_TOKEN};
     use anyhow::{Context, Result};
     use std::sync::Arc;
@@ -232,8 +416,7 @@ mod imp {
     }
 }
 
-#[cfg(not(target_os = "linux"))]
-mod imp {
+mod fallback {
     use super::{Event, SysFd, Token, WAKER_TOKEN};
     use anyhow::Result;
     use std::sync::{Arc, Condvar, Mutex};
@@ -371,6 +554,9 @@ mod tests {
         assert!(t0.elapsed() < Duration::from_secs(5));
     }
 
+    // Pinned to the epoll backend: the fallback scan loop reports
+    // registered sources as maybe-ready unconditionally, so "no event
+    // before a connection arrives" is an epoll-only guarantee.
     #[cfg(target_os = "linux")]
     #[test]
     fn listener_readability_is_reported() {
@@ -378,7 +564,7 @@ mod tests {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         listener.set_nonblocking(true).unwrap();
         let addr = listener.local_addr().unwrap();
-        let mut poller = Poller::new().unwrap();
+        let mut poller = epoll::Poller::new().unwrap();
         poller.add(source_fd(&listener), 7, true, false).unwrap();
         let mut events = Vec::new();
         poller.wait(&mut events, Some(Duration::from_millis(50))).unwrap();
@@ -390,5 +576,82 @@ mod tests {
             "pending accept must be readable: {events:?}"
         );
         poller.delete(source_fd(&listener)).unwrap();
+    }
+
+    // The portable scan loop, exercised explicitly on every platform
+    // (the host-suite CI matrix additionally drives the whole serve
+    // suite through it via CCM_FORCE_FALLBACK_POLL=1).
+    #[test]
+    fn fallback_poller_scans_registered_sources_and_wakes() {
+        let mut poller = fallback::Poller::new().unwrap();
+        let waker = poller.waker();
+        let mut events = Vec::new();
+
+        // Registered sources are reported as maybe-ready per interest.
+        poller.add(11, 1, true, false).unwrap();
+        poller.add(12, 2, false, true).unwrap();
+        poller.add(13, 3, false, false).unwrap();
+        poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+        assert!(events.iter().any(|e| e.token == 1 && e.readable && !e.writable), "{events:?}");
+        assert!(events.iter().any(|e| e.token == 2 && e.writable && !e.readable), "{events:?}");
+        assert!(events.iter().all(|e| e.token != 3), "no-interest source must stay silent");
+
+        // modify re-registers under the same key; delete removes it.
+        poller.modify(11, 1, false, false).unwrap();
+        poller.delete(12).unwrap();
+        poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+        assert!(events.iter().all(|e| e.token != 1 && e.token != 2), "{events:?}");
+
+        // A wake from another thread pops the wait promptly.
+        let handle = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            waker.wake();
+        });
+        let t0 = Instant::now();
+        loop {
+            poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+            if events.iter().any(|e| e.token == WAKER_TOKEN) {
+                break;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(5), "wake never observed");
+        }
+        handle.join().unwrap();
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn reuseport_listeners_share_one_port_and_both_accept() {
+        use std::net::TcpStream;
+        let first = bind_reuseport("127.0.0.1:0".parse().unwrap()).unwrap();
+        let addr = first.local_addr().unwrap();
+        // Second listener on the SAME resolved port: only possible with
+        // SO_REUSEPORT set on both.
+        let second = bind_reuseport(addr).unwrap();
+        assert_eq!(second.local_addr().unwrap().port(), addr.port());
+        first.set_nonblocking(true).unwrap();
+        second.set_nonblocking(true).unwrap();
+
+        // 64 connections from distinct source ports: the kernel hash
+        // must route some to each listener (P(one starves) ~ 2^-64).
+        let clients: Vec<TcpStream> = (0..64).map(|_| TcpStream::connect(addr).unwrap()).collect();
+        let (mut got_first, mut got_second) = (0usize, 0usize);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while got_first + got_second < clients.len() {
+            let mut progressed = false;
+            while first.accept().is_ok() {
+                got_first += 1;
+                progressed = true;
+            }
+            while second.accept().is_ok() {
+                got_second += 1;
+                progressed = true;
+            }
+            if !progressed {
+                assert!(Instant::now() < deadline, "accepts stalled: {got_first}+{got_second}");
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+        assert!(got_first > 0 && got_second > 0, "kernel must balance: {got_first}/{got_second}");
+        drop(clients);
     }
 }

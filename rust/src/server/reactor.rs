@@ -1,9 +1,16 @@
 //! Event-driven connection front-end (`--reactor epoll`).
 //!
-//! One reactor thread owns the listener and every accepted connection;
-//! readiness is multiplexed through [`poll::Poller`] (epoll on Linux, a
-//! portable scan loop elsewhere), so 10k+ concurrent sessions cost one
-//! thread and one `Conn` struct each instead of one OS thread stack.
+//! The transport is sharded into N reactor threads (`--reactors N`).
+//! Each reactor owns its own [`poll::Poller`] (epoll on Linux, a
+//! portable scan loop elsewhere), eventfd waker, connection table, and
+//! [`CompletionQueue`]; with `SO_REUSEPORT` available every reactor
+//! also owns its own listener on the shared address and the kernel
+//! hash-balances accepts across them. Without it (non-Linux, old
+//! kernels, or `CCM_FORCE_ACCEPT_HANDOFF=1`) reactor 0 owns the single
+//! listener and hands accepted sockets round-robin to its peers
+//! through per-reactor inboxes ([`HandoffPeer`]). A connection lives
+//! its whole life on one reactor, so 10k+ concurrent sessions cost N
+//! threads and one `Conn` struct each instead of one OS thread stack.
 //!
 //! Per connection the reactor keeps an explicit [`Conn`]:
 //!
@@ -22,16 +29,21 @@
 //!   are dropped).
 //!
 //! Executor shards never touch sockets: [`super::Reply::Completion`]
-//! pushes the reply into the completion queue and rings the poller's
-//! eventfd waker, which pops the reactor out of `epoll_wait` to
-//! deliver. Shutdown is a staged handshake via [`Ctl`]: the serve
-//! shell asks the reactor to close the listener (releasing the port),
-//! waits for confirmation, sends the shutdown acks through the
-//! completion queue, then signals the final flush-and-exit.
+//! carries the owning reactor's queue, so a reply lands directly in
+//! that reactor's [`CompletionQueue`] and rings that reactor's waker —
+//! no cross-reactor routing step. Per-request deadlines drive the poll
+//! timeout directly (the earliest pending deadline across conns), so a
+//! timed-out request is answered promptly rather than on a coarse scan
+//! tick. Shutdown is a staged handshake via one [`Ctl`] per reactor,
+//! fanned out by the serve shell: every reactor closes its listener
+//! (releasing the port) and confirms BEFORE any shutdown ack is
+//! written, then the acks travel the normal completion path, then a
+//! final flush-and-exit stage closes every connection.
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -40,8 +52,7 @@ use anyhow::Result;
 use crate::server::poll::{self, Poller};
 use crate::server::router::Router;
 use crate::server::{
-    LINE_TOO_LONG_REPLY, Reply, Request, REPLY_TIMEOUT, ServerConfig, TIMEOUT_REPLY,
-    TOO_MANY_CONNS_REPLY,
+    LINE_TOO_LONG_REPLY, Reply, Request, ServerConfig, TIMEOUT_REPLY, TOO_MANY_CONNS_REPLY,
 };
 use crate::util::json::escape;
 
@@ -54,6 +65,70 @@ const WRITE_COMPACT_BYTES: usize = 64 * 1024;
 /// entry stays pending, so a level-triggered listener would hot-spin
 /// the event loop), accepting pauses this long before re-arming.
 const ACCEPT_BACKOFF: Duration = Duration::from_millis(50);
+/// How long a refused (over `max_conns`) connection may linger while
+/// its refusal line drains to a slow peer before it is dropped.
+const REFUSAL_LINGER: Duration = Duration::from_secs(5);
+
+// ---------------------------------------------------------------------
+// Per-reactor transport counters (the stats `per_reactor` breakdown).
+
+/// Live transport counters for one reactor, surfaced through stats.
+#[derive(Default)]
+pub(crate) struct ReactorStats {
+    /// Currently open admitted connections (gauge).
+    pub(crate) conns: AtomicUsize,
+    /// Total admitted connections (the accept-sharding balance gate).
+    pub(crate) accepted: AtomicUsize,
+    /// Request lines framed (parsed, refused, or overlong alike).
+    pub(crate) lines: AtomicUsize,
+    /// `too_many_connections` refusals issued by this reactor.
+    pub(crate) refusals: AtomicUsize,
+}
+
+/// One slot per reactor; empty in threads mode. Shared between the
+/// reactors (writers) and the router (stats reader).
+pub(crate) struct ReactorStatsTable {
+    slots: Vec<ReactorStats>,
+}
+
+impl ReactorStatsTable {
+    pub(crate) fn new(reactors: usize) -> ReactorStatsTable {
+        ReactorStatsTable { slots: (0..reactors).map(|_| ReactorStats::default()).collect() }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub(crate) fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub(crate) fn slot(&self, reactor: usize) -> &ReactorStats {
+        &self.slots[reactor]
+    }
+
+    /// Comma-joined JSON objects, one per reactor (the caller wraps
+    /// them in `"per_reactor":[...]`).
+    pub(crate) fn render_rows(&self) -> String {
+        let rows: Vec<String> = self
+            .slots
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                format!(
+                    "{{\"reactor\":{i},\"conns\":{},\"accepted\":{},\"lines\":{},\
+                     \"refusals\":{}}}",
+                    s.conns.load(Ordering::Relaxed),
+                    s.accepted.load(Ordering::Relaxed),
+                    s.lines.load(Ordering::Relaxed),
+                    s.refusals.load(Ordering::Relaxed),
+                )
+            })
+            .collect();
+        rows.join(",")
+    }
+}
 
 // ---------------------------------------------------------------------
 // Completion delivery (executor shard -> reactor).
@@ -65,8 +140,11 @@ pub(crate) struct Completion {
     msg: String,
 }
 
-/// Shared reply queue: executors push, the reactor drains. Every push
-/// rings the poller's waker so delivery latency is one epoll wakeup.
+/// Shared reply queue: executors push, the owning reactor drains. Every
+/// push rings that reactor's waker so delivery latency is one epoll
+/// wakeup, and because the [`CompletionHandle`] pins the queue of the
+/// reactor that dispatched the request, replies never need a
+/// cross-reactor routing step.
 pub(crate) struct CompletionQueue {
     items: Mutex<Vec<Completion>>,
     waker: poll::Waker,
@@ -87,8 +165,9 @@ impl CompletionQueue {
     }
 }
 
-/// The reactor-mode [`Reply`]: identifies (connection, request) so the
-/// reactor can slot the reply into the per-conn pending queue.
+/// The reactor-mode [`Reply`]: identifies (connection, request) on the
+/// owning reactor so it can slot the reply into the per-conn pending
+/// queue.
 #[derive(Clone)]
 pub(crate) struct CompletionHandle {
     queue: Arc<CompletionQueue>,
@@ -106,8 +185,9 @@ impl CompletionHandle {
 // Shutdown handshake (serve shell -> reactor).
 
 pub(crate) const CTL_RUNNING: u8 = 0;
-/// Serve shell asks: close the listener (port must be released before
-/// shutdown acks are sent — the ack's documented meaning).
+/// Serve shell asks: close the listener (every reactor's port share
+/// must be released before shutdown acks are sent — the ack's
+/// documented meaning).
 pub(crate) const CTL_CLOSE_LISTENER: u8 = 1;
 /// Reactor confirms: listener dropped, port free.
 pub(crate) const CTL_LISTENER_CLOSED: u8 = 2;
@@ -115,8 +195,9 @@ pub(crate) const CTL_LISTENER_CLOSED: u8 = 2;
 /// exit, closing every connection.
 pub(crate) const CTL_FINISH: u8 = 3;
 
-/// Monotonic shutdown stage shared between the serve shell and the
-/// reactor thread. Stages only advance.
+/// Monotonic shutdown stage shared between the serve shell and one
+/// reactor thread (the shell holds one per reactor). Stages only
+/// advance.
 #[derive(Default)]
 pub(crate) struct Ctl {
     stage: Mutex<u8>,
@@ -180,6 +261,8 @@ struct Conn {
     /// Replies leave in request order, whatever order shards finish in.
     pending: VecDeque<Pending>,
     next_req: u64,
+    /// Per-request reply deadline (from [`ServerConfig`]).
+    reply_timeout: Duration,
     /// Overlong line seen: drop bytes until the next newline.
     discarding: bool,
     read_eof: bool,
@@ -189,6 +272,11 @@ struct Conn {
     close_after_req: Option<u64>,
     /// Close once the write buffer drains.
     close_when_flushed: bool,
+    /// Hard kill deadline (refused conns: drop even if the peer never
+    /// drains the refusal line).
+    expire_at: Option<Instant>,
+    /// Holds a `max_conns` slot (false for over-limit refusal conns).
+    counted: bool,
     /// Registered epoll interest (avoid redundant `epoll_ctl`).
     reg_read: bool,
     reg_write: bool,
@@ -196,7 +284,7 @@ struct Conn {
 }
 
 impl Conn {
-    fn new(stream: TcpStream, token: poll::Token) -> Conn {
+    fn new(stream: TcpStream, token: poll::Token, reply_timeout: Duration) -> Conn {
         Conn {
             stream,
             token,
@@ -205,11 +293,14 @@ impl Conn {
             write_pos: 0,
             pending: VecDeque::new(),
             next_req: 0,
+            reply_timeout,
             discarding: false,
             read_eof: false,
             stop_reading: false,
             close_after_req: None,
             close_when_flushed: false,
+            expire_at: None,
+            counted: true,
             reg_read: true,
             reg_write: false,
             dead: false,
@@ -278,7 +369,7 @@ impl Conn {
     fn enqueue_done(&mut self, msg: String) {
         let req = self.next_req;
         self.next_req += 1;
-        let deadline = Instant::now() + REPLY_TIMEOUT;
+        let deadline = Instant::now() + self.reply_timeout;
         self.pending.push_back(Pending { req, deadline, state: PendingState::Done(msg) });
     }
 
@@ -304,54 +395,111 @@ impl Conn {
 // ---------------------------------------------------------------------
 // The reactor proper.
 
+/// Round-robin handoff target (single-listener fallback): reactor 0
+/// pushes an accepted socket into a peer's inbox and rings its waker.
+pub(crate) struct HandoffPeer {
+    pub(crate) inbox: Arc<Mutex<Vec<TcpStream>>>,
+    pub(crate) waker: poll::Waker,
+}
+
+/// Everything a reactor thread is born with. Built by the serve shell
+/// (`run_server_reactor`), one per reactor.
+pub(crate) struct ReactorSetup {
+    pub(crate) id: usize,
+    /// This reactor's own SO_REUSEPORT listener, or (handoff mode) the
+    /// single shared listener on reactor 0 only.
+    pub(crate) listener: Option<TcpListener>,
+    /// Where reactor 0 deposits handed-off sockets for this reactor.
+    pub(crate) inbox: Option<Arc<Mutex<Vec<TcpStream>>>>,
+    /// Handoff targets, indexed by reactor id (reactor 0 in handoff
+    /// mode only; empty means "register accepts locally").
+    pub(crate) peers: Vec<HandoffPeer>,
+    pub(crate) poller: Poller,
+    pub(crate) completions: Arc<CompletionQueue>,
+    pub(crate) ctl: Arc<Ctl>,
+    /// Admitted-connection count shared across reactors (`--max-conns`
+    /// stays a global bound however accepts are sharded).
+    pub(crate) conn_count: Arc<AtomicUsize>,
+    pub(crate) stats: Arc<ReactorStatsTable>,
+}
+
 pub(crate) struct Reactor {
+    id: usize,
     poller: Poller,
     listener: Option<TcpListener>,
+    inbox: Option<Arc<Mutex<Vec<TcpStream>>>>,
+    peers: Vec<HandoffPeer>,
+    next_peer: usize,
     router: Router,
     completions: Arc<CompletionQueue>,
     ctl: Arc<Ctl>,
     conns: HashMap<poll::Token, Conn>,
     next_token: poll::Token,
-    /// Pending-reply entries across all conns (drives the poll timeout
-    /// and the deadline scan; symmetric with promote/removal pops).
-    outstanding: usize,
-    last_expiry_scan: Instant,
+    /// Earliest pending-reply deadline or refusal linger across conns:
+    /// drives the poll timeout, so expiries fire when due instead of on
+    /// a coarse 500 ms tick. `None` with nothing outstanding.
+    next_deadline: Option<Instant>,
     /// Accepting is paused (listener interest dropped) until this
     /// deadline — the [`ACCEPT_BACKOFF`] after an accept failure.
     accept_paused_until: Option<Instant>,
+    conn_count: Arc<AtomicUsize>,
+    stats: Arc<ReactorStatsTable>,
     max_conns: usize,
     max_line_bytes: usize,
+    reply_timeout: Duration,
 }
 
 impl Reactor {
-    pub(crate) fn new(
-        listener: TcpListener,
-        router: Router,
-        cfg: &ServerConfig,
-        mut poller: Poller,
-        completions: Arc<CompletionQueue>,
-        ctl: Arc<Ctl>,
-    ) -> Result<Reactor> {
-        poller.add(poll::source_fd(&listener), LISTENER_TOKEN, true, false)?;
+    pub(crate) fn new(setup: ReactorSetup, router: Router, cfg: &ServerConfig) -> Result<Reactor> {
+        let ReactorSetup {
+            id,
+            listener,
+            inbox,
+            peers,
+            mut poller,
+            completions,
+            ctl,
+            conn_count,
+            stats,
+        } = setup;
+        if let Some(listener) = &listener {
+            poller.add(poll::source_fd(listener), LISTENER_TOKEN, true, false)?;
+        }
         Ok(Reactor {
+            id,
             poller,
-            listener: Some(listener),
+            listener,
+            inbox,
+            peers,
+            next_peer: 0,
             router,
             completions,
             ctl,
             conns: HashMap::new(),
             next_token: 1,
-            outstanding: 0,
-            last_expiry_scan: Instant::now(),
+            next_deadline: None,
             accept_paused_until: None,
+            conn_count,
+            stats,
             max_conns: cfg.max_conns,
             max_line_bytes: cfg.max_line_bytes,
+            reply_timeout: cfg.reply_timeout,
         })
+    }
+
+    fn stat(&self) -> &ReactorStats {
+        self.stats.slot(self.id)
+    }
+
+    /// Pull `next_deadline` earlier (never later: expiry scans push it
+    /// forward only after re-deriving it from live state).
+    fn bump_deadline(&mut self, at: Instant) {
+        self.next_deadline = Some(self.next_deadline.map_or(at, |cur| cur.min(at)));
     }
 
     pub(crate) fn run(mut self) {
         if let Err(e) = self.run_loop() {
-            crate::info!("reactor: fatal: {e:#}");
+            crate::info!("reactor {}: fatal: {e:#}", self.id);
         }
         // Unblock a serve shell waiting on the handshake even after a
         // fatal poller error (it degrades instead of hanging).
@@ -361,14 +509,15 @@ impl Reactor {
     fn run_loop(&mut self) -> Result<()> {
         let mut events: Vec<poll::Event> = Vec::new();
         loop {
-            // With replies outstanding, wake at least every 500 ms so
-            // per-request deadlines fire; with accepting paused, wake
-            // when the backoff elapses; fully idle, park until the
-            // waker rings (a new completion or the ctl handshake).
-            let mut timeout =
-                if self.outstanding > 0 { Some(Duration::from_millis(500)) } else { None };
+            // Wake exactly when the earliest pending deadline (reply
+            // timeout or refusal linger) is due, or when an accept
+            // backoff elapses; fully idle, park until the waker rings
+            // (a new completion, a handed-off socket, or the ctl
+            // handshake).
+            let now = Instant::now();
+            let mut timeout = self.next_deadline.map(|at| at.saturating_duration_since(now));
             if let Some(at) = self.accept_paused_until {
-                let left = at.saturating_duration_since(Instant::now());
+                let left = at.saturating_duration_since(now);
                 timeout = Some(timeout.map_or(left, |t| t.min(left)));
             }
             self.poller.wait(&mut events, timeout)?;
@@ -379,6 +528,7 @@ impl Reactor {
                     token => self.conn_event(token, ev.readable, ev.writable),
                 }
             }
+            self.drain_inbox();
             self.drain_completions();
             self.expire_deadlines();
             self.resume_accept_if_due();
@@ -395,18 +545,48 @@ impl Reactor {
                 None => return,
             };
             match accepted {
-                Ok((stream, _)) => self.register_conn(stream),
+                Ok((stream, _)) => self.place_conn(stream),
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
                 Err(e) => {
                     // EMFILE/ENFILE and friends: the backlog entry is
                     // still pending, so the level-triggered listener
                     // would report readable forever. Back off instead
                     // of hot-spinning the whole event loop.
-                    crate::debug!("reactor: accept error (pausing accepts): {e}");
+                    crate::debug!("reactor {}: accept error (pausing accepts): {e}", self.id);
                     self.pause_accept();
                     return;
                 }
             }
+        }
+    }
+
+    /// Route a freshly-accepted socket to its owning reactor: locally
+    /// in sharded-accept mode (`peers` empty), round-robin across the
+    /// peer inboxes in single-listener handoff mode.
+    fn place_conn(&mut self, stream: TcpStream) {
+        if self.peers.is_empty() {
+            self.register_conn(stream);
+            return;
+        }
+        let target = self.next_peer;
+        self.next_peer = (self.next_peer + 1) % self.peers.len();
+        if target == self.id {
+            self.register_conn(stream);
+            return;
+        }
+        let peer = &self.peers[target];
+        peer.inbox.lock().unwrap().push(stream);
+        peer.waker.wake();
+    }
+
+    /// Adopt sockets handed off by reactor 0 (single-listener mode).
+    fn drain_inbox(&mut self) {
+        let streams = match &self.inbox {
+            Some(inbox) => std::mem::take(&mut *inbox.lock().unwrap()),
+            None => return,
+        };
+        for stream in streams {
+            self.register_conn(stream);
         }
     }
 
@@ -433,24 +613,54 @@ impl Reactor {
     }
 
     fn register_conn(&mut self, stream: TcpStream) {
-        if self.conns.len() >= self.max_conns {
-            // Best-effort refusal line, then drop (closes the socket).
-            let mut stream = stream;
-            let _ = stream.set_nonblocking(true);
-            let _ = stream.write_all(format!("{TOO_MANY_CONNS_REPLY}\n").as_bytes());
-            crate::debug!("reactor: refusing connection over max_conns={}", self.max_conns);
-            return;
-        }
         if stream.set_nonblocking(true).is_err() {
             return;
         }
         let _ = stream.set_nodelay(true);
+        // `max_conns` is global across reactors: claim a slot first,
+        // give it back if the bound was already reached.
+        if self.conn_count.fetch_add(1, Ordering::SeqCst) >= self.max_conns {
+            self.conn_count.fetch_sub(1, Ordering::SeqCst);
+            self.refuse_conn(stream);
+            return;
+        }
         let token = self.next_token;
         self.next_token += 1;
         if self.poller.add(poll::source_fd(&stream), token, true, false).is_err() {
+            self.conn_count.fetch_sub(1, Ordering::SeqCst);
             return;
         }
-        self.conns.insert(token, Conn::new(stream, token));
+        self.stat().accepted.fetch_add(1, Ordering::Relaxed);
+        self.stat().conns.fetch_add(1, Ordering::Relaxed);
+        self.conns.insert(token, Conn::new(stream, token, self.reply_timeout));
+    }
+
+    /// Refuse a connection over `max_conns`. The socket was just set
+    /// nonblocking, so a bare `write_all` could hit `WouldBlock` (or a
+    /// partial write) and silently drop the refusal line; instead the
+    /// refused socket becomes a short-lived tracked conn owing exactly
+    /// one reply — it participates in normal write continuation, closes
+    /// once the line is flushed, and a [`REFUSAL_LINGER`] deadline
+    /// drops it even if the peer never reads.
+    fn refuse_conn(&mut self, stream: TcpStream) {
+        crate::debug!("reactor {}: refusing connection over max_conns={}", self.id, self.max_conns);
+        self.stat().refusals.fetch_add(1, Ordering::Relaxed);
+        let token = self.next_token;
+        self.next_token += 1;
+        if self.poller.add(poll::source_fd(&stream), token, false, false).is_err() {
+            return; // cannot even watch the socket: drop it
+        }
+        let mut conn = Conn::new(stream, token, self.reply_timeout);
+        conn.counted = false;
+        conn.stop_reading = true;
+        conn.reg_read = false;
+        conn.enqueue_done(TOO_MANY_CONNS_REPLY.to_string());
+        conn.close_after_req = Some(0);
+        let expire = Instant::now() + REFUSAL_LINGER;
+        conn.expire_at = Some(expire);
+        self.bump_deadline(expire);
+        self.conns.insert(token, conn);
+        self.service_conn(token);
     }
 
     fn conn_event(&mut self, token: poll::Token, readable: bool, writable: bool) {
@@ -472,7 +682,13 @@ impl Reactor {
         let Some(conn) = self.conns.get_mut(&token) else { return };
         let pushed =
             Self::process_lines(&self.router, &self.completions, conn, self.max_line_bytes);
-        self.outstanding += pushed;
+        if pushed > 0 {
+            self.stat().lines.fetch_add(pushed, Ordering::Relaxed);
+            // The entries' deadlines were taken inside process_lines; a
+            // bound taken here is never earlier, so expiry cannot fire
+            // late because of it.
+            self.bump_deadline(Instant::now() + self.reply_timeout);
+        }
     }
 
     /// Frame and dispatch every complete line buffered on `conn`.
@@ -540,7 +756,7 @@ impl Reactor {
                     conn.next_req += 1;
                     conn.pending.push_back(Pending {
                         req: req_id,
-                        deadline: Instant::now() + REPLY_TIMEOUT,
+                        deadline: Instant::now() + conn.reply_timeout,
                         state: PendingState::Waiting,
                     });
                     pushed += 1;
@@ -610,26 +826,52 @@ impl Reactor {
     }
 
     /// Answer requests that blew the per-request deadline (the reactor
-    /// equivalent of the threads mode's `recv_timeout` reply). Scans at
-    /// most every 500 ms and only while replies are outstanding.
+    /// equivalent of the threads mode's `recv_timeout` reply) and drop
+    /// refusal conns past their linger. Runs when `next_deadline` is
+    /// due — `run_loop` computes its poll timeout from that same
+    /// deadline, so expiry latency is one poll wakeup, not a flat
+    /// 500 ms tick plus a coarse scan gate.
     fn expire_deadlines(&mut self) {
-        if self.outstanding == 0 || self.last_expiry_scan.elapsed() < Duration::from_millis(500) {
+        if !self.next_deadline.is_some_and(|at| Instant::now() >= at) {
             return;
         }
-        self.last_expiry_scan = Instant::now();
         let now = Instant::now();
         let mut touched = Vec::new();
+        let mut kill = Vec::new();
+        let mut next: Option<Instant> = None;
         for (token, conn) in self.conns.iter_mut() {
+            if let Some(at) = conn.expire_at {
+                if at <= now {
+                    kill.push(*token);
+                    continue;
+                }
+                next = Some(next.map_or(at, |n| n.min(at)));
+            }
             let mut hit = false;
             for p in conn.pending.iter_mut() {
-                if matches!(p.state, PendingState::Waiting) && p.deadline <= now {
+                if !matches!(p.state, PendingState::Waiting) {
+                    continue;
+                }
+                if p.deadline <= now {
                     p.state = PendingState::Done(TIMEOUT_REPLY.to_string());
                     hit = true;
+                } else {
+                    // Deadlines grow with request order, so the first
+                    // live one is this conn's minimum.
+                    next = Some(next.map_or(p.deadline, |n| n.min(p.deadline)));
+                    break;
                 }
             }
             if hit {
                 touched.push(*token);
             }
+        }
+        self.next_deadline = next;
+        for token in kill {
+            if let Some(conn) = self.conns.get_mut(&token) {
+                conn.dead = true;
+            }
+            self.reap_if_dead(token);
         }
         for token in touched {
             self.service_conn(token);
@@ -640,38 +882,33 @@ impl Reactor {
     /// (pausing reads under write backpressure), and retire the conn
     /// when it is finished.
     fn service_conn(&mut self, token: poll::Token) {
-        let popped = match self.conns.get_mut(&token) {
-            Some(conn) => {
-                let popped = conn.promote_done_replies();
-                conn.flush();
-                let backlog = conn.backlog();
-                if !conn.dead {
-                    if conn.close_when_flushed && backlog == 0 {
-                        conn.dead = true;
-                    } else if conn.read_eof && conn.pending.is_empty() && backlog == 0 {
-                        conn.dead = true;
-                    }
+        if let Some(conn) = self.conns.get_mut(&token) {
+            conn.promote_done_replies();
+            conn.flush();
+            let backlog = conn.backlog();
+            if !conn.dead {
+                if conn.close_when_flushed && backlog == 0 {
+                    conn.dead = true;
+                } else if conn.read_eof && conn.pending.is_empty() && backlog == 0 {
+                    conn.dead = true;
                 }
-                if !conn.dead {
-                    let want_read =
-                        !conn.stop_reading && !conn.read_eof && backlog < WRITE_PAUSE_BYTES;
-                    let want_write = backlog > 0;
-                    if (want_read, want_write) != (conn.reg_read, conn.reg_write) {
-                        let fd = poll::source_fd(&conn.stream);
-                        match self.poller.modify(fd, token, want_read, want_write) {
-                            Ok(()) => {
-                                conn.reg_read = want_read;
-                                conn.reg_write = want_write;
-                            }
-                            Err(_) => conn.dead = true,
-                        }
-                    }
-                }
-                popped
             }
-            None => 0,
-        };
-        self.outstanding = self.outstanding.saturating_sub(popped);
+            if !conn.dead {
+                let want_read =
+                    !conn.stop_reading && !conn.read_eof && backlog < WRITE_PAUSE_BYTES;
+                let want_write = backlog > 0;
+                if (want_read, want_write) != (conn.reg_read, conn.reg_write) {
+                    let fd = poll::source_fd(&conn.stream);
+                    match self.poller.modify(fd, token, want_read, want_write) {
+                        Ok(()) => {
+                            conn.reg_read = want_read;
+                            conn.reg_write = want_write;
+                        }
+                        Err(_) => conn.dead = true,
+                    }
+                }
+            }
+        }
         self.reap_if_dead(token);
     }
 
@@ -679,7 +916,10 @@ impl Reactor {
         if self.conns.get(&token).is_some_and(|c| c.dead) {
             if let Some(conn) = self.conns.remove(&token) {
                 let _ = self.poller.delete(poll::source_fd(&conn.stream));
-                self.outstanding = self.outstanding.saturating_sub(conn.pending.len());
+                if conn.counted {
+                    self.conn_count.fetch_sub(1, Ordering::SeqCst);
+                    self.stat().conns.fetch_sub(1, Ordering::Relaxed);
+                }
             }
         }
     }
@@ -733,6 +973,7 @@ fn find_newline(buf: &[u8]) -> Option<usize> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::server::REPLY_TIMEOUT;
 
     #[test]
     fn ctl_stages_are_monotonic_and_waitable() {
@@ -779,7 +1020,7 @@ mod tests {
         let _client = TcpStream::connect(addr).unwrap();
         let (stream, _) = listener.accept().unwrap();
         stream.set_nonblocking(true).unwrap();
-        let mut conn = Conn::new(stream, 1);
+        let mut conn = Conn::new(stream, 1, REPLY_TIMEOUT);
         for req in 0..3u64 {
             conn.pending.push_back(Pending {
                 req,
@@ -809,7 +1050,7 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         let _client = TcpStream::connect(addr).unwrap();
         let (stream, _) = listener.accept().unwrap();
-        let mut conn = Conn::new(stream, 1);
+        let mut conn = Conn::new(stream, 1, REPLY_TIMEOUT);
         conn.pending.push_back(Pending {
             req: 0,
             deadline: Instant::now() + REPLY_TIMEOUT,
@@ -822,5 +1063,26 @@ mod tests {
         conn.pending[0].state = PendingState::Done("ack".into());
         assert_eq!(conn.promote_done_replies(), 1);
         assert!(conn.close_when_flushed, "conn closes once the ack is queued");
+    }
+
+    #[test]
+    fn reactor_stats_table_renders_one_row_per_reactor() {
+        let table = ReactorStatsTable::new(2);
+        assert_eq!(table.len(), 2);
+        assert!(!table.is_empty());
+        assert!(ReactorStatsTable::new(0).is_empty());
+        table.slot(0).accepted.fetch_add(3, Ordering::Relaxed);
+        table.slot(0).conns.fetch_add(2, Ordering::Relaxed);
+        table.slot(1).lines.fetch_add(7, Ordering::Relaxed);
+        table.slot(1).refusals.fetch_add(1, Ordering::Relaxed);
+        let json = format!("[{}]", table.render_rows());
+        let parsed = crate::util::json::Json::parse(&json).expect("valid JSON rows");
+        let rows = parsed.arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("reactor").unwrap().usize().unwrap(), 0);
+        assert_eq!(rows[0].get("accepted").unwrap().usize().unwrap(), 3);
+        assert_eq!(rows[0].get("conns").unwrap().usize().unwrap(), 2);
+        assert_eq!(rows[1].get("lines").unwrap().usize().unwrap(), 7);
+        assert_eq!(rows[1].get("refusals").unwrap().usize().unwrap(), 1);
     }
 }

@@ -16,7 +16,8 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::coordinator::session::EvictionKind;
-use crate::server::{Reply, Request, ServerConfig};
+use crate::server::reactor::ReactorStatsTable;
+use crate::server::{ReactorMode, Reply, Request, ServerConfig, StatsQuery};
 use crate::util::json::{escape, Json};
 
 /// Stable shard for a session id: FNV-1a (64-bit) of the id bytes, mod
@@ -69,11 +70,20 @@ pub(crate) struct Router {
     /// Live merged-stats collector threads (shared across clones),
     /// bounded by [`STATS_FANOUT_LIMIT`].
     stats_inflight: Arc<AtomicUsize>,
+    /// Per-reactor transport counters (one slot per reactor thread in
+    /// the epoll front-end, empty in threads mode): the reactors write
+    /// them, stats responses render them as `per_reactor`.
+    reactor_stats: Arc<ReactorStatsTable>,
 }
 
 impl Router {
     pub(crate) fn new(shards: Vec<Sender<(Request, Reply)>>, cfg: &ServerConfig) -> Router {
         assert!(!shards.is_empty());
+        // One counter slot per reactor thread; threads mode has none.
+        let reactors = match cfg.reactor {
+            ReactorMode::Epoll => cfg.reactors.max(1),
+            ReactorMode::Threads => 0,
+        };
         Router {
             shards,
             kv_budget_bytes: cfg.kv_budget_bytes,
@@ -81,6 +91,22 @@ impl Router {
             max_pending: cfg.max_pending,
             eviction: cfg.eviction,
             stats_inflight: Arc::new(AtomicUsize::new(0)),
+            reactor_stats: Arc::new(ReactorStatsTable::new(reactors)),
+        }
+    }
+
+    /// The shared per-reactor counter table (the serve shell hands each
+    /// reactor thread its slot).
+    pub(crate) fn reactor_stats(&self) -> Arc<ReactorStatsTable> {
+        self.reactor_stats.clone()
+    }
+
+    /// Pre-rendered `per_reactor` rows, or `None` in threads mode.
+    fn per_reactor_rows(&self) -> Option<String> {
+        if self.reactor_stats.is_empty() {
+            None
+        } else {
+            Some(self.reactor_stats.render_rows())
         }
     }
 
@@ -104,10 +130,13 @@ impl Router {
             };
         }
         match req {
-            Request::Stats { detail } => {
+            Request::Stats(mut q) => {
                 if n == 1 {
-                    let req = Request::Stats { detail };
-                    match self.shards[0].send((req, reply)) {
+                    // The executor cannot see the transport layer, so
+                    // the router injects the pre-rendered per-reactor
+                    // rows for it to embed.
+                    q.per_reactor = self.per_reactor_rows();
+                    match self.shards[0].send((Request::Stats(q), reply)) {
                         Ok(()) => true,
                         Err(SendError((_, reply))) => reply.send(STATS_UNAVAILABLE.into()).is_ok(),
                     }
@@ -116,9 +145,12 @@ impl Router {
                         self.stats_inflight.fetch_sub(1, Ordering::SeqCst);
                         return reply.send(STATS_UNAVAILABLE.into()).is_ok();
                     }
+                    // The merged view renders per_reactor itself; the
+                    // per-shard objects stay transport-free.
+                    q.per_reactor = None;
                     let router = self.clone();
                     std::thread::spawn(move || {
-                        let ok = router.merged_stats(detail, reply);
+                        let ok = router.merged_stats(q, reply);
                         router.stats_inflight.fetch_sub(1, Ordering::SeqCst);
                         ok
                     });
@@ -143,15 +175,24 @@ impl Router {
     /// Fan a stats request to every shard and reply with the merged
     /// view. Fails closed: a missing or unparsable shard yields
     /// `stats_unavailable` rather than a silently partial answer.
-    fn merged_stats(&self, detail: bool, reply: Reply) -> bool {
+    fn merged_stats(&self, q: StatsQuery, reply: Reply) -> bool {
         // Fan out to every shard BEFORE collecting, under one shared
         // deadline: total latency is the slowest shard (bounded at
         // 30 s, inside the connection's 60 s reply timeout), not the
         // sum of per-shard waits.
         let mut pending = Vec::with_capacity(self.shards.len());
         for tx in &self.shards {
+            // Shards see the prefix/limit bounds too (each shard's
+            // snapshot is sorted by id, so per-shard truncation keeps
+            // a superset of the global first-N rows).
+            let part = StatsQuery {
+                detail: q.detail,
+                prefix: q.prefix.clone(),
+                limit: q.limit,
+                per_reactor: None,
+            };
             let (part_tx, part_rx) = channel();
-            if tx.send((Request::Stats { detail }, Reply::channel(part_tx))).is_err() {
+            if tx.send((Request::Stats(part), Reply::channel(part_tx))).is_err() {
                 return reply.send(STATS_UNAVAILABLE.into()).is_ok();
             }
             pending.push(part_rx);
@@ -165,7 +206,7 @@ impl Router {
                 Err(_) => return reply.send(STATS_UNAVAILABLE.into()).is_ok(),
             }
         }
-        let merged = match self.merge_stats(&parts, detail) {
+        let merged = match self.merge_stats(&parts, &q) {
             Ok(m) => m,
             Err(_) => STATS_UNAVAILABLE.into(),
         };
@@ -178,8 +219,11 @@ impl Router {
     /// upper bound on the true global peak, since shards peak at
     /// different times). With `detail`, the shards' `sessions_detail`
     /// arrays are concatenated (routing keeps a session on one shard,
-    /// so the concatenation has no duplicates) and re-sorted by id.
-    fn merge_stats(&self, parts: &[String], detail: bool) -> Result<String> {
+    /// so the concatenation has no duplicates), re-sorted by id, and
+    /// truncated to `limit` — the global bound, applied after the
+    /// merge. In the epoll front-end a `per_reactor` array carries the
+    /// transport counters.
+    fn merge_stats(&self, parts: &[String], q: &StatsQuery) -> Result<String> {
         let parsed: Vec<Json> = parts.iter().map(|p| Json::parse(p)).collect::<Result<_>>()?;
         let sum = |key: &str| -> Result<usize> {
             let mut total = 0usize;
@@ -188,7 +232,7 @@ impl Router {
             }
             Ok(total)
         };
-        let detail_field = if detail {
+        let detail_field = if q.detail {
             let mut rows: Vec<(String, String)> = Vec::new();
             for p in &parsed {
                 for s in p.get("sessions_detail")?.arr()? {
@@ -196,18 +240,25 @@ impl Router {
                 }
             }
             rows.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+            if let Some(limit) = q.limit {
+                rows.truncate(limit);
+            }
             let joined: Vec<String> = rows.into_iter().map(|(_, row)| row).collect();
             format!("\"sessions_detail\":[{}],", joined.join(","))
         } else {
             String::new()
+        };
+        let reactor_field = match self.per_reactor_rows() {
+            Some(rows) => format!("\"per_reactor\":[{rows}],"),
+            None => String::new(),
         };
         Ok(format!(
             "{{\"ok\":true,\"kind\":\"stats\",\"shards\":{},\"eviction\":{},\"sessions\":{},\
              \"kv_bytes\":{},\"kv_budget_bytes\":{},\"session_ttl_secs\":{},\"max_pending\":{},\
              \"pending\":{},\"waiting\":{},\"requests\":{},\"compressions\":{},\"inferences\":{},\
              \"batches\":{},\"rejected_overload\":{},\"sessions_evicted\":{},\
-             \"sessions_reaped\":{},\"priority_overrides\":{},\"peak_kv_bytes\":{},{detail_field}\
-             \"per_shard\":[{}]}}",
+             \"sessions_reaped\":{},\"priority_overrides\":{},\"peak_kv_bytes\":{},\
+             {reactor_field}{detail_field}\"per_shard\":[{}]}}",
             self.shards.len(),
             escape(self.eviction.name()),
             sum("sessions")?,
@@ -332,7 +383,9 @@ mod tests {
                  \"peak_kv_bytes\":{kv}}}"
             )
         };
-        let merged = router.merge_stats(&[shard(0, 3, 100), shard(1, 5, 200)], false).unwrap();
+        let merged = router
+            .merge_stats(&[shard(0, 3, 100), shard(1, 5, 200)], &StatsQuery::default())
+            .unwrap();
         let j = Json::parse(&merged).expect("merged stats must be valid JSON");
         assert_eq!(j.get("shards").unwrap().usize().unwrap(), 2);
         assert_eq!(j.get("sessions").unwrap().usize().unwrap(), 8);
@@ -348,7 +401,8 @@ mod tests {
         assert_eq!(per[1].get("shard").unwrap().usize().unwrap(), 1);
         assert_eq!(per[1].get("sessions").unwrap().usize().unwrap(), 5);
         // A malformed shard part fails closed instead of mis-summing.
-        assert!(router.merge_stats(&[shard(0, 1, 1), "garbage".into()], false).is_err());
+        let q = StatsQuery::default();
+        assert!(router.merge_stats(&[shard(0, 1, 1), "garbage".into()], &q).is_err());
     }
 
     #[test]
@@ -363,7 +417,8 @@ mod tests {
         let router = Router::new(vec![tx0, tx1], &cfg);
         router.stats_inflight.store(STATS_FANOUT_LIMIT, Ordering::SeqCst);
         let (reply_tx, reply_rx) = channel();
-        assert!(router.dispatch(Request::Stats { detail: false }, Reply::channel(reply_tx)));
+        let req = Request::Stats(StatsQuery::default());
+        assert!(router.dispatch(req, Reply::channel(reply_tx)));
         let resp = Json::parse(&reply_rx.recv().unwrap()).unwrap();
         assert_eq!(resp.get("error").unwrap().str().unwrap(), "stats_unavailable");
         assert_eq!(
@@ -395,19 +450,67 @@ mod tests {
         // Shard order does not determine output order: rows re-sort by id.
         let shard1_detail = format!("{},{}", row("beta", 1), row("mu", 2));
         let parts = [shard(0, &row("zeta", 3)), shard(1, &shard1_detail)];
-        let merged = router.merge_stats(&parts, true).unwrap();
+        let merged = router.merge_stats(&parts, &StatsQuery::detailed()).unwrap();
         let j = Json::parse(&merged).expect("valid JSON");
         let list = j.get("sessions_detail").unwrap().arr().unwrap();
         let ids: Vec<&str> = list.iter().map(|s| s.get("id").unwrap().str().unwrap()).collect();
         assert_eq!(ids, vec!["beta", "mu", "zeta"]);
         assert_eq!(list[0].get("t").unwrap().usize().unwrap(), 1);
         assert_eq!(list[2].get("t").unwrap().usize().unwrap(), 3);
+        // A limit bounds the merged view globally, after the id sort:
+        // the first N rows across shards, not N per shard.
+        let q = StatsQuery { detail: true, limit: Some(2), ..Default::default() };
+        let merged = router.merge_stats(&parts, &q).unwrap();
+        let j = Json::parse(&merged).expect("valid JSON");
+        let list = j.get("sessions_detail").unwrap().arr().unwrap();
+        let ids: Vec<&str> = list.iter().map(|s| s.get("id").unwrap().str().unwrap()).collect();
+        assert_eq!(ids, vec!["beta", "mu"], "global first-2 by id");
         // Without the per-shard detail arrays, a detail merge fails
         // closed (stats_unavailable upstream) instead of fabricating.
         let bare = "{\"ok\":true,\"sessions\":1,\"kv_bytes\":8,\"pending\":0,\"waiting\":0,\
                     \"requests\":1,\"compressions\":1,\"inferences\":0,\"batches\":1,\
                     \"rejected_overload\":0,\"sessions_evicted\":0,\"sessions_reaped\":0,\
                     \"priority_overrides\":0,\"peak_kv_bytes\":8}";
-        assert!(router.merge_stats(&[bare.to_string()], true).is_err());
+        assert!(router.merge_stats(&[bare.to_string()], &StatsQuery::detailed()).is_err());
+    }
+
+    #[test]
+    fn per_reactor_rows_follow_the_transport_mode() {
+        use crate::coordinator::session::SessionPolicy;
+        // Epoll front-end with 2 reactors: the merged stats embed one
+        // per_reactor row per reactor thread.
+        let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(2));
+        cfg.reactor = ReactorMode::Epoll;
+        cfg.reactors = 2;
+        let (tx0, _rx0) = channel();
+        let (tx1, _rx1) = channel();
+        let router = Router::new(vec![tx0, tx1], &cfg);
+        let table = router.reactor_stats();
+        assert_eq!(table.len(), 2);
+        table.slot(1).accepted.fetch_add(5, Ordering::Relaxed);
+        let shard = |i: usize| {
+            format!(
+                "{{\"ok\":true,\"kind\":\"stats\",\"shard\":{i},\"sessions\":0,\"kv_bytes\":0,\
+                 \"pending\":0,\"waiting\":0,\"requests\":0,\"compressions\":0,\"inferences\":0,\
+                 \"batches\":0,\"rejected_overload\":0,\"sessions_evicted\":0,\
+                 \"sessions_reaped\":0,\"priority_overrides\":0,\"peak_kv_bytes\":0}}"
+            )
+        };
+        let merged = router.merge_stats(&[shard(0), shard(1)], &StatsQuery::default()).unwrap();
+        let j = Json::parse(&merged).expect("valid JSON");
+        let rows = j.get("per_reactor").unwrap().arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].get("reactor").unwrap().usize().unwrap(), 1);
+        assert_eq!(rows[1].get("accepted").unwrap().usize().unwrap(), 5);
+        // Threads mode has no reactors: the field is absent entirely.
+        let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(2));
+        cfg.reactor = ReactorMode::Threads;
+        let (tx0, _rx0) = channel();
+        let (tx1, _rx1) = channel();
+        let router = Router::new(vec![tx0, tx1], &cfg);
+        assert!(router.reactor_stats().is_empty());
+        let merged = router.merge_stats(&[shard(0), shard(1)], &StatsQuery::default()).unwrap();
+        let j = Json::parse(&merged).expect("valid JSON");
+        assert!(j.opt("per_reactor").is_none(), "threads mode must not fabricate reactors");
     }
 }

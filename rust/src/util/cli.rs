@@ -60,6 +60,24 @@ impl Args {
         }
     }
 
+    /// Integer flag with env fallback that also accepts the literal
+    /// `auto`, resolved to `auto_value` by the caller (serving uses
+    /// this for `--reactors auto` = min(4, cores)). Precedence matches
+    /// [`str_env`](Self::str_env): flag beats env beats `default`.
+    pub fn usize_env_auto(
+        &self,
+        key: &str,
+        env: &str,
+        auto_value: usize,
+        default: &str,
+    ) -> Result<usize> {
+        let raw = self.str_env(key, env, default);
+        if raw == "auto" {
+            return Ok(auto_value);
+        }
+        raw.parse().map_err(|_| anyhow!("--{key} expects an integer or `auto`, got {raw:?}"))
+    }
+
     pub fn require(&self, key: &str) -> Result<&str> {
         self.flags
             .get(key)
@@ -151,6 +169,22 @@ mod tests {
         assert_eq!(a.str_env("reactor", env, "auto"), "threads", "flag wins");
         let b = Args::parse(&argv(&[])).unwrap();
         assert_eq!(b.str_env("reactor", env, "auto"), "auto", "default when flag+env absent");
+    }
+
+    #[test]
+    fn usize_env_auto_resolves_auto_and_integers() {
+        // No set_var here either (see str_env test above); the env
+        // branch is shared with str_env and covered by the CI matrix.
+        let env = "CCM_TEST_CLI_USIZE_ENV_AUTO_UNSET";
+        let a = Args::parse(&argv(&["--reactors", "auto"])).unwrap();
+        assert_eq!(a.usize_env_auto("reactors", env, 4, "1").unwrap(), 4, "auto resolves");
+        let b = Args::parse(&argv(&["--reactors", "2"])).unwrap();
+        assert_eq!(b.usize_env_auto("reactors", env, 4, "auto").unwrap(), 2, "flag wins");
+        let c = Args::parse(&argv(&[])).unwrap();
+        assert_eq!(c.usize_env_auto("reactors", env, 4, "auto").unwrap(), 4, "default auto");
+        assert_eq!(c.usize_env_auto("reactors", env, 4, "1").unwrap(), 1, "default int");
+        let d = Args::parse(&argv(&["--reactors", "many"])).unwrap();
+        assert!(d.usize_env_auto("reactors", env, 4, "auto").is_err());
     }
 
     #[test]

@@ -14,7 +14,8 @@ use ccm::compress::{Compute, SimCompute};
 use ccm::coordinator::session::{EvictionKind, SessionPolicy};
 use ccm::model::Manifest;
 use ccm::server::{
-    serve_sharded, serve_with_backend, shard_for, BackendFactory, Client, ServerConfig,
+    serve_sharded, serve_with_backend, shard_for, BackendFactory, Client, ReactorMode,
+    ServerConfig,
 };
 use ccm::util::json::Json;
 
@@ -703,6 +704,202 @@ fn kv_budget_partitions_across_shards() {
     // transparently restart with empty memory).
     let next = client.query(&ids_on_shard(0, shards, 1)[0], &[9], 1).unwrap();
     assert_eq!(top1(&next), 9);
+    admin.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Multi-reactor accept sharding (PR 4): N reactor threads, each with
+// its own poller/conn-table/completion-queue, SO_REUSEPORT listeners
+// where available (single-listener round-robin handoff elsewhere).
+
+#[test]
+fn multi_reactor_accept_sharding_balances_and_shuts_down_cleanly() {
+    let reactors = 4usize;
+    let shards = 2usize;
+    let (addr, server) = start_sharded((0..shards).map(|_| sim()).collect(), |cfg| {
+        cfg.reactor = ReactorMode::Epoll;
+        cfg.reactors = reactors;
+    });
+    // 64 concurrent connections, each a full context+query round trip:
+    // replies must route back through the owning reactor untangled.
+    let n_conns = 64usize;
+    let mut clients: Vec<Client> = (0..n_conns).map(|_| Client::connect(&addr).unwrap()).collect();
+    for (i, client) in clients.iter_mut().enumerate() {
+        let session = format!("mr-{i}");
+        let ack = client.add_context(&session, &[1, 2]).unwrap();
+        assert_eq!(ack.get("t").unwrap().i64().unwrap(), 1, "{session}");
+        let next = client.query(&session, &[7], 1).unwrap();
+        assert_eq!(top1(&next), 7, "{session}");
+    }
+    let mut admin = Client::connect(&addr).unwrap();
+    let stats = wait_drained(&mut admin, Duration::from_secs(10));
+    let rows = stats.get("per_reactor").unwrap().arr().unwrap();
+    assert_eq!(rows.len(), reactors, "one stats row per reactor thread");
+    let (mut accepted_total, mut conns_total) = (0usize, 0usize);
+    for (i, row) in rows.iter().enumerate() {
+        assert_eq!(row.get("reactor").unwrap().usize().unwrap(), i);
+        let accepted = row.get("accepted").unwrap().usize().unwrap();
+        assert!(accepted > 0, "reactor {i} must own at least one of the {n_conns} conns");
+        assert!(row.get("lines").unwrap().usize().unwrap() > 0, "reactor {i} framed no lines");
+        assert_eq!(row.get("refusals").unwrap().usize().unwrap(), 0);
+        accepted_total += accepted;
+        conns_total += row.get("conns").unwrap().usize().unwrap();
+    }
+    assert_eq!(accepted_total, n_conns + 1, "every connection accepted exactly once");
+    assert_eq!(conns_total, n_conns + 1, "clients plus admin all still open");
+    assert_eq!(stats.get("sessions").unwrap().usize().unwrap(), n_conns);
+    // Staged multi-reactor shutdown: ack only after EVERY reactor
+    // released its listener — the port must be immediately rebindable.
+    admin.shutdown().unwrap();
+    drop(clients);
+    server.join().unwrap().unwrap();
+    let rebound = TcpListener::bind(&addr);
+    assert!(rebound.is_ok(), "port still bound after multi-reactor shutdown: {rebound:?}");
+}
+
+#[test]
+fn single_listener_handoff_spreads_conns_across_reactors() {
+    // Forced fallback for platforms/kernels without SO_REUSEPORT:
+    // reactor 0 owns the only listener and round-robins accepted
+    // sockets to its peers; the conn population must still spread.
+    let (addr, server) = start_server(sim(), |cfg| {
+        cfg.reactor = ReactorMode::Epoll;
+        cfg.reactors = 2;
+        cfg.force_accept_handoff = true;
+    });
+    let mut clients: Vec<Client> = (0..8).map(|_| Client::connect(&addr).unwrap()).collect();
+    for (i, client) in clients.iter_mut().enumerate() {
+        let next = client.query(&format!("ho-{i}"), &[5], 1).unwrap();
+        assert_eq!(top1(&next), 5);
+    }
+    let mut admin = Client::connect(&addr).unwrap();
+    let stats = wait_drained(&mut admin, Duration::from_secs(5));
+    let rows = stats.get("per_reactor").unwrap().arr().unwrap();
+    assert_eq!(rows.len(), 2);
+    let accepted: Vec<usize> =
+        rows.iter().map(|r| r.get("accepted").unwrap().usize().unwrap()).collect();
+    assert_eq!(accepted.iter().sum::<usize>(), 9, "8 clients + admin, each owned once");
+    assert!(accepted.iter().all(|a| *a > 0), "round-robin must reach every reactor: {accepted:?}");
+    admin.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn reply_timeout_is_answered_promptly() {
+    // Regression (PR 3 latent bug): the reactor polled on a flat 500 ms
+    // tick and additionally gated the expiry scan on a 500 ms cadence,
+    // so a timed-out request could be answered ~0.5–1 s late. The poll
+    // timeout now derives from the earliest pending deadline.
+    let mut slow = sim();
+    slow.infer_delay = Duration::from_millis(2000);
+    let (addr, server) = start_server(slow, |cfg| {
+        cfg.reactor = ReactorMode::Epoll;
+        cfg.reply_timeout = Duration::from_millis(200);
+    });
+    let mut client = Client::connect(&addr).unwrap();
+    let t0 = Instant::now();
+    let resp =
+        client.call("{\"op\":\"query\",\"session\":\"t\",\"tokens\":[3],\"topk\":1}").unwrap();
+    let elapsed = t0.elapsed();
+    assert_eq!(resp.get("ok").unwrap(), &Json::Bool(false), "{resp}");
+    assert_eq!(resp.get("error").unwrap().str().unwrap(), "timeout");
+    assert!(elapsed >= Duration::from_millis(180), "deadline must actually elapse: {elapsed:?}");
+    assert!(
+        elapsed < Duration::from_millis(480),
+        "timeout reply must track the deadline, not a 500 ms scan tick: {elapsed:?}"
+    );
+    // Let the stuck batch finish; its late reply must be dropped (the
+    // request was already answered) and the connection stay usable.
+    std::thread::sleep(Duration::from_millis(2300));
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.get("ok").unwrap(), &Json::Bool(true), "conn must survive the timeout");
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn refused_connections_always_receive_the_refusal_line() {
+    // Regression (PR 3 latent bug): the over-max_conns refusal was a
+    // bare write_all on a just-nonblocking socket — WouldBlock or a
+    // partial write silently dropped the line. Refusals are now
+    // tracked conns that flush through normal write continuation.
+    let (addr, server) = start_server(sim(), |cfg| {
+        cfg.reactor = ReactorMode::Epoll;
+        cfg.max_conns = 2;
+    });
+    let mut c1 = Client::connect(&addr).unwrap();
+    let mut c2 = Client::connect(&addr).unwrap();
+    assert_eq!(top1(&c1.query("a", &[1], 1).unwrap()), 1);
+    assert_eq!(top1(&c2.query("b", &[2], 1).unwrap()), 2);
+    // A simultaneous wave over the full budget: every refused socket
+    // must read the refusal line, then see a clean close.
+    let mut handles = Vec::new();
+    for _ in 0..8 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let stream = TcpStream::connect(&addr).unwrap();
+            stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            let mut reader = BufReader::new(stream);
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(!line.trim().is_empty(), "refusal line must arrive before close");
+            let j = Json::parse(line.trim()).unwrap();
+            assert_eq!(j.get("error").unwrap().str().unwrap(), "too_many_connections");
+            let mut eof = String::new();
+            assert_eq!(reader.read_line(&mut eof).unwrap(), 0, "refused conn must be closed");
+        }));
+    }
+    for h in handles {
+        h.join().expect("refused client");
+    }
+    // The admitted conns kept their slots and keep serving.
+    assert_eq!(top1(&c1.query("a", &[3], 1).unwrap()), 3);
+    assert_eq!(top1(&c2.query("b", &[4], 1).unwrap()), 4);
+    c1.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn stats_detail_prefix_and_limit_bound_the_view() {
+    // Pagination knobs for large fleets, across shards: prefix filters
+    // everywhere, limit applies globally after the merge (first N by
+    // id), and the aggregate counters stay untouched.
+    let shards = 2;
+    let (addr, server) = start_sharded((0..shards).map(|_| sim()).collect(), |_| {});
+    let mut client = Client::connect(&addr).unwrap();
+    for i in 0..4 {
+        client.add_context(&format!("user-{i}"), &[1, 2]).unwrap();
+    }
+    client.add_context("admin-0", &[3, 4]).unwrap();
+    let mut admin = Client::connect(&addr).unwrap();
+    wait_drained(&mut admin, Duration::from_secs(5));
+    let page = admin.stats_page("user-", 3).unwrap();
+    let list = page.get("sessions_detail").unwrap().arr().unwrap();
+    let ids: Vec<&str> = list.iter().map(|s| s.get("id").unwrap().str().unwrap()).collect();
+    assert_eq!(ids, vec!["user-0", "user-1", "user-2"], "first 3 user-* rows by id");
+    assert_eq!(page.get("sessions").unwrap().usize().unwrap(), 5, "counters stay global");
+    // Unbounded detail still reports the whole fleet.
+    let all = admin.stats_detailed().unwrap();
+    assert_eq!(all.get("sessions_detail").unwrap().arr().unwrap().len(), 5);
+    admin.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn stats_page_bounds_the_single_shard_view_too() {
+    let (addr, server) = start_server(sim(), |_| {});
+    let mut client = Client::connect(&addr).unwrap();
+    for i in 0..3 {
+        client.add_context(&format!("s-{i}"), &[1, 2]).unwrap();
+    }
+    let mut admin = Client::connect(&addr).unwrap();
+    wait_drained(&mut admin, Duration::from_secs(5));
+    let page = admin.stats_page("s-", 2).unwrap();
+    let list = page.get("sessions_detail").unwrap().arr().unwrap();
+    let ids: Vec<&str> = list.iter().map(|s| s.get("id").unwrap().str().unwrap()).collect();
+    assert_eq!(ids, vec!["s-0", "s-1"]);
+    assert_eq!(page.get("sessions").unwrap().usize().unwrap(), 3);
     admin.shutdown().unwrap();
     server.join().unwrap().unwrap();
 }

@@ -56,6 +56,14 @@ fn reactor_sustains_1024_connections_without_lost_replies_or_fd_leaks() {
     let fd_baseline = open_fds();
 
     let shards = 4usize;
+    // The CI stress matrix drives the reactor count through 1 and 4
+    // via CCM_SERVE_REACTORS; unset defaults to 1. Parsed strictly: a
+    // typo'd value must fail the gate loudly, not silently run one
+    // reactor while the job claims to cover four.
+    let reactors = match std::env::var("CCM_SERVE_REACTORS") {
+        Ok(v) => v.parse::<usize>().expect("CCM_SERVE_REACTORS must be a positive integer"),
+        Err(_) => 1,
+    };
     let manifest = Manifest::toy();
     let mut cfg =
         ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(manifest.scenario.comp_len_max));
@@ -63,6 +71,7 @@ fn reactor_sustains_1024_connections_without_lost_replies_or_fd_leaks() {
     // The gate targets the epoll reactor explicitly (the acceptance
     // criterion), whatever CCM_SERVE_REACTOR says for the host suite.
     cfg.reactor = ReactorMode::Epoll;
+    cfg.reactors = reactors;
     cfg.max_pending = 100_000;
     cfg.max_conns = 20_000;
     let (ready_tx, ready_rx) = channel();
@@ -145,6 +154,27 @@ fn reactor_sustains_1024_connections_without_lost_replies_or_fd_leaks() {
         "every request must be admitted exactly once"
     );
     assert_eq!(stats.get("rejected_overload").unwrap().usize().unwrap(), 0);
+
+    // Accept-sharding audit: one stats row per reactor thread, every
+    // reactor accepted a share of the population (kernel SO_REUSEPORT
+    // hashing or round-robin handoff — either must balance 1000+
+    // conns), nothing was refused, and every connection was owned by
+    // exactly one reactor.
+    let rows = stats.get("per_reactor").unwrap().arr().unwrap();
+    assert_eq!(rows.len(), reactors, "per_reactor rows must match CCM_SERVE_REACTORS");
+    let mut accepted_total = 0usize;
+    for (i, row) in rows.iter().enumerate() {
+        assert_eq!(row.get("reactor").unwrap().usize().unwrap(), i);
+        let accepted = row.get("accepted").unwrap().usize().unwrap();
+        assert!(accepted > 0, "reactor {i} accepted none of the {n_conns} connections");
+        assert_eq!(row.get("refusals").unwrap().usize().unwrap(), 0, "reactor {i}");
+        accepted_total += accepted;
+    }
+    assert_eq!(
+        accepted_total,
+        n_conns + n_churn + 1, // workers + churn + this admin conn
+        "every connection must be owned by exactly one reactor"
+    );
 
     // Session accounting after churn, via the per-session detail view.
     let detailed = admin.stats_detailed().unwrap();
