@@ -1,10 +1,13 @@
 //! Serving demo: start the coordinator server (optionally sharded into
-//! N executors with `--shards`), drive it with concurrent clients,
-//! report latency/throughput (the deployment story of Table 1).
+//! N executors with `--shards`, or into N worker PROCESSES with
+//! `--workers` — the example re-executes itself as each worker), drive
+//! it with concurrent clients, report latency/throughput (the
+//! deployment story of Table 1).
 //!
 //!   cargo run --release --example serve \
 //!     [-- --config test --clients 4 --shards 2 --eviction lru \
-//!         --reactor epoll --reactors auto --max-conns 16384]
+//!         --reactor epoll --reactors auto --max-conns 16384 \
+//!         --workers 2]
 
 use std::sync::mpsc::channel;
 
@@ -13,15 +16,50 @@ use ccm::coordinator::session::{EvictionKind, SessionPolicy};
 use ccm::datagen::{by_name, Split};
 use ccm::model::Checkpoint;
 use ccm::runtime::Runtime;
-use ccm::server::{serve, serve_sharded, Client, ReactorMode, ServerConfig};
+use ccm::server::{serve, serve_sharded, serve_workers, Client, ReactorMode, ServerConfig};
 use ccm::util::cli::Args;
+use ccm::util::json::Json;
+
+/// Worker mode (`--workers N` re-execs this binary per shard): build
+/// the same runtime + engine a `ccm worker` would and serve the IPC
+/// protocol; configuration travels in the environment because the
+/// re-exec carries no argv.
+fn example_worker_main() -> Result<()> {
+    let env_usize = |key: &str, default: usize| -> usize {
+        std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+    };
+    let config =
+        std::env::var("CCM_EXAMPLE_WORKER_CONFIG").unwrap_or_else(|_| "test".to_string());
+    let shard = env_usize("CCM_EXAMPLE_WORKER_SHARD", 0);
+    let shards = env_usize("CCM_EXAMPLE_WORKER_SHARDS", 1);
+    let manifest = ccm::model::Manifest::load(&ccm::model::artifact_dir(&config))?;
+    let comp_len = match env_usize("CCM_EXAMPLE_WORKER_COMP_LEN", 0) {
+        0 => manifest.scenario.comp_len_max,
+        n => n,
+    };
+    let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(comp_len));
+    cfg.shards = shards;
+    cfg.max_batch = 8;
+    cfg.max_wait = std::time::Duration::from_millis(2);
+    cfg.max_pending = 512;
+    cfg.eviction = EvictionKind::parse(
+        &std::env::var("CCM_EXAMPLE_WORKER_EVICTION").unwrap_or_else(|_| "oldest".to_string()),
+    )?;
+    let factory =
+        ccm::serve_backend_factories(&config, "", 7, comp_len, 1).pop().expect("one factory");
+    ccm::server::run_worker(&manifest, factory, cfg, shard, None)
+}
 
 fn main() -> Result<()> {
+    if std::env::var("CCM_EXAMPLE_WORKER").as_deref() == Ok("1") {
+        return example_worker_main();
+    }
     let args = Args::from_env()?;
     let config = args.str("config", "test");
     let n_clients = args.usize("clients", 4)?;
     let rounds = args.usize("rounds", 3)?;
     let shards = args.usize("shards", 1)?.max(1);
+    let workers = args.usize("workers", 0)?;
     let eviction = EvictionKind::parse(&args.str("eviction", "oldest"))?;
     // --reactor beats CCM_SERVE_REACTOR beats the platform default.
     let reactor_flag = args.str_env("reactor", "CCM_SERVE_REACTOR", "auto");
@@ -58,6 +96,26 @@ fn main() -> Result<()> {
         if max_conns > 0 {
             cfg.max_conns = max_conns;
         }
+        if workers > 0 {
+            // Cross-process topology: each shard executor is a child
+            // process of this example (re-exec'd in worker mode).
+            let exe = std::env::current_exe()?;
+            let config = cfg2.clone();
+            let mode = ccm::server::WorkerMode::Spawn {
+                count: workers,
+                launcher: Box::new(move |shard| {
+                    let mut cmd = std::process::Command::new(&exe);
+                    cmd.env("CCM_EXAMPLE_WORKER", "1")
+                        .env("CCM_EXAMPLE_WORKER_CONFIG", &config)
+                        .env("CCM_EXAMPLE_WORKER_SHARD", shard.to_string())
+                        .env("CCM_EXAMPLE_WORKER_SHARDS", workers.to_string())
+                        .env("CCM_EXAMPLE_WORKER_COMP_LEN", comp_len_flag.to_string())
+                        .env("CCM_EXAMPLE_WORKER_EVICTION", eviction.name());
+                    cmd
+                }),
+            };
+            return serve_workers(cfg, mode, Some(ready_tx));
+        }
         if shards == 1 {
             let rt = Runtime::load(manifest)?;
             let ck = Checkpoint::init(&rt.manifest, 7);
@@ -69,9 +127,41 @@ fn main() -> Result<()> {
         serve_sharded(&manifest, factories, cfg, Some(ready_tx))
     });
     let addr = ready_rx.recv()?;
+    if workers > 0 {
+        // `ready` fires when the FRONT-END port is bound; the worker
+        // processes are still starting and requests racing them get
+        // `shard_unavailable` by design. Gate the demo load on every
+        // per_worker stats row reporting up.
+        let mut admin = Client::connect(&addr)?;
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(120);
+        loop {
+            let stats = admin.stats()?;
+            let up = stats
+                .opt("per_worker")
+                .and_then(|v| v.arr().ok())
+                .map(|rows| {
+                    rows.len() == workers
+                        && rows.iter().all(|r| r.opt("up") == Some(&Json::Bool(true)))
+                })
+                .unwrap_or(false);
+            if up {
+                break;
+            }
+            anyhow::ensure!(
+                std::time::Instant::now() < deadline,
+                "worker processes did not come up"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+    }
     println!(
-        "server up at {addr} ({shards} shard(s), eviction {}, reactor {} x{reactors}); \
+        "server up at {addr} ({}, eviction {}, reactor {} x{reactors}); \
          {n_clients} clients x {rounds}",
+        if workers > 0 {
+            format!("{workers} worker process(es)")
+        } else {
+            format!("{shards} shard(s)")
+        },
         eviction.name(),
         reactor.map_or("auto", ReactorMode::name)
     );

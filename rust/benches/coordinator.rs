@@ -30,7 +30,35 @@ fn scenario() -> ScenarioConfig {
     }
 }
 
+/// Worker mode for the IPC bench scenario: the bench re-execs itself
+/// (env-gated, since bench binaries own `main`) as each shard's worker
+/// process over the same sub-ms SimCompute backend.
+fn bench_worker_main() -> anyhow::Result<()> {
+    use ccm::compress::{Compute, SimCompute};
+    use ccm::coordinator::session::SessionPolicy;
+    use ccm::server::{BackendFactory, ServerConfig};
+
+    let env_usize = |key: &str, default: usize| -> usize {
+        std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+    };
+    let sc = scenario();
+    let manifest = fake_manifest(sc.clone());
+    let mut sim = SimCompute::from_manifest(&manifest);
+    sim.compress_delay = Duration::from_micros(200);
+    sim.infer_delay = Duration::from_micros(200);
+    let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(sc.comp_len_max));
+    cfg.shards = env_usize("CCM_BENCH_WORKER_SHARDS", 1);
+    cfg.max_batch = 8;
+    cfg.max_wait = Duration::from_millis(1);
+    cfg.max_pending = 4096;
+    let factory: BackendFactory<'static> = Box::new(move || Ok(Box::new(sim) as Box<dyn Compute>));
+    ccm::server::run_worker(&manifest, factory, cfg, env_usize("CCM_BENCH_WORKER_SHARD", 0), None)
+}
+
 fn main() -> anyhow::Result<()> {
+    if std::env::var("CCM_BENCH_WORKER").as_deref() == Ok("1") {
+        return bench_worker_main();
+    }
     let budget = Duration::from_millis(500);
     let sc = scenario();
     let mut rows = Vec::new();
@@ -300,6 +328,68 @@ fn main() -> anyhow::Result<()> {
         server.join().expect("server thread")?;
         rows.push(vec![
             format!("serve/tcp-{conns}conn-epoll"),
+            format!("{:.3}", secs * 1e3 / total),
+            format!("{:.0} rounds/s across {sessions} sessions", total / secs),
+        ]);
+    }
+
+    // The sharded protocol load again, but with each shard executor in
+    // its own WORKER PROCESS behind the pipelined IPC proxy (the bench
+    // re-execs itself in worker mode). Read against serve/tcp-Nshard:
+    // the delta is what the process boundary costs per round trip.
+    {
+        use ccm::coordinator::session::SessionPolicy;
+        use ccm::server::{serve_workers, Client, ServerConfig, WorkerMode};
+        use std::sync::mpsc::channel;
+
+        let workers = 2usize;
+        let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(sc.comp_len_max));
+        cfg.max_batch = 8;
+        cfg.max_wait = Duration::from_millis(1);
+        cfg.max_pending = 4096;
+        let exe = std::env::current_exe()?;
+        let mode = WorkerMode::Spawn {
+            count: workers,
+            launcher: Box::new(move |shard| {
+                let mut cmd = std::process::Command::new(&exe);
+                cmd.env("CCM_BENCH_WORKER", "1")
+                    .env("CCM_BENCH_WORKER_SHARD", shard.to_string())
+                    .env("CCM_BENCH_WORKER_SHARDS", workers.to_string());
+                cmd
+            }),
+        };
+        let (ready_tx, ready_rx) = channel();
+        let server = std::thread::spawn(move || serve_workers(cfg, mode, Some(ready_tx)));
+        let addr = ready_rx.recv()?;
+        let n_clients = 8usize;
+        let rounds = 50usize;
+        let t0 = std::time::Instant::now();
+        let mut handles = Vec::new();
+        for c in 0..n_clients {
+            let addr = addr.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).unwrap();
+                let session = format!("bench{c}");
+                for r in 0..rounds {
+                    client.add_context(&session, &[1, 2, 3, 4]).unwrap();
+                    let next = client.query(&session, &[(r % 30 + 1) as i32], 3).unwrap();
+                    assert_eq!(next.len(), 3);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("worker-bench client");
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let total = (n_clients * rounds) as f64;
+        let mut admin = Client::connect(&addr)?;
+        let stats = admin.stats()?;
+        let sessions = stats.get("sessions")?.usize()?;
+        assert_eq!(stats.get("shard_restarts")?.usize()?, 0, "no worker may crash mid-bench");
+        admin.shutdown()?;
+        server.join().expect("server thread")?;
+        rows.push(vec![
+            format!("serve/tcp-{workers}worker-ipc"),
             format!("{:.3}", secs * 1e3 / total),
             format!("{:.0} rounds/s across {sessions} sessions", total / secs),
         ]);

@@ -154,15 +154,26 @@ pub fn serve_backend_factories(
 }
 
 /// `ccm serve --port 7878 --method ccm-concat [--shards 4]
-/// [--eviction oldest|lru|largest-bytes] [--max-pending 256]
-/// [--kv-budget-mb 512] [--session-ttl-secs 600]
-/// [--reactor auto|threads|epoll] [--reactors auto|N]
-/// [--max-conns 16384]`
+/// [--workers N | --worker-addr a:p,b:p] [--eviction
+/// oldest|lru|largest-bytes] [--max-pending 256] [--kv-budget-mb 512]
+/// [--session-ttl-secs 600] [--reactor auto|threads|epoll]
+/// [--reactors auto|N] [--max-conns 16384]`
 ///
 /// With `--shards N > 1`, each shard's executor thread owns a full
 /// runtime + engine (PJRT runtimes are thread-bound); sessions route
 /// to shards by a stable hash of the session id, and the KV budget is
 /// partitioned across shards.
+///
+/// With `--workers N`, shards are promoted to worker PROCESSES: this
+/// process keeps the connection front-end and spawns/supervises N
+/// `ccm worker` children (respawning crashed ones — `shard_restarts`
+/// in stats; while one is down its shard answers `shard_unavailable`).
+/// `--worker-addr` connects to externally-started workers instead (one
+/// `host:port` per shard, comma-separated; no spawning). The same
+/// routing hash applies, so Mem(t) stays pinned to one worker. Backend
+/// flags (`--method`, `--comp-len`, `--kv-budget-mb`, ...) are
+/// forwarded to spawned workers; externally-started workers must be
+/// given matching flags by the operator.
 ///
 /// `--reactor` picks the connection front-end: `epoll` multiplexes
 /// connections on polling reactor threads (the 10k-connection path),
@@ -209,6 +220,64 @@ pub fn cli_serve(args: &Args) -> Result<()> {
     if ttl_secs > 0 {
         cfg.session_ttl = Some(std::time::Duration::from_secs(ttl_secs));
     }
+    let workers = args.usize("workers", 0)?;
+    let worker_addrs = args.list("worker-addr", &[]);
+    if workers > 0 && !worker_addrs.is_empty() {
+        bail!(
+            "--workers (spawn {workers} supervised children) and --worker-addr (connect to \
+             {} external workers) are mutually exclusive",
+            worker_addrs.len()
+        );
+    }
+    if workers > 0 || !worker_addrs.is_empty() {
+        let mode = if worker_addrs.is_empty() {
+            // Spawn `ccm worker` children from this same binary,
+            // forwarding every backend-shaping flag so the worker
+            // executors are configured exactly like in-process shards
+            // would have been.
+            let exe = std::env::current_exe()?;
+            let mut forward: Vec<String> = vec![
+                "worker".into(),
+                "--shards".into(),
+                workers.to_string(),
+                "--config".into(),
+                config.clone(),
+                "--seed".into(),
+                seed.to_string(),
+                "--comp-len".into(),
+                comp_len.to_string(),
+                "--method".into(),
+                args.str("method", "ccm-concat"),
+                "--eviction".into(),
+                args.str("eviction", "oldest"),
+                "--max-batch".into(),
+                cfg.max_batch.to_string(),
+                "--max-wait-ms".into(),
+                args.u64("max-wait-ms", 2)?.to_string(),
+                "--max-pending".into(),
+                cfg.max_pending.to_string(),
+                "--kv-budget-mb".into(),
+                kv_budget_mb.to_string(),
+                "--session-ttl-secs".into(),
+                ttl_secs.to_string(),
+            ];
+            if !ckpt_path.is_empty() {
+                forward.push("--checkpoint".into());
+                forward.push(ckpt_path.clone());
+            }
+            server::WorkerMode::Spawn {
+                count: workers,
+                launcher: Box::new(move |shard| {
+                    let mut cmd = std::process::Command::new(&exe);
+                    cmd.args(&forward).arg("--shard").arg(shard.to_string());
+                    cmd
+                }),
+            }
+        } else {
+            server::WorkerMode::Connect { addrs: worker_addrs }
+        };
+        return server::serve_workers(cfg, mode, None);
+    }
     if shards == 1 {
         let rt = runtime::Runtime::load(manifest)?;
         let ck = load_or_init_checkpoint(&rt.manifest, &ckpt_path, seed)?;
@@ -217,6 +286,51 @@ pub fn cli_serve(args: &Args) -> Result<()> {
     }
     let factories = serve_backend_factories(&config, &ckpt_path, seed, comp_len, shards);
     server::serve_sharded(&manifest, factories, cfg, None)
+}
+
+/// `ccm worker --shard K --shards N [--addr 127.0.0.1:0] [backend
+/// flags as for serve]` — run ONE shard executor as its own process,
+/// serving the newline-framed JSON IPC protocol for a `ccm serve
+/// --workers N` front-end (which spawns this automatically; running it
+/// by hand pairs with `--worker-addr`). Binds `--addr` (port 0 by
+/// default) and prints the `CCM_WORKER_READY <addr>` handshake on
+/// stdout once the listener is up. `--shard`/`--shards` position the
+/// worker in the fleet: its slice of `--kv-budget-mb` partitions
+/// exactly as for in-process shards.
+pub fn cli_worker(args: &Args) -> Result<()> {
+    let config = args.str("config", "main");
+    let manifest = model::Manifest::load(&model::artifact_dir(&config))?;
+    let ckpt_path = args.str("checkpoint", "");
+    let seed = args.u64("seed", 7)?;
+    let comp_len = args.usize("comp-len", manifest.scenario.comp_len_max)?;
+    let method = masks::Method::parse(&args.str("method", "ccm-concat"))?;
+    let policy = match method {
+        masks::Method::CcmMerge => coordinator::session::SessionPolicy::merge(comp_len),
+        _ => coordinator::session::SessionPolicy::concat(comp_len),
+    };
+    let shards = args.usize("shards", 1)?.max(1);
+    let shard = args.usize("shard", 0)?;
+    if shard >= shards {
+        bail!("--shard {shard} out of range for --shards {shards}");
+    }
+    let mut cfg = server::ServerConfig::new(args.str("addr", "127.0.0.1:0"), policy);
+    cfg.shards = shards;
+    cfg.eviction = coordinator::session::EvictionKind::parse(&args.str("eviction", "oldest"))?;
+    cfg.max_batch = args.usize("max-batch", 8)?;
+    cfg.max_wait = std::time::Duration::from_millis(args.u64("max-wait-ms", 2)?);
+    cfg.max_pending = args.usize("max-pending", 256)?;
+    let kv_budget_mb = args.usize("kv-budget-mb", 0)?;
+    if kv_budget_mb > 0 {
+        cfg.kv_budget_bytes = Some(kv_budget_mb * (1 << 20));
+    }
+    let ttl_secs = args.u64("session-ttl-secs", 0)?;
+    if ttl_secs > 0 {
+        cfg.session_ttl = Some(std::time::Duration::from_secs(ttl_secs));
+    }
+    let factory = serve_backend_factories(&config, &ckpt_path, seed, comp_len, 1)
+        .pop()
+        .expect("one worker factory");
+    server::run_worker(&manifest, factory, cfg, shard, None)
 }
 
 fn load_or_init_checkpoint(

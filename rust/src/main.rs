@@ -4,6 +4,7 @@
 //!   train      — pretrain the base LM and/or train compression adapters
 //!   eval       — evaluate methods on the synthetic online-inference suites
 //!   serve      — run the JSON-lines TCP serving coordinator
+//!   worker     — run one shard executor process for a --workers serve
 //!   stream     — streaming-mode perplexity (PG19-style, Figure 8)
 //!   reproduce  — regenerate a paper table/figure (see DESIGN.md §6)
 //!   info       — print manifest/runtime information
@@ -28,6 +29,7 @@ fn main() -> Result<()> {
                 "train" => ccm::cli_train(&args),
                 "eval" => ccm::cli_eval(&args),
                 "serve" => ccm::cli_serve(&args),
+                "worker" => ccm::cli_worker(&args),
                 "stream" => ccm::cli_stream(&args),
                 "reproduce" => ccm::cli_reproduce(&args),
                 _ => {
@@ -84,7 +86,10 @@ fn print_help() {
            eval --dataset metaicl ...   evaluate methods over time steps\n\
            serve --port 7878            start the serving coordinator\n\
                  [--shards N]           executor shards (stable session routing)\n\
+                 [--workers N]          one worker PROCESS per shard (supervised)\n\
+                 [--worker-addr a,b]    connect to externally-started workers\n\
                  [--eviction POLICY]    oldest | lru | largest-bytes\n\
+           worker --shard K --shards N  run one shard executor process (IPC)\n\
            stream --budget 160          streaming perplexity (Figure 8)\n\
            reproduce --exp table1|fig7  regenerate a paper table/figure\n"
     );

@@ -4,7 +4,10 @@
 //! replicated unit of multi-executor serving: each shard enforces its
 //! own slice of the global KV budget, reaps its own idle sessions, and
 //! keeps its own [`crate::coordinator::metrics::Metrics`]; the router
-//! merges the per-shard stats into the global view.
+//! merges the per-shard stats into the global view. The executor is
+//! transport-agnostic — the same loop runs on an in-process shard
+//! thread (`serve_sharded`) or inside a `ccm worker` process behind
+//! the IPC boundary (`worker.rs`): only the [`Reply`] flavor differs.
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};

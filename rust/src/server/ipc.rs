@@ -1,0 +1,811 @@
+//! Newline-framed JSON IPC between the serving front-end and shard
+//! worker processes (`ccm worker`), plus the front-end's per-worker
+//! connection proxy.
+//!
+//! ## Framing
+//!
+//! One frame per line. Requests travel front-end → worker as the normal
+//! protocol object with a pipelining `id` added:
+//!
+//! ```text
+//! {"id":7,"op":"query","session":"u1","tokens":[9,2],"topk":5}
+//! ```
+//!
+//! and replies travel back as an `{"id":N,"resp":...}` envelope whose
+//! `resp` is the executor's reply object embedded verbatim:
+//!
+//! ```text
+//! {"id":7,"resp":{"ok":true,"kind":"query","next":[[9,-0.1]]}}
+//! ```
+//!
+//! Because every frame is newline-terminated and every embedded string
+//! is JSON-escaped (`\n` never appears raw inside a frame), a torn read
+//! can never desync the stream: [`FrameBuf`] reassembles lines from
+//! arbitrarily split reads, an unparsable line is skipped (logged) and
+//! framing resynchronises at the next newline, and an overlong line is
+//! discarded through its terminator without buffering more than
+//! [`IPC_MAX_FRAME`] bytes. Property tests below drive the codec
+//! through split-at-every-byte feeds and garbage-prefix resync.
+//!
+//! ## The proxy
+//!
+//! [`WorkerProxy`] is the front-end side of one worker connection: a
+//! pipelined request-id map (dispatch never blocks the caller — frames
+//! go to a writer thread through an unbounded queue, replies come back
+//! on a reader thread that completes the pending entry), a per-worker
+//! connection state machine (`Down` ⇄ `Up`; while `Down` every
+//! session-routed request is refused with the documented
+//! `shard_unavailable` reply instead of hanging), and shutdown-ack
+//! interception (worker drain acks are stashed until the serve shell
+//! has released the listener, preserving the "ack means port released"
+//! contract across the process boundary). Reconnect-with-backoff and
+//! process respawn live in the supervisor (`worker.rs`); the proxy only
+//! tracks the current connection epoch so a stale reader from a
+//! previous connection can never tear down its successor.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::server::{fmt_tokens, Reply, Request, SHARD_UNAVAILABLE};
+use crate::util::json::{escape, Json};
+
+/// Upper bound on one IPC frame (a stats reply embedding a large
+/// `sessions_detail` view is the biggest legitimate frame). Beyond it
+/// the decoder discards through the next newline instead of buffering.
+pub(crate) const IPC_MAX_FRAME: usize = 16 << 20;
+
+// ---------------------------------------------------------------------
+// Incremental line framing.
+
+/// Reassembles newline-terminated frames from arbitrarily split reads.
+/// Overlong lines (no newline within `max_line` buffered bytes) are
+/// dropped through their terminator so a corrupt peer cannot pin
+/// memory; the next line frames normally. Framing advances a cursor
+/// and compacts the consumed prefix once per `feed` — one IPC socket
+/// multiplexes a whole shard's pipelined traffic, so a per-line front
+/// drain would memmove the remaining buffer per frame and make bursts
+/// quadratic (the same fix the reactor's line framing uses).
+pub(crate) struct FrameBuf {
+    buf: Vec<u8>,
+    /// Start of the unconsumed region of `buf`.
+    cursor: usize,
+    max_line: usize,
+    discarding: bool,
+}
+
+impl FrameBuf {
+    pub(crate) fn new(max_line: usize) -> FrameBuf {
+        FrameBuf { buf: Vec::new(), cursor: 0, max_line, discarding: false }
+    }
+
+    pub(crate) fn feed(&mut self, bytes: &[u8]) {
+        if self.cursor > 0 {
+            // One compaction for everything consumed since the last
+            // feed (amortized O(1) per byte).
+            self.buf.drain(..self.cursor);
+            self.cursor = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Pop the next complete line (without its newline), or `None` when
+    /// no complete line is buffered yet.
+    pub(crate) fn next_line(&mut self) -> Option<String> {
+        loop {
+            let rel = self.buf[self.cursor..].iter().position(|&b| b == b'\n');
+            let Some(rel) = rel else {
+                if self.buf.len() - self.cursor > self.max_line {
+                    // Cap enforcement: drop the partial line, resume at
+                    // the next newline.
+                    self.buf.clear();
+                    self.cursor = 0;
+                    self.discarding = true;
+                }
+                return None;
+            };
+            let (start, end) = (self.cursor, self.cursor + rel);
+            self.cursor = end + 1;
+            if self.discarding {
+                self.discarding = false;
+                continue;
+            }
+            if end - start > self.max_line {
+                continue; // overlong but terminated: skip it whole
+            }
+            return Some(String::from_utf8_lossy(&self.buf[start..end]).into_owned());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Frame codec.
+
+/// Encode one request frame (newline included). `Stats.per_reactor` is
+/// router-internal plumbing and never crosses the IPC boundary: the
+/// front-end renders transport rows itself in the merged view.
+pub(crate) fn encode_request(id: u64, req: &Request) -> String {
+    match req {
+        Request::Context { session, tokens } => format!(
+            "{{\"id\":{id},\"op\":\"context\",\"session\":{},\"tokens\":{}}}\n",
+            escape(session),
+            fmt_tokens(tokens)
+        ),
+        Request::Query { session, tokens, topk } => format!(
+            "{{\"id\":{id},\"op\":\"query\",\"session\":{},\"tokens\":{},\"topk\":{topk}}}\n",
+            escape(session),
+            fmt_tokens(tokens)
+        ),
+        Request::Stats(q) => {
+            let mut s = format!("{{\"id\":{id},\"op\":\"stats\",\"detail\":{}", q.detail);
+            if let Some(prefix) = &q.prefix {
+                s.push_str(&format!(",\"prefix\":{}", escape(prefix)));
+            }
+            if let Some(limit) = q.limit {
+                s.push_str(&format!(",\"limit\":{limit}"));
+            }
+            s.push_str("}\n");
+            s
+        }
+        Request::Shutdown => format!("{{\"id\":{id},\"op\":\"shutdown\"}}\n"),
+    }
+}
+
+/// Decode a request frame into its pipelining id and the request.
+pub(crate) fn decode_request(line: &str) -> Result<(u64, Request)> {
+    let j = Json::parse(line).context("request frame")?;
+    let id = frame_id_of(&j)?;
+    let req = Request::from_json(&j).context("request frame body")?;
+    Ok((id, req))
+}
+
+/// Encode one reply frame. `resp` must be a complete JSON object (every
+/// executor reply is); it is embedded verbatim so the bytes the client
+/// sees are exactly what the worker's executor produced.
+pub(crate) fn encode_reply(id: u64, resp: &str) -> String {
+    format!("{{\"id\":{id},\"resp\":{resp}}}\n")
+}
+
+/// Decode a reply frame to `(id, resp)`. The envelope layout is fixed
+/// (`{"id":N,"resp":...}`, produced only by [`encode_reply`]), so the
+/// reply body can be recovered verbatim — no re-rendering — while the
+/// embedded-JSON validation still rejects torn or corrupt frames.
+pub(crate) fn decode_reply(line: &str) -> Result<(u64, String)> {
+    let rest = line.strip_prefix("{\"id\":").ok_or_else(|| anyhow!("not a reply frame"))?;
+    let digits = rest.bytes().take_while(|b| b.is_ascii_digit()).count();
+    if digits == 0 {
+        bail!("reply frame missing id");
+    }
+    let id: u64 = rest[..digits].parse().context("reply frame id")?;
+    let body = rest[digits..]
+        .strip_prefix(",\"resp\":")
+        .and_then(|b| b.strip_suffix('}'))
+        .ok_or_else(|| anyhow!("malformed reply envelope"))?;
+    Json::parse(body).context("reply frame body")?;
+    Ok((id, body.to_string()))
+}
+
+/// Best-effort id extraction from a frame that failed to decode as a
+/// request, so the worker can still answer a malformed body instead of
+/// dropping it silently (id-less garbage is skipped: resync).
+pub(crate) fn frame_id(line: &str) -> Option<u64> {
+    let j = Json::parse(line).ok()?;
+    frame_id_of(&j).ok()
+}
+
+fn frame_id_of(j: &Json) -> Result<u64> {
+    let id = j.get("id")?.i64()?;
+    if id < 0 {
+        bail!("negative frame id {id}");
+    }
+    Ok(id as u64)
+}
+
+// ---------------------------------------------------------------------
+// Worker-side reply handle.
+
+/// The worker-process [`Reply`]: tags the executor's reply with the
+/// request's pipelining id and hands it to the connection's writer
+/// thread, which frames it onto the IPC socket.
+#[derive(Clone)]
+pub(crate) struct IpcReplyHandle {
+    pub(crate) id: u64,
+    pub(crate) out: Sender<(u64, String)>,
+}
+
+impl IpcReplyHandle {
+    pub(crate) fn send(&self, msg: String) -> std::result::Result<(), ()> {
+        self.out.send((self.id, msg)).map_err(|_| ())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-worker stats (the merged view's `per_worker` rows).
+
+/// Live per-worker supervision counters. The supervisor writes `pid`
+/// and `restarts`, the proxy writes `up` and `rtt_micros`, the router
+/// renders them into stats.
+#[derive(Default)]
+pub(crate) struct WorkerSlot {
+    /// Live worker process id; 0 while no process is running.
+    pub(crate) pid: AtomicU64,
+    /// Times the supervisor respawned this worker after an unexpected
+    /// exit (the `shard_restarts` counter).
+    pub(crate) restarts: AtomicUsize,
+    /// Most recent request→reply round trip over the IPC socket, in
+    /// microseconds (clamped to >= 1); 0 until the first reply.
+    pub(crate) rtt_micros: AtomicU64,
+    /// The proxy currently holds a live connection to this worker.
+    pub(crate) up: AtomicBool,
+}
+
+/// One slot per worker shard; absent entirely for in-process shards.
+pub(crate) struct WorkerStatsTable {
+    slots: Vec<WorkerSlot>,
+}
+
+impl WorkerStatsTable {
+    pub(crate) fn new(workers: usize) -> WorkerStatsTable {
+        WorkerStatsTable { slots: (0..workers).map(|_| WorkerSlot::default()).collect() }
+    }
+
+    pub(crate) fn count(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub(crate) fn slot(&self, worker: usize) -> &WorkerSlot {
+        &self.slots[worker]
+    }
+
+    pub(crate) fn total_restarts(&self) -> usize {
+        self.slots.iter().map(|s| s.restarts.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Comma-joined JSON rows (the caller wraps them in
+    /// `"per_worker":[...]`). `pid`/`rtt_ms` are `null` while the
+    /// worker is down / before its first reply.
+    pub(crate) fn render_rows(&self) -> String {
+        let rows: Vec<String> = self
+            .slots
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let pid = match s.pid.load(Ordering::Relaxed) {
+                    0 => "null".to_string(),
+                    p => p.to_string(),
+                };
+                let rtt = match s.rtt_micros.load(Ordering::Relaxed) {
+                    0 => "null".to_string(),
+                    us => format!("{:.3}", us as f64 / 1e3),
+                };
+                format!(
+                    "{{\"worker\":{i},\"pid\":{pid},\"up\":{},\"restarts\":{},\"rtt_ms\":{rtt}}}",
+                    s.up.load(Ordering::Relaxed),
+                    s.restarts.load(Ordering::Relaxed),
+                )
+            })
+            .collect();
+        rows.join(",")
+    }
+}
+
+// ---------------------------------------------------------------------
+// The front-end proxy for one worker.
+
+struct PendingRemote {
+    reply: Reply,
+    shutdown: bool,
+    sent_at: Instant,
+}
+
+struct ProxyInner {
+    /// `Some` while a connection is up: the writer thread's inbox.
+    out: Option<Sender<String>>,
+    pending: HashMap<u64, PendingRemote>,
+    next_id: u64,
+}
+
+/// Front-end endpoint of one worker's IPC connection. Cheap to share
+/// (`Arc`); the router dispatches through it, the supervisor attaches
+/// and detaches connections around worker lifecycles.
+pub(crate) struct WorkerProxy {
+    shard: usize,
+    inner: Mutex<ProxyInner>,
+    table: Arc<WorkerStatsTable>,
+    /// A shutdown request has been dispatched to this worker.
+    shutdown: AtomicBool,
+    /// The worker acked its drain (or died after shutdown was
+    /// requested, which drains it maximally: its sessions are gone).
+    drain_done: AtomicBool,
+    /// Shutdown requesters to ack once the serve shell has released the
+    /// listener — the cross-process form of the executor's returned
+    /// shutdown repliers.
+    drained: Mutex<Vec<Reply>>,
+    /// Connection generation; a reader from epoch E tears down state
+    /// only while the proxy is still in epoch E.
+    epoch: AtomicU64,
+}
+
+impl WorkerProxy {
+    pub(crate) fn new(shard: usize, table: Arc<WorkerStatsTable>) -> WorkerProxy {
+        WorkerProxy {
+            shard,
+            inner: Mutex::new(ProxyInner { out: None, pending: HashMap::new(), next_id: 0 }),
+            table,
+            shutdown: AtomicBool::new(false),
+            drain_done: AtomicBool::new(false),
+            drained: Mutex::new(Vec::new()),
+            epoch: AtomicU64::new(0),
+        }
+    }
+
+    pub(crate) fn shard(&self) -> usize {
+        self.shard
+    }
+
+    pub(crate) fn slot(&self) -> &WorkerSlot {
+        self.table.slot(self.shard)
+    }
+
+    pub(crate) fn is_up(&self) -> bool {
+        self.slot().up.load(Ordering::SeqCst)
+    }
+
+    pub(crate) fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    pub(crate) fn drain_done(&self) -> bool {
+        self.drain_done.load(Ordering::SeqCst)
+    }
+
+    /// The shutdown repliers owed an ack at port release.
+    pub(crate) fn take_drained(&self) -> Vec<Reply> {
+        std::mem::take(&mut *self.drained.lock().unwrap())
+    }
+
+    /// Route one request to the worker. `Err` returns the reply so the
+    /// router can answer `shard_unavailable` — the worker is down (its
+    /// supervisor may yet respawn it; the refusal is immediate either
+    /// way, never a hang). Shutdown requests always succeed: delivered
+    /// over IPC when the worker is up, recorded as trivially drained
+    /// when it is down (a dead worker has nothing left to drain).
+    ///
+    /// Ordering invariant: the `shutdown` flag is published only AFTER
+    /// the requester's reply is reachable (inserted into `pending`, or
+    /// pushed to `drained`). Supervisors exit on that flag and the
+    /// serve shell collects `drained` right after they join, so a
+    /// flag-first ordering could let the collection race ahead of the
+    /// recording and strand the client's shutdown ack.
+    pub(crate) fn dispatch(&self, req: Request, reply: Reply) -> std::result::Result<(), Reply> {
+        let is_shutdown = matches!(req, Request::Shutdown);
+        let mut inner = self.inner.lock().unwrap();
+        let Some(out) = inner.out.clone() else {
+            drop(inner);
+            if is_shutdown {
+                self.drained.lock().unwrap().push(reply);
+                self.drain_done.store(true, Ordering::SeqCst);
+                self.shutdown.store(true, Ordering::SeqCst);
+                return Ok(());
+            }
+            return Err(reply);
+        };
+        let id = inner.next_id;
+        inner.next_id += 1;
+        let line = encode_request(id, &req);
+        inner
+            .pending
+            .insert(id, PendingRemote { reply, shutdown: is_shutdown, sent_at: Instant::now() });
+        if out.send(line).is_err() {
+            // Writer raced away between the state check and the send.
+            let p = inner.pending.remove(&id).expect("just inserted");
+            drop(inner);
+            if is_shutdown {
+                self.drained.lock().unwrap().push(p.reply);
+                self.drain_done.store(true, Ordering::SeqCst);
+                self.shutdown.store(true, Ordering::SeqCst);
+                return Ok(());
+            }
+            return Err(p.reply);
+        }
+        drop(inner);
+        if is_shutdown {
+            self.shutdown.store(true, Ordering::SeqCst);
+        }
+        Ok(())
+    }
+
+    /// Adopt a fresh connection: spawn its writer and reader threads
+    /// and flip the proxy `Up`. Any previous epoch's reader becomes
+    /// inert (its detach no-ops on the epoch check).
+    pub(crate) fn attach(self: &Arc<Self>, stream: TcpStream) -> Result<()> {
+        let _ = stream.set_nodelay(true);
+        let write_half = stream.try_clone().context("clone worker stream")?;
+        let epoch = self.epoch.fetch_add(1, Ordering::SeqCst) + 1;
+        let (out_tx, out_rx) = channel::<String>();
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.out = Some(out_tx);
+        }
+        self.slot().up.store(true, Ordering::SeqCst);
+        let shard = self.shard;
+        let proxy = self.clone();
+        std::thread::spawn(move || {
+            let mut write_half = write_half;
+            while let Ok(line) = out_rx.recv() {
+                if write_half.write_all(line.as_bytes()).is_err() {
+                    break;
+                }
+            }
+            // A write failure means the connection is gone; the reader
+            // observes the same and runs the (idempotent) detach.
+        });
+        std::thread::spawn(move || {
+            let mut stream = stream;
+            let mut frames = FrameBuf::new(IPC_MAX_FRAME);
+            let mut scratch = [0u8; 64 * 1024];
+            loop {
+                match stream.read(&mut scratch) {
+                    Ok(0) => break,
+                    Ok(n) => {
+                        frames.feed(&scratch[..n]);
+                        while let Some(line) = frames.next_line() {
+                            match decode_reply(&line) {
+                                Ok((id, resp)) => proxy.complete(id, resp),
+                                Err(e) => {
+                                    // Resync: skip the bad frame, keep
+                                    // the connection (its peer is our
+                                    // own worker; torn frames cannot
+                                    // happen, garbage is logged).
+                                    crate::debug!("worker {shard}: bad reply frame: {e:#}");
+                                }
+                            }
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(_) => break,
+                }
+            }
+            proxy.detach(epoch);
+        });
+        Ok(())
+    }
+
+    /// Complete a pending request with the worker's reply. Unknown ids
+    /// (already failed over by a detach) are dropped, mirroring the
+    /// reactor dropping late replies for timed-out requests. Shutdown
+    /// acks move into `drained` UNDER the state lock, so a supervisor
+    /// running `force_detach` + collect after the worker exits can
+    /// never observe the ack in neither place (which would lose the
+    /// client's shutdown reply).
+    fn complete(&self, id: u64, resp: String) {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(p) = inner.pending.remove(&id) else { return };
+        let rtt = p.sent_at.elapsed().as_micros().max(1) as u64;
+        self.slot().rtt_micros.store(rtt, Ordering::Relaxed);
+        if p.shutdown {
+            self.drained.lock().unwrap().push(p.reply);
+            self.drain_done.store(true, Ordering::SeqCst);
+        } else {
+            drop(inner);
+            let _ = p.reply.send(resp);
+        }
+    }
+
+    /// Tear down epoch `epoch`'s connection state: flip `Down` and fail
+    /// every in-flight request with `shard_unavailable` (in-flight
+    /// shutdown requesters count as drained — the worker died, taking
+    /// every session with it). No-op if a newer connection already
+    /// replaced this epoch.
+    pub(crate) fn detach(&self, epoch: u64) {
+        if self.epoch.load(Ordering::SeqCst) != epoch {
+            return;
+        }
+        let mut failed = Vec::new();
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if inner.out.is_none() {
+                return; // already detached
+            }
+            inner.out = None;
+            let mut acked = Vec::new();
+            for (_, p) in inner.pending.drain() {
+                if p.shutdown {
+                    acked.push(p.reply);
+                } else {
+                    failed.push(p.reply);
+                }
+            }
+            // Shutdown-ack bookkeeping stays under the state lock (see
+            // `complete`): once any detach/force_detach returns, every
+            // requester is either in `drained` or about to be failed
+            // over below — never invisible to a collecting supervisor.
+            if !acked.is_empty() {
+                self.drained.lock().unwrap().extend(acked);
+            }
+            if self.shutdown.load(Ordering::SeqCst) {
+                self.drain_done.store(true, Ordering::SeqCst);
+            }
+        }
+        self.slot().up.store(false, Ordering::SeqCst);
+        for reply in failed {
+            let _ = reply.send(SHARD_UNAVAILABLE.into());
+        }
+    }
+
+    /// Detach whatever connection is current (supervisor cleanup after
+    /// observing the worker process exit; idempotent with the reader's
+    /// own EOF detach).
+    pub(crate) fn force_detach(&self) {
+        self.detach(self.epoch.load(Ordering::SeqCst));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::StatsQuery;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+    use std::sync::mpsc::channel as mpsc_channel;
+
+    fn arbitrary_request(rng: &mut Rng) -> Request {
+        let session = {
+            // Exercise ids needing JSON escapes too.
+            let alphabet = ["u", "s-1", "Ω", "a b", "q\"uote", "tab\there", "line\nbreak"];
+            format!("{}{}", rng.choice(&alphabet), rng.range(0, 1000))
+        };
+        let tokens: Vec<i32> =
+            (0..rng.range(0, 9)).map(|_| rng.range(0, 65_536) as i32 - 32_768).collect();
+        match rng.range(0, 4) {
+            0 => Request::Context { session, tokens },
+            1 => Request::Query { session, tokens, topk: rng.range(1, 64) },
+            2 => Request::Stats(StatsQuery {
+                detail: rng.bool(0.5),
+                prefix: rng.bool(0.5).then(|| format!("p{}", rng.range(0, 10))),
+                limit: rng.bool(0.5).then(|| rng.range(0, 100)),
+                per_reactor: None,
+            }),
+            _ => Request::Shutdown,
+        }
+    }
+
+    fn arbitrary_reply(rng: &mut Rng) -> String {
+        match rng.range(0, 3) {
+            0 => format!(
+                "{{\"ok\":true,\"kind\":\"context\",\"t\":{},\"kv_bytes\":{}}}",
+                rng.range(0, 100),
+                rng.range(0, 1 << 20)
+            ),
+            1 => {
+                let pairs: Vec<String> = (0..rng.range(1, 6))
+                    .map(|_| format!("[{},{:.4}]", rng.range(0, 512), -(rng.f64() * 10.0)))
+                    .collect();
+                format!("{{\"ok\":true,\"kind\":\"query\",\"next\":[{}]}}", pairs.join(","))
+            }
+            _ => format!(
+                "{{\"ok\":false,\"error\":{}}}",
+                escape(&format!("weird \"error\"\nno. {}", rng.range(0, 50)))
+            ),
+        }
+    }
+
+    #[test]
+    fn request_frames_roundtrip() {
+        check("ipc-request-roundtrip", 200, |rng| {
+            let id = rng.next_u64() >> 12; // JSON numbers are f64-exact to 2^53
+            let req = arbitrary_request(rng);
+            let frame = encode_request(id, &req);
+            crate::prop_assert!(frame.ends_with('\n'), "frame must be newline-terminated");
+            let (got_id, got) = decode_request(frame.trim_end()).map_err(|e| format!("{e:#}"))?;
+            crate::prop_assert!(got_id == id, "id {got_id} != {id}");
+            crate::prop_assert!(got == req, "decoded {got:?} != {req:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn reply_frames_roundtrip_verbatim() {
+        check("ipc-reply-roundtrip", 200, |rng| {
+            let id = rng.next_u64() >> 12;
+            let resp = arbitrary_reply(rng);
+            let frame = encode_reply(id, &resp);
+            let (got_id, got) = decode_reply(frame.trim_end()).map_err(|e| format!("{e:#}"))?;
+            crate::prop_assert!(got_id == id, "id {got_id} != {id}");
+            crate::prop_assert!(got == resp, "reply body must round-trip verbatim:\n{got}\n{resp}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn framebuf_reassembles_any_byte_split() {
+        // Split a multi-frame stream at EVERY byte boundary: the decoder
+        // must recover the identical frame sequence from each split.
+        let frames = [
+            encode_request(1, &Request::Context { session: "a".into(), tokens: vec![1, 2] }),
+            encode_reply(2, "{\"ok\":true,\"kind\":\"query\",\"next\":[[7,-0.5]]}"),
+            encode_request(3, &Request::Shutdown),
+        ];
+        let stream: Vec<u8> = frames.iter().flat_map(|f| f.bytes()).collect();
+        let expect: Vec<String> = frames.iter().map(|f| f.trim_end().to_string()).collect();
+        for split in 0..=stream.len() {
+            let mut fb = FrameBuf::new(IPC_MAX_FRAME);
+            let mut got = Vec::new();
+            fb.feed(&stream[..split]);
+            while let Some(line) = fb.next_line() {
+                got.push(line);
+            }
+            fb.feed(&stream[split..]);
+            while let Some(line) = fb.next_line() {
+                got.push(line);
+            }
+            assert_eq!(got, expect, "split at byte {split}");
+        }
+    }
+
+    #[test]
+    fn framebuf_survives_incremental_drip_feeds() {
+        check("ipc-drip-feed", 60, |rng| {
+            let n = rng.range(1, 8);
+            let frames: Vec<String> = (0..n)
+                .map(|i| {
+                    if rng.bool(0.5) {
+                        encode_request(i as u64, &arbitrary_request(rng))
+                    } else {
+                        encode_reply(i as u64, &arbitrary_reply(rng))
+                    }
+                })
+                .collect();
+            let stream: Vec<u8> = frames.iter().flat_map(|f| f.bytes()).collect();
+            let mut fb = FrameBuf::new(IPC_MAX_FRAME);
+            let mut got = Vec::new();
+            let mut i = 0;
+            while i < stream.len() {
+                let step = rng.range(1, 7).min(stream.len() - i);
+                fb.feed(&stream[i..i + step]);
+                i += step;
+                while let Some(line) = fb.next_line() {
+                    got.push(line);
+                }
+            }
+            let expect: Vec<String> = frames.iter().map(|f| f.trim_end().to_string()).collect();
+            crate::prop_assert!(got == expect, "drip-fed frames diverged: {got:?} != {expect:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn garbage_prefix_resyncs_at_the_next_newline() {
+        check("ipc-garbage-resync", 100, |rng| {
+            // Newline-free garbage (newlines would legitimately frame),
+            // then a newline, then valid frames: every valid frame must
+            // decode; the garbage line must error, not panic or desync.
+            let garbage: Vec<u8> = (0..rng.range(1, 200))
+                .map(|_| {
+                    let b = rng.range(0, 255) as u8;
+                    if b == b'\n' {
+                        b'x'
+                    } else {
+                        b
+                    }
+                })
+                .collect();
+            let req = arbitrary_request(rng);
+            let reply = arbitrary_reply(rng);
+            let mut stream = garbage.clone();
+            stream.push(b'\n');
+            stream.extend_from_slice(encode_request(9, &req).as_bytes());
+            stream.extend_from_slice(encode_reply(10, &reply).as_bytes());
+            let mut fb = FrameBuf::new(IPC_MAX_FRAME);
+            fb.feed(&stream);
+            let first = fb.next_line().ok_or("garbage line must frame")?;
+            crate::prop_assert!(decode_request(&first).is_err(), "garbage decoded as a request");
+            crate::prop_assert!(decode_reply(&first).is_err(), "garbage decoded as a reply");
+            let (id, got) = decode_request(&fb.next_line().ok_or("request frame lost")?)
+                .map_err(|e| format!("post-garbage request: {e:#}"))?;
+            crate::prop_assert!(id == 9 && got == req, "request diverged after resync");
+            let (id, got) = decode_reply(&fb.next_line().ok_or("reply frame lost")?)
+                .map_err(|e| format!("post-garbage reply: {e:#}"))?;
+            crate::prop_assert!(id == 10 && got == reply, "reply diverged after resync");
+            crate::prop_assert!(fb.next_line().is_none(), "no trailing frames");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn framebuf_caps_overlong_lines_and_recovers() {
+        let mut fb = FrameBuf::new(16);
+        // Terminated overlong line: skipped whole.
+        fb.feed(b"aaaaaaaaaaaaaaaaaaaaaaaaaaaaaa\nok\n");
+        assert_eq!(fb.next_line().as_deref(), Some("ok"));
+        assert!(fb.next_line().is_none());
+        // Unterminated overlong line: dropped incrementally, resync at
+        // the next newline.
+        fb.feed(&vec![b'b'; 40]);
+        assert!(fb.next_line().is_none());
+        fb.feed(&vec![b'c'; 40]);
+        assert!(fb.next_line().is_none());
+        fb.feed(b"tail\nnext\n");
+        // "tail" belongs to the discarded line; "next" frames cleanly.
+        assert_eq!(fb.next_line().as_deref(), Some("next"));
+        assert!(fb.next_line().is_none());
+    }
+
+    #[test]
+    fn frame_id_recovers_ids_from_malformed_request_bodies() {
+        assert_eq!(frame_id("{\"id\":42,\"op\":\"nope\"}"), Some(42));
+        assert_eq!(frame_id("{\"op\":\"stats\"}"), None);
+        assert_eq!(frame_id("total garbage"), None);
+        assert_eq!(frame_id("{\"id\":-3,\"op\":\"stats\"}"), None);
+    }
+
+    #[test]
+    fn proxy_down_refuses_and_stashes_shutdown() {
+        let table = Arc::new(WorkerStatsTable::new(1));
+        let proxy = Arc::new(WorkerProxy::new(0, table));
+        // Session-routed work while down: refused (the router turns the
+        // returned reply into shard_unavailable).
+        let (tx, _rx) = mpsc_channel();
+        let req = Request::Query { session: "u".into(), tokens: vec![1], topk: 1 };
+        assert!(proxy.dispatch(req, Reply::channel(tx)).is_err());
+        // Shutdown while down: accepted, trivially drained, the reply
+        // stashed for the port-release ack.
+        let (tx, rx) = mpsc_channel();
+        assert!(proxy.dispatch(Request::Shutdown, Reply::channel(tx)).is_ok());
+        assert!(proxy.drain_done());
+        assert!(rx.try_recv().is_err(), "no ack before the port is released");
+        assert_eq!(proxy.take_drained().len(), 1);
+    }
+
+    #[test]
+    fn proxy_detach_fails_pending_with_shard_unavailable() {
+        use std::net::{TcpListener, TcpStream};
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (_server_side, _) = listener.accept().unwrap();
+        let table = Arc::new(WorkerStatsTable::new(1));
+        let proxy = Arc::new(WorkerProxy::new(0, table.clone()));
+        proxy.attach(client).unwrap();
+        assert!(proxy.is_up());
+        let (tx, rx) = mpsc_channel();
+        let req = Request::Query { session: "u".into(), tokens: vec![2], topk: 1 };
+        assert!(proxy.dispatch(req, Reply::channel(tx)).is_ok());
+        assert!(rx.try_recv().is_err(), "no reply yet");
+        // The worker "dies": the supervisor force-detaches. The pending
+        // request fails over immediately — no hang, no dropped channel.
+        proxy.force_detach();
+        assert!(!proxy.is_up());
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(5)).expect("failover reply");
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("error").unwrap().str().unwrap(), "shard_unavailable");
+        // And a stale second detach of the same epoch is a no-op.
+        proxy.force_detach();
+    }
+
+    #[test]
+    fn worker_stats_rows_render_valid_json() {
+        let table = WorkerStatsTable::new(2);
+        table.slot(0).pid.store(4242, Ordering::Relaxed);
+        table.slot(0).up.store(true, Ordering::Relaxed);
+        table.slot(0).rtt_micros.store(1500, Ordering::Relaxed);
+        table.slot(1).restarts.store(3, Ordering::Relaxed);
+        assert_eq!(table.total_restarts(), 3);
+        let parsed = Json::parse(&format!("[{}]", table.render_rows())).expect("valid JSON");
+        let rows = parsed.arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("worker").unwrap().usize().unwrap(), 0);
+        assert_eq!(rows[0].get("pid").unwrap().usize().unwrap(), 4242);
+        assert_eq!(rows[0].get("up").unwrap(), &Json::Bool(true));
+        assert!((rows[0].get("rtt_ms").unwrap().f64().unwrap() - 1.5).abs() < 1e-9);
+        assert_eq!(rows[1].get("pid").unwrap(), &Json::Null);
+        assert_eq!(rows[1].get("rtt_ms").unwrap(), &Json::Null);
+        assert_eq!(rows[1].get("restarts").unwrap().usize().unwrap(), 3);
+    }
+}

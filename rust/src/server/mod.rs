@@ -74,6 +74,42 @@
 //! With `--shards 1` (the default) the engine behaves exactly like the
 //! PR 1 single-executor pipeline.
 //!
+//! ## Cross-process workers (`--workers N` | `--worker-addr a,b,...`)
+//!
+//! [`serve_workers`] promotes shards to worker PROCESSES: the front-end
+//! keeps the transport above, but each shard executor runs inside its
+//! own `ccm worker --shard K` process (one XLA device per OS process —
+//! PJRT runtimes are thread-bound and device-per-process is the
+//! deployment shape), connected over a newline-framed JSON IPC protocol
+//! on a loopback socket (request frames carry a pipelining `id`; reply
+//! frames return `{"id":N,"resp":<the executor's reply, verbatim>}`;
+//! framing is newline-delimited with JSON-escaped payloads, so a torn
+//! read can never desync the stream — see `ipc.rs`). The SAME
+//! [`shard_for`] hash routes sessions, so Mem(t) stays pinned to one
+//! worker as the fleet grows past a single process.
+//!
+//! A supervisor thread per worker spawns it, reads its
+//! `CCM_WORKER_READY <addr>` stdout handshake, connects with backoff,
+//! and respawns it (exponential backoff, `shard_restarts` counter in
+//! stats) when it dies. **Failure semantics:** while a worker is down,
+//! requests routed to its shard are answered immediately with the
+//! documented `{"ok":false,"error":"shard_unavailable"}` — in-flight
+//! requests fail over to the same reply the moment the connection
+//! drops; nothing hangs and the client connection stays open. A
+//! respawned worker starts with FRESH sessions: the compressed memory
+//! Mem(t) died with its owner, so a session's next request
+//! transparently restarts it at t=0 (the same contract as KV-budget
+//! eviction, at process granularity). Merged stats gain a `per_worker`
+//! breakdown (`worker`, `pid`, `up`, `restarts`, `rtt_ms`) plus the
+//! summed `shard_restarts`; a down worker's per-shard row reports
+//! zeroed counters with `"down":true` instead of failing the whole
+//! stats request closed. Shutdown fans out across the IPC boundary:
+//! every worker drains its executor, acks, and exits before any client
+//! shutdown ack is written (still after the front-end's listener is
+//! released); a worker that dies mid-drain counts as drained, and one
+//! that stalls past a kill deadline is killed so shutdown always
+//! completes.
+//!
 //! ## Protocol (one JSON object per line)
 //!
 //! Requests:
@@ -141,10 +177,13 @@
 //!       A shard could not answer a fanned-out stats request (e.g. it
 //!       is mid-shutdown); merged stats fail closed over partial data.
 //!   {"ok":false,"error":"shard_unavailable"}
-//!       The session's shard executor is gone for good in this process
+//!       The session's shard executor is gone: in process, for good
 //!       (it drained during a shutdown, or its backend failed to
-//!       initialize). Not retryable here; the connection stays open
-//!       for sessions on other shards.
+//!       initialize — not retryable); with worker shards, the worker
+//!       process is down (a retry can succeed once the supervisor
+//!       respawns it, but the shard's sessions restart fresh — their
+//!       compressed memory died with the process). The connection
+//!       stays open for sessions on other shards.
 //!   {"ok":false,"error":"..."} for malformed requests.
 //!
 //! ## Memory governance
@@ -162,9 +201,11 @@
 //! [`EvictionPolicy`]: crate::coordinator::session::EvictionPolicy
 
 mod executor;
+mod ipc;
 mod poll;
 mod reactor;
 pub mod router;
+mod worker;
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -186,6 +227,7 @@ use executor::Executor;
 use router::Router;
 
 pub use router::shard_for;
+pub use worker::{run_worker, serve_workers, WorkerLauncher, WorkerMode, WORKER_READY_PREFIX};
 
 /// A `stats` request's knobs. `detail` opts into `sessions_detail`;
 /// `prefix`/`limit` bound that view for fleets with large
@@ -194,7 +236,7 @@ pub use router::shard_for;
 /// pre-rendered per-reactor transport rows before forwarding to a
 /// single shard (the merged multi-shard view renders its own), so the
 /// executor can embed transport stats it has no other way to see.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct StatsQuery {
     pub detail: bool,
     pub prefix: Option<String>,
@@ -209,7 +251,7 @@ impl StatsQuery {
     }
 }
 
-#[derive(Debug)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum Request {
     Context { session: String, tokens: Vec<i32> },
     Query { session: String, tokens: Vec<i32>, topk: usize },
@@ -219,7 +261,13 @@ pub enum Request {
 
 impl Request {
     pub fn parse(line: &str) -> Result<Request> {
-        let j = Json::parse(line)?;
+        Request::from_json(&Json::parse(line)?)
+    }
+
+    /// Build a request from already-parsed JSON (unknown keys are
+    /// ignored, which is what lets the IPC layer decode its `id`-tagged
+    /// request frames with the same grammar as the client protocol).
+    pub fn from_json(j: &Json) -> Result<Request> {
         let op = j.get("op")?.str()?.to_string();
         let tokens = || -> Result<Vec<i32>> {
             j.get("tokens")?.arr()?.iter().map(|t| Ok(t.i64()? as i32)).collect()
@@ -411,7 +459,16 @@ pub(crate) const REPLY_TIMEOUT: Duration = Duration::from_secs(60);
 pub(crate) const TIMEOUT_REPLY: &str = "{\"ok\":false,\"error\":\"timeout\"}";
 pub(crate) const LINE_TOO_LONG_REPLY: &str = "{\"ok\":false,\"error\":\"line_too_long\"}";
 pub(crate) const TOO_MANY_CONNS_REPLY: &str = "{\"ok\":false,\"error\":\"too_many_connections\"}";
-const SHUTDOWN_ACK: &str = "{\"ok\":true,\"kind\":\"shutdown\"}";
+pub(crate) const SHUTDOWN_ACK: &str = "{\"ok\":true,\"kind\":\"shutdown\"}";
+/// Reply for a request routed to a shard whose executor is gone — in
+/// process: its channel closed (it drained during a shutdown, or its
+/// backend factory failed at startup; not retryable). With worker
+/// shards: the worker process is down or unreachable; the supervisor
+/// may respawn it with FRESH sessions, so a later retry can succeed but
+/// the session's compressed memory is gone either way. Distinct from
+/// the retryable `shutting_down` refusal a live, draining shard sends.
+/// The client keeps its connection (other shards still serve it).
+pub(crate) const SHARD_UNAVAILABLE: &str = "{\"ok\":false,\"error\":\"shard_unavailable\"}";
 
 /// Where an executor's reply for one request goes: a blocking channel
 /// (threads mode: the connection thread waits on the receiver) or the
@@ -423,6 +480,9 @@ const SHUTDOWN_ACK: &str = "{\"ok\":true,\"kind\":\"shutdown\"}";
 pub(crate) enum Reply {
     Channel(Sender<String>),
     Completion(reactor::CompletionHandle),
+    /// Worker-process side of the IPC boundary: the reply is tagged
+    /// with its request id and framed back to the front-end.
+    Ipc(ipc::IpcReplyHandle),
 }
 
 impl Reply {
@@ -431,8 +491,9 @@ impl Reply {
     }
 
     /// Deliver a reply. `Err` means the requester is gone (its channel
-    /// hung up); completion-queue delivery cannot fail — the reactor
-    /// drops replies for connections that have since closed.
+    /// hung up, or the IPC connection's writer exited); completion-
+    /// queue delivery cannot fail — the reactor drops replies for
+    /// connections that have since closed.
     pub(crate) fn send(&self, msg: String) -> std::result::Result<(), ()> {
         match self {
             Reply::Channel(tx) => tx.send(msg).map_err(|_| ()),
@@ -440,6 +501,7 @@ impl Reply {
                 handle.send(msg);
                 Ok(())
             }
+            Reply::Ipc(handle) => handle.send(msg),
         }
     }
 }
@@ -1022,7 +1084,7 @@ impl Client {
     }
 }
 
-fn fmt_tokens(tokens: &[i32]) -> String {
+pub(crate) fn fmt_tokens(tokens: &[i32]) -> String {
     let inner: Vec<String> = tokens.iter().map(|t| t.to_string()).collect();
     format!("[{}]", inner.join(","))
 }

@@ -1,23 +1,26 @@
 //! Session→shard routing and the merged global stats view.
 //!
-//! The router fans connection requests out to the per-shard executors.
-//! Routing invariant: a session id ALWAYS maps to the same shard (a
-//! stable FNV-1a hash of the id, mod the shard count), so a session's
-//! compressed memory Mem(t) never migrates between executors and
-//! per-session ordering reduces to per-shard ordering. Stats requests
-//! fan out to every shard and come back as one merged object; shutdown
-//! fans out so every executor drains.
+//! The router fans connection requests out to the per-shard executors
+//! through [`ShardHandle`]s — an in-process executor's channel, or a
+//! worker process's IPC proxy; the routing logic cannot tell the two
+//! apart. Routing invariant: a session id ALWAYS maps to the same
+//! shard (a stable FNV-1a hash of the id, mod the shard count), so a
+//! session's compressed memory Mem(t) never migrates between executors
+//! and per-session ordering reduces to per-shard ordering. Stats
+//! requests fan out to every shard and come back as one merged object;
+//! shutdown fans out so every executor drains.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, SendError, Sender};
+use std::sync::mpsc::{channel, Receiver, SendError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::coordinator::session::EvictionKind;
+use crate::server::ipc::{WorkerProxy, WorkerStatsTable};
 use crate::server::reactor::ReactorStatsTable;
-use crate::server::{ReactorMode, Reply, Request, ServerConfig, StatsQuery};
+use crate::server::{ReactorMode, Reply, Request, ServerConfig, StatsQuery, SHARD_UNAVAILABLE};
 use crate::util::json::{escape, Json};
 
 /// Stable shard for a session id: FNV-1a (64-bit) of the id bytes, mod
@@ -41,6 +44,26 @@ pub(crate) fn partition_budget(total: usize, shard: usize, shards: usize) -> usi
     total / shards + usize::from(shard < total % shards)
 }
 
+/// Every executor stats object starts with exactly this prefix; a
+/// worker's failover reply (`shard_unavailable`) does not.
+fn is_stats_part(part: &str) -> bool {
+    part.starts_with("{\"ok\":true,\"kind\":\"stats\"")
+}
+
+/// Placeholder per-shard stats for a worker that is down: zeroed
+/// counters (the merged sums then cover the live workers) plus a
+/// `"down":true` marker. Keeps the merged view answerable during an
+/// outage instead of failing the whole stats request closed.
+fn down_part(shard: usize) -> String {
+    format!(
+        "{{\"ok\":true,\"kind\":\"stats\",\"shard\":{shard},\"down\":true,\"sessions\":0,\
+         \"kv_bytes\":0,\"pending\":0,\"waiting\":0,\"requests\":0,\"compressions\":0,\
+         \"inferences\":0,\"batches\":0,\"rejected_overload\":0,\"sessions_evicted\":0,\
+         \"sessions_reaped\":0,\"priority_overrides\":0,\"peak_kv_bytes\":0,\
+         \"sessions_detail\":[]}}"
+    )
+}
+
 const STATS_UNAVAILABLE: &str = "{\"ok\":false,\"error\":\"stats_unavailable\"}";
 /// Concurrent merged-stats collectors (each is one short-lived thread
 /// that may block up to 30 s on a slow shard). Requests over the cap
@@ -48,20 +71,42 @@ const STATS_UNAVAILABLE: &str = "{\"ok\":false,\"error\":\"stats_unavailable\"}"
 /// bound — stats bypass per-shard admission control, so this is the
 /// only thing stopping one pipelining client from exhausting threads.
 const STATS_FANOUT_LIMIT: usize = 32;
-/// Reply for a request routed to a shard whose executor is gone (its
-/// channel is closed) — either it already drained during a shutdown,
-/// or its backend factory failed at startup. Distinct from the
-/// retryable `shutting_down` refusal a live, draining shard sends:
-/// this shard will not come back in this process. The client keeps
-/// its connection (other shards may still serve it), not an EOF.
-const SHARD_UNAVAILABLE: &str = "{\"ok\":false,\"error\":\"shard_unavailable\"}";
+
+/// One dispatch target of the router: an in-process shard executor's
+/// intake channel, or a worker process behind its IPC proxy. The two
+/// expose the identical failure contract — `Err` hands the reply back
+/// because the shard cannot take the request (executor gone / worker
+/// down), and the router answers `shard_unavailable` in its place.
+#[derive(Clone)]
+pub(crate) enum ShardHandle {
+    /// In-process executor (PR 2's channel, unchanged semantics).
+    Local(Sender<(Request, Reply)>),
+    /// Worker-process executor: pipelined IPC proxy with its own
+    /// connection state machine (`ipc::WorkerProxy`).
+    Remote(Arc<WorkerProxy>),
+}
+
+impl ShardHandle {
+    pub(crate) fn send(&self, req: Request, reply: Reply) -> std::result::Result<(), Reply> {
+        match self {
+            ShardHandle::Local(tx) => tx.send((req, reply)).map_err(|SendError((_, r))| r),
+            ShardHandle::Remote(proxy) => proxy.dispatch(req, reply),
+        }
+    }
+
+    /// Remote shards can come back (the supervisor respawns workers),
+    /// so fan-outs degrade per shard instead of failing closed.
+    fn is_remote(&self) -> bool {
+        matches!(self, ShardHandle::Remote(_))
+    }
+}
 
 /// Fans requests from connection threads to the per-shard executors
-/// and merges fan-out responses. Cheap to clone (one `Sender` per
+/// and merges fan-out responses. Cheap to clone (one handle per
 /// shard); every connection thread holds a clone.
 #[derive(Clone)]
 pub(crate) struct Router {
-    shards: Vec<Sender<(Request, Reply)>>,
+    shards: Vec<ShardHandle>,
     /// Global config echoed into the merged stats view.
     kv_budget_bytes: Option<usize>,
     session_ttl: Option<Duration>,
@@ -74,10 +119,35 @@ pub(crate) struct Router {
     /// the epoll front-end, empty in threads mode): the reactors write
     /// them, stats responses render them as `per_reactor`.
     reactor_stats: Arc<ReactorStatsTable>,
+    /// Per-worker supervision counters (worker topology only): rendered
+    /// into merged stats as `per_worker` + `shard_restarts`.
+    workers: Option<Arc<WorkerStatsTable>>,
 }
 
 impl Router {
+    /// Router over in-process shard executors (one intake channel each).
     pub(crate) fn new(shards: Vec<Sender<(Request, Reply)>>, cfg: &ServerConfig) -> Router {
+        Router::build(shards.into_iter().map(ShardHandle::Local).collect(), cfg, None)
+    }
+
+    /// Router over worker-process shards: same dispatch logic, plus the
+    /// per-worker stats table rendered into the merged view (stats
+    /// always take the merged path so worker rows are present even with
+    /// one worker).
+    pub(crate) fn with_workers(
+        shards: Vec<ShardHandle>,
+        cfg: &ServerConfig,
+        workers: Arc<WorkerStatsTable>,
+    ) -> Router {
+        debug_assert_eq!(shards.len(), workers.count());
+        Router::build(shards, cfg, Some(workers))
+    }
+
+    fn build(
+        shards: Vec<ShardHandle>,
+        cfg: &ServerConfig,
+        workers: Option<Arc<WorkerStatsTable>>,
+    ) -> Router {
         assert!(!shards.is_empty());
         // One counter slot per reactor thread; threads mode has none.
         let reactors = match cfg.reactor {
@@ -92,6 +162,7 @@ impl Router {
             eviction: cfg.eviction,
             stats_inflight: Arc::new(AtomicUsize::new(0)),
             reactor_stats: Arc::new(ReactorStatsTable::new(reactors)),
+            workers,
         }
     }
 
@@ -121,24 +192,27 @@ impl Router {
         let n = self.shards.len();
         if let Some(session) = req.session() {
             let target = shard_for(session, n);
-            // A closed shard channel means that executor is gone for
-            // good: answer with the documented non-retryable refusal
-            // instead of silently dropping the connection.
-            return match self.shards[target].send((req, reply)) {
+            // An unreachable shard (in process: executor gone for good;
+            // worker topology: process down, perhaps respawning) yields
+            // the documented refusal instead of silently dropping the
+            // connection — and never a hang.
+            return match self.shards[target].send(req, reply) {
                 Ok(()) => true,
-                Err(SendError((_, reply))) => reply.send(SHARD_UNAVAILABLE.into()).is_ok(),
+                Err(reply) => reply.send(SHARD_UNAVAILABLE.into()).is_ok(),
             };
         }
         match req {
             Request::Stats(mut q) => {
-                if n == 1 {
+                if n == 1 && self.workers.is_none() {
                     // The executor cannot see the transport layer, so
                     // the router injects the pre-rendered per-reactor
-                    // rows for it to embed.
+                    // rows for it to embed. (Worker topologies always
+                    // take the merged path: per-reactor AND per-worker
+                    // rows are rendered front-end side.)
                     q.per_reactor = self.per_reactor_rows();
-                    match self.shards[0].send((Request::Stats(q), reply)) {
+                    match self.shards[0].send(Request::Stats(q), reply) {
                         Ok(()) => true,
-                        Err(SendError((_, reply))) => reply.send(STATS_UNAVAILABLE.into()).is_ok(),
+                        Err(reply) => reply.send(STATS_UNAVAILABLE.into()).is_ok(),
                     }
                 } else {
                     if self.stats_inflight.fetch_add(1, Ordering::SeqCst) >= STATS_FANOUT_LIMIT {
@@ -161,10 +235,12 @@ impl Router {
                 // Every executor must drain; the serve loop acks each
                 // requester once ALL shards have drained and the
                 // listener is closed, so extra clones of `reply` held
-                // by other shards are simply never read.
+                // by other shards are simply never read. (A down worker
+                // accepts the shutdown too — recorded as trivially
+                // drained, acked at port release like the rest.)
                 let mut any = false;
-                for tx in &self.shards {
-                    any |= tx.send((Request::Shutdown, reply.clone())).is_ok();
+                for handle in &self.shards {
+                    any |= handle.send(Request::Shutdown, reply.clone()).is_ok();
                 }
                 any
             }
@@ -173,15 +249,20 @@ impl Router {
     }
 
     /// Fan a stats request to every shard and reply with the merged
-    /// view. Fails closed: a missing or unparsable shard yields
-    /// `stats_unavailable` rather than a silently partial answer.
+    /// view. In-process shards fail closed: a missing or unparsable
+    /// shard yields `stats_unavailable` rather than a silently partial
+    /// answer (a local executor cannot come back). A DOWN WORKER shard
+    /// instead contributes a zeroed placeholder part (`"down":true`) —
+    /// operators need stats most during a worker outage, and the
+    /// `per_worker` rows carry the outage itself.
     fn merged_stats(&self, q: StatsQuery, reply: Reply) -> bool {
         // Fan out to every shard BEFORE collecting, under one shared
         // deadline: total latency is the slowest shard (bounded at
         // 30 s, inside the connection's 60 s reply timeout), not the
         // sum of per-shard waits.
-        let mut pending = Vec::with_capacity(self.shards.len());
-        for tx in &self.shards {
+        let mut pending: Vec<(usize, Option<Receiver<String>>)> =
+            Vec::with_capacity(self.shards.len());
+        for (shard, handle) in self.shards.iter().enumerate() {
             // Shards see the prefix/limit bounds too (each shard's
             // snapshot is sorted by id, so per-shard truncation keeps
             // a superset of the global first-N rows).
@@ -192,17 +273,28 @@ impl Router {
                 per_reactor: None,
             };
             let (part_tx, part_rx) = channel();
-            if tx.send((Request::Stats(part), Reply::channel(part_tx))).is_err() {
-                return reply.send(STATS_UNAVAILABLE.into()).is_ok();
+            match handle.send(Request::Stats(part), Reply::channel(part_tx)) {
+                Ok(()) => pending.push((shard, Some(part_rx))),
+                Err(_) if handle.is_remote() => pending.push((shard, None)),
+                Err(_) => return reply.send(STATS_UNAVAILABLE.into()).is_ok(),
             }
-            pending.push(part_rx);
         }
         let deadline = Instant::now() + Duration::from_secs(30);
         let mut parts = Vec::with_capacity(pending.len());
-        for part_rx in pending {
+        for (shard, part_rx) in pending {
+            let Some(part_rx) = part_rx else {
+                parts.push(down_part(shard));
+                continue;
+            };
             let left = deadline.saturating_duration_since(Instant::now());
+            // A worker that dies mid-collection answers its pending
+            // stats with `shard_unavailable` (not a stats object) or
+            // nothing at all: both degrade to the placeholder.
             match part_rx.recv_timeout(left) {
-                Ok(part) => parts.push(part),
+                Ok(part) if is_stats_part(&part) => parts.push(part),
+                Ok(part) if !self.shards[shard].is_remote() => parts.push(part),
+                Ok(_) => parts.push(down_part(shard)),
+                Err(_) if self.shards[shard].is_remote() => parts.push(down_part(shard)),
                 Err(_) => return reply.send(STATS_UNAVAILABLE.into()).is_ok(),
             }
         }
@@ -252,13 +344,25 @@ impl Router {
             Some(rows) => format!("\"per_reactor\":[{rows}],"),
             None => String::new(),
         };
+        // Worker topology: supervision counters alongside the merged
+        // executor counters (note: a restarted worker's own counters
+        // restart with its process; the merged sums cover the LIVE
+        // worker processes, while `restarts` persists front-end side).
+        let worker_field = match &self.workers {
+            Some(table) => format!(
+                "\"shard_restarts\":{},\"per_worker\":[{}],",
+                table.total_restarts(),
+                table.render_rows()
+            ),
+            None => String::new(),
+        };
         Ok(format!(
             "{{\"ok\":true,\"kind\":\"stats\",\"shards\":{},\"eviction\":{},\"sessions\":{},\
              \"kv_bytes\":{},\"kv_budget_bytes\":{},\"session_ttl_secs\":{},\"max_pending\":{},\
              \"pending\":{},\"waiting\":{},\"requests\":{},\"compressions\":{},\"inferences\":{},\
              \"batches\":{},\"rejected_overload\":{},\"sessions_evicted\":{},\
              \"sessions_reaped\":{},\"priority_overrides\":{},\"peak_kv_bytes\":{},\
-             {reactor_field}{detail_field}\"per_shard\":[{}]}}",
+             {worker_field}{reactor_field}{detail_field}\"per_shard\":[{}]}}",
             self.shards.len(),
             escape(self.eviction.name()),
             sum("sessions")?,
@@ -472,6 +576,62 @@ mod tests {
                     \"rejected_overload\":0,\"sessions_evicted\":0,\"sessions_reaped\":0,\
                     \"priority_overrides\":0,\"peak_kv_bytes\":8}";
         assert!(router.merge_stats(&[bare.to_string()], &StatsQuery::detailed()).is_err());
+    }
+
+    #[test]
+    fn down_workers_degrade_merged_stats_instead_of_failing_closed() {
+        // Worker topology with every worker down: stats must still
+        // answer (operators need them mid-outage) with zeroed
+        // placeholder shards, per_worker rows, and shard_restarts —
+        // never stats_unavailable, never a hang.
+        use crate::coordinator::session::SessionPolicy;
+        let cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(2));
+        let table = Arc::new(WorkerStatsTable::new(2));
+        table.slot(1).restarts.store(3, Ordering::SeqCst);
+        let handles: Vec<ShardHandle> = (0..2)
+            .map(|i| ShardHandle::Remote(Arc::new(WorkerProxy::new(i, table.clone()))))
+            .collect();
+        let router = Router::with_workers(handles, &cfg, table);
+        let (reply_tx, reply_rx) = channel();
+        assert!(router.dispatch(Request::Stats(StatsQuery::detailed()), Reply::channel(reply_tx)));
+        let merged = reply_rx.recv_timeout(Duration::from_secs(10)).expect("merged stats");
+        let j = Json::parse(&merged).expect("valid merged JSON");
+        assert_eq!(j.get("ok").unwrap(), &Json::Bool(true));
+        assert_eq!(j.get("shards").unwrap().usize().unwrap(), 2);
+        assert_eq!(j.get("sessions").unwrap().usize().unwrap(), 0);
+        assert_eq!(j.get("shard_restarts").unwrap().usize().unwrap(), 3);
+        assert!(j.get("sessions_detail").unwrap().arr().unwrap().is_empty());
+        let workers = j.get("per_worker").unwrap().arr().unwrap();
+        assert_eq!(workers.len(), 2);
+        assert_eq!(workers[0].get("up").unwrap(), &Json::Bool(false));
+        assert_eq!(workers[0].get("pid").unwrap(), &Json::Null);
+        assert_eq!(workers[1].get("restarts").unwrap().usize().unwrap(), 3);
+        for p in j.get("per_shard").unwrap().arr().unwrap() {
+            assert_eq!(p.get("down").unwrap(), &Json::Bool(true));
+        }
+    }
+
+    #[test]
+    fn down_worker_routing_and_shutdown_semantics() {
+        use crate::coordinator::session::SessionPolicy;
+        let cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(2));
+        let table = Arc::new(WorkerStatsTable::new(1));
+        let proxy = Arc::new(WorkerProxy::new(0, table.clone()));
+        let router = Router::with_workers(vec![ShardHandle::Remote(proxy.clone())], &cfg, table);
+        // Session-routed work against the down worker: an immediate
+        // shard_unavailable reply; the connection stays open.
+        let (reply_tx, reply_rx) = channel();
+        let req = Request::Context { session: "s".into(), tokens: vec![1] };
+        assert!(router.dispatch(req, Reply::channel(reply_tx)), "connection must stay open");
+        let resp = Json::parse(&reply_rx.recv().unwrap()).unwrap();
+        assert_eq!(resp.get("error").unwrap().str().unwrap(), "shard_unavailable");
+        // Shutdown against the down worker: accepted and recorded as
+        // trivially drained; the ack waits for port release.
+        let (reply_tx, reply_rx) = channel();
+        assert!(router.dispatch(Request::Shutdown, Reply::channel(reply_tx)));
+        assert!(proxy.drain_done(), "a dead worker has nothing left to drain");
+        assert!(reply_rx.try_recv().is_err(), "no ack before the listener is released");
+        assert_eq!(proxy.take_drained().len(), 1);
     }
 
     #[test]

@@ -1,0 +1,711 @@
+//! Cross-process shard workers: the worker-process serve loop
+//! (`ccm worker --shard K`) and the front-end supervisor that spawns,
+//! monitors, and respawns workers behind the routing hash.
+//!
+//! ## Topology
+//!
+//! `serve_workers` keeps the whole connection front-end (reactors,
+//! admission, reply ordering) in the front-end process but runs every
+//! shard executor in its own OS process — the one-XLA-device-per-
+//! process deployment PJRT wants, which in-process [`BackendFactory`]
+//! shards cannot express. Sessions still route by the same stable
+//! [`super::shard_for`] hash, so Mem(t) stays pinned to one worker as
+//! the fleet scales past a single process.
+//!
+//! Each worker binds a loopback listener (port 0 by default), prints a
+//! one-line stdout handshake (`CCM_WORKER_READY <addr>`), and serves
+//! the newline-framed JSON IPC protocol of [`super::ipc`] over a single
+//! front-end connection: request frames feed the worker's [`Executor`]
+//! (its own Compute backend, batcher, session manager, and KV-budget
+//! slice — `kv_budget_bytes` is the global budget, partitioned by the
+//! worker's `--shard`/`--shards` exactly like in-process shards), reply
+//! frames carry the executor's replies back tagged with the request id.
+//!
+//! ## Supervision and failure semantics
+//!
+//! One supervisor thread per worker owns its lifecycle: spawn → read
+//! the ready handshake → connect (with backoff) → attach the proxy →
+//! wait for process exit. When a worker dies unexpectedly, its
+//! in-flight requests fail over immediately to the documented
+//! `{"ok":false,"error":"shard_unavailable"}` reply (never a hang or a
+//! dropped connection), requests routed to the shard keep getting that
+//! refusal while it is down, and the supervisor respawns it with
+//! exponential backoff — the respawned worker starts with FRESH
+//! sessions (the compressed memory died with the process; that is the
+//! honest semantics of losing the owner of Mem(t)) and the per-worker
+//! `restarts` counter (summed as `shard_restarts` in merged stats)
+//! increments. `WorkerMode::Connect` supervises externally-started
+//! workers (`--worker-addr`): connection-only, reconnect with backoff,
+//! no spawning or respawn.
+//!
+//! Shutdown fans out across the IPC boundary: every worker drains its
+//! executor, acks, and exits; the front-end acks its clients only after
+//! every worker is drained AND the listener is released — the same
+//! "ack means port released" contract as in-process serving. A worker
+//! that dies mid-drain counts as maximally drained (its sessions are
+//! gone); a worker that stalls past a kill deadline is SIGKILLed so
+//! shutdown always completes.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::process::{ChildStdout, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::manifest::Manifest;
+use crate::server::executor::Executor;
+use crate::server::ipc::{self, WorkerProxy, WorkerStatsTable};
+use crate::server::router::{Router, ShardHandle};
+use crate::server::{BackendFactory, Reply, Request, ServerConfig, SHUTDOWN_ACK};
+use crate::util::json::escape;
+
+/// Stdout handshake line prefix a worker prints once its IPC listener
+/// is bound: `CCM_WORKER_READY 127.0.0.1:41234`. The supervisor scans
+/// child stdout for it (skipping unrelated lines, e.g. test-harness
+/// noise when a test binary hosts the worker entry).
+pub const WORKER_READY_PREFIX: &str = "CCM_WORKER_READY ";
+
+/// Builds the command that starts worker `shard` (the supervisor adds
+/// nothing: shard identity, addresses, and backend flags all travel in
+/// the command/env the launcher prepares).
+pub type WorkerLauncher = Box<dyn Fn(usize) -> Command + Send + Sync>;
+
+/// How the front-end obtains its workers.
+pub enum WorkerMode {
+    /// Spawn `count` worker processes via `launcher` and supervise
+    /// them: crashed workers are respawned (fresh sessions, `restarts`
+    /// counter) with exponential backoff.
+    Spawn { count: usize, launcher: WorkerLauncher },
+    /// Connect to externally-started workers (`--worker-addr`), one
+    /// address per shard. Connection-only supervision: reconnect with
+    /// backoff, no spawning.
+    Connect { addrs: Vec<String> },
+}
+
+const SUPERVISE_TICK: Duration = Duration::from_millis(15);
+const CONNECT_RETRY: Duration = Duration::from_millis(20);
+const CONNECT_DEADLINE: Duration = Duration::from_secs(10);
+const READY_DEADLINE: Duration = Duration::from_secs(30);
+const RESPAWN_BACKOFF_MIN: Duration = Duration::from_millis(50);
+const RESPAWN_BACKOFF_MAX: Duration = Duration::from_secs(2);
+/// A worker that has not finished draining this long after a shutdown
+/// request is SIGKILLed so shutdown always completes.
+const SHUTDOWN_KILL_AFTER: Duration = Duration::from_secs(30);
+/// Once the drain contract is already satisfied (`drain_done`: the
+/// worker acked, or the requesters were recorded while it was down), a
+/// lingering process only gets this long to exit by itself.
+const DRAINED_EXIT_GRACE: Duration = Duration::from_secs(1);
+
+/// Run a server whose shards are worker processes. The front-end keeps
+/// the normal transport (`cfg.reactor`/`cfg.reactors`) and router;
+/// `cfg.shards` is set to the worker count. `cfg.kv_budget_bytes` is
+/// echoed in merged stats but enforced worker-side (each worker
+/// partitions the global budget by its shard index, exactly like
+/// in-process shards) — launchers must forward the budget flags.
+///
+/// `ready` fires when the FRONT-END port is bound; workers are still
+/// starting at that point, and requests racing a worker's startup get
+/// the same `shard_unavailable` refusal as any down worker (by design:
+/// the topology never queues into a process that may not appear).
+/// Operators and tests can poll merged stats until every `per_worker`
+/// row reports `up`.
+pub fn serve_workers(
+    mut cfg: ServerConfig,
+    workers: WorkerMode,
+    ready: Option<Sender<String>>,
+) -> Result<()> {
+    let count = match &workers {
+        WorkerMode::Spawn { count, .. } => *count,
+        WorkerMode::Connect { addrs } => addrs.len(),
+    };
+    if count == 0 {
+        bail!("worker topology needs at least one worker");
+    }
+    cfg.shards = count;
+    let table = Arc::new(WorkerStatsTable::new(count));
+    let proxies: Vec<Arc<WorkerProxy>> =
+        (0..count).map(|i| Arc::new(WorkerProxy::new(i, table.clone()))).collect();
+    let handles: Vec<ShardHandle> =
+        proxies.iter().map(|p| ShardHandle::Remote(p.clone())).collect();
+    let router = Router::with_workers(handles, &cfg, table);
+    let cfg = &cfg;
+    let proxies = &proxies;
+    let workers = &workers;
+    super::run_server(cfg, router, ready, move || {
+        let results: Vec<Result<()>> = std::thread::scope(|s| {
+            let threads: Vec<_> = proxies
+                .iter()
+                .map(|proxy| {
+                    let proxy = proxy.clone();
+                    s.spawn(move || match workers {
+                        WorkerMode::Spawn { launcher, .. } => supervise_spawned(&proxy, launcher),
+                        WorkerMode::Connect { addrs } => {
+                            supervise_external(&proxy, &addrs[proxy.shard()])
+                        }
+                    })
+                })
+                .collect();
+            threads.into_iter().map(|t| t.join().expect("supervisor thread")).collect()
+        });
+        let mut replies = Vec::new();
+        let mut first_err = None;
+        for (proxy, result) in proxies.iter().zip(results) {
+            replies.extend(proxy.take_drained());
+            if let Err(e) = result {
+                first_err = first_err.or(Some(e));
+            }
+        }
+        (replies, first_err.map_or(Ok(()), Err))
+    })
+}
+
+/// Spawn-mode supervisor loop for one worker: returns once a requested
+/// shutdown has completed (worker drained and exited, or proved
+/// unreachable). Start failures and crashes are retried/respawned with
+/// exponential backoff forever — while the worker is down, the shard
+/// answers `shard_unavailable`, never hangs.
+fn supervise_spawned(proxy: &Arc<WorkerProxy>, launcher: &WorkerLauncher) -> Result<()> {
+    let shard = proxy.shard();
+    let mut backoff = RESPAWN_BACKOFF_MIN;
+    loop {
+        if proxy.shutdown_requested() {
+            return Ok(());
+        }
+        let mut cmd = launcher(shard);
+        cmd.stdin(Stdio::null()).stdout(Stdio::piped());
+        let mut child = match cmd.spawn() {
+            Ok(child) => child,
+            Err(e) => {
+                crate::info!("worker {shard}: spawn failed: {e}; retrying in {backoff:?}");
+                sleep_unless_shutdown(proxy, backoff);
+                backoff = (backoff * 2).min(RESPAWN_BACKOFF_MAX);
+                continue;
+            }
+        };
+        proxy.slot().pid.store(u64::from(child.id()), Ordering::SeqCst);
+        let ready_rx = watch_stdout(child.stdout.take().expect("piped stdout"));
+        // Handshake wait in shutdown-aware ticks: a shutdown must not
+        // sit behind the full 30 s deadline of a wedged worker start
+        // (the requesters are already recorded; this child just gets
+        // killed below).
+        let ready_deadline = Instant::now() + READY_DEADLINE;
+        let addr = loop {
+            match ready_rx.recv_timeout(SUPERVISE_TICK) {
+                Ok(addr) => break Some(addr),
+                Err(RecvTimeoutError::Timeout) => {
+                    if proxy.shutdown_requested() || Instant::now() >= ready_deadline {
+                        break None;
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => break None,
+            }
+        };
+        let attached = addr.as_ref().is_some_and(|addr| {
+            connect_with_backoff(addr, CONNECT_DEADLINE, proxy)
+                .is_some_and(|stream| proxy.attach(stream).is_ok())
+        });
+        if !attached {
+            crate::info!("worker {shard}: failed to come up; killing and retrying");
+            let _ = child.kill();
+            let _ = child.wait();
+            proxy.slot().pid.store(0, Ordering::SeqCst);
+            sleep_unless_shutdown(proxy, backoff);
+            backoff = (backoff * 2).min(RESPAWN_BACKOFF_MAX);
+            continue;
+        }
+        let addr = addr.expect("attached implies addr");
+        backoff = RESPAWN_BACKOFF_MIN; // healthy start resets the schedule
+        // Wait for the process to exit. A dropped socket with the
+        // process still alive is reconnected (the worker re-accepts);
+        // a stalled shutdown drain is bounded by a hard kill.
+        let mut kill_at: Option<Instant> = None;
+        let mut next_reconnect = Instant::now();
+        let status = loop {
+            match child.try_wait() {
+                Ok(Some(status)) => break Some(status),
+                Ok(None) => {}
+                Err(_) => break None,
+            }
+            if proxy.shutdown_requested() {
+                // Full deadline while a drain may still be in progress;
+                // once the contract is satisfied (ack received or
+                // recorded), only a short exit grace remains — e.g. a
+                // shutdown that raced a respawn: the fresh worker holds
+                // no sessions and was never asked to drain.
+                let grace =
+                    if proxy.drain_done() { DRAINED_EXIT_GRACE } else { SHUTDOWN_KILL_AFTER };
+                let target = Instant::now() + grace;
+                let at = kill_at.map_or(target, |cur: Instant| cur.min(target));
+                kill_at = Some(at);
+                if Instant::now() >= at {
+                    crate::info!("worker {shard}: shutdown drain stalled; killing");
+                    let _ = child.kill();
+                }
+            } else if !proxy.is_up() && Instant::now() >= next_reconnect {
+                next_reconnect = Instant::now() + Duration::from_millis(100);
+                if let Ok(stream) = TcpStream::connect(&addr) {
+                    let _ = proxy.attach(stream);
+                }
+            }
+            std::thread::sleep(SUPERVISE_TICK);
+        };
+        proxy.force_detach();
+        proxy.slot().pid.store(0, Ordering::SeqCst);
+        if proxy.shutdown_requested() {
+            return Ok(());
+        }
+        proxy.slot().restarts.fetch_add(1, Ordering::SeqCst);
+        crate::info!(
+            "worker {shard}: process exited unexpectedly ({status:?}); respawning with fresh \
+             sessions in {backoff:?}"
+        );
+        sleep_unless_shutdown(proxy, backoff);
+        backoff = (backoff * 2).min(RESPAWN_BACKOFF_MAX);
+    }
+}
+
+/// Connect-mode supervisor for an externally-started worker: keep one
+/// connection up (reconnect with backoff), return once a requested
+/// shutdown has drained. The drain wait is bounded like spawn mode's:
+/// past [`SHUTDOWN_KILL_AFTER`] a wedged external worker is abandoned
+/// (detached, its shutdown requesters recorded) — there is no process
+/// to kill, but shutdown must still complete.
+fn supervise_external(proxy: &Arc<WorkerProxy>, addr: &str) -> Result<()> {
+    let mut backoff = RESPAWN_BACKOFF_MIN;
+    let mut drain_deadline: Option<Instant> = None;
+    loop {
+        if proxy.drain_done() {
+            return Ok(());
+        }
+        if proxy.shutdown_requested() {
+            if !proxy.is_up() {
+                // Down at shutdown: the dispatch already recorded the
+                // requesters as trivially drained.
+                return Ok(());
+            }
+            let at = *drain_deadline.get_or_insert_with(|| Instant::now() + SHUTDOWN_KILL_AFTER);
+            if Instant::now() >= at {
+                crate::info!(
+                    "worker {}: external worker did not drain in time; abandoning it",
+                    proxy.shard()
+                );
+                proxy.force_detach();
+                return Ok(());
+            }
+            std::thread::sleep(SUPERVISE_TICK);
+            continue;
+        }
+        if proxy.is_up() {
+            std::thread::sleep(SUPERVISE_TICK);
+            continue;
+        }
+        if let Ok(stream) = TcpStream::connect(addr) {
+            if proxy.attach(stream).is_ok() {
+                backoff = RESPAWN_BACKOFF_MIN;
+                continue;
+            }
+        }
+        sleep_unless_shutdown(proxy, backoff);
+        backoff = (backoff * 2).min(RESPAWN_BACKOFF_MAX);
+    }
+}
+
+fn sleep_unless_shutdown(proxy: &WorkerProxy, total: Duration) {
+    let deadline = Instant::now() + total;
+    while !proxy.shutdown_requested() {
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            return;
+        }
+        std::thread::sleep(left.min(SUPERVISE_TICK));
+    }
+}
+
+/// Scan child stdout for the ready handshake on a helper thread (child
+/// stdout cannot be read with a timeout directly), then keep draining
+/// it so the worker never blocks on a full pipe.
+fn watch_stdout(stdout: ChildStdout) -> Receiver<String> {
+    let (tx, rx) = channel();
+    std::thread::spawn(move || {
+        let mut reader = BufReader::new(stdout);
+        let mut line = String::new();
+        let mut announced = false;
+        loop {
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {
+                    if !announced {
+                        if let Some(addr) = line.trim().strip_prefix(WORKER_READY_PREFIX) {
+                            let _ = tx.send(addr.trim().to_string());
+                            announced = true;
+                        }
+                    }
+                }
+            }
+        }
+    });
+    rx
+}
+
+fn connect_with_backoff(addr: &str, deadline: Duration, proxy: &WorkerProxy) -> Option<TcpStream> {
+    let until = Instant::now() + deadline;
+    loop {
+        // A requested shutdown aborts the attach outright (requesters
+        // were recorded while the proxy was down; the caller kills the
+        // child and its supervisor exits).
+        if proxy.shutdown_requested() {
+            return None;
+        }
+        match TcpStream::connect(addr) {
+            Ok(stream) => return Some(stream),
+            Err(_) => {
+                if Instant::now() >= until {
+                    return None;
+                }
+                std::thread::sleep(CONNECT_RETRY);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Worker-process side.
+
+#[derive(Default)]
+struct WorkerShared {
+    /// The executor thread has returned: drained after a shutdown (acks
+    /// already queued to the writer) or failed.
+    done: AtomicBool,
+}
+
+/// Grace periods before an unconnected worker concludes it is orphaned
+/// and exits (so a SIGKILLed front-end never leaks worker processes).
+const ORPHAN_FIRST_CONN: Duration = Duration::from_secs(120);
+const ORPHAN_RECONNECT: Duration = Duration::from_secs(10);
+const ACCEPT_TICK: Duration = Duration::from_millis(25);
+
+/// Run one shard worker: bind the IPC listener (`cfg.addr`, port 0 by
+/// default), print the `CCM_WORKER_READY <addr>` stdout handshake, and
+/// serve request frames from the front-end into a full [`Executor`]
+/// (built from `factory` on the executor thread, since backends may own
+/// thread-bound PJRT state). `cfg.shards`/`shard` position this worker
+/// in the fleet: the KV budget partitions exactly as for in-process
+/// shards. Returns after a drained shutdown, after the front-end stays
+/// away past the orphan grace period, or on executor failure.
+pub fn run_worker<'a>(
+    manifest: &Manifest,
+    factory: BackendFactory<'a>,
+    cfg: ServerConfig,
+    shard: usize,
+    ready: Option<Sender<String>>,
+) -> Result<()> {
+    let listener = TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
+    listener.set_nonblocking(true).context("worker listener nonblocking")?;
+    let local = listener.local_addr()?.to_string();
+    // The stdout handshake the supervisor scans for; all logging goes
+    // to stderr so this stays the only load-bearing stdout line.
+    println!("{WORKER_READY_PREFIX}{local}");
+    std::io::stdout().flush().ok();
+    crate::info!("worker {shard} serving IPC on {local}");
+    if let Some(tx) = ready {
+        let _ = tx.send(local);
+    }
+    let shared = WorkerShared::default();
+    let (req_tx, req_rx) = channel::<(Request, Reply)>();
+    let cfg = &cfg;
+    let shared = &shared;
+    std::thread::scope(|s| {
+        let exec = s.spawn(move || {
+            let result = (|| -> Result<()> {
+                let backend = factory()?;
+                let repliers = Executor::new(manifest, backend, cfg, shard).run(req_rx)?;
+                // Worker-side drain ack; the front-end stashes it until
+                // its own listener is released.
+                for reply in repliers {
+                    let _ = reply.send(SHUTDOWN_ACK.into());
+                }
+                Ok(())
+            })();
+            shared.done.store(true, Ordering::SeqCst);
+            if let Err(e) = &result {
+                crate::info!("worker {shard}: executor failed: {e:#}");
+            }
+            result
+        });
+        let accept_result = accept_loop(&listener, &req_tx, shared, shard);
+        drop(req_tx);
+        let exec_result = exec.join().expect("worker executor thread");
+        exec_result.and(accept_result)
+    })
+}
+
+/// Accept front-end connections serially: one connection serves at a
+/// time (the front-end holds exactly one and reconnects after a
+/// transient drop); losing it without a shutdown re-enters accept under
+/// the orphan grace period.
+fn accept_loop(
+    listener: &TcpListener,
+    req_tx: &Sender<(Request, Reply)>,
+    shared: &WorkerShared,
+    shard: usize,
+) -> Result<()> {
+    let mut grace_until = Instant::now() + ORPHAN_FIRST_CONN;
+    loop {
+        if shared.done.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                crate::info!("worker {shard}: front-end connected from {peer}");
+                if matches!(serve_ipc_conn(stream, req_tx, shared)?, ConnEnd::Done) {
+                    return Ok(());
+                }
+                crate::info!("worker {shard}: front-end disconnected; awaiting reconnect");
+                grace_until = Instant::now() + ORPHAN_RECONNECT;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= grace_until {
+                    crate::info!("worker {shard}: no front-end within grace period; exiting");
+                    return Ok(());
+                }
+                std::thread::sleep(ACCEPT_TICK);
+            }
+            Err(e) => return Err(e).context("worker accept"),
+        }
+    }
+}
+
+enum ConnEnd {
+    /// The executor finished (drained shutdown or failure): exit.
+    Done,
+    /// The front-end connection dropped: await a reconnect.
+    Lost,
+}
+
+/// Serve one front-end connection: request frames in, tagged replies
+/// out through a writer thread. Reads poll on a short timeout so the
+/// loop observes the executor finishing (the drain acks are flushed by
+/// joining the writer before the connection closes).
+fn serve_ipc_conn(
+    stream: TcpStream,
+    req_tx: &Sender<(Request, Reply)>,
+    shared: &WorkerShared,
+) -> Result<ConnEnd> {
+    let _ = stream.set_nodelay(true);
+    stream.set_read_timeout(Some(Duration::from_millis(50))).context("ipc read timeout")?;
+    let write_half = stream.try_clone().context("clone ipc stream")?;
+    let (out_tx, out_rx) = channel::<(u64, String)>();
+    let writer = std::thread::spawn(move || {
+        let mut write_half = write_half;
+        while let Ok((id, resp)) = out_rx.recv() {
+            if write_half.write_all(ipc::encode_reply(id, &resp).as_bytes()).is_err() {
+                break;
+            }
+        }
+    });
+    let mut stream = stream;
+    let mut frames = ipc::FrameBuf::new(ipc::IPC_MAX_FRAME);
+    let mut scratch = [0u8; 64 * 1024];
+    'conn: loop {
+        match stream.read(&mut scratch) {
+            Ok(0) => break,
+            Ok(n) => {
+                frames.feed(&scratch[..n]);
+                while let Some(line) = frames.next_line() {
+                    match ipc::decode_request(&line) {
+                        Ok((id, req)) => {
+                            let reply = Reply::Ipc(ipc::IpcReplyHandle { id, out: out_tx.clone() });
+                            if req_tx.send((req, reply)).is_err() {
+                                break 'conn; // executor gone
+                            }
+                        }
+                        Err(e) => {
+                            // Malformed body with a recoverable id is
+                            // answered; id-less garbage is skipped and
+                            // framing resynchronises (never desyncs).
+                            if let Some(id) = ipc::frame_id(&line) {
+                                let err = escape(&e.to_string());
+                                let msg = format!("{{\"ok\":false,\"error\":{err}}}");
+                                let _ = out_tx.send((id, msg));
+                            } else {
+                                crate::debug!("worker: skipping unframeable line: {e:#}");
+                            }
+                        }
+                    }
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if shared.done.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => break,
+        }
+    }
+    drop(out_tx);
+    if shared.done.load(Ordering::SeqCst) {
+        // Drained: the executor returned, so no reply handles remain;
+        // joining the writer flushes the queued acks onto the wire
+        // before the connection (and then the process) goes away.
+        let _ = writer.join();
+        Ok(ConnEnd::Done)
+    } else {
+        // Lost mid-flight: the writer dies with its channel once the
+        // executor drops the orphaned reply handles; late replies hit a
+        // closed socket and are dropped, like the reactor's late
+        // replies for timed-out requests.
+        Ok(ConnEnd::Lost)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Compute, SimCompute};
+    use crate::coordinator::session::SessionPolicy;
+    use crate::util::json::Json;
+    use std::collections::HashMap;
+
+    fn start_toy_worker() -> (String, std::thread::JoinHandle<Result<()>>) {
+        let (ready_tx, ready_rx) = channel();
+        let handle = std::thread::spawn(move || {
+            let m = Manifest::toy();
+            let sim = SimCompute::from_manifest(&m);
+            let factory: BackendFactory<'static> =
+                Box::new(move || Ok(Box::new(sim) as Box<dyn Compute>));
+            let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(2));
+            cfg.max_wait = Duration::ZERO;
+            run_worker(&m, factory, cfg, 0, Some(ready_tx))
+        });
+        let addr = ready_rx.recv_timeout(Duration::from_secs(10)).expect("worker ready");
+        (addr, handle)
+    }
+
+    /// Read reply frames until `want` distinct ids have answered.
+    fn read_replies(stream: &mut TcpStream, want: usize) -> HashMap<u64, Json> {
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut frames = ipc::FrameBuf::new(ipc::IPC_MAX_FRAME);
+        let mut scratch = [0u8; 16 * 1024];
+        let mut out = HashMap::new();
+        while out.len() < want {
+            let n = stream.read(&mut scratch).expect("read reply frames");
+            assert!(n > 0, "worker closed early with {}/{want} replies", out.len());
+            frames.feed(&scratch[..n]);
+            while let Some(line) = frames.next_line() {
+                let (id, resp) = ipc::decode_reply(&line).expect("valid reply frame");
+                out.insert(id, Json::parse(&resp).expect("valid reply JSON"));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn worker_serves_frames_and_drains_on_shutdown() {
+        let (addr, worker) = start_toy_worker();
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        let frames: String = [
+            ipc::encode_request(0, &Request::Context { session: "u".into(), tokens: vec![4, 5] }),
+            ipc::encode_request(
+                1,
+                &Request::Query { session: "u".into(), tokens: vec![7], topk: 1 },
+            ),
+            ipc::encode_request(2, &Request::Stats(crate::server::StatsQuery::default())),
+            ipc::encode_request(3, &Request::Shutdown),
+        ]
+        .concat();
+        stream.write_all(frames.as_bytes()).unwrap();
+        let replies = read_replies(&mut stream, 4);
+        assert_eq!(replies[&0].get("t").unwrap().i64().unwrap(), 1, "context ack");
+        let next = replies[&1].get("next").unwrap().arr().unwrap();
+        assert_eq!(next[0].arr().unwrap()[0].i64().unwrap(), 7, "query echo");
+        assert_eq!(replies[&2].get("shard").unwrap().usize().unwrap(), 0, "stats shard id");
+        assert_eq!(replies[&2].get("kind").unwrap().str().unwrap(), "stats");
+        assert_eq!(replies[&3].get("kind").unwrap().str().unwrap(), "shutdown");
+        // After the drain ack the worker closes the connection and the
+        // serve loop returns cleanly.
+        let mut tail = [0u8; 64];
+        let eof = loop {
+            match stream.read(&mut tail) {
+                Ok(0) => break true,
+                Ok(_) => {}
+                Err(_) => break false,
+            }
+        };
+        assert!(eof, "worker must close after the drain ack");
+        worker.join().expect("worker thread").expect("worker result");
+    }
+
+    #[test]
+    fn worker_answers_malformed_frames_and_resyncs_on_garbage() {
+        let (addr, worker) = start_toy_worker();
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"%%% not json at all\n"); // id-less: skipped
+        bytes.extend_from_slice(b"{\"id\":5,\"op\":\"bogus\"}\n"); // id: answered
+        let query = Request::Query { session: "q".into(), tokens: vec![3], topk: 1 };
+        bytes.extend_from_slice(ipc::encode_request(6, &query).as_bytes());
+        stream.write_all(&bytes).unwrap();
+        let replies = read_replies(&mut stream, 2);
+        assert_eq!(replies[&5].get("ok").unwrap(), &Json::Bool(false));
+        assert!(replies[&5].get("error").unwrap().str().unwrap().contains("unknown op"));
+        assert_eq!(
+            replies[&6].get("next").unwrap().arr().unwrap()[0].arr().unwrap()[0]
+                .i64()
+                .unwrap(),
+            3,
+            "frames after garbage must still serve"
+        );
+        stream.write_all(ipc::encode_request(7, &Request::Shutdown).as_bytes()).unwrap();
+        let replies = read_replies(&mut stream, 1);
+        assert_eq!(replies[&7].get("kind").unwrap().str().unwrap(), "shutdown");
+        drop(stream);
+        worker.join().expect("worker thread").expect("worker result");
+    }
+
+    #[test]
+    fn worker_exits_when_the_front_end_disappears() {
+        // Orphan semantics: EOF without a shutdown re-enters accept
+        // under the reconnect grace; a second connection then drives a
+        // normal shutdown (covering the supervisor's reconnect path).
+        let (addr, worker) = start_toy_worker();
+        {
+            let mut stream = TcpStream::connect(&addr).unwrap();
+            stream
+                .write_all(
+                    ipc::encode_request(
+                        0,
+                        &Request::Context { session: "a".into(), tokens: vec![1] },
+                    )
+                    .as_bytes(),
+                )
+                .unwrap();
+            let replies = read_replies(&mut stream, 1);
+            assert_eq!(replies[&0].get("t").unwrap().i64().unwrap(), 1);
+        } // dropped: EOF without shutdown
+        let mut stream = TcpStream::connect(&addr).expect("worker must re-accept");
+        // Session state survived the reconnect (same process).
+        stream
+            .write_all(
+                ipc::encode_request(1, &Request::Context { session: "a".into(), tokens: vec![2] })
+                    .as_bytes(),
+            )
+            .unwrap();
+        let replies = read_replies(&mut stream, 1);
+        assert_eq!(replies[&1].get("t").unwrap().i64().unwrap(), 2);
+        stream.write_all(ipc::encode_request(2, &Request::Shutdown).as_bytes()).unwrap();
+        let replies = read_replies(&mut stream, 1);
+        assert_eq!(replies[&2].get("kind").unwrap().str().unwrap(), "shutdown");
+        worker.join().expect("worker thread").expect("worker result");
+    }
+}

@@ -1,0 +1,459 @@
+//! Shared test support for the serving integration suites (serve.rs,
+//! workers.rs, stress.rs): server guards with drop-kill, deadline-
+//! polling waits (never bare sleeps for readiness), reply assertion
+//! helpers, and the re-exec machinery that turns the host test binary
+//! into a SimCompute worker process for the cross-process topology.
+//!
+//! Compiled separately into each test binary, so not every helper is
+//! used everywhere — hence the file-level `dead_code` allowance.
+
+#![allow(dead_code)]
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::channel;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use ccm::compress::{Compute, SimCompute};
+use ccm::coordinator::session::SessionPolicy;
+use ccm::model::Manifest;
+use ccm::server::{
+    serve_sharded, serve_with_backend, serve_workers, shard_for, BackendFactory, Client,
+    ServerConfig, WorkerMode,
+};
+use ccm::util::json::Json;
+
+// ---------------------------------------------------------------------
+// Deadline polling (flake-proof waits).
+
+/// Poll `f` every few milliseconds until it yields a value; panic with
+/// `what` once `timeout` elapses. The replacement for ad-hoc sleeps:
+/// waits exactly as long as needed and fails loudly instead of flaking.
+pub fn poll_until<T>(timeout: Duration, what: &str, mut f: impl FnMut() -> Option<T>) -> T {
+    let deadline = Instant::now() + timeout;
+    loop {
+        if let Some(v) = f() {
+            return v;
+        }
+        assert!(Instant::now() < deadline, "timed out after {timeout:?} waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Poll merged stats until every worker's `per_worker` row is `up`.
+/// The serve `ready` signal fires when the FRONT-END port is bound —
+/// workers may still be spawning, and requests racing their startup
+/// get `shard_unavailable` by design — so worker-topology tests gate
+/// on this before asserting replies.
+pub fn wait_workers_up(admin: &mut Client, workers: usize, timeout: Duration) -> Json {
+    poll_until(timeout, "all workers to come up", || {
+        let stats = admin.stats().expect("stats");
+        let up = match stats.opt("per_worker").and_then(|v| v.arr().ok()) {
+            Some(rows) => {
+                rows.len() == workers && rows.iter().all(|r| r.opt("up") == Some(&Json::Bool(true)))
+            }
+            None => false,
+        };
+        up.then_some(stats)
+    })
+}
+
+/// Poll stats until no work is queued or in flight; returns the final
+/// stats object.
+pub fn wait_drained(admin: &mut Client, timeout: Duration) -> Json {
+    poll_until(timeout, "server to drain", || {
+        let stats = admin.stats().expect("stats");
+        let pending = stats.get("pending").unwrap().usize().unwrap();
+        let waiting = stats.get("waiting").unwrap().usize().unwrap();
+        (pending == 0 && waiting == 0).then_some(stats)
+    })
+}
+
+// ---------------------------------------------------------------------
+// Reply assertion helpers.
+
+pub fn assert_ok(resp: &Json) {
+    assert_eq!(resp.get("ok").unwrap(), &Json::Bool(true), "expected ok reply: {resp}");
+}
+
+pub fn assert_error(resp: &Json, code: &str) {
+    assert_eq!(resp.get("ok").unwrap(), &Json::Bool(false), "expected {code} refusal: {resp}");
+    assert_eq!(resp.get("error").unwrap().str().unwrap(), code, "wrong refusal: {resp}");
+}
+
+pub fn top1(next: &[(i32, f32)]) -> i32 {
+    next[0].0
+}
+
+// ---------------------------------------------------------------------
+// Backends and routing fixtures.
+
+pub fn sim() -> SimCompute {
+    SimCompute::from_manifest(&Manifest::toy())
+}
+
+/// Compressed-KV bytes one absorbed chunk costs a session (derived
+/// from the shared toy manifest: 2 buffers x layers x comp_len x
+/// d_model x 4 bytes).
+pub fn kv_per_chunk() -> usize {
+    let m = Manifest::toy();
+    2 * m.model.n_layers * m.scenario.comp_len_max * m.model.d_model * 4
+}
+
+/// The first `n` ids of the form `s<i>` that route to `shard`.
+pub fn ids_on_shard(shard: usize, shards: usize, n: usize) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while out.len() < n {
+        let id = format!("s{i}");
+        if shard_for(&id, shards) == shard {
+            out.push(id);
+        }
+        i += 1;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Server guards.
+
+/// A serve thread under test. On clean paths call [`shutdown_join`] /
+/// [`join`]; if the test panics first, `Drop` best-effort shuts the
+/// server down over a raw socket (with timeouts, without joining) so a
+/// failed test cannot leave the server — or its worker processes —
+/// running behind it.
+///
+/// [`shutdown_join`]: ServerHandle::shutdown_join
+/// [`join`]: ServerHandle::join
+pub struct ServerHandle {
+    pub addr: String,
+    handle: Option<std::thread::JoinHandle<anyhow::Result<()>>>,
+    finished: bool,
+}
+
+impl ServerHandle {
+    pub fn new(addr: String, handle: std::thread::JoinHandle<anyhow::Result<()>>) -> ServerHandle {
+        ServerHandle { addr, handle: Some(handle), finished: false }
+    }
+
+    pub fn client(&self) -> Client {
+        Client::connect(&self.addr).expect("connect")
+    }
+
+    /// Issue a shutdown on a fresh connection, then join the serve
+    /// thread and unwrap its result.
+    pub fn shutdown_join(mut self) {
+        let mut admin = self.client();
+        admin.shutdown().expect("shutdown ack");
+        self.finish();
+    }
+
+    /// Join after a shutdown was already acknowledged through some
+    /// client the test drove itself.
+    pub fn join(mut self) {
+        self.finish();
+    }
+
+    fn finish(&mut self) {
+        self.finished = true;
+        self.handle
+            .take()
+            .expect("server already joined")
+            .join()
+            .expect("server thread")
+            .expect("server result");
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        if !self.finished {
+            best_effort_shutdown(&self.addr);
+        }
+    }
+}
+
+/// Best-effort shutdown over a raw socket: bounded by read/write
+/// timeouts, never joins anything, safe from `Drop` during a panic.
+pub fn best_effort_shutdown(addr: &str) {
+    if let Ok(mut stream) = TcpStream::connect(addr) {
+        let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+        let _ = stream.write_all(b"{\"op\":\"shutdown\"}\n");
+        let mut ack = [0u8; 256];
+        let _ = stream.read(&mut ack);
+    }
+}
+
+/// Start a single-executor server over SimCompute.
+pub fn start_server(sim: SimCompute, tune: impl FnOnce(&mut ServerConfig)) -> ServerHandle {
+    let m = Manifest::toy();
+    let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(m.scenario.comp_len_max));
+    tune(&mut cfg);
+    let (ready_tx, ready_rx) = channel();
+    let handle =
+        std::thread::spawn(move || serve_with_backend(&m, Box::new(sim), cfg, Some(ready_tx)));
+    let addr = ready_rx.recv_timeout(Duration::from_secs(10)).expect("server ready");
+    ServerHandle::new(addr, handle)
+}
+
+/// Start an N-shard in-process server, one SimCompute per shard
+/// (sims[i] becomes shard i's backend).
+pub fn start_sharded(sims: Vec<SimCompute>, tune: impl FnOnce(&mut ServerConfig)) -> ServerHandle {
+    let m = Manifest::toy();
+    let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(m.scenario.comp_len_max));
+    cfg.shards = sims.len();
+    tune(&mut cfg);
+    let (ready_tx, ready_rx) = channel();
+    let handle = std::thread::spawn(move || {
+        let factories: Vec<BackendFactory<'static>> = sims
+            .into_iter()
+            .map(|sim| {
+                Box::new(move || Ok(Box::new(sim) as Box<dyn Compute>)) as BackendFactory<'static>
+            })
+            .collect();
+        serve_sharded(&m, factories, cfg, Some(ready_tx))
+    });
+    let addr = ready_rx.recv_timeout(Duration::from_secs(10)).expect("server ready");
+    ServerHandle::new(addr, handle)
+}
+
+// ---------------------------------------------------------------------
+// Worker-process topology support (re-exec of the test binary).
+
+/// Env var that flips the re-exec'd test binary into worker mode.
+pub const SIM_WORKER_ENV: &str = "CCM_TEST_SIM_WORKER";
+
+/// Body of each test binary's worker entry `#[test]`: when the worker
+/// env is set (only in processes spawned by [`sim_worker_mode`]), run a
+/// SimCompute worker and exit the process; otherwise return and let the
+/// entry pass as an empty test.
+pub fn sim_worker_entry_if_requested() {
+    if std::env::var(SIM_WORKER_ENV).as_deref() != Ok("1") {
+        return;
+    }
+    let env_u64 = |key: &str, default: u64| -> u64 {
+        std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+    };
+    let m = Manifest::toy();
+    let shard = env_u64("CCM_TEST_WORKER_SHARD", 0) as usize;
+    let shards = (env_u64("CCM_TEST_WORKER_SHARDS", 1) as usize).max(1);
+    let mut sim = SimCompute::from_manifest(&m);
+    sim.compress_delay = Duration::from_millis(env_u64("CCM_TEST_WORKER_COMPRESS_MS", 0));
+    sim.infer_delay = Duration::from_millis(env_u64("CCM_TEST_WORKER_INFER_MS", 0));
+    let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(m.scenario.comp_len_max));
+    cfg.shards = shards;
+    cfg.max_pending = env_u64("CCM_TEST_WORKER_MAX_PENDING", 100_000) as usize;
+    let kv_budget = env_u64("CCM_TEST_WORKER_KV_BUDGET", 0) as usize;
+    if kv_budget > 0 {
+        cfg.kv_budget_bytes = Some(kv_budget);
+    }
+    let factory: BackendFactory<'static> = Box::new(move || Ok(Box::new(sim) as Box<dyn Compute>));
+    let code = match ccm::server::run_worker(&m, factory, cfg, shard, None) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("sim worker failed: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Spawn-mode [`WorkerMode`] whose launcher re-execs THIS test binary,
+/// filtered down to `entry` (the worker entry `#[test]` of the calling
+/// binary) with `--nocapture` so the ready handshake reaches stdout.
+/// `per_shard_env` lets a test give individual workers different knobs
+/// (e.g. a slow backend on the victim shard only).
+pub fn sim_worker_mode(
+    entry: &'static str,
+    shards: usize,
+    per_shard_env: Vec<Vec<(String, String)>>,
+) -> WorkerMode {
+    WorkerMode::Spawn {
+        count: shards,
+        launcher: Box::new(move |shard| {
+            let exe = std::env::current_exe().expect("current_exe");
+            let mut cmd = std::process::Command::new(exe);
+            cmd.args([entry, "--exact", "--nocapture"]);
+            cmd.env(SIM_WORKER_ENV, "1")
+                .env("CCM_TEST_WORKER_SHARD", shard.to_string())
+                .env("CCM_TEST_WORKER_SHARDS", shards.to_string());
+            if let Some(envs) = per_shard_env.get(shard) {
+                for (k, v) in envs {
+                    cmd.env(k, v);
+                }
+            }
+            cmd
+        }),
+    }
+}
+
+/// A worker-topology server under test: the [`ServerHandle`] guard plus
+/// a record of every worker pid observed through stats, SIGKILLed as a
+/// backstop if the test dies before a clean shutdown (worker processes
+/// outlive the test process otherwise — the one leak a thread guard
+/// cannot catch).
+pub struct WorkerServer {
+    server: Option<ServerHandle>,
+    pids: Mutex<Vec<u32>>,
+}
+
+impl WorkerServer {
+    pub fn addr(&self) -> &str {
+        &self.server.as_ref().expect("server live").addr
+    }
+
+    pub fn client(&self) -> Client {
+        Client::connect(self.addr()).expect("connect")
+    }
+
+    /// Record every pid in a stats object's `per_worker` rows (so the
+    /// drop backstop knows who to kill) and return the per-worker pids
+    /// in shard order (`None` while a worker is down).
+    pub fn note_pids(&self, stats: &Json) -> Vec<Option<u32>> {
+        let rows = stats.get("per_worker").expect("per_worker rows").arr().expect("array");
+        let mut recorded = self.pids.lock().unwrap();
+        rows.iter()
+            .map(|row| {
+                let pid = row.opt("pid").and_then(|v| v.usize().ok()).map(|p| p as u32);
+                if let Some(p) = pid {
+                    if !recorded.contains(&p) {
+                        recorded.push(p);
+                    }
+                }
+                pid
+            })
+            .collect()
+    }
+
+    pub fn shutdown_join(mut self) {
+        self.server.take().expect("server live").shutdown_join();
+    }
+
+    /// Join after a shutdown was already acknowledged through some
+    /// client the test drove itself.
+    pub fn join(mut self) {
+        self.server.take().expect("server live").join();
+    }
+}
+
+impl Drop for WorkerServer {
+    fn drop(&mut self) {
+        let Some(server) = self.server.as_mut() else { return };
+        if server.finished {
+            return;
+        }
+        best_effort_shutdown(&server.addr);
+        server.finished = true; // suppress the inner guard's second attempt
+        // Give cleanly-shut workers a moment to exit, then SIGKILL
+        // whatever is left of the ones we saw.
+        std::thread::sleep(Duration::from_millis(300));
+        for pid in self.pids.lock().unwrap().drain(..) {
+            if process_alive(pid) {
+                kill9(pid);
+            }
+        }
+    }
+}
+
+/// Start a worker-topology server: `shards` SimCompute workers spawned
+/// by re-exec'ing this test binary through its `entry` test.
+pub fn start_worker_server(
+    entry: &'static str,
+    shards: usize,
+    per_shard_env: Vec<Vec<(String, String)>>,
+    tune: impl FnOnce(&mut ServerConfig),
+) -> WorkerServer {
+    let m = Manifest::toy();
+    let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(m.scenario.comp_len_max));
+    tune(&mut cfg);
+    let mode = sim_worker_mode(entry, shards, per_shard_env);
+    let (ready_tx, ready_rx) = channel();
+    let handle = std::thread::spawn(move || serve_workers(cfg, mode, Some(ready_tx)));
+    let addr = ready_rx.recv_timeout(Duration::from_secs(10)).expect("server ready");
+    WorkerServer { server: Some(ServerHandle::new(addr, handle)), pids: Mutex::new(Vec::new()) }
+}
+
+/// Kill-on-drop wrapper for worker processes a test spawns itself
+/// (SIGKILL is a no-op once the child has exited cleanly).
+pub struct ChildGuard(pub std::process::Child);
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+impl ChildGuard {
+    /// Deadline-poll the child's exit and assert it succeeded.
+    pub fn wait_success(&mut self, timeout: Duration, what: &str) {
+        let status = poll_until(timeout, what, || self.0.try_wait().expect("try_wait"));
+        assert!(status.success(), "{what}: worker exited with {status:?}");
+    }
+}
+
+/// Spawn a raw SimCompute worker process (no supervisor) by re-exec'ing
+/// this test binary, and read its ready handshake: the fixture for
+/// `--worker-addr` connect-mode tests. Stdout keeps draining on a
+/// helper thread so the child never blocks on the pipe.
+pub fn spawn_raw_sim_worker(entry: &str, shard: usize, shards: usize) -> (ChildGuard, String) {
+    use std::io::BufRead;
+    let exe = std::env::current_exe().expect("current_exe");
+    let mut cmd = std::process::Command::new(exe);
+    cmd.args([entry, "--exact", "--nocapture"])
+        .env(SIM_WORKER_ENV, "1")
+        .env("CCM_TEST_WORKER_SHARD", shard.to_string())
+        .env("CCM_TEST_WORKER_SHARDS", shards.to_string())
+        .stdin(std::process::Stdio::null())
+        .stdout(std::process::Stdio::piped());
+    let mut child = cmd.spawn().expect("spawn raw worker");
+    let stdout = child.stdout.take().expect("piped stdout");
+    let mut reader = std::io::BufReader::new(stdout);
+    let addr = loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).expect("worker stdout");
+        assert!(n > 0, "worker exited before its ready handshake");
+        if let Some(addr) = line.trim().strip_prefix(ccm::server::WORKER_READY_PREFIX) {
+            break addr.trim().to_string();
+        }
+    };
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while reader.read_line(&mut sink).map(|n| n > 0).unwrap_or(false) {
+            sink.clear();
+        }
+    });
+    (ChildGuard(child), addr)
+}
+
+// ---------------------------------------------------------------------
+// Unix process helpers (fault injection).
+
+#[cfg(unix)]
+pub fn kill9(pid: u32) {
+    extern "C" {
+        fn kill(pid: i32, sig: i32) -> i32;
+    }
+    unsafe {
+        kill(pid as i32, 9);
+    }
+}
+
+/// True while `pid` exists (signal 0 probe).
+#[cfg(unix)]
+pub fn process_alive(pid: u32) -> bool {
+    extern "C" {
+        fn kill(pid: i32, sig: i32) -> i32;
+    }
+    unsafe { kill(pid as i32, 0) == 0 }
+}
+
+#[cfg(not(unix))]
+pub fn kill9(_pid: u32) {}
+
+#[cfg(not(unix))]
+pub fn process_alive(_pid: u32) -> bool {
+    false
+}

@@ -4,65 +4,29 @@
 //! executor pump, admission control, memory governance) over the
 //! deterministic `SimCompute` backend, so they need no AOT artifacts
 //! and no XLA — they test the serving system, not the model.
+//!
+//! Shared fixtures (server guards with drop-kill, deadline-polling
+//! waits, routing helpers) live in `common/mod.rs`; the thin wrappers
+//! below only keep the historical `(addr, guard)` call shape.
+
+mod common;
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::channel;
 use std::time::{Duration, Instant};
 
-use ccm::compress::{Compute, SimCompute};
-use ccm::coordinator::session::{EvictionKind, SessionPolicy};
+use ccm::compress::SimCompute;
+use ccm::coordinator::session::EvictionKind;
 use ccm::model::Manifest;
-use ccm::server::{
-    serve_sharded, serve_with_backend, shard_for, BackendFactory, Client, ReactorMode,
-    ServerConfig,
-};
+use ccm::server::{shard_for, Client, ReactorMode, ServerConfig};
 use ccm::util::json::Json;
 
-/// Compressed-KV bytes one absorbed chunk costs a session (derived
-/// from the shared toy manifest: 2 buffers x layers x comp_len x
-/// d_model x 4 bytes).
-fn kv_per_chunk() -> usize {
-    let m = Manifest::toy();
-    2 * m.model.n_layers * m.scenario.comp_len_max * m.model.d_model * 4
-}
+use common::{ids_on_shard, kv_per_chunk, poll_until, sim, top1, wait_drained, ServerHandle};
 
-/// Start a server over SimCompute; returns (addr, join handle).
-fn start_server(
-    sim: SimCompute,
-    tune: impl FnOnce(&mut ServerConfig),
-) -> (String, std::thread::JoinHandle<anyhow::Result<()>>) {
-    let m = Manifest::toy();
-    let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(m.scenario.comp_len_max));
-    tune(&mut cfg);
-    let (ready_tx, ready_rx) = channel();
-    let handle =
-        std::thread::spawn(move || serve_with_backend(&m, Box::new(sim), cfg, Some(ready_tx)));
-    let addr = ready_rx.recv_timeout(Duration::from_secs(10)).expect("server ready");
-    (addr, handle)
-}
-
-fn sim() -> SimCompute {
-    SimCompute::from_manifest(&Manifest::toy())
-}
-
-/// Poll stats until no work is queued or in flight.
-fn wait_drained(admin: &mut Client, timeout: Duration) -> Json {
-    let t0 = Instant::now();
-    loop {
-        let stats = admin.stats().expect("stats");
-        let pending = stats.get("pending").unwrap().usize().unwrap();
-        let waiting = stats.get("waiting").unwrap().usize().unwrap();
-        if pending == 0 && waiting == 0 {
-            return stats;
-        }
-        assert!(t0.elapsed() < timeout, "server did not drain in {timeout:?}");
-        std::thread::sleep(Duration::from_millis(5));
-    }
-}
-
-fn top1(next: &[(i32, f32)]) -> i32 {
-    next[0].0
+/// Start a server over SimCompute; returns (addr, drop-kill guard).
+fn start_server(sim: SimCompute, tune: impl FnOnce(&mut ServerConfig)) -> (String, ServerHandle) {
+    let server = common::start_server(sim, tune);
+    (server.addr.clone(), server)
 }
 
 #[test]
@@ -103,7 +67,7 @@ fn concurrent_clients_interleave_context_and_query() {
         n_clients as usize * rounds as usize
     );
     admin.shutdown().unwrap();
-    server.join().unwrap().unwrap();
+    server.join();
 }
 
 #[test]
@@ -132,7 +96,7 @@ fn pipelined_context_acks_report_distinct_steps() {
     let mut admin = Client::connect(&addr).unwrap();
     wait_drained(&mut admin, Duration::from_secs(5));
     admin.shutdown().unwrap();
-    server.join().unwrap().unwrap();
+    server.join();
 }
 
 #[test]
@@ -181,7 +145,7 @@ fn overload_refuses_then_recovers() {
     let next = client.query("fresh", &[7], 1).unwrap();
     assert_eq!(top1(&next), 7);
     admin.shutdown().unwrap();
-    server.join().unwrap().unwrap();
+    server.join();
 }
 
 #[test]
@@ -212,7 +176,7 @@ fn kv_budget_evicts_oldest_sessions_and_keeps_answering() {
     let next = client.query("s0", &[11], 1).unwrap();
     assert_eq!(top1(&next), 11);
     admin.shutdown().unwrap();
-    server.join().unwrap().unwrap();
+    server.join();
 }
 
 #[test]
@@ -241,9 +205,13 @@ fn query_is_not_stuck_behind_unrelated_backlog() {
             }
         }));
     }
-    // Let the backlog build, then race a query against it.
-    std::thread::sleep(Duration::from_millis(100));
+    // Let the backlog actually build (deadline-polled, not a blind
+    // sleep), then race a query against it.
     let mut fast = Client::connect(&addr).unwrap();
+    poll_until(Duration::from_secs(10), "compress backlog to build", || {
+        let stats = fast.stats().expect("stats");
+        (stats.get("pending").unwrap().usize().unwrap() >= 8).then_some(())
+    });
     let next = fast.query("fast", &[9], 1).unwrap();
     assert_eq!(top1(&next), 9);
     let stats = fast.stats().unwrap();
@@ -269,7 +237,7 @@ fn query_is_not_stuck_behind_unrelated_backlog() {
     assert_eq!(t, total_chunks as i64 + 1);
     wait_drained(&mut admin, Duration::from_secs(5));
     admin.shutdown().unwrap();
-    server.join().unwrap().unwrap();
+    server.join();
 }
 
 #[test]
@@ -310,7 +278,7 @@ fn overlong_line_is_refused_and_connection_survives() {
     let mut admin = Client::connect(&addr).unwrap();
     wait_drained(&mut admin, Duration::from_secs(5));
     admin.shutdown().unwrap();
-    server.join().unwrap().unwrap();
+    server.join();
 }
 
 #[test]
@@ -365,7 +333,7 @@ fn max_conns_refuses_excess_connections_and_recovers() {
     let mut ack = String::new();
     admitted.0.read_line(&mut ack).unwrap();
     assert_eq!(Json::parse(ack.trim()).unwrap().get("ok").unwrap(), &Json::Bool(true));
-    server.join().unwrap().unwrap();
+    server.join();
 }
 
 #[test]
@@ -414,7 +382,7 @@ fn slow_reader_receives_every_reply_in_order() {
     let mut admin = Client::connect(&addr).unwrap();
     wait_drained(&mut admin, Duration::from_secs(10));
     admin.shutdown().unwrap();
-    server.join().unwrap().unwrap();
+    server.join();
 }
 
 #[test]
@@ -443,7 +411,7 @@ fn stats_detail_reports_per_session_accounting() {
         assert!(idle <= age, "idle {idle} > age {age}");
     }
     admin.shutdown().unwrap();
-    server.join().unwrap().unwrap();
+    server.join();
 }
 
 #[test]
@@ -477,7 +445,7 @@ fn stats_detail_merges_sessions_across_shards() {
         }
     }
     admin.shutdown().unwrap();
-    server.join().unwrap().unwrap();
+    server.join();
 }
 
 #[test]
@@ -499,7 +467,7 @@ fn graceful_shutdown_drains_work_and_releases_port() {
         true
     };
     assert!(seen_before_shutdown);
-    server.join().unwrap().unwrap();
+    server.join();
     // New work is refused after shutdown (connection fails or errors),
     // and the listener actually released the port: rebinding succeeds.
     let rebound = TcpListener::bind(&addr);
@@ -515,42 +483,13 @@ fn graceful_shutdown_drains_work_and_releases_port() {
 // per shard, deterministic session→shard routing, per-shard budgets.
 
 /// Start an N-shard server, one SimCompute per shard (sims[i] becomes
-/// shard i's backend); returns (addr, join handle).
+/// shard i's backend); returns (addr, drop-kill guard).
 fn start_sharded(
     sims: Vec<SimCompute>,
     tune: impl FnOnce(&mut ServerConfig),
-) -> (String, std::thread::JoinHandle<anyhow::Result<()>>) {
-    let m = Manifest::toy();
-    let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(m.scenario.comp_len_max));
-    cfg.shards = sims.len();
-    tune(&mut cfg);
-    let (ready_tx, ready_rx) = channel();
-    let handle = std::thread::spawn(move || {
-        let factories: Vec<BackendFactory<'static>> = sims
-            .into_iter()
-            .map(|sim| {
-                Box::new(move || Ok(Box::new(sim) as Box<dyn Compute>))
-                    as BackendFactory<'static>
-            })
-            .collect();
-        serve_sharded(&m, factories, cfg, Some(ready_tx))
-    });
-    let addr = ready_rx.recv_timeout(Duration::from_secs(10)).expect("server ready");
-    (addr, handle)
-}
-
-/// The first `n` ids of the form `s<i>` that route to `shard`.
-fn ids_on_shard(shard: usize, shards: usize, n: usize) -> Vec<String> {
-    let mut out = Vec::new();
-    let mut i = 0usize;
-    while out.len() < n {
-        let id = format!("s{i}");
-        if shard_for(&id, shards) == shard {
-            out.push(id);
-        }
-        i += 1;
-    }
-    out
+) -> (String, ServerHandle) {
+    let server = common::start_sharded(sims, tune);
+    (server.addr.clone(), server)
 }
 
 #[test]
@@ -586,7 +525,7 @@ fn sharded_routing_is_stable_and_stats_merge() {
         assert_eq!(p.get("sessions").unwrap().usize().unwrap(), expected, "shard {i}");
     }
     admin.shutdown().unwrap();
-    server.join().unwrap().unwrap();
+    server.join();
 }
 
 #[test]
@@ -612,7 +551,7 @@ fn cross_shard_ordering_is_preserved_per_session() {
     let mut admin = Client::connect(&addr).unwrap();
     wait_drained(&mut admin, Duration::from_secs(5));
     admin.shutdown().unwrap();
-    server.join().unwrap().unwrap();
+    server.join();
 }
 
 #[test]
@@ -670,7 +609,7 @@ fn overload_on_one_shard_does_not_refuse_the_other() {
     let stats = wait_drained(&mut admin, Duration::from_secs(30));
     assert!(stats.get("rejected_overload").unwrap().usize().unwrap() >= overloaded);
     admin.shutdown().unwrap();
-    server.join().unwrap().unwrap();
+    server.join();
 }
 
 #[test]
@@ -705,7 +644,7 @@ fn kv_budget_partitions_across_shards() {
     let next = client.query(&ids_on_shard(0, shards, 1)[0], &[9], 1).unwrap();
     assert_eq!(top1(&next), 9);
     admin.shutdown().unwrap();
-    server.join().unwrap().unwrap();
+    server.join();
 }
 
 // ---------------------------------------------------------------------
@@ -753,7 +692,7 @@ fn multi_reactor_accept_sharding_balances_and_shuts_down_cleanly() {
     // released its listener — the port must be immediately rebindable.
     admin.shutdown().unwrap();
     drop(clients);
-    server.join().unwrap().unwrap();
+    server.join();
     let rebound = TcpListener::bind(&addr);
     assert!(rebound.is_ok(), "port still bound after multi-reactor shutdown: {rebound:?}");
 }
@@ -782,7 +721,7 @@ fn single_listener_handoff_spreads_conns_across_reactors() {
     assert_eq!(accepted.iter().sum::<usize>(), 9, "8 clients + admin, each owned once");
     assert!(accepted.iter().all(|a| *a > 0), "round-robin must reach every reactor: {accepted:?}");
     admin.shutdown().unwrap();
-    server.join().unwrap().unwrap();
+    server.join();
 }
 
 #[test]
@@ -815,7 +754,7 @@ fn reply_timeout_is_answered_promptly() {
     let stats = client.stats().unwrap();
     assert_eq!(stats.get("ok").unwrap(), &Json::Bool(true), "conn must survive the timeout");
     client.shutdown().unwrap();
-    server.join().unwrap().unwrap();
+    server.join();
 }
 
 #[test]
@@ -857,7 +796,7 @@ fn refused_connections_always_receive_the_refusal_line() {
     assert_eq!(top1(&c1.query("a", &[3], 1).unwrap()), 3);
     assert_eq!(top1(&c2.query("b", &[4], 1).unwrap()), 4);
     c1.shutdown().unwrap();
-    server.join().unwrap().unwrap();
+    server.join();
 }
 
 #[test]
@@ -883,7 +822,7 @@ fn stats_detail_prefix_and_limit_bound_the_view() {
     let all = admin.stats_detailed().unwrap();
     assert_eq!(all.get("sessions_detail").unwrap().arr().unwrap().len(), 5);
     admin.shutdown().unwrap();
-    server.join().unwrap().unwrap();
+    server.join();
 }
 
 #[test]
@@ -901,7 +840,7 @@ fn stats_page_bounds_the_single_shard_view_too() {
     assert_eq!(ids, vec!["s-0", "s-1"]);
     assert_eq!(page.get("sessions").unwrap().usize().unwrap(), 3);
     admin.shutdown().unwrap();
-    server.join().unwrap().unwrap();
+    server.join();
 }
 
 #[test]
@@ -934,5 +873,5 @@ fn lru_eviction_policy_is_selectable_and_observable() {
     assert_eq!(ack.get("t").unwrap().i64().unwrap(), 1, "LRU session must have been evicted");
     wait_drained(&mut admin, Duration::from_secs(5));
     admin.shutdown().unwrap();
-    server.join().unwrap().unwrap();
+    server.join();
 }

@@ -1,15 +1,21 @@
-//! CI stress gate for the polling reactor: >= 1024 concurrent
+//! CI stress gates for the serving engine: >= 1024 concurrent
 //! connections against a sharded SimCompute server, hard-gating
-//! against lost replies, broken session accounting, and fd leaks.
+//! against lost replies, broken session accounting, and fd leaks —
+//! in-process shards (`CCM_STRESS=1`) and, for the cross-process
+//! topology, worker-process shards with a mid-stress SIGKILL restart
+//! (`CCM_STRESS=1` + `CCM_STRESS_WORKERS=1`).
 //!
-//! Gated behind `CCM_STRESS=1` because it needs a raised fd limit
-//! (>= 4096; the default soft limit of 1024 cannot hold 2048 sockets).
-//! The CI `stress` job runs it in release with `ulimit -n 65536`:
+//! Gated because they need a raised fd limit (>= 4096; the default
+//! soft limit of 1024 cannot hold 2048 sockets). The CI `stress` job
+//! matrix runs them in release with `ulimit -n 65536`:
 //!
 //! ```bash
 //! ulimit -n 65536 && CCM_STRESS=1 cargo test --release --test stress
 //! ```
 
+mod common;
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
@@ -20,50 +26,61 @@ use ccm::model::Manifest;
 use ccm::server::{serve_sharded, BackendFactory, Client, ReactorMode, ServerConfig};
 use ccm::util::json::Json;
 
+use common::{ids_on_shard, kill9, poll_until, wait_drained};
+
 const N_WORKERS: usize = 32;
 const CONNS_PER_WORKER: usize = 32; // 1024 concurrent connections
 const ROUNDS: i64 = 2;
 const CHURN_PER_WORKER: usize = 8; // extra short-lived connections
 
+/// Both stress tests bracket themselves with PROCESS-WIDE fd counts,
+/// so they must never overlap (libtest runs tests concurrently by
+/// default): each takes this lock for its whole body. Poisoning is
+/// ignored — one failed gate must not turn the other into a second
+/// spurious failure.
+static STRESS_GATE: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
 fn open_fds() -> Option<usize> {
     std::fs::read_dir("/proc/self/fd").ok().map(|dir| dir.count())
 }
 
-/// Poll stats until no work is queued or in flight.
-fn wait_drained(admin: &mut Client, timeout: Duration) -> Json {
-    let t0 = Instant::now();
-    loop {
-        let stats = admin.stats().expect("stats");
-        let pending = stats.get("pending").unwrap().usize().unwrap();
-        let waiting = stats.get("waiting").unwrap().usize().unwrap();
-        if pending == 0 && waiting == 0 {
-            return stats;
-        }
-        assert!(t0.elapsed() < timeout, "server did not drain in {timeout:?}");
-        std::thread::sleep(Duration::from_millis(5));
+fn stress_enabled() -> bool {
+    std::env::var("CCM_STRESS").map(|v| v == "1") == Ok(true)
+}
+
+/// The CI stress matrix drives the reactor count through
+/// CCM_SERVE_REACTORS; unset defaults to 1. Parsed strictly: a typo'd
+/// value must fail the gate loudly, not silently run one reactor while
+/// the job claims to cover four.
+fn reactors_from_env_strict() -> usize {
+    match std::env::var("CCM_SERVE_REACTORS") {
+        Ok(v) => v.parse::<usize>().expect("CCM_SERVE_REACTORS must be a positive integer"),
+        Err(_) => 1,
     }
+}
+
+/// Re-exec entry: processes spawned by the worker-topology stress test
+/// run THIS test with the worker env set and become SimCompute worker
+/// processes; in a normal test run it is an empty pass.
+#[test]
+fn stress_sim_worker_entry() {
+    common::sim_worker_entry_if_requested();
 }
 
 #[test]
 fn reactor_sustains_1024_connections_without_lost_replies_or_fd_leaks() {
-    if std::env::var("CCM_STRESS").map(|v| v == "1") != Ok(true) {
+    if !stress_enabled() {
         eprintln!(
             "skipping reactor stress test: set CCM_STRESS=1 (needs `ulimit -n` >= 4096; \
              run by the CI `stress` job)"
         );
         return;
     }
+    let _gate = STRESS_GATE.lock().unwrap_or_else(|e| e.into_inner());
     let fd_baseline = open_fds();
 
     let shards = 4usize;
-    // The CI stress matrix drives the reactor count through 1 and 4
-    // via CCM_SERVE_REACTORS; unset defaults to 1. Parsed strictly: a
-    // typo'd value must fail the gate loudly, not silently run one
-    // reactor while the job claims to cover four.
-    let reactors = match std::env::var("CCM_SERVE_REACTORS") {
-        Ok(v) => v.parse::<usize>().expect("CCM_SERVE_REACTORS must be a positive integer"),
-        Err(_) => 1,
-    };
+    let reactors = reactors_from_env_strict();
     let manifest = Manifest::toy();
     let mut cfg =
         ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(manifest.scenario.comp_len_max));
@@ -202,22 +219,192 @@ fn reactor_sustains_1024_connections_without_lost_replies_or_fd_leaks() {
     admin.shutdown().unwrap();
     server.join().unwrap().unwrap();
 
-    // fd-leak gate: once every connection is closed and the server has
-    // shut down, the process must be back at (about) its baseline fd
-    // count. Small slack for test-harness internals; a reactor leaking
-    // per-connection fds overshoots by hundreds.
-    if let Some(baseline) = fd_baseline {
-        let deadline = Instant::now() + Duration::from_secs(10);
-        loop {
-            let now_fds = open_fds().expect("/proc/self/fd");
-            if now_fds <= baseline + 16 {
-                break;
+    assert_fds_recover(fd_baseline);
+}
+
+/// The same 1024-connection population, but across the PROCESS
+/// boundary: 2 SimCompute worker processes behind the routing hash,
+/// gated on zero lost replies and counter balance, then a mid-stress
+/// SIGKILL of one worker that must lose no non-victim replies, respawn
+/// with fresh sessions, and increment `shard_restarts` — all without
+/// restarting the front-end.
+#[test]
+fn workers_sustain_1024_connections_and_survive_a_mid_stress_restart() {
+    if !stress_enabled() || std::env::var("CCM_STRESS_WORKERS").map(|v| v == "1") != Ok(true) {
+        eprintln!(
+            "skipping worker stress test: set CCM_STRESS=1 and CCM_STRESS_WORKERS=1 (needs \
+             `ulimit -n` >= 4096; run by the CI `stress` workers matrix leg)"
+        );
+        return;
+    }
+    if !cfg!(unix) {
+        eprintln!("skipping worker stress test: SIGKILL fault injection needs unix");
+        return;
+    }
+    let _gate = STRESS_GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let fd_baseline = open_fds();
+
+    let workers = 2usize;
+    let reactors = reactors_from_env_strict();
+    let server = common::start_worker_server("stress_sim_worker_entry", workers, Vec::new(), |cfg| {
+        cfg.reactor = ReactorMode::Epoll;
+        cfg.reactors = reactors;
+        cfg.max_pending = 100_000;
+        cfg.max_conns = 20_000;
+    });
+    let addr = server.addr().to_string();
+    let mut admin = server.client();
+    common::wait_workers_up(&mut admin, workers, Duration::from_secs(30));
+
+    // Phase A: the full 1024-connection population, every reply
+    // asserted, exactly as for in-process shards.
+    let barrier = Arc::new(Barrier::new(N_WORKERS));
+    let mut handles = Vec::new();
+    for w in 0..N_WORKERS {
+        let addr = addr.clone();
+        let barrier = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut clients: Vec<(String, Client)> = (0..CONNS_PER_WORKER)
+                .map(|i| (format!("stress-{w}-{i}"), Client::connect(&addr).expect("connect")))
+                .collect();
+            barrier.wait();
+            for round in 1..=ROUNDS {
+                for (session, client) in clients.iter_mut() {
+                    let ack = client.add_context(session, &[1, 2, 3]).expect("context ack");
+                    assert_eq!(ack.get("t").unwrap().i64().unwrap(), round, "{session}");
+                    let tok = 5 + (round as i32 % 3);
+                    let next = client.query(session, &[tok], 3).expect("query reply");
+                    assert_eq!(next[0].0, tok, "{session} round {round}: echo rank");
+                }
             }
-            assert!(
-                Instant::now() < deadline,
-                "fd leak: {now_fds} open fds vs baseline {baseline}"
-            );
-            std::thread::sleep(Duration::from_millis(100));
+            barrier.wait();
+        }));
+    }
+    for handle in handles {
+        handle.join().expect("stress client thread");
+    }
+
+    let n_conns = N_WORKERS * CONNS_PER_WORKER;
+    let stats = wait_drained(&mut admin, Duration::from_secs(60));
+    assert_eq!(stats.get("shards").unwrap().usize().unwrap(), workers);
+    assert_eq!(stats.get("sessions").unwrap().usize().unwrap(), n_conns);
+    assert_eq!(stats.get("compressions").unwrap().usize().unwrap(), n_conns * ROUNDS as usize);
+    assert_eq!(
+        stats.get("inferences").unwrap().usize().unwrap(),
+        n_conns * ROUNDS as usize,
+        "every query crossed the IPC boundary and back"
+    );
+    assert_eq!(
+        stats.get("requests").unwrap().usize().unwrap(),
+        n_conns * 2 * ROUNDS as usize,
+        "every request admitted exactly once across both worker processes"
+    );
+    assert_eq!(stats.get("rejected_overload").unwrap().usize().unwrap(), 0);
+    assert_eq!(stats.get("shard_restarts").unwrap().usize().unwrap(), 0);
+    let rows = stats.get("per_reactor").unwrap().arr().unwrap();
+    assert_eq!(rows.len(), reactors, "front-end transport rows survive the worker topology");
+    let pids = server.note_pids(&stats);
+    assert_eq!(pids.len(), workers);
+    let victim_pid = pids[0].expect("worker 0 up with a pid");
+    for (i, row) in stats.get("per_worker").unwrap().arr().unwrap().iter().enumerate() {
+        assert_eq!(row.get("worker").unwrap().usize().unwrap(), i);
+        assert_eq!(row.get("up").unwrap(), &Json::Bool(true), "worker {i} must be up");
+    }
+
+    // Phase B: continuous non-victim load while worker 0 is SIGKILLed.
+    // Every reply on the surviving shard must stay a success — the
+    // victim's failure is not allowed to cost anyone else anything.
+    let survivor_sessions = ids_on_shard(1, workers, 64);
+    let stop = Arc::new(AtomicBool::new(false));
+    let survivor_queries = Arc::new(AtomicUsize::new(0));
+    let mut burst = Vec::new();
+    for chunk in survivor_sessions.chunks(8) {
+        let addr = addr.clone();
+        let sessions: Vec<String> = chunk.to_vec();
+        let stop = stop.clone();
+        let survivor_queries = survivor_queries.clone();
+        burst.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).expect("survivor connect");
+            while !stop.load(Ordering::SeqCst) {
+                for session in &sessions {
+                    let next = client.query(session, &[7], 1).expect("survivor reply");
+                    assert_eq!(next[0].0, 7, "{session}: non-victim reply corrupted");
+                    survivor_queries.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+        }));
+    }
+    // Let the burst actually flow before the kill, so in-flight
+    // non-victim traffic brackets the failure.
+    poll_until(Duration::from_secs(10), "survivor burst to start", || {
+        (survivor_queries.load(Ordering::SeqCst) > 64).then_some(())
+    });
+    kill9(victim_pid);
+    // Respawn: restarts increments, the worker comes back up under a
+    // new pid — all while the survivor burst keeps asserting.
+    let new_pid = poll_until(Duration::from_secs(30), "worker 0 to respawn", || {
+        let stats = admin.stats().expect("stats during restart");
+        let pids = server.note_pids(&stats);
+        let row = &stats.get("per_worker").unwrap().arr().unwrap()[0];
+        let up = row.get("up").unwrap() == &Json::Bool(true);
+        let restarts = row.get("restarts").unwrap().usize().unwrap();
+        match pids[0] {
+            Some(pid) if up && restarts == 1 && pid != victim_pid => Some(pid),
+            _ => None,
         }
+    });
+    assert_ne!(new_pid, victim_pid);
+    let mid_burst = survivor_queries.load(Ordering::SeqCst);
+    // Keep the burst running a beat past the respawn, then stop it.
+    poll_until(Duration::from_secs(10), "survivor burst to continue past the respawn", || {
+        (survivor_queries.load(Ordering::SeqCst) > mid_burst + 64).then_some(())
+    });
+    stop.store(true, Ordering::SeqCst);
+    for b in burst {
+        b.join().expect("survivor burst thread — a non-victim reply was lost");
+    }
+
+    // The respawned worker serves FRESH sessions: a phase-A session on
+    // shard 0 restarts at t=1 (its Mem(t) died with the old process).
+    let victim_session = (0..N_WORKERS)
+        .flat_map(|w| (0..CONNS_PER_WORKER).map(move |i| format!("stress-{w}-{i}")))
+        .find(|id| ccm::server::shard_for(id, workers) == 0)
+        .expect("some stress session routes to shard 0");
+    let t = poll_until(Duration::from_secs(15), "victim shard to serve again", || {
+        let mut c = Client::connect(&addr).expect("connect");
+        let ack = c.add_context(&victim_session, &[1]).expect("reply");
+        if ack.get("ok").unwrap() == &Json::Bool(true) {
+            Some(ack.get("t").unwrap().i64().unwrap())
+        } else {
+            None // shard_unavailable while the respawn completes
+        }
+    });
+    assert_eq!(t, 1, "{victim_session}: respawned worker must start with fresh sessions");
+
+    let stats = wait_drained(&mut admin, Duration::from_secs(60));
+    assert_eq!(stats.get("shard_restarts").unwrap().usize().unwrap(), 1);
+    drop(admin);
+    server.shutdown_join();
+
+    // Port actually released and fds recovered in the front-end
+    // process (worker fds died with the workers).
+    assert!(std::net::TcpListener::bind(&addr).is_ok(), "port still bound after shutdown");
+    assert_fds_recover(fd_baseline);
+}
+
+/// fd-leak gate: once every connection is closed and the server has
+/// shut down, the process must be back at (about) its baseline fd
+/// count. Small slack for test-harness internals; a reactor leaking
+/// per-connection fds overshoots by hundreds.
+fn assert_fds_recover(baseline: Option<usize>) {
+    let Some(baseline) = baseline else { return };
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let now_fds = open_fds().expect("/proc/self/fd");
+        if now_fds <= baseline + 16 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "fd leak: {now_fds} open fds vs baseline {baseline}");
+        std::thread::sleep(Duration::from_millis(100));
     }
 }

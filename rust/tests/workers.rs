@@ -1,0 +1,273 @@
+//! Fault-injection integration tests for the cross-process worker
+//! topology: SIGKILL a worker mid-burst and prove the documented
+//! failure semantics over real sockets and real processes — in-flight
+//! requests to the dead shard fail over to `shard_unavailable` (no
+//! hang, no dropped connection), other shards keep answering
+//! throughout, and the supervisor respawns the worker with fresh
+//! sessions and an incremented `shard_restarts`, all without
+//! restarting the front-end. Until this suite, nothing exercised
+//! partial failure: every prior topology died as one process.
+//!
+//! Worker processes are this same test binary re-exec'd through
+//! `sim_worker_process_entry` (see `common::sim_worker_entry_if_requested`).
+
+mod common;
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use ccm::coordinator::session::SessionPolicy;
+use ccm::model::Manifest;
+use ccm::server::{serve_workers, shard_for, Client, ServerConfig, WorkerMode};
+use ccm::util::json::Json;
+
+use common::{
+    assert_error, assert_ok, ids_on_shard, kill9, poll_until, process_alive, top1, wait_drained,
+    ServerHandle,
+};
+
+/// Re-exec entry: processes spawned by these tests run THIS test with
+/// the worker env set and become SimCompute worker processes; in a
+/// normal test run it is an empty pass.
+#[test]
+fn sim_worker_process_entry() {
+    common::sim_worker_entry_if_requested();
+}
+
+const ENTRY: &str = "sim_worker_process_entry";
+
+#[test]
+fn worker_topology_routes_stably_and_shuts_down_every_process() {
+    let workers = 2usize;
+    let server = common::start_worker_server(ENTRY, workers, Vec::new(), |_| {});
+    let mut admin = server.client();
+    common::wait_workers_up(&mut admin, workers, Duration::from_secs(30));
+    // Routing stability across processes AND connections: a session's
+    // chunks land on one worker whatever connection carries them, so
+    // its time step keeps advancing.
+    let n_sessions = 8usize;
+    for round in 1..=2i64 {
+        let mut client = server.client();
+        for s in 0..n_sessions {
+            let ack = client.add_context(&format!("user{s}"), &[1, 2]).unwrap();
+            assert_ok(&ack);
+            assert_eq!(ack.get("t").unwrap().i64().unwrap(), round, "user{s}");
+        }
+        let next = client.query(&format!("user{round}"), &[6], 1).unwrap();
+        assert_eq!(top1(&next), 6);
+    }
+    let stats = wait_drained(&mut admin, Duration::from_secs(10));
+    assert_eq!(stats.get("shards").unwrap().usize().unwrap(), workers);
+    assert_eq!(stats.get("sessions").unwrap().usize().unwrap(), n_sessions);
+    assert_eq!(stats.get("compressions").unwrap().usize().unwrap(), n_sessions * 2);
+    assert_eq!(stats.get("shard_restarts").unwrap().usize().unwrap(), 0);
+    // Per-shard split matches the routing hash exactly — across the
+    // process boundary, same invariant as in-process shards.
+    for (i, p) in stats.get("per_shard").unwrap().arr().unwrap().iter().enumerate() {
+        let expected =
+            (0..n_sessions).filter(|s| shard_for(&format!("user{s}"), workers) == i).count();
+        assert_eq!(p.get("shard").unwrap().usize().unwrap(), i);
+        assert_eq!(p.get("sessions").unwrap().usize().unwrap(), expected, "shard {i}");
+    }
+    // Supervision rows: both workers up, live pids, a live RTT sample.
+    let pids = server.note_pids(&stats);
+    let rows = stats.get("per_worker").unwrap().arr().unwrap();
+    assert_eq!(rows.len(), workers);
+    for (i, row) in rows.iter().enumerate() {
+        assert_eq!(row.get("worker").unwrap().usize().unwrap(), i);
+        assert_eq!(row.get("up").unwrap(), &Json::Bool(true), "worker {i}");
+        assert!(pids[i].is_some(), "worker {i} must report its pid");
+        assert!(process_alive(pids[i].unwrap()) || !cfg!(unix), "worker {i} pid must be live");
+        assert!(row.get("rtt_ms").unwrap().f64().unwrap() > 0.0, "worker {i} rtt sample");
+    }
+    // Shutdown drains ACROSS the IPC boundary: the ack arrives only
+    // after both workers drained; the processes then exit and the
+    // front-end port is released.
+    let addr = server.addr().to_string();
+    server.shutdown_join();
+    if cfg!(unix) {
+        for pid in pids.into_iter().flatten() {
+            poll_until(Duration::from_secs(10), "worker process to exit after shutdown", || {
+                (!process_alive(pid)).then_some(())
+            });
+        }
+    }
+    assert!(std::net::TcpListener::bind(&addr).is_ok(), "port still bound after shutdown");
+}
+
+#[cfg(unix)]
+#[test]
+fn worker_kill_mid_burst_fails_fast_while_other_shards_serve_and_respawn_recovers() {
+    let workers = 2usize;
+    // The victim shard gets a 2 s inference delay so the burst below is
+    // guaranteed to still be in flight when the SIGKILL lands; the
+    // survivor shard stays fast.
+    let per_shard_env =
+        vec![vec![("CCM_TEST_WORKER_INFER_MS".to_string(), "2000".to_string())], Vec::new()];
+    let server = common::start_worker_server(ENTRY, workers, per_shard_env, |_| {});
+    let addr = server.addr().to_string();
+    let mut admin = server.client();
+    common::wait_workers_up(&mut admin, workers, Duration::from_secs(30));
+
+    // Establish state on both shards: the victim session reaches t=2,
+    // the survivor t=1.
+    let victim_sessions = ids_on_shard(0, workers, 4);
+    let survivor_session = ids_on_shard(1, workers, 1).pop().unwrap();
+    let mut client = server.client();
+    let victim_session = victim_sessions[0].clone();
+    for tokens in [[1, 2], [3, 4]] {
+        let ack = client.add_context(&victim_session, &tokens).unwrap();
+        assert_ok(&ack);
+    }
+    let ack = client.add_context(&survivor_session, &[5, 6]).unwrap();
+    assert_ok(&ack);
+    let stats = wait_drained(&mut admin, Duration::from_secs(10));
+    let pids = server.note_pids(&stats);
+    let victim_pid = pids[0].expect("worker 0 up");
+
+    // Survivor load brackets the whole failure: continuous queries on
+    // shard 1, every single one asserted OK.
+    let stop = Arc::new(AtomicBool::new(false));
+    let survivor_ok = Arc::new(AtomicUsize::new(0));
+    let survivor = {
+        let addr = addr.clone();
+        let session = survivor_session.clone();
+        let stop = stop.clone();
+        let survivor_ok = survivor_ok.clone();
+        std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).expect("survivor connect");
+            while !stop.load(Ordering::SeqCst) {
+                let next = client.query(&session, &[9], 1).expect("survivor reply");
+                assert_eq!(next[0].0, 9, "survivor reply corrupted");
+                survivor_ok.fetch_add(1, Ordering::SeqCst);
+            }
+        })
+    };
+
+    // In-flight burst against the victim shard: one query per session,
+    // each stuck behind the 2 s inference when the kill lands. Every
+    // one must come back as a prompt `shard_unavailable` — not a hang,
+    // not a dropped connection.
+    let written = Arc::new(AtomicUsize::new(0));
+    let mut burst = Vec::new();
+    for session in victim_sessions.iter().cloned() {
+        let addr = addr.clone();
+        let written = written.clone();
+        burst.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).expect("burst connect");
+            let line =
+                format!("{{\"op\":\"query\",\"session\":\"{session}\",\"tokens\":[4],\"topk\":1}}");
+            // call() writes the line, then blocks on the reply; the
+            // written counter lets the killer thread sequence itself.
+            written.fetch_add(1, Ordering::SeqCst);
+            let t0 = Instant::now();
+            let resp = client.call(&line).expect("a reply line, not a dropped connection");
+            (resp, t0.elapsed())
+        }));
+    }
+    poll_until(Duration::from_secs(10), "burst queries to be written", || {
+        (written.load(Ordering::SeqCst) == burst.len()).then_some(())
+    });
+    // Let the frames reach the worker's executor, then kill it cold.
+    std::thread::sleep(Duration::from_millis(150));
+    kill9(victim_pid);
+    for b in burst {
+        let (resp, elapsed) = b.join().expect("burst thread");
+        assert_error(&resp, "shard_unavailable");
+        assert!(
+            elapsed < Duration::from_secs(8),
+            "failover must be prompt (got {elapsed:?}), never a hang on the 2 s backend"
+        );
+    }
+
+    // Respawn: restarts increments and the worker returns under a new
+    // pid — while the survivor thread keeps asserting on shard 1.
+    let new_pid = poll_until(Duration::from_secs(30), "worker 0 to respawn", || {
+        let stats = admin.stats().expect("stats during outage");
+        let pids = server.note_pids(&stats);
+        let row = &stats.get("per_worker").unwrap().arr().unwrap()[0];
+        let up = row.get("up").unwrap() == &Json::Bool(true);
+        let restarts = row.get("restarts").unwrap().usize().unwrap();
+        match pids[0] {
+            Some(pid) if up && restarts == 1 && pid != victim_pid => Some(pid),
+            _ => None,
+        }
+    });
+    assert_ne!(new_pid, victim_pid);
+
+    // Fresh sessions: the victim session had reached t=2; after the
+    // respawn its next chunk acks t=1 — Mem(t) died with the process.
+    let t = poll_until(Duration::from_secs(15), "victim shard to serve again", || {
+        let mut c = Client::connect(&addr).expect("connect");
+        let ack = c.add_context(&victim_session, &[7]).expect("reply");
+        if ack.get("ok").unwrap() == &Json::Bool(true) {
+            Some(ack.get("t").unwrap().i64().unwrap())
+        } else {
+            assert_error(&ack, "shard_unavailable"); // the only refusal allowed here
+            None
+        }
+    });
+    assert_eq!(t, 1, "{victim_session}: respawned worker must start fresh");
+
+    // The survivor never missed a beat, before, during, or after.
+    let before_stop = survivor_ok.load(Ordering::SeqCst);
+    assert!(before_stop > 0, "survivor load must have been flowing");
+    stop.store(true, Ordering::SeqCst);
+    survivor.join().expect("survivor thread — a non-victim reply was lost");
+    // And its session state was untouched by the neighbour's death.
+    let ack = client.add_context(&survivor_session, &[8]).unwrap();
+    assert_ok(&ack);
+    assert_eq!(ack.get("t").unwrap().i64().unwrap(), 2, "survivor state must persist");
+
+    let stats = wait_drained(&mut admin, Duration::from_secs(30));
+    assert_eq!(stats.get("shard_restarts").unwrap().usize().unwrap(), 1);
+    server.shutdown_join();
+}
+
+#[test]
+fn external_workers_connect_mode_serves_and_drains() {
+    // `--worker-addr` topology: the workers are started by the test
+    // (stand-ins for an operator), the front-end only connects.
+    let workers = 2usize;
+    let (mut child0, addr0) = common::spawn_raw_sim_worker(ENTRY, 0, workers);
+    let (mut child1, addr1) = common::spawn_raw_sim_worker(ENTRY, 1, workers);
+    let m = Manifest::toy();
+    let cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(m.scenario.comp_len_max));
+    let (ready_tx, ready_rx) = channel();
+    let mode = WorkerMode::Connect { addrs: vec![addr0, addr1] };
+    let handle = std::thread::spawn(move || serve_workers(cfg, mode, Some(ready_tx)));
+    let addr = ready_rx.recv_timeout(Duration::from_secs(10)).expect("server ready");
+    let server = ServerHandle::new(addr, handle);
+    let mut admin = server.client();
+    common::wait_workers_up(&mut admin, workers, Duration::from_secs(30));
+
+    let mut client = server.client();
+    for shard in 0..workers {
+        for id in ids_on_shard(shard, workers, 2) {
+            let ack = client.add_context(&id, &[1, 2]).unwrap();
+            assert_ok(&ack);
+            assert_eq!(ack.get("t").unwrap().i64().unwrap(), 1, "{id}");
+            let next = client.query(&id, &[3], 1).unwrap();
+            assert_eq!(top1(&next), 3, "{id}");
+        }
+    }
+    let stats = wait_drained(&mut admin, Duration::from_secs(10));
+    assert_eq!(stats.get("sessions").unwrap().usize().unwrap(), 2 * workers);
+    let rows = stats.get("per_worker").unwrap().arr().unwrap();
+    for (i, row) in rows.iter().enumerate() {
+        assert_eq!(row.get("up").unwrap(), &Json::Bool(true), "worker {i}");
+        assert_eq!(
+            row.get("pid").unwrap(),
+            &Json::Null,
+            "connect mode supervises connections, not processes"
+        );
+        assert_eq!(row.get("restarts").unwrap().usize().unwrap(), 0);
+    }
+    // Shutdown drains both EXTERNAL workers too: they ack and exit on
+    // their own, and only then does the front-end ack its client.
+    server.shutdown_join();
+    child0.wait_success(Duration::from_secs(10), "external worker 0 to exit after drain");
+    child1.wait_success(Duration::from_secs(10), "external worker 1 to exit after drain");
+}
