@@ -1,0 +1,669 @@
+//! `ccm-lint` — a zero-dependency invariant linter for the ccm serving
+//! core.
+//!
+//! rustc and clippy cannot express the repo-specific contracts this
+//! codebase leans on: a `// SAFETY:` comment on every `unsafe`, no
+//! stray `unwrap` on live-traffic paths, no `MutexGuard` held across
+//! blocking socket I/O, raw fd syscalls confined to `poll.rs`,
+//! justified `Ordering::Relaxed`, and no `std::env::set_var` anywhere
+//! near the test suites. This crate checks them the same way `poll.rs`
+//! does syscalls: by hand, with no dependencies, so the linter can
+//! never be the thing that breaks the offline build.
+//!
+//! [`lex`] splits a file into per-line views with comment and
+//! string/char literal bodies removed (so token scans cannot match
+//! inside a string) while keeping every comment's text for the
+//! annotation checks; the rules in [`lint_source`] operate on that
+//! view. The rule catalogue, rationale, and allow-list syntax live in
+//! `docs/INVARIANTS.md`. Run as:
+//!
+//! ```text
+//! cargo run -p ccm-lint -- rust/src rust/tests examples
+//! ```
+
+use std::fmt;
+
+/// Rule 1: every `unsafe` needs an immediately preceding `// SAFETY:`.
+pub const RULE_SAFETY: &str = "safety-comment";
+/// Rule 2: no `.unwrap()`/`.expect()` on serving-core paths.
+pub const RULE_UNWRAP: &str = "unwrap";
+/// Rule 3: no `MutexGuard` held lexically across blocking I/O.
+pub const RULE_LOCK_IO: &str = "lock-across-io";
+/// Rule 4: raw fd/socket syscalls only in `poll.rs`.
+pub const RULE_RAW_FD: &str = "raw-fd-outside-poll";
+/// Rule 5: `Ordering::Relaxed` outside counter bumps needs a reason.
+pub const RULE_ORDERING: &str = "relaxed-ordering";
+/// Rule 6: `std::env::set_var` is banned (process-global, UB with
+/// concurrent test threads).
+pub const RULE_SET_VAR: &str = "env-set-var";
+
+/// One rule violation, rendered as `file:line: [rule] message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lexer: split source into parallel per-line code / comment views.
+
+/// A source file split into parallel per-line views: `code[i]` is line
+/// `i` with comments removed and string/char literal bodies blanked
+/// (quotes kept), `comments[i]` is the concatenated text of every
+/// comment overlapping line `i`.
+pub struct FileView {
+    pub code: Vec<String>,
+    pub comments: Vec<String>,
+}
+
+fn newline(code: &mut Vec<String>, comments: &mut Vec<String>) {
+    code.push(String::new());
+    comments.push(String::new());
+}
+
+fn push_ascii(dst: &mut String, c: u8) {
+    dst.push(if c.is_ascii() { c as char } else { ' ' });
+}
+
+/// Tokenize `src` into a [`FileView`], understanding line comments,
+/// nested block comments, string / byte-string / raw-string literals,
+/// char and byte-char literals, and lifetimes.
+pub fn lex(src: &str) -> FileView {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut code = vec![String::new()];
+    let mut comments = vec![String::new()];
+    let mut i = 0usize;
+    // True when the previous code byte could end an identifier: an `r`
+    // there is part of a name, not a raw-string prefix.
+    let mut prev_ident = false;
+    while i < n {
+        match b[i] {
+            b'\n' => {
+                newline(&mut code, &mut comments);
+                prev_ident = false;
+                i += 1;
+            }
+            b'/' if i + 1 < n && b[i + 1] == b'/' => {
+                let start = i;
+                while i < n && b[i] != b'\n' {
+                    i += 1;
+                }
+                for &c in &b[start..i] {
+                    push_ascii(comments.last_mut().expect("line"), c);
+                }
+                code.last_mut().expect("line").push(' ');
+                prev_ident = false;
+            }
+            b'/' if i + 1 < n && b[i + 1] == b'*' => {
+                i += 2;
+                let mut depth = 1usize;
+                while i < n && depth > 0 {
+                    if b[i] == b'\n' {
+                        newline(&mut code, &mut comments);
+                        i += 1;
+                    } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                        depth -= 1;
+                        i += 2;
+                    } else if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                        depth += 1;
+                        i += 2;
+                    } else {
+                        push_ascii(comments.last_mut().expect("line"), b[i]);
+                        i += 1;
+                    }
+                }
+                code.last_mut().expect("line").push(' ');
+                prev_ident = false;
+            }
+            b'"' => {
+                i = consume_string(b, i, &mut code, &mut comments);
+                prev_ident = false;
+            }
+            b'r' | b'b' if !prev_ident && is_raw_string_start(b, i) => {
+                i = consume_raw_string(b, i, &mut code, &mut comments);
+                prev_ident = false;
+            }
+            b'\'' => {
+                let escaped = i + 1 < n && b[i + 1] == b'\\';
+                let delimited = i + 2 < n && b[i + 1] != b'\'' && b[i + 2] == b'\'';
+                if escaped || delimited {
+                    code.last_mut().expect("line").push_str("''");
+                    i += 1;
+                    while i < n {
+                        match b[i] {
+                            b'\\' if i + 1 < n => i += 2,
+                            b'\'' => {
+                                i += 1;
+                                break;
+                            }
+                            b'\n' => break,
+                            _ => i += 1,
+                        }
+                    }
+                } else {
+                    // A lifetime: keep the tick, the name flows as code.
+                    code.last_mut().expect("line").push('\'');
+                    i += 1;
+                }
+                prev_ident = false;
+            }
+            c => {
+                push_ascii(code.last_mut().expect("line"), c);
+                prev_ident = c.is_ascii_alphanumeric() || c == b'_';
+                i += 1;
+            }
+        }
+    }
+    FileView { code, comments }
+}
+
+/// Consume a `"..."` literal starting at the opening quote; returns the
+/// index just past the closing quote. Bodies are dropped from the code
+/// view; `\`-newline continuations and multi-line strings keep the line
+/// count honest.
+fn consume_string(
+    b: &[u8],
+    mut i: usize,
+    code: &mut Vec<String>,
+    comments: &mut Vec<String>,
+) -> usize {
+    code.last_mut().expect("line").push('"');
+    i += 1;
+    while i < b.len() {
+        match b[i] {
+            b'\\' if i + 1 < b.len() => {
+                if b[i + 1] == b'\n' {
+                    newline(code, comments);
+                }
+                i += 2;
+            }
+            b'"' => {
+                code.last_mut().expect("line").push('"');
+                return i + 1;
+            }
+            b'\n' => {
+                newline(code, comments);
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+fn is_raw_string_start(b: &[u8], i: usize) -> bool {
+    let mut j = i + 1;
+    if b[i] == b'b' {
+        if j >= b.len() || b[j] != b'r' {
+            return false;
+        }
+        j += 1;
+    }
+    while j < b.len() && b[j] == b'#' {
+        j += 1;
+    }
+    j < b.len() && b[j] == b'"'
+}
+
+/// Consume `r"..."` / `r#"..."#` / `br#"..."#` starting at the `r`/`b`;
+/// returns the index just past the closing delimiter.
+fn consume_raw_string(
+    b: &[u8],
+    mut i: usize,
+    code: &mut Vec<String>,
+    comments: &mut Vec<String>,
+) -> usize {
+    if b[i] == b'b' {
+        code.last_mut().expect("line").push('b');
+        i += 1;
+    }
+    code.last_mut().expect("line").push('r');
+    i += 1;
+    let mut hashes = 0usize;
+    while i < b.len() && b[i] == b'#' {
+        code.last_mut().expect("line").push('#');
+        hashes += 1;
+        i += 1;
+    }
+    code.last_mut().expect("line").push('"');
+    i += 1; // the opening quote
+    while i < b.len() {
+        if b[i] == b'"' {
+            let tail = &b[i + 1..];
+            if tail.len() >= hashes && tail[..hashes].iter().all(|&c| c == b'#') {
+                code.last_mut().expect("line").push('"');
+                return i + 1 + hashes;
+            }
+        }
+        if b[i] == b'\n' {
+            newline(code, comments);
+        }
+        i += 1;
+    }
+    i
+}
+
+// ---------------------------------------------------------------------
+// Structural helpers over the code view.
+
+fn is_ident_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Byte offsets of whole-word occurrences of `word` in `line`.
+fn find_word(line: &str, word: &str) -> Vec<usize> {
+    let b = line.as_bytes();
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    while let Some(pos) = line[start..].find(word) {
+        let at = start + pos;
+        let end = at + word.len();
+        let before_ok = at == 0 || !is_ident_byte(b[at - 1]);
+        let after_ok = end >= b.len() || !is_ident_byte(b[end]);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        start = at + word.len();
+    }
+    out
+}
+
+/// Running brace depth at the start of each code line.
+fn line_depths(code: &[String]) -> Vec<i32> {
+    let mut out = Vec::with_capacity(code.len());
+    let mut depth = 0i32;
+    for line in code {
+        out.push(depth);
+        for c in line.bytes() {
+            match c {
+                b'{' => depth += 1,
+                b'}' => depth -= 1,
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+/// Find the `{ ... }` block starting at or after (`line`, `col`);
+/// returns its inclusive (start_line, end_line), or `None` when a `;`
+/// ends the item before any block opens.
+fn brace_block_after(code: &[String], line: usize, col: usize) -> Option<(usize, usize)> {
+    let mut depth = 0i32;
+    let mut started = false;
+    let mut start_line = line;
+    let mut l = line;
+    let mut c = col;
+    while l < code.len() {
+        let bytes = code[l].as_bytes();
+        while c < bytes.len() {
+            match bytes[c] {
+                b'{' => {
+                    if !started {
+                        started = true;
+                        start_line = l;
+                    }
+                    depth += 1;
+                }
+                b'}' if started => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some((start_line, l));
+                    }
+                }
+                b';' if !started => return None,
+                _ => {}
+            }
+            c += 1;
+        }
+        l += 1;
+        c = 0;
+    }
+    None
+}
+
+/// Inclusive line ranges covered by `#[cfg(test)]` items (the brace
+/// block following the attribute, attribute line included).
+pub fn test_regions(code: &[String]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    for (i, line) in code.iter().enumerate() {
+        let Some(at) = line.find("#[cfg(test)]") else { continue };
+        if let Some((_, end)) = brace_block_after(code, i, at) {
+            out.push((i, end));
+        }
+    }
+    out
+}
+
+/// Inclusive line ranges of `extern "..." { ... }` blocks.
+fn extern_regions(code: &[String]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    for (i, line) in code.iter().enumerate() {
+        for at in find_word(line, "extern") {
+            if let Some(r) = brace_block_after(code, i, at) {
+                out.push(r);
+            }
+        }
+    }
+    out
+}
+
+fn in_regions(line: usize, regions: &[(usize, usize)]) -> bool {
+    regions.iter().any(|&(s, e)| line >= s && line <= e)
+}
+
+/// True when `needle` appears in a comment on line `i` or in the
+/// contiguous run of comment-only lines directly above it (no blank
+/// line or code line may intervene).
+fn annotated(view: &FileView, i: usize, needle: &str) -> bool {
+    if view.comments[i].contains(needle) {
+        return true;
+    }
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let comment_only = !view.comments[j].is_empty() && view.code[j].trim().is_empty();
+        if !comment_only {
+            return false;
+        }
+        if view.comments[j].contains(needle) {
+            return true;
+        }
+    }
+    false
+}
+
+fn finding(file: &str, line: usize, rule: &'static str, msg: String) -> Finding {
+    Finding { file: file.to_string(), line: line + 1, rule, msg }
+}
+
+// ---------------------------------------------------------------------
+// Rules.
+
+fn rule_safety(file: &str, view: &FileView, out: &mut Vec<Finding>) {
+    for (i, line) in view.code.iter().enumerate() {
+        if find_word(line, "unsafe").is_empty() || annotated(view, i, "SAFETY:") {
+            continue;
+        }
+        out.push(finding(
+            file,
+            i,
+            RULE_SAFETY,
+            "`unsafe` without an immediately preceding `// SAFETY:` comment".to_string(),
+        ));
+    }
+}
+
+fn rule_unwrap(file: &str, view: &FileView, tests: &[(usize, usize)], out: &mut Vec<Finding>) {
+    for (i, line) in view.code.iter().enumerate() {
+        if in_regions(i, tests) {
+            continue;
+        }
+        let mut hit = false;
+        for pat in [".unwrap()", ".expect("] {
+            let mut start = 0usize;
+            while let Some(pos) = line[start..].find(pat) {
+                let at = start + pos;
+                // Mutex/RwLock poisoning propagation is policy (a
+                // poisoned lock means a holder already panicked): the
+                // idiom `.lock().unwrap()` is exempt.
+                if !line[..at].ends_with(".lock()") {
+                    hit = true;
+                }
+                start = at + pat.len();
+            }
+        }
+        if !hit || annotated(view, i, "lint: allow(unwrap)") {
+            continue;
+        }
+        out.push(finding(
+            file,
+            i,
+            RULE_UNWRAP,
+            "`.unwrap()`/`.expect()` on a serving path; return an error reply or annotate \
+             `// lint: allow(unwrap) — <why this cannot fail / why dying is right>`"
+                .to_string(),
+        ));
+    }
+}
+
+const BLOCKING_IO: [&str; 4] = [".write_all(", ".read(", ".connect(", ".accept("];
+
+fn rule_lock_io(
+    file: &str,
+    view: &FileView,
+    tests: &[(usize, usize)],
+    depths: &[i32],
+    out: &mut Vec<Finding>,
+) {
+    for (i, line) in view.code.iter().enumerate() {
+        if in_regions(i, tests) {
+            continue;
+        }
+        let Some(ident) = guard_binding(line) else { continue };
+        if annotated(view, i, "lint: allow(lock_io)") {
+            continue;
+        }
+        let d0 = depths[i];
+        let mut j = i;
+        loop {
+            let code = &view.code[j];
+            for pat in BLOCKING_IO {
+                if code.contains(pat) && !annotated(view, j, "lint: allow(lock_io)") {
+                    let call = pat.trim_start_matches('.').trim_end_matches('(');
+                    out.push(finding(
+                        file,
+                        j,
+                        RULE_LOCK_IO,
+                        format!(
+                            "blocking I/O `{call}` while MutexGuard `{ident}` (line {}) is \
+                             held; drop the guard first or annotate `// lint: allow(lock_io) \
+                             — <reason>`",
+                            i + 1
+                        ),
+                    ));
+                }
+            }
+            if code.contains(&format!("drop({ident})")) {
+                break;
+            }
+            j += 1;
+            if j >= view.code.len() || depths[j] < d0 {
+                break;
+            }
+        }
+    }
+}
+
+/// `Some(name)` when `line` is a `let` statement that binds a
+/// `MutexGuard` for the rest of its block: the initializer ends in
+/// `.lock()` or `.lock().unwrap()`. A projected guard (for example
+/// `*m.lock().unwrap() = x`, or `take(&mut *m.lock().unwrap())`) dies
+/// at the end of its own statement and is not tracked.
+fn guard_binding(line: &str) -> Option<&str> {
+    let t = line.trim();
+    let rest = t.strip_prefix("let ")?;
+    let init = t.trim_end_matches(';').trim_end();
+    if !init.ends_with(".lock()") && !init.ends_with(".lock().unwrap()") {
+        return None;
+    }
+    let rest = rest.trim_start();
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+    let rest = rest.strip_prefix('(').unwrap_or(rest);
+    let end = rest.find(|c: char| !c.is_alphanumeric() && c != '_').unwrap_or(rest.len());
+    if end == 0 {
+        return None;
+    }
+    Some(&rest[..end])
+}
+
+/// The raw symbols `poll.rs` owns. `close`/`read`/`write` are left out:
+/// as whole words they collide with ordinary method names everywhere,
+/// and every call site outside `poll.rs` goes through `std` wrappers
+/// that own their fds anyway.
+const RAW_FD_CALLS: [&str; 8] = [
+    "socket",
+    "bind",
+    "setsockopt",
+    "listen",
+    "epoll_create1",
+    "epoll_ctl",
+    "epoll_wait",
+    "eventfd",
+];
+
+fn rule_raw_fd(file: &str, view: &FileView, externs: &[(usize, usize)], out: &mut Vec<Finding>) {
+    for (i, line) in view.code.iter().enumerate() {
+        let bytes = line.as_bytes();
+        for name in RAW_FD_CALLS {
+            for at in find_word(line, name) {
+                if bytes.get(at + name.len()) != Some(&b'(') {
+                    continue; // not a call or declaration
+                }
+                let before = line[..at].trim_end();
+                if before.ends_with('.') || before.ends_with(':') {
+                    continue; // method call or qualified path, not the raw symbol
+                }
+                let fn_decl = before.ends_with("fn")
+                    && (before.len() == 2 || !is_ident_byte(before.as_bytes()[before.len() - 3]));
+                if fn_decl && !in_regions(i, externs) {
+                    continue; // an ordinary function sharing the name
+                }
+                out.push(finding(
+                    file,
+                    i,
+                    RULE_RAW_FD,
+                    format!(
+                        "raw fd/socket symbol `{name}` outside `poll.rs`, the RAII boundary \
+                         that owns every raw descriptor"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+fn rule_ordering(file: &str, view: &FileView, tests: &[(usize, usize)], out: &mut Vec<Finding>) {
+    for (i, line) in view.code.iter().enumerate() {
+        if in_regions(i, tests) || !line.contains("Ordering::Relaxed") {
+            continue;
+        }
+        if line.contains("fetch_add(") || line.contains("fetch_sub(") {
+            continue; // monotonic counter bumps are Relaxed by policy
+        }
+        if annotated(view, i, "ordering:") {
+            continue;
+        }
+        out.push(finding(
+            file,
+            i,
+            RULE_ORDERING,
+            "`Ordering::Relaxed` outside a counter bump needs an `// ordering: <why relaxed \
+             is sound here>` justification"
+                .to_string(),
+        ));
+    }
+}
+
+fn rule_set_var(file: &str, view: &FileView, out: &mut Vec<Finding>) {
+    for (i, line) in view.code.iter().enumerate() {
+        if find_word(line, "set_var").is_empty() {
+            continue;
+        }
+        out.push(finding(
+            file,
+            i,
+            RULE_SET_VAR,
+            "`std::env::set_var` is process-global and UB with concurrent test threads; \
+             pass configuration explicitly instead"
+                .to_string(),
+        ));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Entry point.
+
+fn is_core_path(file: &str) -> bool {
+    let f = file.replace('\\', "/");
+    f.contains("src/server/") || f.contains("src/coordinator/") || f.contains("src/model/")
+}
+
+fn is_poll_rs(file: &str) -> bool {
+    std::path::Path::new(file).file_name().is_some_and(|n| n == "poll.rs")
+}
+
+/// Lint one file's source text. `file` is used both for reporting and
+/// for the path-scoped rules: the unwrap and lock-across-I/O rules
+/// police only the serving core (`src/server/`, `src/coordinator/`,
+/// `src/model/`), and `poll.rs` is exempt from the raw-fd rule because
+/// it IS the RAII boundary the rule protects.
+pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
+    let view = lex(src);
+    let tests = test_regions(&view.code);
+    let externs = extern_regions(&view.code);
+    let depths = line_depths(&view.code);
+    let mut out = Vec::new();
+    rule_safety(file, &view, &mut out);
+    if is_core_path(file) {
+        rule_unwrap(file, &view, &tests, &mut out);
+        rule_lock_io(file, &view, &tests, &depths, &mut out);
+    }
+    if !is_poll_rs(file) {
+        rule_raw_fd(file, &view, &externs, &mut out);
+    }
+    rule_ordering(file, &view, &tests, &mut out);
+    rule_set_var(file, &view, &mut out);
+    out.sort_by_key(|f| f.line);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexer_blanks_strings_and_keeps_comments() {
+        let view = lex("let a = \"unsafe { }\"; // SAFETY: not really\nb();\n");
+        assert!(view.code[0].contains("let a"));
+        assert!(!view.code[0].contains("unsafe"));
+        assert!(view.comments[0].contains("SAFETY:"));
+        assert_eq!(view.code[1].trim(), "b();");
+    }
+
+    #[test]
+    fn lexer_handles_raw_strings_and_char_literals() {
+        let view = lex("let r = r#\"socket( \"# ; let c = '{'; let l: &'static str = \"x\";\n");
+        assert!(!view.code[0].contains("socket"));
+        // The `{` inside a char literal must not skew the running brace
+        // depth carried into the next line.
+        assert_eq!(line_depths(&view.code)[1], 0);
+        assert!(view.code[0].contains("'static"));
+    }
+
+    #[test]
+    fn lexer_tracks_lines_across_string_continuations() {
+        let src = "let s = \"a\\\n b\";\nsecond();\n";
+        let view = lex(src);
+        assert_eq!(view.code.len(), 4); // 3 lines + trailing empty
+        assert_eq!(view.code[2].trim(), "second();");
+    }
+
+    #[test]
+    fn cfg_test_region_covers_the_whole_mod() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}\n";
+        let view = lex(src);
+        let regions = test_regions(&view.code);
+        assert_eq!(regions, vec![(1, 4)]);
+    }
+}

@@ -1,0 +1,58 @@
+//! CLI for `ccm-lint`: lint every `.rs` file under the given paths and
+//! exit non-zero if any serving-core invariant is violated.
+//!
+//! CI runs `cargo run -p ccm-lint -- rust/src rust/tests examples` from
+//! the workspace root as a hard gate next to fmt and clippy; the rule
+//! catalogue lives in `docs/INVARIANTS.md`.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn collect_rs(path: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    if std::fs::metadata(path)?.is_dir() {
+        for entry in std::fs::read_dir(path)? {
+            collect_rs(&entry?.path(), out)?;
+        }
+    } else if path.extension().is_some_and(|e| e == "rs") {
+        out.push(path.to_path_buf());
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        eprintln!("usage: ccm-lint <file-or-dir>...");
+        return ExitCode::from(2);
+    }
+    let mut files: Vec<PathBuf> = Vec::new();
+    for arg in &args {
+        if let Err(e) = collect_rs(Path::new(arg), &mut files) {
+            eprintln!("ccm-lint: {arg}: {e}");
+            return ExitCode::from(2);
+        }
+    }
+    files.sort();
+    files.dedup();
+    let mut findings = Vec::new();
+    for file in &files {
+        let display = file.display().to_string();
+        match std::fs::read_to_string(file) {
+            Ok(src) => findings.extend(ccm_lint::lint_source(&display, &src)),
+            Err(e) => {
+                eprintln!("ccm-lint: {display}: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        eprintln!("ccm-lint: clean ({} files)", files.len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("ccm-lint: {} finding(s) across {} files", findings.len(), files.len());
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,134 @@
+//! Fixture tests for every ccm-lint rule: each fires at the right
+//! file:line, and the documented annotation (`// SAFETY:` /
+//! `// lint: allow(...)` / `// ordering:`) suppresses it. Paths matter:
+//! the unwrap and lock-across-I/O rules are scoped to the serving core,
+//! and `poll.rs` is exempt from the raw-fd rule.
+
+use ccm_lint::lint_source;
+
+const CORE: &str = "rust/src/server/fixture.rs";
+
+fn rules_at(file: &str, src: &str) -> Vec<(usize, &'static str)> {
+    lint_source(file, src).into_iter().map(|f| (f.line, f.rule)).collect()
+}
+
+#[test]
+fn safety_rule_fires_on_bare_unsafe_and_accepts_the_comment() {
+    let bare = "fn f() {\n    unsafe { g() };\n}\n";
+    assert_eq!(rules_at("rust/src/util/x.rs", bare), vec![(2, ccm_lint::RULE_SAFETY)]);
+
+    let commented = "fn f() {\n    // SAFETY: g has no preconditions.\n    unsafe { g() };\n}\n";
+    assert_eq!(rules_at("rust/src/util/x.rs", commented), vec![]);
+
+    // A blank line between comment and block breaks the adjacency.
+    let gapped = "fn f() {\n    // SAFETY: stale.\n\n    unsafe { g() };\n}\n";
+    assert_eq!(rules_at("rust/src/util/x.rs", gapped), vec![(4, ccm_lint::RULE_SAFETY)]);
+
+    // `unsafe` inside strings or comments is not code.
+    let quoted = "fn f() {\n    let s = \"unsafe { }\"; // unsafe in prose\n}\n";
+    assert_eq!(rules_at("rust/src/util/x.rs", quoted), vec![]);
+}
+
+#[test]
+fn unwrap_rule_is_scoped_to_the_serving_core() {
+    let src = "fn f() {\n    x().unwrap();\n}\n";
+    assert_eq!(rules_at(CORE, src), vec![(2, ccm_lint::RULE_UNWRAP)]);
+    assert_eq!(rules_at("rust/src/coordinator/b.rs", src), vec![(2, ccm_lint::RULE_UNWRAP)]);
+    // Outside the serving core the same code passes.
+    assert_eq!(rules_at("rust/src/util/x.rs", src), vec![]);
+    // And test modules inside core files are exempt.
+    let in_tests = "#[cfg(test)]\nmod tests {\n    fn f() {\n        x().unwrap();\n    }\n}\n";
+    assert_eq!(rules_at(CORE, in_tests), vec![]);
+}
+
+#[test]
+fn unwrap_rule_accepts_the_allow_annotation_and_lock_idiom() {
+    let allowed =
+        "fn f() {\n    // lint: allow(unwrap) — checked two lines up.\n    x().unwrap();\n}\n";
+    assert_eq!(rules_at(CORE, allowed), vec![]);
+
+    let expect = "fn f() {\n    x().expect(\"always\");\n}\n";
+    assert_eq!(rules_at(CORE, expect), vec![(2, ccm_lint::RULE_UNWRAP)]);
+
+    // Mutex poisoning propagation is policy, not a lint finding.
+    let lock = "fn f() {\n    let g = m.lock().unwrap();\n    drop(g);\n}\n";
+    assert_eq!(rules_at(CORE, lock), vec![]);
+}
+
+#[test]
+fn lock_across_io_rule_tracks_the_guard_scope() {
+    let held = "fn f() {\n    let g = m.lock().unwrap();\n    s.write_all(b\"x\");\n}\n";
+    assert_eq!(rules_at(CORE, held), vec![(3, ccm_lint::RULE_LOCK_IO)]);
+
+    // An explicit drop before the I/O ends the tracked scope.
+    let dropped =
+        "fn f() {\n    let g = m.lock().unwrap();\n    drop(g);\n    s.write_all(b\"x\");\n}\n";
+    assert_eq!(rules_at(CORE, dropped), vec![]);
+
+    // The guard's block ending releases it too.
+    let scoped =
+        "fn f() {\n    {\n        let g = m.lock().unwrap();\n    }\n    s.write_all(b\"x\");\n}\n";
+    assert_eq!(rules_at(CORE, scoped), vec![]);
+
+    // A projected guard dies at its own statement: not tracked.
+    let projected =
+        "fn f() {\n    let v = std::mem::take(&mut *m.lock().unwrap());\n    s.write_all(&v);\n}\n";
+    assert_eq!(rules_at(CORE, projected), vec![]);
+
+    // The annotation acknowledges a deliberate hold.
+    let allowed = "fn f() {\n    let g = m.lock().unwrap();\n    \
+                   // lint: allow(lock_io) — single-threaded setup path.\n    \
+                   s.write_all(b\"x\");\n}\n";
+    assert_eq!(rules_at(CORE, allowed), vec![]);
+}
+
+#[test]
+fn raw_fd_rule_confines_syscalls_to_poll_rs() {
+    let call = "fn f() {\n    let fd = socket(2, 1, 0);\n}\n";
+    assert_eq!(rules_at("rust/src/server/reactor.rs", call), vec![(2, ccm_lint::RULE_RAW_FD)]);
+    // poll.rs IS the RAII boundary the rule protects.
+    assert_eq!(rules_at("rust/src/server/poll.rs", call), vec![]);
+
+    // Qualified paths and method calls are std wrappers, not raw fds.
+    let wrapped = "fn f() {\n    let l = TcpListener::bind(addr);\n    sock.bind(addr);\n}\n";
+    assert_eq!(rules_at("rust/src/server/reactor.rs", wrapped), vec![]);
+
+    // An extern declaration outside poll.rs is a finding; an ordinary
+    // local function that shares a name is not.
+    let decl = "extern \"C\" {\n    fn bind(fd: i32) -> i32;\n}\n";
+    assert_eq!(rules_at("rust/src/server/reactor.rs", decl), vec![(2, ccm_lint::RULE_RAW_FD)]);
+    let local = "fn listen(port: u16) -> u16 {\n    port\n}\n";
+    assert_eq!(rules_at("rust/src/server/reactor.rs", local), vec![]);
+}
+
+#[test]
+fn relaxed_ordering_rule_wants_a_justification_outside_counters() {
+    let bare = "fn f() {\n    let v = a.load(Ordering::Relaxed);\n}\n";
+    assert_eq!(rules_at("rust/src/util/x.rs", bare), vec![(2, ccm_lint::RULE_ORDERING)]);
+
+    let justified = "fn f() {\n    let v = a.load(Ordering::Relaxed); // ordering: stats only\n}\n";
+    assert_eq!(rules_at("rust/src/util/x.rs", justified), vec![]);
+
+    // Monotonic counter bumps are Relaxed by policy.
+    let counter = "fn f() {\n    a.fetch_add(1, Ordering::Relaxed);\n}\n";
+    assert_eq!(rules_at("rust/src/util/x.rs", counter), vec![]);
+}
+
+#[test]
+fn set_var_rule_has_no_exemptions() {
+    let src =
+        "#[cfg(test)]\nmod t {\n    fn f() {\n        env::set_var(\"A\", \"1\");\n    }\n}\n";
+    assert_eq!(rules_at("rust/tests/t.rs", src), vec![(4, ccm_lint::RULE_SET_VAR)]);
+    // Prose mentions in comments are fine.
+    let prose = "// callers must not use set_var for this\nfn f() {}\n";
+    assert_eq!(rules_at("rust/tests/t.rs", prose), vec![]);
+}
+
+#[test]
+fn findings_render_file_line_and_rule_id() {
+    let src = "fn f() {\n    unsafe { g() };\n}\n";
+    let findings = lint_source("rust/src/util/x.rs", src);
+    assert_eq!(findings.len(), 1);
+    let line = findings[0].to_string();
+    assert!(line.starts_with("rust/src/util/x.rs:2: [safety-comment]"), "{line}");
+}

@@ -124,6 +124,8 @@ impl Batcher {
     /// `PRIORITY_OVERRIDE_LIMIT` emissions already jumped the front, in
     /// which case fairness forces the front through.
     fn pick_kind(&self) -> WorkKind {
+        // lint: allow(unwrap) — only called from next_batch after its
+        // queue-empty early return, so the front exists.
         let front = self.queue.front().unwrap();
         if !self.infer_priority || front.kind == WorkKind::Infer {
             return front.kind;
@@ -155,6 +157,7 @@ impl Batcher {
             return None;
         }
         let kind = self.pick_kind();
+        // lint: allow(unwrap) — the queue-empty case returned above.
         if kind == self.queue.front().unwrap().kind {
             self.overrides = 0;
         } else {
@@ -185,6 +188,8 @@ impl Batcher {
         let mut batch = Vec::with_capacity(taken_idx.len());
         // Remove back-to-front so indices stay valid.
         for &i in taken_idx.iter().rev() {
+            // lint: allow(unwrap) — taken_idx came from enumerating
+            // this same queue a few lines up.
             batch.push(self.queue.remove(i).unwrap());
         }
         batch.reverse();

@@ -30,6 +30,8 @@ impl LatencyAcc {
             return f64::NAN;
         }
         let mut v = self.samples_ms.clone();
+        // lint: allow(unwrap) — samples are finite duration-derived
+        // millisecond values, never NaN, so partial_cmp always orders.
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let idx = ((v.len() as f64 - 1.0) * p / 100.0).round() as usize;
         v[idx]

@@ -194,6 +194,8 @@ impl<'rt> Coordinator<'rt> {
         let items: Vec<CompressItem> = batch
             .iter()
             .map(|w| {
+                // lint: allow(unwrap) — get_or_create ran for every
+                // batch session in the loop above.
                 let s = self.sessions.get(&w.session).unwrap();
                 CompressItem { mem: &s.mem, chunk: &w.tokens, pos_start: s.pos_cursor }
             })
@@ -217,6 +219,8 @@ impl<'rt> Coordinator<'rt> {
         let items: Vec<InferItem> = batch
             .iter()
             .map(|w| {
+                // lint: allow(unwrap) — get_or_create ran for every
+                // batch session in the loop above.
                 let s = self.sessions.get(&w.session).unwrap();
                 InferItem { mem: &s.mem, tokens: &w.tokens, pos_start: s.pos_cursor }
             })

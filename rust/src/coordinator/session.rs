@@ -223,6 +223,8 @@ impl SessionManager {
                 },
             );
         }
+        // lint: allow(unwrap) — the branch above inserted the session
+        // if it was missing.
         let s = self.sessions.get_mut(id).unwrap();
         s.last_used = Instant::now();
         s

@@ -18,6 +18,11 @@
 //! Python never runs on the request path: after `make artifacts`, the
 //! Rust binary is self-contained.
 //!
+//! Unsafe code (raw syscalls in `server/poll.rs`, the checkpoint byte
+//! cast in `model/store.rs`) is fenced by `// SAFETY:` comments —
+//! machine-enforced here by clippy and repo-wide by `ccm-lint`
+//! (`docs/INVARIANTS.md`).
+//!
 //! ## Quick tour
 //!
 //! ```no_run
@@ -26,6 +31,9 @@
 //! let rt = Runtime::from_config("main").unwrap();
 //! // feed context chunks, compress, infer — see examples/quickstart.rs
 //! ```
+
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(clippy::undocumented_unsafe_blocks)]
 
 pub mod baselines;
 pub mod bench;

@@ -108,9 +108,12 @@ impl Checkpoint {
 
 fn write_vec(f: &mut impl Write, v: &[f32]) -> Result<()> {
     f.write_all(&(v.len() as u64).to_le_bytes())?;
-    // Bulk byte-cast (f32 LE on all supported platforms).
-    let bytes: &[u8] =
-        unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) };
+    let n_bytes = v.len() * 4;
+    // SAFETY: reinterprets the f32 slice's own allocation as bytes —
+    // same base pointer, exact byte length, u8 has no alignment or
+    // validity requirements, and the borrow of v outlives `bytes`.
+    // (f32 is LE on all supported platforms, fixed at read time.)
+    let bytes: &[u8] = unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, n_bytes) };
     f.write_all(bytes)?;
     Ok(())
 }

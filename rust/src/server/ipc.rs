@@ -264,6 +264,8 @@ impl WorkerStatsTable {
     }
 
     pub(crate) fn total_restarts(&self) -> usize {
+        // ordering: monitoring sum; slots may tick mid-scan and an
+        // approximate total is fine.
         self.slots.iter().map(|s| s.restarts.load(Ordering::Relaxed)).sum()
     }
 
@@ -276,18 +278,18 @@ impl WorkerStatsTable {
             .iter()
             .enumerate()
             .map(|(i, s)| {
-                let pid = match s.pid.load(Ordering::Relaxed) {
+                let pid = match s.pid.load(Ordering::Relaxed) { // ordering: stats snapshot
                     0 => "null".to_string(),
                     p => p.to_string(),
                 };
-                let rtt = match s.rtt_micros.load(Ordering::Relaxed) {
+                let rtt = match s.rtt_micros.load(Ordering::Relaxed) { // ordering: stats snapshot
                     0 => "null".to_string(),
                     us => format!("{:.3}", us as f64 / 1e3),
                 };
                 format!(
                     "{{\"worker\":{i},\"pid\":{pid},\"up\":{},\"restarts\":{},\"rtt_ms\":{rtt}}}",
-                    s.up.load(Ordering::Relaxed),
-                    s.restarts.load(Ordering::Relaxed),
+                    s.up.load(Ordering::Relaxed), // ordering: stats snapshot
+                    s.restarts.load(Ordering::Relaxed), // ordering: stats snapshot
                 )
             })
             .collect();
@@ -311,6 +313,16 @@ struct ProxyInner {
     next_id: u64,
 }
 
+/// Shutdown-ack ledger of a [`WorkerProxy`]. The serve shell reads it
+/// exactly once (`take_drained`, right after the supervisors join),
+/// which closes it; a shutdown arriving after that point must be
+/// refused — a reply stashed in a closed ledger is never read, which
+/// used to park the late requester until the per-request reply timeout.
+struct DrainLedger {
+    replies: Vec<Reply>,
+    closed: bool,
+}
+
 /// Front-end endpoint of one worker's IPC connection. Cheap to share
 /// (`Arc`); the router dispatches through it, the supervisor attaches
 /// and detaches connections around worker lifecycles.
@@ -326,7 +338,7 @@ pub(crate) struct WorkerProxy {
     /// Shutdown requesters to ack once the serve shell has released the
     /// listener — the cross-process form of the executor's returned
     /// shutdown repliers.
-    drained: Mutex<Vec<Reply>>,
+    drained: Mutex<DrainLedger>,
     /// Connection generation; a reader from epoch E tears down state
     /// only while the proxy is still in epoch E.
     epoch: AtomicU64,
@@ -340,7 +352,7 @@ impl WorkerProxy {
             table,
             shutdown: AtomicBool::new(false),
             drain_done: AtomicBool::new(false),
-            drained: Mutex::new(Vec::new()),
+            drained: Mutex::new(DrainLedger { replies: Vec::new(), closed: false }),
             epoch: AtomicU64::new(0),
         }
     }
@@ -365,17 +377,27 @@ impl WorkerProxy {
         self.drain_done.load(Ordering::SeqCst)
     }
 
-    /// The shutdown repliers owed an ack at port release.
+    /// The shutdown repliers owed an ack at port release. Closes the
+    /// ledger: this runs once, after the supervisors joined, so any
+    /// later shutdown is refused by `dispatch` (the connection closes
+    /// and EOF is the ack) instead of being stashed where nobody will
+    /// ever read it.
     pub(crate) fn take_drained(&self) -> Vec<Reply> {
-        std::mem::take(&mut *self.drained.lock().unwrap())
+        let mut ledger = self.drained.lock().unwrap();
+        ledger.closed = true;
+        std::mem::take(&mut ledger.replies)
     }
 
     /// Route one request to the worker. `Err` returns the reply so the
     /// router can answer `shard_unavailable` — the worker is down (its
     /// supervisor may yet respawn it; the refusal is immediate either
-    /// way, never a hang). Shutdown requests always succeed: delivered
-    /// over IPC when the worker is up, recorded as trivially drained
-    /// when it is down (a dead worker has nothing left to drain).
+    /// way, never a hang). Shutdown requests succeed while the drain
+    /// ledger is open: delivered over IPC when the worker is up,
+    /// recorded as trivially drained when it is down (a dead worker has
+    /// nothing left to drain). After the shell has collected the ledger
+    /// a shutdown is refused instead — its requester's connection
+    /// closes promptly (EOF is the ack), rather than parking until the
+    /// reply timeout behind a stash nobody reads anymore.
     ///
     /// Ordering invariant: the `shutdown` flag is published only AFTER
     /// the requester's reply is reachable (inserted into `pending`, or
@@ -389,7 +411,7 @@ impl WorkerProxy {
         let Some(out) = inner.out.clone() else {
             drop(inner);
             if is_shutdown {
-                self.drained.lock().unwrap().push(reply);
+                self.stash_drained(reply)?;
                 self.drain_done.store(true, Ordering::SeqCst);
                 self.shutdown.store(true, Ordering::SeqCst);
                 return Ok(());
@@ -404,10 +426,12 @@ impl WorkerProxy {
             .insert(id, PendingRemote { reply, shutdown: is_shutdown, sent_at: Instant::now() });
         if out.send(line).is_err() {
             // Writer raced away between the state check and the send.
+            // lint: allow(unwrap) — inserted above under this same
+            // lock, so the entry is still there.
             let p = inner.pending.remove(&id).expect("just inserted");
             drop(inner);
             if is_shutdown {
-                self.drained.lock().unwrap().push(p.reply);
+                self.stash_drained(p.reply)?;
                 self.drain_done.store(true, Ordering::SeqCst);
                 self.shutdown.store(true, Ordering::SeqCst);
                 return Ok(());
@@ -418,6 +442,19 @@ impl WorkerProxy {
         if is_shutdown {
             self.shutdown.store(true, Ordering::SeqCst);
         }
+        Ok(())
+    }
+
+    /// Record a shutdown requester in the drain ledger. `Err` hands the
+    /// reply back when the ledger is already closed — the shell has
+    /// collected the acks, so the caller must refuse (which closes the
+    /// requester's connection promptly) instead of stranding the reply.
+    fn stash_drained(&self, reply: Reply) -> std::result::Result<(), Reply> {
+        let mut ledger = self.drained.lock().unwrap();
+        if ledger.closed {
+            return Err(reply);
+        }
+        ledger.replies.push(reply);
         Ok(())
     }
 
@@ -488,9 +525,13 @@ impl WorkerProxy {
         let mut inner = self.inner.lock().unwrap();
         let Some(p) = inner.pending.remove(&id) else { return };
         let rtt = p.sent_at.elapsed().as_micros().max(1) as u64;
+        // ordering: stats-only gauge read by render_rows; no other
+        // state is published through it.
         self.slot().rtt_micros.store(rtt, Ordering::Relaxed);
         if p.shutdown {
-            self.drained.lock().unwrap().push(p.reply);
+            // A closed ledger drops the ack: the late requester's
+            // connection is closing, and EOF stands in for the ack.
+            let _ = self.stash_drained(p.reply);
             self.drain_done.store(true, Ordering::SeqCst);
         } else {
             drop(inner);
@@ -527,7 +568,12 @@ impl WorkerProxy {
             // requester is either in `drained` or about to be failed
             // over below — never invisible to a collecting supervisor.
             if !acked.is_empty() {
-                self.drained.lock().unwrap().extend(acked);
+                let mut ledger = self.drained.lock().unwrap();
+                // A closed ledger drops late acks: those requesters'
+                // connections close, and EOF stands in for the ack.
+                if !ledger.closed {
+                    ledger.replies.extend(acked);
+                }
             }
             if self.shutdown.load(Ordering::SeqCst) {
                 self.drain_done.store(true, Ordering::SeqCst);
@@ -763,6 +809,28 @@ mod tests {
         assert_eq!(proxy.take_drained().len(), 1);
     }
 
+    #[test]
+    fn late_shutdown_after_ledger_collection_is_refused() {
+        let table = Arc::new(WorkerStatsTable::new(1));
+        let proxy = Arc::new(WorkerProxy::new(0, table));
+        // Normal drain: a shutdown while down is stashed, then the
+        // serve shell collects the ledger at port release.
+        let (tx, _rx) = mpsc_channel();
+        assert!(proxy.dispatch(Request::Shutdown, Reply::channel(tx)).is_ok());
+        assert_eq!(proxy.take_drained().len(), 1);
+        // A late shutdown (a client that raced the drain) must be
+        // refused so its connection closes promptly — the pre-fix stash
+        // was never read again, parking the client until the reply
+        // timeout.
+        let (tx, rx) = mpsc_channel();
+        assert!(proxy.dispatch(Request::Shutdown, Reply::channel(tx)).is_err());
+        assert!(rx.try_recv().is_err(), "no fabricated ack for a refused shutdown");
+        assert!(proxy.take_drained().is_empty(), "nothing is stashed after collection");
+    }
+
+    // Miri has no socket support; the drain/refusal logic above runs
+    // under it, the wire-level test does not.
+    #[cfg_attr(miri, ignore)]
     #[test]
     fn proxy_detach_fails_pending_with_shard_unavailable() {
         use std::net::{TcpListener, TcpStream};

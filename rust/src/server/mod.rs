@@ -198,6 +198,18 @@
 //! transparently starts a fresh session (its compressed memory is
 //! gone — that is the cost of the budget).
 //!
+//! ## Invariants
+//!
+//! This module tree is the serving core, and `docs/INVARIANTS.md`
+//! lists the mechanical rules it is held to by the `ccm-lint` CI gate
+//! (`cargo run -p ccm-lint -- rust/src rust/tests examples`): every
+//! `unsafe` carries a `// SAFETY:` comment, no `.unwrap()` without a
+//! `// lint: allow(unwrap)` justification (mutex poisoning
+//! propagation excepted), no mutex guard held across blocking I/O,
+//! raw fd syscalls confined to `poll.rs`, `Ordering::Relaxed` off
+//! counters justified with `// ordering:`, and no `env::set_var` in
+//! tests.
+//!
 //! [`EvictionPolicy`]: crate::coordinator::session::EvictionPolicy
 
 mod executor;
@@ -607,6 +619,8 @@ pub fn serve_sharded<'a>(
             let mut replies = Vec::new();
             let mut first_err = None;
             for h in handles {
+                // lint: allow(unwrap) — a panicked executor shard is
+                // unrecoverable; re-raise the panic on the shell.
                 match h.join().expect("executor thread") {
                     Ok(mut r) => replies.append(&mut r),
                     Err(e) => first_err = first_err.or(Some(e)),
@@ -648,6 +662,8 @@ fn run_server(
     }
     match cfg.reactor {
         ReactorMode::Threads => {
+            // lint: allow(unwrap) — bind_listeners returned Ok, which
+            // guarantees at least one listener.
             let listener = listeners.into_iter().next().expect("one listener");
             run_server_threads(cfg, listener, router, run_executors)
         }

@@ -200,27 +200,36 @@ pub(crate) fn bind_reuseport(addr: SocketAddr) -> Result<TcpListener> {
             (AF_INET6, b, 28)
         }
     };
+    // SAFETY: plain FFI call; no pointers involved.
     let fd = unsafe { socket(family, SOCK_STREAM | SOCK_CLOEXEC, 0) };
     if fd < 0 {
         return Err(std::io::Error::last_os_error()).context("socket");
     }
     let fail = |fd: i32, what: &'static str| -> anyhow::Error {
         let e = std::io::Error::last_os_error();
+        // SAFETY: fd is a live socket still owned by this function (it
+        // is only wrapped in a TcpListener on the success path), and
+        // every error path closes it exactly once, here.
         unsafe { close(fd) };
         anyhow::Error::from(e).context(what)
     };
     let one: i32 = 1;
+    // SAFETY: optval points at a live i32 and optlen is its exact size.
     if unsafe { setsockopt(fd, SOL_SOCKET, SO_REUSEPORT, &one as *const i32 as *const u8, 4) } < 0
     {
         return Err(fail(fd, "setsockopt(SO_REUSEPORT)"));
     }
+    // SAFETY: buf is a live 28-byte sockaddr buffer and len (16 or 28)
+    // is the initialized prefix for the chosen address family.
     if unsafe { bind(fd, buf.as_ptr(), len) } < 0 {
         return Err(fail(fd, "bind"));
     }
+    // SAFETY: plain FFI call on a socket fd owned by this function.
     if unsafe { listen(fd, 1024) } < 0 {
         return Err(fail(fd, "listen"));
     }
-    // From here the TcpListener owns the fd and closes it on drop.
+    // SAFETY: fd is a valid listening socket whose ownership transfers
+    // here exactly once; the TcpListener closes it on drop.
     Ok(unsafe { TcpListener::from_raw_fd(fd) })
 }
 
@@ -272,6 +281,8 @@ mod epoll {
 
     impl Drop for Fd {
         fn drop(&mut self) {
+            // SAFETY: self.0 is the fd this wrapper owns, and drop runs
+            // at most once, so this is the single close.
             unsafe { close(self.0) };
         }
     }
@@ -286,8 +297,9 @@ mod epoll {
     impl Waker {
         pub(crate) fn wake(&self) {
             let one: u64 = 1;
-            // EAGAIN (counter saturated) means a wake is already
-            // pending — exactly what we want; ignore the result.
+            // SAFETY: writes 8 bytes from a live u64. EAGAIN (counter
+            // saturated) means a wake is already pending — exactly what
+            // we want; ignore the result.
             unsafe { write(self.fd.0, &one as *const u64 as *const u8, 8) };
         }
     }
@@ -300,11 +312,13 @@ mod epoll {
 
     impl Poller {
         pub(crate) fn new() -> Result<Poller> {
+            // SAFETY: plain FFI call; no pointers involved.
             let ep = unsafe { epoll_create1(EPOLL_CLOEXEC) };
             if ep < 0 {
                 return Err(std::io::Error::last_os_error()).context("epoll_create1");
             }
             let epfd = Fd(ep);
+            // SAFETY: plain FFI call; no pointers involved.
             let efd = unsafe { eventfd(0, EFD_NONBLOCK | EFD_CLOEXEC) };
             if efd < 0 {
                 return Err(std::io::Error::last_os_error()).context("eventfd");
@@ -322,6 +336,8 @@ mod epoll {
 
         fn ctl(&self, op: i32, fd: i32, events: u32, token: Token) -> Result<()> {
             let mut ev = EpollEvent { events, data: token };
+            // SAFETY: ev is a live, correctly laid out epoll_event; the
+            // kernel is done with the pointer when the call returns.
             let rc = unsafe { epoll_ctl(self.epfd.0, op, fd, &mut ev) };
             if rc < 0 {
                 return Err(std::io::Error::last_os_error()).context("epoll_ctl");
@@ -385,6 +401,8 @@ mod epoll {
                 }
             };
             loop {
+                // SAFETY: buf is a live array of buf.len() epoll_event
+                // slots and the kernel writes at most that many.
                 let n = unsafe {
                     epoll_wait(self.epfd.0, self.buf.as_mut_ptr(), self.buf.len() as i32, ms)
                 };
@@ -400,6 +418,8 @@ mod epoll {
                     let (bits, token) = (ev.events, ev.data);
                     if token == WAKER_TOKEN {
                         let mut b = [0u8; 8];
+                        // SAFETY: b is a live 8-byte buffer, exactly
+                        // the size an eventfd read writes.
                         unsafe { read(self.wake_fd.0, b.as_mut_ptr(), 8) };
                         out.push(Event { token, readable: true, writable: false });
                     } else {
@@ -497,6 +517,8 @@ mod fallback {
             let woken = {
                 let mut flag = self.signal.flag.lock().unwrap();
                 if !*flag {
+                    // lint: allow(unwrap) — condvar poisoning means a
+                    // waker panicked mid-notify; propagate the crash.
                     let (guard, _) = self.signal.cv.wait_timeout(flag, wait_for).unwrap();
                     flag = guard;
                 }

@@ -119,10 +119,10 @@ impl ReactorStatsTable {
                 format!(
                     "{{\"reactor\":{i},\"conns\":{},\"accepted\":{},\"lines\":{},\
                      \"refusals\":{}}}",
-                    s.conns.load(Ordering::Relaxed),
-                    s.accepted.load(Ordering::Relaxed),
-                    s.lines.load(Ordering::Relaxed),
-                    s.refusals.load(Ordering::Relaxed),
+                    s.conns.load(Ordering::Relaxed), // ordering: stats snapshot
+                    s.accepted.load(Ordering::Relaxed), // ordering: stats snapshot
+                    s.lines.load(Ordering::Relaxed), // ordering: stats snapshot
+                    s.refusals.load(Ordering::Relaxed), // ordering: stats snapshot
                 )
             })
             .collect();
@@ -227,6 +227,8 @@ impl Ctl {
             if left.is_zero() {
                 return false;
             }
+            // lint: allow(unwrap) — condvar poisoning means a notifier
+            // panicked mid-update; propagate the crash.
             let (guard, _) = self.cv.wait_timeout(s, left).unwrap();
             s = guard;
         }
@@ -378,6 +380,8 @@ impl Conn {
     fn promote_done_replies(&mut self) -> usize {
         let mut popped = 0;
         while matches!(self.pending.front().map(|p| &p.state), Some(PendingState::Done(_))) {
+            // lint: allow(unwrap) — the loop condition just matched a
+            // Done entry at the front.
             let p = self.pending.pop_front().expect("checked front");
             if let PendingState::Done(msg) = p.state {
                 self.write_buf.extend_from_slice(msg.as_bytes());

@@ -149,6 +149,8 @@ pub fn serve_workers(
                     })
                 })
                 .collect();
+            // lint: allow(unwrap) — a panicked supervisor is a bug in
+            // the respawn loop itself; re-raise it on the shell.
             threads.into_iter().map(|t| t.join().expect("supervisor thread")).collect()
         });
         let mut replies = Vec::new();
@@ -187,6 +189,8 @@ fn supervise_spawned(proxy: &Arc<WorkerProxy>, launcher: &WorkerLauncher) -> Res
             }
         };
         proxy.slot().pid.store(u64::from(child.id()), Ordering::SeqCst);
+        // lint: allow(unwrap) — spawn() above configured piped stdout,
+        // and this is the first take().
         let ready_rx = watch_stdout(child.stdout.take().expect("piped stdout"));
         // Handshake wait in shutdown-aware ticks: a shutdown must not
         // sit behind the full 30 s deadline of a wedged worker start
@@ -217,6 +221,8 @@ fn supervise_spawned(proxy: &Arc<WorkerProxy>, launcher: &WorkerLauncher) -> Res
             backoff = (backoff * 2).min(RESPAWN_BACKOFF_MAX);
             continue;
         }
+        // lint: allow(unwrap) — the !attached branch continued above,
+        // and a successful attach always records the address.
         let addr = addr.expect("attached implies addr");
         backoff = RESPAWN_BACKOFF_MIN; // healthy start resets the schedule
         // Wait for the process to exit. A dropped socket with the
@@ -439,6 +445,8 @@ pub fn run_worker<'a>(
         });
         let accept_result = accept_loop(&listener, &req_tx, shared, shard);
         drop(req_tx);
+        // lint: allow(unwrap) — a panicked executor thread is a bug;
+        // re-raise the panic instead of fabricating an exit status.
         let exec_result = exec.join().expect("worker executor thread");
         exec_result.and(accept_result)
     })

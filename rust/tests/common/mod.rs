@@ -436,6 +436,8 @@ pub fn kill9(pid: u32) {
     extern "C" {
         fn kill(pid: i32, sig: i32) -> i32;
     }
+    // SAFETY: plain FFI call with scalar arguments; worst case the pid
+    // is already gone and the syscall returns ESRCH.
     unsafe {
         kill(pid as i32, 9);
     }
@@ -447,6 +449,8 @@ pub fn process_alive(pid: u32) -> bool {
     extern "C" {
         fn kill(pid: i32, sig: i32) -> i32;
     }
+    // SAFETY: plain FFI call with scalar arguments; signal 0 performs
+    // only the existence/permission check, delivering nothing.
     unsafe { kill(pid as i32, 0) == 0 }
 }
 

@@ -227,6 +227,49 @@ fn worker_kill_mid_burst_fails_fast_while_other_shards_serve_and_respawn_recover
 }
 
 #[test]
+fn shutdown_storm_resolves_every_requester_promptly() {
+    let workers = 2usize;
+    // Tightened per-request reply deadline: pre-fix, a shutdown
+    // dispatched after the fleet had drained was stashed in a ledger
+    // nobody read anymore, and its client parked here until the
+    // timeout reply (`ok:false`) — which this test turns into a
+    // failure. Post-fix the late shutdown is refused: the connection
+    // closes and `Client::shutdown` treats the EOF as the ack.
+    let server = common::start_worker_server(ENTRY, workers, Vec::new(), |cfg| {
+        cfg.reply_timeout = Duration::from_secs(10);
+    });
+    let addr = server.addr().to_string();
+    let mut admin = server.client();
+    common::wait_workers_up(&mut admin, workers, Duration::from_secs(30));
+
+    // Concurrent staggered shutdown requesters, kept flowing through
+    // the whole drain so some land while the workers are draining and
+    // some after the drain ledger was collected. Every one must
+    // resolve as an ack or a clean close — never a timeout reply.
+    let mut stormers = Vec::new();
+    for i in 0..8usize {
+        let addr = addr.clone();
+        stormers.push(std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(150 * i as u64));
+            let mut resolved = 0usize;
+            loop {
+                let Ok(mut client) = Client::connect(&addr) else {
+                    return resolved; // port released: the fleet is down
+                };
+                client.shutdown().expect("shutdown must ack or close, never time out");
+                resolved += 1;
+            }
+        }));
+    }
+    let mut total = 0usize;
+    for s in stormers {
+        total += s.join().expect("stormer thread");
+    }
+    assert!(total > 0, "at least the first stormer must see the full drain ack");
+    server.join();
+}
+
+#[test]
 fn external_workers_connect_mode_serves_and_drains() {
     // `--worker-addr` topology: the workers are started by the test
     // (stand-ins for an operator), the front-end only connects.
