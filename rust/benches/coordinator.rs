@@ -38,8 +38,14 @@ fn bench_worker_main() -> anyhow::Result<()> {
     use ccm::coordinator::session::SessionPolicy;
     use ccm::server::{BackendFactory, ServerConfig};
 
-    let env_usize = |key: &str, default: usize| -> usize {
-        std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+    // Absent means "use the default"; present-but-unparseable must
+    // fail loudly. Silently defaulting here once turned a typoed shard
+    // count into a single-shard bench that looked plausible.
+    let env_usize = |key: &str, default: usize| -> anyhow::Result<usize> {
+        match std::env::var(key) {
+            Ok(v) => v.parse().map_err(|_| anyhow::anyhow!("{key}={v:?} is not a valid usize")),
+            Err(_) => Ok(default),
+        }
     };
     let sc = scenario();
     let manifest = fake_manifest(sc.clone());
@@ -47,12 +53,13 @@ fn bench_worker_main() -> anyhow::Result<()> {
     sim.compress_delay = Duration::from_micros(200);
     sim.infer_delay = Duration::from_micros(200);
     let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(sc.comp_len_max));
-    cfg.shards = env_usize("CCM_BENCH_WORKER_SHARDS", 1);
+    cfg.shards = env_usize("CCM_BENCH_WORKER_SHARDS", 1)?;
     cfg.max_batch = 8;
     cfg.max_wait = Duration::from_millis(1);
     cfg.max_pending = 4096;
+    let shard = env_usize("CCM_BENCH_WORKER_SHARD", 0)?;
     let factory: BackendFactory<'static> = Box::new(move || Ok(Box::new(sim) as Box<dyn Compute>));
-    ccm::server::run_worker(&manifest, factory, cfg, env_usize("CCM_BENCH_WORKER_SHARD", 0), None)
+    ccm::server::run_worker(&manifest, factory, cfg, shard, None)
 }
 
 fn main() -> anyhow::Result<()> {

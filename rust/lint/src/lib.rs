@@ -511,7 +511,7 @@ fn guard_binding(line: &str) -> Option<&str> {
 /// as whole words they collide with ordinary method names everywhere,
 /// and every call site outside `poll.rs` goes through `std` wrappers
 /// that own their fds anyway.
-const RAW_FD_CALLS: [&str; 8] = [
+const RAW_FD_CALLS: [&str; 9] = [
     "socket",
     "bind",
     "setsockopt",
@@ -520,6 +520,7 @@ const RAW_FD_CALLS: [&str; 8] = [
     "epoll_ctl",
     "epoll_wait",
     "eventfd",
+    "writev",
 ];
 
 fn rule_raw_fd(file: &str, view: &FileView, externs: &[(usize, usize)], out: &mut Vec<Finding>) {

@@ -99,6 +99,17 @@ fn raw_fd_rule_confines_syscalls_to_poll_rs() {
     assert_eq!(rules_at("rust/src/server/reactor.rs", decl), vec![(2, ccm_lint::RULE_RAW_FD)]);
     let local = "fn listen(port: u16) -> u16 {\n    port\n}\n";
     assert_eq!(rules_at("rust/src/server/reactor.rs", local), vec![]);
+
+    // `writev` (the gathered-write path) is confined like the rest:
+    // both the call and the extern declaration fire outside poll.rs,
+    // and a local fn sharing the name does not.
+    let gather = "fn f() {\n    let rc = writev(fd, iov.as_ptr(), iov.len() as i32);\n}\n";
+    assert_eq!(rules_at("rust/src/server/ipc.rs", gather), vec![(2, ccm_lint::RULE_RAW_FD)]);
+    assert_eq!(rules_at("rust/src/server/poll.rs", gather), vec![]);
+    let gather_decl = "extern \"C\" {\n    fn writev(fd: i32, iov: *const IoVec) -> isize;\n}\n";
+    assert_eq!(rules_at("rust/src/server/ipc.rs", gather_decl), vec![(2, ccm_lint::RULE_RAW_FD)]);
+    let gather_local = "fn writev(bufs: &[Vec<u8>]) -> usize {\n    bufs.len()\n}\n";
+    assert_eq!(rules_at("rust/src/server/worker.rs", gather_local), vec![]);
 }
 
 #[test]

@@ -1,0 +1,415 @@
+//! Serving-layer benchmark scenarios behind `ccm bench`: the perf
+//! trajectory for the serving stack, runnable anywhere (SimCompute
+//! backend, no artifacts). Three scenario families:
+//!
+//! * `serve-throughput` — the in-process TCP serve path end to end
+//!   (reactor front-end, admission, batcher, session memory).
+//! * `ipc-2worker` — two shard worker PROCESSES behind the pipelined
+//!   IPC hop, run once per `--ipc-codec` value; alongside client-side
+//!   round latency it records the per-worker IPC RTT p50/p99 that the
+//!   proxy's sliding sample window exposes in merged stats — the
+//!   json-vs-binary delta is the codec's cost on the wire.
+//! * `stress-profile` — wider concurrent fan-in with a faster backend,
+//!   profiling the tail (`round_p99_ms`) rather than throughput.
+//!
+//! `--emit PATH` writes the machine-readable `BENCH_<n>.json` report
+//! ([`Report`]; schema in docs/BENCH.md). `--compare OLD --against
+//! NEW` renders a markdown delta table (CI pipes it into the job
+//! summary) and exits nonzero when the IPC RTT p99 regressed past
+//! [`RTT_P99_BUDGET`] — advisory in CI, because shared runners are
+//! noisy, but the delta is always visible.
+//!
+//! `ccm bench --worker --shard K --shards N --ipc-codec C` is the
+//! re-exec entry the IPC scenarios spawn their workers through (the
+//! same binary, SimCompute backend, no artifacts needed).
+
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::compress::{Compute, SimCompute};
+use crate::coordinator::session::SessionPolicy;
+use crate::model::manifest::ScenarioConfig;
+use crate::model::Manifest;
+use crate::server::{
+    serve_with_backend, serve_workers, BackendFactory, Client, IpcCodec, ServerConfig, WorkerMode,
+};
+use crate::util::bench::{percentile, print_table, Report, Scenario};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Relative IPC RTT p99 budget for `--compare`: the comparison fails
+/// when `new > old * RTT_P99_BUDGET` on any `ipc_rtt_p99_ms` metric.
+pub const RTT_P99_BUDGET: f64 = 1.25;
+
+/// Context tokens per round: roomy enough that the per-frame JSON
+/// encode/parse cost the binary codec removes is a visible fraction of
+/// the IPC round trip, not noise under the 200 µs simulated compute.
+const CTX_TOKENS: usize = 64;
+
+/// `ccm bench` entry point (dispatched from `cli_bench`).
+pub fn run(args: &Args) -> Result<()> {
+    if args.bool("worker") {
+        return worker_main(args);
+    }
+    if let Some(old_path) = args.flags.get("compare") {
+        return run_compare(old_path, args.require("against")?);
+    }
+    let clients = args.usize("clients", 8)?;
+    let rounds = args.usize("rounds", 120)?;
+    let stress_clients = args.usize("stress-clients", 32)?;
+    let stress_rounds = args.usize("stress-rounds", 40)?;
+    let mut report = Report::new(7);
+    report.scenarios.push(scenario_inprocess("serve-throughput", clients, rounds, 200)?);
+    report.scenarios.push(scenario_ipc(IpcCodec::Json, clients, rounds)?);
+    report.scenarios.push(scenario_ipc(IpcCodec::Binary, clients, rounds)?);
+    let stress = scenario_inprocess("stress-profile", stress_clients, stress_rounds, 50)?;
+    report.scenarios.push(stress);
+    let metric = |sc: &Scenario, name: &str| match sc.metric(name) {
+        Some(v) => format!("{v:.3}"),
+        None => "-".into(),
+    };
+    let rows: Vec<Vec<String>> = report
+        .scenarios
+        .iter()
+        .map(|sc| {
+            vec![
+                sc.label(),
+                metric(sc, "rounds_per_sec"),
+                metric(sc, "round_p50_ms"),
+                metric(sc, "round_p99_ms"),
+                metric(sc, "ipc_rtt_p50_ms"),
+                metric(sc, "ipc_rtt_p99_ms"),
+            ]
+        })
+        .collect();
+    print_table(
+        "serving benchmarks",
+        &["scenario", "rounds/s", "p50 ms", "p99 ms", "ipc p50 ms", "ipc p99 ms"],
+        &rows,
+    );
+    if let Some(path) = args.flags.get("emit") {
+        std::fs::write(path, report.to_json()).with_context(|| format!("write {path}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn run_compare(old_path: &str, new_path: &str) -> Result<()> {
+    let read = |path: &str| -> Result<Report> {
+        Report::parse(&std::fs::read_to_string(path).with_context(|| format!("read {path}"))?)
+            .with_context(|| format!("parse {path}"))
+    };
+    let (old, new) = (read(old_path)?, read(new_path)?);
+    let (table, regressions) = compare(&old, &new);
+    println!("{table}");
+    if !regressions.is_empty() {
+        bail!(
+            "IPC RTT p99 regressed past the {:.0}% budget:\n  {}",
+            (RTT_P99_BUDGET - 1.0) * 100.0,
+            regressions.join("\n  ")
+        );
+    }
+    Ok(())
+}
+
+/// Render the markdown delta table of `new` vs the `old` baseline and
+/// collect the budget-violating `ipc_rtt_p99_ms` regressions.
+pub fn compare(old: &Report, new: &Report) -> (String, Vec<String>) {
+    let mut out = String::from(
+        "| scenario | metric | baseline | current | delta |\n|---|---|---:|---:|---:|\n",
+    );
+    let mut regressions = Vec::new();
+    for sc in &new.scenarios {
+        let base = old.find(&sc.name, sc.codec.as_deref());
+        for (metric, value) in &sc.metrics {
+            // Run-shape parameters, not measurements.
+            if matches!(metric.as_str(), "clients" | "rounds" | "workers") {
+                continue;
+            }
+            let Some(prev) = base.and_then(|b| b.metric(metric)) else {
+                out.push_str(&format!("| {} | {metric} | - | {value:.3} | new |\n", sc.label()));
+                continue;
+            };
+            let delta = if prev > 0.0 { (value - prev) / prev * 100.0 } else { 0.0 };
+            out.push_str(&format!(
+                "| {} | {metric} | {prev:.3} | {value:.3} | {delta:+.1}% |\n",
+                sc.label()
+            ));
+            if metric == "ipc_rtt_p99_ms" && *value > prev * RTT_P99_BUDGET {
+                regressions.push(format!(
+                    "{}: ipc_rtt_p99_ms {prev:.3} -> {value:.3} ms ({delta:+.1}%)",
+                    sc.label()
+                ));
+            }
+        }
+    }
+    (out, regressions)
+}
+
+/// The bench re-exec worker: one SimCompute shard executor process,
+/// spawned by [`scenario_ipc`] through the `ccm bench --worker` path.
+fn worker_main(args: &Args) -> Result<()> {
+    let manifest = bench_manifest();
+    let sim = bench_sim(&manifest, 200);
+    let mut cfg = bench_cfg();
+    cfg.shards = args.usize("shards", 1)?.max(1);
+    cfg.ipc_codec = IpcCodec::parse(&args.str_env("ipc-codec", "CCM_IPC_CODEC", "binary"))?;
+    let shard = args.usize("shard", 0)?;
+    let factory: BackendFactory<'static> = Box::new(move || Ok(Box::new(sim) as Box<dyn Compute>));
+    crate::server::run_worker(&manifest, factory, cfg, shard, None)
+}
+
+/// In-process serve path: `clients` connections each running `rounds`
+/// of add_context(64 tokens) + query, per-round latency recorded
+/// client-side.
+fn scenario_inprocess(
+    name: &str,
+    clients: usize,
+    rounds: usize,
+    delay_us: u64,
+) -> Result<Scenario> {
+    let manifest = bench_manifest();
+    let sim = bench_sim(&manifest, delay_us);
+    let cfg = bench_cfg();
+    let (ready_tx, ready_rx) = channel();
+    let server = std::thread::spawn(move || {
+        serve_with_backend(&manifest, Box::new(sim), cfg, Some(ready_tx))
+    });
+    let addr = ready_rx.recv().context("server ready")?;
+    let (lat, secs) = run_clients(&addr, clients, rounds)?;
+    let mut admin = Client::connect(&addr)?;
+    admin.shutdown()?;
+    // lint: allow(unwrap) — a panicked server thread is a bench bug;
+    // re-raise it.
+    server.join().expect("server thread")?;
+    let mut sc = Scenario::new(name, None);
+    push_round_metrics(&mut sc, &lat, secs, clients, rounds);
+    Ok(sc)
+}
+
+/// Two worker processes behind the shard IPC hop under `codec`. The
+/// client-side round metrics include the process boundary; the
+/// `ipc_rtt_*` metrics are the proxy's own dispatch→reply samples from
+/// merged stats (worst worker — the tail governs), measuring exactly
+/// the hop the codec changes.
+fn scenario_ipc(codec: IpcCodec, clients: usize, rounds: usize) -> Result<Scenario> {
+    let workers = 2usize;
+    let mut cfg = bench_cfg();
+    cfg.ipc_codec = codec;
+    let exe = std::env::current_exe()?;
+    let mode = WorkerMode::Spawn {
+        count: workers,
+        launcher: Box::new(move |shard| {
+            let mut cmd = std::process::Command::new(&exe);
+            cmd.arg("bench")
+                .arg("--worker")
+                .arg("--shard")
+                .arg(shard.to_string())
+                .arg("--shards")
+                .arg(workers.to_string())
+                .arg("--ipc-codec")
+                .arg(codec.name());
+            cmd
+        }),
+    };
+    let (ready_tx, ready_rx) = channel();
+    let server = std::thread::spawn(move || serve_workers(cfg, mode, Some(ready_tx)));
+    let addr = ready_rx.recv().context("front-end ready")?;
+    wait_workers_up(&addr, workers)?;
+    let (lat, secs) = run_clients(&addr, clients, rounds)?;
+    let mut admin = Client::connect(&addr)?;
+    let stats = admin.stats()?;
+    if stats.get("shard_restarts")?.usize()? != 0 {
+        bail!("a worker crashed mid-bench; RTT numbers would be meaningless");
+    }
+    let mut p50: Vec<f64> = Vec::new();
+    let mut p99: Vec<f64> = Vec::new();
+    for row in stats.get("per_worker")?.arr()? {
+        // Null until a worker has samples; an idle worker stays null.
+        if let Some(v) = row.opt("rtt_p50_ms").and_then(|v| v.f64().ok()) {
+            p50.push(v);
+        }
+        if let Some(v) = row.opt("rtt_p99_ms").and_then(|v| v.f64().ok()) {
+            p99.push(v);
+        }
+    }
+    if p50.is_empty() || p99.is_empty() {
+        bail!("no worker reported RTT percentiles");
+    }
+    admin.shutdown()?;
+    // lint: allow(unwrap) — a panicked server thread is a bench bug;
+    // re-raise it.
+    server.join().expect("server thread")?;
+    let mut sc = Scenario::new("ipc-2worker", Some(codec.name()));
+    push_round_metrics(&mut sc, &lat, secs, clients, rounds);
+    sc.push("workers", workers as f64);
+    sc.push("ipc_rtt_p50_ms", p50.iter().copied().fold(f64::MIN, f64::max));
+    sc.push("ipc_rtt_p99_ms", p99.iter().copied().fold(f64::MIN, f64::max));
+    Ok(sc)
+}
+
+fn push_round_metrics(sc: &mut Scenario, lat_us: &[u64], secs: f64, clients: usize, rounds: usize) {
+    sc.push("clients", clients as f64);
+    sc.push("rounds", rounds as f64);
+    sc.push("rounds_per_sec", (clients * rounds) as f64 / secs);
+    let ms = |q: usize| percentile(lat_us, q).unwrap_or(0) as f64 / 1e3;
+    sc.push("round_p50_ms", ms(50));
+    sc.push("round_p99_ms", ms(99));
+}
+
+/// Drive `clients` concurrent connections for `rounds` each; returns
+/// per-round latencies (µs, all clients pooled) and the wall time.
+fn run_clients(addr: &str, clients: usize, rounds: usize) -> Result<(Vec<u64>, f64)> {
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let addr = addr.to_string();
+        handles.push(std::thread::spawn(move || -> Result<Vec<u64>> {
+            let mut client = Client::connect(&addr)?;
+            let session = format!("bench{c}");
+            let ctx: Vec<i32> = (0..CTX_TOKENS).map(|i| 4 + ((c * 7 + i) % 500) as i32).collect();
+            let mut lat = Vec::with_capacity(rounds);
+            for r in 0..rounds {
+                let t = Instant::now();
+                client.add_context(&session, &ctx)?;
+                let next = client.query(&session, &[4 + (r % 500) as i32], 3)?;
+                if next.len() != 3 {
+                    bail!("query returned {} candidates", next.len());
+                }
+                lat.push(t.elapsed().as_micros() as u64);
+            }
+            Ok(lat)
+        }));
+    }
+    let mut all = Vec::new();
+    for h in handles {
+        // lint: allow(unwrap) — a panicked client thread is a bench
+        // bug; re-raise it.
+        all.extend(h.join().expect("bench client thread")?);
+    }
+    Ok((all, t0.elapsed().as_secs_f64()))
+}
+
+/// Poll merged stats until every `per_worker` row reports up (`ready`
+/// fires at front-end bind, while workers may still be spawning).
+fn wait_workers_up(addr: &str, workers: usize) -> Result<()> {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut admin = Client::connect(addr)?;
+    loop {
+        let stats = admin.stats()?;
+        let up = stats
+            .get("per_worker")?
+            .arr()?
+            .iter()
+            .filter(|row| row.opt("up") == Some(&Json::Bool(true)))
+            .count();
+        if up == workers {
+            return Ok(());
+        }
+        if Instant::now() >= deadline {
+            bail!("only {up}/{workers} workers up within 30s");
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+fn bench_cfg() -> ServerConfig {
+    let scenario = bench_scenario();
+    let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(scenario.comp_len_max));
+    cfg.max_batch = 8;
+    cfg.max_wait = Duration::from_millis(1);
+    cfg.max_pending = 4096;
+    cfg
+}
+
+fn bench_sim(manifest: &Manifest, delay_us: u64) -> SimCompute {
+    let mut sim = SimCompute::from_manifest(manifest);
+    sim.compress_delay = Duration::from_micros(delay_us);
+    sim.infer_delay = Duration::from_micros(delay_us);
+    sim
+}
+
+/// Roomier chunk/input caps than the coordinator bench so each round
+/// carries [`CTX_TOKENS`] context tokens — the payload size where the
+/// codec choice matters.
+fn bench_scenario() -> ScenarioConfig {
+    ScenarioConfig {
+        t_max: 8,
+        chunk_max: CTX_TOKENS,
+        comp_len_max: 4,
+        input_max: 96,
+        seq_train: 224,
+        mem_slots: 32,
+        batch_train: 8,
+        infer_batches: vec![1, 8],
+        decode_cache: 96,
+        rmt_unroll: 4,
+        rmt_mem: 4,
+    }
+}
+
+fn bench_manifest() -> Manifest {
+    use crate::model::manifest::{ModelConfig, ParamLayout};
+    Manifest {
+        config_name: "bench".into(),
+        dir: std::path::PathBuf::from("."),
+        model: ModelConfig {
+            name: "bench".into(),
+            vocab: 512,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 512,
+            max_pos: 512,
+            lora_rank: 8,
+            lora_alpha: 16.0,
+            pad_id: 0,
+            bos_id: 1,
+            sep_id: 2,
+            comp_id: 3,
+            d_head: 32,
+        },
+        scenario: bench_scenario(),
+        base_layout: ParamLayout { total: 1, entries: vec![] },
+        lora_layout: ParamLayout { total: 1, entries: vec![] },
+        artifacts: vec![],
+        mask_goldens: vec![],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(p99: f64) -> Report {
+        let mut r = Report::new(7);
+        let mut sc = Scenario::new("ipc-2worker", Some("binary"));
+        sc.push("rounds_per_sec", 1000.0);
+        sc.push("ipc_rtt_p99_ms", p99);
+        r.scenarios.push(sc);
+        r
+    }
+
+    #[test]
+    fn compare_renders_deltas_and_flags_budget_violations() {
+        let (table, regressions) = compare(&report(1.0), &report(1.2));
+        assert!(table
+            .contains("| ipc-2worker[binary] | ipc_rtt_p99_ms | 1.000 | 1.200 | +20.0% |"));
+        assert!(regressions.is_empty(), "20% is inside the 25% budget: {regressions:?}");
+
+        let (_, regressions) = compare(&report(1.0), &report(1.3));
+        assert_eq!(regressions.len(), 1, "30% must trip the budget");
+        assert!(regressions[0].contains("ipc_rtt_p99_ms"));
+    }
+
+    #[test]
+    fn compare_marks_metrics_without_a_baseline_as_new() {
+        let mut old = report(1.0);
+        old.scenarios.clear();
+        let (table, regressions) = compare(&old, &report(1.0));
+        assert!(table.contains("| new |"));
+        assert!(regressions.is_empty(), "no baseline means nothing to regress against");
+    }
+}

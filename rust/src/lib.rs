@@ -165,7 +165,8 @@ pub fn serve_backend_factories(
 /// [--workers N | --worker-addr a:p,b:p] [--eviction
 /// oldest|lru|largest-bytes] [--max-pending 256] [--kv-budget-mb 512]
 /// [--session-ttl-secs 600] [--reactor auto|threads|epoll]
-/// [--reactors auto|N] [--max-conns 16384]`
+/// [--reactors auto|N] [--max-conns 16384]
+/// [--ipc-codec json|binary]`
 ///
 /// With `--shards N > 1`, each shard's executor thread owns a full
 /// runtime + engine (PJRT runtimes are thread-bound); sessions route
@@ -182,6 +183,13 @@ pub fn serve_backend_factories(
 /// flags (`--method`, `--comp-len`, `--kv-budget-mb`, ...) are
 /// forwarded to spawned workers; externally-started workers must be
 /// given matching flags by the operator.
+///
+/// `--ipc-codec` selects the shard-IPC wire codec (default `binary`,
+/// also via `CCM_IPC_CODEC`): spawned workers inherit it, and a worker
+/// that declines the codec hello — any externally-started
+/// `--worker-addr` peer that only speaks JSON — negotiates its
+/// connection down to newline-framed JSON automatically. The
+/// client-facing protocol is unaffected.
 ///
 /// `--reactor` picks the connection front-end: `epoll` multiplexes
 /// connections on polling reactor threads (the 10k-connection path),
@@ -220,6 +228,8 @@ pub fn cli_serve(args: &Args) -> Result<()> {
         .usize_env_auto("reactors", "CCM_SERVE_REACTORS", server::auto_reactors(), "auto")?
         .max(1);
     cfg.max_conns = args.usize("max-conns", cfg.max_conns)?;
+    cfg.ipc_codec =
+        server::IpcCodec::parse(&args.str_env("ipc-codec", "CCM_IPC_CODEC", "binary"))?;
     let kv_budget_mb = args.usize("kv-budget-mb", 0)?;
     if kv_budget_mb > 0 {
         cfg.kv_budget_bytes = Some(kv_budget_mb * (1 << 20));
@@ -268,6 +278,8 @@ pub fn cli_serve(args: &Args) -> Result<()> {
                 kv_budget_mb.to_string(),
                 "--session-ttl-secs".into(),
                 ttl_secs.to_string(),
+                "--ipc-codec".into(),
+                cfg.ipc_codec.name().into(),
             ];
             if !ckpt_path.is_empty() {
                 forward.push("--checkpoint".into());
@@ -327,6 +339,8 @@ pub fn cli_worker(args: &Args) -> Result<()> {
     cfg.max_batch = args.usize("max-batch", 8)?;
     cfg.max_wait = std::time::Duration::from_millis(args.u64("max-wait-ms", 2)?);
     cfg.max_pending = args.usize("max-pending", 256)?;
+    cfg.ipc_codec =
+        server::IpcCodec::parse(&args.str_env("ipc-codec", "CCM_IPC_CODEC", "binary"))?;
     let kv_budget_mb = args.usize("kv-budget-mb", 0)?;
     if kv_budget_mb > 0 {
         cfg.kv_budget_bytes = Some(kv_budget_mb * (1 << 20));
@@ -359,6 +373,20 @@ pub fn cli_stream(args: &Args) -> Result<()> {
     let budget = bench::Budget::from_args(args)?;
     let mut ctx = bench::ExpContext::new(&config, budget)?;
     bench::experiments::fig8_streaming(&mut ctx, args)
+}
+
+/// `ccm bench [--clients 8] [--rounds 120] [--emit BENCH_7.json]` —
+/// serving-layer benchmark scenarios over the SimCompute backend (no
+/// artifacts needed): in-process serve throughput, the 2-worker IPC
+/// hop under BOTH `--ipc-codec` values (with the proxy's RTT p50/p99),
+/// and a wide-fan-in stress profile. `--emit PATH` writes the
+/// machine-readable `BENCH_<n>.json` perf trajectory; `ccm bench
+/// --compare OLD --against NEW` renders the markdown delta table CI
+/// puts in its job summary (nonzero exit past the RTT p99 budget).
+/// `--worker` is the internal re-exec entry the IPC scenarios spawn
+/// their shard workers through.
+pub fn cli_bench(args: &Args) -> Result<()> {
+    bench::serving::run(args)
 }
 
 /// `ccm reproduce --exp fig7|table1|...|all`

@@ -5,6 +5,7 @@
 //!   eval       — evaluate methods on the synthetic online-inference suites
 //!   serve      — run the JSON-lines TCP serving coordinator
 //!   worker     — run one shard executor process for a --workers serve
+//!   bench      — serving benchmarks; --emit writes BENCH_<n>.json
 //!   stream     — streaming-mode perplexity (PG19-style, Figure 8)
 //!   reproduce  — regenerate a paper table/figure (see DESIGN.md §6)
 //!   info       — print manifest/runtime information
@@ -31,6 +32,7 @@ fn main() -> Result<()> {
                 "serve" => ccm::cli_serve(&args),
                 "worker" => ccm::cli_worker(&args),
                 "stream" => ccm::cli_stream(&args),
+                "bench" => ccm::cli_bench(&args),
                 "reproduce" => ccm::cli_reproduce(&args),
                 _ => {
                     print_help();
@@ -90,6 +92,7 @@ fn print_help() {
                  [--worker-addr a,b]    connect to externally-started workers\n\
                  [--eviction POLICY]    oldest | lru | largest-bytes\n\
            worker --shard K --shards N  run one shard executor process (IPC)\n\
+           bench --emit BENCH_7.json    serving benchmarks (json vs binary IPC)\n\
            stream --budget 160          streaming perplexity (Figure 8)\n\
            reproduce --exp table1|fig7  regenerate a paper table/figure\n"
     );

@@ -27,6 +27,31 @@
 //! [`IPC_MAX_FRAME`] bytes. Property tests below drive the codec
 //! through split-at-every-byte feeds and garbage-prefix resync.
 //!
+//! ## The binary codec
+//!
+//! JSON is the fallback and the negotiation carrier; the hot path is a
+//! length-prefixed binary codec selected per connection by a hello
+//! handshake (see `server` module docs). A binary frame is
+//!
+//! ```text
+//! 0xCC | payload_len: u32 LE | kind: u8 | fields...
+//! ```
+//!
+//! with kinds context=1 / query=2 / stats=3 / shutdown=4 / reply=5,
+//! all integers little-endian, strings as `u32 len + UTF-8 bytes`, and
+//! token lists as `u32 count + i32 each` — a memcpy instead of a
+//! per-token itoa/atoi. A reply frame carries the executor's reply
+//! JSON verbatim as its string field, so the bytes the client sees
+//! stay identical under both codecs. `0xCC` can never begin a JSON
+//! line (`{` = 0x7B), so [`FrameBuf::next_frame`] tells the codecs
+//! apart per frame from the first unconsumed byte and a connection can
+//! carry both — which is exactly the state during negotiation (JSON
+//! hello, JSON ack, then binary requests with late JSON replies still
+//! in flight). Length-prefixed framing cannot resync from arbitrary
+//! mid-stream corruption the way newline framing does; it is used only
+//! between our own processes, where the prefix is trusted, and an
+//! oversize declared length is skipped exactly rather than buffered.
+//!
 //! ## The proxy
 //!
 //! [`WorkerProxy`] is the front-end side of one worker connection: a
@@ -53,7 +78,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::server::{fmt_tokens, Reply, Request, SHARD_UNAVAILABLE};
+use crate::server::{fmt_tokens, IpcCodec, Reply, Request, StatsQuery, SHARD_UNAVAILABLE};
 use crate::util::json::{escape, Json};
 
 /// Upper bound on one IPC frame (a stats reply embedding a large
@@ -61,28 +86,56 @@ use crate::util::json::{escape, Json};
 /// the decoder discards through the next newline instead of buffering.
 pub(crate) const IPC_MAX_FRAME: usize = 16 << 20;
 
+/// First byte of a binary frame. A JSON frame's first byte is `{`
+/// (0x7B), so the two codecs are distinguishable per frame.
+pub(crate) const BIN_MAGIC: u8 = 0xCC;
+
+/// Binary frame header size: the magic byte plus the `u32` payload
+/// length.
+const BIN_HEADER: usize = 5;
+
+/// IPC protocol version carried by the hello handshake.
+pub(crate) const IPC_VERSION: u64 = 1;
+
+/// Most frames a writer thread packs into one gathered `writev`
+/// submission (matches `poll::WRITE_GATHER_MAX`, the Linux `IOV_MAX`).
+pub(crate) const IPC_WRITE_BATCH: usize = 1024;
+
 // ---------------------------------------------------------------------
 // Incremental line framing.
 
-/// Reassembles newline-terminated frames from arbitrarily split reads.
-/// Overlong lines (no newline within `max_line` buffered bytes) are
-/// dropped through their terminator so a corrupt peer cannot pin
-/// memory; the next line frames normally. Framing advances a cursor
-/// and compacts the consumed prefix once per `feed` — one IPC socket
-/// multiplexes a whole shard's pipelined traffic, so a per-line front
-/// drain would memmove the remaining buffer per frame and make bursts
-/// quadratic (the same fix the reactor's line framing uses).
+/// One decoded frame from [`FrameBuf::next_frame`]: a JSON line
+/// (without its newline) or a binary frame's payload, borrowed from
+/// the buffer until the next `feed`.
+pub(crate) enum Frame<'a> {
+    Line(String),
+    Bin(&'a [u8]),
+}
+
+/// Reassembles frames of BOTH codecs from arbitrarily split reads,
+/// telling them apart by the first unconsumed byte ([`BIN_MAGIC`] vs.
+/// anything else, which is treated as line mode). Overlong lines (no
+/// newline within `max_line` buffered bytes) are dropped through their
+/// terminator so a corrupt peer cannot pin memory; an oversize binary
+/// payload is skipped exactly by its declared length. Framing advances
+/// a cursor and compacts the consumed prefix once per `feed` — one IPC
+/// socket multiplexes a whole shard's pipelined traffic, so a
+/// per-frame front drain would memmove the remaining buffer per frame
+/// and make bursts quadratic (the same fix the reactor's line framing
+/// uses).
 pub(crate) struct FrameBuf {
     buf: Vec<u8>,
     /// Start of the unconsumed region of `buf`.
     cursor: usize,
     max_line: usize,
     discarding: bool,
+    /// Bytes of an oversize binary payload still to be skipped.
+    bin_skip: usize,
 }
 
 impl FrameBuf {
     pub(crate) fn new(max_line: usize) -> FrameBuf {
-        FrameBuf { buf: Vec::new(), cursor: 0, max_line, discarding: false }
+        FrameBuf { buf: Vec::new(), cursor: 0, max_line, discarding: false, bin_skip: 0 }
     }
 
     pub(crate) fn feed(&mut self, bytes: &[u8]) {
@@ -95,13 +148,52 @@ impl FrameBuf {
         self.buf.extend_from_slice(bytes);
     }
 
-    /// Pop the next complete line (without its newline), or `None` when
-    /// no complete line is buffered yet.
-    pub(crate) fn next_line(&mut self) -> Option<String> {
+    /// Pop the next complete frame of either codec, or `None` when no
+    /// complete frame is buffered yet.
+    pub(crate) fn next_frame(&mut self) -> Option<Frame<'_>> {
         loop {
+            // Finish skipping an oversize binary payload first.
+            if self.bin_skip > 0 {
+                let take = self.bin_skip.min(self.buf.len() - self.cursor);
+                self.cursor += take;
+                self.bin_skip -= take;
+                if self.bin_skip > 0 {
+                    return None;
+                }
+                continue;
+            }
+            let avail = self.buf.len() - self.cursor;
+            if avail == 0 {
+                return None;
+            }
+            if !self.discarding && self.buf[self.cursor] == BIN_MAGIC {
+                if avail < BIN_HEADER {
+                    return None;
+                }
+                let h = self.cursor;
+                let len = u32::from_le_bytes([
+                    self.buf[h + 1],
+                    self.buf[h + 2],
+                    self.buf[h + 3],
+                    self.buf[h + 4],
+                ]) as usize;
+                if len > self.max_line {
+                    // Oversize declared length: consume the header and
+                    // skip the payload exactly, never buffering it.
+                    self.cursor += BIN_HEADER;
+                    self.bin_skip = len;
+                    continue;
+                }
+                if avail < BIN_HEADER + len {
+                    return None;
+                }
+                let start = self.cursor + BIN_HEADER;
+                self.cursor = start + len;
+                return Some(Frame::Bin(&self.buf[start..start + len]));
+            }
             let rel = self.buf[self.cursor..].iter().position(|&b| b == b'\n');
             let Some(rel) = rel else {
-                if self.buf.len() - self.cursor > self.max_line {
+                if avail > self.max_line {
                     // Cap enforcement: drop the partial line, resume at
                     // the next newline.
                     self.buf.clear();
@@ -119,7 +211,20 @@ impl FrameBuf {
             if end - start > self.max_line {
                 continue; // overlong but terminated: skip it whole
             }
-            return Some(String::from_utf8_lossy(&self.buf[start..end]).into_owned());
+            return Some(Frame::Line(String::from_utf8_lossy(&self.buf[start..end]).into_owned()));
+        }
+    }
+
+    /// Pop the next complete line (without its newline), or `None` when
+    /// no complete line is buffered yet. The line-only view for streams
+    /// known to speak JSON; binary frames arriving here are skipped.
+    pub(crate) fn next_line(&mut self) -> Option<String> {
+        loop {
+            match self.next_frame() {
+                None => return None,
+                Some(Frame::Line(line)) => return Some(line),
+                Some(Frame::Bin(_)) => continue,
+            }
         }
     }
 }
@@ -207,30 +312,343 @@ fn frame_id_of(j: &Json) -> Result<u64> {
     Ok(id as u64)
 }
 
+/// One decoded line-mode frame on the worker side: either the codec
+/// hello (handled at the IPC layer, never forwarded to the executor)
+/// or a normal request. One JSON parse covers both.
+pub(crate) enum LineFrame {
+    Hello { id: u64, codec: IpcCodec },
+    Req(u64, Request),
+}
+
+/// Decode a line-mode frame, intercepting the hello before the request
+/// grammar sees it (`hello` is not a client op; `Request::from_json`
+/// would reject it — which is precisely what makes pre-codec workers
+/// answer a hello with an error and negotiate the connection down).
+pub(crate) fn decode_line(line: &str) -> Result<LineFrame> {
+    let j = Json::parse(line).context("request frame")?;
+    let id = frame_id_of(&j)?;
+    if j.opt("op").and_then(|v| v.str().ok()) == Some("hello") {
+        let codec = match j.opt("codec").and_then(|v| v.str().ok()) {
+            Some("binary") => IpcCodec::Binary,
+            _ => IpcCodec::Json,
+        };
+        return Ok(LineFrame::Hello { id, codec });
+    }
+    let req = Request::from_json(&j).context("request frame body")?;
+    Ok(LineFrame::Req(id, req))
+}
+
+/// The proxy's opening frame on a fresh connection (newline included):
+/// always JSON, because the peer's codec support is unknown until it
+/// answers.
+pub(crate) fn encode_hello(id: u64, codec: IpcCodec) -> String {
+    let codec = codec.name();
+    format!("{{\"id\":{id},\"op\":\"hello\",\"codec\":\"{codec}\",\"version\":{IPC_VERSION}}}\n")
+}
+
+/// The worker's hello reply body, reporting the codec it granted.
+pub(crate) fn hello_ack(granted: IpcCodec) -> String {
+    let codec = granted.name();
+    format!("{{\"ok\":true,\"kind\":\"hello\",\"codec\":\"{codec}\",\"version\":{IPC_VERSION}}}")
+}
+
+/// Whether a hello reply grants the binary codec. An error reply (a
+/// pre-codec worker's "unknown op", or an explicit refusal) reads as
+/// `false`: the connection stays on JSON.
+pub(crate) fn hello_grants_binary(resp: &str) -> bool {
+    match Json::parse(resp) {
+        Ok(j) => {
+            j.opt("ok") == Some(&Json::Bool(true))
+                && j.opt("codec").and_then(|v| v.str().ok()) == Some("binary")
+        }
+        Err(_) => false,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Binary frame codec (layout in the module docs).
+
+const BIN_REQ_CONTEXT: u8 = 1;
+const BIN_REQ_QUERY: u8 = 2;
+const BIN_REQ_STATS: u8 = 3;
+const BIN_REQ_SHUTDOWN: u8 = 4;
+const BIN_REPLY: u8 = 5;
+
+const STATS_DETAIL: u8 = 1;
+const STATS_HAS_PREFIX: u8 = 2;
+const STATS_HAS_LIMIT: u8 = 4;
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_tokens(out: &mut Vec<u8>, tokens: &[i32]) {
+    out.extend_from_slice(&(tokens.len() as u32).to_le_bytes());
+    for t in tokens {
+        out.extend_from_slice(&t.to_le_bytes());
+    }
+}
+
+/// Start a binary frame in `out` (cleared), leaving the length field
+/// zero until [`finish_frame`] patches it.
+fn start_frame(out: &mut Vec<u8>, kind: u8, id: u64) {
+    out.clear();
+    out.extend_from_slice(&[BIN_MAGIC, 0, 0, 0, 0, kind]);
+    put_u64(out, id);
+}
+
+fn finish_frame(out: &mut Vec<u8>) {
+    let len = (out.len() - BIN_HEADER) as u32;
+    out[1..BIN_HEADER].copy_from_slice(&len.to_le_bytes());
+}
+
+/// Encode one request as a binary frame into `out` (reused buffer).
+/// Same contract as [`encode_request`]: `Stats.per_reactor` never
+/// crosses the IPC boundary.
+pub(crate) fn encode_request_bin(id: u64, req: &Request, out: &mut Vec<u8>) {
+    match req {
+        Request::Context { session, tokens } => {
+            start_frame(out, BIN_REQ_CONTEXT, id);
+            put_str(out, session);
+            put_tokens(out, tokens);
+        }
+        Request::Query { session, tokens, topk } => {
+            start_frame(out, BIN_REQ_QUERY, id);
+            put_str(out, session);
+            put_tokens(out, tokens);
+            put_u64(out, *topk as u64);
+        }
+        Request::Stats(q) => {
+            start_frame(out, BIN_REQ_STATS, id);
+            let mut flags = 0u8;
+            if q.detail {
+                flags |= STATS_DETAIL;
+            }
+            if q.prefix.is_some() {
+                flags |= STATS_HAS_PREFIX;
+            }
+            if q.limit.is_some() {
+                flags |= STATS_HAS_LIMIT;
+            }
+            out.push(flags);
+            if let Some(prefix) = &q.prefix {
+                put_str(out, prefix);
+            }
+            if let Some(limit) = q.limit {
+                put_u64(out, limit as u64);
+            }
+        }
+        Request::Shutdown => start_frame(out, BIN_REQ_SHUTDOWN, id),
+    }
+    finish_frame(out);
+}
+
+/// Encode one reply as a binary frame into `out` (reused buffer). The
+/// executor's reply JSON is carried verbatim as the string field — no
+/// envelope rendering, no escaping pass, no newline scan.
+pub(crate) fn encode_reply_bin(id: u64, resp: &str, out: &mut Vec<u8>) {
+    start_frame(out, BIN_REPLY, id);
+    put_str(out, resp);
+    finish_frame(out);
+}
+
+/// Bounds-checked cursor over one binary payload.
+struct BinReader<'a> {
+    b: &'a [u8],
+    at: usize,
+}
+
+impl<'a> BinReader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.at.checked_add(n).filter(|&e| e <= self.b.len());
+        let Some(end) = end else { bail!("binary frame truncated") };
+        let s = &self.b[self.at..end];
+        self.at = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        Ok(String::from_utf8_lossy(self.take(n)?).into_owned())
+    }
+
+    fn tokens(&mut self) -> Result<Vec<i32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| anyhow!("token count overflow"))?)?;
+        Ok(raw.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.at != self.b.len() {
+            bail!("{} trailing bytes in binary frame", self.b.len() - self.at);
+        }
+        Ok(())
+    }
+}
+
+/// Decode a binary request payload into its pipelining id and request.
+pub(crate) fn decode_request_bin(payload: &[u8]) -> Result<(u64, Request)> {
+    let mut r = BinReader { b: payload, at: 0 };
+    let kind = r.u8().context("binary request frame")?;
+    let id = r.u64()?;
+    let req = match kind {
+        BIN_REQ_CONTEXT => Request::Context { session: r.str()?, tokens: r.tokens()? },
+        BIN_REQ_QUERY => Request::Query {
+            session: r.str()?,
+            tokens: r.tokens()?,
+            topk: r.u64()? as usize,
+        },
+        BIN_REQ_STATS => {
+            let flags = r.u8()?;
+            let prefix = if flags & STATS_HAS_PREFIX != 0 { Some(r.str()?) } else { None };
+            let limit = if flags & STATS_HAS_LIMIT != 0 { Some(r.u64()? as usize) } else { None };
+            Request::Stats(StatsQuery {
+                detail: flags & STATS_DETAIL != 0,
+                prefix,
+                limit,
+                per_reactor: None,
+            })
+        }
+        BIN_REQ_SHUTDOWN => Request::Shutdown,
+        other => bail!("unknown binary request kind {other}"),
+    };
+    r.done()?;
+    Ok((id, req))
+}
+
+/// Decode a binary reply payload to `(id, resp)`. The reply body was
+/// carried verbatim, and the length prefix already framed it exactly,
+/// so no embedded-JSON validation pass is needed (the newline codec
+/// validates to reject torn frames; binary frames cannot tear).
+pub(crate) fn decode_reply_bin(payload: &[u8]) -> Result<(u64, String)> {
+    let mut r = BinReader { b: payload, at: 0 };
+    let kind = r.u8().context("binary reply frame")?;
+    if kind != BIN_REPLY {
+        bail!("binary frame kind {kind} is not a reply");
+    }
+    let id = r.u64()?;
+    let resp = r.str()?;
+    r.done()?;
+    Ok((id, resp))
+}
+
+// ---------------------------------------------------------------------
+// Pooled encode buffers.
+
+/// Reusable frame-encode buffers, recycled between dispatchers and the
+/// writer thread so a steady pipelined load stops allocating per
+/// frame. Bounded: at most [`BufPool::MAX_POOLED`] buffers are
+/// retained and oversized ones (a giant stats frame) are dropped
+/// rather than pinned.
+pub(crate) struct BufPool {
+    free: Mutex<Vec<Vec<u8>>>,
+}
+
+impl BufPool {
+    const MAX_POOLED: usize = 256;
+    const MAX_POOLED_CAPACITY: usize = 64 * 1024;
+
+    pub(crate) fn new() -> BufPool {
+        BufPool { free: Mutex::new(Vec::new()) }
+    }
+
+    pub(crate) fn take(&self) -> Vec<u8> {
+        self.free.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    /// Return a batch of written buffers to the pool.
+    pub(crate) fn put_all(&self, bufs: &mut Vec<Vec<u8>>) {
+        let mut free = self.free.lock().unwrap();
+        for mut b in bufs.drain(..) {
+            if free.len() < Self::MAX_POOLED && b.capacity() <= Self::MAX_POOLED_CAPACITY {
+                b.clear();
+                free.push(b);
+            }
+        }
+    }
+}
+
 // ---------------------------------------------------------------------
 // Worker-side reply handle.
 
 /// The worker-process [`Reply`]: tags the executor's reply with the
-/// request's pipelining id and hands it to the connection's writer
+/// request's pipelining id and the codec its request arrived in (the
+/// worker mirrors per frame), and hands it to the connection's writer
 /// thread, which frames it onto the IPC socket.
 #[derive(Clone)]
 pub(crate) struct IpcReplyHandle {
     pub(crate) id: u64,
-    pub(crate) out: Sender<(u64, String)>,
+    /// Reply in the binary codec (the request was a binary frame).
+    pub(crate) bin: bool,
+    pub(crate) out: Sender<(u64, String, bool)>,
 }
 
 impl IpcReplyHandle {
     pub(crate) fn send(&self, msg: String) -> std::result::Result<(), ()> {
-        self.out.send((self.id, msg)).map_err(|_| ())
+        self.out.send((self.id, msg, self.bin)).map_err(|_| ())
     }
 }
 
 // ---------------------------------------------------------------------
 // Per-worker stats (the merged view's `per_worker` rows).
 
+/// Sliding window of recent IPC round-trip samples (microseconds) for
+/// the percentile columns in `per_worker` stats — the observable the
+/// bench trajectory (`BENCH_<n>.json`) records. Bounded: once full,
+/// new samples overwrite the oldest.
+#[derive(Default)]
+pub(crate) struct RttWindow {
+    samples: Vec<u64>,
+    at: usize,
+}
+
+/// Capacity of [`RttWindow`].
+const RTT_WINDOW: usize = 4096;
+
+impl RttWindow {
+    fn push(&mut self, micros: u64) {
+        if self.samples.len() < RTT_WINDOW {
+            self.samples.push(micros);
+        } else {
+            self.samples[self.at] = micros;
+            self.at = (self.at + 1) % RTT_WINDOW;
+        }
+    }
+
+    /// `(p50, p99)` in microseconds, `None` before the first sample.
+    fn percentiles(&self) -> Option<(u64, u64)> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_unstable();
+        let pick = |q: usize| sorted[(sorted.len() - 1) * q / 100];
+        Some((pick(50), pick(99)))
+    }
+}
+
 /// Live per-worker supervision counters. The supervisor writes `pid`
-/// and `restarts`, the proxy writes `up` and `rtt_micros`, the router
-/// renders them into stats.
+/// and `restarts`, the proxy writes `up` and the RTT fields, the
+/// router renders them into stats.
 #[derive(Default)]
 pub(crate) struct WorkerSlot {
     /// Live worker process id; 0 while no process is running.
@@ -241,6 +659,8 @@ pub(crate) struct WorkerSlot {
     /// Most recent request→reply round trip over the IPC socket, in
     /// microseconds (clamped to >= 1); 0 until the first reply.
     pub(crate) rtt_micros: AtomicU64,
+    /// Recent round-trip samples for the p50/p99 stats columns.
+    pub(crate) rtt_window: Mutex<RttWindow>,
     /// The proxy currently holds a live connection to this worker.
     pub(crate) up: AtomicBool,
 }
@@ -270,8 +690,9 @@ impl WorkerStatsTable {
     }
 
     /// Comma-joined JSON rows (the caller wraps them in
-    /// `"per_worker":[...]`). `pid`/`rtt_ms` are `null` while the
-    /// worker is down / before its first reply.
+    /// `"per_worker":[...]`). `pid`/`rtt_ms` and the RTT percentile
+    /// columns are `null` while the worker is down / before its first
+    /// reply.
     pub(crate) fn render_rows(&self) -> String {
         let rows: Vec<String> = self
             .slots
@@ -282,12 +703,18 @@ impl WorkerStatsTable {
                     0 => "null".to_string(),
                     p => p.to_string(),
                 };
+                let ms = |us: u64| format!("{:.3}", us as f64 / 1e3);
                 let rtt = match s.rtt_micros.load(Ordering::Relaxed) { // ordering: stats snapshot
                     0 => "null".to_string(),
-                    us => format!("{:.3}", us as f64 / 1e3),
+                    us => ms(us),
+                };
+                let (p50, p99) = match s.rtt_window.lock().unwrap().percentiles() {
+                    Some((p50, p99)) => (ms(p50), ms(p99)),
+                    None => ("null".to_string(), "null".to_string()),
                 };
                 format!(
-                    "{{\"worker\":{i},\"pid\":{pid},\"up\":{},\"restarts\":{},\"rtt_ms\":{rtt}}}",
+                    "{{\"worker\":{i},\"pid\":{pid},\"up\":{},\"restarts\":{},\"rtt_ms\":{rtt},\
+                     \"rtt_p50_ms\":{p50},\"rtt_p99_ms\":{p99}}}",
                     s.up.load(Ordering::Relaxed), // ordering: stats snapshot
                     s.restarts.load(Ordering::Relaxed), // ordering: stats snapshot
                 )
@@ -307,10 +734,18 @@ struct PendingRemote {
 }
 
 struct ProxyInner {
-    /// `Some` while a connection is up: the writer thread's inbox.
-    out: Option<Sender<String>>,
+    /// `Some` while a connection is up: the writer thread's inbox of
+    /// encoded frames.
+    out: Option<Sender<Vec<u8>>>,
     pending: HashMap<u64, PendingRemote>,
     next_id: u64,
+    /// Encode requests in binary on the current connection (set once
+    /// the worker's hello ack grants it; reset on every attach).
+    bin: bool,
+    /// Pipelining id of the current connection's in-flight hello, so
+    /// `complete` consumes the ack internally instead of looking it up
+    /// in `pending`.
+    hello_id: Option<u64>,
 }
 
 /// Shutdown-ack ledger of a [`WorkerProxy`]. The serve shell reads it
@@ -330,6 +765,11 @@ pub(crate) struct WorkerProxy {
     shard: usize,
     inner: Mutex<ProxyInner>,
     table: Arc<WorkerStatsTable>,
+    /// Codec preference: `Binary` sends the hello on every attach and
+    /// upgrades when acked; `Json` never attempts the upgrade.
+    codec: IpcCodec,
+    /// Reusable encode buffers shared with the writer thread.
+    pool: Arc<BufPool>,
     /// A shutdown request has been dispatched to this worker.
     shutdown: AtomicBool,
     /// The worker acked its drain (or died after shutdown was
@@ -345,11 +785,19 @@ pub(crate) struct WorkerProxy {
 }
 
 impl WorkerProxy {
-    pub(crate) fn new(shard: usize, table: Arc<WorkerStatsTable>) -> WorkerProxy {
+    pub(crate) fn new(shard: usize, table: Arc<WorkerStatsTable>, codec: IpcCodec) -> WorkerProxy {
         WorkerProxy {
             shard,
-            inner: Mutex::new(ProxyInner { out: None, pending: HashMap::new(), next_id: 0 }),
+            inner: Mutex::new(ProxyInner {
+                out: None,
+                pending: HashMap::new(),
+                next_id: 0,
+                bin: false,
+                hello_id: None,
+            }),
             table,
+            codec,
+            pool: Arc::new(BufPool::new()),
             shutdown: AtomicBool::new(false),
             drain_done: AtomicBool::new(false),
             drained: Mutex::new(DrainLedger { replies: Vec::new(), closed: false }),
@@ -420,11 +868,17 @@ impl WorkerProxy {
         };
         let id = inner.next_id;
         inner.next_id += 1;
-        let line = encode_request(id, &req);
+        let mut frame = self.pool.take();
+        if inner.bin {
+            encode_request_bin(id, &req, &mut frame);
+        } else {
+            frame.clear();
+            frame.extend_from_slice(encode_request(id, &req).as_bytes());
+        }
         inner
             .pending
             .insert(id, PendingRemote { reply, shutdown: is_shutdown, sent_at: Instant::now() });
-        if out.send(line).is_err() {
+        if out.send(frame).is_err() {
             // Writer raced away between the state check and the send.
             // lint: allow(unwrap) — inserted above under this same
             // lock, so the entry is still there.
@@ -460,29 +914,61 @@ impl WorkerProxy {
 
     /// Adopt a fresh connection: spawn its writer and reader threads
     /// and flip the proxy `Up`. Any previous epoch's reader becomes
-    /// inert (its detach no-ops on the epoch check).
+    /// inert (its detach no-ops on the epoch check). With a `Binary`
+    /// codec preference the connection's first frame is the JSON
+    /// hello; requests dispatched before the ack arrives simply go out
+    /// as JSON (the worker mirrors per frame, so mixed codecs on one
+    /// connection are well-defined).
     pub(crate) fn attach(self: &Arc<Self>, stream: TcpStream) -> Result<()> {
         let _ = stream.set_nodelay(true);
         let write_half = stream.try_clone().context("clone worker stream")?;
         let epoch = self.epoch.fetch_add(1, Ordering::SeqCst) + 1;
-        let (out_tx, out_rx) = channel::<String>();
+        let (out_tx, out_rx) = channel::<Vec<u8>>();
         {
             let mut inner = self.inner.lock().unwrap();
+            inner.bin = false;
+            inner.hello_id = None;
+            if self.codec == IpcCodec::Binary {
+                // Assigned under the same lock that orders dispatches,
+                // so the hello is frame one on this connection.
+                let id = inner.next_id;
+                inner.next_id += 1;
+                inner.hello_id = Some(id);
+                let mut frame = self.pool.take();
+                frame.extend_from_slice(encode_hello(id, IpcCodec::Binary).as_bytes());
+                let _ = out_tx.send(frame);
+            }
             inner.out = Some(out_tx);
         }
         self.slot().up.store(true, Ordering::SeqCst);
         let shard = self.shard;
-        let proxy = self.clone();
+        let pool = self.pool.clone();
         std::thread::spawn(move || {
-            let mut write_half = write_half;
-            while let Ok(line) = out_rx.recv() {
-                if write_half.write_all(line.as_bytes()).is_err() {
+            // Drain bursts: block for the first frame, then gather
+            // everything already queued (up to the writev batch cap)
+            // into one syscall.
+            let mut batch: Vec<Vec<u8>> = Vec::new();
+            loop {
+                match out_rx.recv() {
+                    Ok(frame) => batch.push(frame),
+                    Err(_) => break,
+                }
+                while batch.len() < IPC_WRITE_BATCH {
+                    match out_rx.try_recv() {
+                        Ok(frame) => batch.push(frame),
+                        Err(_) => break,
+                    }
+                }
+                let ok = crate::server::poll::write_gathered(&write_half, &batch).is_ok();
+                pool.put_all(&mut batch);
+                if !ok {
+                    // The connection is gone; the reader observes the
+                    // same and runs the (idempotent) detach.
                     break;
                 }
             }
-            // A write failure means the connection is gone; the reader
-            // observes the same and runs the (idempotent) detach.
         });
+        let proxy = self.clone();
         std::thread::spawn(move || {
             let mut stream = stream;
             let mut frames = FrameBuf::new(IPC_MAX_FRAME);
@@ -492,8 +978,12 @@ impl WorkerProxy {
                     Ok(0) => break,
                     Ok(n) => {
                         frames.feed(&scratch[..n]);
-                        while let Some(line) = frames.next_line() {
-                            match decode_reply(&line) {
+                        while let Some(frame) = frames.next_frame() {
+                            let decoded = match frame {
+                                Frame::Line(line) => decode_reply(&line),
+                                Frame::Bin(payload) => decode_reply_bin(payload),
+                            };
+                            match decoded {
                                 Ok((id, resp)) => proxy.complete(id, resp),
                                 Err(e) => {
                                     // Resync: skip the bad frame, keep
@@ -523,11 +1013,25 @@ impl WorkerProxy {
     /// client's shutdown reply).
     fn complete(&self, id: u64, resp: String) {
         let mut inner = self.inner.lock().unwrap();
+        if inner.hello_id == Some(id) {
+            // The codec handshake completes internally; it was never in
+            // `pending` and no client is waiting on it.
+            inner.hello_id = None;
+            inner.bin = hello_grants_binary(&resp);
+            if !inner.bin {
+                crate::info!(
+                    "worker {}: peer declined the binary codec; staying on json",
+                    self.shard
+                );
+            }
+            return;
+        }
         let Some(p) = inner.pending.remove(&id) else { return };
         let rtt = p.sent_at.elapsed().as_micros().max(1) as u64;
         // ordering: stats-only gauge read by render_rows; no other
         // state is published through it.
         self.slot().rtt_micros.store(rtt, Ordering::Relaxed);
+        self.slot().rtt_window.lock().unwrap().push(rtt);
         if p.shutdown {
             // A closed ledger drops the ack: the late requester's
             // connection is closing, and EOF stands in for the ack.
@@ -555,6 +1059,9 @@ impl WorkerProxy {
                 return; // already detached
             }
             inner.out = None;
+            // The next attach renegotiates from scratch.
+            inner.bin = false;
+            inner.hello_id = None;
             let mut acked = Vec::new();
             for (_, p) in inner.pending.drain() {
                 if p.shutdown {
@@ -596,7 +1103,6 @@ impl WorkerProxy {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::server::StatsQuery;
     use crate::util::proptest::check;
     use crate::util::rng::Rng;
     use std::sync::mpsc::channel as mpsc_channel;
@@ -732,10 +1238,13 @@ mod tests {
             // Newline-free garbage (newlines would legitimately frame),
             // then a newline, then valid frames: every valid frame must
             // decode; the garbage line must error, not panic or desync.
+            // The first byte avoids BIN_MAGIC: a frame START opening
+            // with the magic is by definition a binary frame, and
+            // resync-from-garbage is the line codec's guarantee.
             let garbage: Vec<u8> = (0..rng.range(1, 200))
-                .map(|_| {
+                .map(|i| {
                     let b = rng.range(0, 255) as u8;
-                    if b == b'\n' {
+                    if b == b'\n' || (i == 0 && b == BIN_MAGIC) {
                         b'x'
                     } else {
                         b
@@ -784,6 +1293,185 @@ mod tests {
     }
 
     #[test]
+    fn binary_request_frames_roundtrip() {
+        check("ipc-bin-request-roundtrip", 200, |rng| {
+            let id = rng.next_u64() >> 12;
+            let req = arbitrary_request(rng);
+            let mut frame = Vec::new();
+            encode_request_bin(id, &req, &mut frame);
+            crate::prop_assert!(frame[0] == BIN_MAGIC, "frame must open with the magic");
+            let declared = u32::from_le_bytes([frame[1], frame[2], frame[3], frame[4]]) as usize;
+            crate::prop_assert!(declared == frame.len() - 5, "length prefix must be exact");
+            let (got_id, got) = decode_request_bin(&frame[5..]).map_err(|e| format!("{e:#}"))?;
+            crate::prop_assert!(got_id == id, "id {got_id} != {id}");
+            crate::prop_assert!(got == req, "decoded {got:?} != {req:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn binary_reply_frames_roundtrip_verbatim() {
+        check("ipc-bin-reply-roundtrip", 200, |rng| {
+            let id = rng.next_u64() >> 12;
+            let resp = arbitrary_reply(rng);
+            let mut frame = Vec::new();
+            encode_reply_bin(id, &resp, &mut frame);
+            let (got_id, got) = decode_reply_bin(&frame[5..]).map_err(|e| format!("{e:#}"))?;
+            crate::prop_assert!(got_id == id, "id {got_id} != {id}");
+            crate::prop_assert!(got == resp, "reply body must round-trip verbatim:\n{got}\n{resp}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cross_codec_values_decode_identically() {
+        // The equivalence the negotiation relies on: whichever codec a
+        // frame travels in, the decoded value is the same.
+        check("ipc-cross-codec", 200, |rng| {
+            let id = rng.next_u64() >> 12;
+            let req = arbitrary_request(rng);
+            let via_json = decode_request(encode_request(id, &req).trim_end())
+                .map_err(|e| format!("json: {e:#}"))?;
+            let mut frame = Vec::new();
+            encode_request_bin(id, &req, &mut frame);
+            let via_bin = decode_request_bin(&frame[5..]).map_err(|e| format!("bin: {e:#}"))?;
+            crate::prop_assert!(
+                via_json == via_bin,
+                "request codecs diverged: {via_json:?} != {via_bin:?}"
+            );
+            let resp = arbitrary_reply(rng);
+            let via_json = decode_reply(encode_reply(id, &resp).trim_end())
+                .map_err(|e| format!("json reply: {e:#}"))?;
+            encode_reply_bin(id, &resp, &mut frame);
+            let via_bin = decode_reply_bin(&frame[5..]).map_err(|e| format!("bin reply: {e:#}"))?;
+            crate::prop_assert!(via_json == via_bin, "reply codecs diverged");
+            Ok(())
+        });
+    }
+
+    /// A mixed-codec stream (exactly what the wire carries during
+    /// negotiation) as `(bytes, expected id sequence)`.
+    fn mixed_stream(rng: &mut Rng) -> (Vec<u8>, Vec<u64>) {
+        let mut stream = Vec::new();
+        let mut ids = Vec::new();
+        for i in 0..rng.range(1, 8) as u64 {
+            ids.push(i);
+            match rng.range(0, 4) {
+                0 => {
+                    let line = encode_request(i, &arbitrary_request(rng));
+                    stream.extend_from_slice(line.as_bytes());
+                }
+                1 => stream.extend_from_slice(encode_reply(i, &arbitrary_reply(rng)).as_bytes()),
+                2 => {
+                    let mut f = Vec::new();
+                    encode_request_bin(i, &arbitrary_request(rng), &mut f);
+                    stream.extend_from_slice(&f);
+                }
+                _ => {
+                    let mut f = Vec::new();
+                    encode_reply_bin(i, &arbitrary_reply(rng), &mut f);
+                    stream.extend_from_slice(&f);
+                }
+            }
+        }
+        (stream, ids)
+    }
+
+    /// Decode every buffered frame of either codec to its frame id.
+    fn drain_ids(fb: &mut FrameBuf, out: &mut Vec<u64>) {
+        while let Some(frame) = fb.next_frame() {
+            let id = match frame {
+                Frame::Line(line) => decode_request(&line)
+                    .map(|(id, _)| id)
+                    .or_else(|_| decode_reply(&line).map(|(id, _)| id))
+                    .expect("line frame decodes"),
+                Frame::Bin(payload) => decode_request_bin(payload)
+                    .map(|(id, _)| id)
+                    .or_else(|_| decode_reply_bin(payload).map(|(id, _)| id))
+                    .expect("binary frame decodes"),
+            };
+            out.push(id);
+        }
+    }
+
+    #[test]
+    fn framebuf_reassembles_mixed_codec_streams_at_any_split() {
+        let mut rng = Rng::new(0xC0DEC);
+        let (stream, ids) = mixed_stream(&mut rng);
+        for split in 0..=stream.len() {
+            let mut fb = FrameBuf::new(IPC_MAX_FRAME);
+            let mut got = Vec::new();
+            fb.feed(&stream[..split]);
+            drain_ids(&mut fb, &mut got);
+            fb.feed(&stream[split..]);
+            drain_ids(&mut fb, &mut got);
+            assert_eq!(got, ids, "split at byte {split}");
+        }
+    }
+
+    #[test]
+    fn framebuf_survives_mixed_codec_drip_feeds() {
+        check("ipc-bin-drip-feed", 60, |rng| {
+            let (stream, ids) = mixed_stream(rng);
+            let mut fb = FrameBuf::new(IPC_MAX_FRAME);
+            let mut got = Vec::new();
+            let mut i = 0;
+            while i < stream.len() {
+                let step = rng.range(1, 7).min(stream.len() - i);
+                fb.feed(&stream[i..i + step]);
+                i += step;
+                drain_ids(&mut fb, &mut got);
+            }
+            crate::prop_assert!(got == ids, "drip-fed mixed frames diverged: {got:?} != {ids:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn framebuf_skips_oversize_binary_frames_and_recovers() {
+        let mut fb = FrameBuf::new(32);
+        // A binary frame whose declared payload (64 bytes) exceeds the
+        // cap: skipped exactly, even fed in pieces.
+        let mut oversize = vec![BIN_MAGIC];
+        oversize.extend_from_slice(&64u32.to_le_bytes());
+        oversize.extend_from_slice(&[7u8; 40]);
+        fb.feed(&oversize);
+        assert!(fb.next_frame().is_none());
+        fb.feed(&[7u8; 24]); // the rest of the skipped payload
+        let mut good = Vec::new();
+        encode_reply_bin(3, "{\"ok\":true}", &mut good);
+        fb.feed(&good);
+        match fb.next_frame() {
+            Some(Frame::Bin(payload)) => {
+                assert_eq!(decode_reply_bin(payload).unwrap(), (3, "{\"ok\":true}".to_string()));
+            }
+            other => panic!("expected the post-skip binary frame, got {:?}", other.is_some()),
+        }
+        assert!(fb.next_frame().is_none());
+    }
+
+    #[test]
+    fn hello_handshake_grants_and_declines() {
+        // Worker side: the hello is intercepted before the request
+        // grammar (which would reject it — the negotiate-down path for
+        // pre-codec peers).
+        let hello = encode_hello(0, IpcCodec::Binary);
+        match decode_line(hello.trim_end()).unwrap() {
+            LineFrame::Hello { id, codec } => {
+                assert_eq!(id, 0);
+                assert_eq!(codec, IpcCodec::Binary);
+            }
+            LineFrame::Req(..) => panic!("hello parsed as a request"),
+        }
+        assert!(decode_request(hello.trim_end()).is_err(), "request grammar must reject hello");
+        // Proxy side: only an ok+binary ack grants the upgrade.
+        assert!(hello_grants_binary(&hello_ack(IpcCodec::Binary)));
+        assert!(!hello_grants_binary(&hello_ack(IpcCodec::Json)));
+        assert!(!hello_grants_binary("{\"ok\":false,\"error\":\"unknown op \\\"hello\\\"\"}"));
+        assert!(!hello_grants_binary("not json"));
+    }
+
+    #[test]
     fn frame_id_recovers_ids_from_malformed_request_bodies() {
         assert_eq!(frame_id("{\"id\":42,\"op\":\"nope\"}"), Some(42));
         assert_eq!(frame_id("{\"op\":\"stats\"}"), None);
@@ -794,7 +1482,7 @@ mod tests {
     #[test]
     fn proxy_down_refuses_and_stashes_shutdown() {
         let table = Arc::new(WorkerStatsTable::new(1));
-        let proxy = Arc::new(WorkerProxy::new(0, table));
+        let proxy = Arc::new(WorkerProxy::new(0, table, IpcCodec::Json));
         // Session-routed work while down: refused (the router turns the
         // returned reply into shard_unavailable).
         let (tx, _rx) = mpsc_channel();
@@ -812,7 +1500,7 @@ mod tests {
     #[test]
     fn late_shutdown_after_ledger_collection_is_refused() {
         let table = Arc::new(WorkerStatsTable::new(1));
-        let proxy = Arc::new(WorkerProxy::new(0, table));
+        let proxy = Arc::new(WorkerProxy::new(0, table, IpcCodec::Json));
         // Normal drain: a shutdown while down is stashed, then the
         // serve shell collects the ledger at port release.
         let (tx, _rx) = mpsc_channel();
@@ -839,7 +1527,7 @@ mod tests {
         let client = TcpStream::connect(addr).unwrap();
         let (_server_side, _) = listener.accept().unwrap();
         let table = Arc::new(WorkerStatsTable::new(1));
-        let proxy = Arc::new(WorkerProxy::new(0, table.clone()));
+        let proxy = Arc::new(WorkerProxy::new(0, table.clone(), IpcCodec::Json));
         proxy.attach(client).unwrap();
         assert!(proxy.is_up());
         let (tx, rx) = mpsc_channel();
@@ -857,12 +1545,92 @@ mod tests {
         proxy.force_detach();
     }
 
+    // The proxy half of the codec negotiation over a real socket: the
+    // hello is frame one, requests stay JSON until the ack, and flip to
+    // binary after it (with the JSON reply to a pre-ack request still
+    // completing correctly — the mixed-codec window).
+    #[cfg_attr(miri, ignore)]
+    #[test]
+    fn proxy_negotiates_binary_after_hello_ack() {
+        use std::net::{TcpListener, TcpStream};
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (mut worker_side, _) = listener.accept().unwrap();
+        let table = Arc::new(WorkerStatsTable::new(1));
+        let proxy = Arc::new(WorkerProxy::new(0, table, IpcCodec::Binary));
+        proxy.attach(client).unwrap();
+
+        // A request dispatched before the ack goes out as JSON, after
+        // the hello.
+        let (tx, rx) = mpsc_channel();
+        let req = Request::Query { session: "u".into(), tokens: vec![1, 2], topk: 1 };
+        proxy.dispatch(req, Reply::channel(tx)).unwrap();
+
+        let mut fb = FrameBuf::new(IPC_MAX_FRAME);
+        let mut scratch = [0u8; 4096];
+        let mut read_frame = |fb: &mut FrameBuf, worker_side: &mut TcpStream| -> (u64, bool) {
+            loop {
+                if let Some(frame) = match fb.next_frame() {
+                    Some(Frame::Line(line)) => match decode_line(&line).unwrap() {
+                        LineFrame::Hello { id, codec } => {
+                            assert_eq!(codec, IpcCodec::Binary);
+                            Some((id, false))
+                        }
+                        LineFrame::Req(id, _) => Some((id, false)),
+                    },
+                    Some(Frame::Bin(payload)) => {
+                        Some((decode_request_bin(payload).unwrap().0, true))
+                    }
+                    None => None,
+                } {
+                    return frame;
+                }
+                let n = worker_side.read(&mut scratch).unwrap();
+                assert!(n > 0, "proxy closed early");
+                fb.feed(&scratch[..n]);
+            }
+        };
+        let (hello_id, bin) = read_frame(&mut fb, &mut worker_side);
+        assert!(!bin, "the hello is a JSON line");
+        let (req_id, bin) = read_frame(&mut fb, &mut worker_side);
+        assert!(!bin, "pre-ack requests stay JSON");
+
+        // Ack the hello, then answer the pending JSON request.
+        let ack = encode_reply(hello_id, &hello_ack(IpcCodec::Binary));
+        worker_side.write_all(ack.as_bytes()).unwrap();
+        worker_side.write_all(encode_reply(req_id, "{\"ok\":true}").as_bytes()).unwrap();
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        assert_eq!(resp, "{\"ok\":true}");
+
+        // Post-ack dispatches arrive as binary frames; a binary reply
+        // completes them. (The ack is processed by the proxy's reader
+        // asynchronously; it strictly precedes the reply to req_id on
+        // the socket, and completion of that reply happens-before the
+        // recv above returned, so the upgrade is visible now.)
+        let (tx, rx) = mpsc_channel();
+        let req = Request::Context { session: "u".into(), tokens: vec![3] };
+        proxy.dispatch(req, Reply::channel(tx)).unwrap();
+        let (bin_id, bin) = read_frame(&mut fb, &mut worker_side);
+        assert!(bin, "post-ack requests must be binary");
+        let mut reply = Vec::new();
+        encode_reply_bin(bin_id, "{\"ok\":true,\"t\":1}", &mut reply);
+        worker_side.write_all(&reply).unwrap();
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        assert_eq!(resp, "{\"ok\":true,\"t\":1}");
+        proxy.force_detach();
+    }
+
     #[test]
     fn worker_stats_rows_render_valid_json() {
         let table = WorkerStatsTable::new(2);
         table.slot(0).pid.store(4242, Ordering::Relaxed);
         table.slot(0).up.store(true, Ordering::Relaxed);
         table.slot(0).rtt_micros.store(1500, Ordering::Relaxed);
+        // 1..=100 µs of samples: p50 = 50 µs, p99 = 99 µs exactly.
+        for us in 1..=100 {
+            table.slot(0).rtt_window.lock().unwrap().push(us);
+        }
         table.slot(1).restarts.store(3, Ordering::Relaxed);
         assert_eq!(table.total_restarts(), 3);
         let parsed = Json::parse(&format!("[{}]", table.render_rows())).expect("valid JSON");
@@ -872,8 +1640,27 @@ mod tests {
         assert_eq!(rows[0].get("pid").unwrap().usize().unwrap(), 4242);
         assert_eq!(rows[0].get("up").unwrap(), &Json::Bool(true));
         assert!((rows[0].get("rtt_ms").unwrap().f64().unwrap() - 1.5).abs() < 1e-9);
+        assert!((rows[0].get("rtt_p50_ms").unwrap().f64().unwrap() - 0.050).abs() < 1e-9);
+        assert!((rows[0].get("rtt_p99_ms").unwrap().f64().unwrap() - 0.099).abs() < 1e-9);
         assert_eq!(rows[1].get("pid").unwrap(), &Json::Null);
         assert_eq!(rows[1].get("rtt_ms").unwrap(), &Json::Null);
+        assert_eq!(rows[1].get("rtt_p50_ms").unwrap(), &Json::Null);
         assert_eq!(rows[1].get("restarts").unwrap().usize().unwrap(), 3);
+    }
+
+    #[test]
+    fn rtt_window_caps_and_rolls() {
+        let mut w = RttWindow::default();
+        assert_eq!(w.percentiles(), None);
+        for us in 0..(RTT_WINDOW as u64 + 500) {
+            w.push(us + 1);
+        }
+        let (p50, p99) = w.percentiles().unwrap();
+        // The window holds the most recent RTT_WINDOW samples
+        // (501..=RTT_WINDOW+500), so the percentiles sit inside that
+        // range and the earliest samples are gone.
+        assert!(p50 > 500, "oldest samples must have been overwritten (p50={p50})");
+        assert!(p99 <= RTT_WINDOW as u64 + 500);
+        assert!(p50 < p99);
     }
 }

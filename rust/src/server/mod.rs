@@ -88,6 +88,25 @@
 //! [`shard_for`] hash routes sessions, so Mem(t) stays pinned to one
 //! worker as the fleet grows past a single process.
 //!
+//! **IPC codec negotiation** (`--ipc-codec json|binary`, default
+//! binary): on every (re)attach the proxy's first frame is a JSON
+//! hello — `{"id":N,"op":"hello","codec":"binary","version":1}` — and
+//! only after the worker acks it
+//! (`{"ok":true,"kind":"hello","codec":"binary","version":1}`) does
+//! the proxy switch its request encoding to length-prefixed binary
+//! frames (magic byte `0xCC`, so a receiver distinguishes them from
+//! JSON lines by the first byte; layout in `ipc.rs`). The worker
+//! mirrors per frame: a binary request gets a binary reply, a JSON
+//! line gets a JSON line. A peer that answers the hello with an error
+//! — any pre-codec build, or an external `--worker-addr` worker that
+//! only speaks JSON — is **negotiated down**: the connection simply
+//! stays on the JSON codec and every PR 5 failure/drain/stats
+//! guarantee holds unchanged. The client-facing wire protocol is
+//! byte-identical JSON under both codecs. Both IPC writers batch
+//! bursts of queued frames into gathered `writev` writes (poll.rs), so
+//! a pipelined burst costs one syscall instead of one `write_all` per
+//! frame.
+//!
 //! A supervisor thread per worker spawns it, reads its
 //! `CCM_WORKER_READY <addr>` stdout handshake, connects with backoff,
 //! and respawns it (exponential backoff, `shard_restarts` counter in
@@ -389,6 +408,58 @@ pub fn reactors_from_env() -> usize {
     }
 }
 
+/// Shard-IPC wire codec (`--ipc-codec json|binary`).
+///
+/// `Binary` is the default: the proxy opens every worker connection
+/// with a JSON hello (`{"op":"hello","codec":"binary","version":1}`)
+/// and switches to length-prefixed binary frames only after the worker
+/// acks it — a peer that answers with an error (any pre-codec or
+/// external `--worker-addr` worker) is negotiated down and the
+/// connection simply stays on newline-framed JSON. `Json` pins the
+/// legacy codec on both sides. The client-facing protocol is JSON
+/// either way; this only selects the front-end ↔ worker hop's
+/// encoding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IpcCodec {
+    Json,
+    Binary,
+}
+
+impl IpcCodec {
+    pub fn parse(name: &str) -> Result<IpcCodec> {
+        match name {
+            "json" => Ok(IpcCodec::Json),
+            "binary" => Ok(IpcCodec::Binary),
+            other => anyhow::bail!("unknown IPC codec {other:?} (want `json` or `binary`)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            IpcCodec::Json => "json",
+            IpcCodec::Binary => "binary",
+        }
+    }
+
+    /// `CCM_IPC_CODEC` if valid (lets CI steer a whole test run across
+    /// the codec matrix without touching any call site), else binary.
+    pub fn from_env() -> IpcCodec {
+        match std::env::var("CCM_IPC_CODEC").ok().as_deref() {
+            Some(v) => match IpcCodec::parse(v) {
+                Ok(codec) => codec,
+                Err(_) => {
+                    crate::info!(
+                        "ignoring invalid CCM_IPC_CODEC={v:?} (want `json` or `binary`); \
+                         using binary"
+                    );
+                    IpcCodec::Binary
+                }
+            },
+            None => IpcCodec::Binary,
+        }
+    }
+}
+
 /// Serving configuration. `new` fills production-shaped defaults; set
 /// the public fields to tune.
 pub struct ServerConfig {
@@ -439,6 +510,12 @@ pub struct ServerConfig {
     /// are refused with `line_too_long` and discarded through the next
     /// newline, so a slow-loris peer cannot pin buffer memory.
     pub max_line_bytes: usize,
+    /// Shard-IPC codec preference (`--ipc-codec`). On the front-end it
+    /// decides whether worker connections attempt the binary hello; on
+    /// a worker it decides whether such a hello is granted. Defaults
+    /// to [`IpcCodec::from_env`] (`CCM_IPC_CODEC` if valid, else
+    /// binary).
+    pub ipc_codec: IpcCodec,
 }
 
 impl ServerConfig {
@@ -460,6 +537,7 @@ impl ServerConfig {
             reply_timeout: REPLY_TIMEOUT,
             max_conns: 16_384,
             max_line_bytes: 256 * 1024,
+            ipc_codec: IpcCodec::from_env(),
         }
     }
 }

@@ -389,6 +389,7 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::server::IpcCodec;
 
     #[test]
     fn shard_routing_is_stable_and_total() {
@@ -589,7 +590,9 @@ mod tests {
         let table = Arc::new(WorkerStatsTable::new(2));
         table.slot(1).restarts.store(3, Ordering::SeqCst);
         let handles: Vec<ShardHandle> = (0..2)
-            .map(|i| ShardHandle::Remote(Arc::new(WorkerProxy::new(i, table.clone()))))
+            .map(|i| {
+                ShardHandle::Remote(Arc::new(WorkerProxy::new(i, table.clone(), IpcCodec::Json)))
+            })
             .collect();
         let router = Router::with_workers(handles, &cfg, table);
         let (reply_tx, reply_rx) = channel();
@@ -616,7 +619,7 @@ mod tests {
         use crate::coordinator::session::SessionPolicy;
         let cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(2));
         let table = Arc::new(WorkerStatsTable::new(1));
-        let proxy = Arc::new(WorkerProxy::new(0, table.clone()));
+        let proxy = Arc::new(WorkerProxy::new(0, table.clone(), IpcCodec::Json));
         let router = Router::with_workers(vec![ShardHandle::Remote(proxy.clone())], &cfg, table);
         // Session-routed work against the down worker: an immediate
         // shard_unavailable reply; the connection stays open.

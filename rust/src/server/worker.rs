@@ -14,12 +14,17 @@
 //!
 //! Each worker binds a loopback listener (port 0 by default), prints a
 //! one-line stdout handshake (`CCM_WORKER_READY <addr>`), and serves
-//! the newline-framed JSON IPC protocol of [`super::ipc`] over a single
-//! front-end connection: request frames feed the worker's [`Executor`]
-//! (its own Compute backend, batcher, session manager, and KV-budget
-//! slice — `kv_budget_bytes` is the global budget, partitioned by the
-//! worker's `--shard`/`--shards` exactly like in-process shards), reply
-//! frames carry the executor's replies back tagged with the request id.
+//! the IPC protocol of [`super::ipc`] over a single front-end
+//! connection — length-prefixed binary frames when the connection's
+//! hello negotiated them (the worker grants binary only when started
+//! with `--ipc-codec binary`), newline-framed JSON otherwise, each
+//! request answered in the codec it arrived in. Request frames feed
+//! the worker's [`Executor`] (its own Compute backend, batcher,
+//! session manager, and KV-budget slice — `kv_budget_bytes` is the
+//! global budget, partitioned by the worker's `--shard`/`--shards`
+//! exactly like in-process shards), reply frames carry the executor's
+//! replies back tagged with the request id, flushed in gathered-write
+//! bursts.
 //!
 //! ## Supervision and failure semantics
 //!
@@ -60,7 +65,7 @@ use crate::model::manifest::Manifest;
 use crate::server::executor::Executor;
 use crate::server::ipc::{self, WorkerProxy, WorkerStatsTable};
 use crate::server::router::{Router, ShardHandle};
-use crate::server::{BackendFactory, Reply, Request, ServerConfig, SHUTDOWN_ACK};
+use crate::server::{BackendFactory, IpcCodec, Reply, Request, ServerConfig, SHUTDOWN_ACK};
 use crate::util::json::escape;
 
 /// Stdout handshake line prefix a worker prints once its IPC listener
@@ -128,7 +133,7 @@ pub fn serve_workers(
     cfg.shards = count;
     let table = Arc::new(WorkerStatsTable::new(count));
     let proxies: Vec<Arc<WorkerProxy>> =
-        (0..count).map(|i| Arc::new(WorkerProxy::new(i, table.clone()))).collect();
+        (0..count).map(|i| Arc::new(WorkerProxy::new(i, table.clone(), cfg.ipc_codec))).collect();
     let handles: Vec<ShardHandle> =
         proxies.iter().map(|p| ShardHandle::Remote(p.clone())).collect();
     let router = Router::with_workers(handles, &cfg, table);
@@ -443,7 +448,8 @@ pub fn run_worker<'a>(
             }
             result
         });
-        let accept_result = accept_loop(&listener, &req_tx, shared, shard);
+        let allow_binary = cfg.ipc_codec == IpcCodec::Binary;
+        let accept_result = accept_loop(&listener, &req_tx, shared, shard, allow_binary);
         drop(req_tx);
         // lint: allow(unwrap) — a panicked executor thread is a bug;
         // re-raise the panic instead of fabricating an exit status.
@@ -461,6 +467,7 @@ fn accept_loop(
     req_tx: &Sender<(Request, Reply)>,
     shared: &WorkerShared,
     shard: usize,
+    allow_binary: bool,
 ) -> Result<()> {
     let mut grace_until = Instant::now() + ORPHAN_FIRST_CONN;
     loop {
@@ -470,7 +477,7 @@ fn accept_loop(
         match listener.accept() {
             Ok((stream, peer)) => {
                 crate::info!("worker {shard}: front-end connected from {peer}");
-                if matches!(serve_ipc_conn(stream, req_tx, shared)?, ConnEnd::Done) {
+                if matches!(serve_ipc_conn(stream, req_tx, shared, allow_binary)?, ConnEnd::Done) {
                     return Ok(());
                 }
                 crate::info!("worker {shard}: front-end disconnected; awaiting reconnect");
@@ -499,20 +506,55 @@ enum ConnEnd {
 /// out through a writer thread. Reads poll on a short timeout so the
 /// loop observes the executor finishing (the drain acks are flushed by
 /// joining the writer before the connection closes).
+///
+/// Each reply goes out in the codec its request arrived in; a
+/// `hello` line is answered at this layer (granting binary only when
+/// `allow_binary`, i.e. the worker was started with the binary codec)
+/// and never reaches the executor. The writer drains its queue in
+/// batches through one gathered write per burst, reusing encode
+/// buffers from a local free list.
 fn serve_ipc_conn(
     stream: TcpStream,
     req_tx: &Sender<(Request, Reply)>,
     shared: &WorkerShared,
+    allow_binary: bool,
 ) -> Result<ConnEnd> {
     let _ = stream.set_nodelay(true);
     stream.set_read_timeout(Some(Duration::from_millis(50))).context("ipc read timeout")?;
     let write_half = stream.try_clone().context("clone ipc stream")?;
-    let (out_tx, out_rx) = channel::<(u64, String)>();
+    let (out_tx, out_rx) = channel::<(u64, String, bool)>();
     let writer = std::thread::spawn(move || {
-        let mut write_half = write_half;
-        while let Ok((id, resp)) = out_rx.recv() {
-            if write_half.write_all(ipc::encode_reply(id, &resp).as_bytes()).is_err() {
+        let write_half = write_half;
+        let mut free: Vec<Vec<u8>> = Vec::new();
+        let mut batch: Vec<Vec<u8>> = Vec::new();
+        let mut encode = |free: &mut Vec<Vec<u8>>, (id, resp, bin): (u64, String, bool)| {
+            let mut frame = free.pop().unwrap_or_default();
+            if bin {
+                ipc::encode_reply_bin(id, &resp, &mut frame);
+            } else {
+                frame.clear();
+                frame.extend_from_slice(ipc::encode_reply(id, &resp).as_bytes());
+            }
+            frame
+        };
+        while let Ok(msg) = out_rx.recv() {
+            batch.push(encode(&mut free, msg));
+            while batch.len() < ipc::IPC_WRITE_BATCH {
+                match out_rx.try_recv() {
+                    Ok(msg) => batch.push(encode(&mut free, msg)),
+                    Err(_) => break,
+                }
+            }
+            if crate::server::poll::write_gathered(&write_half, &batch).is_err() {
                 break;
+            }
+            for mut b in batch.drain(..) {
+                // Same retention cap as the proxy's pool: a one-off
+                // giant reply must not pin its buffer forever.
+                if b.capacity() <= 64 * 1024 {
+                    b.clear();
+                    free.push(b);
+                }
             }
         }
     });
@@ -524,26 +566,49 @@ fn serve_ipc_conn(
             Ok(0) => break,
             Ok(n) => {
                 frames.feed(&scratch[..n]);
-                while let Some(line) = frames.next_line() {
-                    match ipc::decode_request(&line) {
-                        Ok((id, req)) => {
-                            let reply = Reply::Ipc(ipc::IpcReplyHandle { id, out: out_tx.clone() });
-                            if req_tx.send((req, reply)).is_err() {
-                                break 'conn; // executor gone
+                while let Some(frame) = frames.next_frame() {
+                    let (id, req, bin) = match frame {
+                        ipc::Frame::Line(line) => match ipc::decode_line(&line) {
+                            Ok(ipc::LineFrame::Hello { id, codec }) => {
+                                let granted = if allow_binary && codec == IpcCodec::Binary {
+                                    IpcCodec::Binary
+                                } else {
+                                    IpcCodec::Json
+                                };
+                                let _ = out_tx.send((id, ipc::hello_ack(granted), false));
+                                continue;
                             }
-                        }
-                        Err(e) => {
-                            // Malformed body with a recoverable id is
-                            // answered; id-less garbage is skipped and
-                            // framing resynchronises (never desyncs).
-                            if let Some(id) = ipc::frame_id(&line) {
-                                let err = escape(&e.to_string());
-                                let msg = format!("{{\"ok\":false,\"error\":{err}}}");
-                                let _ = out_tx.send((id, msg));
-                            } else {
-                                crate::debug!("worker: skipping unframeable line: {e:#}");
+                            Ok(ipc::LineFrame::Req(id, req)) => (id, req, false),
+                            Err(e) => {
+                                // Malformed body with a recoverable id
+                                // is answered; id-less garbage is
+                                // skipped and framing resynchronises
+                                // (never desyncs).
+                                if let Some(id) = ipc::frame_id(&line) {
+                                    let err = escape(&e.to_string());
+                                    let msg = format!("{{\"ok\":false,\"error\":{err}}}");
+                                    let _ = out_tx.send((id, msg, false));
+                                } else {
+                                    crate::debug!("worker: skipping unframeable line: {e:#}");
+                                }
+                                continue;
                             }
-                        }
+                        },
+                        ipc::Frame::Bin(payload) => match ipc::decode_request_bin(payload) {
+                            Ok((id, req)) => (id, req, true),
+                            Err(e) => {
+                                // A binary frame is length-delimited,
+                                // so a bad body never desyncs framing;
+                                // its id (if any) is untrustworthy, so
+                                // it is dropped rather than answered.
+                                crate::debug!("worker: dropping undecodable binary frame: {e:#}");
+                                continue;
+                            }
+                        },
+                    };
+                    let reply = Reply::Ipc(ipc::IpcReplyHandle { id, bin, out: out_tx.clone() });
+                    if req_tx.send((req, reply)).is_err() {
+                        break 'conn; // executor gone
                     }
                 }
             }
@@ -586,6 +651,10 @@ mod tests {
     use std::collections::HashMap;
 
     fn start_toy_worker() -> (String, std::thread::JoinHandle<Result<()>>) {
+        start_toy_worker_codec(IpcCodec::Binary)
+    }
+
+    fn start_toy_worker_codec(codec: IpcCodec) -> (String, std::thread::JoinHandle<Result<()>>) {
         let (ready_tx, ready_rx) = channel();
         let handle = std::thread::spawn(move || {
             let m = Manifest::toy();
@@ -594,6 +663,7 @@ mod tests {
                 Box::new(move || Ok(Box::new(sim) as Box<dyn Compute>));
             let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(2));
             cfg.max_wait = Duration::ZERO;
+            cfg.ipc_codec = codec;
             run_worker(&m, factory, cfg, 0, Some(ready_tx))
         });
         let addr = ready_rx.recv_timeout(Duration::from_secs(10)).expect("worker ready");
@@ -602,6 +672,12 @@ mod tests {
 
     /// Read reply frames until `want` distinct ids have answered.
     fn read_replies(stream: &mut TcpStream, want: usize) -> HashMap<u64, Json> {
+        read_frames(stream, want).into_iter().map(|(id, (_, j))| (id, j)).collect()
+    }
+
+    /// Read reply frames of either codec until `want` distinct ids have
+    /// answered; the bool records whether a reply arrived binary.
+    fn read_frames(stream: &mut TcpStream, want: usize) -> HashMap<u64, (bool, Json)> {
         stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
         let mut frames = ipc::FrameBuf::new(ipc::IPC_MAX_FRAME);
         let mut scratch = [0u8; 16 * 1024];
@@ -610,9 +686,16 @@ mod tests {
             let n = stream.read(&mut scratch).expect("read reply frames");
             assert!(n > 0, "worker closed early with {}/{want} replies", out.len());
             frames.feed(&scratch[..n]);
-            while let Some(line) = frames.next_line() {
-                let (id, resp) = ipc::decode_reply(&line).expect("valid reply frame");
-                out.insert(id, Json::parse(&resp).expect("valid reply JSON"));
+            while let Some(frame) = frames.next_frame() {
+                let (bin, (id, resp)) = match frame {
+                    ipc::Frame::Line(line) => {
+                        (false, ipc::decode_reply(&line).expect("valid reply frame"))
+                    }
+                    ipc::Frame::Bin(payload) => {
+                        (true, ipc::decode_reply_bin(payload).expect("valid binary reply"))
+                    }
+                };
+                out.insert(id, (bin, Json::parse(&resp).expect("valid reply JSON")));
             }
         }
         out
@@ -714,6 +797,72 @@ mod tests {
         stream.write_all(ipc::encode_request(2, &Request::Shutdown).as_bytes()).unwrap();
         let replies = read_replies(&mut stream, 1);
         assert_eq!(replies[&2].get("kind").unwrap().str().unwrap(), "shutdown");
+        worker.join().expect("worker thread").expect("worker result");
+    }
+
+    #[test]
+    fn worker_grants_hello_and_mirrors_binary_frames() {
+        let (addr, worker) = start_toy_worker_codec(IpcCodec::Binary);
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        let mut bytes = ipc::encode_hello(0, IpcCodec::Binary).into_bytes();
+        let mut frame = Vec::new();
+        ipc::encode_request_bin(
+            1,
+            &Request::Context { session: "b".into(), tokens: vec![4, 5] },
+            &mut frame,
+        );
+        bytes.extend_from_slice(&frame);
+        ipc::encode_request_bin(
+            2,
+            &Request::Query { session: "b".into(), tokens: vec![9], topk: 1 },
+            &mut frame,
+        );
+        bytes.extend_from_slice(&frame);
+        stream.write_all(&bytes).unwrap();
+        let replies = read_frames(&mut stream, 3);
+        // The hello ack is line-mode (its request was); it grants
+        // binary because the worker runs the binary codec.
+        let (ack_bin, ack) = &replies[&0];
+        assert!(!ack_bin, "hello ack must mirror the line-mode hello");
+        assert_eq!(ack.get("codec").unwrap().str().unwrap(), "binary");
+        // Replies to binary requests come back binary, with the same
+        // payloads the JSON codec would carry.
+        let (ctx_bin, ctx) = &replies[&1];
+        assert!(ctx_bin, "binary request must get a binary reply");
+        assert_eq!(ctx.get("t").unwrap().i64().unwrap(), 1, "context ack");
+        let (q_bin, q) = &replies[&2];
+        assert!(q_bin);
+        let next = q.get("next").unwrap().arr().unwrap();
+        assert_eq!(next[0].arr().unwrap()[0].i64().unwrap(), 9, "query echo");
+        ipc::encode_request_bin(3, &Request::Shutdown, &mut frame);
+        stream.write_all(&frame).unwrap();
+        let replies = read_frames(&mut stream, 1);
+        let (sd_bin, sd) = &replies[&3];
+        assert!(sd_bin);
+        assert_eq!(sd.get("kind").unwrap().str().unwrap(), "shutdown");
+        worker.join().expect("worker thread").expect("worker result");
+    }
+
+    #[test]
+    fn worker_declines_hello_when_configured_json_only() {
+        let (addr, worker) = start_toy_worker_codec(IpcCodec::Json);
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        stream.write_all(ipc::encode_hello(0, IpcCodec::Binary).as_bytes()).unwrap();
+        let replies = read_frames(&mut stream, 1);
+        let (ack_bin, ack) = &replies[&0];
+        assert!(!ack_bin);
+        assert_eq!(ack.get("ok").unwrap(), &Json::Bool(true));
+        assert_eq!(
+            ack.get("codec").unwrap().str().unwrap(),
+            "json",
+            "a json-only worker negotiates the connection down"
+        );
+        // The connection then serves normally in JSON.
+        stream.write_all(ipc::encode_request(1, &Request::Shutdown).as_bytes()).unwrap();
+        let replies = read_frames(&mut stream, 1);
+        let (sd_bin, sd) = &replies[&1];
+        assert!(!sd_bin);
+        assert_eq!(sd.get("kind").unwrap().str().unwrap(), "shutdown");
         worker.join().expect("worker thread").expect("worker result");
     }
 }

@@ -1,10 +1,17 @@
 //! Hand-rolled micro-benchmark harness (criterion is unavailable offline).
 //!
 //! `cargo bench` targets use `harness = false` and drive this directly.
-//! Reports mean/median/p95 with simple outlier-robust statistics and a
-//! fixed wall-clock budget per case.
+//! Reports mean/median/p95/p99 with simple outlier-robust statistics
+//! and a fixed wall-clock budget per case. [`Report`] is the
+//! machine-readable side: the `BENCH_<n>.json` perf-trajectory
+//! artifacts `ccm bench --emit` writes and CI regenerates and compares
+//! (schema in docs/BENCH.md).
 
 use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::util::json::{escape, Json};
 
 /// One benchmark measurement series.
 #[derive(Debug, Clone)]
@@ -14,6 +21,7 @@ pub struct Stats {
     pub mean_ns: f64,
     pub median_ns: f64,
     pub p95_ns: f64,
+    pub p99_ns: f64,
     pub min_ns: f64,
 }
 
@@ -50,8 +58,21 @@ pub fn bench<F: FnMut()>(name: &str, budget: Duration, max_iters: usize, mut f: 
         mean_ns: mean,
         median_ns: samples[n / 2],
         p95_ns: samples[((n as f64 * 0.95) as usize).min(n - 1)],
+        p99_ns: samples[((n as f64 * 0.99) as usize).min(n - 1)],
         min_ns: samples[0],
     }
+}
+
+/// The `q`-th percentile (0..=100) of a raw sample set (sorts a copy;
+/// nearest-rank, matching the IPC RTT window's estimator). `None` when
+/// empty.
+pub fn percentile(samples: &[u64], q: usize) -> Option<u64> {
+    if samples.is_empty() {
+        return None;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_unstable();
+    Some(sorted[(sorted.len() - 1) * q.min(100) / 100])
 }
 
 /// Pretty table printer used by the bench binaries.
@@ -76,5 +97,132 @@ pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
     line(&widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>());
     for row in rows {
         line(row);
+    }
+}
+
+/// One scenario's results in a [`Report`]: a scenario name, an
+/// optional codec qualifier (the json-vs-binary IPC comparison), and
+/// flat numeric metrics whose units are part of the metric name
+/// (`round_p99_ms`, `rounds_per_sec`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    pub codec: Option<String>,
+    pub metrics: Vec<(String, f64)>,
+}
+
+impl Scenario {
+    pub fn new(name: &str, codec: Option<&str>) -> Scenario {
+        Scenario { name: name.into(), codec: codec.map(str::to_string), metrics: Vec::new() }
+    }
+
+    pub fn push(&mut self, metric: &str, value: f64) {
+        self.metrics.push((metric.into(), value));
+    }
+
+    pub fn metric(&self, name: &str) -> Option<f64> {
+        self.metrics.iter().find(|(k, _)| k == name).map(|(_, v)| *v)
+    }
+
+    /// Display label: `name` or `name[codec]`.
+    pub fn label(&self) -> String {
+        match &self.codec {
+            Some(codec) => format!("{}[{codec}]", self.name),
+            None => self.name.clone(),
+        }
+    }
+}
+
+/// A `BENCH_<n>.json` perf-trajectory report. Serialized with one
+/// scenario object per line so trajectory diffs stay readable in
+/// review; metric values round to 3 decimals (microsecond precision on
+/// millisecond metrics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Report {
+    pub schema: u32,
+    pub pr: u32,
+    pub scenarios: Vec<Scenario>,
+}
+
+impl Report {
+    pub fn new(pr: u32) -> Report {
+        Report { schema: 1, pr, scenarios: Vec::new() }
+    }
+
+    pub fn find(&self, name: &str, codec: Option<&str>) -> Option<&Scenario> {
+        self.scenarios.iter().find(|s| s.name == name && s.codec.as_deref() == codec)
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = format!(
+            "{{\n  \"schema\": {},\n  \"pr\": {},\n  \"scenarios\": [\n",
+            self.schema, self.pr
+        );
+        for (i, sc) in self.scenarios.iter().enumerate() {
+            out.push_str(&format!("    {{\"name\": {}", escape(&sc.name)));
+            if let Some(codec) = &sc.codec {
+                out.push_str(&format!(", \"codec\": {}", escape(codec)));
+            }
+            for (k, v) in &sc.metrics {
+                out.push_str(&format!(", {}: {v:.3}", escape(k)));
+            }
+            out.push_str(if i + 1 < self.scenarios.len() { "},\n" } else { "}\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    pub fn parse(src: &str) -> Result<Report> {
+        let j = Json::parse(src)?;
+        let mut report = Report::new(j.get("pr")?.usize()? as u32);
+        report.schema = j.get("schema")?.usize()? as u32;
+        for row in j.get("scenarios")?.arr()? {
+            let Json::Obj(fields) = row else { bail!("scenario row is not an object") };
+            let name = row.get("name")?.str()?;
+            let codec = row.opt("codec").and_then(|v| v.str().ok());
+            let mut sc = Scenario::new(name, codec);
+            for (key, value) in fields {
+                if let Json::Num(v) = value {
+                    sc.push(key, *v);
+                }
+            }
+            report.scenarios.push(sc);
+        }
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_roundtrips_through_json() {
+        let mut report = Report::new(7);
+        let mut sc = Scenario::new("ipc-2worker", Some("binary"));
+        sc.push("rounds_per_sec", 1234.5);
+        sc.push("ipc_rtt_p99_ms", 0.25);
+        report.scenarios.push(sc);
+        report.scenarios.push(Scenario::new("serve-throughput", None));
+        let parsed = Report::parse(&report.to_json()).expect("valid report JSON");
+        // Metric ORDER is not preserved (objects parse into a sorted
+        // map); values, names, and codecs are.
+        assert_eq!((parsed.schema, parsed.pr, parsed.scenarios.len()), (1, 7, 2));
+        assert!(parsed.find("serve-throughput", None).is_some());
+        let sc = parsed.find("ipc-2worker", Some("binary")).expect("scenario present");
+        assert_eq!(sc.metric("rounds_per_sec"), Some(1234.5));
+        assert_eq!(sc.metric("ipc_rtt_p99_ms"), Some(0.25));
+        assert_eq!(sc.label(), "ipc-2worker[binary]");
+        assert!(parsed.find("ipc-2worker", Some("json")).is_none());
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        assert_eq!(percentile(&[], 50), None);
+        assert_eq!(percentile(&[7], 99), Some(7));
+        let samples: Vec<u64> = (1..=100).rev().collect();
+        assert_eq!(percentile(&samples, 50), Some(50));
+        assert_eq!(percentile(&samples, 99), Some(99));
+        assert_eq!(percentile(&samples, 100), Some(100));
     }
 }
