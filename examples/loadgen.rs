@@ -1,0 +1,104 @@
+//! Live-traffic replay demo: start a sharded SimCompute server, then
+//! replay a mixed multi-tenant population from the paper's workload
+//! generators against it through `ccm loadgen`'s library API — the
+//! scenario-by-scenario operator handbook is docs/SCENARIOS.md.
+//!
+//!   cargo run --release --example loadgen \
+//!     [-- --users 64 --rate 400 --scenario mixed --shards 2]
+
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+use anyhow::Result;
+use ccm::bench::loadgen::{drive, LoadSpec, Mix};
+use ccm::compress::{Compute, SimCompute};
+use ccm::coordinator::session::SessionPolicy;
+use ccm::model::Manifest;
+use ccm::server::{serve_sharded, BackendFactory, Client, ServerConfig};
+use ccm::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let users = args.usize("users", 64)?;
+    let rate = args.f32("rate", 400.0)?;
+    let mix = Mix::parse(&args.str("scenario", "mixed"))?;
+    let shards = args.usize("shards", 2)?.max(1);
+
+    // A small sharded server over the deterministic Sim backend with a
+    // simulated per-batch compute cost (the `ccm loadgen` CLI
+    // self-serves the same topology when no --addr is given).
+    let m = Manifest::toy();
+    let mut cfg =
+        ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(m.scenario.comp_len_max));
+    cfg.shards = shards;
+    cfg.max_batch = 8;
+    cfg.max_wait = Duration::from_millis(1);
+    cfg.max_pending = 4096;
+    let (ready_tx, ready_rx) = channel();
+    let m2 = m.clone();
+    let server = std::thread::spawn(move || {
+        let factories: Vec<BackendFactory<'static>> = (0..shards)
+            .map(|_| {
+                let mut sim = SimCompute::from_manifest(&m2);
+                sim.compress_delay = Duration::from_micros(200);
+                sim.infer_delay = Duration::from_micros(200);
+                let factory: BackendFactory<'static> =
+                    Box::new(move || Ok(Box::new(sim) as Box<dyn Compute>));
+                factory
+            })
+            .collect();
+        serve_sharded(&m2, factories, cfg, Some(ready_tx))
+    });
+    let addr = ready_rx.recv()?;
+    println!("server up at {addr} ({shards} shard(s)); replaying {users} users at {rate} req/s");
+
+    // Open-loop replay: schedules are precomputed, latency is measured
+    // from the scheduled send time, refusals never enter the latency
+    // pool (docs/SCENARIOS.md, "refusals are not latency").
+    let spec = LoadSpec {
+        users,
+        mix,
+        rate,
+        seed: 7,
+        churn: 0.05,
+        quality_every: 8,
+        ramp_secs: 0.5,
+        stream_len_max: 8,
+        topk: 3,
+    };
+    let summary = drive(&addr, &m, &spec)?;
+
+    for sc in &summary.scenarios {
+        println!(
+            "{:>8}: {:3} users, {} served / {} refused / {} lost, p50 {:.2} ms, p99 {:.2} ms",
+            sc.workload.name(),
+            sc.users,
+            sc.bucket.ok,
+            sc.bucket.refused,
+            sc.bucket.lost,
+            sc.bucket.p_ms(500),
+            sc.bucket.p_ms(990),
+        );
+    }
+    let q = &summary.quality;
+    if q.samples > 0 {
+        println!(
+            "quality: {} sampled sessions, rouge {:.3}, peak-KV full/ccm ratio {:.1}x",
+            q.samples, q.rouge_mean, q.kv_ratio_mean
+        );
+    }
+    println!(
+        "total: {} served / {} refused / {} lost in {:.2}s ({:.0} served/s)",
+        summary.total.ok,
+        summary.total.refused,
+        summary.total.lost,
+        summary.wall_secs,
+        summary.total.ok as f64 / summary.wall_secs.max(1e-9),
+    );
+
+    let mut admin = Client::connect(&addr)?;
+    admin.shutdown()?;
+    server.join().expect("server thread")?;
+    println!("server shut down cleanly");
+    Ok(())
+}

@@ -597,7 +597,13 @@ fn rule_set_var(file: &str, view: &FileView, out: &mut Vec<Finding>) {
 
 fn is_core_path(file: &str) -> bool {
     let f = file.replace('\\', "/");
-    f.contains("src/server/") || f.contains("src/coordinator/") || f.contains("src/model/")
+    f.contains("src/server/")
+        || f.contains("src/coordinator/")
+        || f.contains("src/model/")
+        // The loadgen user hot loop runs thousands of concurrent
+        // synthetic-user threads against live servers; a stray unwrap
+        // there kills a whole user's replay mid-run.
+        || f.contains("src/bench/loadgen.rs")
 }
 
 fn is_poll_rs(file: &str) -> bool {
@@ -606,9 +612,10 @@ fn is_poll_rs(file: &str) -> bool {
 
 /// Lint one file's source text. `file` is used both for reporting and
 /// for the path-scoped rules: the unwrap and lock-across-I/O rules
-/// police only the serving core (`src/server/`, `src/coordinator/`,
-/// `src/model/`), and `poll.rs` is exempt from the raw-fd rule because
-/// it IS the RAII boundary the rule protects.
+/// police only live-traffic paths (`src/server/`, `src/coordinator/`,
+/// `src/model/`, and the `src/bench/loadgen.rs` replay hot loop), and
+/// `poll.rs` is exempt from the raw-fd rule because it IS the RAII
+/// boundary the rule protects.
 pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
     let view = lex(src);
     let tests = test_regions(&view.code);

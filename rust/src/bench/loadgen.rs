@@ -1,0 +1,1182 @@
+//! `ccm loadgen` — open-loop multi-tenant traffic replay of the
+//! paper's workloads against a live serving instance.
+//!
+//! The paper evaluates compressed context memory on four online
+//! settings (conversation / LaMP personalization / MetaICL multi-task
+//! / PG19-style streaming); `rust/src/datagen/` synthesizes all four.
+//! This module replays them as *serving traffic*: a population of
+//! concurrent synthetic users — mixed across scenarios by weight
+//! ([`Mix`]), with heavy-tailed session lengths
+//! ([`heavy_tail_len`]) and reconnect churn — drives a running `ccm
+//! serve` endpoint over the real JSON-lines client protocol.
+//! docs/SCENARIOS.md is the operator handbook mapping each paper
+//! evaluation to its loadgen scenario and flags.
+//!
+//! ## Open-loop pacing (no coordinated omission)
+//!
+//! Every request has a pre-computed scheduled send time (per-user
+//! exponential inter-arrival gaps around the aggregate `--rate`). A
+//! late request is sent immediately but NEVER rescheduled, and its
+//! latency is measured from the *scheduled* time — so when the server
+//! falls behind, the backlog lands in the reported tail instead of
+//! silently stretching the schedule (the classic closed-loop
+//! coordinated-omission trap). Per-session ordering still holds:
+//! each user's requests go down one connection, sequentially.
+//!
+//! ## Refusals are not latency samples
+//!
+//! Admission refusals (`overloaded`, `shutting_down`), connection
+//! refusals (`too_many_connections` — which the reactor's
+//! `REFUSAL_LINGER` path sends on accept), `shard_unavailable` and
+//! `timeout` replies are counted in a separate refusal bucket per
+//! scenario ([`Bucket`]), broken down by kind. They NEVER contribute
+//! to the latency pool: a tail percentile only summarizes requests
+//! the server actually served.
+//!
+//! ## Live compression-quality sampling
+//!
+//! Every `--quality-every`-th user ends its session with a scored
+//! probe: a short greedy continuation generated over the session's
+//! *compressed* memory (repeated `query` round trips) is scored with
+//! ROUGE-L ([`crate::eval::rouge`]) against the generator's
+//! full-context reference continuation, and the session's live
+//! compressed-KV bytes (from context acks) sit next to the analytic
+//! full-context and CCM-concat peaks from
+//! [`crate::eval::memacct`] — the paper's quality-vs-memory trade-off,
+//! observed on live traffic. Under the deterministic SimCompute
+//! backend the generation is an echo and ROUGE-L is a plumbing-level
+//! signal; under a trained engine it is the real Table-7 metric.
+//!
+//! Results print as a per-scenario table and emit in the
+//! [`Report`] schema (`--emit`), so `ccm bench --compare` composes
+//! with the BENCH_<n>.json trajectory (docs/BENCH.md); the pinned
+//! [`bench_scenario`] joins `ccm bench` as `loadgen-mixed`.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::compress::Compute;
+use crate::datagen::stream::StreamGen;
+use crate::datagen::{self, OnlineDataset, Split};
+use crate::eval::{memacct, rouge};
+use crate::masks::Method;
+use crate::model::manifest::ModelConfig;
+use crate::model::Manifest;
+use crate::server::{fmt_tokens, serve_sharded, BackendFactory, Client};
+use crate::util::bench::{percentile_mille, print_table, Report, Scenario};
+use crate::util::cli::Args;
+use crate::util::json::{escape, Json};
+use crate::util::rng::Rng;
+
+/// Connection-level retry budget per scheduled request: reconnect and
+/// resend after an EOF or a `too_many_connections` accept refusal.
+/// Admission refusals are final (open-loop: never pile on).
+const EVENT_ATTEMPTS: usize = 3;
+/// Connect attempts before a request counts as lost.
+const CONNECT_ATTEMPTS: usize = 5;
+/// Backoff between connection-level retries.
+const RETRY_BACKOFF: Duration = Duration::from_millis(20);
+/// Stack per synthetic-user thread: the hot loop is shallow (no
+/// recursion, heap-allocated plans), so default 8 MiB stacks would
+/// only waste address space at thousands of users.
+const USER_STACK: usize = 128 * 1024;
+/// Greedy-generation cap per quality probe (round trips per sample).
+const GEN_BUDGET: usize = 8;
+
+// ---------------------------------------------------------------------
+// Population shape: workloads, mixes, session-length distribution.
+
+/// One paper workload a synthetic user can replay.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Workload {
+    /// Conversation (DailyDialog-style): context is the dialogue so
+    /// far, one turn per time step.
+    Dialog,
+    /// LaMP personalization: context is the user profile.
+    Lamp,
+    /// MetaICL multi-task ICL: context is the demonstration set.
+    MetaIcl,
+    /// PG19-style unbounded stream (not an [`OnlineDataset`]; driven
+    /// through [`StreamGen`] directly).
+    Stream,
+}
+
+impl Workload {
+    pub const ALL: [Workload; 4] =
+        [Workload::Dialog, Workload::Lamp, Workload::MetaIcl, Workload::Stream];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Workload::Dialog => "dialog",
+            Workload::Lamp => "lamp",
+            Workload::MetaIcl => "metaicl",
+            Workload::Stream => "stream",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Workload> {
+        match s {
+            "dialog" => Ok(Workload::Dialog),
+            "lamp" => Ok(Workload::Lamp),
+            "metaicl" => Ok(Workload::MetaIcl),
+            "stream" => Ok(Workload::Stream),
+            other => bail!("unknown workload {other:?} (dialog|lamp|metaicl|stream)"),
+        }
+    }
+}
+
+/// Weighted scenario population: how `--users` splits across
+/// workloads. Parsed from `--scenario mixed|<name>` or an explicit
+/// `--mix dialog=4,metaicl=2,...` weight list.
+#[derive(Debug, Clone)]
+pub struct Mix {
+    pub weights: Vec<(Workload, f32)>,
+}
+
+impl Mix {
+    /// The default mixed population: conversation-heavy, with
+    /// personalization and multi-task ICL side traffic and a thin
+    /// stream of long-lived readers (docs/SCENARIOS.md).
+    pub fn mixed() -> Mix {
+        Mix {
+            weights: vec![
+                (Workload::Dialog, 4.0),
+                (Workload::MetaIcl, 2.0),
+                (Workload::Lamp, 2.0),
+                (Workload::Stream, 1.0),
+            ],
+        }
+    }
+
+    pub fn single(wl: Workload) -> Mix {
+        Mix { weights: vec![(wl, 1.0)] }
+    }
+
+    /// `"mixed"`, a single workload name, or `name=weight` pairs
+    /// (comma-separated, weights are relative).
+    pub fn parse(spec: &str) -> Result<Mix> {
+        if spec == "mixed" {
+            return Ok(Mix::mixed());
+        }
+        if !spec.contains('=') {
+            return Ok(Mix::single(Workload::parse(spec)?));
+        }
+        let mut weights = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((name, w)) = part.split_once('=') else {
+                bail!("bad mix entry {part:?} (want name=weight)");
+            };
+            let wl = Workload::parse(name.trim())?;
+            let weight: f32 =
+                w.trim().parse().map_err(|_| anyhow!("bad mix weight {w:?} in {part:?}"))?;
+            if weight < 0.0 {
+                bail!("negative mix weight in {part:?}");
+            }
+            weights.push((wl, weight));
+        }
+        if !weights.iter().any(|(_, w)| *w > 0.0) {
+            bail!("mix {spec:?} has no positive weight");
+        }
+        Ok(Mix { weights })
+    }
+
+    /// Deterministic largest-remainder apportionment of `users` across
+    /// the weighted workloads (counts sum exactly to `users`).
+    pub fn assign(&self, users: usize) -> Vec<Workload> {
+        let active: Vec<(Workload, f32)> =
+            self.weights.iter().copied().filter(|(_, w)| *w > 0.0).collect();
+        if users == 0 || active.is_empty() {
+            return Vec::new();
+        }
+        let total: f64 = active.iter().map(|(_, w)| *w as f64).sum();
+        let quotas: Vec<f64> =
+            active.iter().map(|(_, w)| users as f64 * (*w as f64) / total).collect();
+        let mut counts: Vec<usize> = quotas.iter().map(|q| q.floor() as usize).collect();
+        let mut order: Vec<usize> = (0..active.len()).collect();
+        order.sort_by(|&a, &b| {
+            let fa = quotas[a] - quotas[a].floor();
+            let fb = quotas[b] - quotas[b].floor();
+            fb.partial_cmp(&fa).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+        });
+        let mut left = users - counts.iter().sum::<usize>();
+        for &i in &order {
+            if left == 0 {
+                break;
+            }
+            counts[i] += 1;
+            left -= 1;
+        }
+        let mut out = Vec::with_capacity(users);
+        for (i, (wl, _)) in active.iter().enumerate() {
+            for _ in 0..counts[i] {
+                out.push(*wl);
+            }
+        }
+        out
+    }
+}
+
+/// Bounded-Pareto session length: most sessions are short, a heavy
+/// tail runs to the cap — the multi-tenant shape where a few users
+/// accumulate deep compressed memory while most stay shallow.
+pub fn heavy_tail_len(rng: &mut Rng, lo: usize, hi: usize, alpha: f64) -> usize {
+    let lo = lo.max(1);
+    if hi <= lo {
+        return hi.max(1);
+    }
+    let u = rng.f64().min(0.999_999);
+    let x = lo as f64 / (1.0 - u).powf(1.0 / alpha);
+    (x.floor() as usize).clamp(lo, hi)
+}
+
+/// Loadgen run parameters (`LoadSpec::from_args` maps the CLI flags).
+#[derive(Debug, Clone)]
+pub struct LoadSpec {
+    /// Concurrent synthetic users (one session + connection each).
+    pub users: usize,
+    /// Scenario population weights.
+    pub mix: Mix,
+    /// Aggregate target request rate (req/s) across the population;
+    /// per-user inter-arrival gaps are exponential around it.
+    pub rate: f32,
+    pub seed: u64,
+    /// Probability of dropping + reopening the connection after an
+    /// event (reconnect churn; the session id — and so Mem(t) — stays).
+    pub churn: f32,
+    /// Score every Nth user's session with the quality probe (0 = off).
+    pub quality_every: usize,
+    /// Session arrivals spread uniformly over this ramp window.
+    pub ramp_secs: f64,
+    /// Session-length cap for the unbounded stream workload.
+    pub stream_len_max: usize,
+    /// `topk` for scheduled query requests.
+    pub topk: usize,
+}
+
+impl LoadSpec {
+    pub fn from_args(args: &Args) -> Result<LoadSpec> {
+        let scenario = args.str("scenario", "mixed");
+        let mix = match args.flags.get("mix") {
+            Some(m) => Mix::parse(m)?,
+            None => Mix::parse(&scenario)?,
+        };
+        Ok(LoadSpec {
+            users: args.usize("users", 256)?,
+            mix,
+            rate: args.f32("rate", 800.0)?,
+            seed: args.u64("seed", 7)?,
+            churn: args.f32("churn", 0.05)?,
+            quality_every: args.usize("quality-every", 8)?,
+            ramp_secs: args.u64("ramp-ms", 500)? as f64 / 1e3,
+            stream_len_max: args.usize("stream-len", 16)?,
+            topk: args.usize("topk", 3)?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-user replay plans (built up front, deterministically).
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    Context { tokens: Vec<i32> },
+    Query { tokens: Vec<i32> },
+}
+
+/// One scheduled request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    /// Scheduled send offset from the run epoch.
+    pub at: Duration,
+    pub kind: EventKind,
+    /// Drop the connection after this event (reconnect churn).
+    pub churn_after: bool,
+}
+
+/// The quality probe appended to a sampled user's session: greedy
+/// continuation of `input` over compressed memory, scored against the
+/// generator's full-context reference continuation `target`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QualityProbe {
+    pub input: Vec<i32>,
+    pub target: Vec<i32>,
+}
+
+/// One synthetic user's full replay schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UserPlan {
+    pub user: usize,
+    pub workload: Workload,
+    pub session: String,
+    pub events: Vec<Event>,
+    pub quality: Option<QualityProbe>,
+}
+
+/// Build every user's schedule: deterministic in (`spec.seed`, user
+/// index), so a replay is reproducible and comparable across runs.
+pub fn build_plans(manifest: &Manifest, spec: &LoadSpec) -> Result<Vec<UserPlan>> {
+    let sc = &manifest.scenario;
+    let vocab = manifest.model.vocab;
+    let assign = spec.mix.assign(spec.users);
+    let mut datasets: BTreeMap<Workload, Box<dyn OnlineDataset>> = BTreeMap::new();
+    for &wl in &assign {
+        if wl != Workload::Stream && !datasets.contains_key(&wl) {
+            datasets.insert(wl, datagen::by_name(wl.name(), spec.seed, sc, vocab)?);
+        }
+    }
+    // Mean per-user gap that lands the aggregate near `rate` while the
+    // whole population is active.
+    let mean_gap = if spec.rate > 0.0 { spec.users as f64 / spec.rate as f64 } else { 0.0 };
+    let mut plans = Vec::with_capacity(assign.len());
+    for (u, &wl) in assign.iter().enumerate() {
+        let mut rng = Rng::with_stream(spec.seed, u as u64);
+        let mut at = Duration::from_secs_f64(rng.f64() * spec.ramp_secs.max(0.0));
+        let mut events: Vec<Event> = Vec::new();
+        let push = |events: &mut Vec<Event>, at: &mut Duration, rng: &mut Rng, kind| {
+            events.push(Event { at: *at, kind, churn_after: rng.bool(spec.churn) });
+            let gap = if mean_gap > 0.0 { -mean_gap * (1.0 - rng.f64()).ln() } else { 0.0 };
+            *at += Duration::from_secs_f64(gap);
+        };
+        let quality_user = spec.quality_every > 0 && u % spec.quality_every == 0;
+        let mut quality = None;
+        match wl {
+            Workload::Dialog | Workload::Lamp | Workload::MetaIcl => {
+                let ds = datasets.get(&wl).context("dataset built above")?;
+                let t_max = ds.t_max().min(sc.t_max).max(1);
+                let len = heavy_tail_len(&mut rng, 2, t_max, 1.5);
+                let identity = u % ds.n_identities(Split::Test).max(1);
+                let full = ds.sample(Split::Test, identity, len);
+                for t in 1..=len {
+                    let chunk = full.chunks[t - 1].clone();
+                    push(&mut events, &mut at, &mut rng, EventKind::Context { tokens: chunk });
+                    let step = ds.sample(Split::Test, identity, t);
+                    push(&mut events, &mut at, &mut rng, EventKind::Query { tokens: step.input });
+                }
+                if quality_user && !full.target.is_empty() {
+                    quality = Some(QualityProbe { input: full.input, target: full.target });
+                }
+            }
+            Workload::Stream => {
+                let mut gen = StreamGen::for_user(spec.seed, u as u64, vocab);
+                let len = heavy_tail_len(&mut rng, 2, spec.stream_len_max.max(2), 1.5);
+                let chunk_len = sc.chunk_max.clamp(4, 48);
+                let qi = (sc.input_max / 2).clamp(1, 8);
+                for t in 1..=len {
+                    let chunk = gen.take(chunk_len);
+                    push(&mut events, &mut at, &mut rng, EventKind::Context { tokens: chunk });
+                    if t % 4 == 0 || t == len {
+                        let q = gen.take(qi);
+                        push(&mut events, &mut at, &mut rng, EventKind::Query { tokens: q });
+                    }
+                }
+                if quality_user {
+                    quality = Some(QualityProbe { input: gen.take(qi), target: gen.take(qi) });
+                }
+            }
+        }
+        plans.push(UserPlan {
+            user: u,
+            workload: wl,
+            session: format!("{}-u{u}", wl.name()),
+            events,
+            quality,
+        });
+    }
+    Ok(plans)
+}
+
+// ---------------------------------------------------------------------
+// Outcome classification and the refusal-separated recorder.
+
+/// Final outcome of one scheduled request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Outcome {
+    /// Served: contributes a latency sample.
+    Ok,
+    /// The server answered with a refusal (`error` code inside).
+    /// Never contributes a latency sample.
+    Refused(String),
+    /// No reply at all after retries (connection died) — must be zero
+    /// in a healthy run.
+    Lost,
+}
+
+/// Classify a protocol reply: `{"ok":true,...}` is served, anything
+/// else is a refusal keyed by its `error` code.
+pub fn classify(resp: &Json) -> Outcome {
+    if resp.opt("ok") == Some(&Json::Bool(true)) {
+        return Outcome::Ok;
+    }
+    let kind =
+        resp.opt("error").and_then(|e| e.str().ok()).unwrap_or("malformed_reply").to_string();
+    Outcome::Refused(kind)
+}
+
+/// Per-scenario accounting. The load-bearing invariant: `lat_us` only
+/// ever holds served requests — refusals and losses are counted in
+/// their own buckets so overload can never flatter the latency
+/// percentiles (covered by `refusals_never_become_latency_samples`).
+#[derive(Debug, Clone, Default)]
+pub struct Bucket {
+    /// Scheduled requests attempted (== ok + refused + lost).
+    pub sent: u64,
+    pub ok: u64,
+    /// Requests whose FINAL outcome was a refusal.
+    pub refused: u64,
+    /// Requests that got no reply at all (after retries).
+    pub lost: u64,
+    /// Deliberate churn reconnects (not failures).
+    pub reconnects: u64,
+    /// Every refusal reply observed, by `error` code — includes
+    /// transient `too_many_connections` lines that a retry then
+    /// converted into a served request, so this can exceed `refused`.
+    pub refusal_kinds: BTreeMap<String, u64>,
+    /// Latency samples (µs), measured from the SCHEDULED send time —
+    /// served requests only.
+    pub lat_us: Vec<u64>,
+}
+
+impl Bucket {
+    /// Note a refusal reply without deciding the request's outcome
+    /// (transient, retried refusals).
+    pub fn note_refusal(&mut self, kind: &str) {
+        *self.refusal_kinds.entry(kind.to_string()).or_insert(0) += 1;
+    }
+
+    /// Record the final outcome of one scheduled request. `lat_us` is
+    /// schedule-to-reply and is kept ONLY for served requests.
+    pub fn record(&mut self, outcome: &Outcome, lat_us: u64) {
+        self.sent += 1;
+        match outcome {
+            Outcome::Ok => {
+                self.ok += 1;
+                self.lat_us.push(lat_us);
+            }
+            Outcome::Refused(kind) => {
+                self.refused += 1;
+                self.note_refusal(kind);
+            }
+            Outcome::Lost => self.lost += 1,
+        }
+    }
+
+    pub fn merge(&mut self, other: &Bucket) {
+        self.sent += other.sent;
+        self.ok += other.ok;
+        self.refused += other.refused;
+        self.lost += other.lost;
+        self.reconnects += other.reconnects;
+        for (k, v) in &other.refusal_kinds {
+            *self.refusal_kinds.entry(k.clone()).or_insert(0) += v;
+        }
+        self.lat_us.extend_from_slice(&other.lat_us);
+    }
+
+    /// Latency percentile in ms at per-mille rank (500 = p50, 990 =
+    /// p99, 999 = p99.9); 0.0 when no request was served.
+    pub fn p_ms(&self, q_mille: usize) -> f64 {
+        percentile_mille(&self.lat_us, q_mille).unwrap_or(0) as f64 / 1e3
+    }
+}
+
+// ---------------------------------------------------------------------
+// The user hot loop.
+
+/// Shared per-run context for user threads.
+#[derive(Clone)]
+struct RunCtx {
+    addr: String,
+    t0: Instant,
+    model: ModelConfig,
+    comp_len: usize,
+    input_max: usize,
+    topk: usize,
+}
+
+struct UserConn {
+    addr: String,
+    client: Option<Client>,
+}
+
+impl UserConn {
+    fn get(&mut self) -> Result<&mut Client> {
+        if self.client.is_none() {
+            let mut last: Option<anyhow::Error> = None;
+            for _ in 0..CONNECT_ATTEMPTS {
+                match Client::connect(&self.addr) {
+                    Ok(c) => return Ok(self.client.get_or_insert(c)),
+                    Err(e) => {
+                        last = Some(e);
+                        std::thread::sleep(RETRY_BACKOFF);
+                    }
+                }
+            }
+            match last {
+                Some(e) => return Err(e),
+                None => bail!("connect {} failed", self.addr),
+            }
+        }
+        self.client.as_mut().context("connection present")
+    }
+
+    fn drop_conn(&mut self) {
+        self.client = None;
+    }
+}
+
+fn context_req(session: &str, tokens: &[i32]) -> String {
+    format!(
+        "{{\"op\":\"context\",\"session\":{},\"tokens\":{}}}",
+        escape(session),
+        fmt_tokens(tokens)
+    )
+}
+
+fn query_req(session: &str, tokens: &[i32], topk: usize) -> String {
+    format!(
+        "{{\"op\":\"query\",\"session\":{},\"tokens\":{},\"topk\":{topk}}}",
+        escape(session),
+        fmt_tokens(tokens)
+    )
+}
+
+/// Send one scheduled request with the connection-level retry budget.
+/// `too_many_connections` means the ACCEPT was refused (the request
+/// never reached a handler), so it reconnects and retries — noting the
+/// refusal reply — while admission refusals are final: an open-loop
+/// generator takes the server's no for an answer instead of piling
+/// retries onto an overloaded shard.
+fn exec_event(conn: &mut UserConn, req: &str, bucket: &mut Bucket) -> (Outcome, Option<Json>) {
+    for attempt in 0..EVENT_ATTEMPTS {
+        let client = match conn.get() {
+            Ok(c) => c,
+            Err(_) => continue,
+        };
+        match client.call(req) {
+            Ok(resp) => match classify(&resp) {
+                Outcome::Ok => return (Outcome::Ok, Some(resp)),
+                Outcome::Refused(kind) => {
+                    if kind == "too_many_connections" {
+                        conn.drop_conn();
+                        if attempt + 1 < EVENT_ATTEMPTS {
+                            bucket.note_refusal(&kind);
+                            std::thread::sleep(RETRY_BACKOFF);
+                            continue;
+                        }
+                    }
+                    return (Outcome::Refused(kind), None);
+                }
+                Outcome::Lost => return (Outcome::Lost, None),
+            },
+            Err(_) => {
+                // EOF / reset mid-exchange: the reply is gone for good
+                // (replies are not idempotent to re-request for
+                // context ops — but a context chunk that was never
+                // acked was never admitted, so resending is safe).
+                conn.drop_conn();
+                std::thread::sleep(RETRY_BACKOFF);
+            }
+        }
+    }
+    (Outcome::Lost, None)
+}
+
+/// One sampled user's scored probe.
+#[derive(Debug, Clone)]
+pub struct QualitySample {
+    /// ROUGE-L F1 of the greedy compressed-memory continuation vs the
+    /// full-context reference continuation.
+    pub rouge_l: f64,
+    /// Analytic full-context peak KV (memacct, `Method::Full`).
+    pub kv_full_bytes: u64,
+    /// Analytic CCM-concat peak KV at the same shape.
+    pub kv_ccm_bytes: u64,
+    /// Live compressed-KV bytes from the session's last context ack.
+    pub kv_live_bytes: u64,
+    pub gen_len: usize,
+    pub probes: u64,
+    pub probes_refused: u64,
+}
+
+/// Aggregate quality view over all sampled users.
+#[derive(Debug, Clone, Default)]
+pub struct QualityStats {
+    pub samples: usize,
+    pub rouge_mean: f64,
+    pub kv_full_mean: f64,
+    pub kv_ccm_mean: f64,
+    pub kv_live_mean: f64,
+    /// Mean full/ccm peak-KV ratio — the paper's memory-saving factor
+    /// at the replayed session shapes.
+    pub kv_ratio_mean: f64,
+    pub gen_tokens: usize,
+    pub probes: u64,
+    pub probes_refused: u64,
+}
+
+impl QualityStats {
+    fn from_samples(samples: &[QualitySample]) -> QualityStats {
+        if samples.is_empty() {
+            return QualityStats::default();
+        }
+        let mut out = QualityStats { samples: samples.len(), ..QualityStats::default() };
+        for s in samples {
+            out.rouge_mean += s.rouge_l;
+            out.kv_full_mean += s.kv_full_bytes as f64;
+            out.kv_ccm_mean += s.kv_ccm_bytes as f64;
+            out.kv_live_mean += s.kv_live_bytes as f64;
+            out.kv_ratio_mean += s.kv_full_bytes as f64 / s.kv_ccm_bytes.max(1) as f64;
+            out.gen_tokens += s.gen_len;
+            out.probes += s.probes;
+            out.probes_refused += s.probes_refused;
+        }
+        let n = samples.len() as f64;
+        out.rouge_mean /= n;
+        out.kv_full_mean /= n;
+        out.kv_ccm_mean /= n;
+        out.kv_live_mean /= n;
+        out.kv_ratio_mean /= n;
+        out
+    }
+}
+
+fn top1_token(resp: &Json) -> Option<i32> {
+    let next = resp.opt("next")?.arr().ok()?;
+    let pair = next.first()?.arr().ok()?;
+    Some(pair.first()?.i64().ok()? as i32)
+}
+
+/// Greedy continuation over the session's compressed memory, scored
+/// against the full-context reference. Probe round trips are unpaced
+/// bookkeeping, not scheduled load — they never touch the latency
+/// pool.
+fn score_quality(
+    conn: &mut UserConn,
+    ctx: &RunCtx,
+    session: &str,
+    probe: &QualityProbe,
+    chunk_lens: &[usize],
+    kv_live: u64,
+) -> Option<QualitySample> {
+    if probe.target.is_empty() || probe.input.is_empty() || chunk_lens.is_empty() {
+        return None;
+    }
+    let budget =
+        GEN_BUDGET.min(probe.target.len()).min(ctx.input_max.saturating_sub(probe.input.len()));
+    let mut toks = probe.input.clone();
+    let mut generated = Vec::new();
+    let mut probes = 0u64;
+    let mut probes_refused = 0u64;
+    for _ in 0..budget {
+        if toks.len() >= ctx.input_max {
+            break;
+        }
+        probes += 1;
+        let Ok(client) = conn.get() else { break };
+        let req = query_req(session, &toks, 1);
+        let Ok(resp) = client.call(&req) else { break };
+        match classify(&resp) {
+            Outcome::Ok => match top1_token(&resp) {
+                Some(tok) => {
+                    generated.push(tok);
+                    toks.push(tok);
+                }
+                None => break,
+            },
+            _ => {
+                probes_refused += 1;
+                break;
+            }
+        }
+    }
+    let rouge_l =
+        if generated.is_empty() { 0.0 } else { rouge::rouge_l(&generated, &probe.target) };
+    let li = probe.input.len();
+    let kv_full =
+        memacct::peak_kv_bytes(&ctx.model, Method::Full, chunk_lens, li, ctx.comp_len) as u64;
+    let kv_ccm =
+        memacct::peak_kv_bytes(&ctx.model, Method::CcmConcat, chunk_lens, li, ctx.comp_len) as u64;
+    Some(QualitySample {
+        rouge_l,
+        kv_full_bytes: kv_full,
+        kv_ccm_bytes: kv_ccm,
+        kv_live_bytes: kv_live,
+        gen_len: generated.len(),
+        probes,
+        probes_refused,
+    })
+}
+
+struct UserResult {
+    workload: Workload,
+    bucket: Bucket,
+    quality: Option<QualitySample>,
+}
+
+fn run_user(ctx: &RunCtx, plan: UserPlan) -> UserResult {
+    let mut conn = UserConn { addr: ctx.addr.clone(), client: None };
+    let mut bucket = Bucket::default();
+    let mut chunk_lens: Vec<usize> = Vec::new();
+    let mut kv_live = 0u64;
+    for ev in &plan.events {
+        let sched = ctx.t0 + ev.at;
+        let now = Instant::now();
+        if sched > now {
+            std::thread::sleep(sched - now);
+        }
+        let req = match &ev.kind {
+            EventKind::Context { tokens } => context_req(&plan.session, tokens),
+            EventKind::Query { tokens } => query_req(&plan.session, tokens, ctx.topk),
+        };
+        let (outcome, resp) = exec_event(&mut conn, &req, &mut bucket);
+        let lat_us = Instant::now().saturating_duration_since(sched).as_micros() as u64;
+        bucket.record(&outcome, lat_us);
+        if let (EventKind::Context { tokens }, Some(resp)) = (&ev.kind, resp.as_ref()) {
+            chunk_lens.push(tokens.len());
+            if let Some(kv) = resp.opt("kv_bytes").and_then(|v| v.usize().ok()) {
+                kv_live = kv as u64;
+            }
+        }
+        if ev.churn_after {
+            conn.drop_conn();
+            bucket.reconnects += 1;
+        }
+    }
+    let quality = match plan.quality.as_ref() {
+        Some(probe) => score_quality(&mut conn, ctx, &plan.session, probe, &chunk_lens, kv_live),
+        None => None,
+    };
+    UserResult { workload: plan.workload, bucket, quality }
+}
+
+// ---------------------------------------------------------------------
+// Driving a population and aggregating the run.
+
+/// Per-workload slice of a run.
+#[derive(Debug, Clone)]
+pub struct ScenarioSummary {
+    pub workload: Workload,
+    pub users: usize,
+    pub bucket: Bucket,
+}
+
+/// Everything a loadgen run produced.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub users: usize,
+    pub wall_secs: f64,
+    pub scenarios: Vec<ScenarioSummary>,
+    pub total: Bucket,
+    pub quality: QualityStats,
+}
+
+/// Replay `spec` against the server at `addr`. `manifest` supplies the
+/// scenario shapes the generators synthesize at (chunk/input caps,
+/// vocab) and the model geometry for KV accounting — it must match
+/// what the server was configured with.
+pub fn drive(addr: &str, manifest: &Manifest, spec: &LoadSpec) -> Result<RunSummary> {
+    let plans = build_plans(manifest, spec)?;
+    let mut user_counts: BTreeMap<Workload, usize> = BTreeMap::new();
+    for plan in &plans {
+        *user_counts.entry(plan.workload).or_insert(0) += 1;
+    }
+    let ctx = RunCtx {
+        addr: addr.to_string(),
+        // Epoch slightly ahead of spawn so no user starts already late.
+        t0: Instant::now() + Duration::from_millis(50),
+        model: manifest.model.clone(),
+        comp_len: manifest.scenario.comp_len_max,
+        input_max: manifest.scenario.input_max,
+        topk: spec.topk,
+    };
+    let mut handles = Vec::with_capacity(plans.len());
+    for plan in plans {
+        let ctx = ctx.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("loadgen-u{}", plan.user))
+            .stack_size(USER_STACK)
+            .spawn(move || run_user(&ctx, plan))
+            .context("spawn loadgen user thread")?;
+        handles.push(handle);
+    }
+    let mut scenarios: BTreeMap<Workload, ScenarioSummary> = BTreeMap::new();
+    let mut total = Bucket::default();
+    let mut samples = Vec::new();
+    for handle in handles {
+        let Ok(result) = handle.join() else { bail!("loadgen user thread panicked") };
+        total.merge(&result.bucket);
+        let entry = scenarios.entry(result.workload).or_insert_with(|| ScenarioSummary {
+            workload: result.workload,
+            users: user_counts.get(&result.workload).copied().unwrap_or(0),
+            bucket: Bucket::default(),
+        });
+        entry.bucket.merge(&result.bucket);
+        if let Some(s) = result.quality {
+            samples.push(s);
+        }
+    }
+    let wall_secs = Instant::now().saturating_duration_since(ctx.t0).as_secs_f64();
+    Ok(RunSummary {
+        users: spec.users,
+        wall_secs,
+        scenarios: scenarios.into_values().collect(),
+        total,
+        quality: QualityStats::from_samples(&samples),
+    })
+}
+
+// ---------------------------------------------------------------------
+// Report emission (docs/BENCH.md schema) and the `ccm bench` scenario.
+
+fn scenario_row(
+    name: &str,
+    users: usize,
+    bucket: &Bucket,
+    wall_secs: f64,
+    quality: Option<&QualityStats>,
+) -> Scenario {
+    let mut sc = Scenario::new(name, None);
+    sc.push("users", users as f64);
+    sc.push("requests", bucket.sent as f64);
+    // Served-per-second, deliberately not sent-per-second: a refusal
+    // storm must read as a throughput drop, not a throughput spike.
+    sc.push("reqs_per_sec", bucket.ok as f64 / wall_secs.max(1e-9));
+    sc.push("p50_ms", bucket.p_ms(500));
+    sc.push("p99_ms", bucket.p_ms(990));
+    sc.push("p999_ms", bucket.p_ms(999));
+    sc.push("refused", bucket.refused as f64);
+    sc.push("lost", bucket.lost as f64);
+    sc.push("reconnects", bucket.reconnects as f64);
+    if let Some(q) = quality {
+        sc.push("quality_samples", q.samples as f64);
+        sc.push("rouge_mean", q.rouge_mean);
+        sc.push("kv_full_kb_mean", q.kv_full_mean / 1024.0);
+        sc.push("kv_live_kb_mean", q.kv_live_mean / 1024.0);
+        sc.push("kv_ratio_mean", q.kv_ratio_mean);
+    }
+    sc
+}
+
+/// The aggregate scenario row: `loadgen-mixed` for a mixed population,
+/// `loadgen-<workload>` for a single-workload run.
+pub fn aggregate_scenario(summary: &RunSummary) -> Scenario {
+    let name = match summary.scenarios.as_slice() {
+        [only] => format!("loadgen-{}", only.workload.name()),
+        _ => "loadgen-mixed".to_string(),
+    };
+    scenario_row(&name, summary.users, &summary.total, summary.wall_secs, Some(&summary.quality))
+}
+
+/// Full Report for `--emit`: one row per workload (when mixed) plus
+/// the aggregate row carrying the quality metrics.
+pub fn to_report(summary: &RunSummary) -> Report {
+    let mut report = Report::new(8);
+    if summary.scenarios.len() > 1 {
+        for s in &summary.scenarios {
+            report.scenarios.push(scenario_row(
+                &format!("loadgen-{}", s.workload.name()),
+                s.users,
+                &s.bucket,
+                summary.wall_secs,
+                None,
+            ));
+        }
+    }
+    report.scenarios.push(aggregate_scenario(summary));
+    report
+}
+
+fn print_summary(summary: &RunSummary) {
+    let row = |name: &str, users: usize, b: &Bucket| -> Vec<String> {
+        vec![
+            name.to_string(),
+            users.to_string(),
+            b.sent.to_string(),
+            b.ok.to_string(),
+            b.refused.to_string(),
+            b.lost.to_string(),
+            b.reconnects.to_string(),
+            format!("{:.3}", b.p_ms(500)),
+            format!("{:.3}", b.p_ms(990)),
+            format!("{:.3}", b.p_ms(999)),
+        ]
+    };
+    let mut rows: Vec<Vec<String>> = summary
+        .scenarios
+        .iter()
+        .map(|s| row(s.workload.name(), s.users, &s.bucket))
+        .collect();
+    if summary.scenarios.len() > 1 {
+        rows.push(row("total", summary.users, &summary.total));
+    }
+    print_table(
+        "loadgen",
+        &[
+            "scenario", "users", "sent", "ok", "refused", "lost", "reconn", "p50 ms", "p99 ms",
+            "p99.9 ms",
+        ],
+        &rows,
+    );
+    if !summary.total.refusal_kinds.is_empty() {
+        let kinds: Vec<String> = summary
+            .total
+            .refusal_kinds
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect();
+        println!("refusal replies: {}", kinds.join(" "));
+    }
+    let q = &summary.quality;
+    if q.samples > 0 {
+        println!(
+            "quality: {} sampled sessions, rouge-l {:.3}, peak-KV full {:.1} KiB vs ccm {:.1} \
+             KiB ({:.2}x), live {:.1} KiB, {} gen tokens ({} probes, {} refused)",
+            q.samples,
+            q.rouge_mean,
+            q.kv_full_mean / 1024.0,
+            q.kv_ccm_mean / 1024.0,
+            q.kv_ratio_mean,
+            q.kv_live_mean / 1024.0,
+            q.gen_tokens,
+            q.probes,
+            q.probes_refused,
+        );
+    }
+    println!(
+        "wall {:.2}s, {:.0} req/s offered, {} served / {} refused / {} lost",
+        summary.wall_secs,
+        summary.total.sent as f64 / summary.wall_secs.max(1e-9),
+        summary.total.ok,
+        summary.total.refused,
+        summary.total.lost,
+    );
+}
+
+/// Spin up the self-serve SimCompute server `ccm loadgen` drives when
+/// no `--addr` is given: `shards` in-process shard executors behind
+/// the standard front-end at the bench-manifest shapes, `delay_us`
+/// simulated compute per batch.
+fn self_serve(
+    shards: usize,
+    delay_us: u64,
+) -> Result<(String, std::thread::JoinHandle<Result<()>>)> {
+    let cfg = super::serving::bench_cfg();
+    let (ready_tx, ready_rx) = channel();
+    let handle = std::thread::spawn(move || {
+        let manifest = super::serving::bench_manifest();
+        let factories: Vec<BackendFactory<'static>> = (0..shards)
+            .map(|_| {
+                let sim = super::serving::bench_sim(&manifest, delay_us);
+                let factory: BackendFactory<'static> =
+                    Box::new(move || Ok(Box::new(sim) as Box<dyn Compute>));
+                factory
+            })
+            .collect();
+        serve_sharded(&manifest, factories, cfg, Some(ready_tx))
+    });
+    let addr = ready_rx.recv().context("loadgen self-serve server ready")?;
+    Ok((addr, handle))
+}
+
+/// The pinned `loadgen-mixed` trajectory scenario for `ccm bench`
+/// (docs/BENCH.md): a mixed population against a self-served 2-shard
+/// SimCompute server.
+pub fn bench_scenario(users: usize, seed: u64) -> Result<Scenario> {
+    let spec = LoadSpec {
+        users,
+        mix: Mix::mixed(),
+        rate: 600.0,
+        seed,
+        churn: 0.05,
+        quality_every: 8,
+        ramp_secs: 0.25,
+        stream_len_max: 8,
+        topk: 3,
+    };
+    let manifest = super::serving::bench_manifest();
+    let (addr, server) = self_serve(2, 100)?;
+    let summary = drive(&addr, &manifest, &spec)?;
+    let mut admin = Client::connect(&addr)?;
+    admin.shutdown()?;
+    // lint: allow(unwrap) — a panicked server thread is a bench bug;
+    // re-raise it.
+    server.join().expect("loadgen bench server thread")?;
+    if summary.total.lost > 0 {
+        bail!("loadgen lost {} replies; the numbers would be meaningless", summary.total.lost);
+    }
+    Ok(aggregate_scenario(&summary))
+}
+
+/// `ccm loadgen` entry point (dispatched from `cli_loadgen`). Without
+/// `--addr` it self-serves a `--shards`-way SimCompute server so the
+/// whole replay is one command; with `--addr` it drives an external
+/// `ccm serve` instance over the same client protocol.
+pub fn run(args: &Args) -> Result<()> {
+    let spec = LoadSpec::from_args(args)?;
+    let manifest = super::serving::bench_manifest();
+    let (summary, server) = match args.flags.get("addr") {
+        Some(addr) => (drive(addr, &manifest, &spec)?, None),
+        None => {
+            let shards = args.usize("shards", 2)?.max(1);
+            let delay_us = args.u64("sim-delay-us", 100)?;
+            let (addr, handle) = self_serve(shards, delay_us)?;
+            let summary = drive(&addr, &manifest, &spec)?;
+            let mut admin = Client::connect(&addr)?;
+            admin.shutdown()?;
+            (summary, Some(handle))
+        }
+    };
+    if let Some(handle) = server {
+        // lint: allow(unwrap) — a panicked self-serve server thread is
+        // a loadgen bug; re-raise it.
+        handle.join().expect("loadgen self-serve server thread")?;
+    }
+    print_summary(&summary);
+    if let Some(path) = args.flags.get("emit") {
+        let report = to_report(&summary);
+        std::fs::write(path, report.to_json()).with_context(|| format!("write {path}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn refusals_never_become_latency_samples() {
+        let mut b = Bucket::default();
+        b.record(&Outcome::Ok, 1200);
+        b.record(&Outcome::Refused("too_many_connections".into()), 9999);
+        b.record(&Outcome::Refused("overloaded".into()), 8888);
+        b.record(&Outcome::Lost, 7777);
+        assert_eq!(b.sent, 4);
+        assert_eq!(b.ok, 1);
+        assert_eq!(b.refused, 2);
+        assert_eq!(b.lost, 1);
+        assert_eq!(b.lat_us, vec![1200], "only the served request may contribute latency");
+        assert_eq!(b.refusal_kinds.get("too_many_connections"), Some(&1));
+        assert_eq!(b.refusal_kinds.get("overloaded"), Some(&1));
+        // A transient refusal that a retry later converts to Ok still
+        // shows up in the kind breakdown but not as a refused event.
+        let mut b = Bucket::default();
+        b.note_refusal("too_many_connections");
+        b.record(&Outcome::Ok, 450);
+        assert_eq!((b.sent, b.ok, b.refused), (1, 1, 0));
+        assert_eq!(b.refusal_kinds.get("too_many_connections"), Some(&1));
+        assert_eq!(b.lat_us, vec![450]);
+    }
+
+    #[test]
+    fn classify_separates_served_from_refusals() {
+        let ok = Json::parse(r#"{"ok":true,"kind":"context","t":1,"kv_bytes":0}"#).unwrap();
+        assert_eq!(classify(&ok), Outcome::Ok);
+        let conns = Json::parse(r#"{"ok":false,"error":"too_many_connections"}"#).unwrap();
+        assert_eq!(classify(&conns), Outcome::Refused("too_many_connections".into()));
+        let over = Json::parse(r#"{"ok":false,"error":"overloaded","pending":4}"#).unwrap();
+        assert_eq!(classify(&over), Outcome::Refused("overloaded".into()));
+        let junk = Json::parse(r#"{"ok":false}"#).unwrap();
+        assert_eq!(classify(&junk), Outcome::Refused("malformed_reply".into()));
+    }
+
+    #[test]
+    fn mix_apportionment_is_exact_and_covers_all_workloads() {
+        let assign = Mix::mixed().assign(200);
+        assert_eq!(assign.len(), 200);
+        for wl in Workload::ALL {
+            assert!(assign.contains(&wl), "{} missing from mixed/200", wl.name());
+        }
+        assert_eq!(Mix::mixed().assign(0).len(), 0);
+        assert_eq!(Mix::single(Workload::Dialog).assign(5), vec![Workload::Dialog; 5]);
+        let two = Mix::parse("dialog=1,metaicl=1").unwrap().assign(24);
+        assert_eq!(two.iter().filter(|w| **w == Workload::Dialog).count(), 12);
+        assert_eq!(two.iter().filter(|w| **w == Workload::MetaIcl).count(), 12);
+        assert!(Mix::parse("dialog=0").is_err());
+        assert!(Mix::parse("nope=1").is_err());
+    }
+
+    #[test]
+    fn heavy_tail_lengths_stay_in_bounds_and_skew_short() {
+        let mut rng = Rng::new(3);
+        let mut lens = Vec::new();
+        for _ in 0..500 {
+            lens.push(heavy_tail_len(&mut rng, 2, 16, 1.5));
+        }
+        assert!(lens.iter().all(|&l| (2..=16).contains(&l)));
+        let short = lens.iter().filter(|&&l| l <= 4).count();
+        assert!(short > 250, "heavy tail must skew short ({short}/500 <= 4)");
+        assert!(lens.iter().any(|&l| l >= 8), "the tail must reach deep sessions");
+        assert_eq!(heavy_tail_len(&mut rng, 2, 2, 1.5), 2);
+    }
+
+    #[test]
+    fn plans_are_deterministic_and_monotonically_scheduled() {
+        let manifest = crate::model::Manifest::toy();
+        let spec = LoadSpec {
+            users: 12,
+            mix: Mix::mixed(),
+            rate: 100.0,
+            seed: 11,
+            churn: 0.2,
+            quality_every: 4,
+            ramp_secs: 0.2,
+            stream_len_max: 6,
+            topk: 3,
+        };
+        let a = build_plans(&manifest, &spec).unwrap();
+        let b = build_plans(&manifest, &spec).unwrap();
+        assert_eq!(a, b, "plans must be a pure function of (seed, spec)");
+        assert_eq!(a.len(), 12);
+        for plan in &a {
+            assert!(!plan.events.is_empty());
+            for w in plan.events.windows(2) {
+                assert!(w[0].at <= w[1].at, "per-user schedule must be monotone");
+            }
+            assert!(plan.session.starts_with(plan.workload.name()));
+        }
+        // Sampled users carry a probe (the dialog/stream targets are
+        // always non-empty).
+        assert!(a.iter().any(|p| p.quality.is_some()));
+        assert!(a.iter().filter(|p| p.user % 4 != 0).all(|p| p.quality.is_none()));
+    }
+
+    #[test]
+    fn report_rows_compose_with_the_bench_schema() {
+        let mut bucket = Bucket::default();
+        bucket.record(&Outcome::Ok, 900);
+        bucket.record(&Outcome::Ok, 1100);
+        bucket.record(&Outcome::Refused("overloaded".into()), 5000);
+        let summary = RunSummary {
+            users: 2,
+            wall_secs: 1.0,
+            scenarios: vec![
+                ScenarioSummary {
+                    workload: Workload::Dialog,
+                    users: 1,
+                    bucket: bucket.clone(),
+                },
+                ScenarioSummary { workload: Workload::Stream, users: 1, bucket: bucket.clone() },
+            ],
+            total: bucket,
+            quality: QualityStats { samples: 1, rouge_mean: 0.5, ..QualityStats::default() },
+        };
+        let report = to_report(&summary);
+        let parsed = Report::parse(&report.to_json()).expect("schema-valid report");
+        assert_eq!(parsed.pr, 8);
+        let agg = parsed.find("loadgen-mixed", None).expect("aggregate row");
+        assert_eq!(agg.metric("refused"), Some(1.0));
+        assert_eq!(agg.metric("quality_samples"), Some(1.0));
+        assert!(agg.metric("p99_ms").is_some());
+        let dialog = parsed.find("loadgen-dialog", None).expect("per-scenario row");
+        assert!(dialog.metric("p50_ms").is_some());
+        assert!(parsed.find("loadgen-stream", None).is_some());
+    }
+}

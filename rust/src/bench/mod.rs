@@ -6,6 +6,7 @@
 //! Every driver prints the table and appends it to `results/<exp>.md`.
 
 pub mod experiments;
+pub mod loadgen;
 pub mod serving;
 
 /// All experiments share one base LM pretrained on the full mixture —

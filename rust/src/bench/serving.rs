@@ -11,6 +11,11 @@
 //!   json-vs-binary delta is the codec's cost on the wire.
 //! * `stress-profile` — wider concurrent fan-in with a faster backend,
 //!   profiling the tail (`round_p99_ms`) rather than throughput.
+//! * `loadgen-mixed` — the paper-workload traffic replay
+//!   ([`super::loadgen`], docs/SCENARIOS.md): a pinned mixed
+//!   multi-tenant population against a 2-shard server, reporting
+//!   open-loop latency percentiles, refusal counts, and sampled
+//!   compression-quality signals.
 //!
 //! `--emit PATH` writes the machine-readable `BENCH_<n>.json` report
 //! ([`Report`]; schema in docs/BENCH.md). `--compare OLD --against
@@ -60,12 +65,14 @@ pub fn run(args: &Args) -> Result<()> {
     let rounds = args.usize("rounds", 120)?;
     let stress_clients = args.usize("stress-clients", 32)?;
     let stress_rounds = args.usize("stress-rounds", 40)?;
-    let mut report = Report::new(7);
+    let loadgen_users = args.usize("loadgen-users", 64)?;
+    let mut report = Report::new(8);
     report.scenarios.push(scenario_inprocess("serve-throughput", clients, rounds, 200)?);
     report.scenarios.push(scenario_ipc(IpcCodec::Json, clients, rounds)?);
     report.scenarios.push(scenario_ipc(IpcCodec::Binary, clients, rounds)?);
     let stress = scenario_inprocess("stress-profile", stress_clients, stress_rounds, 50)?;
     report.scenarios.push(stress);
+    report.scenarios.push(super::loadgen::bench_scenario(loadgen_users, 7)?);
     let metric = |sc: &Scenario, name: &str| match sc.metric(name) {
         Some(v) => format!("{v:.3}"),
         None => "-".into(),
@@ -74,11 +81,18 @@ pub fn run(args: &Args) -> Result<()> {
         .scenarios
         .iter()
         .map(|sc| {
+            // The loadgen scenario reports open-loop request metrics
+            // under its own names (docs/BENCH.md).
+            let (rate, p50, p99) = if sc.name.starts_with("loadgen") {
+                ("reqs_per_sec", "p50_ms", "p99_ms")
+            } else {
+                ("rounds_per_sec", "round_p50_ms", "round_p99_ms")
+            };
             vec![
                 sc.label(),
-                metric(sc, "rounds_per_sec"),
-                metric(sc, "round_p50_ms"),
-                metric(sc, "round_p99_ms"),
+                metric(sc, rate),
+                metric(sc, p50),
+                metric(sc, p99),
                 metric(sc, "ipc_rtt_p50_ms"),
                 metric(sc, "ipc_rtt_p99_ms"),
             ]
@@ -125,7 +139,7 @@ pub fn compare(old: &Report, new: &Report) -> (String, Vec<String>) {
         let base = old.find(&sc.name, sc.codec.as_deref());
         for (metric, value) in &sc.metrics {
             // Run-shape parameters, not measurements.
-            if matches!(metric.as_str(), "clients" | "rounds" | "workers") {
+            if matches!(metric.as_str(), "clients" | "rounds" | "workers" | "users" | "requests") {
                 continue;
             }
             let Some(prev) = base.and_then(|b| b.metric(metric)) else {
@@ -315,7 +329,7 @@ fn wait_workers_up(addr: &str, workers: usize) -> Result<()> {
     }
 }
 
-fn bench_cfg() -> ServerConfig {
+pub(crate) fn bench_cfg() -> ServerConfig {
     let scenario = bench_scenario();
     let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(scenario.comp_len_max));
     cfg.max_batch = 8;
@@ -324,7 +338,7 @@ fn bench_cfg() -> ServerConfig {
     cfg
 }
 
-fn bench_sim(manifest: &Manifest, delay_us: u64) -> SimCompute {
+pub(crate) fn bench_sim(manifest: &Manifest, delay_us: u64) -> SimCompute {
     let mut sim = SimCompute::from_manifest(manifest);
     sim.compress_delay = Duration::from_micros(delay_us);
     sim.infer_delay = Duration::from_micros(delay_us);
@@ -350,7 +364,7 @@ fn bench_scenario() -> ScenarioConfig {
     }
 }
 
-fn bench_manifest() -> Manifest {
+pub(crate) fn bench_manifest() -> Manifest {
     use crate::model::manifest::{ModelConfig, ParamLayout};
     Manifest {
         config_name: "bench".into(),

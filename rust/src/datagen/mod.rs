@@ -15,6 +15,11 @@
 //!
 //! All generators are deterministic functions of (dataset seed, identity,
 //! time step) and split identities into train/test sets.
+//!
+//! Besides offline eval, these generators are the traffic source for
+//! `ccm loadgen` (`crate::bench::loadgen`): each workload replays as a
+//! population of live serving sessions — the scenario-by-scenario
+//! operator guide is docs/SCENARIOS.md.
 
 pub mod corpus;
 pub mod dialog;

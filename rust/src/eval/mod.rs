@@ -2,6 +2,12 @@
 //! MetaICL protocol), perplexity, RougeL generation, and the per-method
 //! KV-memory accounting — everything Figures 6/7/10 and Tables 5-9/15-25
 //! are built from.
+//!
+//! The same machinery scores LIVE traffic: `ccm loadgen`
+//! (`crate::bench::loadgen`) samples sessions mid-replay and reuses
+//! [`rouge`] + [`memacct`] to report compression quality under load —
+//! docs/SCENARIOS.md maps each paper table/figure to its serving
+//! scenario.
 
 pub mod memacct;
 pub mod rouge;

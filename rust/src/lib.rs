@@ -375,11 +375,12 @@ pub fn cli_stream(args: &Args) -> Result<()> {
     bench::experiments::fig8_streaming(&mut ctx, args)
 }
 
-/// `ccm bench [--clients 8] [--rounds 120] [--emit BENCH_7.json]` —
+/// `ccm bench [--clients 8] [--rounds 120] [--emit BENCH_8.json]` —
 /// serving-layer benchmark scenarios over the SimCompute backend (no
 /// artifacts needed): in-process serve throughput, the 2-worker IPC
 /// hop under BOTH `--ipc-codec` values (with the proxy's RTT p50/p99),
-/// and a wide-fan-in stress profile. `--emit PATH` writes the
+/// a wide-fan-in stress profile, and the pinned `loadgen-mixed`
+/// paper-workload replay (`--loadgen-users`). `--emit PATH` writes the
 /// machine-readable `BENCH_<n>.json` perf trajectory; `ccm bench
 /// --compare OLD --against NEW` renders the markdown delta table CI
 /// puts in its job summary (nonzero exit past the RTT p99 budget).
@@ -387,6 +388,21 @@ pub fn cli_stream(args: &Args) -> Result<()> {
 /// their shard workers through.
 pub fn cli_bench(args: &Args) -> Result<()> {
     bench::serving::run(args)
+}
+
+/// `ccm loadgen` — open-loop multi-tenant traffic replay of the
+/// paper's workloads (conversation / LaMP / MetaICL / streaming)
+/// against a running `ccm serve` instance over the real client
+/// protocol, with per-scenario latency percentiles, a separate refusal
+/// bucket, and sampled compression-quality scoring (ROUGE-L + peak-KV
+/// accounting). Without `--addr` it self-serves a `--shards`-way
+/// SimCompute server. `--scenario mixed|dialog|lamp|metaicl|stream`
+/// or an explicit `--mix dialog=4,metaicl=2,...` picks the population;
+/// `--emit PATH` writes the `BENCH_<n>.json`-schema report. The
+/// operator handbook mapping each paper evaluation to its loadgen
+/// scenario is docs/SCENARIOS.md.
+pub fn cli_loadgen(args: &Args) -> Result<()> {
+    bench::loadgen::run(args)
 }
 
 /// `ccm reproduce --exp fig7|table1|...|all`

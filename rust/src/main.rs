@@ -6,6 +6,7 @@
 //!   serve      — run the JSON-lines TCP serving coordinator
 //!   worker     — run one shard executor process for a --workers serve
 //!   bench      — serving benchmarks; --emit writes BENCH_<n>.json
+//!   loadgen    — open-loop paper-workload traffic replay (docs/SCENARIOS.md)
 //!   stream     — streaming-mode perplexity (PG19-style, Figure 8)
 //!   reproduce  — regenerate a paper table/figure (see DESIGN.md §6)
 //!   info       — print manifest/runtime information
@@ -33,6 +34,7 @@ fn main() -> Result<()> {
                 "worker" => ccm::cli_worker(&args),
                 "stream" => ccm::cli_stream(&args),
                 "bench" => ccm::cli_bench(&args),
+                "loadgen" => ccm::cli_loadgen(&args),
                 "reproduce" => ccm::cli_reproduce(&args),
                 _ => {
                     print_help();
@@ -92,7 +94,10 @@ fn print_help() {
                  [--worker-addr a,b]    connect to externally-started workers\n\
                  [--eviction POLICY]    oldest | lru | largest-bytes\n\
            worker --shard K --shards N  run one shard executor process (IPC)\n\
-           bench --emit BENCH_7.json    serving benchmarks (json vs binary IPC)\n\
+           bench --emit BENCH_8.json    serving benchmarks (json vs binary IPC)\n\
+           loadgen --scenario mixed     open-loop paper-workload traffic replay\n\
+                 [--users N --rate R]   population size / aggregate req/s\n\
+                 [--addr HOST:PORT]     drive an external serve (else self-serve)\n\
            stream --budget 160          streaming perplexity (Figure 8)\n\
            reproduce --exp table1|fig7  regenerate a paper table/figure\n"
     );

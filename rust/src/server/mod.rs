@@ -229,6 +229,15 @@
 //! counters justified with `// ordering:`, and no `env::set_var` in
 //! tests.
 //!
+//! ## Operator docs
+//!
+//! `docs/ARCHITECTURE.md` distills the load-bearing invariants of this
+//! module tree (routing invariant, topology, failure contract, CI
+//! gates) with the request-lifecycle diagram; `docs/SCENARIOS.md` is
+//! the operator handbook for driving this server with the paper's
+//! workloads via `ccm loadgen` (`crate::bench::loadgen`) and reading
+//! the latency/refusal/compression-quality output.
+//!
 //! [`EvictionPolicy`]: crate::coordinator::session::EvictionPolicy
 
 mod executor;

@@ -75,6 +75,19 @@ pub fn percentile(samples: &[u64], q: usize) -> Option<u64> {
     Some(sorted[(sorted.len() - 1) * q.min(100) / 100])
 }
 
+/// The `q`-th per-mille percentile (0..=1000) of a raw sample set —
+/// [`percentile`] at 0.1% resolution, for tail metrics like p99.9
+/// (`q = 999`) where whole-percent ranks are too coarse. Nearest-rank,
+/// `None` when empty.
+pub fn percentile_mille(samples: &[u64], q: usize) -> Option<u64> {
+    if samples.is_empty() {
+        return None;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_unstable();
+    Some(sorted[(sorted.len() - 1) * q.min(1000) / 1000])
+}
+
 /// Pretty table printer used by the bench binaries.
 pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
     println!("\n== {title} ==");
@@ -224,5 +237,20 @@ mod tests {
         assert_eq!(percentile(&samples, 50), Some(50));
         assert_eq!(percentile(&samples, 99), Some(99));
         assert_eq!(percentile(&samples, 100), Some(100));
+    }
+
+    #[test]
+    fn percentile_mille_resolves_the_deep_tail() {
+        assert_eq!(percentile_mille(&[], 999), None);
+        assert_eq!(percentile_mille(&[7], 999), Some(7));
+        let samples: Vec<u64> = (1..=2000).rev().collect();
+        assert_eq!(percentile_mille(&samples, 500), Some(1000));
+        assert_eq!(percentile_mille(&samples, 990), Some(1980));
+        // p99.9 and p100 are distinct at this resolution — the whole
+        // point vs whole-percent `percentile`.
+        assert_eq!(percentile_mille(&samples, 999), Some(1998));
+        assert_eq!(percentile_mille(&samples, 1000), Some(2000));
+        // Agrees with `percentile` at whole-percent ranks.
+        assert_eq!(percentile_mille(&samples, 990), percentile(&samples, 99));
     }
 }
