@@ -600,6 +600,9 @@ fn is_core_path(file: &str) -> bool {
     f.contains("src/server/")
         || f.contains("src/coordinator/")
         || f.contains("src/model/")
+        // The per-session strategy seam (CompressionStrategy impls and
+        // tier configs) sits directly on the admission/batch hot path.
+        || f.contains("src/compress/")
         // The loadgen user hot loop runs thousands of concurrent
         // synthetic-user threads against live servers; a stray unwrap
         // there kills a whole user's replay mid-run.
@@ -613,7 +616,8 @@ fn is_poll_rs(file: &str) -> bool {
 /// Lint one file's source text. `file` is used both for reporting and
 /// for the path-scoped rules: the unwrap and lock-across-I/O rules
 /// police only live-traffic paths (`src/server/`, `src/coordinator/`,
-/// `src/model/`, and the `src/bench/loadgen.rs` replay hot loop), and
+/// `src/model/`, `src/compress/`, and the `src/bench/loadgen.rs`
+/// replay hot loop), and
 /// `poll.rs` is exempt from the raw-fd rule because it IS the RAII
 /// boundary the rule protects.
 pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {

@@ -12,6 +12,13 @@
 //! docs/SCENARIOS.md is the operator handbook mapping each paper
 //! evaluation to its loadgen scenario and flags.
 //!
+//! A mix entry may pin an admission tier (`--mix
+//! dialog@ccm=3,dialog@none=1`): those users send the `op:"context"`
+//! `strategy` field, so a single replay A/Bs compressed-vs-full
+//! serving under identical load, with separate latency/refusal
+//! buckets — and report rows — per (workload, tier) population
+//! ([`Tenant`]).
+//!
 //! ## Open-loop pacing (no coordinated omission)
 //!
 //! Every request has a pre-computed scheduled send time (per-user
@@ -58,7 +65,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::compress::Compute;
+use crate::compress::{Compute, StrategyKind};
 use crate::datagen::stream::StreamGen;
 use crate::datagen::{self, OnlineDataset, Split};
 use crate::eval::{memacct, rouge};
@@ -128,35 +135,63 @@ impl Workload {
     }
 }
 
+/// One population slice: a workload plus the admission tier its users
+/// request. `strategy: None` omits the `op:"context"` field so the
+/// session rides the server's default tier (the pre-tiering behavior).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Tenant {
+    pub workload: Workload,
+    pub strategy: Option<StrategyKind>,
+}
+
+impl Tenant {
+    pub fn untiered(workload: Workload) -> Tenant {
+        Tenant { workload, strategy: None }
+    }
+
+    /// Row label: `dialog` for an untiered slice, `dialog@ccm` for a
+    /// pinned tier (the same grammar `Mix::parse` accepts).
+    pub fn name(&self) -> String {
+        match self.strategy {
+            Some(k) => format!("{}@{}", self.workload.name(), k.name()),
+            None => self.workload.name().to_string(),
+        }
+    }
+}
+
 /// Weighted scenario population: how `--users` splits across
-/// workloads. Parsed from `--scenario mixed|<name>` or an explicit
-/// `--mix dialog=4,metaicl=2,...` weight list.
+/// workloads — and, optionally, across admission tiers. Parsed from
+/// `--scenario mixed|<name>` or an explicit `--mix
+/// dialog=4,metaicl=2,...` weight list where each entry may pin a
+/// tier: `dialog@ccm=3,dialog@none=1`.
 #[derive(Debug, Clone)]
 pub struct Mix {
-    pub weights: Vec<(Workload, f32)>,
+    pub weights: Vec<(Tenant, f32)>,
 }
 
 impl Mix {
     /// The default mixed population: conversation-heavy, with
     /// personalization and multi-task ICL side traffic and a thin
-    /// stream of long-lived readers (docs/SCENARIOS.md).
+    /// stream of long-lived readers (docs/SCENARIOS.md). Untiered:
+    /// every session serves under the server's default strategy.
     pub fn mixed() -> Mix {
         Mix {
             weights: vec![
-                (Workload::Dialog, 4.0),
-                (Workload::MetaIcl, 2.0),
-                (Workload::Lamp, 2.0),
-                (Workload::Stream, 1.0),
+                (Tenant::untiered(Workload::Dialog), 4.0),
+                (Tenant::untiered(Workload::MetaIcl), 2.0),
+                (Tenant::untiered(Workload::Lamp), 2.0),
+                (Tenant::untiered(Workload::Stream), 1.0),
             ],
         }
     }
 
     pub fn single(wl: Workload) -> Mix {
-        Mix { weights: vec![(wl, 1.0)] }
+        Mix { weights: vec![(Tenant::untiered(wl), 1.0)] }
     }
 
-    /// `"mixed"`, a single workload name, or `name=weight` pairs
-    /// (comma-separated, weights are relative).
+    /// `"mixed"`, a single workload name, or `name[@tier]=weight`
+    /// pairs (comma-separated, weights are relative; the tier names
+    /// are [`StrategyKind::parse`]'s).
     pub fn parse(spec: &str) -> Result<Mix> {
         if spec == "mixed" {
             return Ok(Mix::mixed());
@@ -171,15 +206,21 @@ impl Mix {
                 continue;
             }
             let Some((name, w)) = part.split_once('=') else {
-                bail!("bad mix entry {part:?} (want name=weight)");
+                bail!("bad mix entry {part:?} (want name[@tier]=weight)");
             };
-            let wl = Workload::parse(name.trim())?;
+            let tenant = match name.trim().split_once('@') {
+                Some((wl, tier)) => Tenant {
+                    workload: Workload::parse(wl.trim())?,
+                    strategy: Some(StrategyKind::parse(tier.trim())?),
+                },
+                None => Tenant::untiered(Workload::parse(name.trim())?),
+            };
             let weight: f32 =
                 w.trim().parse().map_err(|_| anyhow!("bad mix weight {w:?} in {part:?}"))?;
             if weight < 0.0 {
                 bail!("negative mix weight in {part:?}");
             }
-            weights.push((wl, weight));
+            weights.push((tenant, weight));
         }
         if !weights.iter().any(|(_, w)| *w > 0.0) {
             bail!("mix {spec:?} has no positive weight");
@@ -188,9 +229,9 @@ impl Mix {
     }
 
     /// Deterministic largest-remainder apportionment of `users` across
-    /// the weighted workloads (counts sum exactly to `users`).
-    pub fn assign(&self, users: usize) -> Vec<Workload> {
-        let active: Vec<(Workload, f32)> =
+    /// the weighted tenants (counts sum exactly to `users`).
+    pub fn assign(&self, users: usize) -> Vec<Tenant> {
+        let active: Vec<(Tenant, f32)> =
             self.weights.iter().copied().filter(|(_, w)| *w > 0.0).collect();
         if users == 0 || active.is_empty() {
             return Vec::new();
@@ -214,9 +255,9 @@ impl Mix {
             left -= 1;
         }
         let mut out = Vec::with_capacity(users);
-        for (i, (wl, _)) in active.iter().enumerate() {
+        for (i, (tenant, _)) in active.iter().enumerate() {
             for _ in 0..counts[i] {
-                out.push(*wl);
+                out.push(*tenant);
             }
         }
         out
@@ -313,7 +354,7 @@ pub struct QualityProbe {
 #[derive(Debug, Clone, PartialEq)]
 pub struct UserPlan {
     pub user: usize,
-    pub workload: Workload,
+    pub tenant: Tenant,
     pub session: String,
     pub events: Vec<Event>,
     pub quality: Option<QualityProbe>,
@@ -326,7 +367,8 @@ pub fn build_plans(manifest: &Manifest, spec: &LoadSpec) -> Result<Vec<UserPlan>
     let vocab = manifest.model.vocab;
     let assign = spec.mix.assign(spec.users);
     let mut datasets: BTreeMap<Workload, Box<dyn OnlineDataset>> = BTreeMap::new();
-    for &wl in &assign {
+    for t in &assign {
+        let wl = t.workload;
         if wl != Workload::Stream && !datasets.contains_key(&wl) {
             datasets.insert(wl, datagen::by_name(wl.name(), spec.seed, sc, vocab)?);
         }
@@ -335,7 +377,8 @@ pub fn build_plans(manifest: &Manifest, spec: &LoadSpec) -> Result<Vec<UserPlan>
     // whole population is active.
     let mean_gap = if spec.rate > 0.0 { spec.users as f64 / spec.rate as f64 } else { 0.0 };
     let mut plans = Vec::with_capacity(assign.len());
-    for (u, &wl) in assign.iter().enumerate() {
+    for (u, &tenant) in assign.iter().enumerate() {
+        let wl = tenant.workload;
         let mut rng = Rng::with_stream(spec.seed, u as u64);
         let mut at = Duration::from_secs_f64(rng.f64() * spec.ramp_secs.max(0.0));
         let mut events: Vec<Event> = Vec::new();
@@ -383,7 +426,7 @@ pub fn build_plans(manifest: &Manifest, spec: &LoadSpec) -> Result<Vec<UserPlan>
         }
         plans.push(UserPlan {
             user: u,
-            workload: wl,
+            tenant,
             session: format!("{}-u{u}", wl.name()),
             events,
             quality,
@@ -531,9 +574,13 @@ impl UserConn {
     }
 }
 
-fn context_req(session: &str, tokens: &[i32]) -> String {
+fn context_req(session: &str, tokens: &[i32], strategy: Option<StrategyKind>) -> String {
+    let strategy = match strategy {
+        Some(k) => format!(",\"strategy\":\"{}\"", k.name()),
+        None => String::new(),
+    };
     format!(
-        "{{\"op\":\"context\",\"session\":{},\"tokens\":{}}}",
+        "{{\"op\":\"context\",\"session\":{},\"tokens\":{}{strategy}}}",
         escape(session),
         fmt_tokens(tokens)
     )
@@ -715,7 +762,7 @@ fn score_quality(
 }
 
 struct UserResult {
-    workload: Workload,
+    tenant: Tenant,
     bucket: Bucket,
     quality: Option<QualitySample>,
 }
@@ -732,7 +779,9 @@ fn run_user(ctx: &RunCtx, plan: UserPlan) -> UserResult {
             std::thread::sleep(sched - now);
         }
         let req = match &ev.kind {
-            EventKind::Context { tokens } => context_req(&plan.session, tokens),
+            EventKind::Context { tokens } => {
+                context_req(&plan.session, tokens, plan.tenant.strategy)
+            }
             EventKind::Query { tokens } => query_req(&plan.session, tokens, ctx.topk),
         };
         let (outcome, resp) = exec_event(&mut conn, &req, &mut bucket);
@@ -753,16 +802,17 @@ fn run_user(ctx: &RunCtx, plan: UserPlan) -> UserResult {
         Some(probe) => score_quality(&mut conn, ctx, &plan.session, probe, &chunk_lens, kv_live),
         None => None,
     };
-    UserResult { workload: plan.workload, bucket, quality }
+    UserResult { tenant: plan.tenant, bucket, quality }
 }
 
 // ---------------------------------------------------------------------
 // Driving a population and aggregating the run.
 
-/// Per-workload slice of a run.
+/// Per-tenant slice of a run: one (workload, admission-tier)
+/// population and its refusal-separated accounting.
 #[derive(Debug, Clone)]
 pub struct ScenarioSummary {
-    pub workload: Workload,
+    pub tenant: Tenant,
     pub users: usize,
     pub bucket: Bucket,
 }
@@ -783,9 +833,9 @@ pub struct RunSummary {
 /// what the server was configured with.
 pub fn drive(addr: &str, manifest: &Manifest, spec: &LoadSpec) -> Result<RunSummary> {
     let plans = build_plans(manifest, spec)?;
-    let mut user_counts: BTreeMap<Workload, usize> = BTreeMap::new();
+    let mut user_counts: BTreeMap<Tenant, usize> = BTreeMap::new();
     for plan in &plans {
-        *user_counts.entry(plan.workload).or_insert(0) += 1;
+        *user_counts.entry(plan.tenant).or_insert(0) += 1;
     }
     let ctx = RunCtx {
         addr: addr.to_string(),
@@ -806,15 +856,15 @@ pub fn drive(addr: &str, manifest: &Manifest, spec: &LoadSpec) -> Result<RunSumm
             .context("spawn loadgen user thread")?;
         handles.push(handle);
     }
-    let mut scenarios: BTreeMap<Workload, ScenarioSummary> = BTreeMap::new();
+    let mut scenarios: BTreeMap<Tenant, ScenarioSummary> = BTreeMap::new();
     let mut total = Bucket::default();
     let mut samples = Vec::new();
     for handle in handles {
         let Ok(result) = handle.join() else { bail!("loadgen user thread panicked") };
         total.merge(&result.bucket);
-        let entry = scenarios.entry(result.workload).or_insert_with(|| ScenarioSummary {
-            workload: result.workload,
-            users: user_counts.get(&result.workload).copied().unwrap_or(0),
+        let entry = scenarios.entry(result.tenant).or_insert_with(|| ScenarioSummary {
+            tenant: result.tenant,
+            users: user_counts.get(&result.tenant).copied().unwrap_or(0),
             bucket: Bucket::default(),
         });
         entry.bucket.merge(&result.bucket);
@@ -865,23 +915,24 @@ fn scenario_row(
 }
 
 /// The aggregate scenario row: `loadgen-mixed` for a mixed population,
-/// `loadgen-<workload>` for a single-workload run.
+/// `loadgen-<tenant>` for a single-population run (`loadgen-dialog`,
+/// or `loadgen-dialog@ccm` when the slice pins a tier).
 pub fn aggregate_scenario(summary: &RunSummary) -> Scenario {
     let name = match summary.scenarios.as_slice() {
-        [only] => format!("loadgen-{}", only.workload.name()),
+        [only] => format!("loadgen-{}", only.tenant.name()),
         _ => "loadgen-mixed".to_string(),
     };
     scenario_row(&name, summary.users, &summary.total, summary.wall_secs, Some(&summary.quality))
 }
 
-/// Full Report for `--emit`: one row per workload (when mixed) plus
+/// Full Report for `--emit`: one row per tenant (when mixed) plus
 /// the aggregate row carrying the quality metrics.
 pub fn to_report(summary: &RunSummary) -> Report {
-    let mut report = Report::new(8);
+    let mut report = Report::new(9);
     if summary.scenarios.len() > 1 {
         for s in &summary.scenarios {
             report.scenarios.push(scenario_row(
-                &format!("loadgen-{}", s.workload.name()),
+                &format!("loadgen-{}", s.tenant.name()),
                 s.users,
                 &s.bucket,
                 summary.wall_secs,
@@ -911,7 +962,7 @@ fn print_summary(summary: &RunSummary) {
     let mut rows: Vec<Vec<String>> = summary
         .scenarios
         .iter()
-        .map(|s| row(s.workload.name(), s.users, &s.bucket))
+        .map(|s| row(&s.tenant.name(), s.users, &s.bucket))
         .collect();
     if summary.scenarios.len() > 1 {
         rows.push(row("total", summary.users, &summary.total));
@@ -962,12 +1013,18 @@ fn print_summary(summary: &RunSummary) {
 /// Spin up the self-serve SimCompute server `ccm loadgen` drives when
 /// no `--addr` is given: `shards` in-process shard executors behind
 /// the standard front-end at the bench-manifest shapes, `delay_us`
-/// simulated compute per batch.
+/// simulated compute per batch. `default_strategy` pins the server's
+/// default admission tier (the `ccm serve --strategy` knob), so a
+/// replay can run wholesale under a non-default strategy.
 fn self_serve(
     shards: usize,
     delay_us: u64,
+    default_strategy: Option<StrategyKind>,
 ) -> Result<(String, std::thread::JoinHandle<Result<()>>)> {
-    let cfg = super::serving::bench_cfg();
+    let mut cfg = super::serving::bench_cfg();
+    if let Some(kind) = default_strategy {
+        cfg.default_strategy = kind;
+    }
     let (ready_tx, ready_rx) = channel();
     let handle = std::thread::spawn(move || {
         let manifest = super::serving::bench_manifest();
@@ -1001,7 +1058,7 @@ pub fn bench_scenario(users: usize, seed: u64) -> Result<Scenario> {
         topk: 3,
     };
     let manifest = super::serving::bench_manifest();
-    let (addr, server) = self_serve(2, 100)?;
+    let (addr, server) = self_serve(2, 100, None)?;
     let summary = drive(&addr, &manifest, &spec)?;
     let mut admin = Client::connect(&addr)?;
     admin.shutdown()?;
@@ -1012,6 +1069,53 @@ pub fn bench_scenario(users: usize, seed: u64) -> Result<Scenario> {
         bail!("loadgen lost {} replies; the numbers would be meaningless", summary.total.lost);
     }
     Ok(aggregate_scenario(&summary))
+}
+
+/// The pinned two-tier A/B trajectory scenarios for `ccm bench`
+/// (docs/BENCH.md): one dialog population split 3:1 across the `ccm`
+/// and `none` admission tiers against the same self-served server,
+/// emitting one row per tier (`loadgen-dialog@ccm`,
+/// `loadgen-dialog@none`) so the trajectory records per-tier latency
+/// and refusal counts side by side.
+pub fn bench_tier_scenarios(users: usize, seed: u64) -> Result<Vec<Scenario>> {
+    let spec = LoadSpec {
+        users,
+        mix: Mix::parse("dialog@ccm=3,dialog@none=1")?,
+        rate: 600.0,
+        seed,
+        churn: 0.0,
+        quality_every: 0,
+        ramp_secs: 0.25,
+        stream_len_max: 8,
+        topk: 3,
+    };
+    let manifest = super::serving::bench_manifest();
+    let (addr, server) = self_serve(2, 100, None)?;
+    let summary = drive(&addr, &manifest, &spec)?;
+    let mut admin = Client::connect(&addr)?;
+    admin.shutdown()?;
+    // lint: allow(unwrap) — a panicked server thread is a bench bug;
+    // re-raise it.
+    server.join().expect("loadgen tier bench server thread")?;
+    if summary.total.lost > 0 {
+        bail!(
+            "tiered loadgen lost {} replies; the numbers would be meaningless",
+            summary.total.lost
+        );
+    }
+    Ok(summary
+        .scenarios
+        .iter()
+        .map(|s| {
+            scenario_row(
+                &format!("loadgen-{}", s.tenant.name()),
+                s.users,
+                &s.bucket,
+                summary.wall_secs,
+                None,
+            )
+        })
+        .collect())
 }
 
 /// `ccm loadgen` entry point (dispatched from `cli_loadgen`). Without
@@ -1026,7 +1130,11 @@ pub fn run(args: &Args) -> Result<()> {
         None => {
             let shards = args.usize("shards", 2)?.max(1);
             let delay_us = args.u64("sim-delay-us", 100)?;
-            let (addr, handle) = self_serve(shards, delay_us)?;
+            let strategy = match args.flags.get("strategy") {
+                Some(s) => Some(StrategyKind::parse(s)?),
+                None => None,
+            };
+            let (addr, handle) = self_serve(shards, delay_us, strategy)?;
             let summary = drive(&addr, &manifest, &spec)?;
             let mut admin = Client::connect(&addr)?;
             admin.shutdown()?;
@@ -1092,15 +1200,47 @@ mod tests {
         let assign = Mix::mixed().assign(200);
         assert_eq!(assign.len(), 200);
         for wl in Workload::ALL {
-            assert!(assign.contains(&wl), "{} missing from mixed/200", wl.name());
+            assert!(
+                assign.iter().any(|t| t.workload == wl),
+                "{} missing from mixed/200",
+                wl.name()
+            );
         }
+        assert!(assign.iter().all(|t| t.strategy.is_none()), "mixed default is untiered");
         assert_eq!(Mix::mixed().assign(0).len(), 0);
-        assert_eq!(Mix::single(Workload::Dialog).assign(5), vec![Workload::Dialog; 5]);
+        assert_eq!(
+            Mix::single(Workload::Dialog).assign(5),
+            vec![Tenant::untiered(Workload::Dialog); 5]
+        );
         let two = Mix::parse("dialog=1,metaicl=1").unwrap().assign(24);
-        assert_eq!(two.iter().filter(|w| **w == Workload::Dialog).count(), 12);
-        assert_eq!(two.iter().filter(|w| **w == Workload::MetaIcl).count(), 12);
+        assert_eq!(two.iter().filter(|t| t.workload == Workload::Dialog).count(), 12);
+        assert_eq!(two.iter().filter(|t| t.workload == Workload::MetaIcl).count(), 12);
         assert!(Mix::parse("dialog=0").is_err());
         assert!(Mix::parse("nope=1").is_err());
+    }
+
+    #[test]
+    fn tier_mix_parses_and_threads_the_strategy_field() {
+        // `workload@tier=weight` splits one workload across admission
+        // tiers; apportionment stays exact per (workload, tier) slice.
+        let mix = Mix::parse("dialog@ccm=3,dialog@none=1").unwrap();
+        let assign = mix.assign(8);
+        assert_eq!(assign.iter().filter(|t| t.strategy == Some(StrategyKind::Ccm)).count(), 6);
+        assert_eq!(
+            assign.iter().filter(|t| t.strategy == Some(StrategyKind::NoCompress)).count(),
+            2
+        );
+        assert_eq!(Tenant::untiered(Workload::Dialog).name(), "dialog");
+        assert_eq!(assign[0].name(), "dialog@ccm");
+        assert!(Mix::parse("dialog@nope=1").is_err(), "unknown tier must be rejected");
+        // The pinned tier reaches the wire as the `op:"context"`
+        // strategy field; untiered sessions omit it entirely so they
+        // ride the server's default-tier admission.
+        let req = context_req("s", &[1, 2], Some(StrategyKind::SlidingWindow));
+        let j = Json::parse(&req).unwrap();
+        assert_eq!(j.get("strategy").unwrap().str().unwrap(), "sliding-window");
+        let req = context_req("s", &[1, 2], None);
+        assert!(Json::parse(&req).unwrap().opt("strategy").is_none());
     }
 
     #[test]
@@ -1140,7 +1280,7 @@ mod tests {
             for w in plan.events.windows(2) {
                 assert!(w[0].at <= w[1].at, "per-user schedule must be monotone");
             }
-            assert!(plan.session.starts_with(plan.workload.name()));
+            assert!(plan.session.starts_with(plan.tenant.workload.name()));
         }
         // Sampled users carry a probe (the dialog/stream targets are
         // always non-empty).
@@ -1159,24 +1299,33 @@ mod tests {
             wall_secs: 1.0,
             scenarios: vec![
                 ScenarioSummary {
-                    workload: Workload::Dialog,
+                    tenant: Tenant::untiered(Workload::Dialog),
                     users: 1,
                     bucket: bucket.clone(),
                 },
-                ScenarioSummary { workload: Workload::Stream, users: 1, bucket: bucket.clone() },
+                ScenarioSummary {
+                    tenant: Tenant {
+                        workload: Workload::Dialog,
+                        strategy: Some(StrategyKind::NoCompress),
+                    },
+                    users: 1,
+                    bucket: bucket.clone(),
+                },
             ],
             total: bucket,
             quality: QualityStats { samples: 1, rouge_mean: 0.5, ..QualityStats::default() },
         };
         let report = to_report(&summary);
         let parsed = Report::parse(&report.to_json()).expect("schema-valid report");
-        assert_eq!(parsed.pr, 8);
+        assert_eq!(parsed.pr, 9);
         let agg = parsed.find("loadgen-mixed", None).expect("aggregate row");
         assert_eq!(agg.metric("refused"), Some(1.0));
         assert_eq!(agg.metric("quality_samples"), Some(1.0));
         assert!(agg.metric("p99_ms").is_some());
         let dialog = parsed.find("loadgen-dialog", None).expect("per-scenario row");
         assert!(dialog.metric("p50_ms").is_some());
-        assert!(parsed.find("loadgen-stream", None).is_some());
+        // A tiered slice reports under its `workload@tier` name so the
+        // trajectory keeps the tiers' tails side by side.
+        assert!(parsed.find("loadgen-dialog@none", None).is_some());
     }
 }

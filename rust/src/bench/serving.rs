@@ -16,6 +16,11 @@
 //!   multi-tenant population against a 2-shard server, reporting
 //!   open-loop latency percentiles, refusal counts, and sampled
 //!   compression-quality signals.
+//! * `loadgen-dialog@ccm` / `loadgen-dialog@none` — the pinned
+//!   two-tier A/B replay ([`super::loadgen::bench_tier_scenarios`]):
+//!   one dialog population split 3:1 across the `ccm` and `none`
+//!   admission tiers, one row per tier so the trajectory tracks
+//!   per-tier latency.
 //!
 //! `--emit PATH` writes the machine-readable `BENCH_<n>.json` report
 //! ([`Report`]; schema in docs/BENCH.md). `--compare OLD --against
@@ -66,13 +71,14 @@ pub fn run(args: &Args) -> Result<()> {
     let stress_clients = args.usize("stress-clients", 32)?;
     let stress_rounds = args.usize("stress-rounds", 40)?;
     let loadgen_users = args.usize("loadgen-users", 64)?;
-    let mut report = Report::new(8);
+    let mut report = Report::new(9);
     report.scenarios.push(scenario_inprocess("serve-throughput", clients, rounds, 200)?);
     report.scenarios.push(scenario_ipc(IpcCodec::Json, clients, rounds)?);
     report.scenarios.push(scenario_ipc(IpcCodec::Binary, clients, rounds)?);
     let stress = scenario_inprocess("stress-profile", stress_clients, stress_rounds, 50)?;
     report.scenarios.push(stress);
     report.scenarios.push(super::loadgen::bench_scenario(loadgen_users, 7)?);
+    report.scenarios.extend(super::loadgen::bench_tier_scenarios(loadgen_users, 7)?);
     let metric = |sc: &Scenario, name: &str| match sc.metric(name) {
         Some(v) => format!("{v:.3}"),
         None => "-".into(),

@@ -7,6 +7,10 @@
 //! with batched variants that pack several sessions into one artifact
 //! call (the dynamic batcher feeds these).
 
+pub mod strategy;
+
+pub use strategy::{CompressionStrategy, StrategyKind, StrategyState, TierConfig, Tiers};
+
 use anyhow::{bail, Result};
 
 use crate::memory::{CompressedChunk, MemoryStore};
@@ -31,6 +35,8 @@ pub struct InferItem<'a> {
 
 /// Max variant when saturated; otherwise smallest variant >= n.
 pub fn pick_batch(variants: &[usize], n: usize) -> usize {
+    // lint: allow(unwrap) — an empty variant list is a manifest bug
+    // caught at load time; dying loudly beats padding to a zero batch.
     let max = *variants.iter().max().expect("no batch variants");
     if n >= max {
         return max;

@@ -1,0 +1,454 @@
+//! Pluggable per-session compression strategies — the serving-time
+//! counterpart of the paper's method/baseline axis (CCM vs sliding
+//! window vs full context), selected per session at admission.
+//!
+//! [`StrategyKind`] is the config/wire surface (mirroring how
+//! `EvictionKind` parses/builds eviction policies); the
+//! [`CompressionStrategy`] trait is the behavior seam the coordinator
+//! dispatches through: whether a context chunk runs the backend g_comp
+//! op or is absorbed session-locally, what token stream an inference
+//! conditions on, and how the session's live KV is costed — so the KV
+//! budget sees cheap tiers as cheap and the full-context reference tier
+//! as expensive.
+//!
+//! Tier shape (QoS token-bucket refill/burst and the sliding-window
+//! retention budget) is carried by [`TierConfig`] / [`Tiers`], parsed
+//! from the `--tiers` flag.
+
+use anyhow::{bail, Result};
+
+use crate::memory::window::{Overflow, StreamWindow};
+use crate::memory::MemoryStore;
+
+/// Config-surface selector for the built-in compression strategies
+/// (the `--strategy` CLI flag, the `op:"context"` request field, and
+/// the shard-IPC wire byte). Custom behavior still enters through
+/// [`CompressionStrategy`] impls.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum StrategyKind {
+    /// Compressed context memory: chunks run g_comp, Mem(t) holds the
+    /// result (the paper's method — the default serving tier).
+    #[default]
+    Ccm,
+    /// StreamingLLM-style retention: sink + recent raw tokens under a
+    /// fixed KV budget, no compression calls (promoted from the
+    /// eval-only `memory::window` module).
+    SlidingWindow,
+    /// Full-context reference tier: every raw context token is
+    /// retained, KV grows linearly (the paper's upper baseline).
+    NoCompress,
+}
+
+impl StrategyKind {
+    /// Every kind, in [`StrategyKind::index`] order (counter arrays and
+    /// stats rendering iterate this).
+    pub const ALL: [StrategyKind; 3] =
+        [StrategyKind::Ccm, StrategyKind::SlidingWindow, StrategyKind::NoCompress];
+
+    pub fn parse(name: &str) -> Result<StrategyKind> {
+        Ok(match name {
+            "ccm" => StrategyKind::Ccm,
+            "sliding-window" | "window" => StrategyKind::SlidingWindow,
+            "none" | "no-compress" | "full" => StrategyKind::NoCompress,
+            other => bail!("unknown compression strategy {other:?} (ccm|sliding-window|none)"),
+        })
+    }
+
+    /// Stable label used in stats JSON, CLI output, and docs.
+    pub fn name(self) -> &'static str {
+        match self {
+            StrategyKind::Ccm => "ccm",
+            StrategyKind::SlidingWindow => "sliding-window",
+            StrategyKind::NoCompress => "none",
+        }
+    }
+
+    /// Dense index into per-strategy counter arrays.
+    pub fn index(self) -> usize {
+        match self {
+            StrategyKind::Ccm => 0,
+            StrategyKind::SlidingWindow => 1,
+            StrategyKind::NoCompress => 2,
+        }
+    }
+
+    /// Nonzero wire byte for the binary shard-IPC codec (0 is reserved
+    /// for "absent" in optional positions).
+    pub fn wire(self) -> u8 {
+        self.index() as u8 + 1
+    }
+
+    pub fn from_wire(b: u8) -> Result<StrategyKind> {
+        match b {
+            1 => Ok(StrategyKind::Ccm),
+            2 => Ok(StrategyKind::SlidingWindow),
+            3 => Ok(StrategyKind::NoCompress),
+            other => bail!("unknown strategy wire byte {other}"),
+        }
+    }
+
+    /// Build the strategy behavior for this kind under a tier config.
+    /// `mem_slots` is the manifest's compressed-memory capacity: the
+    /// sliding-window tier defaults its retention budget to it, so the
+    /// two tiers compare at equal KV (the paper's budget-fair setup).
+    pub fn build(self, tier: &TierConfig, mem_slots: usize) -> Box<dyn CompressionStrategy> {
+        match self {
+            StrategyKind::Ccm => Box::new(Ccm),
+            StrategyKind::SlidingWindow => {
+                let window_kv = if tier.window_kv > 0 { tier.window_kv } else { mem_slots.max(2) };
+                let n_sink = tier.n_sink.min(window_kv / 2);
+                Box::new(SlidingWindow { window_kv, n_sink })
+            }
+            StrategyKind::NoCompress => Box::new(NoCompress),
+        }
+    }
+}
+
+/// Per-tier serving shape: the QoS token bucket governing priority
+/// overrides in the batcher, plus the sliding-window retention budget
+/// (ignored by the other strategies).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TierConfig {
+    /// Priority-override tokens a session regains per second.
+    pub refill_per_sec: f64,
+    /// Bucket depth: max consecutive overrides one session can spend
+    /// (bounds how far a query flood can delay another tenant).
+    pub burst: f64,
+    /// Sliding-window retained-token budget; 0 derives it from the
+    /// manifest's `mem_slots` (equal-KV comparison with the CCM tier).
+    pub window_kv: usize,
+    /// Attention-sink tokens pinned at the stream head.
+    pub n_sink: usize,
+}
+
+impl Default for TierConfig {
+    fn default() -> TierConfig {
+        TierConfig { refill_per_sec: 8.0, burst: 4.0, window_kv: 0, n_sink: 4 }
+    }
+}
+
+/// Per-strategy tier table (the `--tiers` flag). Unlisted tiers keep
+/// [`TierConfig::default`].
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Tiers {
+    per: [TierConfig; 3],
+}
+
+impl Tiers {
+    pub fn get(&self, k: StrategyKind) -> &TierConfig {
+        &self.per[k.index()]
+    }
+
+    pub fn get_mut(&mut self, k: StrategyKind) -> &mut TierConfig {
+        &mut self.per[k.index()]
+    }
+
+    /// Parse a `--tiers` spec: comma-separated `kind=refill/burst` or
+    /// `kind=refill/burst/window_kv` entries, e.g.
+    /// `ccm=16/8,none=2/1` or `sliding-window=8/4/64`.
+    pub fn parse(spec: &str) -> Result<Tiers> {
+        let mut tiers = Tiers::default();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let Some((kind, shape)) = entry.split_once('=') else {
+                bail!("tier entry {entry:?} is not kind=refill/burst[/window_kv]");
+            };
+            let kind = StrategyKind::parse(kind.trim())?;
+            let parts: Vec<&str> = shape.split('/').collect();
+            if parts.len() < 2 || parts.len() > 3 {
+                bail!("tier shape {shape:?} is not refill/burst[/window_kv]");
+            }
+            let refill: f64 = match parts[0].trim().parse() {
+                Ok(v) if v >= 0.0 => v,
+                _ => bail!("tier refill {:?} is not a non-negative number", parts[0]),
+            };
+            let burst: f64 = match parts[1].trim().parse() {
+                Ok(v) if v >= 0.0 => v,
+                _ => bail!("tier burst {:?} is not a non-negative number", parts[1]),
+            };
+            let cfg = tiers.get_mut(kind);
+            cfg.refill_per_sec = refill;
+            cfg.burst = burst;
+            if parts.len() == 3 {
+                cfg.window_kv = match parts[2].trim().parse() {
+                    Ok(v) => v,
+                    _ => bail!("tier window_kv {:?} is not an integer", parts[2]),
+                };
+            }
+        }
+        Ok(tiers)
+    }
+}
+
+/// Per-session state a strategy maintains beside the compressed
+/// [`MemoryStore`]: the raw tokens it retains verbatim.
+#[derive(Debug, Clone)]
+pub enum StrategyState {
+    /// CCM retains nothing raw — context lives in Mem(t).
+    Ccm,
+    /// Sliding-window retention (sink + recent tokens, hard budget).
+    Window(StreamWindow),
+    /// Full raw context (the no-compress reference tier).
+    Full(Vec<i32>),
+}
+
+impl StrategyState {
+    /// Raw tokens currently retained (token-equivalents of live KV on
+    /// top of the compressed memory).
+    pub fn raw_kv_tokens(&self) -> usize {
+        match self {
+            StrategyState::Ccm => 0,
+            StrategyState::Window(w) => w.kv_size(),
+            StrategyState::Full(tail) => tail.len(),
+        }
+    }
+}
+
+/// The strategy seam: how context chunks become session state, what an
+/// inference conditions on, and what the session's live KV costs.
+/// One impl per [`StrategyKind`]; the coordinator keeps a built
+/// instance per kind and batches stay homogeneous in (kind, strategy).
+pub trait CompressionStrategy: Send + Sync {
+    fn kind(&self) -> StrategyKind;
+
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// Fresh per-session retention state.
+    fn new_state(&self) -> StrategyState;
+
+    /// True when context chunks run the backend compress op (batched
+    /// g_comp, the CCM path); false when absorption is session-local.
+    fn compresses(&self) -> bool;
+
+    /// Session-local absorption of one context chunk (non-compressing
+    /// tiers). Returns how many retained tokens were dropped to stay
+    /// inside the tier's budget.
+    fn absorb(&self, state: &mut StrategyState, chunk: &[i32]) -> usize;
+
+    /// The token stream an inference conditions on: retained context
+    /// followed by the query, clamped to the newest `input_max` tokens.
+    fn stage_input(&self, state: &StrategyState, query: &[i32], input_max: usize) -> Vec<i32>;
+
+    /// Live KV bytes for a session under this strategy: compressed
+    /// memory plus retained raw tokens at full per-token KV cost.
+    fn kv_bytes(&self, state: &StrategyState, mem: &MemoryStore) -> usize {
+        let per_tok = 2 * mem.buffers.layers * mem.buffers.d_model * 4;
+        mem.kv_bytes() + state.raw_kv_tokens() * per_tok
+    }
+}
+
+/// The paper's method: context chunks are compressed by the backend
+/// into Mem(t); inference conditions on Mem(t) ++ query.
+pub struct Ccm;
+
+impl CompressionStrategy for Ccm {
+    fn kind(&self) -> StrategyKind {
+        StrategyKind::Ccm
+    }
+
+    fn new_state(&self) -> StrategyState {
+        StrategyState::Ccm
+    }
+
+    fn compresses(&self) -> bool {
+        true
+    }
+
+    fn absorb(&self, _state: &mut StrategyState, _chunk: &[i32]) -> usize {
+        debug_assert!(false, "ccm chunks go through the backend compress path");
+        0
+    }
+
+    fn stage_input(&self, _state: &StrategyState, query: &[i32], input_max: usize) -> Vec<i32> {
+        query[query.len().saturating_sub(input_max)..].to_vec()
+    }
+}
+
+/// StreamingLLM-style serving tier: `[sink | recent window]` raw tokens
+/// under a hard budget; overflow is dropped, never compressed.
+pub struct SlidingWindow {
+    pub window_kv: usize,
+    pub n_sink: usize,
+}
+
+impl CompressionStrategy for SlidingWindow {
+    fn kind(&self) -> StrategyKind {
+        StrategyKind::SlidingWindow
+    }
+
+    fn new_state(&self) -> StrategyState {
+        StrategyState::Window(StreamWindow::streaming_llm(self.window_kv, self.n_sink))
+    }
+
+    fn compresses(&self) -> bool {
+        false
+    }
+
+    fn absorb(&self, state: &mut StrategyState, chunk: &[i32]) -> usize {
+        let StrategyState::Window(w) = state else {
+            debug_assert!(false, "sliding-window session without window state");
+            return 0;
+        };
+        let mut dropped = 0;
+        for &tok in chunk {
+            match w.push(tok) {
+                Overflow::Drop(n) => dropped += n,
+                Overflow::None => {}
+                // streaming_llm windows never emit Compress.
+                Overflow::Compress(_) => debug_assert!(false, "drop-mode window compressed"),
+            }
+        }
+        dropped
+    }
+
+    fn stage_input(&self, state: &StrategyState, query: &[i32], input_max: usize) -> Vec<i32> {
+        let StrategyState::Window(w) = state else {
+            return query[query.len().saturating_sub(input_max)..].to_vec();
+        };
+        let mut out = Vec::with_capacity(w.kv_size() + query.len());
+        out.extend_from_slice(&w.sink);
+        out.extend_from_slice(&w.window);
+        out.extend_from_slice(query);
+        out.drain(..out.len().saturating_sub(input_max));
+        out
+    }
+}
+
+/// Full-context reference tier: everything is retained, nothing is
+/// compressed — the expensive end of the fidelity/memory trade-off.
+pub struct NoCompress;
+
+impl CompressionStrategy for NoCompress {
+    fn kind(&self) -> StrategyKind {
+        StrategyKind::NoCompress
+    }
+
+    fn new_state(&self) -> StrategyState {
+        StrategyState::Full(Vec::new())
+    }
+
+    fn compresses(&self) -> bool {
+        false
+    }
+
+    fn absorb(&self, state: &mut StrategyState, chunk: &[i32]) -> usize {
+        let StrategyState::Full(tail) = state else {
+            debug_assert!(false, "no-compress session without full state");
+            return 0;
+        };
+        tail.extend_from_slice(chunk);
+        0
+    }
+
+    fn stage_input(&self, state: &StrategyState, query: &[i32], input_max: usize) -> Vec<i32> {
+        let StrategyState::Full(tail) = state else {
+            return query[query.len().saturating_sub(input_max)..].to_vec();
+        };
+        let mut out = Vec::with_capacity(tail.len() + query.len());
+        out.extend_from_slice(tail);
+        out.extend_from_slice(query);
+        out.drain(..out.len().saturating_sub(input_max));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_kind_parses_names_and_wire_bytes() {
+        for (s, k) in [
+            ("ccm", StrategyKind::Ccm),
+            ("sliding-window", StrategyKind::SlidingWindow),
+            ("window", StrategyKind::SlidingWindow),
+            ("none", StrategyKind::NoCompress),
+            ("no-compress", StrategyKind::NoCompress),
+            ("full", StrategyKind::NoCompress),
+        ] {
+            assert_eq!(StrategyKind::parse(s).unwrap(), k);
+        }
+        assert!(StrategyKind::parse("zip").is_err());
+        assert_eq!(StrategyKind::default(), StrategyKind::Ccm);
+        for k in StrategyKind::ALL {
+            assert_eq!(StrategyKind::parse(k.name()).unwrap(), k);
+            assert_eq!(StrategyKind::from_wire(k.wire()).unwrap(), k);
+            assert_eq!(StrategyKind::ALL[k.index()], k);
+        }
+        assert!(StrategyKind::from_wire(0).is_err());
+        assert!(StrategyKind::from_wire(9).is_err());
+    }
+
+    #[test]
+    fn tiers_parse_overrides_listed_kinds_only() {
+        let t = Tiers::parse("ccm=16/8,sliding-window=2/1/64").unwrap();
+        assert_eq!(t.get(StrategyKind::Ccm).refill_per_sec, 16.0);
+        assert_eq!(t.get(StrategyKind::Ccm).burst, 8.0);
+        assert_eq!(t.get(StrategyKind::SlidingWindow).burst, 1.0);
+        assert_eq!(t.get(StrategyKind::SlidingWindow).window_kv, 64);
+        // Unlisted tier keeps defaults.
+        assert_eq!(t.get(StrategyKind::NoCompress), &TierConfig::default());
+        assert!(Tiers::parse("bogus=1/1").is_err());
+        assert!(Tiers::parse("ccm=1").is_err());
+        assert!(Tiers::parse("ccm=a/b").is_err());
+        assert!(Tiers::parse("ccm=1/2/3/4").is_err());
+        assert_eq!(Tiers::parse("").unwrap(), Tiers::default());
+    }
+
+    #[test]
+    fn sliding_window_retains_under_budget_and_reports_drops() {
+        let cfg = TierConfig { window_kv: 8, n_sink: 2, ..TierConfig::default() };
+        let strat = StrategyKind::SlidingWindow.build(&cfg, 32);
+        assert!(!strat.compresses());
+        let mut state = strat.new_state();
+        // 6 tokens fit (2 sink + 4 window), the rest displace oldest.
+        assert_eq!(strat.absorb(&mut state, &(0..6).collect::<Vec<i32>>()), 0);
+        assert_eq!(state.raw_kv_tokens(), 6);
+        let dropped = strat.absorb(&mut state, &(6..16).collect::<Vec<i32>>());
+        assert_eq!(dropped, 8, "budget 8 forces 8 of 16 tokens out");
+        assert_eq!(state.raw_kv_tokens(), 8);
+        // Staging: sink ++ recent window ++ query, newest-clamped.
+        let staged = strat.stage_input(&state, &[99], 64);
+        assert_eq!(staged.len(), 9);
+        assert_eq!(staged[..2], [0, 1], "sink pinned");
+        assert_eq!(*staged.last().unwrap(), 99);
+        let clamped = strat.stage_input(&state, &[99], 3);
+        assert_eq!(clamped, vec![14, 15, 99], "clamp keeps the newest tokens");
+    }
+
+    #[test]
+    fn sliding_window_defaults_budget_to_mem_slots() {
+        let strat = StrategyKind::SlidingWindow.build(&TierConfig::default(), 16);
+        let mut state = strat.new_state();
+        strat.absorb(&mut state, &(0..40).collect::<Vec<i32>>());
+        assert_eq!(state.raw_kv_tokens(), 16, "equal-KV budget with the CCM tier");
+    }
+
+    #[test]
+    fn no_compress_retains_everything_and_costs_linearly() {
+        let strat = StrategyKind::NoCompress.build(&TierConfig::default(), 8);
+        let mut state = strat.new_state();
+        assert_eq!(strat.absorb(&mut state, &[1, 2, 3]), 0);
+        assert_eq!(strat.absorb(&mut state, &[4, 5]), 0);
+        assert_eq!(state.raw_kv_tokens(), 5);
+        let mem = MemoryStore::concat(2, 8, 4, 2);
+        // 5 raw tokens at 2*L*D*4 bytes each; the (empty) memory adds 0.
+        assert_eq!(strat.kv_bytes(&state, &mem), 5 * 2 * 2 * 4 * 4);
+        assert_eq!(strat.stage_input(&state, &[9], 4), vec![3, 4, 5, 9]);
+    }
+
+    #[test]
+    fn ccm_strategy_stages_query_only_and_costs_memory_only() {
+        let strat = StrategyKind::Ccm.build(&TierConfig::default(), 8);
+        assert!(strat.compresses());
+        let state = strat.new_state();
+        assert_eq!(state.raw_kv_tokens(), 0);
+        assert_eq!(strat.stage_input(&state, &[7, 8], 16), vec![7, 8]);
+        let mut mem = MemoryStore::concat(2, 8, 4, 2);
+        let n = 2 * 2 * 4;
+        mem.update(&crate::memory::CompressedChunk { k: vec![0.0; n], v: vec![0.0; n], comp_len: 2 })
+            .unwrap();
+        assert_eq!(strat.kv_bytes(&state, &mem), mem.kv_bytes());
+    }
+}

@@ -6,22 +6,28 @@
 //! the queue), and a batch holds AT MOST ONE item per session — batch
 //! staging snapshots session state (Mem(t-1), pos_cursor) before
 //! execution, so a second same-session item in one batch would read
-//! stale memory and clash on positions. Batches are homogeneous in kind
-//! because the two artifacts differ. Flush policy: size-triggered or
-//! age-triggered (max_wait).
+//! stale memory and clash on positions. Batches are homogeneous in
+//! (kind, strategy): the two artifacts differ, and different
+//! compression tiers take different execution paths. Flush policy:
+//! size-triggered or age-triggered (max_wait).
 //!
 //! Scheduling policy: plain FIFO by default. With `infer_priority` set
 //! (the serving engine turns it on), ready inference batches are emitted
 //! ahead of unrelated sessions' compression backlog — queries are
 //! latency-sensitive, compressions are throughput work — while the
 //! per-session ordering invariant still holds (an infer never overtakes
-//! its own session's queued compress). A consecutive-override cap
-//! bounds compress starvation under sustained query load: after
-//! `PRIORITY_OVERRIDE_LIMIT` infer batches jump the front, one front
-//! batch is forced through, guaranteeing the backlog a fixed share.
+//! its own session's queued compress). Overrides are governed by
+//! per-session token buckets ([`Tiers`]: refill rate and burst per
+//! strategy tier): each batch that jumps the front spends one token
+//! from the overriding session's bucket, so ONE tenant's query flood
+//! can delay another tenant's compress by at most that tenant's burst.
+//! An aging floor (`front_max_delay`) additionally bounds the
+//! aggregate delay across many funded tenants in wall-clock terms.
 
-use std::collections::{HashSet, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::time::{Duration, Instant};
+
+use crate::compress::strategy::{StrategyKind, Tiers};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum WorkKind {
@@ -34,13 +40,23 @@ pub struct WorkItem {
     pub seq: u64,
     pub session: String,
     pub kind: WorkKind,
+    pub strategy: StrategyKind,
     pub tokens: Vec<i32>,
     pub submitted: Instant,
 }
 
-/// Max consecutive batches that may jump ahead of the front item's
-/// kind before fairness forces the front through (bounds starvation).
-const PRIORITY_OVERRIDE_LIMIT: u32 = 4;
+/// Default wall-clock bound on how long priority overrides may hold the
+/// front item back, regardless of how many funded tenants keep jumping.
+pub const FRONT_MAX_DELAY: Duration = Duration::from_millis(50);
+
+/// One session's override budget (token bucket).
+#[derive(Debug, Clone, Copy)]
+struct TokenBucket {
+    tokens: f64,
+    last: Instant,
+    /// Burst cap snapshot (for pruning full, idle buckets).
+    burst: f64,
+}
 
 #[derive(Debug)]
 pub struct Batcher {
@@ -50,10 +66,17 @@ pub struct Batcher {
     pub max_wait: Duration,
     /// Emit ready infer batches ahead of unrelated compress backlog.
     pub infer_priority: bool,
-    /// Consecutive emissions that overrode the front item's kind.
-    overrides: u32,
+    /// Per-tier token-bucket shapes governing priority overrides.
+    tiers: Tiers,
+    /// Aging floor: once the front item has waited this long, no
+    /// override is permitted until it runs.
+    pub front_max_delay: Duration,
+    /// Per-session override budgets.
+    buckets: HashMap<String, TokenBucket>,
     /// Lifetime count of priority overrides (surfaced in serve stats).
     overrides_total: u64,
+    /// Overrides charged per overriding session's strategy tier.
+    overrides_by: [u64; 3],
 }
 
 impl Batcher {
@@ -65,9 +88,18 @@ impl Batcher {
             max_batch,
             max_wait,
             infer_priority: false,
-            overrides: 0,
+            tiers: Tiers::default(),
+            front_max_delay: FRONT_MAX_DELAY,
+            buckets: HashMap::new(),
             overrides_total: 0,
+            overrides_by: [0; 3],
         }
+    }
+
+    /// Swap the per-tier QoS shapes (refill/burst). Live buckets keep
+    /// their balance but refill and cap under the new shape.
+    pub fn set_tiers(&mut self, tiers: Tiers) {
+        self.tiers = tiers;
     }
 
     /// Total priority overrides emitted over this batcher's lifetime
@@ -76,14 +108,27 @@ impl Batcher {
         self.overrides_total
     }
 
+    /// Lifetime overrides split by the overriding session's strategy
+    /// tier, indexed by [`StrategyKind::index`].
+    pub fn overrides_by_strategy(&self) -> [u64; 3] {
+        self.overrides_by
+    }
+
     /// Enqueue; returns the work-item sequence id.
-    pub fn push(&mut self, session: &str, kind: WorkKind, tokens: Vec<i32>) -> u64 {
+    pub fn push(
+        &mut self,
+        session: &str,
+        kind: WorkKind,
+        strategy: StrategyKind,
+        tokens: Vec<i32>,
+    ) -> u64 {
         let seq = self.next_seq;
         self.next_seq += 1;
         self.queue.push_back(WorkItem {
             seq,
             session: session.to_string(),
             kind,
+            strategy,
             tokens,
             submitted: Instant::now(),
         });
@@ -118,26 +163,56 @@ impl Batcher {
             .unwrap_or(false)
     }
 
-    /// Batch kind for the next emission. FIFO: the front item's kind.
-    /// With `infer_priority`: Infer, if some queued infer is executable
-    /// (no earlier same-session compress) — unless the last
-    /// `PRIORITY_OVERRIDE_LIMIT` emissions already jumped the front, in
-    /// which case fairness forces the front through.
-    fn pick_kind(&self) -> WorkKind {
+    /// Refill `session`'s bucket to `now` under its tier shape and try
+    /// to spend one override token. A tier with burst < 1 never
+    /// overrides.
+    fn take_token(&mut self, session: &str, strategy: StrategyKind, now: Instant) -> bool {
+        let cfg = *self.tiers.get(strategy);
+        if cfg.burst < 1.0 {
+            return false;
+        }
+        let b = self
+            .buckets
+            .entry(session.to_string())
+            .or_insert(TokenBucket { tokens: cfg.burst, last: now, burst: cfg.burst });
+        b.burst = cfg.burst;
+        let dt = now.saturating_duration_since(b.last).as_secs_f64();
+        b.tokens = (b.tokens + dt * cfg.refill_per_sec).min(cfg.burst);
+        b.last = now;
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Batch key for the next emission. FIFO: the front item's (kind,
+    /// strategy). With `infer_priority`: the first executable infer (no
+    /// earlier same-session compress) whose session can spend an
+    /// override token — unless the front item has already waited
+    /// `front_max_delay`, in which case fairness forces it through.
+    fn pick_key(&mut self, now: Instant) -> (WorkKind, StrategyKind) {
         // lint: allow(unwrap) — only called from next_batch after its
         // queue-empty early return, so the front exists.
         let front = self.queue.front().unwrap();
+        let front_key = (front.kind, front.strategy);
         if !self.infer_priority || front.kind == WorkKind::Infer {
-            return front.kind;
+            return front_key;
         }
-        if self.overrides >= PRIORITY_OVERRIDE_LIMIT {
-            return front.kind; // anti-starvation: the backlog gets a turn
+        if now.saturating_duration_since(front.submitted) >= self.front_max_delay {
+            return front_key; // aging floor: the backlog gets its turn
         }
+        // Executable infer candidates in queue order, one per session.
         let mut blocked: HashSet<&str> = HashSet::new();
+        let mut seen: HashSet<&str> = HashSet::new();
+        let mut candidates: Vec<(String, StrategyKind)> = Vec::new();
         for w in &self.queue {
             match w.kind {
                 WorkKind::Infer if !blocked.contains(w.session.as_str()) => {
-                    return WorkKind::Infer;
+                    if seen.insert(w.session.as_str()) {
+                        candidates.push((w.session.clone(), w.strategy));
+                    }
                 }
                 WorkKind::Infer => {}
                 WorkKind::Compress => {
@@ -145,25 +220,25 @@ impl Batcher {
                 }
             }
         }
-        front.kind
+        for (session, strategy) in candidates {
+            if self.take_token(&session, strategy, now) {
+                self.overrides_total += 1;
+                self.overrides_by[strategy.index()] += 1;
+                return (WorkKind::Infer, strategy);
+            }
+        }
+        front_key
     }
 
     /// Pop the next homogeneous batch (up to max_batch items of the
-    /// picked kind), skipping items whose session has an earlier
-    /// still-queued item of another kind — those stay queued, and the
-    /// session is "blocked" for the rest of this scan.
+    /// picked kind and strategy), skipping items whose session has an
+    /// earlier still-queued item of another key — those stay queued, and
+    /// the session is "blocked" for the rest of this scan.
     pub fn next_batch(&mut self, now: Instant, force: bool) -> Option<Vec<WorkItem>> {
         if self.queue.is_empty() || (!force && !self.ready(now)) {
             return None;
         }
-        let kind = self.pick_kind();
-        // lint: allow(unwrap) — the queue-empty case returned above.
-        if kind == self.queue.front().unwrap().kind {
-            self.overrides = 0;
-        } else {
-            self.overrides += 1;
-            self.overrides_total += 1;
-        }
+        let (kind, strategy) = self.pick_key(now);
         let mut blocked: HashSet<String> = HashSet::new();
         let mut taken: HashSet<String> = HashSet::new();
         let mut taken_idx = Vec::new();
@@ -174,14 +249,14 @@ impl Batcher {
             if blocked.contains(&w.session) {
                 continue;
             }
-            if w.kind == kind && !taken.contains(&w.session) {
+            if w.kind == kind && w.strategy == strategy && !taken.contains(&w.session) {
                 taken.insert(w.session.clone());
                 taken_idx.push(i);
             } else {
                 // Either this session already has an item in the batch
                 // (staging snapshots state, so a second item must wait
                 // for the next batch) or it has an unexecuted earlier
-                // item of the other kind — later items must wait.
+                // item of another key — later items must wait.
                 blocked.insert(w.session.clone());
             }
         }
@@ -194,6 +269,12 @@ impl Batcher {
         }
         batch.reverse();
         debug_assert!(!batch.is_empty());
+        // Full, idle buckets are equivalent to absent ones — drop them
+        // so a long-lived server does not accrete one entry per
+        // session ever seen.
+        if self.buckets.len() > 256 {
+            self.buckets.retain(|_, b| b.tokens + 1e-9 < b.burst);
+        }
         Some(batch)
     }
 }
@@ -201,17 +282,30 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::strategy::TierConfig;
+
+    const CCM: StrategyKind = StrategyKind::Ccm;
 
     fn item_kinds(b: &[WorkItem]) -> Vec<WorkKind> {
         b.iter().map(|w| w.kind).collect()
     }
 
+    /// Tiers where every strategy has the given burst and no refill —
+    /// the deterministic shape the fairness tests reason about.
+    fn flat_tiers(burst: f64) -> Tiers {
+        let mut t = Tiers::default();
+        for k in StrategyKind::ALL {
+            *t.get_mut(k) = TierConfig { refill_per_sec: 0.0, burst, ..TierConfig::default() };
+        }
+        t
+    }
+
     #[test]
     fn batches_are_homogeneous_and_fifo() {
         let mut b = Batcher::new(4, Duration::ZERO);
-        b.push("a", WorkKind::Compress, vec![1]);
-        b.push("b", WorkKind::Compress, vec![2]);
-        b.push("c", WorkKind::Infer, vec![3]);
+        b.push("a", WorkKind::Compress, CCM, vec![1]);
+        b.push("b", WorkKind::Compress, CCM, vec![2]);
+        b.push("c", WorkKind::Infer, CCM, vec![3]);
         let batch = b.next_batch(Instant::now(), true).unwrap();
         assert_eq!(item_kinds(&batch), vec![WorkKind::Compress; 2]);
         let batch = b.next_batch(Instant::now(), true).unwrap();
@@ -220,12 +314,30 @@ mod tests {
     }
 
     #[test]
+    fn batches_are_homogeneous_in_strategy() {
+        // Same kind, different tiers: the batch must not mix them —
+        // each tier takes a different execution path in the
+        // coordinator (backend g_comp vs session-local absorption).
+        let mut b = Batcher::new(8, Duration::ZERO);
+        b.push("a", WorkKind::Compress, StrategyKind::Ccm, vec![1]);
+        b.push("c", WorkKind::Compress, StrategyKind::NoCompress, vec![2]);
+        b.push("b", WorkKind::Compress, StrategyKind::Ccm, vec![3]);
+        let batch = b.next_batch(Instant::now(), true).unwrap();
+        let sessions: Vec<&str> = batch.iter().map(|w| w.session.as_str()).collect();
+        assert_eq!(sessions, vec!["a", "b"], "ccm batch coalesces around the no-compress item");
+        assert!(batch.iter().all(|w| w.strategy == StrategyKind::Ccm));
+        let batch = b.next_batch(Instant::now(), true).unwrap();
+        assert_eq!(batch[0].strategy, StrategyKind::NoCompress);
+        assert!(b.next_batch(Instant::now(), true).is_none());
+    }
+
+    #[test]
     fn session_order_is_preserved() {
         let mut b = Batcher::new(8, Duration::ZERO);
-        b.push("s", WorkKind::Compress, vec![1]);
-        b.push("s", WorkKind::Infer, vec![2]); // depends on the compress
-        b.push("t", WorkKind::Compress, vec![3]);
-        b.push("s", WorkKind::Compress, vec![4]); // after s's infer!
+        b.push("s", WorkKind::Compress, CCM, vec![1]);
+        b.push("s", WorkKind::Infer, CCM, vec![2]); // depends on the compress
+        b.push("t", WorkKind::Compress, CCM, vec![3]);
+        b.push("s", WorkKind::Compress, CCM, vec![4]); // after s's infer!
         let batch = b.next_batch(Instant::now(), true).unwrap();
         // s's later compress must NOT ride along: s is blocked by its infer.
         let sessions: Vec<&str> = batch.iter().map(|w| w.session.as_str()).collect();
@@ -239,14 +351,14 @@ mod tests {
     #[test]
     fn size_and_age_triggers() {
         let mut b = Batcher::new(2, Duration::from_millis(50));
-        b.push("a", WorkKind::Infer, vec![]);
+        b.push("a", WorkKind::Infer, CCM, vec![]);
         let now = Instant::now();
         assert!(!b.ready(now));
         assert!(b.next_batch(now, false).is_none());
-        b.push("b", WorkKind::Infer, vec![]);
+        b.push("b", WorkKind::Infer, CCM, vec![]);
         assert!(b.ready(now)); // size trigger
         assert_eq!(b.next_batch(now, false).unwrap().len(), 2);
-        b.push("c", WorkKind::Infer, vec![]);
+        b.push("c", WorkKind::Infer, CCM, vec![]);
         let later = now + Duration::from_millis(100);
         assert!(b.ready(later)); // age trigger
     }
@@ -256,9 +368,9 @@ mod tests {
         // Batch staging snapshots Mem(t-1)/pos_cursor per session, so
         // two chunks of one session must land in successive batches.
         let mut b = Batcher::new(8, Duration::ZERO);
-        b.push("s", WorkKind::Compress, vec![1]);
-        b.push("s", WorkKind::Compress, vec![2]);
-        b.push("t", WorkKind::Compress, vec![3]);
+        b.push("s", WorkKind::Compress, CCM, vec![1]);
+        b.push("s", WorkKind::Compress, CCM, vec![2]);
+        b.push("t", WorkKind::Compress, CCM, vec![3]);
         let batch = b.next_batch(Instant::now(), true).unwrap();
         let sessions: Vec<&str> = batch.iter().map(|w| w.session.as_str()).collect();
         assert_eq!(sessions, vec!["s", "t"]);
@@ -273,14 +385,16 @@ mod tests {
         let mut b = Batcher::new(4, Duration::ZERO);
         b.infer_priority = true;
         for i in 0..6 {
-            b.push("bulk", WorkKind::Compress, vec![i]);
+            b.push("bulk", WorkKind::Compress, CCM, vec![i]);
         }
-        b.push("fast", WorkKind::Infer, vec![99]);
+        b.push("fast", WorkKind::Infer, CCM, vec![99]);
         // The query batch is emitted first even though 6 compressions
         // are ahead of it in arrival order.
         let batch = b.next_batch(Instant::now(), true).unwrap();
         assert_eq!(item_kinds(&batch), vec![WorkKind::Infer]);
         assert_eq!(batch[0].session, "fast");
+        assert_eq!(b.total_overrides(), 1);
+        assert_eq!(b.overrides_by_strategy()[CCM.index()], 1);
         // Then the compress backlog drains in order.
         let batch = b.next_batch(Instant::now(), true).unwrap();
         assert_eq!(item_kinds(&batch), vec![WorkKind::Compress; 4]);
@@ -290,88 +404,112 @@ mod tests {
     fn infer_priority_never_overtakes_own_sessions_compress() {
         let mut b = Batcher::new(4, Duration::ZERO);
         b.infer_priority = true;
-        b.push("s", WorkKind::Compress, vec![1]);
-        b.push("s", WorkKind::Infer, vec![2]); // depends on the compress
+        b.push("s", WorkKind::Compress, CCM, vec![1]);
+        b.push("s", WorkKind::Infer, CCM, vec![2]); // depends on the compress
         // No executable infer exists: the compress batch goes first.
         let batch = b.next_batch(Instant::now(), true).unwrap();
         assert_eq!(item_kinds(&batch), vec![WorkKind::Compress]);
         let batch = b.next_batch(Instant::now(), true).unwrap();
         assert_eq!(item_kinds(&batch), vec![WorkKind::Infer]);
+        assert_eq!(b.total_overrides(), 0, "in-order emission spends no tokens");
     }
 
     #[test]
-    fn infer_priority_override_cap_prevents_compress_starvation() {
-        // One compress at the front, then a steady stream of queries
-        // from distinct sessions: at most PRIORITY_OVERRIDE_LIMIT infer
-        // batches may jump before the compress is forced through.
+    fn single_tenant_flood_delay_is_bounded_by_configured_burst() {
+        // QoS property (replaces the fixed consecutive-override cap):
+        // ONE session flooding queries delays another tenant's compress
+        // by at most ITS OWN bucket burst — then the bucket is empty
+        // and the compress is forced through, whatever the flood depth.
+        for burst in [1u32, 3, 4, 7] {
+            let mut b = Batcher::new(4, Duration::ZERO);
+            b.infer_priority = true;
+            b.set_tiers(flat_tiers(burst as f64));
+            b.push("victim", WorkKind::Compress, CCM, vec![1]);
+            for _ in 0..32 {
+                b.push("attacker", WorkKind::Infer, CCM, vec![9]);
+            }
+            b.push("victim2", WorkKind::Compress, CCM, vec![2]);
+            let mut kinds = Vec::new();
+            let mut compress_sessions = Vec::new();
+            let mut emitted = 0usize;
+            while b.pending() > 0 {
+                let batch = b.next_batch(Instant::now(), true).unwrap();
+                emitted += batch.len();
+                if batch[0].kind == WorkKind::Compress {
+                    compress_sessions.extend(batch.iter().map(|w| w.session.clone()));
+                }
+                kinds.push(batch[0].kind);
+            }
+            let first_compress = kinds.iter().position(|k| *k == WorkKind::Compress).unwrap();
+            assert_eq!(
+                first_compress as u32, burst,
+                "flood must be capped at the configured burst {burst}: {kinds:?}"
+            );
+            // The forced compress turn flushes the WHOLE compress
+            // backlog in one batch (both victims, distinct sessions,
+            // coalesce), so nothing waits for a second turn.
+            assert_eq!(kinds.iter().filter(|k| **k == WorkKind::Compress).count(), 1);
+            assert_eq!(compress_sessions, vec!["victim", "victim2"]);
+            assert_eq!(emitted, 34, "every queued item must be emitted exactly once");
+            assert_eq!(b.total_overrides(), u64::from(burst));
+        }
+    }
+
+    #[test]
+    fn bucket_refill_restores_override_budget_over_time() {
+        // refill 100/s, burst 2: after the burst is spent, ~10ms of
+        // simulated wall clock buys one more override.
+        let mut t = Tiers::default();
+        *t.get_mut(CCM) = TierConfig { refill_per_sec: 100.0, burst: 2.0, ..TierConfig::default() };
         let mut b = Batcher::new(1, Duration::ZERO);
         b.infer_priority = true;
-        b.push("bulk", WorkKind::Compress, vec![1]);
-        for i in 0..8 {
-            b.push(&format!("f{i}"), WorkKind::Infer, vec![2]);
+        b.set_tiers(t);
+        let start = Instant::now();
+        b.push("victim", WorkKind::Compress, CCM, vec![1]);
+        for _ in 0..4 {
+            b.push("flood", WorkKind::Infer, CCM, vec![9]);
         }
-        let mut kinds = Vec::new();
-        while b.pending() > 0 {
-            let batch = b.next_batch(Instant::now(), true).unwrap();
-            kinds.push(batch[0].kind);
-        }
-        let compress_at = kinds.iter().position(|k| *k == WorkKind::Compress).unwrap();
-        assert_eq!(
-            compress_at as u32,
-            super::PRIORITY_OVERRIDE_LIMIT,
-            "compress must run after exactly the override cap: {kinds:?}"
-        );
-        assert_eq!(kinds.len(), 9);
+        // Two overrides spend the burst...
+        assert_eq!(b.next_batch(start, true).unwrap()[0].kind, WorkKind::Infer);
+        assert_eq!(b.next_batch(start, true).unwrap()[0].kind, WorkKind::Infer);
+        // ...the third pick at the same instant is broke: compress runs.
+        assert_eq!(b.next_batch(start, true).unwrap()[0].kind, WorkKind::Compress);
+        // 10ms later the bucket holds one token again. (The flood is
+        // now the front, so push another victim compress behind it to
+        // make the override observable.)
+        b.push("victim2", WorkKind::Compress, CCM, vec![2]);
+        let later = start + Duration::from_millis(10);
+        let batch = b.next_batch(later, true).unwrap();
+        assert_eq!(batch[0].kind, WorkKind::Infer, "refilled bucket funds the jump");
+        assert_eq!(b.total_overrides(), 3);
     }
 
     #[test]
-    fn adversarial_query_flood_cannot_starve_compress_beyond_cap() {
-        // Regression (ROADMAP fairness item): ONE adversarial session
-        // flooding queries must not push another session's compress
-        // work back by more than PRIORITY_OVERRIDE_LIMIT consecutive
-        // overrides. The flood is same-session, so each infer batch
-        // carries exactly one item — the worst case for the backlog.
-        let mut b = Batcher::new(4, Duration::ZERO);
+    fn aging_floor_forces_front_through_funded_floods() {
+        // Two funded tenants alternate overrides; once the front
+        // compress has waited front_max_delay, no budget can jump it.
+        let mut b = Batcher::new(1, Duration::ZERO);
         b.infer_priority = true;
-        b.push("victim", WorkKind::Compress, vec![1]);
-        for _ in 0..32 {
-            b.push("attacker", WorkKind::Infer, vec![9]);
+        b.set_tiers(flat_tiers(1000.0));
+        let start = Instant::now();
+        b.push("victim", WorkKind::Compress, CCM, vec![1]);
+        for i in 0..8 {
+            b.push(&format!("f{i}"), WorkKind::Infer, CCM, vec![9]);
         }
-        b.push("victim2", WorkKind::Compress, vec![2]);
-        let mut kinds = Vec::new();
-        let mut compress_sessions = Vec::new();
-        let mut emitted = 0usize;
-        while b.pending() > 0 {
-            let batch = b.next_batch(Instant::now(), true).unwrap();
-            emitted += batch.len();
-            if batch[0].kind == WorkKind::Compress {
-                compress_sessions.extend(batch.iter().map(|w| w.session.clone()));
-            }
-            kinds.push(batch[0].kind);
-        }
-        // The front compress is delayed by exactly the override cap,
-        // never more — and the forced compress turn flushes the WHOLE
-        // compress backlog in one batch (both victims, distinct
-        // sessions, coalesce), so nothing waits for a second turn.
-        let first_compress = kinds.iter().position(|k| *k == WorkKind::Compress).unwrap();
-        assert_eq!(
-            first_compress as u32,
-            super::PRIORITY_OVERRIDE_LIMIT,
-            "flood must be capped at the override limit: {kinds:?}"
-        );
-        assert_eq!(kinds.iter().filter(|k| **k == WorkKind::Compress).count(), 1);
-        assert_eq!(compress_sessions, vec!["victim", "victim2"]);
-        assert_eq!(emitted, 34, "every queued item must be emitted exactly once");
-        assert_eq!(b.total_overrides(), u64::from(super::PRIORITY_OVERRIDE_LIMIT));
+        // Well-funded tenants override while the front is young...
+        assert_eq!(b.next_batch(start, true).unwrap()[0].kind, WorkKind::Infer);
+        // ...but at front_max_delay the aging floor wins.
+        let late = start + b.front_max_delay;
+        assert_eq!(b.next_batch(late, true).unwrap()[0].kind, WorkKind::Compress);
     }
 
     #[test]
     fn queued_for_and_pending_sessions() {
         let mut b = Batcher::new(4, Duration::ZERO);
-        b.push("u", WorkKind::Compress, vec![1]);
-        b.push("u", WorkKind::Compress, vec![2]);
-        b.push("u", WorkKind::Infer, vec![3]);
-        b.push("v", WorkKind::Infer, vec![4]);
+        b.push("u", WorkKind::Compress, CCM, vec![1]);
+        b.push("u", WorkKind::Compress, CCM, vec![2]);
+        b.push("u", WorkKind::Infer, CCM, vec![3]);
+        b.push("v", WorkKind::Infer, CCM, vec![4]);
         assert_eq!(b.queued_for("u", WorkKind::Compress), 2);
         assert_eq!(b.queued_for("u", WorkKind::Infer), 1);
         assert_eq!(b.queued_for("w", WorkKind::Compress), 0);
@@ -386,13 +524,19 @@ mod tests {
             let max_batch = rng.range(1, 6);
             let mut b = Batcher::new(max_batch, Duration::ZERO);
             b.infer_priority = rng.bool(0.5);
-            let sessions = ["s0", "s1", "s2"];
+            // One strategy per session (the serving invariant: a
+            // session's strategy is pinned at admission).
+            let sessions = [
+                ("s0", StrategyKind::Ccm),
+                ("s1", StrategyKind::SlidingWindow),
+                ("s2", StrategyKind::NoCompress),
+            ];
             let n = rng.range(1, 40);
             let mut submitted: Vec<(u64, String)> = Vec::new();
             for _ in 0..n {
-                let s = sessions[rng.range(0, 3)];
+                let (s, strat) = sessions[rng.range(0, 3)];
                 let kind = if rng.bool(0.5) { WorkKind::Compress } else { WorkKind::Infer };
-                let seq = b.push(s, kind, vec![]);
+                let seq = b.push(s, kind, strat, vec![]);
                 submitted.push((seq, s.to_string()));
             }
             let mut emitted: Vec<WorkItem> = Vec::new();
@@ -403,15 +547,16 @@ mod tests {
                 let batch = b.next_batch(Instant::now(), true).unwrap();
                 crate::prop_assert!(batch.len() <= max_batch, "batch too big");
                 let k = batch[0].kind;
+                let strat = batch[0].strategy;
                 crate::prop_assert!(
-                    batch.iter().all(|w| w.kind == k),
-                    "mixed-kind batch"
+                    batch.iter().all(|w| w.kind == k && w.strategy == strat),
+                    "mixed-key batch"
                 );
                 emitted.extend(batch);
             }
             crate::prop_assert!(emitted.len() == n, "lost items: {} != {n}", emitted.len());
             // Per-session sequence ids must be strictly increasing.
-            for s in sessions {
+            for (s, _) in sessions {
                 let seqs: Vec<u64> =
                     emitted.iter().filter(|w| w.session == s).map(|w| w.seq).collect();
                 crate::prop_assert!(

@@ -38,11 +38,27 @@ impl LatencyAcc {
     }
 }
 
+/// Work counters split by compression strategy tier, indexed by
+/// [`crate::compress::StrategyKind::index`]. Session counts and KV
+/// bytes per tier are gauges owned by the session manager (census),
+/// not accumulated here.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct StrategyCounters {
+    pub compressions: u64,
+    pub inferences: u64,
+    /// Context tokens dropped by lossy retention (sliding-window tier).
+    pub tokens_dropped: u64,
+    /// Overload refusals attributed to this tier's sessions.
+    pub refusals: u64,
+}
+
 #[derive(Debug, Default, Clone)]
 pub struct Metrics {
     pub requests: u64,
     pub compressions: u64,
     pub inferences: u64,
+    /// Per-tier split of the compress/infer counters above.
+    pub by_strategy: [StrategyCounters; 3],
     pub batches: u64,
     pub batch_sizes: Vec<usize>,
     pub compress_latency: LatencyAcc,

@@ -21,7 +21,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::compress::{CompressItem, Compute, Engine, InferItem};
+use crate::compress::{CompressItem, Compute, Engine, InferItem, StrategyKind};
 use crate::coordinator::batcher::{Batcher, WorkItem, WorkKind};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::session::{SessionManager, SessionPolicy};
@@ -35,7 +35,13 @@ pub struct Coordinator<'rt> {
     pub sessions: SessionManager,
     pub batcher: Batcher,
     pub metrics: Metrics,
-    results: HashMap<u64, Tensor>,
+    /// Artifact input cap — non-compressing tiers stage retained raw
+    /// context plus the query and must clamp to this.
+    input_max: usize,
+    /// seq -> (logits, staged input length). The staged length matters
+    /// to the caller: retained-context tiers prepend history, so the
+    /// query's next-token row is `staged_len - 1`, not `query_len - 1`.
+    results: HashMap<u64, (Tensor, usize)>,
     /// Seqs of infer items whose batch failed (consumed via `take_failed`).
     failed: Vec<u64>,
 }
@@ -67,24 +73,38 @@ impl<'rt> Coordinator<'rt> {
             sessions,
             batcher: Batcher::new(max_batch, max_wait),
             metrics: Metrics::default(),
+            input_max: manifest.scenario.input_max,
             results: HashMap::new(),
             failed: Vec::new(),
         }
     }
 
-    /// Enqueue a new context chunk c(t) for a session (compression).
-    pub fn add_context(&mut self, session: &str, chunk: Vec<i32>) -> u64 {
+    /// Enqueue a new context chunk c(t) for a session (compression or
+    /// tier-local absorption). `strategy` applies only if this admission
+    /// creates the session — an existing session keeps the tier it was
+    /// admitted under.
+    pub fn add_context_strat(
+        &mut self,
+        session: &str,
+        chunk: Vec<i32>,
+        strategy: Option<StrategyKind>,
+    ) -> u64 {
         self.metrics.requests += 1;
-        self.sessions.get_or_create(session);
-        self.batcher.push(session, WorkKind::Compress, chunk)
+        let strat = self.sessions.get_or_create_with(session, strategy).strategy;
+        self.batcher.push(session, WorkKind::Compress, strat, chunk)
+    }
+
+    /// Enqueue a context chunk under the session's (or default) tier.
+    pub fn add_context(&mut self, session: &str, chunk: Vec<i32>) -> u64 {
+        self.add_context_strat(session, chunk, None)
     }
 
     /// Enqueue a query I(t); the result (logits rows) is retrievable via
     /// `take_result` after the batcher has flushed.
     pub fn query(&mut self, session: &str, input: Vec<i32>) -> u64 {
         self.metrics.requests += 1;
-        self.sessions.get_or_create(session);
-        self.batcher.push(session, WorkKind::Infer, input)
+        let strat = self.sessions.get_or_create_with(session, None).strategy;
+        self.batcher.push(session, WorkKind::Infer, strat, input)
     }
 
     /// Queued-but-unexecuted work items (admission control reads this).
@@ -103,9 +123,17 @@ impl<'rt> Coordinator<'rt> {
         }
         self.metrics.record_batch(batch.len());
         let kind = batch[0].kind;
+        let strat = batch[0].strategy;
         let t = Instant::now();
         let ran = match kind {
-            WorkKind::Compress => self.run_compress(&batch),
+            // A context chunk either runs through the backend's g_comp
+            // (CCM tier) or is absorbed session-locally by the tier's
+            // retention rule (sliding-window / no-compress) — no
+            // accelerator call, so the batch key keeps these apart.
+            WorkKind::Compress if self.sessions.strategy(strat).compresses() => {
+                self.run_compress(&batch)
+            }
+            WorkKind::Compress => self.run_absorb(&batch),
             WorkKind::Infer => self.run_infer(&batch),
         };
         if let Err(e) = ran {
@@ -117,13 +145,16 @@ impl<'rt> Coordinator<'rt> {
             return Err(e);
         }
         let el = t.elapsed();
+        let by = &mut self.metrics.by_strategy[strat.index()];
         match kind {
             WorkKind::Compress => {
                 self.metrics.compressions += batch.len() as u64;
+                by.compressions += batch.len() as u64;
                 self.metrics.compress_latency.record(el);
             }
             WorkKind::Infer => {
                 self.metrics.inferences += batch.len() as u64;
+                by.inferences += batch.len() as u64;
                 self.metrics.infer_latency.record(el);
             }
         }
@@ -138,6 +169,14 @@ impl<'rt> Coordinator<'rt> {
     }
 
     pub fn take_result(&mut self, seq: u64) -> Option<Tensor> {
+        self.take_result_staged(seq).map(|(t, _)| t)
+    }
+
+    /// Like [`take_result`](Self::take_result) but also yields the
+    /// staged input length the logits were computed over. Callers that
+    /// read "the query's last row" must index `staged_len - 1`:
+    /// retained-context tiers prepend history tokens to the query.
+    pub fn take_result_staged(&mut self, seq: u64) -> Option<(Tensor, usize)> {
         self.results.remove(&seq)
     }
 
@@ -212,22 +251,42 @@ impl<'rt> Coordinator<'rt> {
         Ok(())
     }
 
+    /// Non-compressing tiers: fold each chunk into the session's own
+    /// retention state (sliding window / full tail). No backend call.
+    fn run_absorb(&mut self, batch: &[WorkItem]) -> Result<()> {
+        for w in batch {
+            self.sessions.get_or_create_with(&w.session, Some(w.strategy));
+            let dropped = self.sessions.absorb(&w.session, &w.tokens)?;
+            self.metrics.by_strategy[w.strategy.index()].tokens_dropped += dropped as u64;
+            self.metrics.tokens_compressed += w.tokens.len() as u64;
+        }
+        Ok(())
+    }
+
     fn run_infer(&mut self, batch: &[WorkItem]) -> Result<()> {
         for w in batch {
-            self.sessions.get_or_create(&w.session);
+            self.sessions.get_or_create_with(&w.session, Some(w.strategy));
         }
+        // Stage first (owned token vectors), then borrow memories: the
+        // tier decides what surrounds the query — nothing for CCM,
+        // retained raw context for sliding-window / no-compress.
+        let staged: Vec<(Vec<i32>, usize)> = batch
+            .iter()
+            .map(|w| self.sessions.stage_input(&w.session, &w.tokens, self.input_max))
+            .collect::<Result<_>>()?;
         let items: Vec<InferItem> = batch
             .iter()
-            .map(|w| {
+            .zip(&staged)
+            .map(|(w, (tokens, pos_start))| {
                 // lint: allow(unwrap) — get_or_create ran for every
                 // batch session in the loop above.
                 let s = self.sessions.get(&w.session).unwrap();
-                InferItem { mem: &s.mem, tokens: &w.tokens, pos_start: s.pos_cursor }
+                InferItem { mem: &s.mem, tokens, pos_start: *pos_start }
             })
             .collect();
         let logits = self.backend.infer(&items)?;
-        for (w, l) in batch.iter().zip(logits) {
-            self.results.insert(w.seq, l);
+        for ((w, l), (tokens, _)) in batch.iter().zip(logits).zip(&staged) {
+            self.results.insert(w.seq, (l, tokens.len()));
         }
         Ok(())
     }
@@ -265,6 +324,39 @@ mod tests {
         assert_eq!(coord.metrics.compressions, 2);
         assert_eq!(coord.metrics.inferences, 1);
         assert!(coord.sessions.total_kv_bytes() > 0);
+    }
+
+    #[test]
+    fn mixed_strategy_tiers_serve_side_by_side() {
+        let mut coord = sim_coordinator(4);
+        coord.add_context_strat("c", vec![1, 2, 3], Some(StrategyKind::Ccm));
+        coord.add_context_strat("w", vec![1, 2, 3], Some(StrategyKind::SlidingWindow));
+        coord.add_context_strat("f", vec![1, 2, 3], Some(StrategyKind::NoCompress));
+        let qc = coord.query("c", vec![7]);
+        let qw = coord.query("w", vec![7]);
+        let qf = coord.query("f", vec![7]);
+        coord.run_until_idle().unwrap();
+        // Every tier answers, and the echo lands on the STAGED last row
+        // (retained-context tiers prepend history to the query).
+        for (seq, sess, want_staged) in [(qc, "c", 1), (qw, "w", 4), (qf, "f", 4)] {
+            let (logits, staged) = coord.take_result_staged(seq).expect(sess);
+            assert_eq!(staged, want_staged, "staged len for {sess}");
+            let row = logits.row(&[staged - 1]);
+            let top = row.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
+            assert_eq!(top, 7, "echoed query token for {sess}");
+        }
+        // CCM went through the backend's g_comp and holds Mem(t) only;
+        // the other tiers absorbed raw tokens session-locally.
+        assert!(!coord.sessions.get("c").unwrap().mem.is_empty());
+        assert!(coord.sessions.get("w").unwrap().mem.is_empty());
+        assert!(coord.sessions.get("f").unwrap().mem.is_empty());
+        for k in StrategyKind::ALL {
+            assert_eq!(coord.metrics.by_strategy[k.index()].compressions, 1, "{}", k.name());
+            assert_eq!(coord.metrics.by_strategy[k.index()].inferences, 1, "{}", k.name());
+        }
+        let census = coord.sessions.census();
+        assert_eq!(census.map(|(n, _)| n), [1, 1, 1]);
+        assert!(census[StrategyKind::NoCompress.index()].1 > 0, "raw tail costs KV");
     }
 
     #[test]

@@ -6,6 +6,13 @@
 //! created first (the PR 1 behavior and default), least recently used,
 //! or cost-aware largest-bytes-first. `ccm serve --eviction <policy>`
 //! selects one per serving shard via [`EvictionKind`].
+//!
+//! The compression strategy is likewise pluggable per session
+//! ([`CompressionStrategy`], selected at admission via
+//! [`StrategyKind`]): CCM sessions hold Mem(t), sliding-window sessions
+//! hold a budgeted raw-token window, no-compress sessions hold the full
+//! raw context. [`Session::kv_bytes`] is strategy-aware, so the KV
+//! budget evicts cheap tiers later and the full-context tier sooner.
 
 use std::cmp::Ordering;
 use std::collections::{HashMap, HashSet};
@@ -13,6 +20,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use crate::compress::strategy::{CompressionStrategy, StrategyKind, StrategyState, Tiers};
 use crate::masks::{MergeScheme, Method};
 use crate::memory::MemoryStore;
 use crate::model::manifest::Manifest;
@@ -80,7 +88,7 @@ impl EvictionPolicy for LargestBytes {
     }
 
     fn victim_cmp(&self, a: &Session, b: &Session) -> Ordering {
-        b.mem.kv_bytes().cmp(&a.mem.kv_bytes()).then(a.created.cmp(&b.created))
+        b.kv_bytes().cmp(&a.kv_bytes()).then(a.created.cmp(&b.created))
     }
 }
 
@@ -135,6 +143,23 @@ pub struct Session {
     pub raw_context_tokens: usize,
     /// Last touch (create or new work) — drives idle-session reaping.
     pub last_used: Instant,
+    /// Compression strategy pinned at admission (first touch wins).
+    pub strategy: StrategyKind,
+    /// Strategy-owned retention state (raw tokens kept verbatim).
+    pub state: StrategyState,
+    /// Raw tokens dropped by window retention (accounting).
+    pub dropped_tokens: u64,
+}
+
+impl Session {
+    /// Live KV bytes under this session's strategy: compressed memory
+    /// plus retained raw tokens at full per-token KV cost. Budget
+    /// eviction, stats, and context acks all read this (never
+    /// `mem.kv_bytes()` alone), keeping tiers comparable.
+    pub fn kv_bytes(&self) -> usize {
+        let per_tok = 2 * self.mem.buffers.layers * self.mem.buffers.d_model * 4;
+        self.mem.kv_bytes() + self.state.raw_kv_tokens() * per_tok
+    }
 }
 
 /// One session's accounting row for the `stats` detail view (the
@@ -143,18 +168,22 @@ pub struct SessionStat {
     pub id: String,
     /// Online time step t (chunks absorbed so far).
     pub t: usize,
-    /// Compressed-KV bytes this session currently holds.
+    /// Live KV bytes this session currently holds (strategy-aware).
     pub kv_bytes: usize,
     /// Time since the session was created.
     pub age: Duration,
     /// Time since the session was last touched.
     pub idle: Duration,
+    /// Compression strategy the session was admitted under.
+    pub strategy: StrategyKind,
 }
 
 pub struct SessionManager {
     sessions: HashMap<String, Session>,
     policy: SessionPolicy,
     eviction: Box<dyn EvictionPolicy>,
+    strategies: [Box<dyn CompressionStrategy>; 3],
+    default_strategy: StrategyKind,
     layers: usize,
     d_model: usize,
     mem_slots: usize,
@@ -167,15 +196,22 @@ impl SessionManager {
     }
 
     pub fn with_policy(manifest: &Manifest, policy: SessionPolicy) -> SessionManager {
+        let mem_slots = manifest.scenario.mem_slots;
         SessionManager {
             sessions: HashMap::new(),
             layers: manifest.model.n_layers,
             d_model: manifest.model.d_model,
-            mem_slots: manifest.scenario.mem_slots,
+            mem_slots,
             policy,
             eviction: Box::new(OldestCreated),
+            strategies: Self::build_strategies(&Tiers::default(), mem_slots),
+            default_strategy: StrategyKind::default(),
             counter: 0,
         }
+    }
+
+    fn build_strategies(tiers: &Tiers, mem_slots: usize) -> [Box<dyn CompressionStrategy>; 3] {
+        StrategyKind::ALL.map(|k| k.build(tiers.get(k), mem_slots))
     }
 
     pub fn policy(&self) -> &SessionPolicy {
@@ -191,7 +227,38 @@ impl SessionManager {
         self.eviction.name()
     }
 
+    /// Rebuild the strategy table from a tier config (window budgets).
+    /// Existing sessions keep the state they were created with.
+    pub fn set_tiers(&mut self, tiers: &Tiers) {
+        self.strategies = Self::build_strategies(tiers, self.mem_slots);
+    }
+
+    /// Strategy assigned to sessions admitted without an explicit one.
+    pub fn set_default_strategy(&mut self, kind: StrategyKind) {
+        self.default_strategy = kind;
+    }
+
+    pub fn default_strategy(&self) -> StrategyKind {
+        self.default_strategy
+    }
+
+    /// The built behavior for a strategy kind (the dispatch seam).
+    pub fn strategy(&self, kind: StrategyKind) -> &dyn CompressionStrategy {
+        &*self.strategies[kind.index()]
+    }
+
     pub fn get_or_create(&mut self, id: &str) -> &mut Session {
+        self.get_or_create_with(id, None)
+    }
+
+    /// Get a session, creating it under `strategy` (or the manager
+    /// default) if absent. An existing session keeps the strategy it
+    /// was admitted with — first touch pins it.
+    pub fn get_or_create_with(
+        &mut self,
+        id: &str,
+        strategy: Option<StrategyKind>,
+    ) -> &mut Session {
         if !self.sessions.contains_key(id) {
             let mem = match self.policy.method {
                 Method::CcmMerge => crate::memory::MemoryStore::merge(
@@ -208,6 +275,7 @@ impl SessionManager {
                     self.policy.comp_len,
                 ),
             };
+            let kind = strategy.unwrap_or(self.default_strategy);
             self.counter += 1;
             self.sessions.insert(
                 id.to_string(),
@@ -220,6 +288,9 @@ impl SessionManager {
                     created_at: Instant::now(),
                     raw_context_tokens: 0,
                     last_used: Instant::now(),
+                    strategy: kind,
+                    state: self.strategies[kind.index()].new_state(),
+                    dropped_tokens: 0,
                 },
             );
         }
@@ -228,6 +299,51 @@ impl SessionManager {
         let s = self.sessions.get_mut(id).unwrap();
         s.last_used = Instant::now();
         s
+    }
+
+    /// Absorb one context chunk session-locally under the session's
+    /// strategy (the non-backend path: sliding-window / no-compress).
+    /// Returns how many retained tokens the tier's budget dropped.
+    pub fn absorb(&mut self, id: &str, chunk: &[i32]) -> Result<usize> {
+        let s = match self.sessions.get_mut(id) {
+            Some(s) => s,
+            None => bail!("unknown session {id:?}"),
+        };
+        let dropped = self.strategies[s.strategy.index()].absorb(&mut s.state, chunk);
+        s.dropped_tokens += dropped as u64;
+        s.t += 1;
+        s.raw_context_tokens += chunk.len();
+        s.pos_cursor += chunk.len();
+        Ok(dropped)
+    }
+
+    /// Stage the token stream a query conditions on under the session's
+    /// strategy, with the absolute position of its first token.
+    pub fn stage_input(
+        &self,
+        id: &str,
+        query: &[i32],
+        input_max: usize,
+    ) -> Result<(Vec<i32>, usize)> {
+        let s = self.get(id)?;
+        let tokens = self.strategies[s.strategy.index()].stage_input(&s.state, query, input_max);
+        let pos_start = match s.strategy {
+            StrategyKind::Ccm => s.pos_cursor,
+            _ => (s.raw_context_tokens + query.len()).saturating_sub(tokens.len()),
+        };
+        Ok((tokens, pos_start))
+    }
+
+    /// Per-strategy (session count, live KV bytes) census, indexed by
+    /// [`StrategyKind::index`] — the stats view's tier breakdown.
+    pub fn census(&self) -> [(usize, usize); 3] {
+        let mut out = [(0usize, 0usize); 3];
+        for s in self.sessions.values() {
+            let i = s.strategy.index();
+            out[i].0 += 1;
+            out[i].1 += s.kv_bytes();
+        }
+        out
     }
 
     pub fn get(&self, id: &str) -> Result<&Session> {
@@ -256,10 +372,10 @@ impl SessionManager {
         self.sessions.is_empty()
     }
 
-    /// Total live compressed-KV bytes across sessions (capacity planning —
-    /// the quantity Table 1's max-batch column is about).
+    /// Total live KV bytes across sessions, strategy-aware (capacity
+    /// planning — the quantity Table 1's max-batch column is about).
     pub fn total_kv_bytes(&self) -> usize {
-        self.sessions.values().map(|s| s.mem.kv_bytes()).sum()
+        self.sessions.values().map(|s| s.kv_bytes()).sum()
     }
 
     /// Evict sessions in policy order until at most `max_bytes` of
@@ -332,18 +448,21 @@ impl SessionManager {
     /// Saturating arithmetic: a `now` taken before a concurrent touch
     /// degrades to zero, never panics.
     pub fn snapshot(&self, now: Instant) -> Vec<SessionStat> {
-        self.snapshot_filtered(now, None, None)
+        self.snapshot_filtered(now, None, None, None)
     }
 
     /// [`snapshot`](Self::snapshot) restricted to ids starting with
-    /// `prefix` (when set) and truncated to the first `limit` rows by
-    /// id (when set) — the stats pagination knobs, so a fleet holding
-    /// 100k+ resident sessions per process can page through the detail
-    /// view instead of serializing all of it per request.
+    /// `prefix` (when set), to ids strictly after the `after_id` cursor
+    /// (when set), and truncated to the first `limit` rows by id (when
+    /// set) — the stats pagination knobs, so a fleet holding 100k+
+    /// resident sessions per process can page through the detail view
+    /// with `after_id = last id of the previous page` instead of
+    /// re-scanning prefixes.
     pub fn snapshot_filtered(
         &self,
         now: Instant,
         prefix: Option<&str>,
+        after_id: Option<&str>,
         limit: Option<usize>,
     ) -> Vec<SessionStat> {
         let mut stats: Vec<SessionStat> = self
@@ -353,12 +472,17 @@ impl SessionManager {
                 Some(p) => s.id.starts_with(p),
                 None => true,
             })
+            .filter(|s| match after_id {
+                Some(a) => s.id.as_str() > a,
+                None => true,
+            })
             .map(|s| SessionStat {
                 id: s.id.clone(),
                 t: s.t,
-                kv_bytes: s.mem.kv_bytes(),
+                kv_bytes: s.kv_bytes(),
                 age: now.saturating_duration_since(s.created_at),
                 idle: now.saturating_duration_since(s.last_used),
+                strategy: s.strategy,
             })
             .collect();
         stats.sort_unstable_by(|a, b| a.id.cmp(&b.id));
@@ -589,20 +713,124 @@ mod tests {
         }
         let now = Instant::now();
         // Prefix restricts; rows stay id-sorted.
-        let stats = sm.snapshot_filtered(now, Some("user-"), None);
+        let stats = sm.snapshot_filtered(now, Some("user-"), None, None);
         let ids: Vec<&str> = stats.iter().map(|s| s.id.as_str()).collect();
         assert_eq!(ids, vec!["user-1", "user-2", "user-3"]);
         // Limit truncates AFTER the sort: the first N by id, not an
         // arbitrary hash-order subset.
-        let stats = sm.snapshot_filtered(now, Some("user-"), Some(2));
+        let stats = sm.snapshot_filtered(now, Some("user-"), None, Some(2));
         let ids: Vec<&str> = stats.iter().map(|s| s.id.as_str()).collect();
         assert_eq!(ids, vec!["user-1", "user-2"]);
         // No prefix match: empty, not an error.
-        assert!(sm.snapshot_filtered(now, Some("zzz"), None).is_empty());
+        assert!(sm.snapshot_filtered(now, Some("zzz"), None, None).is_empty());
         // A zero limit is honored (count-only probes stay cheap).
-        assert!(sm.snapshot_filtered(now, None, Some(0)).is_empty());
+        assert!(sm.snapshot_filtered(now, None, None, Some(0)).is_empty());
         // Unfiltered delegation matches snapshot().
         assert_eq!(sm.snapshot(now).len(), 4);
+    }
+
+    #[test]
+    fn snapshot_after_id_cursor_pages_without_rescanning() {
+        let m = manifest();
+        let mut sm = SessionManager::with_policy(&m, SessionPolicy::concat(2));
+        for i in 0..7 {
+            sm.get_or_create(&format!("u{i}"));
+        }
+        let now = Instant::now();
+        // Page through with limit 3, resuming from the last id seen.
+        let page1 = sm.snapshot_filtered(now, None, None, Some(3));
+        let ids: Vec<&str> = page1.iter().map(|s| s.id.as_str()).collect();
+        assert_eq!(ids, vec!["u0", "u1", "u2"]);
+        let page2 = sm.snapshot_filtered(now, None, Some("u2"), Some(3));
+        let ids: Vec<&str> = page2.iter().map(|s| s.id.as_str()).collect();
+        assert_eq!(ids, vec!["u3", "u4", "u5"]);
+        let page3 = sm.snapshot_filtered(now, None, Some("u5"), Some(3));
+        let ids: Vec<&str> = page3.iter().map(|s| s.id.as_str()).collect();
+        assert_eq!(ids, vec!["u6"], "final partial page");
+        // Cursor is strict: the boundary id itself never repeats.
+        assert!(sm.snapshot_filtered(now, None, Some("u6"), None).is_empty());
+        // Cursor composes with prefix.
+        sm.get_or_create("admin-1");
+        let page = sm.snapshot_filtered(now, Some("u"), Some("u4"), None);
+        let ids: Vec<&str> = page.iter().map(|s| s.id.as_str()).collect();
+        assert_eq!(ids, vec!["u5", "u6"]);
+    }
+
+    #[test]
+    fn strategies_pin_at_admission_and_cost_kv_by_tier() {
+        let m = manifest();
+        let mut sm = SessionManager::with_policy(&m, SessionPolicy::concat(2));
+        let per_tok = 2 * 2 * 8 * 4; // 2 layers, d_model 8, f32 K+V
+        // No-compress: every raw token is retained and costed.
+        let s = sm.get_or_create_with("full", Some(StrategyKind::NoCompress));
+        assert_eq!(s.strategy, StrategyKind::NoCompress);
+        sm.absorb("full", &[1, 2, 3]).unwrap();
+        let s = sm.get("full").unwrap();
+        assert_eq!(s.t, 1);
+        assert_eq!(s.raw_context_tokens, 3);
+        assert_eq!(s.kv_bytes(), 3 * per_tok);
+        // Sliding-window: retention capped at mem_slots (8) tokens.
+        sm.get_or_create_with("win", Some(StrategyKind::SlidingWindow));
+        sm.absorb("win", &(0..20).collect::<Vec<i32>>()).unwrap();
+        let s = sm.get("win").unwrap();
+        assert_eq!(s.kv_bytes(), 8 * per_tok);
+        assert_eq!(s.dropped_tokens, 12);
+        // First touch pins the strategy: a later explicit kind is ignored.
+        let s = sm.get_or_create_with("full", Some(StrategyKind::Ccm));
+        assert_eq!(s.strategy, StrategyKind::NoCompress);
+        // Default-strategy sessions are CCM and retain nothing raw.
+        let s = sm.get_or_create("plain");
+        assert_eq!(s.strategy, StrategyKind::Ccm);
+        assert_eq!(s.kv_bytes(), 0);
+        // Census: per-tier session counts and KV bytes.
+        let census = sm.census();
+        assert_eq!(census[StrategyKind::Ccm.index()], (1, 0));
+        assert_eq!(census[StrategyKind::SlidingWindow.index()], (1, 8 * per_tok));
+        assert_eq!(census[StrategyKind::NoCompress.index()], (1, 3 * per_tok));
+        // Detail rows carry the tier label.
+        let stats = sm.snapshot(Instant::now());
+        let full = stats.iter().find(|s| s.id == "full").unwrap();
+        assert_eq!(full.strategy, StrategyKind::NoCompress);
+        assert_eq!(full.kv_bytes, 3 * per_tok);
+    }
+
+    #[test]
+    fn stage_input_conditions_on_retained_context() {
+        let m = manifest(); // input_max 8
+        let mut sm = SessionManager::with_policy(&m, SessionPolicy::concat(2));
+        sm.get_or_create_with("full", Some(StrategyKind::NoCompress));
+        sm.absorb("full", &[1, 2, 3, 4, 5, 6]).unwrap();
+        let (toks, pos) = sm.stage_input("full", &[7, 8], 8).unwrap();
+        assert_eq!(toks, vec![1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(pos, 0);
+        // Clamped to the newest input_max tokens, position advances.
+        let (toks, pos) = sm.stage_input("full", &[7, 8, 9], 4).unwrap();
+        assert_eq!(toks, vec![6, 7, 8, 9]);
+        assert_eq!(pos, 5);
+        // CCM stages the query alone at the memory's position cursor.
+        sm.get_or_create("ccm");
+        let (toks, pos) = sm.stage_input("ccm", &[9], 8).unwrap();
+        assert_eq!(toks, vec![9]);
+        assert_eq!(pos, 0);
+        assert!(sm.stage_input("ghost", &[1], 8).is_err());
+    }
+
+    #[test]
+    fn budget_eviction_prefers_expensive_full_context_tier() {
+        let m = manifest();
+        let mut sm = SessionManager::with_policy(&m, SessionPolicy::concat(2));
+        sm.set_eviction(EvictionKind::LargestBytes.build());
+        // An old CCM session with one compressed chunk vs a newer
+        // full-context session holding many raw tokens: cost-aware
+        // eviction must take the expensive tier first.
+        sm.get_or_create("ccm").mem.update(&fake_chunk(2, 2, 8)).unwrap();
+        sm.get_or_create_with("full", Some(StrategyKind::NoCompress));
+        sm.absorb("full", &(0..64).collect::<Vec<i32>>()).unwrap();
+        let ccm_bytes = sm.get("ccm").unwrap().kv_bytes();
+        assert!(sm.get("full").unwrap().kv_bytes() > ccm_bytes);
+        let evicted = sm.evict_to_budget(ccm_bytes);
+        assert_eq!(evicted, vec!["full"]);
+        assert!(sm.get("ccm").is_ok());
     }
 
     #[test]

@@ -166,7 +166,25 @@ pub fn serve_backend_factories(
 /// oldest|lru|largest-bytes] [--max-pending 256] [--kv-budget-mb 512]
 /// [--session-ttl-secs 600] [--reactor auto|threads|epoll]
 /// [--reactors auto|N] [--max-conns 16384]
-/// [--ipc-codec json|binary]`
+/// [--ipc-codec json|binary]
+/// [--strategy ccm|sliding-window|none] [--tiers SPEC]
+/// [--respawn-backoff-min-ms 50] [--respawn-backoff-max-ms 2000]
+/// [--shutdown-kill-after-secs 30] [--refusal-linger-secs 5]
+/// [--accept-backoff-ms 50]`
+///
+/// `--strategy` sets the default compression tier admitted sessions
+/// get when their first `context` carries no explicit `"strategy"`
+/// field; `--tiers` tunes per-tier QoS and retention, e.g.
+/// `ccm=8/4,sliding-window=4/2/16,none=1/1` as
+/// `kind=refill/burst[/window_kv]` (token-bucket refill per second,
+/// burst, and — for the sliding-window tier — its retained raw-KV
+/// token budget). Both forward to spawned workers.
+///
+/// The five posture flags expose supervision/transport constants that
+/// were previously baked in (defaults unchanged): the worker respawn
+/// backoff schedule, the shutdown drain kill deadline, how long a
+/// refused connection may linger while its refusal line drains, and
+/// the accept pause after an EMFILE/ENFILE accept failure.
 ///
 /// With `--shards N > 1`, each shard's executor thread owns a full
 /// runtime + engine (PJRT runtimes are thread-bound); sessions route
@@ -230,6 +248,19 @@ pub fn cli_serve(args: &Args) -> Result<()> {
     cfg.max_conns = args.usize("max-conns", cfg.max_conns)?;
     cfg.ipc_codec =
         server::IpcCodec::parse(&args.str_env("ipc-codec", "CCM_IPC_CODEC", "binary"))?;
+    cfg.default_strategy = compress::StrategyKind::parse(&args.str("strategy", "ccm"))?;
+    let tiers_spec = args.str("tiers", "");
+    if !tiers_spec.is_empty() {
+        cfg.tiers = compress::Tiers::parse(&tiers_spec)?;
+    }
+    cfg.respawn_backoff_min =
+        std::time::Duration::from_millis(args.u64("respawn-backoff-min-ms", 50)?);
+    cfg.respawn_backoff_max =
+        std::time::Duration::from_millis(args.u64("respawn-backoff-max-ms", 2000)?);
+    cfg.shutdown_kill_after =
+        std::time::Duration::from_secs(args.u64("shutdown-kill-after-secs", 30)?);
+    cfg.refusal_linger = std::time::Duration::from_secs(args.u64("refusal-linger-secs", 5)?);
+    cfg.accept_backoff = std::time::Duration::from_millis(args.u64("accept-backoff-ms", 50)?);
     let kv_budget_mb = args.usize("kv-budget-mb", 0)?;
     if kv_budget_mb > 0 {
         cfg.kv_budget_bytes = Some(kv_budget_mb * (1 << 20));
@@ -280,7 +311,13 @@ pub fn cli_serve(args: &Args) -> Result<()> {
                 ttl_secs.to_string(),
                 "--ipc-codec".into(),
                 cfg.ipc_codec.name().into(),
+                "--strategy".into(),
+                cfg.default_strategy.name().into(),
             ];
+            if !tiers_spec.is_empty() {
+                forward.push("--tiers".into());
+                forward.push(tiers_spec.clone());
+            }
             if !ckpt_path.is_empty() {
                 forward.push("--checkpoint".into());
                 forward.push(ckpt_path.clone());
@@ -341,6 +378,11 @@ pub fn cli_worker(args: &Args) -> Result<()> {
     cfg.max_pending = args.usize("max-pending", 256)?;
     cfg.ipc_codec =
         server::IpcCodec::parse(&args.str_env("ipc-codec", "CCM_IPC_CODEC", "binary"))?;
+    cfg.default_strategy = compress::StrategyKind::parse(&args.str("strategy", "ccm"))?;
+    let tiers_spec = args.str("tiers", "");
+    if !tiers_spec.is_empty() {
+        cfg.tiers = compress::Tiers::parse(&tiers_spec)?;
+    }
     let kv_budget_mb = args.usize("kv-budget-mb", 0)?;
     if kv_budget_mb > 0 {
         cfg.kv_budget_bytes = Some(kv_budget_mb * (1 << 20));
@@ -375,12 +417,13 @@ pub fn cli_stream(args: &Args) -> Result<()> {
     bench::experiments::fig8_streaming(&mut ctx, args)
 }
 
-/// `ccm bench [--clients 8] [--rounds 120] [--emit BENCH_8.json]` —
+/// `ccm bench [--clients 8] [--rounds 120] [--emit BENCH_9.json]` —
 /// serving-layer benchmark scenarios over the SimCompute backend (no
 /// artifacts needed): in-process serve throughput, the 2-worker IPC
 /// hop under BOTH `--ipc-codec` values (with the proxy's RTT p50/p99),
-/// a wide-fan-in stress profile, and the pinned `loadgen-mixed`
-/// paper-workload replay (`--loadgen-users`). `--emit PATH` writes the
+/// a wide-fan-in stress profile, and the pinned `loadgen-*` paper-
+/// workload replays (`--loadgen-users`): the mixed population plus a
+/// two-tier `dialog@ccm`/`dialog@none` split. `--emit PATH` writes the
 /// machine-readable `BENCH_<n>.json` perf trajectory; `ccm bench
 /// --compare OLD --against NEW` renders the markdown delta table CI
 /// puts in its job summary (nonzero exit past the RTT p99 budget).
@@ -396,9 +439,13 @@ pub fn cli_bench(args: &Args) -> Result<()> {
 /// protocol, with per-scenario latency percentiles, a separate refusal
 /// bucket, and sampled compression-quality scoring (ROUGE-L + peak-KV
 /// accounting). Without `--addr` it self-serves a `--shards`-way
-/// SimCompute server. `--scenario mixed|dialog|lamp|metaicl|stream`
-/// or an explicit `--mix dialog=4,metaicl=2,...` picks the population;
-/// `--emit PATH` writes the `BENCH_<n>.json`-schema report. The
+/// SimCompute server (`--strategy` sets its default compression
+/// tier). `--scenario mixed|dialog|lamp|metaicl|stream` or an
+/// explicit `--mix dialog=4,metaicl=2,...` picks the population; a
+/// mix entry may pin a compression tier (`dialog@ccm=3,dialog@none=1`
+/// — grammar `workload[@tier]=weight`), which splits that slice into
+/// its own report row. `--emit PATH` writes the
+/// `BENCH_<n>.json`-schema report. The
 /// operator handbook mapping each paper evaluation to its loadgen
 /// scenario is docs/SCENARIOS.md.
 pub fn cli_loadgen(args: &Args) -> Result<()> {

@@ -93,10 +93,13 @@ fn print_help() {
                  [--workers N]          one worker PROCESS per shard (supervised)\n\
                  [--worker-addr a,b]    connect to externally-started workers\n\
                  [--eviction POLICY]    oldest | lru | largest-bytes\n\
+                 [--strategy TIER]      default tier: ccm | sliding-window | none\n\
+                 [--tiers SPEC]         QoS buckets, e.g. ccm=8/4 (refill/burst)\n\
            worker --shard K --shards N  run one shard executor process (IPC)\n\
-           bench --emit BENCH_8.json    serving benchmarks (json vs binary IPC)\n\
+           bench --emit BENCH_9.json    serving benchmarks (json vs binary IPC)\n\
            loadgen --scenario mixed     open-loop paper-workload traffic replay\n\
                  [--users N --rate R]   population size / aggregate req/s\n\
+                 [--mix dialog@ccm=3,.] tiered population (workload[@tier]=w)\n\
                  [--addr HOST:PORT]     drive an external serve (else self-serve)\n\
            stream --budget 160          streaming perplexity (Figure 8)\n\
            reproduce --exp table1|fig7  regenerate a paper table/figure\n"

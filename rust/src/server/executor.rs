@@ -15,7 +15,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::compress::Compute;
+use crate::compress::{Compute, StrategyKind};
 use crate::coordinator::batcher::WorkKind;
 use crate::coordinator::Coordinator;
 use crate::model::manifest::Manifest;
@@ -23,11 +23,12 @@ use crate::server::router::partition_budget;
 use crate::server::{Reply, Request, ServerConfig, StatsQuery};
 use crate::util::json::escape;
 
-/// A query whose batch has not executed yet.
+/// A query whose batch has not executed yet. The response is formatted
+/// from the STAGED input length carried with the result (retained-
+/// context tiers prepend history to the query tokens).
 struct WaitingQuery {
     seq: u64,
     reply: Reply,
-    input_len: usize,
     topk: usize,
 }
 
@@ -69,7 +70,10 @@ impl<'a> Executor<'a> {
             cfg.max_wait,
         );
         coord.batcher.infer_priority = true; // queries are latency-sensitive
+        coord.batcher.set_tiers(cfg.tiers);
         coord.sessions.set_eviction(cfg.eviction.build());
+        coord.sessions.set_tiers(&cfg.tiers);
+        coord.sessions.set_default_strategy(cfg.default_strategy);
         let shards = cfg.shards.max(1);
         Executor {
             coord,
@@ -202,10 +206,24 @@ impl<'a> Executor<'a> {
         }
     }
 
+    /// The tier a request for `session` is accounted against: the
+    /// resident session's pinned strategy, else the request's explicit
+    /// one (first touch), else the server default.
+    fn strategy_of(&self, session: &str, requested: Option<StrategyKind>) -> StrategyKind {
+        self.coord
+            .sessions
+            .get(session)
+            .ok()
+            .map(|s| s.strategy)
+            .or(requested)
+            .unwrap_or_else(|| self.coord.sessions.default_strategy())
+    }
+
     fn admit(&mut self, req: Request, reply: Reply) {
         match req {
-            Request::Context { session, tokens } => {
-                if let Some(refusal) = self.refuse() {
+            Request::Context { session, tokens, strategy } => {
+                let strat = self.strategy_of(&session, strategy);
+                if let Some(refusal) = self.refuse(strat) {
                     let _ = reply.send(refusal);
                     return;
                 }
@@ -213,21 +231,25 @@ impl<'a> Executor<'a> {
                     let _ = reply.send(too_long("chunk", tokens.len(), self.chunk_max));
                     return;
                 }
-                self.coord.add_context(&session, tokens);
+                self.coord.add_context_strat(&session, tokens, strategy);
                 // Ack with the step the chunk will actually land on: t
                 // advances once per queued chunk, so two chunks queued
-                // in one window ack t+1 and t+2.
+                // in one window ack t+1 and t+2. `kv_bytes` is the
+                // tier-aware cost (compressed memory + retained raw).
                 let queued = self.coord.batcher.queued_for(&session, WorkKind::Compress);
                 let s = self.coord.sessions.get_or_create(&session);
                 let msg = format!(
-                    "{{\"ok\":true,\"kind\":\"context\",\"t\":{},\"kv_bytes\":{}}}",
+                    "{{\"ok\":true,\"kind\":\"context\",\"t\":{},\"kv_bytes\":{},\
+                     \"strategy\":{}}}",
                     s.t + queued,
-                    s.mem.kv_bytes()
+                    s.kv_bytes(),
+                    escape(s.strategy.name())
                 );
                 let _ = reply.send(msg);
             }
             Request::Query { session, tokens, topk } => {
-                if let Some(refusal) = self.refuse() {
+                let strat = self.strategy_of(&session, None);
+                if let Some(refusal) = self.refuse(strat) {
                     let _ = reply.send(refusal);
                     return;
                 }
@@ -235,9 +257,8 @@ impl<'a> Executor<'a> {
                     let _ = reply.send(too_long("input", tokens.len(), self.input_max));
                     return;
                 }
-                let input_len = tokens.len();
                 let seq = self.coord.query(&session, tokens);
-                self.waiting.push_back(WaitingQuery { seq, reply, input_len, topk });
+                self.waiting.push_back(WaitingQuery { seq, reply, topk });
             }
             Request::Stats(q) => {
                 let _ = reply.send(self.stats_json(&q));
@@ -252,8 +273,9 @@ impl<'a> Executor<'a> {
     }
 
     /// Admission control: refuse new work while draining or over the
-    /// pending bound. Returns the refusal response, if any.
-    fn refuse(&mut self) -> Option<String> {
+    /// pending bound. Returns the refusal response, if any; overload
+    /// refusals are attributed to the requesting session's tier.
+    fn refuse(&mut self, strat: StrategyKind) -> Option<String> {
         if self.draining {
             return Some(format!(
                 "{{\"ok\":false,\"error\":\"shutting_down\",\"pending\":{}}}",
@@ -262,6 +284,7 @@ impl<'a> Executor<'a> {
         }
         if self.coord.pending() >= self.max_pending {
             self.coord.metrics.rejected_overload += 1;
+            self.coord.metrics.by_strategy[strat.index()].refusals += 1;
             return Some(format!(
                 "{{\"ok\":false,\"error\":\"overloaded\",\"pending\":{}}}",
                 self.coord.pending()
@@ -273,8 +296,8 @@ impl<'a> Executor<'a> {
     fn deliver_finished(&mut self) {
         let coord = &mut self.coord;
         self.waiting.retain(|w| {
-            if let Some(logits) = coord.take_result(w.seq) {
-                let msg = format_query_response(&logits, w.input_len, w.topk);
+            if let Some((logits, staged_len)) = coord.take_result_staged(w.seq) {
+                let msg = format_query_response(&logits, staged_len, w.topk);
                 let _ = w.reply.send(msg);
                 false
             } else {
@@ -309,7 +332,7 @@ impl<'a> Executor<'a> {
              \"pending\":{},\"waiting\":{},\"requests\":{},\"compressions\":{},\"inferences\":{},\
              \"batches\":{},\"rejected_overload\":{},\"sessions_evicted\":{},\
              \"sessions_reaped\":{},\"priority_overrides\":{},\"peak_kv_bytes\":{},\
-             {reactor_field}{detail_field}\"report\":{}}}",
+             \"strategies\":{},{reactor_field}{detail_field}\"report\":{}}}",
             self.shard,
             escape(self.coord.sessions.eviction_name()),
             self.coord.sessions.len(),
@@ -328,8 +351,39 @@ impl<'a> Executor<'a> {
             m.sessions_reaped,
             self.coord.batcher.total_overrides(),
             m.peak_kv_bytes,
+            self.strategies_json(),
             escape(&m.report()),
         )
+    }
+
+    /// Per-tier accounting: resident sessions + tier-aware KV bytes
+    /// (live gauges from the session census), compress/infer work,
+    /// lossy-retention drops, overload refusals, and scheduling
+    /// overrides charged to the tier. Every tier is always present
+    /// (zeroed when unused) so the router's merge can sum blindly.
+    fn strategies_json(&self) -> String {
+        let census = self.coord.sessions.census();
+        let overrides = self.coord.batcher.overrides_by_strategy();
+        let rows: Vec<String> = StrategyKind::ALL
+            .iter()
+            .map(|k| {
+                let i = k.index();
+                let by = &self.coord.metrics.by_strategy[i];
+                format!(
+                    "{}:{{\"sessions\":{},\"kv_bytes\":{},\"compressions\":{},\
+                     \"inferences\":{},\"tokens_dropped\":{},\"refusals\":{},\"overrides\":{}}}",
+                    escape(k.name()),
+                    census[i].0,
+                    census[i].1,
+                    by.compressions,
+                    by.inferences,
+                    by.tokens_dropped,
+                    by.refusals,
+                    overrides[i]
+                )
+            })
+            .collect();
+        format!("{{{}}}", rows.join(","))
     }
 
     /// Per-session accounting rows, sorted by session id: the ROADMAP
@@ -342,16 +396,18 @@ impl<'a> Executor<'a> {
         let rows: Vec<String> = self
             .coord
             .sessions
-            .snapshot_filtered(now, q.prefix.as_deref(), q.limit)
+            .snapshot_filtered(now, q.prefix.as_deref(), q.after_id.as_deref(), q.limit)
             .into_iter()
             .map(|s| {
                 format!(
-                    "{{\"id\":{},\"t\":{},\"kv_bytes\":{},\"age_ms\":{},\"idle_ms\":{}}}",
+                    "{{\"id\":{},\"t\":{},\"kv_bytes\":{},\"age_ms\":{},\"idle_ms\":{},\
+                     \"strategy\":{}}}",
                     escape(&s.id),
                     s.t,
                     s.kv_bytes,
                     s.age.as_millis(),
-                    s.idle.as_millis()
+                    s.idle.as_millis(),
+                    escape(s.strategy.name())
                 )
             })
             .collect();
@@ -427,7 +483,11 @@ mod tests {
         // Two chunks queued in one window ack t=1 and t=2 (seed bug:
         // both acked t=1).
         let (tx, rx) = channel();
-        let ctx = |toks: Vec<i32>| Request::Context { session: "u".into(), tokens: toks };
+        let ctx = |toks: Vec<i32>| Request::Context {
+            session: "u".into(),
+            tokens: toks,
+            strategy: None,
+        };
         ex.admit(ctx(vec![4, 5]), reply_to(&tx));
         assert_eq!(recv_json(&rx).get("t").unwrap().i64().unwrap(), 1);
         ex.admit(ctx(vec![6, 7]), reply_to(&tx));
@@ -592,6 +652,106 @@ mod tests {
         // Without injection the field is absent.
         let j = Json::parse(&ex.stats_json(&StatsQuery::default())).unwrap();
         assert!(j.opt("per_reactor").is_none());
+    }
+
+    #[test]
+    fn stats_detail_after_id_cursor_chains_pages() {
+        let mut ex = toy_executor(|_| {});
+        for id in ["u0", "u1", "u2", "u3", "u4"] {
+            ex.coord.add_context(id, vec![1]);
+        }
+        ex.coord.run_until_idle().unwrap();
+        let page = |ex: &Executor, after: Option<&str>| -> Vec<String> {
+            let q = StatsQuery {
+                detail: true,
+                after_id: after.map(str::to_string),
+                limit: Some(2),
+                ..Default::default()
+            };
+            Json::parse(&ex.stats_json(&q))
+                .unwrap()
+                .get("sessions_detail")
+                .unwrap()
+                .arr()
+                .unwrap()
+                .iter()
+                .map(|s| s.get("id").unwrap().str().unwrap().to_string())
+                .collect()
+        };
+        assert_eq!(page(&ex, None), vec!["u0", "u1"]);
+        assert_eq!(page(&ex, Some("u1")), vec!["u2", "u3"]);
+        assert_eq!(page(&ex, Some("u3")), vec!["u4"]);
+        assert!(page(&ex, Some("u4")).is_empty(), "past the last id the page is empty");
+    }
+
+    #[test]
+    fn admission_pins_strategy_and_stats_report_per_tier_counters() {
+        let mut ex = toy_executor(|_| {});
+        let (tx, rx) = channel();
+        let ctx = |sess: &str, strat: Option<StrategyKind>| Request::Context {
+            session: sess.into(),
+            tokens: vec![1, 2],
+            strategy: strat,
+        };
+        ex.admit(ctx("w", Some(StrategyKind::SlidingWindow)), reply_to(&tx));
+        assert_eq!(recv_json(&rx).get("strategy").unwrap().str().unwrap(), "sliding-window");
+        ex.admit(ctx("c", None), reply_to(&tx));
+        assert_eq!(recv_json(&rx).get("strategy").unwrap().str().unwrap(), "ccm");
+        // A later chunk cannot re-tier the session: first touch pinned it.
+        ex.admit(ctx("w", Some(StrategyKind::NoCompress)), reply_to(&tx));
+        assert_eq!(recv_json(&rx).get("strategy").unwrap().str().unwrap(), "sliding-window");
+        ex.coord.run_until_idle().unwrap();
+
+        let j = Json::parse(&ex.stats_json(&StatsQuery::detailed())).unwrap();
+        let strat = j.get("strategies").unwrap();
+        let win = strat.get("sliding-window").unwrap();
+        assert_eq!(win.get("sessions").unwrap().usize().unwrap(), 1);
+        assert_eq!(win.get("compressions").unwrap().usize().unwrap(), 2);
+        let ccm = strat.get("ccm").unwrap();
+        assert_eq!(ccm.get("sessions").unwrap().usize().unwrap(), 1);
+        assert_eq!(ccm.get("compressions").unwrap().usize().unwrap(), 1);
+        let none = strat.get("none").unwrap();
+        assert_eq!(none.get("sessions").unwrap().usize().unwrap(), 0, "zeroed tier present");
+        // Detail rows carry the pinned tier.
+        let rows = j.get("sessions_detail").unwrap().arr().unwrap();
+        let by_id = |id: &str| {
+            rows.iter()
+                .find(|r| r.get("id").unwrap().str().unwrap() == id)
+                .unwrap()
+                .get("strategy")
+                .unwrap()
+                .str()
+                .unwrap()
+                .to_string()
+        };
+        assert_eq!(by_id("w"), "sliding-window");
+        assert_eq!(by_id("c"), "ccm");
+    }
+
+    #[test]
+    fn overload_refusals_are_attributed_to_the_sessions_tier() {
+        let mut ex = toy_executor(|cfg| cfg.max_pending = 1);
+        let (tx, rx) = channel();
+        ex.admit(
+            Request::Context {
+                session: "w".into(),
+                tokens: vec![1],
+                strategy: Some(StrategyKind::SlidingWindow),
+            },
+            reply_to(&tx),
+        );
+        let _ = recv_json(&rx);
+        // The queue is now full; the same session's next chunk refuses
+        // under ITS tier, not the default.
+        ex.admit(
+            Request::Context { session: "w".into(), tokens: vec![2], strategy: None },
+            reply_to(&tx),
+        );
+        assert_eq!(recv_json(&rx).get("error").unwrap().str().unwrap(), "overloaded");
+        let i = StrategyKind::SlidingWindow.index();
+        assert_eq!(ex.coord.metrics.by_strategy[i].refusals, 1);
+        assert_eq!(ex.coord.metrics.rejected_overload, 1);
+        ex.coord.run_until_idle().unwrap();
     }
 
     #[test]

@@ -78,6 +78,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::compress::StrategyKind;
 use crate::server::{fmt_tokens, IpcCodec, Reply, Request, StatsQuery, SHARD_UNAVAILABLE};
 use crate::util::json::{escape, Json};
 
@@ -94,8 +95,13 @@ pub(crate) const BIN_MAGIC: u8 = 0xCC;
 /// length.
 const BIN_HEADER: usize = 5;
 
-/// IPC protocol version carried by the hello handshake.
-pub(crate) const IPC_VERSION: u64 = 1;
+/// IPC protocol version carried by the hello handshake. Version 2
+/// added the per-session compression-strategy byte on binary context
+/// frames and the `after_id` stats cursor; both are encoded only when
+/// the peer's hello ack reported version >= 2, so a v1 worker still
+/// attaches and simply serves every session on the default tier (the
+/// JSON codec needs no gating — unknown keys are ignored there).
+pub(crate) const IPC_VERSION: u64 = 2;
 
 /// Most frames a writer thread packs into one gathered `writev`
 /// submission (matches `poll::WRITE_GATHER_MAX`, the Linux `IOV_MAX`).
@@ -237,11 +243,17 @@ impl FrameBuf {
 /// front-end renders transport rows itself in the merged view.
 pub(crate) fn encode_request(id: u64, req: &Request) -> String {
     match req {
-        Request::Context { session, tokens } => format!(
-            "{{\"id\":{id},\"op\":\"context\",\"session\":{},\"tokens\":{}}}\n",
-            escape(session),
-            fmt_tokens(tokens)
-        ),
+        Request::Context { session, tokens, strategy } => {
+            let strategy = match strategy {
+                Some(k) => format!(",\"strategy\":\"{}\"", k.name()),
+                None => String::new(),
+            };
+            format!(
+                "{{\"id\":{id},\"op\":\"context\",\"session\":{},\"tokens\":{}{strategy}}}\n",
+                escape(session),
+                fmt_tokens(tokens)
+            )
+        }
         Request::Query { session, tokens, topk } => format!(
             "{{\"id\":{id},\"op\":\"query\",\"session\":{},\"tokens\":{},\"topk\":{topk}}}\n",
             escape(session),
@@ -251,6 +263,9 @@ pub(crate) fn encode_request(id: u64, req: &Request) -> String {
             let mut s = format!("{{\"id\":{id},\"op\":\"stats\",\"detail\":{}", q.detail);
             if let Some(prefix) = &q.prefix {
                 s.push_str(&format!(",\"prefix\":{}", escape(prefix)));
+            }
+            if let Some(after) = &q.after_id {
+                s.push_str(&format!(",\"after_id\":{}", escape(after)));
             }
             if let Some(limit) = q.limit {
                 s.push_str(&format!(",\"limit\":{limit}"));
@@ -365,6 +380,17 @@ pub(crate) fn hello_grants_binary(resp: &str) -> bool {
     }
 }
 
+/// The protocol version a hello reply reports. Absent or unparsable
+/// reads as 1 — the pre-versioned wire, which never carries the v2
+/// fields — so a peer that predates the field negotiates down safely.
+pub(crate) fn hello_peer_version(resp: &str) -> u64 {
+    match Json::parse(resp) {
+        Ok(j) => j.opt("version").and_then(|v| v.i64().ok()).filter(|&v| v >= 1).unwrap_or(1)
+            as u64,
+        Err(_) => 1,
+    }
+}
+
 // ---------------------------------------------------------------------
 // Binary frame codec (layout in the module docs).
 
@@ -377,6 +403,9 @@ const BIN_REPLY: u8 = 5;
 const STATS_DETAIL: u8 = 1;
 const STATS_HAS_PREFIX: u8 = 2;
 const STATS_HAS_LIMIT: u8 = 4;
+/// v2: the stats frame carries an `after_id` cursor string (between
+/// the prefix and the limit).
+const STATS_HAS_AFTER: u8 = 8;
 
 fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
@@ -409,13 +438,22 @@ fn finish_frame(out: &mut Vec<u8>) {
 
 /// Encode one request as a binary frame into `out` (reused buffer).
 /// Same contract as [`encode_request`]: `Stats.per_reactor` never
-/// crosses the IPC boundary.
-pub(crate) fn encode_request_bin(id: u64, req: &Request, out: &mut Vec<u8>) {
+/// crosses the IPC boundary. `peer_version` is the version the peer's
+/// hello ack reported: the v2 fields (context strategy byte, stats
+/// `after_id`) are encoded only when the peer understands them, so a
+/// v1 worker's exact-length decoder never sees trailing bytes — the
+/// fields are dropped and the worker serves the default tier.
+pub(crate) fn encode_request_bin(id: u64, req: &Request, peer_version: u64, out: &mut Vec<u8>) {
     match req {
-        Request::Context { session, tokens } => {
+        Request::Context { session, tokens, strategy } => {
             start_frame(out, BIN_REQ_CONTEXT, id);
             put_str(out, session);
             put_tokens(out, tokens);
+            if peer_version >= 2 {
+                // One trailing byte: 0 = no explicit tier requested,
+                // else `StrategyKind::wire()`.
+                out.push(strategy.map_or(0, |k| k.wire()));
+            }
         }
         Request::Query { session, tokens, topk } => {
             start_frame(out, BIN_REQ_QUERY, id);
@@ -435,9 +473,17 @@ pub(crate) fn encode_request_bin(id: u64, req: &Request, out: &mut Vec<u8>) {
             if q.limit.is_some() {
                 flags |= STATS_HAS_LIMIT;
             }
+            if q.after_id.is_some() && peer_version >= 2 {
+                flags |= STATS_HAS_AFTER;
+            }
             out.push(flags);
             if let Some(prefix) = &q.prefix {
                 put_str(out, prefix);
+            }
+            if flags & STATS_HAS_AFTER != 0 {
+                // lint: allow(unwrap) — the flag is set only when
+                // `after_id` is Some, two lines up.
+                put_str(out, q.after_id.as_deref().expect("flag implies cursor"));
             }
             if let Some(limit) = q.limit {
                 put_u64(out, limit as u64);
@@ -511,7 +557,21 @@ pub(crate) fn decode_request_bin(payload: &[u8]) -> Result<(u64, Request)> {
     let kind = r.u8().context("binary request frame")?;
     let id = r.u64()?;
     let req = match kind {
-        BIN_REQ_CONTEXT => Request::Context { session: r.str()?, tokens: r.tokens()? },
+        BIN_REQ_CONTEXT => {
+            let session = r.str()?;
+            let tokens = r.tokens()?;
+            // v2 appends one strategy byte; a v1 front-end sends none.
+            // Tolerating both lets any version pair interoperate.
+            let strategy = if r.at < r.b.len() {
+                match r.u8()? {
+                    0 => None,
+                    b => Some(StrategyKind::from_wire(b)?),
+                }
+            } else {
+                None
+            };
+            Request::Context { session, tokens, strategy }
+        }
         BIN_REQ_QUERY => Request::Query {
             session: r.str()?,
             tokens: r.tokens()?,
@@ -520,10 +580,12 @@ pub(crate) fn decode_request_bin(payload: &[u8]) -> Result<(u64, Request)> {
         BIN_REQ_STATS => {
             let flags = r.u8()?;
             let prefix = if flags & STATS_HAS_PREFIX != 0 { Some(r.str()?) } else { None };
+            let after_id = if flags & STATS_HAS_AFTER != 0 { Some(r.str()?) } else { None };
             let limit = if flags & STATS_HAS_LIMIT != 0 { Some(r.u64()? as usize) } else { None };
             Request::Stats(StatsQuery {
                 detail: flags & STATS_DETAIL != 0,
                 prefix,
+                after_id,
                 limit,
                 per_reactor: None,
             })
@@ -742,6 +804,10 @@ struct ProxyInner {
     /// Encode requests in binary on the current connection (set once
     /// the worker's hello ack grants it; reset on every attach).
     bin: bool,
+    /// The peer's negotiated IPC version (from its hello ack; 1 until
+    /// the ack arrives, and for peers that predate the field). Gates
+    /// the v2 binary fields — JSON needs no gating.
+    peer_version: u64,
     /// Pipelining id of the current connection's in-flight hello, so
     /// `complete` consumes the ack internally instead of looking it up
     /// in `pending`.
@@ -793,6 +859,7 @@ impl WorkerProxy {
                 pending: HashMap::new(),
                 next_id: 0,
                 bin: false,
+                peer_version: 1,
                 hello_id: None,
             }),
             table,
@@ -870,7 +937,7 @@ impl WorkerProxy {
         inner.next_id += 1;
         let mut frame = self.pool.take();
         if inner.bin {
-            encode_request_bin(id, &req, &mut frame);
+            encode_request_bin(id, &req, inner.peer_version, &mut frame);
         } else {
             frame.clear();
             frame.extend_from_slice(encode_request(id, &req).as_bytes());
@@ -927,6 +994,7 @@ impl WorkerProxy {
         {
             let mut inner = self.inner.lock().unwrap();
             inner.bin = false;
+            inner.peer_version = 1;
             inner.hello_id = None;
             if self.codec == IpcCodec::Binary {
                 // Assigned under the same lock that orders dispatches,
@@ -1018,6 +1086,7 @@ impl WorkerProxy {
             // `pending` and no client is waiting on it.
             inner.hello_id = None;
             inner.bin = hello_grants_binary(&resp);
+            inner.peer_version = hello_peer_version(&resp);
             if !inner.bin {
                 crate::info!(
                     "worker {}: peer declined the binary codec; staying on json",
@@ -1061,6 +1130,7 @@ impl WorkerProxy {
             inner.out = None;
             // The next attach renegotiates from scratch.
             inner.bin = false;
+            inner.peer_version = 1;
             inner.hello_id = None;
             let mut acked = Vec::new();
             for (_, p) in inner.pending.drain() {
@@ -1116,11 +1186,20 @@ mod tests {
         let tokens: Vec<i32> =
             (0..rng.range(0, 9)).map(|_| rng.range(0, 65_536) as i32 - 32_768).collect();
         match rng.range(0, 4) {
-            0 => Request::Context { session, tokens },
+            0 => {
+                let strategy = match rng.range(0, 4) {
+                    0 => None,
+                    1 => Some(StrategyKind::Ccm),
+                    2 => Some(StrategyKind::SlidingWindow),
+                    _ => Some(StrategyKind::NoCompress),
+                };
+                Request::Context { session, tokens, strategy }
+            }
             1 => Request::Query { session, tokens, topk: rng.range(1, 64) },
             2 => Request::Stats(StatsQuery {
                 detail: rng.bool(0.5),
                 prefix: rng.bool(0.5).then(|| format!("p{}", rng.range(0, 10))),
+                after_id: rng.bool(0.5).then(|| format!("u{}", rng.range(0, 50))),
                 limit: rng.bool(0.5).then(|| rng.range(0, 100)),
                 per_reactor: None,
             }),
@@ -1180,7 +1259,10 @@ mod tests {
         // Split a multi-frame stream at EVERY byte boundary: the decoder
         // must recover the identical frame sequence from each split.
         let frames = [
-            encode_request(1, &Request::Context { session: "a".into(), tokens: vec![1, 2] }),
+            encode_request(
+                1,
+                &Request::Context { session: "a".into(), tokens: vec![1, 2], strategy: None },
+            ),
             encode_reply(2, "{\"ok\":true,\"kind\":\"query\",\"next\":[[7,-0.5]]}"),
             encode_request(3, &Request::Shutdown),
         ];
@@ -1298,7 +1380,7 @@ mod tests {
             let id = rng.next_u64() >> 12;
             let req = arbitrary_request(rng);
             let mut frame = Vec::new();
-            encode_request_bin(id, &req, &mut frame);
+            encode_request_bin(id, &req, IPC_VERSION, &mut frame);
             crate::prop_assert!(frame[0] == BIN_MAGIC, "frame must open with the magic");
             let declared = u32::from_le_bytes([frame[1], frame[2], frame[3], frame[4]]) as usize;
             crate::prop_assert!(declared == frame.len() - 5, "length prefix must be exact");
@@ -1333,7 +1415,7 @@ mod tests {
             let via_json = decode_request(encode_request(id, &req).trim_end())
                 .map_err(|e| format!("json: {e:#}"))?;
             let mut frame = Vec::new();
-            encode_request_bin(id, &req, &mut frame);
+            encode_request_bin(id, &req, IPC_VERSION, &mut frame);
             let via_bin = decode_request_bin(&frame[5..]).map_err(|e| format!("bin: {e:#}"))?;
             crate::prop_assert!(
                 via_json == via_bin,
@@ -1364,7 +1446,7 @@ mod tests {
                 1 => stream.extend_from_slice(encode_reply(i, &arbitrary_reply(rng)).as_bytes()),
                 2 => {
                     let mut f = Vec::new();
-                    encode_request_bin(i, &arbitrary_request(rng), &mut f);
+                    encode_request_bin(i, &arbitrary_request(rng), IPC_VERSION, &mut f);
                     stream.extend_from_slice(&f);
                 }
                 _ => {
@@ -1469,6 +1551,77 @@ mod tests {
         assert!(!hello_grants_binary(&hello_ack(IpcCodec::Json)));
         assert!(!hello_grants_binary("{\"ok\":false,\"error\":\"unknown op \\\"hello\\\"\"}"));
         assert!(!hello_grants_binary("not json"));
+    }
+
+    #[test]
+    fn hello_ack_version_parses_and_negotiates_down() {
+        // Our own ack reports the current version...
+        assert_eq!(hello_peer_version(&hello_ack(IpcCodec::Binary)), IPC_VERSION);
+        // ...a pre-versioned peer's ack (no field), an error reply, and
+        // garbage all read as v1 — the wire that never carries the v2
+        // fields.
+        assert_eq!(hello_peer_version("{\"ok\":true,\"kind\":\"hello\",\"codec\":\"binary\"}"), 1);
+        assert_eq!(hello_peer_version("{\"ok\":false,\"error\":\"unknown op\"}"), 1);
+        assert_eq!(hello_peer_version("not json"), 1);
+        assert_eq!(hello_peer_version("{\"version\":0}"), 1, "nonsense versions clamp to 1");
+    }
+
+    #[test]
+    fn v2_binary_context_carries_the_strategy_byte() {
+        let req = Request::Context {
+            session: "u".into(),
+            tokens: vec![1, 2],
+            strategy: Some(StrategyKind::SlidingWindow),
+        };
+        let mut frame = Vec::new();
+        encode_request_bin(7, &req, 2, &mut frame);
+        let (id, got) = decode_request_bin(&frame[5..]).unwrap();
+        assert_eq!(id, 7);
+        assert_eq!(got, req);
+        // No explicit tier encodes as the reserved 0 byte and decodes
+        // back to None.
+        let none = Request::Context { session: "u".into(), tokens: vec![1], strategy: None };
+        encode_request_bin(8, &none, 2, &mut frame);
+        assert_eq!(decode_request_bin(&frame[5..]).unwrap().1, none);
+    }
+
+    #[test]
+    fn v1_binary_encoding_drops_the_v2_fields() {
+        // Talking to a v1 worker: the strategy byte is omitted (its
+        // exact-length decoder would reject trailing bytes), so the
+        // request decodes with the field defaulted — negotiate-down.
+        let req = Request::Context {
+            session: "u".into(),
+            tokens: vec![4],
+            strategy: Some(StrategyKind::NoCompress),
+        };
+        let mut frame = Vec::new();
+        encode_request_bin(9, &req, 1, &mut frame);
+        let (_, got) = decode_request_bin(&frame[5..]).unwrap();
+        assert_eq!(
+            got,
+            Request::Context { session: "u".into(), tokens: vec![4], strategy: None },
+            "a v1 frame must decode with no explicit tier"
+        );
+        // Same for the stats cursor: the flag (and string) are dropped.
+        let stats = Request::Stats(StatsQuery {
+            detail: true,
+            prefix: Some("u".into()),
+            after_id: Some("u3".into()),
+            limit: Some(5),
+            per_reactor: None,
+        });
+        encode_request_bin(10, &stats, 1, &mut frame);
+        let (_, got) = decode_request_bin(&frame[5..]).unwrap();
+        let Request::Stats(q) = got else { panic!("stats frame decoded as {got:?}") };
+        assert_eq!(q.after_id, None, "v1 frames cannot carry the cursor");
+        assert_eq!(q.prefix.as_deref(), Some("u"));
+        assert_eq!(q.limit, Some(5));
+        // At v2 the cursor survives.
+        encode_request_bin(11, &stats, 2, &mut frame);
+        let (_, got) = decode_request_bin(&frame[5..]).unwrap();
+        let Request::Stats(q) = got else { panic!("stats frame decoded as {got:?}") };
+        assert_eq!(q.after_id.as_deref(), Some("u3"));
     }
 
     #[test]
@@ -1609,7 +1762,7 @@ mod tests {
         // the socket, and completion of that reply happens-before the
         // recv above returned, so the upgrade is visible now.)
         let (tx, rx) = mpsc_channel();
-        let req = Request::Context { session: "u".into(), tokens: vec![3] };
+        let req = Request::Context { session: "u".into(), tokens: vec![3], strategy: None };
         proxy.dispatch(req, Reply::channel(tx)).unwrap();
         let (bin_id, bin) = read_frame(&mut fb, &mut worker_side);
         assert!(bin, "post-ack requests must be binary");

@@ -133,9 +133,16 @@
 //!
 //! Requests:
 //!   {"op":"context","session":"u1","tokens":[5,6,7]}
+//!   {"op":"context","session":"u1","tokens":[5,6,7],"strategy":"ccm"}
+//!       `strategy` (`ccm` | `sliding-window` | `none`) selects the
+//!       session's compression tier AT ADMISSION — the first context
+//!       chunk that creates the session pins it; later values are
+//!       ignored (a session's memory shape cannot change mid-stream).
+//!       Absent → the server's `--strategy` default (ccm).
 //!   {"op":"query","session":"u1","tokens":[9,2],"topk":5}
 //!   {"op":"stats"}            {"op":"stats","detail":true}
 //!   {"op":"stats","detail":true,"prefix":"user-","limit":100}
+//!   {"op":"stats","detail":true,"after_id":"user-1041","limit":100}
 //!   {"op":"shutdown"}
 //!
 //! Responses:
@@ -163,7 +170,16 @@
 //!       fleets with large resident-session counts the detail view can
 //!       be bounded: `"prefix"` keeps only ids starting with it, and
 //!       `"limit"` truncates to the first N rows by id (applied after
-//!       the cross-shard merge, so it is a global bound). Under the
+//!       the cross-shard merge, so it is a global bound). `"after_id"`
+//!       is a cursor token: only ids strictly greater than it are
+//!       returned, so `limit`-sized pages chain (`after_id` = last id
+//!       of the previous page) without re-scanning or re-sending
+//!       earlier rows. The stats object also carries a `strategies`
+//!       map — per compression tier (`ccm`, `sliding-window`, `none`):
+//!       resident `sessions`, `kv_bytes`, `compressions`, `inferences`,
+//!       `tokens_dropped` (lossy-retention drops), and scheduling
+//!       `overrides` charged to that tier — summed across shards in
+//!       the merged view. Under the
 //!       epoll front-end the response also carries `per_reactor` — one
 //!       object per reactor thread (`reactor`, `conns` currently open,
 //!       `accepted` total, `lines` framed, `refusals`) — so operators
@@ -256,7 +272,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::compress::{Compute, Engine};
+use crate::compress::{Compute, Engine, StrategyKind, Tiers};
 use crate::coordinator::session::{EvictionKind, SessionPolicy};
 use crate::model::manifest::Manifest;
 use crate::model::Checkpoint;
@@ -280,6 +296,9 @@ pub use worker::{run_worker, serve_workers, WorkerLauncher, WorkerMode, WORKER_R
 pub struct StatsQuery {
     pub detail: bool,
     pub prefix: Option<String>,
+    /// Cursor token: only session ids strictly greater than this are
+    /// returned, so pages chain without re-scanning earlier rows.
+    pub after_id: Option<String>,
     pub limit: Option<usize>,
     pub per_reactor: Option<String>,
 }
@@ -293,7 +312,9 @@ impl StatsQuery {
 
 #[derive(Debug, PartialEq, Eq)]
 pub enum Request {
-    Context { session: String, tokens: Vec<i32> },
+    /// `strategy` applies only when this admission creates the session
+    /// (first touch pins the tier); `None` means the server default.
+    Context { session: String, tokens: Vec<i32>, strategy: Option<StrategyKind> },
     Query { session: String, tokens: Vec<i32>, topk: usize },
     Stats(StatsQuery),
     Shutdown,
@@ -314,7 +335,16 @@ impl Request {
         };
         let session = || -> Result<String> { Ok(j.get("session")?.str()?.to_string()) };
         Ok(match op.as_str() {
-            "context" => Request::Context { session: session()?, tokens: tokens()? },
+            "context" => Request::Context {
+                session: session()?,
+                tokens: tokens()?,
+                // A present-but-unknown strategy is a client error and
+                // refused (silently defaulting would mis-tier quietly).
+                strategy: match j.opt("strategy").and_then(|v| v.str().ok()) {
+                    Some(name) => Some(StrategyKind::parse(name)?),
+                    None => None,
+                },
+            },
             "query" => Request::Query {
                 session: session()?,
                 tokens: tokens()?,
@@ -323,6 +353,7 @@ impl Request {
             "stats" => Request::Stats(StatsQuery {
                 detail: matches!(j.opt("detail"), Some(Json::Bool(true))),
                 prefix: j.opt("prefix").and_then(|v| v.str().ok()).map(str::to_string),
+                after_id: j.opt("after_id").and_then(|v| v.str().ok()).map(str::to_string),
                 limit: j.opt("limit").and_then(|v| v.usize().ok()),
                 per_reactor: None,
             }),
@@ -525,6 +556,29 @@ pub struct ServerConfig {
     /// to [`IpcCodec::from_env`] (`CCM_IPC_CODEC` if valid, else
     /// binary).
     pub ipc_codec: IpcCodec,
+    /// Compression tier for sessions admitted without an explicit
+    /// `"strategy"` field (`--strategy`, default `ccm`).
+    pub default_strategy: StrategyKind,
+    /// Per-tier retention + QoS shapes (`--tiers`): token-bucket
+    /// refill/burst for priority overrides and the sliding-window
+    /// tier's raw-KV budget.
+    pub tiers: Tiers,
+    /// Worker-supervisor respawn backoff floor (`--respawn-backoff-min`;
+    /// the schedule doubles from here after each failed spawn/attach).
+    pub respawn_backoff_min: Duration,
+    /// Worker-supervisor respawn backoff ceiling (`--respawn-backoff-max`).
+    pub respawn_backoff_max: Duration,
+    /// How long shutdown waits for a worker to drain before killing it
+    /// (`--shutdown-kill-after`) so shutdown always completes.
+    pub shutdown_kill_after: Duration,
+    /// How long a refused (over `--max-conns`) connection is kept open
+    /// to flush its refusal line under the epoll front-end
+    /// (`--refusal-linger`).
+    pub refusal_linger: Duration,
+    /// Listener pause after a failed accept under the epoll front-end
+    /// (`--accept-backoff`) — EMFILE etc. resolve by waiting, and
+    /// re-polling instantly would spin.
+    pub accept_backoff: Duration,
 }
 
 impl ServerConfig {
@@ -547,6 +601,13 @@ impl ServerConfig {
             max_conns: 16_384,
             max_line_bytes: 256 * 1024,
             ipc_codec: IpcCodec::from_env(),
+            default_strategy: StrategyKind::Ccm,
+            tiers: Tiers::default(),
+            respawn_backoff_min: Duration::from_millis(50),
+            respawn_backoff_max: Duration::from_secs(2),
+            shutdown_kill_after: Duration::from_secs(30),
+            refusal_linger: Duration::from_secs(5),
+            accept_backoff: Duration::from_millis(50),
         }
     }
 }
@@ -1130,6 +1191,23 @@ impl Client {
         ))
     }
 
+    /// Admit a context chunk under an explicit compression tier. Only
+    /// the chunk that CREATES the session pins the tier; on an existing
+    /// session the field is ignored.
+    pub fn add_context_tiered(
+        &mut self,
+        session: &str,
+        tokens: &[i32],
+        strategy: StrategyKind,
+    ) -> Result<Json> {
+        self.call(&format!(
+            "{{\"op\":\"context\",\"session\":{},\"tokens\":{},\"strategy\":{}}}",
+            escape(session),
+            fmt_tokens(tokens),
+            escape(strategy.name())
+        ))
+    }
+
     pub fn query(&mut self, session: &str, tokens: &[i32], topk: usize) -> Result<Vec<(i32, f32)>> {
         let resp = self.call(&format!(
             "{{\"op\":\"query\",\"session\":{},\"tokens\":{},\"topk\":{topk}}}",
@@ -1170,6 +1248,22 @@ impl Client {
         ))
     }
 
+    /// Next `limit`-sized detail page strictly after the cursor id
+    /// (pass the last id of the previous page; pages chain without
+    /// re-sending earlier rows). `prefix` composes with the cursor.
+    pub fn stats_page_after(
+        &mut self,
+        prefix: &str,
+        after_id: &str,
+        limit: usize,
+    ) -> Result<Json> {
+        self.call(&format!(
+            "{{\"op\":\"stats\",\"detail\":true,\"prefix\":{},\"after_id\":{},\"limit\":{limit}}}",
+            escape(prefix),
+            escape(after_id)
+        ))
+    }
+
     pub fn shutdown(&mut self) -> Result<()> {
         match self.call("{\"op\":\"shutdown\"}") {
             // The ack means "drained, listener closed"; an ok:false
@@ -1200,12 +1294,26 @@ mod tests {
     fn parses_requests() {
         let r = Request::parse(r#"{"op":"context","session":"u1","tokens":[1,2,3]}"#).unwrap();
         match r {
-            Request::Context { session, tokens } => {
+            Request::Context { session, tokens, strategy } => {
                 assert_eq!(session, "u1");
                 assert_eq!(tokens, vec![1, 2, 3]);
+                assert_eq!(strategy, None, "absent strategy means the server default");
             }
             _ => panic!("wrong kind"),
         }
+        let r = Request::parse(
+            r#"{"op":"context","session":"u1","tokens":[1],"strategy":"sliding-window"}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Context { strategy, .. } => {
+                assert_eq!(strategy, Some(StrategyKind::SlidingWindow));
+            }
+            _ => panic!("wrong kind"),
+        }
+        // A present-but-unknown tier is refused, not silently defaulted.
+        assert!(Request::parse(r#"{"op":"context","session":"u","tokens":[],"strategy":"zip"}"#)
+            .is_err());
         let r = Request::parse(r#"{"op":"query","session":"u","tokens":[9],"topk":2}"#).unwrap();
         matches!(r, Request::Query { topk: 2, .. }).then_some(()).unwrap();
         let r = Request::parse(r#"{"op":"stats"}"#).unwrap();
@@ -1227,8 +1335,15 @@ mod tests {
                 assert!(q.detail);
                 assert_eq!(q.prefix.as_deref(), Some("u-"));
                 assert_eq!(q.limit, Some(10));
+                assert!(q.after_id.is_none(), "cursor is opt-in");
                 assert!(q.per_reactor.is_none(), "per_reactor is router-internal");
             }
+            _ => panic!("wrong kind"),
+        }
+        let r = Request::parse(r#"{"op":"stats","detail":true,"after_id":"u-41","limit":5}"#)
+            .unwrap();
+        match r {
+            Request::Stats(q) => assert_eq!(q.after_id.as_deref(), Some("u-41")),
             _ => panic!("wrong kind"),
         }
         // Absent or malformed knobs degrade to unbounded, not an error.
@@ -1252,7 +1367,7 @@ mod tests {
 
     #[test]
     fn request_session_is_the_routing_key() {
-        let ctx = Request::Context { session: "u1".into(), tokens: vec![1] };
+        let ctx = Request::Context { session: "u1".into(), tokens: vec![1], strategy: None };
         let q = Request::Query { session: "u2".into(), tokens: vec![2], topk: 1 };
         assert_eq!(ctx.session(), Some("u1"));
         assert_eq!(q.session(), Some("u2"));

@@ -61,13 +61,12 @@ const LISTENER_TOKEN: poll::Token = 0;
 const WRITE_PAUSE_BYTES: usize = 1 << 20;
 /// Compact the write buffer once this many bytes have been written out.
 const WRITE_COMPACT_BYTES: usize = 64 * 1024;
-/// After a non-`WouldBlock` accept failure (EMFILE/ENFILE: the backlog
-/// entry stays pending, so a level-triggered listener would hot-spin
-/// the event loop), accepting pauses this long before re-arming.
-const ACCEPT_BACKOFF: Duration = Duration::from_millis(50);
-/// How long a refused (over `max_conns`) connection may linger while
-/// its refusal line drains to a slow peer before it is dropped.
-const REFUSAL_LINGER: Duration = Duration::from_secs(5);
+// The accept backoff (pause after a non-`WouldBlock` accept failure —
+// EMFILE/ENFILE, where a level-triggered listener would hot-spin) and
+// the refusal linger are operator posture,
+// configurable via `ccm serve --accept-backoff-ms` /
+// `--refusal-linger-secs` (`cfg.accept_backoff` /
+// `cfg.refusal_linger`); defaults live in `ServerConfig::new`.
 
 // ---------------------------------------------------------------------
 // Per-reactor transport counters (the stats `per_reactor` breakdown).
@@ -444,13 +443,19 @@ pub(crate) struct Reactor {
     /// a coarse 500 ms tick. `None` with nothing outstanding.
     next_deadline: Option<Instant>,
     /// Accepting is paused (listener interest dropped) until this
-    /// deadline — the [`ACCEPT_BACKOFF`] after an accept failure.
+    /// deadline — the `cfg.accept_backoff` after an accept failure.
     accept_paused_until: Option<Instant>,
     conn_count: Arc<AtomicUsize>,
     stats: Arc<ReactorStatsTable>,
     max_conns: usize,
     max_line_bytes: usize,
     reply_timeout: Duration,
+    /// Pause after a non-`WouldBlock` accept failure (EMFILE/ENFILE)
+    /// before the listener re-arms.
+    accept_backoff: Duration,
+    /// How long a refused (over `max_conns`) connection may linger
+    /// while its refusal line drains to a slow peer.
+    refusal_linger: Duration,
 }
 
 impl Reactor {
@@ -488,6 +493,8 @@ impl Reactor {
             max_conns: cfg.max_conns,
             max_line_bytes: cfg.max_line_bytes,
             reply_timeout: cfg.reply_timeout,
+            accept_backoff: cfg.accept_backoff,
+            refusal_linger: cfg.refusal_linger,
         })
     }
 
@@ -594,12 +601,12 @@ impl Reactor {
         }
     }
 
-    /// Drop listener read interest for [`ACCEPT_BACKOFF`].
+    /// Drop listener read interest for `accept_backoff`.
     fn pause_accept(&mut self) {
         if let Some(listener) = &self.listener {
             let _ = self.poller.modify(poll::source_fd(listener), LISTENER_TOKEN, false, false);
         }
-        self.accept_paused_until = Some(Instant::now() + ACCEPT_BACKOFF);
+        self.accept_paused_until = Some(Instant::now() + self.accept_backoff);
     }
 
     /// Re-arm the listener once the accept backoff has elapsed and try
@@ -644,7 +651,7 @@ impl Reactor {
     /// partial write) and silently drop the refusal line; instead the
     /// refused socket becomes a short-lived tracked conn owing exactly
     /// one reply — it participates in normal write continuation, closes
-    /// once the line is flushed, and a [`REFUSAL_LINGER`] deadline
+    /// once the line is flushed, and a `refusal_linger` deadline
     /// drops it even if the peer never reads.
     fn refuse_conn(&mut self, stream: TcpStream) {
         crate::debug!("reactor {}: refusing connection over max_conns={}", self.id, self.max_conns);
@@ -660,7 +667,7 @@ impl Reactor {
         conn.reg_read = false;
         conn.enqueue_done(TOO_MANY_CONNS_REPLY.to_string());
         conn.close_after_req = Some(0);
-        let expire = Instant::now() + REFUSAL_LINGER;
+        let expire = Instant::now() + self.refusal_linger;
         conn.expire_at = Some(expire);
         self.bump_deadline(expire);
         self.conns.insert(token, conn);

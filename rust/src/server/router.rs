@@ -17,6 +17,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::compress::StrategyKind;
 use crate::coordinator::session::EvictionKind;
 use crate::server::ipc::{WorkerProxy, WorkerStatsTable};
 use crate::server::reactor::ReactorStatsTable;
@@ -50,6 +51,30 @@ fn is_stats_part(part: &str) -> bool {
     part.starts_with("{\"ok\":true,\"kind\":\"stats\"")
 }
 
+/// The per-tier counter keys every stats part carries under
+/// `strategies.<tier>`; the merge sums them blindly, so the executor,
+/// this placeholder, and the merge must agree on the list.
+const STRATEGY_KEYS: [&str; 7] = [
+    "sessions",
+    "kv_bytes",
+    "compressions",
+    "inferences",
+    "tokens_dropped",
+    "refusals",
+    "overrides",
+];
+
+/// A zeroed `strategies` object (every tier, every counter).
+fn zero_strategies() -> String {
+    let zeroed: Vec<String> =
+        STRATEGY_KEYS.iter().map(|k| format!("\"{k}\":0")).collect();
+    let tiers: Vec<String> = StrategyKind::ALL
+        .iter()
+        .map(|k| format!("{}:{{{}}}", escape(k.name()), zeroed.join(",")))
+        .collect();
+    format!("{{{}}}", tiers.join(","))
+}
+
 /// Placeholder per-shard stats for a worker that is down: zeroed
 /// counters (the merged sums then cover the live workers) plus a
 /// `"down":true` marker. Keeps the merged view answerable during an
@@ -60,7 +85,8 @@ fn down_part(shard: usize) -> String {
          \"kv_bytes\":0,\"pending\":0,\"waiting\":0,\"requests\":0,\"compressions\":0,\
          \"inferences\":0,\"batches\":0,\"rejected_overload\":0,\"sessions_evicted\":0,\
          \"sessions_reaped\":0,\"priority_overrides\":0,\"peak_kv_bytes\":0,\
-         \"sessions_detail\":[]}}"
+         \"strategies\":{},\"sessions_detail\":[]}}",
+        zero_strategies()
     )
 }
 
@@ -269,6 +295,7 @@ impl Router {
             let part = StatsQuery {
                 detail: q.detail,
                 prefix: q.prefix.clone(),
+                after_id: q.after_id.clone(),
                 limit: q.limit,
                 per_reactor: None,
             };
@@ -340,6 +367,25 @@ impl Router {
         } else {
             String::new()
         };
+        // Nested per-tier sums: every part always carries all tiers
+        // (executors and the down-worker placeholder agree), so a
+        // missing key is a malformed part and fails closed like any
+        // other counter.
+        let strategies_field = {
+            let mut tiers = Vec::with_capacity(StrategyKind::ALL.len());
+            for k in StrategyKind::ALL.iter() {
+                let mut fields = Vec::with_capacity(STRATEGY_KEYS.len());
+                for key in STRATEGY_KEYS {
+                    let mut total = 0usize;
+                    for p in &parsed {
+                        total += p.get("strategies")?.get(k.name())?.get(key)?.usize()?;
+                    }
+                    fields.push(format!("\"{key}\":{total}"));
+                }
+                tiers.push(format!("{}:{{{}}}", escape(k.name()), fields.join(",")));
+            }
+            format!("\"strategies\":{{{}}},", tiers.join(","))
+        };
         let reactor_field = match self.per_reactor_rows() {
             Some(rows) => format!("\"per_reactor\":[{rows}],"),
             None => String::new(),
@@ -362,7 +408,7 @@ impl Router {
              \"pending\":{},\"waiting\":{},\"requests\":{},\"compressions\":{},\"inferences\":{},\
              \"batches\":{},\"rejected_overload\":{},\"sessions_evicted\":{},\
              \"sessions_reaped\":{},\"priority_overrides\":{},\"peak_kv_bytes\":{},\
-             {worker_field}{reactor_field}{detail_field}\"per_shard\":[{}]}}",
+             {strategies_field}{worker_field}{reactor_field}{detail_field}\"per_shard\":[{}]}}",
             self.shards.len(),
             escape(self.eviction.name()),
             sum("sessions")?,
@@ -446,7 +492,7 @@ mod tests {
             id += 1;
         };
         let (reply_tx, reply_rx) = channel();
-        let req = Request::Context { session: dead, tokens: vec![1] };
+        let req = Request::Context { session: dead, tokens: vec![1], strategy: None };
         assert!(router.dispatch(req, Reply::channel(reply_tx)), "connection must stay open");
         let resp = Json::parse(&reply_rx.recv().unwrap()).unwrap();
         assert_eq!(resp.get("error").unwrap().str().unwrap(), "shard_unavailable");
@@ -480,12 +526,23 @@ mod tests {
         let (tx1, _rx1) = channel();
         let router = Router::new(vec![tx0, tx1], &cfg);
         let shard = |i: usize, sessions: usize, kv: usize| {
+            // Per-tier rows: `sessions` of them under ccm plus one
+            // sliding-window override count, so the nested sum is
+            // observable in the merged view.
+            let strategies = format!(
+                "{{\"ccm\":{{\"sessions\":{sessions},\"kv_bytes\":{kv},\"compressions\":4,\
+                 \"inferences\":5,\"tokens_dropped\":0,\"refusals\":0,\"overrides\":3}},\
+                 \"sliding-window\":{{\"sessions\":0,\"kv_bytes\":0,\"compressions\":0,\
+                 \"inferences\":0,\"tokens_dropped\":7,\"refusals\":1,\"overrides\":0}},\
+                 \"none\":{{\"sessions\":0,\"kv_bytes\":0,\"compressions\":0,\"inferences\":0,\
+                 \"tokens_dropped\":0,\"refusals\":0,\"overrides\":0}}}}"
+            );
             format!(
                 "{{\"ok\":true,\"kind\":\"stats\",\"shard\":{i},\"sessions\":{sessions},\
                  \"kv_bytes\":{kv},\"pending\":1,\"waiting\":0,\"requests\":10,\
                  \"compressions\":4,\"inferences\":5,\"batches\":6,\"rejected_overload\":0,\
                  \"sessions_evicted\":2,\"sessions_reaped\":0,\"priority_overrides\":3,\
-                 \"peak_kv_bytes\":{kv}}}"
+                 \"peak_kv_bytes\":{kv},\"strategies\":{strategies}}}"
             )
         };
         let merged = router
@@ -494,6 +551,15 @@ mod tests {
         let j = Json::parse(&merged).expect("merged stats must be valid JSON");
         assert_eq!(j.get("shards").unwrap().usize().unwrap(), 2);
         assert_eq!(j.get("sessions").unwrap().usize().unwrap(), 8);
+        // Nested per-tier counters sum across shards.
+        let strat = j.get("strategies").unwrap();
+        assert_eq!(strat.get("ccm").unwrap().get("sessions").unwrap().usize().unwrap(), 8);
+        assert_eq!(strat.get("ccm").unwrap().get("kv_bytes").unwrap().usize().unwrap(), 300);
+        assert_eq!(strat.get("ccm").unwrap().get("overrides").unwrap().usize().unwrap(), 6);
+        let win = strat.get("sliding-window").unwrap();
+        assert_eq!(win.get("tokens_dropped").unwrap().usize().unwrap(), 14);
+        assert_eq!(win.get("refusals").unwrap().usize().unwrap(), 2);
+        assert_eq!(strat.get("none").unwrap().get("sessions").unwrap().usize().unwrap(), 0);
         assert_eq!(j.get("kv_bytes").unwrap().usize().unwrap(), 300);
         assert_eq!(j.get("kv_budget_bytes").unwrap().usize().unwrap(), 1 << 20);
         assert_eq!(j.get("session_ttl_secs").unwrap().usize().unwrap(), 600);
@@ -546,7 +612,8 @@ mod tests {
                  \"pending\":0,\"waiting\":0,\"requests\":1,\"compressions\":1,\"inferences\":0,\
                  \"batches\":1,\"rejected_overload\":0,\"sessions_evicted\":0,\
                  \"sessions_reaped\":0,\"priority_overrides\":0,\"peak_kv_bytes\":8,\
-                 \"sessions_detail\":[{detail}]}}"
+                 \"strategies\":{},\"sessions_detail\":[{detail}]}}",
+                zero_strategies()
             )
         };
         let row = |id: &str, t: usize| {
@@ -624,7 +691,7 @@ mod tests {
         // Session-routed work against the down worker: an immediate
         // shard_unavailable reply; the connection stays open.
         let (reply_tx, reply_rx) = channel();
-        let req = Request::Context { session: "s".into(), tokens: vec![1] };
+        let req = Request::Context { session: "s".into(), tokens: vec![1], strategy: None };
         assert!(router.dispatch(req, Reply::channel(reply_tx)), "connection must stay open");
         let resp = Json::parse(&reply_rx.recv().unwrap()).unwrap();
         assert_eq!(resp.get("error").unwrap().str().unwrap(), "shard_unavailable");
@@ -656,7 +723,9 @@ mod tests {
                 "{{\"ok\":true,\"kind\":\"stats\",\"shard\":{i},\"sessions\":0,\"kv_bytes\":0,\
                  \"pending\":0,\"waiting\":0,\"requests\":0,\"compressions\":0,\"inferences\":0,\
                  \"batches\":0,\"rejected_overload\":0,\"sessions_evicted\":0,\
-                 \"sessions_reaped\":0,\"priority_overrides\":0,\"peak_kv_bytes\":0}}"
+                 \"sessions_reaped\":0,\"priority_overrides\":0,\"peak_kv_bytes\":0,\
+                 \"strategies\":{}}}",
+                zero_strategies()
             )
         };
         let merged = router.merge_stats(&[shard(0), shard(1)], &StatsQuery::default()).unwrap();

@@ -95,11 +95,11 @@ const SUPERVISE_TICK: Duration = Duration::from_millis(15);
 const CONNECT_RETRY: Duration = Duration::from_millis(20);
 const CONNECT_DEADLINE: Duration = Duration::from_secs(10);
 const READY_DEADLINE: Duration = Duration::from_secs(30);
-const RESPAWN_BACKOFF_MIN: Duration = Duration::from_millis(50);
-const RESPAWN_BACKOFF_MAX: Duration = Duration::from_secs(2);
-/// A worker that has not finished draining this long after a shutdown
-/// request is SIGKILLed so shutdown always completes.
-const SHUTDOWN_KILL_AFTER: Duration = Duration::from_secs(30);
+// The respawn backoff schedule (`cfg.respawn_backoff_min`/`_max`) and
+// the drain kill deadline (`cfg.shutdown_kill_after`) are operator
+// posture, configurable via `ccm serve --respawn-backoff-min-ms`,
+// `--respawn-backoff-max-ms`, and `--shutdown-kill-after-secs`;
+// defaults live in `ServerConfig::new`.
 /// Once the drain contract is already satisfied (`drain_done`: the
 /// worker acked, or the requesters were recorded while it was down), a
 /// lingering process only gets this long to exit by itself.
@@ -147,9 +147,11 @@ pub fn serve_workers(
                 .map(|proxy| {
                     let proxy = proxy.clone();
                     s.spawn(move || match workers {
-                        WorkerMode::Spawn { launcher, .. } => supervise_spawned(&proxy, launcher),
+                        WorkerMode::Spawn { launcher, .. } => {
+                            supervise_spawned(&proxy, launcher, cfg)
+                        }
                         WorkerMode::Connect { addrs } => {
-                            supervise_external(&proxy, &addrs[proxy.shard()])
+                            supervise_external(&proxy, &addrs[proxy.shard()], cfg)
                         }
                     })
                 })
@@ -175,9 +177,13 @@ pub fn serve_workers(
 /// unreachable). Start failures and crashes are retried/respawned with
 /// exponential backoff forever — while the worker is down, the shard
 /// answers `shard_unavailable`, never hangs.
-fn supervise_spawned(proxy: &Arc<WorkerProxy>, launcher: &WorkerLauncher) -> Result<()> {
+fn supervise_spawned(
+    proxy: &Arc<WorkerProxy>,
+    launcher: &WorkerLauncher,
+    cfg: &ServerConfig,
+) -> Result<()> {
     let shard = proxy.shard();
-    let mut backoff = RESPAWN_BACKOFF_MIN;
+    let mut backoff = cfg.respawn_backoff_min;
     loop {
         if proxy.shutdown_requested() {
             return Ok(());
@@ -189,7 +195,7 @@ fn supervise_spawned(proxy: &Arc<WorkerProxy>, launcher: &WorkerLauncher) -> Res
             Err(e) => {
                 crate::info!("worker {shard}: spawn failed: {e}; retrying in {backoff:?}");
                 sleep_unless_shutdown(proxy, backoff);
-                backoff = (backoff * 2).min(RESPAWN_BACKOFF_MAX);
+                backoff = (backoff * 2).min(cfg.respawn_backoff_max);
                 continue;
             }
         };
@@ -223,13 +229,13 @@ fn supervise_spawned(proxy: &Arc<WorkerProxy>, launcher: &WorkerLauncher) -> Res
             let _ = child.wait();
             proxy.slot().pid.store(0, Ordering::SeqCst);
             sleep_unless_shutdown(proxy, backoff);
-            backoff = (backoff * 2).min(RESPAWN_BACKOFF_MAX);
+            backoff = (backoff * 2).min(cfg.respawn_backoff_max);
             continue;
         }
         // lint: allow(unwrap) — the !attached branch continued above,
         // and a successful attach always records the address.
         let addr = addr.expect("attached implies addr");
-        backoff = RESPAWN_BACKOFF_MIN; // healthy start resets the schedule
+        backoff = cfg.respawn_backoff_min; // healthy start resets the schedule
         // Wait for the process to exit. A dropped socket with the
         // process still alive is reconnected (the worker re-accepts);
         // a stalled shutdown drain is bounded by a hard kill.
@@ -248,7 +254,7 @@ fn supervise_spawned(proxy: &Arc<WorkerProxy>, launcher: &WorkerLauncher) -> Res
                 // shutdown that raced a respawn: the fresh worker holds
                 // no sessions and was never asked to drain.
                 let grace =
-                    if proxy.drain_done() { DRAINED_EXIT_GRACE } else { SHUTDOWN_KILL_AFTER };
+                    if proxy.drain_done() { DRAINED_EXIT_GRACE } else { cfg.shutdown_kill_after };
                 let target = Instant::now() + grace;
                 let at = kill_at.map_or(target, |cur: Instant| cur.min(target));
                 kill_at = Some(at);
@@ -275,18 +281,18 @@ fn supervise_spawned(proxy: &Arc<WorkerProxy>, launcher: &WorkerLauncher) -> Res
              sessions in {backoff:?}"
         );
         sleep_unless_shutdown(proxy, backoff);
-        backoff = (backoff * 2).min(RESPAWN_BACKOFF_MAX);
+        backoff = (backoff * 2).min(cfg.respawn_backoff_max);
     }
 }
 
 /// Connect-mode supervisor for an externally-started worker: keep one
 /// connection up (reconnect with backoff), return once a requested
 /// shutdown has drained. The drain wait is bounded like spawn mode's:
-/// past [`SHUTDOWN_KILL_AFTER`] a wedged external worker is abandoned
+/// past `cfg.shutdown_kill_after` a wedged external worker is abandoned
 /// (detached, its shutdown requesters recorded) — there is no process
 /// to kill, but shutdown must still complete.
-fn supervise_external(proxy: &Arc<WorkerProxy>, addr: &str) -> Result<()> {
-    let mut backoff = RESPAWN_BACKOFF_MIN;
+fn supervise_external(proxy: &Arc<WorkerProxy>, addr: &str, cfg: &ServerConfig) -> Result<()> {
+    let mut backoff = cfg.respawn_backoff_min;
     let mut drain_deadline: Option<Instant> = None;
     loop {
         if proxy.drain_done() {
@@ -298,7 +304,7 @@ fn supervise_external(proxy: &Arc<WorkerProxy>, addr: &str) -> Result<()> {
                 // requesters as trivially drained.
                 return Ok(());
             }
-            let at = *drain_deadline.get_or_insert_with(|| Instant::now() + SHUTDOWN_KILL_AFTER);
+            let at = *drain_deadline.get_or_insert_with(|| Instant::now() + cfg.shutdown_kill_after);
             if Instant::now() >= at {
                 crate::info!(
                     "worker {}: external worker did not drain in time; abandoning it",
@@ -316,12 +322,12 @@ fn supervise_external(proxy: &Arc<WorkerProxy>, addr: &str) -> Result<()> {
         }
         if let Ok(stream) = TcpStream::connect(addr) {
             if proxy.attach(stream).is_ok() {
-                backoff = RESPAWN_BACKOFF_MIN;
+                backoff = cfg.respawn_backoff_min;
                 continue;
             }
         }
         sleep_unless_shutdown(proxy, backoff);
-        backoff = (backoff * 2).min(RESPAWN_BACKOFF_MAX);
+        backoff = (backoff * 2).min(cfg.respawn_backoff_max);
     }
 }
 
@@ -706,7 +712,7 @@ mod tests {
         let (addr, worker) = start_toy_worker();
         let mut stream = TcpStream::connect(&addr).unwrap();
         let frames: String = [
-            ipc::encode_request(0, &Request::Context { session: "u".into(), tokens: vec![4, 5] }),
+            ipc::encode_request(0, &Request::Context { session: "u".into(), tokens: vec![4, 5], strategy: None }),
             ipc::encode_request(
                 1,
                 &Request::Query { session: "u".into(), tokens: vec![7], topk: 1 },
@@ -776,7 +782,7 @@ mod tests {
                 .write_all(
                     ipc::encode_request(
                         0,
-                        &Request::Context { session: "a".into(), tokens: vec![1] },
+                        &Request::Context { session: "a".into(), tokens: vec![1], strategy: None },
                     )
                     .as_bytes(),
                 )
@@ -788,7 +794,7 @@ mod tests {
         // Session state survived the reconnect (same process).
         stream
             .write_all(
-                ipc::encode_request(1, &Request::Context { session: "a".into(), tokens: vec![2] })
+                ipc::encode_request(1, &Request::Context { session: "a".into(), tokens: vec![2], strategy: None })
                     .as_bytes(),
             )
             .unwrap();
@@ -808,13 +814,19 @@ mod tests {
         let mut frame = Vec::new();
         ipc::encode_request_bin(
             1,
-            &Request::Context { session: "b".into(), tokens: vec![4, 5] },
+            &Request::Context {
+                session: "b".into(),
+                tokens: vec![4, 5],
+                strategy: Some(crate::compress::StrategyKind::SlidingWindow),
+            },
+            ipc::IPC_VERSION,
             &mut frame,
         );
         bytes.extend_from_slice(&frame);
         ipc::encode_request_bin(
             2,
             &Request::Query { session: "b".into(), tokens: vec![9], topk: 1 },
+            ipc::IPC_VERSION,
             &mut frame,
         );
         bytes.extend_from_slice(&frame);
@@ -830,11 +842,16 @@ mod tests {
         let (ctx_bin, ctx) = &replies[&1];
         assert!(ctx_bin, "binary request must get a binary reply");
         assert_eq!(ctx.get("t").unwrap().i64().unwrap(), 1, "context ack");
+        assert_eq!(
+            ctx.get("strategy").unwrap().str().unwrap(),
+            "sliding-window",
+            "the v2 strategy byte must reach admission"
+        );
         let (q_bin, q) = &replies[&2];
         assert!(q_bin);
         let next = q.get("next").unwrap().arr().unwrap();
         assert_eq!(next[0].arr().unwrap()[0].i64().unwrap(), 9, "query echo");
-        ipc::encode_request_bin(3, &Request::Shutdown, &mut frame);
+        ipc::encode_request_bin(3, &Request::Shutdown, ipc::IPC_VERSION, &mut frame);
         stream.write_all(&frame).unwrap();
         let replies = read_frames(&mut stream, 1);
         let (sd_bin, sd) = &replies[&3];

@@ -11,6 +11,7 @@ mod common;
 use std::time::Duration;
 
 use ccm::bench::loadgen::{build_plans, drive, LoadSpec, Mix, Workload};
+use ccm::compress::StrategyKind;
 use ccm::model::Manifest;
 
 fn test_spec() -> LoadSpec {
@@ -52,16 +53,16 @@ fn mixed_population_replay_loses_nothing_and_scores_quality() {
     // Both scenario populations ran, split evenly by the 1:1 mix, with
     // ordered, positive percentile fields wherever requests landed.
     assert_eq!(summary.scenarios.len(), 2);
-    let workloads: Vec<Workload> = summary.scenarios.iter().map(|s| s.workload).collect();
+    let workloads: Vec<Workload> = summary.scenarios.iter().map(|s| s.tenant.workload).collect();
     assert!(workloads.contains(&Workload::Dialog) && workloads.contains(&Workload::MetaIcl));
     for sc in &summary.scenarios {
-        assert_eq!(sc.users, spec.users / 2, "{:?} population", sc.workload);
-        assert!(sc.bucket.ok > 0, "{:?} served nothing", sc.workload);
+        assert_eq!(sc.users, spec.users / 2, "{:?} population", sc.tenant);
+        assert!(sc.bucket.ok > 0, "{:?} served nothing", sc.tenant);
         let (p50, p99, p999) = (sc.bucket.p_ms(500), sc.bucket.p_ms(990), sc.bucket.p_ms(999));
         assert!(
             p50 > 0.0 && p50 <= p99 && p99 <= p999,
             "{:?} percentiles out of order: p50={p50} p99={p99} p99.9={p999}",
-            sc.workload
+            sc.tenant
         );
     }
 
@@ -82,6 +83,76 @@ fn mixed_population_replay_loses_nothing_and_scores_quality() {
         q.kv_ratio_mean
     );
 
+    server.shutdown_join();
+}
+
+#[test]
+fn flooding_tier_absorbs_refusals_while_premium_p99_stays_ordered() {
+    // The tiered-QoS shape under deliberate overload: a `none`-tier
+    // flood (7/8 of the population, offered far over capacity) against
+    // a slow single-shard server with a tiny admission queue. The
+    // premium `ccm` slice must keep being served with ordered, finite
+    // percentiles, while the refusals land overwhelmingly on the
+    // flooding tier — overload degrades the flooder, not the tenant
+    // next to it.
+    let mut sim = common::sim();
+    sim.compress_delay = Duration::from_millis(5);
+    sim.infer_delay = Duration::from_millis(5);
+    let server = common::start_sharded(vec![sim], |cfg| {
+        cfg.max_batch = 4;
+        cfg.max_wait = Duration::from_millis(1);
+        cfg.max_pending = 4;
+    });
+
+    let spec = LoadSpec {
+        users: 64,
+        mix: Mix::parse("dialog@none=7,dialog@ccm=1").expect("mix"),
+        rate: 4000.0,
+        seed: 23,
+        churn: 0.0,
+        quality_every: 0,
+        ramp_secs: 0.05,
+        stream_len_max: 8,
+        topk: 3,
+    };
+    let summary = drive(&server.addr, &Manifest::toy(), &spec).expect("drive");
+    assert_eq!(summary.total.lost, 0, "lost replies: {:?}", summary.total);
+    assert!(summary.total.refused > 0, "the flood never overloaded the server");
+
+    let tier = |strategy: StrategyKind| {
+        summary
+            .scenarios
+            .iter()
+            .find(|s| s.tenant.strategy == Some(strategy))
+            .unwrap_or_else(|| panic!("no {} slice in the summary", strategy.name()))
+    };
+    let premium = tier(StrategyKind::Ccm);
+    let flood = tier(StrategyKind::NoCompress);
+    assert!(premium.bucket.ok > 0, "premium tier starved: {:?}", premium.bucket);
+    let (p50, p99, p999) =
+        (premium.bucket.p_ms(500), premium.bucket.p_ms(990), premium.bucket.p_ms(999));
+    assert!(
+        p50 > 0.0 && p50 <= p99 && p99 <= p999,
+        "premium percentiles out of order: p50={p50} p99={p99} p99.9={p999}"
+    );
+    assert!(flood.bucket.refused > 0, "the flooding tier absorbed no refusals");
+    assert!(
+        flood.bucket.refused >= premium.bucket.refused,
+        "refusals landed on the premium tier: flood={} premium={}",
+        flood.bucket.refused,
+        premium.bucket.refused
+    );
+
+    // Both tiers are live and visible in merged per-strategy stats:
+    // the replay's strategy field reached admission, not just the wire.
+    let mut admin = server.client();
+    let stats = admin.stats().expect("stats");
+    let strat = stats.get("strategies").expect("strategies object");
+    for name in ["ccm", "none"] {
+        let sessions =
+            strat.get(name).expect("tier row").get("sessions").expect("sessions").usize().unwrap();
+        assert!(sessions > 0, "{name} tier admitted no sessions");
+    }
     server.shutdown_join();
 }
 
