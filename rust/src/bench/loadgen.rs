@@ -57,7 +57,12 @@
 //! Results print as a per-scenario table and emit in the
 //! [`Report`] schema (`--emit`), so `ccm bench --compare` composes
 //! with the BENCH_<n>.json trajectory (docs/BENCH.md); the pinned
-//! [`bench_scenario`] joins `ccm bench` as `loadgen-mixed`.
+//! [`bench_scenario`] joins `ccm bench` as `loadgen-mixed`, and the
+//! pinned [`bench_idle_spill_scenario`] as `loadgen-idle-spill` — an
+//! idle-heavy population against a hibernating server, tracking the
+//! spill/rehydrate counters on the serving path. The self-serve path
+//! takes `--hibernate-dir DIR [--hibernate-after-ms 200]` to replay
+//! any scenario against a hibernating server (docs/SCENARIOS.md).
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::channel;
@@ -928,7 +933,7 @@ pub fn aggregate_scenario(summary: &RunSummary) -> Scenario {
 /// Full Report for `--emit`: one row per tenant (when mixed) plus
 /// the aggregate row carrying the quality metrics.
 pub fn to_report(summary: &RunSummary) -> Report {
-    let mut report = Report::new(9);
+    let mut report = Report::new(10);
     if summary.scenarios.len() > 1 {
         for s in &summary.scenarios {
             report.scenarios.push(scenario_row(
@@ -1015,15 +1020,23 @@ fn print_summary(summary: &RunSummary) {
 /// the standard front-end at the bench-manifest shapes, `delay_us`
 /// simulated compute per batch. `default_strategy` pins the server's
 /// default admission tier (the `ccm serve --strategy` knob), so a
-/// replay can run wholesale under a non-default strategy.
+/// replay can run wholesale under a non-default strategy. `hibernate`
+/// enables tiered session memory: idle sessions spill their `Mem(t)`
+/// snapshots under the given root after the given threshold (the `ccm
+/// serve --hibernate-dir/--hibernate-after-secs` knobs).
 fn self_serve(
     shards: usize,
     delay_us: u64,
     default_strategy: Option<StrategyKind>,
+    hibernate: Option<(std::path::PathBuf, Duration)>,
 ) -> Result<(String, std::thread::JoinHandle<Result<()>>)> {
     let mut cfg = super::serving::bench_cfg();
     if let Some(kind) = default_strategy {
         cfg.default_strategy = kind;
+    }
+    if let Some((dir, after)) = hibernate {
+        cfg.hibernate_dir = Some(dir);
+        cfg.hibernate_after = Some(after);
     }
     let (ready_tx, ready_rx) = channel();
     let handle = std::thread::spawn(move || {
@@ -1058,7 +1071,7 @@ pub fn bench_scenario(users: usize, seed: u64) -> Result<Scenario> {
         topk: 3,
     };
     let manifest = super::serving::bench_manifest();
-    let (addr, server) = self_serve(2, 100, None)?;
+    let (addr, server) = self_serve(2, 100, None, None)?;
     let summary = drive(&addr, &manifest, &spec)?;
     let mut admin = Client::connect(&addr)?;
     admin.shutdown()?;
@@ -1090,7 +1103,7 @@ pub fn bench_tier_scenarios(users: usize, seed: u64) -> Result<Vec<Scenario>> {
         topk: 3,
     };
     let manifest = super::serving::bench_manifest();
-    let (addr, server) = self_serve(2, 100, None)?;
+    let (addr, server) = self_serve(2, 100, None, None)?;
     let summary = drive(&addr, &manifest, &spec)?;
     let mut admin = Client::connect(&addr)?;
     admin.shutdown()?;
@@ -1118,6 +1131,63 @@ pub fn bench_tier_scenarios(users: usize, seed: u64) -> Result<Vec<Scenario>> {
         .collect())
 }
 
+/// The pinned `loadgen-idle-spill` trajectory scenario for `ccm bench`
+/// (docs/BENCH.md): an idle-heavy dialog population whose per-user
+/// think time dwarfs the server's hibernate threshold, so sessions
+/// spill their `Mem(t)` to disk between turns and rehydrate
+/// transparently on the next touch. The row carries the
+/// spill/rehydration counters next to the open-loop latency
+/// percentiles, so the trajectory tracks what hibernation costs on the
+/// serving path.
+pub fn bench_idle_spill_scenario(users: usize, seed: u64) -> Result<Scenario> {
+    let spec = LoadSpec {
+        users,
+        mix: Mix::single(Workload::Dialog),
+        // Mean per-user think time of ~400 ms against the 100 ms spill
+        // threshold below: most inter-turn gaps hibernate the session.
+        rate: users as f32 / 0.4,
+        seed,
+        churn: 0.0,
+        quality_every: 0,
+        ramp_secs: 0.25,
+        stream_len_max: 8,
+        topk: 3,
+    };
+    let root = std::env::temp_dir().join(format!("ccm-bench-idle-spill-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let manifest = super::serving::bench_manifest();
+    let (addr, server) =
+        self_serve(2, 100, None, Some((root.clone(), Duration::from_millis(100))))?;
+    let summary = drive(&addr, &manifest, &spec)?;
+    let mut admin = Client::connect(&addr)?;
+    let stats = admin.stats()?;
+    let spills = stats.get("spills")?.usize()?;
+    let rehydrations = stats.get("rehydrations")?.usize()?;
+    let corrupt = stats.get("snapshot_corrupt")?.usize()?;
+    admin.shutdown()?;
+    // lint: allow(unwrap) — a panicked server thread is a bench bug;
+    // re-raise it.
+    server.join().expect("idle-spill bench server thread")?;
+    let _ = std::fs::remove_dir_all(&root);
+    if summary.total.lost > 0 {
+        bail!(
+            "idle-spill loadgen lost {} replies; the numbers would be meaningless",
+            summary.total.lost
+        );
+    }
+    if spills == 0 {
+        bail!("idle-spill bench never hibernated a session; the row would be meaningless");
+    }
+    if corrupt > 0 {
+        bail!("{corrupt} snapshots decoded corrupt under healthy spill/rehydrate traffic");
+    }
+    let mut sc =
+        scenario_row("loadgen-idle-spill", summary.users, &summary.total, summary.wall_secs, None);
+    sc.push("spills", spills as f64);
+    sc.push("rehydrations", rehydrations as f64);
+    Ok(sc)
+}
+
 /// `ccm loadgen` entry point (dispatched from `cli_loadgen`). Without
 /// `--addr` it self-serves a `--shards`-way SimCompute server so the
 /// whole replay is one command; with `--addr` it drives an external
@@ -1134,7 +1204,14 @@ pub fn run(args: &Args) -> Result<()> {
                 Some(s) => Some(StrategyKind::parse(s)?),
                 None => None,
             };
-            let (addr, handle) = self_serve(shards, delay_us, strategy)?;
+            let hibernate = match args.flags.get("hibernate-dir") {
+                Some(dir) if !dir.is_empty() => Some((
+                    std::path::PathBuf::from(dir),
+                    Duration::from_millis(args.u64("hibernate-after-ms", 200)?),
+                )),
+                _ => None,
+            };
+            let (addr, handle) = self_serve(shards, delay_us, strategy, hibernate)?;
             let summary = drive(&addr, &manifest, &spec)?;
             let mut admin = Client::connect(&addr)?;
             admin.shutdown()?;
@@ -1317,7 +1394,7 @@ mod tests {
         };
         let report = to_report(&summary);
         let parsed = Report::parse(&report.to_json()).expect("schema-valid report");
-        assert_eq!(parsed.pr, 9);
+        assert_eq!(parsed.pr, 10);
         let agg = parsed.find("loadgen-mixed", None).expect("aggregate row");
         assert_eq!(agg.metric("refused"), Some(1.0));
         assert_eq!(agg.metric("quality_samples"), Some(1.0));

@@ -21,6 +21,12 @@
 //!   one dialog population split 3:1 across the `ccm` and `none`
 //!   admission tiers, one row per tier so the trajectory tracks
 //!   per-tier latency.
+//! * `loadgen-idle-spill` — the pinned idle-heavy replay
+//!   ([`super::loadgen::bench_idle_spill_scenario`]) against a
+//!   hibernating server: per-user think time dwarfs the spill
+//!   threshold, so sessions hibernate to disk between turns and
+//!   rehydrate on the next touch; the row records the spill and
+//!   rehydration counters next to the open-loop latency.
 //!
 //! `--emit PATH` writes the machine-readable `BENCH_<n>.json` report
 //! ([`Report`]; schema in docs/BENCH.md). `--compare OLD --against
@@ -71,7 +77,7 @@ pub fn run(args: &Args) -> Result<()> {
     let stress_clients = args.usize("stress-clients", 32)?;
     let stress_rounds = args.usize("stress-rounds", 40)?;
     let loadgen_users = args.usize("loadgen-users", 64)?;
-    let mut report = Report::new(9);
+    let mut report = Report::new(10);
     report.scenarios.push(scenario_inprocess("serve-throughput", clients, rounds, 200)?);
     report.scenarios.push(scenario_ipc(IpcCodec::Json, clients, rounds)?);
     report.scenarios.push(scenario_ipc(IpcCodec::Binary, clients, rounds)?);
@@ -79,6 +85,7 @@ pub fn run(args: &Args) -> Result<()> {
     report.scenarios.push(stress);
     report.scenarios.push(super::loadgen::bench_scenario(loadgen_users, 7)?);
     report.scenarios.extend(super::loadgen::bench_tier_scenarios(loadgen_users, 7)?);
+    report.scenarios.push(super::loadgen::bench_idle_spill_scenario(loadgen_users, 7)?);
     let metric = |sc: &Scenario, name: &str| match sc.metric(name) {
         Some(v) => format!("{v:.3}"),
         None => "-".into(),

@@ -72,6 +72,13 @@ pub struct Metrics {
     pub sessions_evicted: u64,
     /// Sessions reaped by the idle TTL.
     pub sessions_reaped: u64,
+    /// Sessions spilled to the on-disk hibernation tier.
+    pub spills: u64,
+    /// Hibernated sessions transparently restored on their next touch.
+    pub rehydrations: u64,
+    /// Snapshots that failed decode/CRC on rehydrate — each degraded to
+    /// a fresh session per the failure contract, never a client error.
+    pub snapshot_corrupt: u64,
 }
 
 impl Metrics {
@@ -98,6 +105,7 @@ impl Metrics {
              infer:    mean {:.2} ms, p95 {:.2} ms ({} calls)\n\
              queue:    mean {:.2} ms, p95 {:.2} ms\n\
              overload rejections: {}, sessions evicted: {} (budget) + {} (idle ttl)\n\
+             hibernation: {} spills, {} rehydrations, {} corrupt snapshots\n\
              peak compressed-KV: {:.2} MB, tokens compressed: {}",
             self.requests,
             self.compressions,
@@ -115,6 +123,9 @@ impl Metrics {
             self.rejected_overload,
             self.sessions_evicted,
             self.sessions_reaped,
+            self.spills,
+            self.rehydrations,
+            self.snapshot_corrupt,
             self.peak_kv_bytes as f64 / 1e6,
             self.tokens_compressed,
         )

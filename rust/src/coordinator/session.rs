@@ -13,6 +13,13 @@
 //! hold a budgeted raw-token window, no-compress sessions hold the full
 //! raw context. [`Session::kv_bytes`] is strategy-aware, so the KV
 //! budget evicts cheap tiers later and the full-context tier sooner.
+//!
+//! Sessions live on three levels: hot RAM, hibernated on disk (the
+//! side-table here tracks accounting only — the bytes live in the
+//! server's spill store and are excluded from the hot KV budget), or
+//! gone. This module stays IO-free: the executor performs the actual
+//! spill/rehydrate and tells the manager via [`SessionManager::hibernate`]
+//! / [`SessionManager::insert_restored`].
 
 use std::cmp::Ordering;
 use std::collections::{HashMap, HashSet};
@@ -24,6 +31,7 @@ use crate::compress::strategy::{CompressionStrategy, StrategyKind, StrategyState
 use crate::masks::{MergeScheme, Method};
 use crate::memory::MemoryStore;
 use crate::model::manifest::Manifest;
+use crate::model::snapshot::SessionSnapshot;
 
 /// Compression policy a session is created with.
 #[derive(Debug, Clone)]
@@ -160,6 +168,54 @@ impl Session {
         let per_tok = 2 * self.mem.buffers.layers * self.mem.buffers.d_model * 4;
         self.mem.kv_bytes() + self.state.raw_kv_tokens() * per_tok
     }
+
+    /// Capture everything the hibernation tier spills to disk. The
+    /// wall-clock fields (`created_at` / `last_used`) are deliberately
+    /// absent: a rehydrated session counts as freshly touched.
+    pub fn to_snapshot(&self) -> SessionSnapshot {
+        SessionSnapshot {
+            id: self.id.clone(),
+            strategy: self.strategy,
+            t: self.t as u64,
+            pos_cursor: self.pos_cursor as u64,
+            created: self.created,
+            raw_context_tokens: self.raw_context_tokens as u64,
+            dropped_tokens: self.dropped_tokens,
+            mem: self.mem.clone(),
+            state: self.state.clone(),
+        }
+    }
+
+    /// Rebuild a session from a decoded snapshot, resuming at the
+    /// pre-spill `t`/`pos_cursor` with clocks re-seeded to now.
+    pub fn from_snapshot(snap: SessionSnapshot) -> Session {
+        Session {
+            id: snap.id,
+            mem: snap.mem,
+            pos_cursor: snap.pos_cursor as usize,
+            t: snap.t as usize,
+            created: snap.created,
+            created_at: Instant::now(),
+            raw_context_tokens: snap.raw_context_tokens as usize,
+            last_used: Instant::now(),
+            strategy: snap.strategy,
+            state: snap.state,
+            dropped_tokens: snap.dropped_tokens,
+        }
+    }
+}
+
+/// Accounting stub for a session whose state lives on disk, not in
+/// RAM. Its bytes are excluded from the hot KV budget — that is the
+/// point of the hibernation tier — but surfaced as gauges in stats.
+#[derive(Debug, Clone)]
+pub struct HibernatedMeta {
+    /// Strategy-aware KV bytes the session held when it was spilled.
+    pub kv_bytes: usize,
+    /// Creation stamp, preserved across the disk round-trip.
+    pub created: u64,
+    /// When the spill happened — drives hibernated-session TTL reaping.
+    pub since: Instant,
 }
 
 /// One session's accounting row for the `stats` detail view (the
@@ -180,6 +236,7 @@ pub struct SessionStat {
 
 pub struct SessionManager {
     sessions: HashMap<String, Session>,
+    hibernated: HashMap<String, HibernatedMeta>,
     policy: SessionPolicy,
     eviction: Box<dyn EvictionPolicy>,
     strategies: [Box<dyn CompressionStrategy>; 3],
@@ -199,6 +256,7 @@ impl SessionManager {
         let mem_slots = manifest.scenario.mem_slots;
         SessionManager {
             sessions: HashMap::new(),
+            hibernated: HashMap::new(),
             layers: manifest.model.n_layers,
             d_model: manifest.model.d_model,
             mem_slots,
@@ -385,14 +443,29 @@ impl SessionManager {
     }
 
     /// Budget eviction skipping `protected` ids (sessions with queued
-    /// work). One total-bytes pass + one sort in [`EvictionPolicy`]
-    /// victim order — O(n log n) for any number of evictions, instead
-    /// of rescanning the whole map per evicted session.
+    /// work). Delegates to [`take_victims_to_budget`](Self::take_victims_to_budget)
+    /// and drops the victims' state on the floor.
     pub fn evict_to_budget_protected(
         &mut self,
         max_bytes: usize,
         protected: &HashSet<String>,
     ) -> Vec<String> {
+        self.take_victims_to_budget(max_bytes, protected).into_iter().map(|s| s.id).collect()
+    }
+
+    /// Remove sessions in [`EvictionPolicy`] victim order until at most
+    /// `max_bytes` of live KV remain, returning the victims OWNED so
+    /// the caller can spill them to disk before they are dropped
+    /// (spill-before-drop). One total-bytes pass + one sort — O(n log n)
+    /// for any number of evictions. Each victim frees its strategy-aware
+    /// [`Session::kv_bytes`], matching `total_kv_bytes` — subtracting
+    /// only the compressed-memory bytes here would over-evict raw-token
+    /// tiers.
+    pub fn take_victims_to_budget(
+        &mut self,
+        max_bytes: usize,
+        protected: &HashSet<String>,
+    ) -> Vec<Session> {
         let mut total = self.total_kv_bytes();
         if total <= max_bytes {
             return Vec::new();
@@ -400,18 +473,109 @@ impl SessionManager {
         let mut candidates: Vec<&Session> =
             self.sessions.values().filter(|s| !protected.contains(&s.id)).collect();
         candidates.sort_unstable_by(|a, b| self.eviction.victim_cmp(a, b));
-        let victims: Vec<(String, usize)> =
-            candidates.iter().map(|s| (s.id.clone(), s.mem.kv_bytes())).collect();
-        let mut evicted = Vec::new();
-        for (id, bytes) in victims {
+        let order: Vec<String> = candidates.iter().map(|s| s.id.clone()).collect();
+        let mut victims = Vec::new();
+        for id in order {
             if total <= max_bytes {
                 break;
             }
-            self.sessions.remove(&id);
-            total -= bytes;
-            evicted.push(id);
+            if let Some(s) = self.sessions.remove(&id) {
+                total = total.saturating_sub(s.kv_bytes());
+                victims.push(s);
+            }
         }
-        evicted
+        victims
+    }
+
+    /// Move a resident session to the hibernated side-table, dropping
+    /// its in-RAM state. Call only AFTER its snapshot's atomic rename
+    /// landed on disk — a failed spill must keep the session hot.
+    /// Returns the KV bytes released from the hot budget (None if the
+    /// id is not resident).
+    pub fn hibernate(&mut self, id: &str) -> Option<usize> {
+        let s = self.sessions.remove(id)?;
+        let bytes = s.kv_bytes();
+        let meta = HibernatedMeta { kv_bytes: bytes, created: s.created, since: Instant::now() };
+        self.hibernated.insert(s.id, meta);
+        Some(bytes)
+    }
+
+    /// Record an already-removed session (a spilled eviction victim
+    /// from [`take_victims_to_budget`](Self::take_victims_to_budget))
+    /// as hibernated.
+    pub fn note_hibernated(&mut self, session: &Session) {
+        self.hibernated.insert(
+            session.id.clone(),
+            HibernatedMeta {
+                kv_bytes: session.kv_bytes(),
+                created: session.created,
+                since: Instant::now(),
+            },
+        );
+    }
+
+    /// Re-admit a rehydrated session, clearing its hibernated entry.
+    /// The creation counter advances past the restored stamp so
+    /// sessions created later still sort as younger.
+    pub fn insert_restored(&mut self, session: Session) {
+        self.hibernated.remove(&session.id);
+        self.counter = self.counter.max(session.created);
+        self.sessions.insert(session.id.clone(), session);
+    }
+
+    pub fn is_hibernated(&self, id: &str) -> bool {
+        self.hibernated.contains_key(id)
+    }
+
+    /// Forget a hibernated entry without rehydrating it (corrupt or
+    /// missing snapshot — the failure contract degrades to a fresh
+    /// session). Returns whether the id was hibernated.
+    pub fn drop_hibernated(&mut self, id: &str) -> bool {
+        self.hibernated.remove(id).is_some()
+    }
+
+    /// (count, bytes) gauges for the hibernated tier — bytes that
+    /// become hot again on rehydration, excluded from
+    /// [`total_kv_bytes`](Self::total_kv_bytes) by construction.
+    pub fn hibernated_census(&self) -> (usize, usize) {
+        (self.hibernated.len(), self.hibernated.values().map(|m| m.kv_bytes).sum())
+    }
+
+    /// Drop hibernated entries parked on disk for at least `ttl`,
+    /// returning their ids in creation order. The caller deletes the
+    /// spill files — this table never touches IO.
+    pub fn reap_hibernated(&mut self, ttl: Duration, now: Instant) -> Vec<String> {
+        let mut stale: Vec<(u64, String)> = self
+            .hibernated
+            .iter()
+            .filter(|(_, m)| now.saturating_duration_since(m.since) >= ttl)
+            .map(|(id, m)| (m.created, id.clone()))
+            .collect();
+        stale.sort_unstable_by_key(|(created, _)| *created);
+        let ids: Vec<String> = stale.into_iter().map(|(_, id)| id).collect();
+        for id in &ids {
+            self.hibernated.remove(id);
+        }
+        ids
+    }
+
+    /// Resident sessions idle for at least `threshold` (skipping
+    /// `protected`) in creation order — the background spill candidates.
+    pub fn idle_sessions(
+        &self,
+        threshold: Duration,
+        now: Instant,
+        protected: &HashSet<String>,
+    ) -> Vec<String> {
+        let mut idle: Vec<(u64, String)> = self
+            .sessions
+            .values()
+            .filter(|s| !protected.contains(&s.id))
+            .filter(|s| now.saturating_duration_since(s.last_used) >= threshold)
+            .map(|s| (s.created, s.id.clone()))
+            .collect();
+        idle.sort_unstable_by_key(|(created, _)| *created);
+        idle.into_iter().map(|(_, id)| id).collect()
     }
 
     /// Remove sessions idle for at least `ttl` (skipping `protected`).
@@ -831,6 +995,112 @@ mod tests {
         let evicted = sm.evict_to_budget(ccm_bytes);
         assert_eq!(evicted, vec!["full"]);
         assert!(sm.get("ccm").is_ok());
+    }
+
+    #[test]
+    fn hibernate_excludes_bytes_and_restore_resumes_at_same_t() {
+        let m = manifest();
+        let mut sm = SessionManager::with_policy(&m, SessionPolicy::concat(2));
+        let s = sm.get_or_create("cold");
+        s.mem.update(&fake_chunk(2, 2, 8)).unwrap();
+        s.t = 5;
+        s.pos_cursor = 40;
+        let per = 2 * 2 * 2 * 8 * 4;
+        assert_eq!(sm.total_kv_bytes(), per);
+        // Spill path: snapshot first (executor writes it to disk), then
+        // move the session to the side-table.
+        let snap = sm.get("cold").unwrap().to_snapshot();
+        assert_eq!(sm.hibernate("cold"), Some(per));
+        assert_eq!(sm.hibernate("cold"), None, "not resident twice");
+        assert_eq!(sm.len(), 0, "hibernated sessions leave the hot map");
+        assert_eq!(sm.total_kv_bytes(), 0, "bytes leave the hot KV budget");
+        assert!(sm.is_hibernated("cold"));
+        assert_eq!(sm.hibernated_census(), (1, per));
+        assert!(sm.get("cold").is_err(), "hot lookups miss while on disk");
+        // Rehydrate: the session resumes at its pre-spill cursor.
+        let restored = Session::from_snapshot(snap);
+        sm.insert_restored(restored);
+        assert!(!sm.is_hibernated("cold"));
+        assert_eq!(sm.hibernated_census(), (0, 0));
+        let s = sm.get("cold").unwrap();
+        assert_eq!((s.t, s.pos_cursor), (5, 40));
+        assert_eq!(s.kv_bytes(), per);
+        // Creation order survives the round-trip: a session created
+        // after restore is younger than the restored one.
+        let old_created = sm.get("cold").unwrap().created;
+        let newer = sm.get_or_create("later").created;
+        assert!(newer > old_created);
+    }
+
+    #[test]
+    fn snapshot_bridge_round_trips_window_state() {
+        let m = manifest();
+        let mut sm = SessionManager::with_policy(&m, SessionPolicy::concat(2));
+        sm.get_or_create_with("win", Some(StrategyKind::SlidingWindow));
+        sm.absorb("win", &(0..20).collect::<Vec<i32>>()).unwrap();
+        let before = sm.get("win").unwrap();
+        let bytes = before.to_snapshot().encode().unwrap();
+        let snap = crate::model::snapshot::SessionSnapshot::decode(&bytes).unwrap();
+        let after = Session::from_snapshot(snap);
+        assert_eq!(after.strategy, StrategyKind::SlidingWindow);
+        assert_eq!(after.t, before.t);
+        assert_eq!(after.kv_bytes(), before.kv_bytes());
+        assert_eq!(after.dropped_tokens, before.dropped_tokens);
+        assert_eq!(after.state.raw_kv_tokens(), before.state.raw_kv_tokens());
+    }
+
+    #[test]
+    fn take_victims_subtracts_strategy_aware_bytes() {
+        let m = manifest();
+        let mut sm = SessionManager::with_policy(&m, SessionPolicy::concat(2));
+        // Two full-context sessions; evicting the first must free its
+        // raw-token bytes, leaving the second resident under a budget
+        // sized for exactly one of them.
+        for id in ["a", "b"] {
+            sm.get_or_create_with(id, Some(StrategyKind::NoCompress));
+            sm.absorb(id, &(0..8).collect::<Vec<i32>>()).unwrap();
+        }
+        let one = sm.get("a").unwrap().kv_bytes();
+        let victims = sm.take_victims_to_budget(one, &HashSet::new());
+        let ids: Vec<&str> = victims.iter().map(|s| s.id.as_str()).collect();
+        assert_eq!(ids, vec!["a"], "one victim frees enough — not both");
+        assert_eq!(victims[0].t, 1, "victims come out owned, state intact");
+        assert!(sm.get("b").is_ok());
+        // Spill-before-drop: the caller can park the victim instead.
+        sm.note_hibernated(&victims[0]);
+        assert!(sm.is_hibernated("a"));
+        assert_eq!(sm.hibernated_census(), (1, one));
+        assert!(sm.drop_hibernated("a"));
+        assert!(!sm.drop_hibernated("a"));
+    }
+
+    #[test]
+    fn reap_hibernated_and_idle_candidates_are_creation_ordered() {
+        let m = manifest();
+        let mut sm = SessionManager::with_policy(&m, SessionPolicy::concat(2));
+        for id in ["one", "two", "three"] {
+            sm.get_or_create(id);
+        }
+        // All three idle well past the threshold; candidates come back
+        // in creation order regardless of map iteration order.
+        let eval_at = Instant::now() + Duration::from_secs(30);
+        let idle = sm.idle_sessions(Duration::from_secs(10), eval_at, &HashSet::new());
+        assert_eq!(idle, vec!["one", "two", "three"]);
+        let protected: HashSet<String> = ["two".to_string()].into_iter().collect();
+        let idle = sm.idle_sessions(Duration::from_secs(10), eval_at, &protected);
+        assert_eq!(idle, vec!["one", "three"], "protected sessions never spill");
+        assert!(
+            sm.idle_sessions(Duration::from_secs(60), eval_at, &HashSet::new()).is_empty(),
+            "threshold not yet reached"
+        );
+        // Hibernate all three, then TTL-reap the side-table.
+        for id in ["one", "two", "three"] {
+            sm.hibernate(id);
+        }
+        assert_eq!(sm.hibernated_census().0, 3);
+        let reaped = sm.reap_hibernated(Duration::from_secs(10), eval_at);
+        assert_eq!(reaped, vec!["one", "two", "three"]);
+        assert_eq!(sm.hibernated_census(), (0, 0));
     }
 
     #[test]

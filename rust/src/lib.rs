@@ -170,7 +170,8 @@ pub fn serve_backend_factories(
 /// [--strategy ccm|sliding-window|none] [--tiers SPEC]
 /// [--respawn-backoff-min-ms 50] [--respawn-backoff-max-ms 2000]
 /// [--shutdown-kill-after-secs 30] [--refusal-linger-secs 5]
-/// [--accept-backoff-ms 50]`
+/// [--accept-backoff-ms 50] [--hibernate-dir PATH]
+/// [--hibernate-after-secs 60] [--orphan-grace-secs 120]`
 ///
 /// `--strategy` sets the default compression tier admitted sessions
 /// get when their first `context` carries no explicit `"strategy"`
@@ -185,6 +186,15 @@ pub fn serve_backend_factories(
 /// backoff schedule, the shutdown drain kill deadline, how long a
 /// refused connection may linger while its refusal line drains, and
 /// the accept pause after an EMFILE/ENFILE accept failure.
+///
+/// `--hibernate-dir` enables the tiered session lifecycle: sessions
+/// idle past `--hibernate-after-secs` (default 60) spill their Mem(t)
+/// to per-shard snapshot files under the directory, leave the KV
+/// budget, and rehydrate transparently on their next touch; with a KV
+/// budget, eviction victims are spilled before being dropped. Both
+/// flags forward to spawned workers, as does `--orphan-grace-secs`
+/// (the worker's first-connection orphan grace, default 120 s, which
+/// also bounds the startup sweep of stale spill tmp files).
 ///
 /// With `--shards N > 1`, each shard's executor thread owns a full
 /// runtime + engine (PJRT runtimes are thread-bound); sessions route
@@ -269,6 +279,17 @@ pub fn cli_serve(args: &Args) -> Result<()> {
     if ttl_secs > 0 {
         cfg.session_ttl = Some(std::time::Duration::from_secs(ttl_secs));
     }
+    let hibernate_dir = args.str("hibernate-dir", "");
+    if !hibernate_dir.is_empty() {
+        cfg.hibernate_dir = Some(std::path::PathBuf::from(&hibernate_dir));
+    }
+    let hibernate_after_secs = args.u64("hibernate-after-secs", 0)?;
+    if hibernate_after_secs > 0 {
+        cfg.hibernate_after = Some(std::time::Duration::from_secs(hibernate_after_secs));
+    }
+    let orphan_grace_secs =
+        args.u64("orphan-grace-secs", server::ORPHAN_GRACE_DEFAULT.as_secs())?;
+    cfg.orphan_grace = std::time::Duration::from_secs(orphan_grace_secs);
     let workers = args.usize("workers", 0)?;
     let worker_addrs = args.list("worker-addr", &[]);
     if workers > 0 && !worker_addrs.is_empty() {
@@ -322,6 +343,14 @@ pub fn cli_serve(args: &Args) -> Result<()> {
                 forward.push("--checkpoint".into());
                 forward.push(ckpt_path.clone());
             }
+            if !hibernate_dir.is_empty() {
+                forward.push("--hibernate-dir".into());
+                forward.push(hibernate_dir.clone());
+                forward.push("--hibernate-after-secs".into());
+                forward.push(hibernate_after_secs.to_string());
+            }
+            forward.push("--orphan-grace-secs".into());
+            forward.push(orphan_grace_secs.to_string());
             server::WorkerMode::Spawn {
                 count: workers,
                 launcher: Box::new(move |shard| {
@@ -353,7 +382,13 @@ pub fn cli_serve(args: &Args) -> Result<()> {
 /// default) and prints the `CCM_WORKER_READY <addr>` handshake on
 /// stdout once the listener is up. `--shard`/`--shards` position the
 /// worker in the fleet: its slice of `--kv-budget-mb` partitions
-/// exactly as for in-process shards.
+/// exactly as for in-process shards. `--orphan-grace-secs` (default
+/// 120) bounds how long the worker waits for its FIRST front-end
+/// connection before concluding it is orphaned and exiting; with
+/// `--hibernate-dir`/`--hibernate-after-secs` the worker spills idle
+/// sessions to its shard's snapshot directory and sweeps a crashed
+/// predecessor's stale `.tmp` spill files (older than the grace) at
+/// startup.
 pub fn cli_worker(args: &Args) -> Result<()> {
     let config = args.str("config", "main");
     let manifest = model::Manifest::load(&model::artifact_dir(&config))?;
@@ -391,6 +426,17 @@ pub fn cli_worker(args: &Args) -> Result<()> {
     if ttl_secs > 0 {
         cfg.session_ttl = Some(std::time::Duration::from_secs(ttl_secs));
     }
+    let hibernate_dir = args.str("hibernate-dir", "");
+    if !hibernate_dir.is_empty() {
+        cfg.hibernate_dir = Some(std::path::PathBuf::from(&hibernate_dir));
+    }
+    let hibernate_after_secs = args.u64("hibernate-after-secs", 0)?;
+    if hibernate_after_secs > 0 {
+        cfg.hibernate_after = Some(std::time::Duration::from_secs(hibernate_after_secs));
+    }
+    cfg.orphan_grace = std::time::Duration::from_secs(
+        args.u64("orphan-grace-secs", server::ORPHAN_GRACE_DEFAULT.as_secs())?,
+    );
     let factory = serve_backend_factories(&config, &ckpt_path, seed, comp_len, 1)
         .pop()
         .expect("one worker factory");
@@ -417,7 +463,7 @@ pub fn cli_stream(args: &Args) -> Result<()> {
     bench::experiments::fig8_streaming(&mut ctx, args)
 }
 
-/// `ccm bench [--clients 8] [--rounds 120] [--emit BENCH_9.json]` —
+/// `ccm bench [--clients 8] [--rounds 120] [--emit BENCH_10.json]` —
 /// serving-layer benchmark scenarios over the SimCompute backend (no
 /// artifacts needed): in-process serve throughput, the 2-worker IPC
 /// hop under BOTH `--ipc-codec` values (with the proxy's RTT p50/p99),

@@ -95,8 +95,11 @@ fn print_help() {
                  [--eviction POLICY]    oldest | lru | largest-bytes\n\
                  [--strategy TIER]      default tier: ccm | sliding-window | none\n\
                  [--tiers SPEC]         QoS buckets, e.g. ccm=8/4 (refill/burst)\n\
+                 [--hibernate-dir DIR]  spill idle sessions' Mem(t) to disk\n\
+                 [--hibernate-after-secs 60]  idle threshold before spilling\n\
            worker --shard K --shards N  run one shard executor process (IPC)\n\
-           bench --emit BENCH_9.json    serving benchmarks (json vs binary IPC)\n\
+                 [--orphan-grace-secs 120]  first-connection orphan grace\n\
+           bench --emit BENCH_10.json   serving benchmarks (json vs binary IPC)\n\
            loadgen --scenario mixed     open-loop paper-workload traffic replay\n\
                  [--users N --rate R]   population size / aggregate req/s\n\
                  [--mix dialog@ccm=3,.] tiered population (workload[@tier]=w)\n\

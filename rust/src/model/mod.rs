@@ -2,6 +2,7 @@
 //! parameter storage + checkpoints, and Adam optimizer state buffers.
 
 pub mod manifest;
+pub mod snapshot;
 pub mod store;
 
 pub use manifest::{artifact_dir, Manifest};

@@ -1,0 +1,618 @@
+//! Versioned, checksummed session snapshots — the on-disk form of a
+//! session's compressed context memory Mem(t).
+//!
+//! This extends the checkpoint tensor serialization of
+//! [`super::store`] (`write_vec`, shared here) into a self-contained
+//! [`SessionSnapshot`]: magic + version + strategy kind + online step
+//! `t` / position cursor + the KV tensors of the memory store + the
+//! strategy's raw-token retention state + a trailing CRC-32. The server
+//! hibernation tier (`server::hibernate`) spills cold sessions in this
+//! format and rehydrates them on the next touch; the same artifact is
+//! the unit a future cross-host replication channel would ship.
+//!
+//! ## Failure discipline
+//!
+//! Decoding mirrors the shard-IPC codec's property-test contract:
+//! arbitrary truncation and arbitrary byte corruption must fail with a
+//! clean `Err`, never a panic, a huge allocation, or a torn value.
+//! Every length field is bounds-checked before its allocation, tensor
+//! lengths must match the declared dimensions exactly, and the CRC over
+//! the entire body catches any flip the structural checks let through.
+//! Readers may deliver bytes in arbitrarily small chunks (`read_exact`
+//! loops), so streaming from a socket or a file behaves identically.
+
+use std::io::Read;
+
+use anyhow::{bail, Context, Result};
+
+use crate::compress::strategy::{StrategyKind, StrategyState};
+use crate::masks::MergeScheme;
+use crate::memory::window::StreamWindow;
+use crate::memory::{MemBuffers, MemoryStore, UpdateKind};
+use crate::model::store::write_vec;
+
+/// Snapshot file magic (8 bytes, versioned separately below).
+pub const SNAP_MAGIC: &[u8; 8] = b"CCMSNAP1";
+/// Current snapshot format version. Decoders reject anything else —
+/// the hibernation tier treats that exactly like a missing snapshot.
+pub const SNAP_VERSION: u32 = 1;
+
+/// Hard caps a decoder enforces BEFORE allocating: a corrupt length
+/// field must fail cleanly, not reserve gigabytes. Generous against
+/// every real manifest (d_model·layers·slots products sit far below).
+const MAX_ID_BYTES: usize = 4096;
+const MAX_DIM: u64 = 1 << 16;
+const MAX_TENSOR_ELEMS: u64 = 1 << 26; // 64M f32 = 256 MB per tensor
+const MAX_TOKENS: u64 = 1 << 24;
+
+/// Everything needed to reconstruct a session's memory state after a
+/// hibernate/rehydrate cycle (wall-clock fields like `last_used` are
+/// re-seeded at restore time — a rehydrated session was just touched).
+#[derive(Debug, Clone)]
+pub struct SessionSnapshot {
+    pub id: String,
+    pub strategy: StrategyKind,
+    /// Online time step t (chunks absorbed) at spill time.
+    pub t: u64,
+    /// Next absolute position id of the memory store.
+    pub pos_cursor: u64,
+    /// Creation order stamp (monotone per shard) — preserved so
+    /// eviction order survives a hibernate cycle.
+    pub created: u64,
+    pub raw_context_tokens: u64,
+    pub dropped_tokens: u64,
+    /// Mem(t): the compressed KV tensors and their update policy.
+    pub mem: MemoryStore,
+    /// Strategy-owned raw-token retention (window / full tail).
+    pub state: StrategyState,
+}
+
+impl SessionSnapshot {
+    /// Strategy-aware live KV bytes this snapshot represents — the
+    /// quantity the hibernation tier subtracts from the hot budget.
+    pub fn kv_bytes(&self) -> usize {
+        let per_tok = 2 * self.mem.buffers.layers * self.mem.buffers.d_model * 4;
+        self.mem.kv_bytes() + self.state.raw_kv_tokens() * per_tok
+    }
+
+    /// Encode to the versioned on-disk format (trailing CRC included).
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        if self.id.len() > MAX_ID_BYTES {
+            bail!("session id too long to snapshot: {} bytes", self.id.len());
+        }
+        if !state_matches(self.strategy, &self.state) {
+            bail!("snapshot strategy {:?} does not match its state", self.strategy);
+        }
+        let b = &self.mem.buffers;
+        let elems = b.layers * b.slots * b.d_model;
+        if b.k.len() != elems || b.v.len() != elems {
+            bail!("memory tensors disagree with dims: {} vs {elems}", b.k.len());
+        }
+        let mut out = Vec::with_capacity(128 + self.id.len() + elems * 8);
+        out.extend_from_slice(SNAP_MAGIC);
+        out.extend_from_slice(&SNAP_VERSION.to_le_bytes());
+        out.push(self.strategy.wire());
+        out.extend_from_slice(&(self.id.len() as u32).to_le_bytes());
+        out.extend_from_slice(self.id.as_bytes());
+        for v in
+            [self.t, self.pos_cursor, self.created, self.raw_context_tokens, self.dropped_tokens]
+        {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        match &self.mem.kind {
+            UpdateKind::Concat => out.push(0),
+            UpdateKind::Merge(MergeScheme::Avg) => out.push(1),
+            UpdateKind::Merge(MergeScheme::Ema(a)) => {
+                out.push(2);
+                out.extend_from_slice(&a.to_le_bytes());
+            }
+        }
+        for v in [
+            self.mem.t as u64,
+            self.mem.comp_len as u64,
+            b.layers as u64,
+            b.slots as u64,
+            b.d_model as u64,
+            b.len as u64,
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        write_vec(&mut out, &b.k)?;
+        write_vec(&mut out, &b.v)?;
+        match &self.state {
+            StrategyState::Ccm => out.push(0),
+            StrategyState::Window(w) => {
+                out.push(1);
+                for v in [w.max_kv as u64, w.n_sink as u64, w.seen] {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                write_tokens(&mut out, &w.sink);
+                write_tokens(&mut out, &w.window);
+            }
+            StrategyState::Full(tail) => {
+                out.push(2);
+                write_tokens(&mut out, tail);
+            }
+        }
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        Ok(out)
+    }
+
+    /// Decode a complete snapshot; trailing garbage is corruption.
+    pub fn decode(bytes: &[u8]) -> Result<SessionSnapshot> {
+        let mut r = bytes;
+        let snap = Self::read_from(&mut r)?;
+        if !r.is_empty() {
+            bail!("snapshot has {} trailing bytes", r.len());
+        }
+        Ok(snap)
+    }
+
+    /// Decode from a reader (chunked delivery is fine: every field goes
+    /// through `read_exact`). Leaves the reader positioned just past
+    /// the trailing CRC.
+    pub fn read_from(r: &mut impl Read) -> Result<SessionSnapshot> {
+        let mut cr = CrcReader { inner: r, crc: 0xFFFF_FFFF };
+        let mut magic = [0u8; 8];
+        cr.read_exact(&mut magic).context("snapshot magic")?;
+        if &magic != SNAP_MAGIC {
+            bail!("not a CCM session snapshot");
+        }
+        let version = r_u32(&mut cr)?;
+        if version != SNAP_VERSION {
+            bail!("unsupported snapshot version {version} (expected {SNAP_VERSION})");
+        }
+        let strategy = StrategyKind::from_wire(r_u8(&mut cr)?)?;
+        let id_len = r_u32(&mut cr)? as usize;
+        if id_len > MAX_ID_BYTES {
+            bail!("snapshot session id length {id_len} exceeds {MAX_ID_BYTES}");
+        }
+        let mut id_bytes = vec![0u8; id_len];
+        cr.read_exact(&mut id_bytes).context("snapshot session id")?;
+        let id = String::from_utf8(id_bytes).context("snapshot session id utf-8")?;
+        let t = r_u64(&mut cr)?;
+        let pos_cursor = r_u64(&mut cr)?;
+        let created = r_u64(&mut cr)?;
+        let raw_context_tokens = r_u64(&mut cr)?;
+        let dropped_tokens = r_u64(&mut cr)?;
+        let kind = match r_u8(&mut cr)? {
+            0 => UpdateKind::Concat,
+            1 => UpdateKind::Merge(MergeScheme::Avg),
+            2 => {
+                let a = f32::from_le_bytes(r_u32(&mut cr)?.to_le_bytes());
+                if !a.is_finite() {
+                    bail!("snapshot EMA coefficient is not finite");
+                }
+                UpdateKind::Merge(MergeScheme::Ema(a))
+            }
+            other => bail!("unknown memory update kind byte {other}"),
+        };
+        let mem_t = r_u64(&mut cr)?;
+        let comp_len = r_u64(&mut cr)?;
+        let layers = r_u64(&mut cr)?;
+        let slots = r_u64(&mut cr)?;
+        let d_model = r_u64(&mut cr)?;
+        let len = r_u64(&mut cr)?;
+        if layers == 0 || layers > MAX_DIM || slots > MAX_DIM || d_model == 0 || d_model > MAX_DIM
+        {
+            bail!("snapshot memory dims out of range: L={layers} M={slots} D={d_model}");
+        }
+        let elems = layers * slots * d_model;
+        if elems > MAX_TENSOR_ELEMS {
+            bail!("snapshot memory tensor too large: {elems} elements");
+        }
+        if len > slots || comp_len > MAX_DIM || mem_t > u64::MAX / 2 {
+            bail!("snapshot memory header inconsistent: len={len} slots={slots}");
+        }
+        let k = read_tensor(&mut cr, elems as usize)?;
+        let v = read_tensor(&mut cr, elems as usize)?;
+        let mem = MemoryStore {
+            buffers: MemBuffers {
+                k,
+                v,
+                len: len as usize,
+                layers: layers as usize,
+                slots: slots as usize,
+                d_model: d_model as usize,
+            },
+            kind,
+            t: mem_t as usize,
+            comp_len: comp_len as usize,
+        };
+        let state = match r_u8(&mut cr)? {
+            0 => StrategyState::Ccm,
+            1 => {
+                let max_kv = r_u64(&mut cr)?;
+                let n_sink = r_u64(&mut cr)?;
+                let seen = r_u64(&mut cr)?;
+                if max_kv > MAX_TOKENS || n_sink > max_kv {
+                    bail!("snapshot window header inconsistent: kv={max_kv} sink={n_sink}");
+                }
+                let sink = read_tokens(&mut cr, "window sink")?;
+                let window = read_tokens(&mut cr, "window tail")?;
+                if sink.len() as u64 > n_sink || (sink.len() + window.len()) as u64 > max_kv {
+                    bail!("snapshot window exceeds its own budget");
+                }
+                let mut w = StreamWindow::streaming_llm(max_kv as usize, n_sink as usize);
+                w.sink = sink;
+                w.window = window;
+                w.seen = seen;
+                StrategyState::Window(w)
+            }
+            2 => StrategyState::Full(read_tokens(&mut cr, "full tail")?),
+            other => bail!("unknown strategy state byte {other}"),
+        };
+        if !state_matches(strategy, &state) {
+            bail!("snapshot state does not match strategy {:?}", strategy);
+        }
+        let computed = cr.crc ^ 0xFFFF_FFFF;
+        let mut tail = [0u8; 4];
+        cr.inner.read_exact(&mut tail).context("snapshot crc")?;
+        let stored = u32::from_le_bytes(tail);
+        if stored != computed {
+            bail!("snapshot CRC mismatch: stored {stored:#010x}, computed {computed:#010x}");
+        }
+        Ok(SessionSnapshot {
+            id,
+            strategy,
+            t,
+            pos_cursor,
+            created,
+            raw_context_tokens,
+            dropped_tokens,
+            mem,
+            state,
+        })
+    }
+}
+
+fn state_matches(strategy: StrategyKind, state: &StrategyState) -> bool {
+    matches!(
+        (strategy, state),
+        (StrategyKind::Ccm, StrategyState::Ccm)
+            | (StrategyKind::SlidingWindow, StrategyState::Window(_))
+            | (StrategyKind::NoCompress, StrategyState::Full(_))
+    )
+}
+
+fn write_tokens(out: &mut Vec<u8>, toks: &[i32]) {
+    out.extend_from_slice(&(toks.len() as u32).to_le_bytes());
+    for t in toks {
+        out.extend_from_slice(&t.to_le_bytes());
+    }
+}
+
+fn read_tokens(r: &mut impl Read, what: &str) -> Result<Vec<i32>> {
+    let n = r_u32(r)? as u64;
+    if n > MAX_TOKENS {
+        bail!("snapshot {what} token count {n} exceeds {MAX_TOKENS}");
+    }
+    let mut bytes = vec![0u8; n as usize * 4];
+    r.read_exact(&mut bytes).with_context(|| format!("snapshot {what} tokens"))?;
+    Ok(bytes.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+/// Bounded counterpart of `store::read_vec`: the element count is
+/// dictated by the already-validated dims, so a corrupt length field
+/// can never trigger an oversized allocation.
+fn read_tensor(r: &mut impl Read, expect: usize) -> Result<Vec<f32>> {
+    let n = r_u64(r)?;
+    if n != expect as u64 {
+        bail!("snapshot tensor length {n} disagrees with dims ({expect})");
+    }
+    let mut bytes = vec![0u8; expect * 4];
+    r.read_exact(&mut bytes).context("snapshot tensor payload")?;
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+fn r_u8(r: &mut impl Read) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b).context("snapshot u8")?;
+    Ok(b[0])
+}
+
+fn r_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).context("snapshot u32")?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn r_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b).context("snapshot u64")?;
+    Ok(u64::from_le_bytes(b))
+}
+
+// ---------------------------------------------------------------------
+// CRC-32 (IEEE 802.3, reflected) — hand-rolled, no dependencies.
+
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+fn crc32_update(mut crc: u32, bytes: &[u8]) -> u32 {
+    for &b in bytes {
+        crc = CRC_TABLE[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc
+}
+
+/// CRC-32 of a complete buffer (init 0xFFFFFFFF, final xor).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    crc32_update(0xFFFF_FFFF, bytes) ^ 0xFFFF_FFFF
+}
+
+/// Reader adapter that folds everything it yields into a running CRC,
+/// so streaming decode verifies exactly the bytes it consumed.
+struct CrcReader<'a, R: Read> {
+    inner: &'a mut R,
+    crc: u32,
+}
+
+impl<R: Read> Read for CrcReader<'_, R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.crc = crc32_update(self.crc, &buf[..n]);
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// A reader that splits its payload into two reads at `split`,
+    /// then trickles one byte at a time (exercises read_exact loops).
+    struct SplitReader {
+        data: Vec<u8>,
+        pos: usize,
+        split: usize,
+    }
+
+    impl Read for SplitReader {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.pos >= self.data.len() || buf.is_empty() {
+                return Ok(0);
+            }
+            let chunk = if self.pos < self.split { self.split - self.pos } else { 1 };
+            let n = chunk.min(buf.len()).min(self.data.len() - self.pos);
+            buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    fn random_snapshot(rng: &mut Rng, kind: StrategyKind) -> SessionSnapshot {
+        let layers = rng.range(1, 4);
+        let slots = rng.range(1, 9);
+        let d_model = rng.range(1, 9);
+        let comp_len = rng.range(1, slots + 1);
+        let elems = layers * slots * d_model;
+        let mem_kind = match rng.range(0, 3) {
+            0 => UpdateKind::Concat,
+            1 => UpdateKind::Merge(MergeScheme::Avg),
+            _ => UpdateKind::Merge(MergeScheme::Ema(0.25 + rng.range(0, 50) as f32 / 100.0)),
+        };
+        let len = rng.range(0, slots + 1);
+        let mem = MemoryStore {
+            buffers: MemBuffers {
+                k: (0..elems).map(|_| rng.normal()).collect(),
+                v: (0..elems).map(|_| rng.normal()).collect(),
+                len,
+                layers,
+                slots,
+                d_model,
+            },
+            kind: mem_kind,
+            t: rng.range(0, 100),
+            comp_len,
+        };
+        let state = match kind {
+            StrategyKind::Ccm => StrategyState::Ccm,
+            StrategyKind::SlidingWindow => {
+                let n_sink = rng.range(0, 4);
+                let max_kv = n_sink + rng.range(1, 16);
+                let mut w = StreamWindow::streaming_llm(max_kv, n_sink);
+                for t in 0..rng.range(0, 2 * max_kv) {
+                    w.push(t as i32);
+                }
+                StrategyState::Window(w)
+            }
+            StrategyKind::NoCompress => {
+                StrategyState::Full((0..rng.range(0, 32)).map(|x| x as i32).collect())
+            }
+        };
+        SessionSnapshot {
+            id: format!("user-{}", rng.range(0, 1000)),
+            strategy: kind,
+            t: rng.range(0, 1000) as u64,
+            pos_cursor: rng.range(0, 10_000) as u64,
+            created: rng.range(1, 1_000_000) as u64,
+            raw_context_tokens: rng.range(0, 10_000) as u64,
+            dropped_tokens: rng.range(0, 100) as u64,
+            mem,
+            state,
+        }
+    }
+
+    /// Minimal-dims snapshot for the O(bytes^2) sweep tests below —
+    /// keeps them fast under the Miri CI filter.
+    fn tiny_snapshot(kind: StrategyKind) -> SessionSnapshot {
+        let elems = 4; // layers 1, slots 2, d_model 2
+        let mem = MemoryStore {
+            buffers: MemBuffers {
+                k: (0..elems).map(|x| x as f32).collect(),
+                v: (0..elems).map(|x| -(x as f32)).collect(),
+                len: 2,
+                layers: 1,
+                slots: 2,
+                d_model: 2,
+            },
+            kind: UpdateKind::Concat,
+            t: 3,
+            comp_len: 2,
+        };
+        let state = match kind {
+            StrategyKind::Ccm => StrategyState::Ccm,
+            StrategyKind::SlidingWindow => {
+                let mut w = StreamWindow::streaming_llm(4, 1);
+                for t in 0..6 {
+                    w.push(t);
+                }
+                StrategyState::Window(w)
+            }
+            StrategyKind::NoCompress => StrategyState::Full(vec![7, 8, 9]),
+        };
+        SessionSnapshot {
+            id: "tiny".into(),
+            strategy: kind,
+            t: 3,
+            pos_cursor: 12,
+            created: 5,
+            raw_context_tokens: 9,
+            dropped_tokens: 2,
+            mem,
+            state,
+        }
+    }
+
+    fn assert_equivalent(a: &SessionSnapshot, b: &SessionSnapshot) -> Result<(), String> {
+        crate::prop_assert!(a.id == b.id, "id {} != {}", a.id, b.id);
+        crate::prop_assert!(a.strategy == b.strategy, "strategy mismatch");
+        crate::prop_assert!(
+            (a.t, a.pos_cursor, a.created) == (b.t, b.pos_cursor, b.created),
+            "counters mismatch"
+        );
+        crate::prop_assert!(
+            (a.raw_context_tokens, a.dropped_tokens) == (b.raw_context_tokens, b.dropped_tokens),
+            "token accounting mismatch"
+        );
+        crate::prop_assert!(a.mem.t == b.mem.t && a.mem.comp_len == b.mem.comp_len, "mem header");
+        crate::prop_assert!(
+            a.mem.buffers.k == b.mem.buffers.k && a.mem.buffers.v == b.mem.buffers.v,
+            "mem tensors differ"
+        );
+        crate::prop_assert!(
+            a.mem.buffers.len == b.mem.buffers.len
+                && a.mem.buffers.layers == b.mem.buffers.layers
+                && a.mem.buffers.slots == b.mem.buffers.slots
+                && a.mem.buffers.d_model == b.mem.buffers.d_model,
+            "mem dims differ"
+        );
+        crate::prop_assert!(a.kv_bytes() == b.kv_bytes(), "kv accounting differs");
+        match (&a.state, &b.state) {
+            (StrategyState::Ccm, StrategyState::Ccm) => {}
+            (StrategyState::Window(x), StrategyState::Window(y)) => {
+                crate::prop_assert!(
+                    x.sink == y.sink && x.window == y.window && x.seen == y.seen,
+                    "window state differs"
+                );
+                crate::prop_assert!(
+                    x.max_kv == y.max_kv && x.n_sink == y.n_sink,
+                    "window budget differs"
+                );
+            }
+            (StrategyState::Full(x), StrategyState::Full(y)) => {
+                crate::prop_assert!(x == y, "full tail differs");
+            }
+            _ => return Err("state variant changed across round-trip".into()),
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn roundtrip_over_random_sessions_per_strategy() {
+        crate::util::proptest::check("snapshot-roundtrip", 30, |rng| {
+            for kind in StrategyKind::ALL {
+                let snap = random_snapshot(rng, kind);
+                let bytes = snap.encode().map_err(|e| format!("encode: {e:#}"))?;
+                let back = SessionSnapshot::decode(&bytes).map_err(|e| format!("decode: {e:#}"))?;
+                assert_equivalent(&snap, &back)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn split_at_every_byte_decodes_identically() {
+        for kind in StrategyKind::ALL {
+            let snap = tiny_snapshot(kind);
+            let bytes = snap.encode().unwrap();
+            for split in 0..=bytes.len() {
+                let mut r = SplitReader { data: bytes.clone(), pos: 0, split };
+                let back = SessionSnapshot::read_from(&mut r)
+                    .unwrap_or_else(|e| panic!("split {split}: {e:#}"));
+                assert_eq!(back.id, snap.id, "split {split}");
+                assert_eq!(back.t, snap.t, "split {split}");
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_at_every_byte_fails_cleanly() {
+        let snap = tiny_snapshot(StrategyKind::SlidingWindow);
+        let bytes = snap.encode().unwrap();
+        for cut in 0..bytes.len() {
+            let err = SessionSnapshot::decode(&bytes[..cut]);
+            assert!(err.is_err(), "truncation at {cut}/{} must fail", bytes.len());
+        }
+    }
+
+    #[test]
+    fn any_single_byte_flip_is_detected() {
+        for kind in StrategyKind::ALL {
+            let snap = tiny_snapshot(kind);
+            let bytes = snap.encode().unwrap();
+            for i in 0..bytes.len() {
+                let mut bad = bytes.clone();
+                bad[i] ^= 0x5A;
+                assert!(
+                    SessionSnapshot::decode(&bad).is_err(),
+                    "flip at {i}/{} slipped through ({})",
+                    bytes.len(),
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn wrong_version_and_magic_are_rejected() {
+        let snap = tiny_snapshot(StrategyKind::Ccm);
+        let bytes = snap.encode().unwrap();
+        // Future version: refused by name before anything is read.
+        let mut v2 = bytes.clone();
+        v2[8..12].copy_from_slice(&2u32.to_le_bytes());
+        let err = SessionSnapshot::decode(&v2).unwrap_err();
+        assert!(err.to_string().contains("version"), "got: {err:#}");
+        // Checkpoint magic is a different artifact, not a version skew.
+        let mut ck = bytes.clone();
+        ck[..8].copy_from_slice(b"CCMCKPT1");
+        assert!(SessionSnapshot::decode(&ck).is_err());
+        // Trailing garbage after a valid snapshot is corruption.
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(SessionSnapshot::decode(&long).is_err());
+    }
+
+    #[test]
+    fn crc32_matches_known_vector() {
+        // IEEE 802.3 check value for "123456789".
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+}

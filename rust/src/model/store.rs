@@ -106,7 +106,7 @@ impl Checkpoint {
     }
 }
 
-fn write_vec(f: &mut impl Write, v: &[f32]) -> Result<()> {
+pub(crate) fn write_vec(f: &mut impl Write, v: &[f32]) -> Result<()> {
     f.write_all(&(v.len() as u64).to_le_bytes())?;
     let n_bytes = v.len() * 4;
     // SAFETY: reinterprets the f32 slice's own allocation as bytes —
@@ -118,7 +118,7 @@ fn write_vec(f: &mut impl Write, v: &[f32]) -> Result<()> {
     Ok(())
 }
 
-fn read_vec(f: &mut impl Read) -> Result<Vec<f32>> {
+pub(crate) fn read_vec(f: &mut impl Read) -> Result<Vec<f32>> {
     let mut len8 = [0u8; 8];
     f.read_exact(&mut len8)?;
     let n = u64::from_le_bytes(len8) as usize;

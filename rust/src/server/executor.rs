@@ -17,8 +17,10 @@ use anyhow::Result;
 
 use crate::compress::{Compute, StrategyKind};
 use crate::coordinator::batcher::WorkKind;
+use crate::coordinator::session::Session;
 use crate::coordinator::Coordinator;
 use crate::model::manifest::Manifest;
+use crate::server::hibernate::SpillStore;
 use crate::server::router::partition_budget;
 use crate::server::{Reply, Request, ServerConfig, StatsQuery};
 use crate::util::json::escape;
@@ -53,6 +55,11 @@ pub(crate) struct Executor<'a> {
     draining: bool,
     /// Everyone who asked for shutdown; all are acked once drained.
     shutdown_replies: Vec<Reply>,
+    /// On-disk hibernation tier (`--hibernate-dir`): `None` disables.
+    spill: Option<SpillStore>,
+    /// Idle threshold before a resident session spills (resolved from
+    /// the config; meaningful only with `spill`).
+    hibernate_after: Duration,
 }
 
 impl<'a> Executor<'a> {
@@ -75,6 +82,18 @@ impl<'a> Executor<'a> {
         coord.sessions.set_tiers(&cfg.tiers);
         coord.sessions.set_default_strategy(cfg.default_strategy);
         let shards = cfg.shards.max(1);
+        // A spill directory that cannot be opened disables hibernation
+        // for this shard (logged) rather than killing it — the tier is
+        // an optimization; serving without it is the PR 1 lifecycle.
+        let spill = cfg.hibernate_dir.as_ref().and_then(|root| {
+            match SpillStore::open(root, shard) {
+                Ok(store) => Some(store),
+                Err(e) => {
+                    crate::info!("shard {shard}: hibernation disabled: {e:#}");
+                    None
+                }
+            }
+        });
         Executor {
             coord,
             shard,
@@ -87,6 +106,8 @@ impl<'a> Executor<'a> {
             waiting: VecDeque::new(),
             draining: false,
             shutdown_replies: Vec::new(),
+            spill,
+            hibernate_after: cfg.hibernate_after.unwrap_or(Duration::from_secs(60)),
         }
     }
 
@@ -153,22 +174,35 @@ impl<'a> Executor<'a> {
                 // keeps the shard under its budget slice at every
                 // observable point.
                 if let Some(budget) = self.kv_budget {
-                    let evicted = self.coord.enforce_kv_budget(budget);
-                    if !evicted.is_empty() {
+                    let evicted = self.enforce_budget(budget);
+                    if evicted > 0 {
                         crate::debug!(
-                            "shard {}: kv budget {budget}: evicted {} sessions",
-                            self.shard,
-                            evicted.len()
+                            "shard {}: kv budget {budget}: evicted {evicted} sessions",
+                            self.shard
                         );
                     }
                 }
             }
 
-            // 3. Idle-session reaping on a coarse timer.
-            if let Some(ttl) = self.session_ttl {
-                if last_reap.elapsed() >= Duration::from_millis(100) {
-                    last_reap = Instant::now();
+            // 3. Idle-session housekeeping on a coarse timer: spill
+            //    cold sessions to the hibernation tier, then reap
+            //    expired ones (resident and hibernated alike).
+            if (self.session_ttl.is_some() || self.spill.is_some())
+                && last_reap.elapsed() >= Duration::from_millis(100)
+            {
+                last_reap = Instant::now();
+                self.spill_idle();
+                if let Some(ttl) = self.session_ttl {
                     self.coord.reap_idle(ttl, Instant::now());
+                    let reaped = self.coord.sessions.reap_hibernated(ttl, Instant::now());
+                    if !reaped.is_empty() {
+                        if let Some(store) = &self.spill {
+                            for id in &reaped {
+                                store.discard(id);
+                            }
+                        }
+                        self.coord.metrics.sessions_reaped += reaped.len() as u64;
+                    }
                 }
             }
 
@@ -192,7 +226,7 @@ impl<'a> Executor<'a> {
                     self.coord.pending() == 0 && self.waiting.is_empty() && !self.draining;
                 let wait = if !fully_idle {
                     idle_wait
-                } else if self.session_ttl.is_some() {
+                } else if self.session_ttl.is_some() || self.spill.is_some() {
                     Duration::from_millis(100)
                 } else {
                     Duration::from_secs(3600)
@@ -219,9 +253,103 @@ impl<'a> Executor<'a> {
             .unwrap_or_else(|| self.coord.sessions.default_strategy())
     }
 
+    /// Transparently restore a hibernated session before the request
+    /// touches it. Checks the DISK whenever the session is not resident
+    /// (not just the hibernated side-table), so a respawned worker
+    /// inherits its predecessor's spill directory and Mem(t) survives a
+    /// worker restart. The failure contract: a corrupt or missing
+    /// snapshot degrades to a fresh session (== eviction) — never a
+    /// client-visible error, never a panic.
+    fn rehydrate(&mut self, session: &str) {
+        let Some(store) = &self.spill else { return };
+        if self.coord.sessions.get(session).is_ok() {
+            return; // resident wins: its state is newer than any spill
+        }
+        match store.load(session) {
+            Ok(Some(snap)) => {
+                store.discard(session);
+                self.coord.sessions.insert_restored(Session::from_snapshot(snap));
+                self.coord.metrics.rehydrations += 1;
+            }
+            Ok(None) => {
+                // Side-table entry without a file (reaped/corrupt-swept
+                // behind our back): forget it and start fresh.
+                self.coord.sessions.drop_hibernated(session);
+            }
+            Err(e) => {
+                crate::info!("shard {}: corrupt snapshot for {session:?}: {e:#}", self.shard);
+                store.discard(session);
+                self.coord.sessions.drop_hibernated(session);
+                self.coord.metrics.snapshot_corrupt += 1;
+            }
+        }
+    }
+
+    /// Spill sessions idle past the hibernate threshold: snapshot to
+    /// disk first, and only on a successful write move the session to
+    /// the hibernated side-table (its KV leaves the budget). A failed
+    /// spill keeps the session hot — hibernation may never lose state.
+    fn spill_idle(&mut self) {
+        let Some(store) = &self.spill else { return };
+        let now = Instant::now();
+        let protected = self.coord.batcher.pending_sessions();
+        let idle = self.coord.sessions.idle_sessions(self.hibernate_after, now, &protected);
+        for id in idle {
+            let Ok(session) = self.coord.sessions.get(&id) else { continue };
+            match store.spill(&session.to_snapshot()) {
+                Ok(()) => {
+                    self.coord.sessions.hibernate(&id);
+                    self.coord.metrics.spills += 1;
+                }
+                Err(e) => {
+                    crate::info!(
+                        "shard {}: spill of idle session {id:?} failed (kept hot): {e:#}",
+                        self.shard
+                    );
+                }
+            }
+        }
+    }
+
+    /// Enforce this shard's KV-budget slice. Without a spill store this
+    /// is plain eviction; with one, every victim is spilled to disk
+    /// before its RAM is dropped (spill-before-drop), so a budget
+    /// squeeze demotes sessions to the hibernation tier instead of
+    /// erasing them. A victim whose spill fails degrades to the plain
+    /// drop. Returns how many sessions left residence.
+    fn enforce_budget(&mut self, budget: usize) -> usize {
+        if self.coord.sessions.total_kv_bytes() <= budget {
+            return 0; // common case: no protected-set allocation
+        }
+        let Some(store) = &self.spill else {
+            return self.coord.enforce_kv_budget(budget).len();
+        };
+        let protected = self.coord.batcher.pending_sessions();
+        let victims = self.coord.sessions.take_victims_to_budget(budget, &protected);
+        let n = victims.len();
+        self.coord.metrics.sessions_evicted += n as u64;
+        for victim in victims {
+            match store.spill(&victim.to_snapshot()) {
+                Ok(()) => {
+                    self.coord.sessions.note_hibernated(&victim);
+                    self.coord.metrics.spills += 1;
+                }
+                Err(e) => {
+                    crate::info!(
+                        "shard {}: spill of evicted session {:?} failed (dropped): {e:#}",
+                        self.shard,
+                        victim.id
+                    );
+                }
+            }
+        }
+        n
+    }
+
     fn admit(&mut self, req: Request, reply: Reply) {
         match req {
             Request::Context { session, tokens, strategy } => {
+                self.rehydrate(&session);
                 let strat = self.strategy_of(&session, strategy);
                 if let Some(refusal) = self.refuse(strat) {
                     let _ = reply.send(refusal);
@@ -248,6 +376,7 @@ impl<'a> Executor<'a> {
                 let _ = reply.send(msg);
             }
             Request::Query { session, tokens, topk } => {
+                self.rehydrate(&session);
                 let strat = self.strategy_of(&session, None);
                 if let Some(refusal) = self.refuse(strat) {
                     let _ = reply.send(refusal);
@@ -331,7 +460,9 @@ impl<'a> Executor<'a> {
              \"kv_bytes\":{},\"kv_budget_bytes\":{},\"session_ttl_secs\":{},\"max_pending\":{},\
              \"pending\":{},\"waiting\":{},\"requests\":{},\"compressions\":{},\"inferences\":{},\
              \"batches\":{},\"rejected_overload\":{},\"sessions_evicted\":{},\
-             \"sessions_reaped\":{},\"priority_overrides\":{},\"peak_kv_bytes\":{},\
+             \"sessions_reaped\":{},\"hibernated_sessions\":{},\"hibernated_bytes\":{},\
+             \"spills\":{},\"rehydrations\":{},\"snapshot_corrupt\":{},\
+             \"priority_overrides\":{},\"peak_kv_bytes\":{},\
              \"strategies\":{},{reactor_field}{detail_field}\"report\":{}}}",
             self.shard,
             escape(self.coord.sessions.eviction_name()),
@@ -349,6 +480,11 @@ impl<'a> Executor<'a> {
             m.rejected_overload,
             m.sessions_evicted,
             m.sessions_reaped,
+            self.coord.sessions.hibernated_census().0,
+            self.coord.sessions.hibernated_census().1,
+            m.spills,
+            m.rehydrations,
+            m.snapshot_corrupt,
             self.coord.batcher.total_overrides(),
             m.peak_kv_bytes,
             self.strategies_json(),
@@ -768,6 +904,95 @@ mod tests {
             .collect();
         assert_eq!(budgets.iter().sum::<usize>(), 1001);
         assert!(budgets.iter().all(|b| *b == 250 || *b == 251), "{budgets:?}");
+    }
+
+    fn hib_root(case: &str) -> std::path::PathBuf {
+        let root = std::env::temp_dir().join(format!("ccm-exec-hib-{}-{case}", std::process::id()));
+        std::fs::remove_dir_all(&root).ok();
+        root
+    }
+
+    #[test]
+    fn idle_session_spills_and_rehydrates_transparently_at_same_t() {
+        let root = hib_root("idle");
+        let mut ex = toy_executor(|cfg| {
+            cfg.hibernate_dir = Some(root.clone());
+            cfg.hibernate_after = Some(Duration::ZERO);
+        });
+        ex.coord.add_context("u", vec![1, 2]);
+        ex.coord.run_until_idle().unwrap();
+        let kv = ex.coord.sessions.get("u").unwrap().kv_bytes();
+        assert!(kv > 0);
+
+        // The housekeeping pass spills the (instantly) idle session.
+        ex.spill_idle();
+        assert!(ex.coord.sessions.get("u").is_err(), "spilled session leaves residence");
+        assert!(ex.coord.sessions.is_hibernated("u"));
+        assert!(crate::server::hibernate::snap_path(&root, 0, "u").exists());
+        let j = Json::parse(&ex.stats_json(&StatsQuery::default())).unwrap();
+        assert_eq!(j.get("sessions").unwrap().usize().unwrap(), 0);
+        assert_eq!(j.get("kv_bytes").unwrap().usize().unwrap(), 0, "hibernated KV leaves budget");
+        assert_eq!(j.get("hibernated_sessions").unwrap().usize().unwrap(), 1);
+        assert_eq!(j.get("hibernated_bytes").unwrap().usize().unwrap(), kv);
+        assert_eq!(j.get("spills").unwrap().usize().unwrap(), 1);
+
+        // The next touch rehydrates transparently: the ack continues
+        // from the pre-spill t, not from a fresh session.
+        let (tx, rx) = channel();
+        let req = Request::Context { session: "u".into(), tokens: vec![3, 4], strategy: None };
+        ex.admit(req, reply_to(&tx));
+        let ack = recv_json(&rx);
+        assert_eq!(ack.get("ok").unwrap(), &Json::Bool(true));
+        assert_eq!(ack.get("t").unwrap().i64().unwrap(), 2, "resumes at pre-spill t=1, acks t=2");
+        assert_eq!(ex.coord.metrics.rehydrations, 1);
+        assert!(!ex.coord.sessions.is_hibernated("u"));
+        assert!(!crate::server::hibernate::snap_path(&root, 0, "u").exists(), "spill consumed");
+        ex.coord.run_until_idle().unwrap();
+        assert_eq!(ex.coord.sessions.get("u").unwrap().t, 2);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn corrupt_snapshot_degrades_to_fresh_session_not_an_error() {
+        let root = hib_root("corrupt");
+        let mut ex = toy_executor(|cfg| cfg.hibernate_dir = Some(root.clone()));
+        // Garbage parked where "u"'s snapshot would live — a torn disk,
+        // a bad actor, bit rot; the executor must treat it exactly like
+        // an eviction.
+        let path = crate::server::hibernate::snap_path(&root, 0, "u");
+        std::fs::write(&path, b"not a snapshot").unwrap();
+        let (tx, rx) = channel();
+        let req = Request::Context { session: "u".into(), tokens: vec![1, 2], strategy: None };
+        ex.admit(req, reply_to(&tx));
+        let ack = recv_json(&rx);
+        assert_eq!(ack.get("ok").unwrap(), &Json::Bool(true), "never a client error");
+        assert_eq!(ack.get("t").unwrap().i64().unwrap(), 1, "fresh session at t=1");
+        assert_eq!(ex.coord.metrics.snapshot_corrupt, 1);
+        assert_eq!(ex.coord.metrics.rehydrations, 0);
+        assert!(!path.exists(), "corrupt file is deleted, not retried forever");
+        ex.coord.run_until_idle().unwrap();
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn budget_eviction_spills_victims_before_dropping_them() {
+        let root = hib_root("budget");
+        let mut ex = toy_executor(|cfg| cfg.hibernate_dir = Some(root.clone()));
+        ex.coord.add_context("a", vec![1, 2]);
+        ex.coord.run_until_idle().unwrap();
+        assert_eq!(ex.enforce_budget(0), 1);
+        assert_eq!(ex.coord.metrics.sessions_evicted, 1);
+        assert_eq!(ex.coord.metrics.spills, 1);
+        assert!(ex.coord.sessions.is_hibernated("a"), "victim demoted to disk, not erased");
+        // The "evicted" session's memory is recoverable: its next touch
+        // resumes at the pre-eviction step.
+        let (tx, rx) = channel();
+        let req = Request::Context { session: "a".into(), tokens: vec![3], strategy: None };
+        ex.admit(req, reply_to(&tx));
+        assert_eq!(recv_json(&rx).get("t").unwrap().i64().unwrap(), 2);
+        assert_eq!(ex.coord.metrics.rehydrations, 1);
+        ex.coord.run_until_idle().unwrap();
+        std::fs::remove_dir_all(&root).ok();
     }
 
     #[test]

@@ -1,0 +1,275 @@
+//! On-disk spill store for hibernated sessions — the middle level of
+//! the three-level session lifecycle (hot RAM → disk → gone).
+//!
+//! Each shard owns a [`SpillStore`] rooted at
+//! `<hibernate_dir>/shard-<K>/`; a session's snapshot (the versioned,
+//! CRC'd codec in [`crate::model::snapshot`]) lives in one file named
+//! by the hex of its session id. Writes are ATOMIC at the file level:
+//! the encoded bytes land in a `.tmp` sibling first and are renamed
+//! over the final path only when complete, so a worker killed mid-spill
+//! leaves either the previous snapshot or none — never a torn one. A
+//! startup sweep deletes `.tmp` orphans older than the orphan grace
+//! (a younger one may still belong to a predecessor process flushing
+//! its last spill).
+//!
+//! The store does IO only — accounting lives in the session manager's
+//! hibernated side-table, and the failure contract (corrupt or missing
+//! snapshot == eviction, never a client error) is enforced by the
+//! executor, which deletes the bad file and serves a fresh session.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::model::snapshot::SessionSnapshot;
+
+/// Per-shard directory of spilled session snapshots.
+pub struct SpillStore {
+    dir: PathBuf,
+}
+
+impl SpillStore {
+    /// Open (creating if needed) the spill directory for one shard.
+    pub fn open(root: &Path, shard: usize) -> Result<SpillStore> {
+        let dir = shard_dir(root, shard);
+        std::fs::create_dir_all(&dir).with_context(|| format!("create spill dir {dir:?}"))?;
+        Ok(SpillStore { dir })
+    }
+
+    /// Final on-disk path for a session's snapshot.
+    pub fn path_for(&self, id: &str) -> PathBuf {
+        self.dir.join(format!("{}.snap", encode_id(id)))
+    }
+
+    /// Spill one snapshot: encode, write to a `.tmp` sibling, rename
+    /// into place. Only after this returns `Ok` may the caller drop the
+    /// in-RAM session — a failed spill keeps it hot.
+    pub fn spill(&self, snap: &SessionSnapshot) -> Result<()> {
+        let bytes = snap.encode()?;
+        let path = self.path_for(&snap.id);
+        let tmp = tmp_sibling(&path);
+        std::fs::write(&tmp, &bytes).with_context(|| format!("write spill tmp {tmp:?}"))?;
+        std::fs::rename(&tmp, &path).with_context(|| format!("rename spill into {path:?}"))
+    }
+
+    /// Load a session's snapshot. `Ok(None)` means no snapshot exists
+    /// (was never spilled, or already discarded); `Err` means the file
+    /// exists but is corrupt/unreadable — the caller discards it and
+    /// serves a fresh session per the failure contract.
+    pub fn load(&self, id: &str) -> Result<Option<SessionSnapshot>> {
+        let path = self.path_for(id);
+        let bytes = match std::fs::read(&path) {
+            Ok(bytes) => bytes,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e).with_context(|| format!("read snapshot {path:?}")),
+        };
+        let snap =
+            SessionSnapshot::decode(&bytes).with_context(|| format!("decode snapshot {path:?}"))?;
+        if snap.id != id {
+            anyhow::bail!("snapshot {path:?} holds session {:?}, expected {id:?}", snap.id);
+        }
+        Ok(Some(snap))
+    }
+
+    /// Remove a session's snapshot (rehydrated, reaped, or corrupt).
+    /// Best-effort: a missing file is already the desired state.
+    pub fn discard(&self, id: &str) {
+        let path = self.path_for(id);
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(tmp_sibling(&path));
+    }
+
+    /// Number of complete (`.snap`) snapshots currently on disk.
+    pub fn snap_count(&self) -> usize {
+        let Ok(entries) = std::fs::read_dir(&self.dir) else {
+            return 0;
+        };
+        entries
+            .flatten()
+            .filter(|e| e.path().extension().is_some_and(|x| x == "snap"))
+            .count()
+    }
+
+    /// Startup sweep: delete `.tmp` spill leftovers older than
+    /// `older_than` (a crashed predecessor's torn writes). Younger tmp
+    /// files are left alone — a lingering predecessor may still rename
+    /// one into place. Returns how many files were removed.
+    pub fn sweep_stale_tmp(&self, older_than: Duration) -> usize {
+        let Ok(entries) = std::fs::read_dir(&self.dir) else {
+            return 0;
+        };
+        let now = std::time::SystemTime::now();
+        let mut removed = 0;
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if !path.extension().is_some_and(|x| x == "tmp") {
+                continue;
+            }
+            let stale = entry
+                .metadata()
+                .and_then(|m| m.modified())
+                .ok()
+                .and_then(|mtime| now.duration_since(mtime).ok())
+                .is_some_and(|age| age >= older_than);
+            if stale && std::fs::remove_file(&path).is_ok() {
+                removed += 1;
+            }
+        }
+        removed
+    }
+}
+
+/// Spill directory for one shard under the hibernation root.
+pub fn shard_dir(root: &Path, shard: usize) -> PathBuf {
+    root.join(format!("shard-{shard}"))
+}
+
+/// Final snapshot path for a session — exposed so tests (and operators)
+/// can locate a spilled session's file without a store handle.
+pub fn snap_path(root: &Path, shard: usize, id: &str) -> PathBuf {
+    shard_dir(root, shard).join(format!("{}.snap", encode_id(id)))
+}
+
+/// Filename-safe encoding of a session id: lowercase hex of its bytes.
+/// Injective, so distinct ids can never collide on disk regardless of
+/// what characters the protocol let through.
+pub fn encode_id(id: &str) -> String {
+    let mut out = String::with_capacity(id.len() * 2);
+    for b in id.as_bytes() {
+        out.push_str(&format!("{b:02x}"));
+    }
+    out
+}
+
+fn tmp_sibling(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::strategy::{StrategyKind, StrategyState};
+    use crate::memory::{MemBuffers, MemoryStore, UpdateKind};
+
+    fn test_root(case: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ccm-hib-test-{}-{case}", std::process::id()))
+    }
+
+    fn sample(id: &str, t: u64) -> SessionSnapshot {
+        let elems = 4; // layers 1, slots 2, d_model 2
+        SessionSnapshot {
+            id: id.into(),
+            strategy: StrategyKind::Ccm,
+            t,
+            pos_cursor: 8 * t,
+            created: 1,
+            raw_context_tokens: 8 * t,
+            dropped_tokens: 0,
+            mem: MemoryStore {
+                buffers: MemBuffers {
+                    k: (0..elems).map(|x| x as f32 + t as f32).collect(),
+                    v: (0..elems).map(|x| -(x as f32)).collect(),
+                    len: 2,
+                    layers: 1,
+                    slots: 2,
+                    d_model: 2,
+                },
+                kind: UpdateKind::Concat,
+                t: t as usize,
+                comp_len: 2,
+            },
+            state: StrategyState::Ccm,
+        }
+    }
+
+    #[test]
+    fn spill_load_roundtrip_and_missing_is_none() {
+        let root = test_root("roundtrip");
+        let store = SpillStore::open(&root, 0).unwrap();
+        assert!(store.load("ghost").unwrap().is_none(), "missing is None, not an error");
+        let snap = sample("user-1", 3);
+        store.spill(&snap).unwrap();
+        assert_eq!(store.snap_count(), 1);
+        let back = store.load("user-1").unwrap().expect("spilled snapshot loads");
+        assert_eq!(back.t, 3);
+        assert_eq!(back.id, "user-1");
+        assert_eq!(back.kv_bytes(), snap.kv_bytes());
+        // Re-spill overwrites atomically; the newer state wins.
+        store.spill(&sample("user-1", 4)).unwrap();
+        assert_eq!(store.load("user-1").unwrap().expect("re-spilled").t, 4);
+        assert_eq!(store.snap_count(), 1);
+        // Shards are isolated directories.
+        let other = SpillStore::open(&root, 1).unwrap();
+        assert!(other.load("user-1").unwrap().is_none());
+        assert_eq!(store.path_for("user-1"), snap_path(&root, 0, "user-1"));
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn corrupt_snapshot_is_an_error_not_a_panic() {
+        let root = test_root("corrupt");
+        let store = SpillStore::open(&root, 0).unwrap();
+        store.spill(&sample("u", 2)).unwrap();
+        let path = store.path_for("u");
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x5A;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(store.load("u").is_err(), "corruption surfaces as Err for the caller to discard");
+        // Truncation likewise.
+        std::fs::write(&path, &bytes[..mid]).unwrap();
+        assert!(store.load("u").is_err());
+        // Discard restores the missing-is-None state.
+        store.discard("u");
+        assert!(store.load("u").unwrap().is_none());
+        store.discard("u"); // idempotent
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn snapshot_under_wrong_id_is_refused() {
+        let root = test_root("wrong-id");
+        let store = SpillStore::open(&root, 0).unwrap();
+        let snap = sample("alice", 1);
+        store.spill(&snap).unwrap();
+        // A valid snapshot parked at another id's path must not
+        // rehydrate as that session.
+        std::fs::rename(store.path_for("alice"), store.path_for("bob")).unwrap();
+        assert!(store.load("bob").is_err());
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn torn_tmp_is_invisible_and_swept_by_grace() {
+        let root = test_root("tmp");
+        let store = SpillStore::open(&root, 0).unwrap();
+        store.spill(&sample("u", 5)).unwrap();
+        // Simulate a SIGKILL mid-spill: a partial tmp next to the old
+        // snapshot. Loads see the OLD complete snapshot, never the torn
+        // bytes.
+        let tmp = tmp_sibling(&store.path_for("u"));
+        std::fs::write(&tmp, b"torn partial write").unwrap();
+        assert_eq!(store.load("u").unwrap().expect("old snapshot intact").t, 5);
+        assert_eq!(store.snap_count(), 1, "tmp files are not snapshots");
+        // A generous grace keeps the fresh tmp (its writer may live).
+        assert_eq!(store.sweep_stale_tmp(Duration::from_secs(3600)), 0);
+        assert!(tmp.exists());
+        // Past the grace it is garbage and the sweep removes it.
+        assert_eq!(store.sweep_stale_tmp(Duration::ZERO), 1);
+        assert!(!tmp.exists());
+        assert_eq!(store.load("u").unwrap().expect("snapshot survives the sweep").t, 5);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn id_encoding_is_filename_safe_and_injective() {
+        assert_eq!(encode_id("u1"), "7531");
+        assert_eq!(encode_id("../evil"), "2e2e2f6576696c", "path metacharacters neutralised");
+        assert_ne!(encode_id("ab"), encode_id("ba"));
+        let p = snap_path(Path::new("/spool"), 3, "u1");
+        assert_eq!(p, PathBuf::from("/spool/shard-3/7531.snap"));
+    }
+}

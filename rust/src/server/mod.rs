@@ -233,6 +233,24 @@
 //! transparently starts a fresh session (its compressed memory is
 //! gone — that is the cost of the budget).
 //!
+//! ## Hibernation (`--hibernate-dir` + `--hibernate-after-secs`)
+//!
+//! With a hibernation directory configured, the session lifecycle
+//! gains a middle level: hot RAM → disk → gone. Each shard's executor
+//! spills sessions idle past the threshold into per-shard snapshot
+//! files (versioned + CRC'd `Mem(t)` codec, written tmp-then-rename so
+//! a crash never leaves a torn snapshot — see `hibernate.rs` and
+//! `crate::model::snapshot`), excluding their bytes from the hot KV
+//! budget; budget eviction likewise spills victims before dropping
+//! them. The next request for a hibernated session transparently
+//! rehydrates it, resuming at its pre-spill `t` (the rehydrate cost is
+//! folded into that request's normal latency). Failure contract: a
+//! corrupt or missing snapshot degrades to a FRESH session — exactly
+//! eviction semantics, never an error to the client. Stats grow
+//! `hibernated_sessions` / `hibernated_bytes` gauges and `spills` /
+//! `rehydrations` / `snapshot_corrupt` counters (summed in the merged
+//! multi-shard view).
+//!
 //! ## Invariants
 //!
 //! This module tree is the serving core, and `docs/INVARIANTS.md`
@@ -257,6 +275,7 @@
 //! [`EvictionPolicy`]: crate::coordinator::session::EvictionPolicy
 
 mod executor;
+pub mod hibernate;
 mod ipc;
 mod poll;
 mod reactor;
@@ -579,6 +598,20 @@ pub struct ServerConfig {
     /// (`--accept-backoff`) — EMFILE etc. resolve by waiting, and
     /// re-polling instantly would spin.
     pub accept_backoff: Duration,
+    /// On-disk hibernation root (`--hibernate-dir`). Each shard spills
+    /// idle sessions into `<dir>/shard-<K>/` as CRC'd snapshot files
+    /// and rehydrates them transparently on the next touch. `None`
+    /// disables the tier (the two-level PR 1 lifecycle).
+    pub hibernate_dir: Option<std::path::PathBuf>,
+    /// Idle threshold before a resident session is spilled
+    /// (`--hibernate-after-secs`). Ignored without `hibernate_dir`;
+    /// with a directory but no threshold the executor uses 60 s.
+    pub hibernate_after: Option<Duration>,
+    /// Orphan-watchdog grace a worker allows for its FIRST front-end
+    /// connection before exiting (`ccm worker --orphan-grace-secs`,
+    /// default 120 s); also bounds the startup sweep of stale spill
+    /// tmp files.
+    pub orphan_grace: Duration,
 }
 
 impl ServerConfig {
@@ -608,9 +641,16 @@ impl ServerConfig {
             shutdown_kill_after: Duration::from_secs(30),
             refusal_linger: Duration::from_secs(5),
             accept_backoff: Duration::from_millis(50),
+            hibernate_dir: None,
+            hibernate_after: None,
+            orphan_grace: ORPHAN_GRACE_DEFAULT,
         }
     }
 }
+
+/// Default orphan-watchdog grace for a worker's first front-end
+/// connection ([`ServerConfig::orphan_grace`]; `--orphan-grace-secs`).
+pub const ORPHAN_GRACE_DEFAULT: Duration = Duration::from_secs(120);
 
 /// Default per-request reply deadline ([`ServerConfig::reply_timeout`];
 /// both front-ends answer `timeout` past it rather than silently

@@ -84,7 +84,8 @@ fn down_part(shard: usize) -> String {
         "{{\"ok\":true,\"kind\":\"stats\",\"shard\":{shard},\"down\":true,\"sessions\":0,\
          \"kv_bytes\":0,\"pending\":0,\"waiting\":0,\"requests\":0,\"compressions\":0,\
          \"inferences\":0,\"batches\":0,\"rejected_overload\":0,\"sessions_evicted\":0,\
-         \"sessions_reaped\":0,\"priority_overrides\":0,\"peak_kv_bytes\":0,\
+         \"sessions_reaped\":0,\"hibernated_sessions\":0,\"hibernated_bytes\":0,\"spills\":0,\
+         \"rehydrations\":0,\"snapshot_corrupt\":0,\"priority_overrides\":0,\"peak_kv_bytes\":0,\
          \"strategies\":{},\"sessions_detail\":[]}}",
         zero_strategies()
     )
@@ -407,7 +408,9 @@ impl Router {
              \"kv_bytes\":{},\"kv_budget_bytes\":{},\"session_ttl_secs\":{},\"max_pending\":{},\
              \"pending\":{},\"waiting\":{},\"requests\":{},\"compressions\":{},\"inferences\":{},\
              \"batches\":{},\"rejected_overload\":{},\"sessions_evicted\":{},\
-             \"sessions_reaped\":{},\"priority_overrides\":{},\"peak_kv_bytes\":{},\
+             \"sessions_reaped\":{},\"hibernated_sessions\":{},\"hibernated_bytes\":{},\
+             \"spills\":{},\"rehydrations\":{},\"snapshot_corrupt\":{},\
+             \"priority_overrides\":{},\"peak_kv_bytes\":{},\
              {strategies_field}{worker_field}{reactor_field}{detail_field}\"per_shard\":[{}]}}",
             self.shards.len(),
             escape(self.eviction.name()),
@@ -425,6 +428,11 @@ impl Router {
             sum("rejected_overload")?,
             sum("sessions_evicted")?,
             sum("sessions_reaped")?,
+            sum("hibernated_sessions")?,
+            sum("hibernated_bytes")?,
+            sum("spills")?,
+            sum("rehydrations")?,
+            sum("snapshot_corrupt")?,
             sum("priority_overrides")?,
             sum("peak_kv_bytes")?,
             parts.join(","),
@@ -541,8 +549,9 @@ mod tests {
                 "{{\"ok\":true,\"kind\":\"stats\",\"shard\":{i},\"sessions\":{sessions},\
                  \"kv_bytes\":{kv},\"pending\":1,\"waiting\":0,\"requests\":10,\
                  \"compressions\":4,\"inferences\":5,\"batches\":6,\"rejected_overload\":0,\
-                 \"sessions_evicted\":2,\"sessions_reaped\":0,\"priority_overrides\":3,\
-                 \"peak_kv_bytes\":{kv},\"strategies\":{strategies}}}"
+                 \"sessions_evicted\":2,\"sessions_reaped\":0,\"hibernated_sessions\":1,\
+                 \"hibernated_bytes\":64,\"spills\":2,\"rehydrations\":1,\"snapshot_corrupt\":0,\
+                 \"priority_overrides\":3,\"peak_kv_bytes\":{kv},\"strategies\":{strategies}}}"
             )
         };
         let merged = router
@@ -564,6 +573,12 @@ mod tests {
         assert_eq!(j.get("kv_budget_bytes").unwrap().usize().unwrap(), 1 << 20);
         assert_eq!(j.get("session_ttl_secs").unwrap().usize().unwrap(), 600);
         assert_eq!(j.get("sessions_evicted").unwrap().usize().unwrap(), 4);
+        // Hibernation gauges/counters sum like every other field.
+        assert_eq!(j.get("hibernated_sessions").unwrap().usize().unwrap(), 2);
+        assert_eq!(j.get("hibernated_bytes").unwrap().usize().unwrap(), 128);
+        assert_eq!(j.get("spills").unwrap().usize().unwrap(), 4);
+        assert_eq!(j.get("rehydrations").unwrap().usize().unwrap(), 2);
+        assert_eq!(j.get("snapshot_corrupt").unwrap().usize().unwrap(), 0);
         assert_eq!(j.get("priority_overrides").unwrap().usize().unwrap(), 6);
         assert_eq!(j.get("eviction").unwrap().str().unwrap(), "oldest");
         assert!(j.opt("sessions_detail").is_none(), "detail must be opt-in");
@@ -611,7 +626,9 @@ mod tests {
                 "{{\"ok\":true,\"kind\":\"stats\",\"shard\":{i},\"sessions\":1,\"kv_bytes\":8,\
                  \"pending\":0,\"waiting\":0,\"requests\":1,\"compressions\":1,\"inferences\":0,\
                  \"batches\":1,\"rejected_overload\":0,\"sessions_evicted\":0,\
-                 \"sessions_reaped\":0,\"priority_overrides\":0,\"peak_kv_bytes\":8,\
+                 \"sessions_reaped\":0,\"hibernated_sessions\":0,\"hibernated_bytes\":0,\
+                 \"spills\":0,\"rehydrations\":0,\"snapshot_corrupt\":0,\
+                 \"priority_overrides\":0,\"peak_kv_bytes\":8,\
                  \"strategies\":{},\"sessions_detail\":[{detail}]}}",
                 zero_strategies()
             )
@@ -723,7 +740,9 @@ mod tests {
                 "{{\"ok\":true,\"kind\":\"stats\",\"shard\":{i},\"sessions\":0,\"kv_bytes\":0,\
                  \"pending\":0,\"waiting\":0,\"requests\":0,\"compressions\":0,\"inferences\":0,\
                  \"batches\":0,\"rejected_overload\":0,\"sessions_evicted\":0,\
-                 \"sessions_reaped\":0,\"priority_overrides\":0,\"peak_kv_bytes\":0,\
+                 \"sessions_reaped\":0,\"hibernated_sessions\":0,\"hibernated_bytes\":0,\
+                 \"spills\":0,\"rehydrations\":0,\"snapshot_corrupt\":0,\
+                 \"priority_overrides\":0,\"peak_kv_bytes\":0,\
                  \"strategies\":{}}}",
                 zero_strategies()
             )

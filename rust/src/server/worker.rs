@@ -400,9 +400,13 @@ struct WorkerShared {
     done: AtomicBool,
 }
 
-/// Grace periods before an unconnected worker concludes it is orphaned
-/// and exits (so a SIGKILLed front-end never leaks worker processes).
-const ORPHAN_FIRST_CONN: Duration = Duration::from_secs(120);
+/// Grace before a once-connected worker whose front-end dropped away
+/// concludes it is orphaned and exits (so a SIGKILLed front-end never
+/// leaks worker processes). The FIRST-connection grace is operator
+/// posture — `ccm worker --orphan-grace-secs`, default
+/// [`crate::server::ORPHAN_GRACE_DEFAULT`] — because slow fleets
+/// (cold-started backends, packed hosts) legitimately need longer than
+/// any constant baked in here.
 const ORPHAN_RECONNECT: Duration = Duration::from_secs(10);
 const ACCEPT_TICK: Duration = Duration::from_millis(25);
 
@@ -432,6 +436,23 @@ pub fn run_worker<'a>(
     if let Some(tx) = ready {
         let _ = tx.send(local);
     }
+    // Startup sweep of the hibernation tier: a predecessor of this
+    // shard killed mid-spill leaves `.tmp` files behind. Anything
+    // older than the orphan grace is provably garbage (its writer
+    // would have concluded it was orphaned and exited by then);
+    // younger tmp files are left for a lingering predecessor to
+    // rename into place.
+    if let Some(root) = &cfg.hibernate_dir {
+        match crate::server::hibernate::SpillStore::open(root, shard) {
+            Ok(store) => {
+                let swept = store.sweep_stale_tmp(cfg.orphan_grace);
+                if swept > 0 {
+                    crate::info!("worker {shard}: swept {swept} stale spill tmp files");
+                }
+            }
+            Err(e) => crate::info!("worker {shard}: spill dir unavailable for sweep: {e:#}"),
+        }
+    }
     let shared = WorkerShared::default();
     let (req_tx, req_rx) = channel::<(Request, Reply)>();
     let cfg = &cfg;
@@ -455,7 +476,8 @@ pub fn run_worker<'a>(
             result
         });
         let allow_binary = cfg.ipc_codec == IpcCodec::Binary;
-        let accept_result = accept_loop(&listener, &req_tx, shared, shard, allow_binary);
+        let accept_result =
+            accept_loop(&listener, &req_tx, shared, shard, allow_binary, cfg.orphan_grace);
         drop(req_tx);
         // lint: allow(unwrap) — a panicked executor thread is a bug;
         // re-raise the panic instead of fabricating an exit status.
@@ -474,8 +496,9 @@ fn accept_loop(
     shared: &WorkerShared,
     shard: usize,
     allow_binary: bool,
+    first_conn_grace: Duration,
 ) -> Result<()> {
-    let mut grace_until = Instant::now() + ORPHAN_FIRST_CONN;
+    let mut grace_until = Instant::now() + first_conn_grace;
     loop {
         if shared.done.load(Ordering::SeqCst) {
             return Ok(());
@@ -804,6 +827,49 @@ mod tests {
         let replies = read_replies(&mut stream, 1);
         assert_eq!(replies[&2].get("kind").unwrap().str().unwrap(), "shutdown");
         worker.join().expect("worker thread").expect("worker result");
+    }
+
+    #[test]
+    fn orphan_grace_is_configurable_and_startup_sweeps_stale_spill_tmp() {
+        // Regression: the first-connection orphan grace was a
+        // hard-coded 120 s, so a worker in a test (or a fast-failing
+        // deployment) lingered for two minutes. The grace now comes
+        // from the config (default unchanged); with a zero grace and
+        // no front-end the worker must exit on its own.
+        assert_eq!(
+            ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(2)).orphan_grace,
+            crate::server::ORPHAN_GRACE_DEFAULT,
+            "default grace stays 120 s"
+        );
+        let root = std::env::temp_dir().join(format!("ccm-worker-hib-{}", std::process::id()));
+        std::fs::remove_dir_all(&root).ok();
+        let dir = crate::server::hibernate::shard_dir(&root, 0);
+        std::fs::create_dir_all(&dir).unwrap();
+        // A predecessor's torn tmp next to a complete snapshot: the
+        // startup sweep must remove the first and keep the second
+        // (content validity is rehydration's problem, not the sweep's).
+        let snap = crate::server::hibernate::snap_path(&root, 0, "u");
+        std::fs::write(&snap, b"complete snapshot bytes").unwrap();
+        let tmp = dir.join("6261.snap.tmp");
+        std::fs::write(&tmp, b"torn partial write").unwrap();
+        let (ready_tx, ready_rx) = channel();
+        let worker_root = root.clone();
+        let handle = std::thread::spawn(move || {
+            let m = Manifest::toy();
+            let sim = SimCompute::from_manifest(&m);
+            let factory: BackendFactory<'static> =
+                Box::new(move || Ok(Box::new(sim) as Box<dyn Compute>));
+            let mut cfg = ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(2));
+            cfg.max_wait = Duration::ZERO;
+            cfg.hibernate_dir = Some(worker_root);
+            cfg.orphan_grace = Duration::ZERO;
+            run_worker(&m, factory, cfg, 0, Some(ready_tx))
+        });
+        let _addr = ready_rx.recv_timeout(Duration::from_secs(10)).expect("worker ready");
+        handle.join().expect("worker thread").expect("orphaned worker exits cleanly");
+        assert!(!tmp.exists(), "stale spill tmp swept at startup");
+        assert!(snap.exists(), "complete snapshots survive the sweep");
+        std::fs::remove_dir_all(&root).ok();
     }
 
     #[test]

@@ -249,6 +249,21 @@ pub fn sim_worker_entry_if_requested() {
     if kv_budget > 0 {
         cfg.kv_budget_bytes = Some(kv_budget);
     }
+    // Tiered-memory knobs: a hibernate root turns on spill-to-disk in
+    // the worker's executor; the threshold and the orphan grace are in
+    // milliseconds so tests can use aggressive values.
+    if let Ok(dir) = std::env::var("CCM_TEST_WORKER_HIBERNATE_DIR") {
+        if !dir.is_empty() {
+            cfg.hibernate_dir = Some(std::path::PathBuf::from(dir));
+            cfg.hibernate_after =
+                Some(Duration::from_millis(env_u64("CCM_TEST_WORKER_HIBERNATE_AFTER_MS", 50)));
+        }
+    }
+    if let Ok(ms) = std::env::var("CCM_TEST_WORKER_ORPHAN_GRACE_MS") {
+        if let Ok(ms) = ms.parse::<u64>() {
+            cfg.orphan_grace = Duration::from_millis(ms);
+        }
+    }
     let factory: BackendFactory<'static> = Box::new(move || Ok(Box::new(sim) as Box<dyn Compute>));
     let code = match ccm::server::run_worker(&m, factory, cfg, shard, None) {
         Ok(()) => 0,

@@ -1,0 +1,281 @@
+//! Fault-injection suite for tiered session memory (hibernation):
+//! idle sessions spill their `Mem(t)` snapshots to disk and rehydrate
+//! transparently on the next touch, asserted end to end over the real
+//! JSON-lines protocol in BOTH topologies (in-process executor and
+//! worker processes behind the shard IPC hop).
+//!
+//! The failure contract under test: a corrupt, truncated, or
+//! version-skewed snapshot is equivalent to an eviction — the next
+//! touch serves a FRESH session at t=1, bumps `snapshot_corrupt`, and
+//! never panics or drops the client connection. A SIGKILLed worker
+//! leaves old-or-none snapshots (spills are tmp-then-rename), and its
+//! successor rehydrates the predecessor's spill directory, so Mem(t)
+//! survives worker restarts.
+
+mod common;
+
+use std::time::Duration;
+
+use ccm::model::snapshot::SessionSnapshot;
+use ccm::server::hibernate::{shard_dir, snap_path};
+use ccm::server::Client;
+use ccm::util::json::Json;
+
+use common::{assert_ok, poll_until, sim, start_server, start_worker_server, wait_workers_up};
+
+/// Re-exec entry: processes spawned by the worker-topology tests run
+/// THIS test with the worker env set and become SimCompute worker
+/// processes; in a normal test run it is an empty pass.
+#[test]
+fn hibernate_worker_entry() {
+    common::sim_worker_entry_if_requested();
+}
+
+/// Per-test hibernation root under the system temp dir, pre-cleaned so
+/// a crashed previous run cannot leak state into this one.
+fn hib_root(case: &str) -> std::path::PathBuf {
+    let root = std::env::temp_dir().join(format!("ccm-it-hib-{}-{case}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    root
+}
+
+fn stat(stats: &Json, key: &str) -> usize {
+    stats.get(key).expect(key).usize().expect(key)
+}
+
+fn ack_t(ack: &Json) -> usize {
+    assert_ok(ack);
+    ack.get("t").expect("t in context ack").usize().expect("t")
+}
+
+// ---------------------------------------------------------------------
+// In-process topology.
+
+#[test]
+fn inprocess_idle_session_spills_then_rehydrates_at_same_t() {
+    let root = hib_root("inproc-roundtrip");
+    let server = start_server(sim(), |cfg| {
+        cfg.hibernate_dir = Some(root.clone());
+        cfg.hibernate_after = Some(Duration::from_millis(50));
+    });
+    let mut client = server.client();
+    assert_eq!(ack_t(&client.add_context("s", &[4, 5, 6]).expect("context 1")), 1);
+    assert_eq!(ack_t(&client.add_context("s", &[7, 8, 9]).expect("context 2")), 2);
+    let mut admin = server.client();
+    let stats = poll_until(Duration::from_secs(10), "session to hibernate", || {
+        let stats = admin.stats().expect("stats");
+        (stat(&stats, "hibernated_sessions") == 1).then_some(stats)
+    });
+    // The spilled Mem(t) is on disk, out of the hot KV accounting.
+    assert_eq!(stat(&stats, "sessions"), 0, "hibernated session must leave the hot map");
+    assert_eq!(stat(&stats, "kv_bytes"), 0, "hibernated bytes are excluded from the KV budget");
+    assert!(stat(&stats, "hibernated_bytes") > 0);
+    assert!(stat(&stats, "spills") >= 1);
+    assert!(snap_path(&root, 0, "s").exists(), "snapshot file must exist while hibernated");
+    // The next touch rehydrates transparently on the SAME connection:
+    // the session resumes at its pre-spill time step.
+    assert_eq!(
+        ack_t(&client.add_context("s", &[1, 2]).expect("context after spill")),
+        3,
+        "Mem(t) must resume where it left off, not restart"
+    );
+    let stats = admin.stats().expect("stats");
+    assert!(stat(&stats, "rehydrations") >= 1);
+    assert_eq!(stat(&stats, "hibernated_sessions"), 0);
+    assert_eq!(stat(&stats, "snapshot_corrupt"), 0);
+    assert!(!snap_path(&root, 0, "s").exists(), "rehydration must consume the snapshot");
+    server.shutdown_join();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn every_corruption_fixture_degrades_to_a_fresh_session_not_an_error() {
+    let root = hib_root("inproc-corrupt");
+    let server = start_server(sim(), |cfg| {
+        cfg.hibernate_dir = Some(root.clone());
+        cfg.hibernate_after = Some(Duration::from_millis(50));
+    });
+    let ids = ["flip", "trunc", "crc", "vers"];
+    let mut client = server.client();
+    for id in &ids {
+        assert_eq!(ack_t(&client.add_context(id, &[4, 5, 6]).expect("context 1")), 1);
+        assert_eq!(ack_t(&client.add_context(id, &[7, 8]).expect("context 2")), 2);
+    }
+    let mut admin = server.client();
+    poll_until(Duration::from_secs(10), "all four sessions to hibernate", || {
+        let stats = admin.stats().expect("stats");
+        (stat(&stats, "hibernated_sessions") == ids.len()).then_some(())
+    });
+    // Four distinct ways a snapshot can rot on disk.
+    for id in &ids {
+        let path = snap_path(&root, 0, id);
+        let mut bytes = std::fs::read(&path).expect("snapshot on disk");
+        match *id {
+            // Payload bit-flip: the CRC (or a bounds check) trips.
+            "flip" => bytes[bytes.len() / 2] ^= 0x5A,
+            // Torn write: only a prefix survived.
+            "trunc" => bytes.truncate(bytes.len() / 2),
+            // Trailer corruption: the stored CRC itself is wrong.
+            "crc" => *bytes.last_mut().expect("non-empty") ^= 0xFF,
+            // Version skew: a future (unknown) codec version.
+            "vers" => bytes[8] = 0xFF,
+            other => unreachable!("{other}"),
+        }
+        std::fs::write(&path, &bytes).expect("write corrupted snapshot");
+    }
+    // Every fixture degrades to a fresh session at t=1 on the SAME
+    // client connection — no panic, no refusal, no dropped socket.
+    for (i, id) in ids.iter().enumerate() {
+        let ack = client.add_context(id, &[1, 2]).expect("connection must survive corruption");
+        assert_eq!(ack_t(&ack), 1, "{id}: corrupt snapshot must serve a FRESH session");
+        let stats = admin.stats().expect("stats");
+        assert_eq!(stat(&stats, "snapshot_corrupt"), i + 1, "{id}: corruption must be counted");
+        assert!(!snap_path(&root, 0, id).exists(), "{id}: corrupt snapshot must be discarded");
+    }
+    // The fresh sessions keep working (and can hibernate again).
+    assert_eq!(ack_t(&client.add_context("flip", &[3]).expect("second touch")), 2);
+    server.shutdown_join();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ---------------------------------------------------------------------
+// Worker-process topology (spill state crosses the IPC hop and worker
+// restarts).
+
+fn hibernate_env(root: &std::path::Path, after_ms: u64) -> Vec<Vec<(String, String)>> {
+    vec![vec![
+        ("CCM_TEST_WORKER_HIBERNATE_DIR".to_string(), root.display().to_string()),
+        ("CCM_TEST_WORKER_HIBERNATE_AFTER_MS".to_string(), after_ms.to_string()),
+    ]]
+}
+
+#[test]
+fn worker_topology_spills_and_rehydrates_over_the_wire() {
+    let root = hib_root("worker-roundtrip");
+    let server = start_worker_server("hibernate_worker_entry", 1, hibernate_env(&root, 50), |_| {});
+    let mut admin = server.client();
+    let stats = wait_workers_up(&mut admin, 1, Duration::from_secs(30));
+    server.note_pids(&stats);
+    let mut client = server.client();
+    assert_eq!(ack_t(&client.add_context("w", &[4, 5, 6]).expect("context 1")), 1);
+    assert_eq!(ack_t(&client.add_context("w", &[7, 8]).expect("context 2")), 2);
+    let stats = poll_until(Duration::from_secs(10), "session to hibernate in the worker", || {
+        let stats = admin.stats().expect("stats");
+        (stat(&stats, "hibernated_sessions") == 1).then_some(stats)
+    });
+    // Merged stats carry the hibernation counters across the IPC hop.
+    assert_eq!(stat(&stats, "sessions"), 0);
+    assert_eq!(stat(&stats, "kv_bytes"), 0);
+    assert!(stat(&stats, "hibernated_bytes") > 0);
+    assert!(snap_path(&root, 0, "w").exists());
+    assert_eq!(
+        ack_t(&client.add_context("w", &[1]).expect("context after spill")),
+        3,
+        "the worker must rehydrate the session at its pre-spill time step"
+    );
+    let stats = admin.stats().expect("stats");
+    assert!(stat(&stats, "rehydrations") >= 1);
+    assert_eq!(stat(&stats, "snapshot_corrupt"), 0);
+    server.shutdown_join();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn worker_topology_corrupt_snapshot_serves_fresh_session() {
+    let root = hib_root("worker-corrupt");
+    let server = start_worker_server("hibernate_worker_entry", 1, hibernate_env(&root, 50), |_| {});
+    let mut admin = server.client();
+    let stats = wait_workers_up(&mut admin, 1, Duration::from_secs(30));
+    server.note_pids(&stats);
+    let mut client = server.client();
+    assert_eq!(ack_t(&client.add_context("wc", &[4, 5, 6]).expect("context 1")), 1);
+    assert_eq!(ack_t(&client.add_context("wc", &[7, 8]).expect("context 2")), 2);
+    poll_until(Duration::from_secs(10), "session to hibernate in the worker", || {
+        let stats = admin.stats().expect("stats");
+        (stat(&stats, "hibernated_sessions") == 1).then_some(())
+    });
+    let path = snap_path(&root, 0, "wc");
+    let mut bytes = std::fs::read(&path).expect("snapshot on disk");
+    bytes[bytes.len() / 2] ^= 0x5A;
+    std::fs::write(&path, &bytes).expect("write corrupted snapshot");
+    // The touch crosses the reactor, the IPC hop, and the worker's
+    // rehydrate path — and still degrades to a fresh session.
+    let ack = client.add_context("wc", &[1]).expect("connection must survive corruption");
+    assert_eq!(ack_t(&ack), 1, "corrupt snapshot must serve a FRESH session");
+    let stats = admin.stats().expect("stats");
+    assert_eq!(stat(&stats, "snapshot_corrupt"), 1);
+    assert!(!path.exists(), "corrupt snapshot must be discarded");
+    server.shutdown_join();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn sigkilled_worker_leaves_decodable_snapshots_and_its_successor_rehydrates_them() {
+    const SESSIONS: usize = 6;
+    let root = hib_root("worker-kill");
+    let server = start_worker_server("hibernate_worker_entry", 1, hibernate_env(&root, 30), |_| {});
+    let mut admin = server.client();
+    let stats = wait_workers_up(&mut admin, 1, Duration::from_secs(30));
+    let pid0 = server.note_pids(&stats)[0].expect("worker pid");
+    let mut client = server.client();
+    let ids: Vec<String> = (0..SESSIONS).map(|i| format!("k{i}")).collect();
+    for id in &ids {
+        assert_eq!(ack_t(&client.add_context(id, &[4, 5, 6]).expect("context 1")), 1);
+        assert_eq!(ack_t(&client.add_context(id, &[7, 8]).expect("context 2")), 2);
+    }
+    poll_until(Duration::from_secs(10), "all sessions to hibernate", || {
+        let stats = admin.stats().expect("stats");
+        (stat(&stats, "hibernated_sessions") == SESSIONS).then_some(())
+    });
+    // Plant the crash artifact a SIGKILL lands mid-spill: a partially
+    // written `.snap.tmp` that was never renamed into place. Backdate
+    // its mtime past the orphan grace so the successor's startup sweep
+    // is allowed to remove it.
+    let dir = shard_dir(&root, 0);
+    let torn = dir.join("deadbeef.snap.tmp");
+    std::fs::write(&torn, b"partial snapshot write interrupted by SIGKILL").expect("plant tmp");
+    let f = std::fs::File::options().write(true).open(&torn).expect("open tmp");
+    f.set_modified(std::time::SystemTime::now() - Duration::from_secs(600)).expect("backdate");
+    drop(f);
+    common::kill9(pid0);
+    // The supervisor respawns the shard; wait for the NEW worker.
+    poll_until(Duration::from_secs(30), "worker respawn", || {
+        let stats = admin.stats().ok()?;
+        let pids = server.note_pids(&stats);
+        match pids.first().copied().flatten() {
+            Some(p) if p != pid0 => Some(()),
+            _ => None,
+        }
+    });
+    wait_workers_up(&mut admin, 1, Duration::from_secs(30));
+    // Startup sweep: the torn tmp is gone; tmp-then-rename means every
+    // surviving `.snap` is a complete old snapshot (old-or-none).
+    poll_until(Duration::from_secs(10), "startup sweep of the torn tmp", || {
+        (!torn.exists()).then_some(())
+    });
+    let mut snaps = 0;
+    for entry in std::fs::read_dir(&dir).expect("spill dir") {
+        let path = entry.expect("dir entry").path();
+        if path.extension().is_some_and(|e| e == "snap") {
+            let bytes = std::fs::read(&path).expect("read snapshot");
+            SessionSnapshot::decode(&bytes).expect("every surviving snapshot decodes cleanly");
+            snaps += 1;
+        }
+    }
+    assert_eq!(snaps, SESSIONS, "the kill must not have destroyed completed spills");
+    // Every session rehydrates from the predecessor's spill dir and
+    // resumes at its pre-kill time step — Mem(t) survived the crash.
+    for id in &ids {
+        let ack = poll_until(Duration::from_secs(10), "context served after respawn", || {
+            let mut c = Client::connect(server.addr()).ok()?;
+            let resp = c.add_context(id, &[1]).ok()?;
+            (resp.opt("ok") == Some(&Json::Bool(true))).then_some(resp)
+        });
+        assert_eq!(ack_t(&ack), 3, "{id}: must resume at the pre-kill time step");
+    }
+    let stats = admin.stats().expect("stats");
+    assert!(stat(&stats, "rehydrations") >= SESSIONS);
+    assert_eq!(stat(&stats, "snapshot_corrupt"), 0);
+    server.shutdown_join();
+    let _ = std::fs::remove_dir_all(&root);
+}

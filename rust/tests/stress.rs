@@ -1,9 +1,12 @@
 //! CI stress gates for the serving engine: >= 1024 concurrent
 //! connections against a sharded SimCompute server, hard-gating
 //! against lost replies, broken session accounting, and fd leaks —
-//! in-process shards (`CCM_STRESS=1`) and, for the cross-process
+//! in-process shards (`CCM_STRESS=1`); for the cross-process
 //! topology, worker-process shards with a mid-stress SIGKILL restart
-//! (`CCM_STRESS=1` + `CCM_STRESS_WORKERS=1`).
+//! (`CCM_STRESS=1` + `CCM_STRESS_WORKERS=1`); and tiered session
+//! memory under an aggressive spill threshold, gating exact
+//! hibernation counter balance and pre-spill `t` resume
+//! (`CCM_STRESS=1` + `CCM_STRESS_HIBERNATE=1`).
 //!
 //! Gated because they need a raised fd limit (>= 4096; the default
 //! soft limit of 1024 cannot hold 2048 sockets). The CI `stress` job
@@ -389,6 +392,165 @@ fn workers_sustain_1024_connections_and_survive_a_mid_stress_restart() {
     // Port actually released and fds recovered in the front-end
     // process (worker fds died with the workers).
     assert!(std::net::TcpListener::bind(&addr).is_ok(), "port still bound after shutdown");
+    assert_fds_recover(fd_baseline);
+}
+
+/// The 1024-connection population with hibernation turned all the way
+/// up: a 1 ms idle threshold means sessions spill their `Mem(t)` to
+/// disk BETWEEN a client's own rounds and rehydrate on the next touch,
+/// thousands of times across the run. Gates: every reply asserted (a
+/// session that restarted at t=1 instead of resuming fails the round
+/// assertion), exact hibernation counter balance on every stats
+/// snapshot (`sessions + hibernated_sessions == population`,
+/// `spills - rehydrations == hibernated_sessions`), hibernated bytes
+/// excluded from the hot KV accounting, zero corrupt snapshots, and
+/// the fd gate brackets all spill-file IO (spill/rehydrate must not
+/// leak file descriptors any more than sockets).
+#[test]
+fn hibernation_sustains_1024_connections_with_exact_counter_balance() {
+    if !stress_enabled() || std::env::var("CCM_STRESS_HIBERNATE").map(|v| v == "1") != Ok(true) {
+        eprintln!(
+            "skipping hibernation stress test: set CCM_STRESS=1 and CCM_STRESS_HIBERNATE=1 \
+             (needs `ulimit -n` >= 4096; run by the CI `stress` hibernate matrix leg)"
+        );
+        return;
+    }
+    let _gate = STRESS_GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let fd_baseline = open_fds();
+
+    let root = std::env::temp_dir().join(format!("ccm-stress-hib-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let shards = 4usize;
+    let reactors = reactors_from_env_strict();
+    let manifest = Manifest::toy();
+    let mut cfg =
+        ServerConfig::new("127.0.0.1:0", SessionPolicy::concat(manifest.scenario.comp_len_max));
+    cfg.shards = shards;
+    cfg.reactor = ReactorMode::Epoll;
+    cfg.reactors = reactors;
+    cfg.max_pending = 100_000;
+    cfg.max_conns = 20_000;
+    cfg.hibernate_dir = Some(root.clone());
+    // Aggressive on purpose: any gap in a session's traffic spills it.
+    cfg.hibernate_after = Some(Duration::from_millis(1));
+    let (ready_tx, ready_rx) = channel();
+    let server = std::thread::spawn(move || {
+        let factories: Vec<BackendFactory<'static>> = (0..shards)
+            .map(|_| {
+                let m = Manifest::toy();
+                Box::new(move || Ok(Box::new(SimCompute::from_manifest(&m)) as Box<dyn Compute>))
+                    as BackendFactory<'static>
+            })
+            .collect();
+        serve_sharded(&Manifest::toy(), factories, cfg, Some(ready_tx))
+    });
+    let addr = ready_rx.recv_timeout(Duration::from_secs(10)).expect("server ready");
+
+    // Phase A: the full population. Each `t == round` assertion is the
+    // resume gate — a session served fresh after a spill would ack t=1.
+    let barrier = Arc::new(Barrier::new(N_WORKERS));
+    let mut handles = Vec::new();
+    for w in 0..N_WORKERS {
+        let addr = addr.clone();
+        let barrier = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut clients: Vec<(String, Client)> = (0..CONNS_PER_WORKER)
+                .map(|i| (format!("stress-{w}-{i}"), Client::connect(&addr).expect("connect")))
+                .collect();
+            barrier.wait();
+            for round in 1..=ROUNDS {
+                for (session, client) in clients.iter_mut() {
+                    let ack = client.add_context(session, &[1, 2, 3]).expect("context ack");
+                    assert_eq!(
+                        ack.get("t").unwrap().i64().unwrap(),
+                        round,
+                        "{session}: Mem(t) must resume at its pre-spill time step"
+                    );
+                    let tok = 5 + (round as i32 % 3);
+                    let next = client.query(session, &[tok], 3).expect("query reply");
+                    assert_eq!(next[0].0, tok, "{session} round {round}: echo rank");
+                }
+            }
+            barrier.wait();
+        }));
+    }
+    for handle in handles {
+        handle.join().expect("hibernation stress worker");
+    }
+
+    // Quiesce, then let the idle reaper hibernate the whole population.
+    let n_conns = N_WORKERS * CONNS_PER_WORKER;
+    let mut admin = Client::connect(&addr).unwrap();
+    wait_drained(&mut admin, Duration::from_secs(60));
+    let balance = |stats: &Json, what: &str| -> (usize, usize) {
+        let sessions = stats.get("sessions").unwrap().usize().unwrap();
+        let hibernated = stats.get("hibernated_sessions").unwrap().usize().unwrap();
+        let spills = stats.get("spills").unwrap().usize().unwrap();
+        let rehydrations = stats.get("rehydrations").unwrap().usize().unwrap();
+        assert_eq!(sessions + hibernated, n_conns, "{what}: population must be conserved");
+        assert_eq!(
+            spills - rehydrations,
+            hibernated,
+            "{what}: every spill not yet rehydrated must be exactly one hibernated session"
+        );
+        assert_eq!(
+            stats.get("snapshot_corrupt").unwrap().usize().unwrap(),
+            0,
+            "{what}: healthy traffic must never produce a corrupt snapshot"
+        );
+        (sessions, hibernated)
+    };
+    let stats = poll_until(Duration::from_secs(60), "every session to hibernate", || {
+        let stats = admin.stats().expect("stats");
+        let (_, hibernated) = balance(&stats, "while hibernating");
+        (hibernated == n_conns).then_some(stats)
+    });
+    assert_eq!(stats.get("sessions").unwrap().usize().unwrap(), 0);
+    assert_eq!(
+        stats.get("kv_bytes").unwrap().usize().unwrap(),
+        0,
+        "hibernated bytes must leave the hot KV accounting"
+    );
+    assert!(stats.get("hibernated_bytes").unwrap().usize().unwrap() > 0);
+    assert!(
+        stats.get("spills").unwrap().usize().unwrap() >= n_conns,
+        "each session spilled at least once"
+    );
+    assert_eq!(stats.get("requests").unwrap().usize().unwrap(), n_conns * 2 * ROUNDS as usize);
+    assert_eq!(stats.get("compressions").unwrap().usize().unwrap(), n_conns * ROUNDS as usize);
+    assert_eq!(stats.get("inferences").unwrap().usize().unwrap(), n_conns * ROUNDS as usize);
+    assert_eq!(stats.get("rejected_overload").unwrap().usize().unwrap(), 0);
+
+    // Phase B: touch every fully-hibernated session once; each must
+    // rehydrate from disk and resume exactly where it left off.
+    let mut handles = Vec::new();
+    for w in 0..N_WORKERS {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).expect("reconnect");
+            for i in 0..CONNS_PER_WORKER {
+                let session = format!("stress-{w}-{i}");
+                let ack = client.add_context(&session, &[4]).expect("post-hibernation ack");
+                assert_eq!(
+                    ack.get("t").unwrap().i64().unwrap(),
+                    ROUNDS + 1,
+                    "{session}: rehydrated session must resume at its pre-spill time step"
+                );
+            }
+        }));
+    }
+    for handle in handles {
+        handle.join().expect("rehydration worker");
+    }
+    poll_until(Duration::from_secs(60), "population to hibernate again", || {
+        let stats = admin.stats().expect("stats");
+        let (_, hibernated) = balance(&stats, "after rehydration");
+        (hibernated == n_conns).then_some(())
+    });
+
+    admin.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(&root);
     assert_fds_recover(fd_baseline);
 }
 
